@@ -1,0 +1,78 @@
+//! Baseline shoot-out (Table XII analogue): LLaMa-7B proxy pruned by
+//! 70 %, zero-shot accuracy of Magnitude / Wanda / SparseGPT / OWL /
+//! Mosaic on all seven tasks.
+//!
+//!     cargo run --release --example compare_methods
+
+use mosaic::coordinator::Mosaic;
+use mosaic::eval::{mean_accuracy, per_task_accuracy};
+use mosaic::prune::{
+    self, plan, Category, Metric, Uniformity,
+};
+use mosaic::rank::GlobalRank;
+
+fn main() -> anyhow::Result<()> {
+    let mut mo = Mosaic::load("tl1_7")?;
+    let p = 0.7;
+    let samples = 32;
+    let stats = mo.activation_stats(samples)?;
+    let uniform = GlobalRank {
+        rank: vec![vec![1.0; 7]; mo.dense.cfg.n_layers],
+        alpha: 5.0,
+    };
+
+    let mut rows: Vec<(String, mosaic::model::ModelWeights)> = Vec::new();
+
+    // Magnitude (global uniform, |w| metric)
+    let mut m = mo.dense.clone();
+    prune::prune_unstructured(
+        &mut m, &plan(&uniform, p, Uniformity::Global), None,
+        Metric::Magnitude);
+    rows.push(("Magnitude".into(), m));
+
+    // Wanda (global uniform, activation-weighted)
+    let mut m = mo.dense.clone();
+    prune::prune_unstructured(
+        &mut m, &plan(&uniform, p, Uniformity::Global), Some(&stats),
+        Metric::Wanda);
+    rows.push(("Wanda".into(), m));
+
+    // SparseGPT (global uniform, OBS update)
+    let hess = mo.hessians(samples)?.clone_shallow();
+    let mut m = mo.dense.clone();
+    prune::sparsegpt::prune_sparsegpt(
+        &mut m, &plan(&uniform, p, Uniformity::Global), &hess);
+    rows.push(("SparseGPT".into(), m));
+
+    // OWL (layer-wise LOD, SparseGPT pruner)
+    let (m, _) = mo.prune(p, Uniformity::Layer,
+                          Category::Unstructured, samples)?;
+    rows.push(("OWL".into(), m));
+
+    // Mosaic (projection POD, SparseGPT pruner)
+    let (m, _) = mo.prune(p, Uniformity::Projection,
+                          Category::Unstructured, samples)?;
+    rows.push(("Mosaic".into(), m));
+
+    // header
+    let tasks = per_task_accuracy(&mo.dense, &mo.store)?;
+    print!("{:<10}", "method");
+    for (t, _) in &tasks {
+        print!(" {:>7}", t);
+    }
+    println!(" {:>7}", "mean");
+    print!("{:<10}", "dense");
+    for (_, a) in &tasks {
+        print!(" {:>7.1}", a);
+    }
+    println!(" {:>7.1}", mean_accuracy(&mo.dense, &mo.store)?);
+    for (name, m) in &rows {
+        let per = per_task_accuracy(m, &mo.store)?;
+        print!("{name:<10}");
+        for (_, a) in &per {
+            print!(" {:>7.1}", a);
+        }
+        println!(" {:>7.1}", mean_accuracy(m, &mo.store)?);
+    }
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! End-to-end validation driver (EXPERIMENTS.md §E2E): exercises every
+//! layer of the stack on a real workload and prints the paper's headline
+//! comparisons —
+//!   * RC: PJRT profile graph + Pallas weight-metric kernel (L1+L2)
+//!   * PC: global/layer/projection × unstructured/composite/structured
+//!   * quality: PPL on two held-out splits + 7-task zero-shot accuracy
+//!   * LoRA recovery of the 80 % model through the AOT grad graph
+//!   * deployment: measured native latency + P1–P5 simulation
+//!
+//!     cargo run --release --example e2e_pipeline [model]
+
+use mosaic::coordinator::{choose_category, Mosaic};
+use mosaic::eval::{measure_native, mean_accuracy, perplexity_native};
+use mosaic::finetune::{self, LoraConfig};
+use mosaic::platform::{self, ModelProfile, Workload};
+use mosaic::prune::{Category, Uniformity};
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or("tl1_7".into());
+    let samples = 32;
+    let mut mo = Mosaic::load(&model)?;
+    let seq = mo.dense.cfg.ctx.min(64);
+    let wt = mo.store.split("wikitext2s")?;
+    let ptb = mo.store.split("ptbs")?;
+
+    println!("== E2E: {} ({}) ==", model, mo.dense.cfg.proxy_for);
+    let d_ppl = perplexity_native(&mo.dense, &wt, seq, 16);
+    let d_acc = mean_accuracy(&mo.dense, &mo.store)?;
+    println!("dense: ppl(wt2s) {d_ppl:.2}  acc {d_acc:.1}%\n");
+
+    // --- E1/E2: uniformity sweep at 60/80 %
+    println!("{:<6} {:<11} {:>10} {:>10} {:>7}", "p", "uniformity",
+             "ppl-wt2s", "ppl-ptbs", "acc%");
+    for p in [0.6, 0.8] {
+        for u in [Uniformity::Global, Uniformity::Layer,
+                  Uniformity::Projection] {
+            let m = mo.prune_wanda(p, u, samples)?;
+            let a = perplexity_native(&m, &wt, seq, 16);
+            let b = perplexity_native(&m, &ptb, seq, 16);
+            let acc = mean_accuracy(&m, &mo.store)?;
+            println!("{:<6} {:<11} {:>10.2} {:>10.2} {:>7.1}",
+                     p, u.name(), a, b, acc);
+        }
+    }
+
+    // --- E3: category sweep at 80 % (projection uniformity)
+    println!("\n{:<13} {:>10} {:>9} {:>10} {:>8}", "category",
+             "ppl-wt2s", "latency", "bytes", "sparsity");
+    for c in [Category::Unstructured, Category::Composite,
+              Category::Structured] {
+        let (m, _) = mo.prune(0.8, Uniformity::Projection, c, samples)?;
+        let ppl = perplexity_native(&m, &wt, seq, 16);
+        let perf = measure_native(&m, 32, 8, 3);
+        println!(
+            "{:<13} {:>10.2} {:>8.4}s {:>10} {:>8.2}",
+            c.name(), ppl, perf.latency_s, m.model_bytes(),
+            mosaic::prune::unstructured::projection_sparsity(&m)
+        );
+    }
+
+    // --- E4: LoRA recovery of the 80 % projection-pruned model
+    println!("\n== LoRA recovery (80% projection-pruned) ==");
+    let (pruned, _) =
+        mo.prune(0.8, Uniformity::Projection, Category::Unstructured,
+                 samples)?;
+    let before_ppl = perplexity_native(&pruned, &wt, seq, 16);
+    let (rows, n_rows, s) = mo.finetune_rows()?;
+    let cfg = LoraConfig { steps: 60, ..Default::default() };
+    let rt = mo.runtime()?;
+    rt.set_weights(&pruned)?;
+    let res = finetune::train_lora(rt, &rows, n_rows, s, &cfg)?;
+    let mut merged = pruned.clone();
+    finetune::merge_lora(&mut merged, &res.lora, cfg.rank, cfg.alpha);
+    let after_ppl = perplexity_native(&merged, &wt, seq, 16);
+    println!(
+        "train loss {:.3} -> {:.3} in {:.1}s; ppl {before_ppl:.1} -> \
+         {after_ppl:.1}",
+        res.train_curve.first().unwrap().1,
+        res.train_curve.last().unwrap().1,
+        res.wall_s
+    );
+
+    // --- E5/deployment: category per platform + simulated perf
+    println!("\n== deployment (p=0.6) ==");
+    for pf in platform::testbed() {
+        let cat = choose_category(&pf);
+        let (m, _) = mo.prune(0.6, Uniformity::Projection, cat, samples)?;
+        let prof = ModelProfile::from_weights(&m);
+        let w = if pf.name == "P5" { Workload::edge() }
+                else { Workload::mlperf() };
+        let sim = platform::simulate(&pf, &prof, &w);
+        println!(
+            "{}: {:<12} sim latency {:>8.3}s  mem {:>6} MB  offload={}",
+            pf.name, cat.name(), sim.latency_s, sim.mem_bytes >> 20,
+            sim.offloading
+        );
+    }
+    println!("\nmetrics:\n{}", mo.metrics.report());
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Edge deployment scenario (the paper's P5 story): the dense model
+//! cannot run on a Raspberry-Pi-class device; Mosaic finds the smallest
+//! pruning level whose SLM fits, prunes with the platform-appropriate
+//! category, and reports the latency cliff (Fig. 9, P3/P5 panels).
+//!
+//!     cargo run --release --example edge_deploy
+
+use mosaic::coordinator::{choose_category, Mosaic};
+use mosaic::eval::perplexity_native;
+use mosaic::platform::{self, memory_required, ModelProfile, Workload};
+use mosaic::prune::Uniformity;
+
+fn main() -> anyhow::Result<()> {
+    let mut mo = Mosaic::load("tl1_7")?;
+    let pf = platform::by_name("P5").unwrap();
+    let w = Workload::edge();
+    println!("target: {} — {}", pf.name, pf.description);
+
+    // Scale the tiny model's byte footprint up to paper scale so the
+    // capacity arithmetic matches Fig. 9 (LLaMa-7B on a 4 GB device).
+    let scale = 6.74e9 * 2.0 / mo.dense.model_bytes() as f64;
+
+    let dense_prof = {
+        let mut p = ModelProfile::from_weights(&mo.dense);
+        p.bytes = (p.bytes as f64 * scale) as u64;
+        p.d_model = 4096;
+        p.n_heads = 32;
+        p.n_layers = 32;
+        p
+    };
+    let need = memory_required(&dense_prof, &w) + pf.lib_overhead;
+    println!(
+        "dense needs {} MB vs {} MB capacity -> {}",
+        need >> 20,
+        pf.mem_bytes >> 20,
+        if need > pf.mem_bytes { "DOES NOT FIT (paper: cannot run)" }
+        else { "fits" }
+    );
+
+    // Find the smallest p (in 10 % steps) whose pruned model fits.
+    let cat = choose_category(&pf);
+    println!("platform category: {}", cat.name());
+    let wt = mo.store.split("wikitext2s")?;
+    let seq = mo.dense.cfg.ctx.min(64);
+    for step in 1..=9 {
+        let p = step as f64 / 10.0;
+        let (m, _) = mo.prune(p, Uniformity::Projection, cat, 16)?;
+        let mut prof = ModelProfile::from_weights(&m);
+        prof.bytes = (prof.bytes as f64 * scale) as u64;
+        prof.d_model = (4096.0
+            * m.layers[0].kept_heads.len() as f64
+            / m.cfg.n_heads as f64) as usize;
+        prof.n_layers = 32;
+        prof.n_heads = 32 * m.layers[0].kept_heads.len() / m.cfg.n_heads;
+        let sim = platform::simulate(&pf, &prof, &w);
+        let ppl = perplexity_native(&m, &wt, seq, 8);
+        println!(
+            "p={p:.1}: {} MB, sim latency {:>8.2}s, fits={} ppl={ppl:.1}",
+            (memory_required(&prof, &w) + pf.lib_overhead) >> 20,
+            sim.latency_s,
+            sim.fits,
+        );
+        if sim.fits {
+            println!("=> deploying the p={p:.1} {} SLM to {}",
+                     cat.name(), pf.name);
+            break;
+        }
+    }
+    Ok(())
+}

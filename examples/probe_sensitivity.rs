@@ -1,0 +1,50 @@
+// Diagnostic: layered composition — layer signal + bounded within-layer
+// projection refinement.
+use mosaic::coordinator::Mosaic;
+use mosaic::eval::perplexity_native;
+use mosaic::prune::unstructured::{prune_unstructured, Metric};
+use mosaic::prune::planner::PruningPlan;
+use mosaic::prune::Uniformity;
+
+fn shift(targets: &mut Vec<Vec<f64>>, p: f64) {
+    for _ in 0..32 {
+        let n: usize = targets.iter().map(|t| t.len()).sum();
+        let mean: f64 = targets.iter().flatten().sum::<f64>() / n as f64;
+        let d = p - mean;
+        if d.abs() < 1e-9 { break; }
+        for t in targets.iter_mut() { for x in t.iter_mut() { *x = (*x + d).clamp(0.0, 0.95); } }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    for model in ["tl1_7", "tl31", "tl2_13"] {
+        let mut mo = Mosaic::load(model)?;
+        let stats = mo.activation_stats(32)?;
+        let prank = mo.global_rank(Uniformity::Projection, 32)?;
+        let lrank = mo.global_rank(Uniformity::Layer, 32)?;
+        let wt = mo.store.split("wikitext2s")?;
+        let seq = mo.dense.cfg.ctx.min(64);
+        let lm = lrank.layer_means();
+        for p in [0.8] {
+            for (name, gl, gp) in [("global", 0.0, 0.0), ("layer", -0.08, 0.0), ("proj", -0.08, -0.05), ("proj03", -0.08, -0.03), ("proj08", -0.08, -0.08)] {
+                let mut targets: Vec<Vec<f64>> = prank.rank.iter().enumerate().map(|(l, row)| {
+                    // within-layer projection deviation
+                    let rm: f64 = row.iter().sum::<f64>() / row.len() as f64;
+                    row.iter().map(|&x| {
+                        let zl = (1.0 - lm[l]).clamp(-1.0, 1.0);
+                        let zp = if rm > 0.0 { (1.0 - x / rm).clamp(-1.0, 1.0) } else { 0.0 };
+                        (p + gl * zl + gp * zp).clamp(0.0, 0.95)
+                    }).collect()
+                }).collect();
+                shift(&mut targets, p);
+                let plan = PruningPlan { targets, p, uniformity: Uniformity::Projection };
+                let mut m = mo.dense.clone();
+                prune_unstructured(&mut m, &plan, Some(&stats), Metric::Wanda);
+                let ppl = perplexity_native(&m, &wt, seq, 12);
+                println!("{model} p={p} {name:8} ppl={ppl:.1}");
+            }
+            println!();
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Quickstart: load a foundation model from artifacts, run the Mosaic
+//! RC→PC pipeline at one pruning level, and evaluate the result.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! (run `make artifacts` first — it trains the tiny model zoo and AOT-
+//! lowers the jax/Pallas graphs this example executes through PJRT.)
+
+use mosaic::coordinator::Mosaic;
+use mosaic::eval::{measure_native, mean_accuracy, perplexity_native};
+use mosaic::prune::{Category, Uniformity};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load a foundation model (LLaMa-7B analogue) + datasets.
+    let mut mo = Mosaic::load("tl1_7")?;
+    println!(
+        "loaded {} ({}): {} layers, {} params",
+        mo.name, mo.dense.cfg.proxy_for, mo.dense.cfg.n_layers,
+        mo.dense.cfg.n_params
+    );
+
+    // 2. Baseline quality.
+    let wt = mo.store.split("wikitext2s")?;
+    let seq = mo.dense.cfg.ctx.min(64);
+    let dense_ppl = perplexity_native(&mo.dense, &wt, seq, 16);
+    let dense_acc = mean_accuracy(&mo.dense, &mo.store)?;
+    println!("dense:  PPL {dense_ppl:.2}  accuracy {dense_acc:.1}%");
+
+    // 3. Composite projection pruning at 60 % (the Mosaic headline).
+    //    Ranking profiles the model through the AOT profile graph and
+    //    counts POD outliers with the Pallas weight-metric kernel.
+    let (pruned, plan) =
+        mo.prune(0.6, Uniformity::Projection, Category::Composite, 32)?;
+    println!(
+        "pruned: mean target {:.2}, bytes {} -> {}",
+        plan.mean_target(),
+        mo.dense.model_bytes(),
+        pruned.model_bytes()
+    );
+
+    // 4. Quality + runtime of the pruned SLM on the native engine.
+    let ppl = perplexity_native(&pruned, &wt, seq, 16);
+    let acc = mean_accuracy(&pruned, &mo.store)?;
+    let d = measure_native(&mo.dense, 32, 8, 3);
+    let p = measure_native(&pruned, 32, 8, 3);
+    println!("pruned: PPL {ppl:.2}  accuracy {acc:.1}%");
+    println!(
+        "latency: dense {:.4}s -> pruned {:.4}s ({:.0}% faster)",
+        d.latency_s,
+        p.latency_s,
+        (1.0 - p.latency_s / d.latency_s) * 100.0
+    );
+    Ok(())
+}

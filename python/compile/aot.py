@@ -1,0 +1,217 @@
+"""AOT pipeline: synthlang data → pretrained weights → HLO text artifacts.
+
+Emits HLO *text* (never `.serialize()`): jax ≥ 0.5 writes HloModuleProto
+with 64-bit instruction ids which the image's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Per model the following artifacts land in artifacts/models/<name>/:
+  weights.bin        — all params, f32 LE, concatenated in manifest order
+  manifest.json      — config + param table + HLO signatures
+  fwd.hlo.txt        — (tokens[B_eval,S], *params) -> (logits,)
+  profile.hlo.txt    — (tokens[1,S], *params) -> (logits, *act_sq)
+  lora_grad.hlo.txt  — (tokens[B_ft,32], *params, *lora) -> (loss, *grads)
+  wmetric_<k>x<m>.hlo.txt — Pallas weight-metric kernel per proj shape
+
+plus artifacts/data/ (corpora + tasks) shared across models.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .configs import (MODELS, ModelConfig, EVAL_BATCH, FT_BATCH, LORA_RANK,
+                      ALPHA_OUTLIER, PROJS)
+from . import model as M
+from . import synthlang
+from .train import train_model
+from .kernels import pallas_kernels as pk
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def export_model(cfg: ModelConfig, params, out_dir: str):
+    os.makedirs(out_dir, exist_ok=True)
+    names = cfg.param_names()
+    pspecs = [spec(cfg.param_shape(n)) for n in names]
+    s_eval = cfg.ctx
+
+    # ---- weights.bin
+    flat = np.concatenate([np.asarray(p, np.float32).ravel() for p in params])
+    flat.tofile(os.path.join(out_dir, "weights.bin"))
+
+    # ---- fwd graph (pallas path)
+    def fwd(tokens, *ps):
+        return (M.forward(cfg, list(ps), tokens, use_pallas=True),)
+
+    t_eval = spec((EVAL_BATCH, s_eval), jnp.int32)
+    with open(os.path.join(out_dir, "fwd.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(jax.jit(fwd).lower(t_eval, *pspecs)))
+
+    # ---- profile graph (RC input: logits + per-projection Σ act²)
+    def profile(tokens, *ps):
+        logits, act_sq = M.forward(cfg, list(ps), tokens,
+                                   use_pallas=True, profile=True)
+        return tuple([logits] + act_sq)
+
+    t_prof = spec((1, s_eval), jnp.int32)
+    with open(os.path.join(out_dir, "profile.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(jax.jit(profile).lower(t_prof, *pspecs)))
+
+    # ---- LoRA loss+grad graph (fine-tuning driver)
+    lora_names = M.lora_param_names(cfg)
+    lspecs = []
+    for n in range(cfg.n_layers):
+        for p in PROJS:
+            fi, fo = cfg.proj_shape(p)
+            lspecs.append(spec((fi, LORA_RANK)))
+            lspecs.append(spec((LORA_RANK, fo)))
+    n_p = len(pspecs)
+
+    def lora_grad(tokens, *all_ps):
+        base = list(all_ps[:n_p])
+        lora = list(all_ps[n_p:])
+        loss, grads = M.lora_loss_and_grad(cfg, base, lora, tokens)
+        return tuple([loss] + list(grads))
+
+    t_ft = spec((FT_BATCH, 32), jnp.int32)
+    with open(os.path.join(out_dir, "lora_grad.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(
+            jax.jit(lora_grad).lower(t_ft, *pspecs, *lspecs)))
+
+    # ---- weight-metric kernel per distinct projection shape (RC hot spot)
+    wm_files = {}
+    shapes = sorted({cfg.proj_shape(p) for p in PROJS})
+    for (fi, fo) in shapes:
+        def wm(w, act_sq):
+            c, s = pk.weight_metric(w, act_sq, ALPHA_OUTLIER)
+            return (c, s)
+        fname = f"wmetric_{fi}x{fo}.hlo.txt"
+        lowered = jax.jit(wm).lower(spec((fi, fo)), spec((fi,)))
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(to_hlo_text(lowered))
+        wm_files[f"{fi}x{fo}"] = fname
+
+    # ---- manifest
+    offset = 0
+    ptable = []
+    for n in names:
+        shp = list(cfg.param_shape(n))
+        cnt = int(np.prod(shp))
+        ptable.append({"name": n, "shape": shp, "offset": offset,
+                       "numel": cnt})
+        offset += cnt
+    lora_table = []
+    for i, n in enumerate(lora_names):
+        shp = list(lspecs[i].shape)
+        lora_table.append({"name": n, "shape": shp})
+    manifest = {
+        "config": cfg.to_dict(),
+        "alpha_outlier": ALPHA_OUTLIER,
+        "lora_rank": LORA_RANK,
+        "lora_alpha": 8.0,
+        "params": ptable,
+        "total_f32": offset,
+        "lora_params": lora_table,
+        "hlo": {
+            "fwd": {"file": "fwd.hlo.txt",
+                    "tokens_shape": [EVAL_BATCH, s_eval]},
+            "profile": {"file": "profile.hlo.txt",
+                        "tokens_shape": [1, s_eval],
+                        "n_act_outputs": cfg.n_layers * 7},
+            "lora_grad": {"file": "lora_grad.hlo.txt",
+                          "tokens_shape": [FT_BATCH, 32]},
+            "weight_metric": wm_files,
+        },
+        # canonical (layer, projection) order of act_sq outputs
+        "act_order": [f"l{n}.{p}" for n in range(cfg.n_layers)
+                      for p in PROJS],
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def source_fingerprint() -> str:
+    """Hash of the compile-path sources — makes `make artifacts` a no-op
+    when nothing changed."""
+    h = hashlib.sha256()
+    base = os.path.dirname(__file__)
+    for fn in sorted(os.listdir(base)):
+        if fn.endswith(".py"):
+            h.update(open(os.path.join(base, fn), "rb").read())
+    kdir = os.path.join(base, "kernels")
+    for fn in sorted(os.listdir(kdir)):
+        if fn.endswith(".py"):
+            h.update(open(os.path.join(kdir, fn), "rb").read())
+    h.update(os.environ.get("MOSAIC_FAST", "0").encode())
+    return h.hexdigest()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="all",
+                    help="comma list or 'all'")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    out = os.path.abspath(args.out)
+    os.makedirs(out, exist_ok=True)
+
+    fp = source_fingerprint()
+    stamp = os.path.join(out, "fingerprint.txt")
+    if (not args.force and os.path.exists(stamp)
+            and open(stamp).read().strip() == fp):
+        print("artifacts up to date (fingerprint match); skipping")
+        return
+
+    t0 = time.time()
+    print("== synthlang data ==")
+    synthlang.build_all(os.path.join(out, "data"))
+    data_dir = os.path.join(out, "data")
+    trains = np.fromfile(os.path.join(data_dir, "trains.bin"),
+                         dtype=np.uint16)
+    inst = np.fromfile(os.path.join(data_dir, "alpacas.bin"),
+                       dtype=np.uint16).reshape(-1, 32)
+
+    wanted = (list(MODELS) if args.models == "all"
+              else args.models.split(","))
+    index = {"models": {}, "data": "data/data_manifest.json"}
+    for name in wanted:
+        cfg = MODELS[name]
+        print(f"== train {name} ({cfg.proxy_for}, "
+              f"{cfg.n_params():,} params) ==")
+        params, hist = train_model(cfg, trains, instruct_rows=inst)
+        mdir = os.path.join(out, "models", name)
+        print(f"== export {name} ==")
+        export_model(cfg, params, mdir)
+        index["models"][name] = {
+            "dir": f"models/{name}",
+            "final_train_loss": hist[-1] if hist else None,
+        }
+    with open(os.path.join(out, "index.json"), "w") as f:
+        json.dump(index, f, indent=1)
+    with open(stamp, "w") as f:
+        f.write(fp)
+    print(f"== artifacts done in {time.time() - t0:.0f}s ==")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Model zoo configuration — Table II analogues at tiny scale.
+
+Each config mirrors one of the paper's five LLMs along the axes the paper
+calls out: depth, attention-dim : feed-forward-dim ratio, context length,
+and extent of training. All models share the LLaMa decoder architecture
+with exactly seven projections per layer {q, k, v, o, gate, up, down}.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+# Canonical projection order used everywhere (python + rust + manifests).
+PROJS = ("q", "k", "v", "o", "gate", "up", "down")
+
+VOCAB = 512
+PAD, BOS, EOS = 0, 1, 2
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    proxy_for: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    ff_dim: int
+    ctx: int
+    vocab: int = VOCAB
+    train_steps: int = 400
+    instruct_ft_steps: int = 0  # >0 => Vicuna-style instruction fine-tune
+    seed: int = 0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def proj_shape(self, proj: str):
+        """(in_features, out_features) of a projection's weight matrix."""
+        d, f = self.d_model, self.ff_dim
+        return {
+            "q": (d, d), "k": (d, d), "v": (d, d), "o": (d, d),
+            "gate": (d, f), "up": (d, f), "down": (f, d),
+        }[proj]
+
+    def param_names(self):
+        """Canonical flat parameter order (must match HLO parameter order
+        and the rust-side manifest)."""
+        names = ["embed"]
+        for n in range(self.n_layers):
+            names.append(f"l{n}.attn_norm")
+            for p in ("q", "k", "v", "o"):
+                names.append(f"l{n}.{p}")
+            names.append(f"l{n}.ffn_norm")
+            for p in ("gate", "up", "down"):
+                names.append(f"l{n}.{p}")
+        names += ["final_norm", "lm_head"]
+        return names
+
+    def param_shape(self, name: str):
+        d, v = self.d_model, self.vocab
+        if name == "embed":
+            return (v, d)
+        if name == "lm_head":
+            return (d, v)
+        if name.endswith("norm"):
+            return (d,)
+        proj = name.split(".")[1]
+        return self.proj_shape(proj)
+
+    def n_params(self) -> int:
+        total = 0
+        for name in self.param_names():
+            c = 1
+            for s in self.param_shape(name):
+                c *= s
+            total += c
+        return total
+
+    def to_dict(self):
+        d = asdict(self)
+        d["head_dim"] = self.head_dim
+        d["n_params"] = self.n_params()
+        return d
+
+
+# The five Table-II analogues. `train_steps` mirrors "extent of training"
+# (>15T .. 1.4T tokens); ctx mirrors context length ordering.
+MODELS = {
+    "tl31": ModelConfig("tl31", "LLaMa-3.1-8B", n_layers=8, d_model=64,
+                        n_heads=4, ff_dim=224, ctx=128, train_steps=900,
+                        seed=31),
+    "tl3": ModelConfig("tl3", "LLaMa-3-8B", n_layers=8, d_model=64,
+                       n_heads=4, ff_dim=224, ctx=64, train_steps=700,
+                       seed=3),
+    "tl2_13": ModelConfig("tl2_13", "LLaMa-2-13B", n_layers=10, d_model=80,
+                          n_heads=4, ff_dim=216, ctx=64, train_steps=600,
+                          seed=213),
+    "tl1_7": ModelConfig("tl1_7", "LLaMa-7B", n_layers=8, d_model=64,
+                         n_heads=4, ff_dim=172, ctx=32, train_steps=400,
+                         seed=17),
+    "tvic": ModelConfig("tvic", "Vicuna-7B-v1.5", n_layers=8, d_model=64,
+                        n_heads=4, ff_dim=172, ctx=64, train_steps=400,
+                        instruct_ft_steps=150, seed=75),
+}
+
+# Shapes used by evaluation / fine-tuning graphs (fixed at AOT time).
+EVAL_BATCH = 4
+PROFILE_BATCH = 1
+FT_BATCH = 8
+LORA_RANK = 4
+ALPHA_OUTLIER = 5.0  # paper: alpha typically five or greater

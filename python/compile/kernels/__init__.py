@@ -1,0 +1,5 @@
+"""L1 Pallas kernels + pure-jnp reference oracles."""
+from . import ref  # noqa: F401
+from .pallas_kernels import (  # noqa: F401
+    attention, masked_matmul, matmul, rmsnorm, swiglu, weight_metric,
+)

@@ -1,0 +1,189 @@
+"""L1 — Pallas kernels for the Mosaic hot spots (interpret=True).
+
+Five kernels cover the paper's compute paths:
+
+  rmsnorm       — fused RMS normalization (decoder pre-norms)
+  matmul        — tiled projection matmul (dense / structurally-sliced)
+  masked_matmul — x @ (W ⊙ M): the unstructured-pruned projection
+  swiglu        — fused gate/up/down feed-forward block
+  attention     — causal single-head attention tile
+  weight_metric — ω = ||A||₂·|θ| outlier statistics (the RC hot spot,
+                  Alg. 1 lines 11–15; exported standalone so the rust
+                  Ranking Controller runs it via PJRT)
+
+TPU adaptation (the paper targets CUDA/CUTLASS): tiles are sized for VMEM
+residency via BlockSpec rather than warp/shared-memory scheduling; the
+mask multiply of `masked_matmul` fuses into the MXU epilogue instead of a
+semi-structured gather. interpret=True is mandatory here — real TPU
+lowering emits Mosaic custom-calls the CPU PJRT plugin cannot execute, so
+correctness flows through the interpreter and TPU efficiency is estimated
+analytically in DESIGN.md §8.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-5
+
+
+def _tile(n: int, pref: int) -> int:
+    """Largest tile ≤ pref that divides n (keeps BlockSpecs exact)."""
+    t = min(n, pref)
+    while n % t:
+        t -= 1
+    return t
+
+
+# ------------------------------------------------------------------ rmsnorm
+def _rmsnorm_kernel(x_ref, w_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = x * jax.lax.rsqrt(var + EPS) * w_ref[...]
+
+
+def rmsnorm(x, w):
+    """RMSNorm over last axis; x: (N, D) row-tiled into VMEM blocks."""
+    n, d = x.shape
+    tn = _tile(n, 64)
+    return pl.pallas_call(
+        _rmsnorm_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        grid=(n // tn,),
+        in_specs=[
+            pl.BlockSpec((tn, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tn, d), lambda i: (i, 0)),
+        interpret=True,
+    )(x, w)
+
+
+# ------------------------------------------------------------------- matmul
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...],
+                         preferred_element_type=jnp.float32)
+
+
+def matmul(x, w):
+    """x: (N, K) @ w: (K, M). Grid tiles N×M; K kept VMEM-resident."""
+    n, k = x.shape
+    k2, m = w.shape
+    assert k == k2, (x.shape, w.shape)
+    tn, tm = _tile(n, 64), _tile(m, 128)
+    return pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        grid=(n // tn, m // tm),
+        in_specs=[
+            pl.BlockSpec((tn, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tm), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tn, tm), lambda i, j: (i, j)),
+        interpret=True,
+    )(x, w)
+
+
+# ------------------------------------------------------------ masked matmul
+def _masked_matmul_kernel(x_ref, w_ref, m_ref, o_ref):
+    # Mask fused in the epilogue of the weight load — on TPU this is a
+    # VPU multiply feeding the MXU, not a gather.
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...] * m_ref[...],
+                         preferred_element_type=jnp.float32)
+
+
+def masked_matmul(x, w, mask):
+    """Unstructured-pruned projection: x @ (w ⊙ mask)."""
+    n, k = x.shape
+    _, m = w.shape
+    tn, tm = _tile(n, 64), _tile(m, 128)
+    return pl.pallas_call(
+        _masked_matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        grid=(n // tn, m // tm),
+        in_specs=[
+            pl.BlockSpec((tn, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tm), lambda i, j: (0, j)),
+            pl.BlockSpec((k, tm), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tn, tm), lambda i, j: (i, j)),
+        interpret=True,
+    )(x, w, mask)
+
+
+# ------------------------------------------------------------------- swiglu
+def _swiglu_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref):
+    x = x_ref[...]
+    g = jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
+    u = jnp.dot(x, wu_ref[...], preferred_element_type=jnp.float32)
+    h = g * jax.nn.sigmoid(g) * u
+    o_ref[...] = jnp.dot(h, wd_ref[...], preferred_element_type=jnp.float32)
+
+
+def swiglu(x, wg, wu, wd):
+    """Fused SwiGLU FFN; row-tiled, all three weight mats VMEM-resident."""
+    n, d = x.shape
+    f = wg.shape[1]
+    tn = _tile(n, 64)
+    return pl.pallas_call(
+        _swiglu_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        grid=(n // tn,),
+        in_specs=[
+            pl.BlockSpec((tn, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+            pl.BlockSpec((f, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tn, d), lambda i: (i, 0)),
+        interpret=True,
+    )(x, wg, wu, wd)
+
+
+# ---------------------------------------------------------------- attention
+def _attention_kernel(scale, q_ref, k_ref, v_ref, o_ref):
+    q, k, v = q_ref[...], k_ref[...], v_ref[...]
+    s = q.shape[0]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    row = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    scores = jnp.where(col <= row, scores, -1e30)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+def attention(q, k, v, scale):
+    """Causal attention for one (batch, head): q,k,v: (S, Dh) VMEM tiles."""
+    s, dh = q.shape
+    return pl.pallas_call(
+        functools.partial(_attention_kernel, scale),
+        out_shape=jax.ShapeDtypeStruct((s, dh), jnp.float32),
+        interpret=True,
+    )(q, k, v)
+
+
+# ------------------------------------------------------------ weight metric
+def _weight_metric_kernel(alpha, w_ref, a_ref, cnt_ref, sum_ref):
+    omega = jnp.sqrt(a_ref[...])[:, None] * jnp.abs(w_ref[...])
+    mean = jnp.mean(omega)
+    cnt_ref[0, 0] = jnp.sum((omega > alpha * mean).astype(jnp.float32))
+    sum_ref[0, 0] = jnp.sum(omega)
+
+
+def weight_metric(w, act_sq, alpha):
+    """POD statistics for one projection (Eq. 5–6): outlier count + ω sum.
+
+    Single-block kernel: at paper scale a projection tile streams through
+    VMEM once; the two reduction scalars live on-chip.
+    """
+    return pl.pallas_call(
+        functools.partial(_weight_metric_kernel, float(alpha)),
+        out_shape=(
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ),
+        interpret=True,
+    )(w, act_sq)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each `ref_*` function is the mathematical definition its Pallas twin must
+match bit-closely (assert_allclose in python/tests). The L2 model can run
+on either path; the AOT fwd/profile graphs use the Pallas path.
+"""
+
+import jax.numpy as jnp
+
+EPS = 1e-5
+
+
+def ref_rmsnorm(x, w):
+    """RMSNorm over the last axis. x: (..., D), w: (D,)."""
+    var = jnp.mean(x.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    return (x * jnp.reciprocal(jnp.sqrt(var + EPS)) * w).astype(x.dtype)
+
+
+def ref_matmul(x, w):
+    """Projection matmul. x: (N, K) @ w: (K, M) -> (N, M)."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def ref_masked_matmul(x, w, m):
+    """Unstructured-pruned projection: x @ (w ⊙ m)."""
+    return jnp.dot(x, w * m, preferred_element_type=jnp.float32)
+
+
+def ref_silu(x):
+    return x * jnp.reciprocal(1.0 + jnp.exp(-x))
+
+
+def ref_swiglu(x, wg, wu, wd):
+    """SwiGLU FFN: (silu(x@wg) * (x@wu)) @ wd. x: (N, D)."""
+    h = ref_silu(ref_matmul(x, wg)) * ref_matmul(x, wu)
+    return ref_matmul(h, wd)
+
+
+def ref_attention(q, k, v, scale):
+    """Causal single-head attention. q,k,v: (S, Dh)."""
+    s = q.shape[0]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask, scores, -1e30)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+def ref_weight_metric(w, act_sq, alpha):
+    """Wanda/POD weight metric + outlier statistics for one projection.
+
+    w: (K, M) weights, act_sq: (K,) summed squared activations per input
+    feature. omega[i, j] = sqrt(act_sq[i]) * |w[i, j]|  (Eq. 5).
+    Returns (outlier_count, omega_sum): #(omega > alpha * mean) and sum.
+    """
+    omega = jnp.sqrt(act_sq)[:, None] * jnp.abs(w)
+    mean = jnp.mean(omega)
+    count = jnp.sum((omega > alpha * mean).astype(jnp.float32))
+    return count, jnp.sum(omega)

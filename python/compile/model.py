@@ -1,0 +1,215 @@
+"""L2 — LLaMa-style decoder transformer in JAX (build-time only).
+
+Architecture (Figure 1 of the paper): token embedding, N decoder layers
+(RMSNorm → attention with RoPE over the seven projections → RMSNorm →
+SwiGLU FFN), final RMSNorm, LM head. Exactly seven projections per layer:
+{q, k, v, o, gate, up, down}.
+
+Three graphs are AOT-exported per model (see aot.py):
+  forward        — logits for evaluation (PPL, zero-shot task scoring)
+  forward_profile— logits + per-projection Σ activation² accumulators
+                   (the RC's Activation Processor input, Alg. 1 line 8)
+  lora_loss_grad — LoRA fine-tuning loss + grads (E4 / Fig. 10)
+
+`use_pallas=True` routes the hot ops through the L1 Pallas kernels (the
+exported path); False uses the pure-jnp oracles (training path — the two
+are assert_allclose-equal, see python/tests/test_model.py).
+
+Params travel as a *flat list* in `cfg.param_names()` order so that the
+HLO parameter order is deterministic and mirrored by the rust manifest.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, PROJS, PAD, LORA_RANK
+from .kernels import ref
+from .kernels import pallas_kernels as pk
+
+
+# ----------------------------------------------------------------- params
+def init_params(cfg: ModelConfig, key):
+    """Flat list of f32 arrays in canonical order."""
+    params = []
+    for name in cfg.param_names():
+        shape = cfg.param_shape(name)
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32)
+                * (1.0 / jnp.sqrt(fan_in)))
+    return params
+
+
+def param_index(cfg: ModelConfig):
+    return {n: i for i, n in enumerate(cfg.param_names())}
+
+
+# ------------------------------------------------------------------- rope
+def rope_tables(seq: int, head_dim: int):
+    """Rotary embedding cos/sin tables: (seq, head_dim/2)."""
+    half = head_dim // 2
+    inv = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    t = jnp.arange(seq, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.cos(t), jnp.sin(t)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, H, S, Dh) -> rotated."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# ---------------------------------------------------------------- forward
+def _mm(x2d, w, use_pallas):
+    return pk.matmul(x2d, w) if use_pallas else ref.ref_matmul(x2d, w)
+
+
+def _attn_all_heads(q, k, v, scale, use_pallas):
+    """q,k,v: (B, H, S, Dh) -> (B, H, S, Dh), causal."""
+    if use_pallas:
+        b, h, s, dh = q.shape
+        flat = lambda t: t.reshape(b * h, s, dh)
+        out = jax.vmap(lambda qq, kk, vv: pk.attention(qq, kk, vv, scale))(
+            flat(q), flat(k), flat(v))
+        return out.reshape(b, h, s, dh)
+    return jax.vmap(jax.vmap(
+        lambda qq, kk, vv: ref.ref_attention(qq, kk, vv, scale)))(q, k, v)
+
+
+def forward(cfg: ModelConfig, params, tokens, use_pallas=False,
+            profile=False):
+    """tokens: (B, S) int32 -> logits (B, S, vocab).
+
+    With profile=True also returns `act_sq`: a list, one entry per
+    (layer, projection) in canonical order, each (in_features,) holding
+    Σ over batch·seq of the squared projection inputs — the ‖A‖₂ proxy
+    the paper's Activation Processor ships to the CPU.
+    """
+    idx = param_index(cfg)
+    b, s = tokens.shape
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    scale = float(1.0 / (dh ** 0.5))  # python float: pallas kernels
+    # close over it statically (a traced scalar can't be captured)
+    cos, sin = rope_tables(s, dh)
+
+    x = params[idx["embed"]][tokens]  # (B, S, D)
+    act_sq = []
+
+    def record(x2d):
+        if profile:
+            act_sq.append(jnp.sum(x2d.astype(jnp.float32) ** 2, axis=0))
+
+    rms = pk.rmsnorm if use_pallas else ref.ref_rmsnorm
+    for n in range(cfg.n_layers):
+        # ---- attention block
+        xn = rms(x.reshape(b * s, d), params[idx[f"l{n}.attn_norm"]])
+        record(xn)  # q input
+        record(xn)  # k input
+        record(xn)  # v input
+        q = _mm(xn, params[idx[f"l{n}.q"]], use_pallas)
+        k = _mm(xn, params[idx[f"l{n}.k"]], use_pallas)
+        v = _mm(xn, params[idx[f"l{n}.v"]], use_pallas)
+        to_heads = lambda t: t.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        q, k, v = to_heads(q), to_heads(k), to_heads(v)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        attn = _attn_all_heads(q, k, v, scale, use_pallas)
+        attn = attn.transpose(0, 2, 1, 3).reshape(b * s, d)
+        record(attn)  # o input
+        o = _mm(attn, params[idx[f"l{n}.o"]], use_pallas)
+        x = x + o.reshape(b, s, d)
+        # ---- feed-forward block
+        xn = rms(x.reshape(b * s, d), params[idx[f"l{n}.ffn_norm"]])
+        record(xn)  # gate input
+        record(xn)  # up input
+        wg = params[idx[f"l{n}.gate"]]
+        wu = params[idx[f"l{n}.up"]]
+        wd = params[idx[f"l{n}.down"]]
+        if profile:
+            # need the down-projection input; compute unfused
+            g = _mm(xn, wg, use_pallas)
+            u = _mm(xn, wu, use_pallas)
+            hmid = ref.ref_silu(g) * u
+            record(hmid)  # down input
+            ffn = _mm(hmid, wd, use_pallas)
+        elif use_pallas:
+            ffn = pk.swiglu(xn, wg, wu, wd)
+        else:
+            ffn = ref.ref_swiglu(xn, wg, wu, wd)
+        x = x + ffn.reshape(b, s, d)
+
+    xn = rms(x.reshape(b * s, d), params[idx["final_norm"]])
+    logits = _mm(xn, params[idx["lm_head"]], use_pallas)
+    logits = logits.reshape(b, s, cfg.vocab)
+    if profile:
+        return logits, act_sq
+    return logits
+
+
+# ------------------------------------------------------------------- loss
+def loss_fn(cfg: ModelConfig, params, tokens, use_pallas=False):
+    """Next-token cross entropy, PAD targets masked."""
+    logits = forward(cfg, params, tokens, use_pallas)
+    targets = tokens[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+    mask = (targets != PAD).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ------------------------------------------------------------------- LoRA
+def lora_param_names(cfg: ModelConfig):
+    names = []
+    for n in range(cfg.n_layers):
+        for p in PROJS:
+            names.append(f"l{n}.{p}.lora_a")
+            names.append(f"l{n}.{p}.lora_b")
+    return names
+
+
+def init_lora(cfg: ModelConfig, key, rank=LORA_RANK):
+    out = []
+    for n in range(cfg.n_layers):
+        for p in PROJS:
+            fi, fo = cfg.proj_shape(p)
+            key, sub = jax.random.split(key)
+            out.append(jax.random.normal(sub, (fi, rank), jnp.float32)
+                       * 0.01)
+            out.append(jnp.zeros((rank, fo), jnp.float32))
+    return out
+
+
+def merge_lora(cfg: ModelConfig, params, lora, rank=LORA_RANK,
+               lora_alpha=8.0):
+    """base W + (alpha/r)·A@B for every projection — returns new flat list."""
+    idx = param_index(cfg)
+    out = list(params)
+    li = 0
+    scale = lora_alpha / rank
+    for n in range(cfg.n_layers):
+        for p in PROJS:
+            a, bmat = lora[li], lora[li + 1]
+            li += 2
+            out[idx[f"l{n}.{p}"]] = params[idx[f"l{n}.{p}"]] + scale * (a @ bmat)
+    return out
+
+
+def lora_loss(cfg: ModelConfig, params, lora, tokens, rank=LORA_RANK):
+    merged = merge_lora(cfg, params, lora, rank)
+    return loss_fn(cfg, merged, tokens)
+
+
+def lora_loss_and_grad(cfg: ModelConfig, params, lora, tokens,
+                       rank=LORA_RANK):
+    """(loss, grads) with gradients only over the LoRA params (base frozen).
+
+    This is the graph AOT-exported for the rust fine-tuning driver.
+    """
+    return jax.value_and_grad(
+        lambda lr: lora_loss(cfg, params, lr, tokens, rank))(lora)

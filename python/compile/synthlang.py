@@ -1,0 +1,218 @@
+"""synthlang — seeded synthetic language suite (dataset substitute).
+
+The paper evaluates on WikiText-2 / PTB (perplexity), C4 (calibration),
+Alpaca (fine-tuning) and seven zero-shot reasoning sets. None are usable at
+this scale/offline, so we build a probabilistic language with enough
+structure for a tiny transformer to genuinely learn:
+
+  * 8 "topics", each owning a band of content tokens with a Zipfian
+    bigram transition matrix;
+  * an agreement rule: designated *function* tokens are followed by their
+    grammatical partner with high probability (low-entropy, learnable);
+  * a copy rule: with probability COPY_P the next token repeats the token
+    COPY_DIST positions back (long-range dependency — rewards attention);
+  * an instruction sub-grammar: `[INST] x1..xk [/INST] f(x1)..f(xk)` where
+    f is a fixed permutation (the Alpaca substitute).
+
+Splits differ by topic mix and temperature so the *absolute* PPL differs
+across "datasets" (as WikiText-2 vs PTB does) while pruning-induced
+degradation curves keep their shape.
+
+Seven multiple-choice cloze tasks substitute the reasoning suite: the model
+scores each choice's log-likelihood given a context; correct = the
+grammar-consistent continuation. 2-choice tasks have 50 % chance level
+(BoolQ/RTE/WinoGrande analogues) and 4-choice tasks 25 % (ARC etc.), so
+collapsed models fall to the same chance floors as Table X/XI.
+
+Everything is generated from fixed seeds and serialized into artifacts/ —
+the rust side only ever *loads* these files (python never on request path).
+"""
+
+import json
+import os
+
+import numpy as np
+
+from .configs import VOCAB, PAD, BOS, EOS
+
+N_TOPICS = 8
+FUNC_TOKENS = list(range(8, 40))      # function tokens with partners
+CONTENT_START = 40                    # content bands start here
+BAND = (VOCAB - CONTENT_START) // N_TOPICS
+INST_OPEN, INST_CLOSE = 3, 4          # [INST] / [/INST]
+COPY_P = 0.12
+COPY_DIST = 8
+AGREE_P = 0.85
+
+
+class SynthLang:
+    """Deterministic synthetic language; all sampling via an owned RNG."""
+
+    def __init__(self, seed: int = 1234):
+        self.rng = np.random.default_rng(seed)
+        master = np.random.default_rng(seed ^ 0x5EED)
+        # Function-token partner map (agreement rule).
+        self.partner = {f: int(master.integers(CONTENT_START, VOCAB))
+                        for f in FUNC_TOKENS}
+        # Per-topic Zipfian bigram transition tables over its band.
+        self.topic_next = []
+        for t in range(N_TOPICS):
+            lo = CONTENT_START + t * BAND
+            ranks = np.arange(1, BAND + 1, dtype=np.float64)
+            base = 1.0 / ranks ** 1.1
+            tbl = np.empty((BAND, BAND))
+            for i in range(BAND):
+                w = np.roll(base, int(master.integers(0, BAND)))
+                tbl[i] = w / w.sum()
+            self.topic_next.append((lo, tbl))
+        # Alpaca-substitute permutation over content tokens.
+        perm = master.permutation(np.arange(CONTENT_START, VOCAB))
+        self.inst_map = {CONTENT_START + i: int(perm[i])
+                         for i in range(VOCAB - CONTENT_START)}
+
+    # ---------------------------------------------------------------- core
+    def _next_token(self, topic, prev, hist, temp):
+        """Sample the next token given topic, previous token, history."""
+        r = self.rng.random()
+        if len(hist) >= COPY_DIST and r < COPY_P:
+            return int(hist[-COPY_DIST])
+        if prev in self.partner and r < COPY_P + AGREE_P:
+            return self.partner[prev]
+        # occasionally emit a function token to seed agreement pairs
+        if self.rng.random() < 0.10:
+            return int(FUNC_TOKENS[self.rng.integers(0, len(FUNC_TOKENS))])
+        lo, tbl = self.topic_next[topic]
+        row = tbl[(prev - lo) % BAND] if prev >= CONTENT_START else tbl[0]
+        if temp != 1.0:
+            row = row ** (1.0 / temp)
+            row = row / row.sum()
+        return int(lo + self.rng.choice(BAND, p=row))
+
+    def doc(self, length, topics, temp=1.0):
+        """One document: BOS <tokens> EOS."""
+        topic = int(topics[self.rng.integers(0, len(topics))])
+        toks = [BOS]
+        prev = CONTENT_START + topic * BAND
+        for _ in range(length):
+            if self.rng.random() < 0.02:  # topic drift
+                topic = int(topics[self.rng.integers(0, len(topics))])
+            nxt = self._next_token(topic, prev, toks, temp)
+            toks.append(nxt)
+            prev = nxt
+        toks.append(EOS)
+        return toks
+
+    def corpus(self, n_tokens, topics, temp=1.0, doc_len=96):
+        out = []
+        while len(out) < n_tokens:
+            out.extend(self.doc(doc_len, topics, temp))
+        return np.asarray(out[:n_tokens], dtype=np.uint16)
+
+    # -------------------------------------------------------- instructions
+    def instruction_pair(self, k=6):
+        """[INST] x1..xk [/INST] f(x1)..f(xk) EOS  (Alpaca substitute)."""
+        xs = [int(self.rng.integers(CONTENT_START, VOCAB)) for _ in range(k)]
+        ys = [self.inst_map[x] for x in xs]
+        return [BOS, INST_OPEN] + xs + [INST_CLOSE] + ys + [EOS]
+
+    def instruction_corpus(self, n_pairs, seq_len):
+        """Packed instruction pairs, padded to fixed seq_len rows."""
+        rows = []
+        for _ in range(n_pairs):
+            p = self.instruction_pair(k=max(2, (seq_len - 4) // 2))
+            p = p[:seq_len] + [PAD] * max(0, seq_len - len(p))
+            rows.append(p)
+        return np.asarray(rows, dtype=np.uint16)
+
+    # --------------------------------------------------------------- tasks
+    def cloze_task(self, n_items, n_choices, ctx_len, cont_len,
+                   distractor_mode):
+        """Multiple-choice continuation task.
+
+        distractor_mode:
+          'offtopic' — distractors from a different topic band (easy)
+          'neartopic' — distractors from the same band, wrong transition
+          'shuffle'  — the true continuation shuffled (hard)
+        """
+        items = []
+        for _ in range(n_items):
+            topic = int(self.rng.integers(0, N_TOPICS))
+            ctx = self.doc(ctx_len, [topic])[:-1]  # drop EOS
+            # true continuation: continue the grammar greedily-ish
+            cont = []
+            prev = ctx[-1]
+            for _ in range(cont_len):
+                nxt = self._next_token(topic, prev, ctx + cont, 0.5)
+                cont.append(nxt)
+                prev = nxt
+            choices = [cont]
+            while len(choices) < n_choices:
+                if distractor_mode == "offtopic":
+                    t2 = (topic + 1 + int(self.rng.integers(0, N_TOPICS - 1))) % N_TOPICS
+                    lo = CONTENT_START + t2 * BAND
+                    d = [int(lo + self.rng.integers(0, BAND))
+                         for _ in range(cont_len)]
+                elif distractor_mode == "neartopic":
+                    lo = CONTENT_START + topic * BAND
+                    d = [int(lo + self.rng.integers(0, BAND))
+                         for _ in range(cont_len)]
+                else:  # shuffle
+                    d = list(self.rng.permutation(cont))
+                    if d == cont:
+                        d = d[::-1]
+                choices.append(d)
+            order = self.rng.permutation(n_choices)
+            label = int(np.where(order == 0)[0][0])
+            items.append({
+                "context": [int(x) for x in ctx],
+                "choices": [[int(x) for x in choices[i]] for i in order],
+                "label": label,
+            })
+        return items
+
+
+# Task roster: (name, n_choices, ctx_len, cont_len, distractor_mode)
+TASKS = [
+    ("arc_es", 4, 24, 4, "offtopic"),    # ARC-e analogue (easy)
+    ("arc_cs", 4, 24, 4, "neartopic"),   # ARC-c analogue (hard)
+    ("boolqs", 2, 32, 3, "neartopic"),   # BoolQ analogue
+    ("hellas", 4, 40, 6, "offtopic"),    # HellaSwag analogue
+    ("obqas", 4, 16, 4, "neartopic"),    # OpenBookQA analogue
+    ("rtes", 2, 28, 4, "shuffle"),       # RTE analogue
+    ("winos", 2, 20, 2, "neartopic"),    # WinoGrande analogue
+]
+
+SPLITS = {
+    # name: (n_tokens, topics, temperature)
+    "trains": (400_000, list(range(N_TOPICS)), 1.0),
+    "wikitext2s": (24_000, [0, 1, 2, 3], 0.9),
+    "ptbs": (24_000, [4, 5, 6, 7], 1.3),
+    "c4s": (64_000, list(range(N_TOPICS)), 1.05),
+}
+
+
+def build_all(out_dir: str, seed: int = 1234, n_task_items: int = 120):
+    """Generate every split + task and serialize into out_dir."""
+    os.makedirs(out_dir, exist_ok=True)
+    lang = SynthLang(seed)
+    manifest = {"vocab": VOCAB, "seed": seed, "splits": {}, "tasks": {}}
+    for name, (n, topics, temp) in SPLITS.items():
+        arr = lang.corpus(n, topics, temp)
+        path = os.path.join(out_dir, f"{name}.bin")
+        arr.tofile(path)
+        manifest["splits"][name] = {"file": f"{name}.bin", "n_tokens": int(n)}
+    # Alpaca substitute: fixed-width instruction rows.
+    inst = lang.instruction_corpus(n_pairs=2048, seq_len=32)
+    inst.tofile(os.path.join(out_dir, "alpacas.bin"))
+    manifest["splits"]["alpacas"] = {
+        "file": "alpacas.bin", "rows": 2048, "seq_len": 32}
+    for name, nc, cl, co, mode in TASKS:
+        items = lang.cloze_task(n_task_items, nc, cl, co, mode)
+        with open(os.path.join(out_dir, f"task_{name}.json"), "w") as f:
+            json.dump(items, f)
+        manifest["tasks"][name] = {
+            "file": f"task_{name}.json", "n_items": len(items),
+            "n_choices": nc, "chance": 1.0 / nc}
+    with open(os.path.join(out_dir, "data_manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest

@@ -1,0 +1,89 @@
+"""Build-time pretraining of the model zoo on synthlang (runs ONCE).
+
+This substitutes "foundation LLM weights from HuggingFace" (Table IX): a
+trained tiny model has real, non-random weight/activation outlier structure
+— which is exactly what POD/LOD ranking consumes. Python is never on the
+request path; rust only sees the exported weights + HLO artifacts.
+
+Adam with linear warmup; the per-model step budget mirrors the paper's
+"extent of training" axis. MOSAIC_FAST=1 shrinks steps for CI.
+"""
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from . import model as M
+
+
+def batches(stream: np.ndarray, batch: int, seq: int, rng: np.random.Generator):
+    """Random contiguous windows from a token stream."""
+    hi = len(stream) - seq - 1
+    while True:
+        idx = rng.integers(0, hi, size=batch)
+        yield np.stack([stream[i:i + seq] for i in idx]).astype(np.int32)
+
+
+def adam_init(params):
+    z = lambda: [jnp.zeros_like(p) for p in params]
+    return {"m": z(), "v": z(), "t": 0}
+
+
+def adam_step(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    state["t"] += 1
+    t = state["t"]
+    out = []
+    for i, (p, g) in enumerate(zip(params, grads)):
+        state["m"][i] = b1 * state["m"][i] + (1 - b1) * g
+        state["v"][i] = b2 * state["v"][i] + (1 - b2) * g * g
+        mh = state["m"][i] / (1 - b1 ** t)
+        vh = state["v"][i] / (1 - b2 ** t)
+        out.append(p - lr * mh / (jnp.sqrt(vh) + eps))
+    return out
+
+
+def train_model(cfg: ModelConfig, train_stream: np.ndarray,
+                instruct_rows=None, log_every=100):
+    """Pretrain one model; returns (params, loss_history)."""
+    fast = os.environ.get("MOSAIC_FAST") == "1"
+    steps = max(30, cfg.train_steps // 10) if fast else cfg.train_steps
+    batch = 16 if fast else 32
+    key = jax.random.PRNGKey(cfg.seed)
+    params = M.init_params(cfg, key)
+    rng = np.random.default_rng(cfg.seed + 1)
+    gen = batches(train_stream, batch, cfg.ctx, rng)
+
+    loss_grad = jax.jit(jax.value_and_grad(
+        lambda p, toks: M.loss_fn(cfg, p, toks)))
+    state = adam_init(params)
+    hist = []
+    t0 = time.time()
+    base_lr = 3e-3
+    for step in range(steps):
+        warm = min(1.0, (step + 1) / 50)
+        lr = base_lr * warm * (1.0 - 0.7 * step / steps)
+        toks = jnp.asarray(next(gen))
+        loss, grads = loss_grad(params, toks)
+        params = adam_step(params, grads, state, lr)
+        hist.append(float(loss))
+        if step % log_every == 0 or step == steps - 1:
+            print(f"  [{cfg.name}] step {step:4d} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.0f}s)")
+
+    # Vicuna-style instruction fine-tune (fine-tuned-parameters axis).
+    if cfg.instruct_ft_steps and instruct_rows is not None:
+        ft_steps = (cfg.instruct_ft_steps // 5 if fast
+                    else cfg.instruct_ft_steps)
+        ft_lg = jax.jit(jax.value_and_grad(
+            lambda p, toks: M.loss_fn(cfg, p, toks)))
+        for step in range(ft_steps):
+            idx = rng.integers(0, len(instruct_rows), size=batch)
+            toks = jnp.asarray(instruct_rows[idx].astype(np.int32))
+            loss, grads = ft_lg(params, toks)
+            params = adam_step(params, grads, state, 5e-4)
+        print(f"  [{cfg.name}] instruct-ft done loss {float(loss):.4f}")
+    return params, hist

@@ -1,0 +1,152 @@
+"""L1 correctness gate: every Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (and the weight-metric alpha) — the core
+correctness signal for the compute layer. interpret=True keeps the
+kernels executable on CPU.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import pallas_kernels as pk
+
+jax.config.update("jax_platform_name", "cpu")
+
+dims = st.integers(min_value=1, max_value=96)
+small_dims = st.integers(min_value=1, max_value=48)
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+class TestRmsNorm:
+    @settings(max_examples=20, deadline=None)
+    @given(n=dims, d=dims)
+    def test_matches_ref(self, n, d):
+        x = rand(n * 97 + d, n, d)
+        w = rand(7, d)
+        np.testing.assert_allclose(
+            pk.rmsnorm(x, w), ref.ref_rmsnorm(x, w), rtol=1e-5, atol=1e-5)
+
+    def test_unit_variance_rows(self):
+        x = jnp.ones((4, 8)) * 3.0
+        out = pk.rmsnorm(x, jnp.ones(8))
+        np.testing.assert_allclose(out, jnp.ones((4, 8)), rtol=1e-3)
+
+
+class TestMatmul:
+    @settings(max_examples=20, deadline=None)
+    @given(n=dims, k=small_dims, m=dims)
+    def test_matches_ref(self, n, k, m):
+        x = rand(n + k, n, k)
+        w = rand(k + m, k, m)
+        np.testing.assert_allclose(
+            pk.matmul(x, w), ref.ref_matmul(x, w), rtol=2e-4, atol=2e-4)
+
+    def test_identity(self):
+        x = rand(3, 8, 8)
+        np.testing.assert_allclose(
+            pk.matmul(x, jnp.eye(8)), x, rtol=1e-5, atol=1e-6)
+
+
+class TestMaskedMatmul:
+    @settings(max_examples=15, deadline=None)
+    @given(n=small_dims, k=small_dims, m=dims, seed=st.integers(0, 99))
+    def test_matches_ref(self, n, k, m, seed):
+        x = rand(seed, n, k)
+        w = rand(seed + 1, k, m)
+        mask = (jax.random.uniform(jax.random.PRNGKey(seed + 2), (k, m))
+                > 0.5).astype(jnp.float32)
+        np.testing.assert_allclose(
+            pk.masked_matmul(x, w, mask),
+            ref.ref_masked_matmul(x, w, mask), rtol=2e-4, atol=2e-4)
+
+    def test_zero_mask_zero_output(self):
+        x = rand(1, 4, 6)
+        w = rand(2, 6, 5)
+        out = pk.masked_matmul(x, w, jnp.zeros((6, 5)))
+        np.testing.assert_allclose(out, jnp.zeros((4, 5)))
+
+    def test_ones_mask_is_dense(self):
+        x = rand(3, 4, 6)
+        w = rand(4, 6, 5)
+        np.testing.assert_allclose(
+            pk.masked_matmul(x, w, jnp.ones((6, 5))),
+            pk.matmul(x, w), rtol=1e-6)
+
+
+class TestSwiglu:
+    @settings(max_examples=15, deadline=None)
+    @given(n=small_dims, d=small_dims, f=dims)
+    def test_matches_ref(self, n, d, f):
+        x = rand(n, n, d)
+        wg, wu, wd = rand(1, d, f), rand(2, d, f), rand(3, f, d)
+        np.testing.assert_allclose(
+            pk.swiglu(x, wg, wu, wd), ref.ref_swiglu(x, wg, wu, wd),
+            rtol=5e-4, atol=5e-4)
+
+
+class TestAttention:
+    @settings(max_examples=15, deadline=None)
+    @given(s=st.integers(1, 64), dh=st.integers(2, 32))
+    def test_matches_ref(self, s, dh):
+        q, k, v = rand(1, s, dh), rand(2, s, dh), rand(3, s, dh)
+        scale = 1.0 / np.sqrt(dh)
+        np.testing.assert_allclose(
+            pk.attention(q, k, v, scale),
+            ref.ref_attention(q, k, v, scale), rtol=2e-4, atol=2e-4)
+
+    def test_causality(self):
+        # perturbing the last K/V row must not change earlier outputs
+        s, dh = 8, 4
+        q, k, v = rand(1, s, dh), rand(2, s, dh), rand(3, s, dh)
+        out1 = pk.attention(q, k, v, 0.5)
+        k2 = k.at[-1].set(99.0)
+        v2 = v.at[-1].set(-99.0)
+        out2 = pk.attention(q, k2, v2, 0.5)
+        np.testing.assert_allclose(out1[:-1], out2[:-1], rtol=1e-5)
+
+    def test_first_row_is_v0(self):
+        q, k, v = rand(1, 4, 8), rand(2, 4, 8), rand(3, 4, 8)
+        out = pk.attention(q, k, v, 0.5)
+        np.testing.assert_allclose(out[0], v[0], rtol=1e-5)
+
+
+class TestWeightMetric:
+    @settings(max_examples=20, deadline=None)
+    @given(k=small_dims, m=dims,
+           alpha=st.floats(1.0, 10.0),
+           seed=st.integers(0, 99))
+    def test_matches_ref(self, k, m, alpha, seed):
+        w = rand(seed, k, m)
+        act = jnp.abs(rand(seed + 1, k)) + 0.01
+        c, s = pk.weight_metric(w, act, alpha)
+        rc, rs = ref.ref_weight_metric(w, act, alpha)
+        np.testing.assert_allclose(c[0, 0], rc, rtol=1e-6)
+        np.testing.assert_allclose(s[0, 0], rs, rtol=1e-4)
+
+    def test_known_outlier(self):
+        # one huge weight, alpha=2 -> exactly one outlier
+        w = jnp.array([[1.0, 1.0], [1.0, 100.0]])
+        act = jnp.ones(2)
+        c, _ = pk.weight_metric(w, act, 2.0)
+        assert float(c[0, 0]) == 1.0
+
+    def test_uniform_weights_no_outliers(self):
+        w = jnp.ones((8, 8))
+        act = jnp.ones(8)
+        c, _ = pk.weight_metric(w, act, 1.5)
+        assert float(c[0, 0]) == 0.0
+
+
+@pytest.mark.parametrize("n,k,m", [(17, 31, 53), (64, 64, 224), (1, 1, 1)])
+def test_matmul_odd_shapes(n, k, m):
+    x = rand(n, n, k)
+    w = rand(m, k, m)
+    np.testing.assert_allclose(
+        pk.matmul(x, w), ref.ref_matmul(x, w), rtol=2e-4, atol=2e-4)

@@ -1,0 +1,134 @@
+"""L2 gate: model forward (pallas path == jnp path), profile outputs,
+loss behaviour, LoRA gradient correctness."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.configs import MODELS, ModelConfig, PROJS
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = ModelConfig("unit", "unit-test", n_layers=2, d_model=16, n_heads=2,
+                  ff_dim=40, ctx=16, vocab=64, train_steps=0, seed=0)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    key = jax.random.PRNGKey(1)
+    return jax.random.randint(key, (2, CFG.ctx), 3, CFG.vocab, jnp.int32)
+
+
+def test_param_table_consistency():
+    names = CFG.param_names()
+    assert len(names) == 1 + CFG.n_layers * 9 + 2
+    assert names[0] == "embed"
+    assert names[-1] == "lm_head"
+    # 7 projections per layer
+    projs = [n for n in names if n.split(".")[-1] in PROJS]
+    assert len(projs) == CFG.n_layers * 7
+
+
+def test_forward_shapes(params, tokens):
+    logits = M.forward(CFG, params, tokens)
+    assert logits.shape == (2, CFG.ctx, CFG.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_pallas_equals_ref_path(params, tokens):
+    a = M.forward(CFG, params, tokens, use_pallas=False)
+    b = M.forward(CFG, params, tokens, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_profile_act_order_and_values(params, tokens):
+    logits, acts = M.forward(CFG, params, tokens, profile=True)
+    assert len(acts) == CFG.n_layers * 7
+    # canonical order: q,k,v share inputs per layer
+    for layer in range(CFG.n_layers):
+        base = layer * 7
+        np.testing.assert_allclose(acts[base], acts[base + 1])
+        np.testing.assert_allclose(acts[base], acts[base + 2])
+        # gate/up share inputs
+        np.testing.assert_allclose(acts[base + 4], acts[base + 5])
+        # down input has ff_dim features
+        assert acts[base + 6].shape == (CFG.ff_dim,)
+    assert all(bool((a >= 0).all()) for a in acts), "Σ act² must be ≥ 0"
+
+
+def test_profile_logits_match_forward(params, tokens):
+    a = M.forward(CFG, params, tokens)
+    b, _ = M.forward(CFG, params, tokens, profile=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_causality(params):
+    t1 = jnp.array([[5, 6, 7, 8]], jnp.int32)
+    t2 = jnp.array([[5, 6, 7, 60]], jnp.int32)
+    l1 = M.forward(CFG, params, t1)
+    l2 = M.forward(CFG, params, t2)
+    np.testing.assert_allclose(l1[0, :3], l2[0, :3], rtol=1e-5, atol=1e-6)
+    assert not np.allclose(l1[0, 3], l2[0, 3])
+
+
+def test_loss_masks_pad(params):
+    t_nopad = jnp.array([[5, 6, 7, 8, 9, 10]], jnp.int32)
+    t_pad = jnp.array([[5, 6, 7, 8, 0, 0]], jnp.int32)
+    l1 = M.loss_fn(CFG, params, t_nopad)
+    l2 = M.loss_fn(CFG, params, t_pad)
+    assert np.isfinite(l1) and np.isfinite(l2)
+    assert not np.isclose(float(l1), float(l2))
+
+
+def test_sgd_reduces_loss(params):
+    toks = jax.random.randint(jax.random.PRNGKey(3), (4, CFG.ctx), 3,
+                              CFG.vocab, jnp.int32)
+    lg = jax.jit(jax.value_and_grad(lambda p: M.loss_fn(CFG, p, toks)))
+    ps = list(params)
+    l0, _ = lg(ps)
+    for _ in range(20):
+        loss, grads = lg(ps)
+        ps = [p - 0.05 * g for p, g in zip(ps, grads)]
+    l1, _ = lg(ps)
+    assert float(l1) < float(l0), f"{l1} !< {l0}"
+
+
+def test_lora_grads_nonzero_and_shapes(params, tokens):
+    lora = M.init_lora(CFG, jax.random.PRNGKey(4))
+    loss, grads = M.lora_loss_and_grad(CFG, params, lora, tokens)
+    assert len(grads) == len(lora) == CFG.n_layers * 7 * 2
+    assert np.isfinite(float(loss))
+    # B init is zero so A-grads are zero on the first step, B-grads not
+    b_norms = [float(jnp.abs(g).sum()) for g in grads[1::2]]
+    assert sum(b_norms) > 0, "B grads must be nonzero"
+    for g, l in zip(grads, lora):
+        assert g.shape == l.shape
+
+
+def test_merge_lora_zero_b_is_identity(params):
+    lora = M.init_lora(CFG, jax.random.PRNGKey(5))
+    merged = M.merge_lora(CFG, params, lora)
+    for a, b in zip(params, merged):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_zoo_configs_mirror_paper_axes():
+    # Table II axes: ratio ordering and depth
+    r = {n: c.ff_dim / c.d_model for n, c in MODELS.items()}
+    assert r["tl31"] == r["tl3"] == 3.5
+    assert abs(r["tl1_7"] - 2.6875) < 0.01
+    assert MODELS["tl2_13"].n_layers > MODELS["tl1_7"].n_layers
+    assert MODELS["tl31"].ctx > MODELS["tl3"].ctx
+    for c in MODELS.values():
+        assert c.d_model % c.n_heads == 0

@@ -1,0 +1,97 @@
+"""Dataset substitute gate: synthlang determinism, structure, tasks."""
+
+import numpy as np
+import pytest
+
+from compile import synthlang as sl
+from compile.configs import VOCAB, BOS, EOS, PAD
+
+
+@pytest.fixture(scope="module")
+def lang():
+    return sl.SynthLang(seed=77)
+
+
+def test_deterministic_given_seed():
+    a = sl.SynthLang(5).corpus(2000, [0, 1])
+    b = sl.SynthLang(5).corpus(2000, [0, 1])
+    np.testing.assert_array_equal(a, b)
+
+
+def test_corpus_tokens_in_vocab(lang):
+    c = lang.corpus(5000, list(range(sl.N_TOPICS)))
+    assert c.dtype == np.uint16
+    assert int(c.max()) < VOCAB
+    assert len(c) == 5000
+
+
+def test_docs_have_bos_eos(lang):
+    d = lang.doc(50, [0])
+    assert d[0] == BOS
+    assert d[-1] == EOS
+
+
+def test_agreement_rule_learnable(lang):
+    # after a function token, its partner must appear with high frequency
+    c = lang.corpus(40_000, [0, 1, 2, 3])
+    hits, total = 0, 0
+    for i in range(len(c) - 1):
+        t = int(c[i])
+        if t in lang.partner:
+            total += 1
+            if int(c[i + 1]) == lang.partner[t]:
+                hits += 1
+    assert total > 50, "function tokens must occur"
+    assert hits / total > 0.5, f"agreement rate {hits / total}"
+
+
+def test_topic_bands_separate(lang):
+    c0 = lang.corpus(5000, [0])
+    c7 = lang.corpus(5000, [7])
+    band = lambda c: np.median(c[c >= sl.CONTENT_START])
+    assert band(c7) > band(c0), "topics occupy distinct token bands"
+
+
+def test_instruction_pairs_well_formed(lang):
+    p = lang.instruction_pair(k=4)
+    assert p[0] == BOS and p[1] == sl.INST_OPEN
+    assert p[6] == sl.INST_CLOSE
+    xs, ys = p[2:6], p[7:11]
+    assert [lang.inst_map[x] for x in xs] == ys
+    assert p[-1] == EOS
+
+
+def test_instruction_rows_fixed_width(lang):
+    rows = lang.instruction_corpus(16, 32)
+    assert rows.shape == (16, 32)
+    # PAD only at tail
+    for r in rows:
+        inside = True
+        for t in r:
+            if t == PAD:
+                inside = False
+            else:
+                assert inside, "PAD must be trailing"
+
+
+@pytest.mark.parametrize("name,nc,cl,co,mode", sl.TASKS)
+def test_tasks_well_formed(lang, name, nc, cl, co, mode):
+    items = lang.cloze_task(20, nc, cl, co, mode)
+    assert len(items) == 20
+    for it in items:
+        assert len(it["choices"]) == nc
+        assert 0 <= it["label"] < nc
+        assert all(len(c) == co for c in it["choices"])
+        assert all(0 <= t < VOCAB for c in it["choices"] for t in c)
+
+
+def test_build_all_roundtrip(tmp_path):
+    man = sl.build_all(str(tmp_path), seed=3, n_task_items=10)
+    assert set(man["splits"]) == {"trains", "wikitext2s", "ptbs", "c4s",
+                                  "alpacas"}
+    assert len(man["tasks"]) == 7
+    w = np.fromfile(tmp_path / "wikitext2s.bin", dtype=np.uint16)
+    assert len(w) == man["splits"]["wikitext2s"]["n_tokens"]
+    import json
+    items = json.load(open(tmp_path / "task_arc_es.json"))
+    assert len(items) == 10

@@ -1,0 +1,102 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!   A1 — POD outlier threshold α (Eq. 6; paper: "typically five")
+//!   A2 — composite structural share σ (our split of the p budget)
+//!   A3 — planner spreads γ_L/γ_P (the non-uniformity strength)
+//!   A4 — 2:4 semi-structured vs unstructured 50 % (the CUTLASS format)
+
+use mosaic::bench_support::{header, rec, Bench};
+use mosaic::coordinator::Mosaic;
+use mosaic::eval::{measure_native, perplexity_native};
+use mosaic::prune::composite::CompositeOpts;
+use mosaic::prune::{self, plan, Metric, Uniformity};
+use mosaic::rank::compute_global_rank;
+use mosaic::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new("ablate_design", "design-choice ablations");
+    let mut mo = Mosaic::load("tl1_7")?;
+    let samples = Bench::samples();
+    let stats = mo.activation_stats(samples)?;
+    let seq = mo.dense.cfg.ctx.min(64);
+    let wt = mo.store.split("wikitext2s")?;
+    let p = 0.8;
+
+    // ---- A1: alpha sweep (rank changes -> plan changes -> PPL)
+    println!("\nA1: POD alpha sweep (p={p}, projection+wanda)");
+    header(&["alpha", "ppl"]);
+    let alphas: &[f64] =
+        if Bench::fast() { &[5.0] } else { &[2.0, 3.0, 5.0, 8.0, 12.0] };
+    for &alpha in alphas {
+        let dense = mo.dense.clone();
+        let rank = compute_global_rank(&dense, &stats, alpha, None)?;
+        let pl = plan(&rank, p, Uniformity::Projection);
+        let mut m = mo.dense.clone();
+        prune::prune_unstructured(&mut m, &pl, Some(&stats), Metric::Wanda);
+        let ppl = perplexity_native(&m, &wt, seq, 16);
+        mosaic::bench_support::rowf(&[alpha, ppl]);
+        b.row("alpha", rec(&[("alpha", Json::num(alpha)),
+                             ("ppl", Json::num(ppl))]));
+    }
+
+    // ---- A2: composite structural share sweep
+    println!("\nA2: composite structural share sweep (p={p})");
+    header(&["share", "ppl", "bytes", "latency"]);
+    let shares: &[f64] =
+        if Bench::fast() { &[0.5] } else { &[0.0, 0.25, 0.5, 0.75, 1.0] };
+    let rank = mo.global_rank(Uniformity::Projection, samples)?;
+    let hess = mo.hessians(samples)?.clone_shallow();
+    for &share in shares {
+        let pl = plan(&rank, p, Uniformity::Projection);
+        let mut m = mo.dense.clone();
+        prune::prune_composite(
+            &mut m, &pl, Some(&stats), Some(&hess),
+            CompositeOpts { struct_share: share, use_obs: true });
+        let ppl = perplexity_native(&m, &wt, seq, 16);
+        let perf = measure_native(&m, 32, 8, 2);
+        mosaic::bench_support::rowf(&[
+            share, ppl, m.model_bytes() as f64, perf.latency_s]);
+        b.row("share", rec(&[
+            ("share", Json::num(share)),
+            ("ppl", Json::num(ppl)),
+            ("bytes", Json::num(m.model_bytes() as f64)),
+            ("latency_s", Json::num(perf.latency_s)),
+        ]));
+    }
+
+    // ---- A3: planner spread strength (scale both gammas)
+    println!("\nA3: planner spread scale (1.0 = shipped calibration)");
+    header(&["scale", "ppl"]);
+    let scales: &[f64] =
+        if Bench::fast() { &[1.0] } else { &[0.0, 0.5, 1.0, 1.5, 2.0] };
+    for &scale in scales {
+        // emulate by interpolating between uniform and the planned targets
+        let pl = plan(&rank, p, Uniformity::Projection);
+        let mut pl2 = pl.clone();
+        for t in pl2.targets.iter_mut().flatten() {
+            *t = (p + (*t - p) * scale).clamp(0.0, 0.95);
+        }
+        let mut m = mo.dense.clone();
+        prune::prune_unstructured(&mut m, &pl2, Some(&stats),
+                                  Metric::Wanda);
+        let ppl = perplexity_native(&m, &wt, seq, 16);
+        mosaic::bench_support::rowf(&[scale, ppl]);
+        b.row("spread", rec(&[("scale", Json::num(scale)),
+                              ("ppl", Json::num(ppl))]));
+    }
+
+    // ---- A4: 2:4 semi-structured vs unstructured at 50 %
+    println!("\nA4: 2:4 vs unstructured 50%");
+    header(&["variant", "ppl"]);
+    let mut m24 = mo.dense.clone();
+    prune::semistructured::prune_nm(&mut m24, Some(&stats), 2, 4);
+    let ppl24 = perplexity_native(&m24, &wt, seq, 16);
+    let m50 = mo.prune_wanda(0.5, Uniformity::Global, samples)?;
+    let ppl50 = perplexity_native(&m50, &wt, seq, 16);
+    println!("{:>12}{:>12.2}", "2:4", ppl24);
+    println!("{:>12}{:>12.2}", "unstr-50%", ppl50);
+    b.set("nm_2_4_ppl", Json::num(ppl24));
+    b.set("unstructured_50_ppl", Json::num(ppl50));
+
+    b.finish();
+    Ok(())
+}

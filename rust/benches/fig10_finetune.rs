@@ -1,0 +1,57 @@
+//! Fig. 10: LoRA fine-tuning train/eval loss curves for 80 %-pruned
+//! models under global / layer / projection pruning.
+//! Paper shape: the projection-pruned model starts lower and reaches
+//! any given loss several times faster than global/layer.
+
+use mosaic::bench_support::{rec, Bench};
+use mosaic::coordinator::Mosaic;
+use mosaic::finetune::{train_lora, LoraConfig};
+use mosaic::prune::{Category, Uniformity};
+use mosaic::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new("fig10_finetune", "LoRA loss curves @80%");
+    let models: &[&str] =
+        if Bench::fast() { &["tl31"] } else { &["tl31", "tl2_13"] };
+    let steps = if Bench::fast() { 20 } else { 80 };
+    let samples = Bench::samples();
+    for name in models {
+        let mut mo = Mosaic::load(name)?;
+        let (rows, n_rows, seq) = mo.finetune_rows()?;
+        println!("\n-- {name} --");
+        for u in [Uniformity::Global, Uniformity::Layer,
+                  Uniformity::Projection] {
+            let (pruned, _) =
+                mo.prune(0.8, u, Category::Unstructured, samples)?;
+            let cfg = LoraConfig { steps, ..Default::default() };
+            let rt = mo.runtime()?;
+            rt.set_weights(&pruned)?;
+            let res = train_lora(rt, &rows, n_rows, seq, &cfg)?;
+            let first = res.train_curve.first().unwrap().1;
+            let last = res.train_curve.last().unwrap().1;
+            println!(
+                "{:>11}: train {first:.3} -> {last:.3}, eval {:.3} -> \
+                 {:.3} ({:.1}s)",
+                u.name(),
+                res.eval_curve.first().unwrap().1,
+                res.eval_curve.last().unwrap().1,
+                res.wall_s
+            );
+            b.row("series", rec(&[
+                ("model", Json::str(name)),
+                ("method", Json::str(u.name())),
+                ("train_curve", Json::Arr(
+                    res.train_curve.iter()
+                        .map(|(s, l)| Json::from_f64s(&[*s as f64, *l]))
+                        .collect())),
+                ("eval_curve", Json::Arr(
+                    res.eval_curve.iter()
+                        .map(|(s, l)| Json::from_f64s(&[*s as f64, *l]))
+                        .collect())),
+                ("wall_s", Json::num(res.wall_s)),
+            ]));
+        }
+    }
+    b.finish();
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Fig. 11: end-to-end overhead — pruning time plus the fine-tuning
+//! time needed to reach a common quality bar, per pruning method.
+//! Paper shape: projection pruning costs slightly more up front (weight
+//! metrics per projection) but reaches the quality bar several times
+//! faster, so its end-to-end bar is the shortest (up to 7.19x).
+//!
+//! The quality bar is the *global* method's eval loss after its full
+//! fine-tuning run (the paper fine-tunes layer/projection models "to
+//! match the same accuracy achieved by global pruning").
+
+use mosaic::bench_support::{rec, Bench};
+use mosaic::coordinator::Mosaic;
+use mosaic::finetune::{train_lora, LoraConfig};
+use mosaic::prune::{Category, Uniformity};
+use mosaic::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new("fig11_overheads",
+                           "end-to-end prune+finetune overhead");
+    let models: &[&str] =
+        if Bench::fast() { &["tl31"] } else { &["tl31", "tl2_13"] };
+    let full_steps = if Bench::fast() { 16 } else { 80 };
+    let samples = Bench::samples();
+    for name in models {
+        let mut mo = Mosaic::load(name)?;
+        let (rows, n_rows, seq) = mo.finetune_rows()?;
+        println!("\n-- {name} (p=0.8) --");
+
+        // pass 1: global's full run defines the quality bar
+        let mut results = Vec::new();
+        let mut bar = f64::MAX;
+        for u in [Uniformity::Global, Uniformity::Layer,
+                  Uniformity::Projection] {
+            let t0 = std::time::Instant::now();
+            let (pruned, _) =
+                mo.prune(0.8, u, Category::Unstructured, samples)?;
+            // prune overhead includes rank+profile attribution
+            let prune_s = t0.elapsed().as_secs_f64();
+            let cfg = LoraConfig {
+                steps: full_steps,
+                eval_every: 4,
+                ..Default::default()
+            };
+            let rt = mo.runtime()?;
+            rt.set_weights(&pruned)?;
+            let res = train_lora(rt, &rows, n_rows, seq, &cfg)?;
+            if u == Uniformity::Global {
+                bar = res.eval_curve.last().unwrap().1;
+            }
+            results.push((u, prune_s, res));
+        }
+        println!("quality bar (global final eval loss): {bar:.4}");
+        for (u, prune_s, res) in &results {
+            // fine-tune time to reach the bar: first eval step ≤ bar
+            let total_steps = res.train_curve.len().max(1);
+            let hit = res
+                .eval_curve
+                .iter()
+                .find(|(_, l)| *l <= bar * 1.002)
+                .map(|(s, _)| *s + 1)
+                .unwrap_or(total_steps);
+            let ft_s = res.wall_s * hit as f64 / total_steps as f64;
+            let total = prune_s + ft_s;
+            println!(
+                "{:>11}: prune {prune_s:>7.2}s + finetune-to-bar \
+                 {ft_s:>7.2}s ({hit} steps) = {total:>7.2}s",
+                u.name()
+            );
+            b.row("series", rec(&[
+                ("model", Json::str(name)),
+                ("method", Json::str(u.name())),
+                ("prune_s", Json::num(*prune_s)),
+                ("finetune_s", Json::num(ft_s)),
+                ("steps_to_bar", Json::num(hit as f64)),
+                ("total_s", Json::num(total)),
+            ]));
+        }
+    }
+    b.finish();
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Fig. 2: GPU memory and inference time of the 7B/13B proxies (dense
+//! vs 50 % pruned) as the input grows 128 → 4096 tokens.
+//! Paper shape: memory grows ~t² past the model size; latency grows
+//! super-linearly; the pruned model is ~2x smaller and ~40 % faster.
+
+use mosaic::bench_support::{header, rec, Bench};
+use mosaic::coordinator::Mosaic;
+use mosaic::eval::measure_native;
+use mosaic::platform::{self, memory_required, ModelProfile, Workload};
+use mosaic::prune::{Category, Uniformity};
+use mosaic::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new("fig2_tokens",
+                           "memory/latency vs input tokens");
+    let p1 = platform::by_name("P1").unwrap();
+    let configs = [
+        ("LLaMa-2-7B", 6.74e9, 32usize, 4096usize, 32usize),
+        ("LLaMa-2-13B", 13.02e9, 40, 5120, 40),
+    ];
+    let token_sweep: &[usize] = if Bench::fast() {
+        &[128, 4096]
+    } else {
+        &[128, 256, 512, 1024, 2048, 4096]
+    };
+    for (name, params, layers, d, heads) in configs {
+        println!("\n-- {name} --");
+        header(&["tokens", "dense-GB", "50%-GB", "dense-s", "50%-s"]);
+        for &t in token_sweep {
+            let w = Workload { tokens_in: t, tokens_out: 0, batch: 1 };
+            let dense = ModelProfile::paper_scale(params, layers, d, heads);
+            let mut half = dense;
+            half.bytes /= 2;
+            half.live_params /= 2;
+            let md = memory_required(&dense, &w) as f64 / (1u64 << 30) as f64;
+            let mh = memory_required(&half, &w) as f64 / (1u64 << 30) as f64;
+            let ld = platform::simulate(&p1, &dense, &w).latency_s;
+            let lh = platform::simulate(&p1, &half, &w).latency_s;
+            mosaic::bench_support::rowf(&[t as f64, md, mh, ld, lh]);
+            b.row("series", rec(&[
+                ("model", Json::str(name)),
+                ("tokens", Json::num(t as f64)),
+                ("dense_gb", Json::num(md)),
+                ("pruned_gb", Json::num(mh)),
+                ("dense_s", Json::num(ld)),
+                ("pruned_s", Json::num(lh)),
+            ]));
+        }
+    }
+
+    // host-measured anchor: tiny model, dense vs 50 % composite
+    let mut mo = Mosaic::load("tl1_7")?;
+    let (pruned, _) = mo.prune(0.5, Uniformity::Projection,
+                               Category::Composite, Bench::samples())?;
+    println!("\n-- host anchor (tl1_7, prefill+decode 8) --");
+    header(&["tokens", "dense-s", "50%-s"]);
+    for &t in &[8usize, 16, 24] {
+        let d = measure_native(&mo.dense, t, 8, 3);
+        let p = measure_native(&pruned, t, 8, 3);
+        mosaic::bench_support::rowf(&[t as f64, d.latency_s, p.latency_s]);
+        b.row("host", rec(&[
+            ("tokens", Json::num(t as f64)),
+            ("dense_s", Json::num(d.latency_s)),
+            ("pruned_s", Json::num(p.latency_s)),
+        ]));
+    }
+    b.finish();
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Fig. 7: WikiText-2 + PTB perplexity for all five models under
+//! global / layer / projection pruning, sparsity 0–80 %.
+//! Paper shape: projection lowest everywhere, gap widens with sparsity.
+
+use mosaic::bench_support::{header, rec, Bench};
+use mosaic::coordinator::Mosaic;
+use mosaic::eval::perplexity_native;
+use mosaic::prune::{Category, Uniformity};
+use mosaic::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new("fig7_perplexity",
+                           "PPL vs sparsity, 3 uniformity methods");
+    let models: &[&str] = if Bench::fast() {
+        &["tl1_7"]
+    } else {
+        &["tl31", "tl3", "tl2_13", "tl1_7", "tvic"]
+    };
+    let sparsities = [0.0, 0.2, 0.4, 0.6, 0.8];
+    let samples = Bench::samples();
+    for name in models {
+        let mut mo = Mosaic::load(name)?;
+        let seq = mo.dense.cfg.ctx.min(64);
+        let wt = mo.store.split("wikitext2s")?;
+        let ptb = mo.store.split("ptbs")?;
+        println!("\n-- {} ({}) --", name, mo.dense.cfg.proxy_for);
+        header(&["sparsity", "method", "wt2s-ppl", "ptbs-ppl"]);
+        for &p in &sparsities {
+            for u in [Uniformity::Global, Uniformity::Layer,
+                      Uniformity::Projection] {
+                let m = if p == 0.0 {
+                    mo.dense.clone()
+                } else {
+                    // the paper's setup: SparseGPT pruner for all three
+                    // uniformity methods
+                    mo.prune(p, u, Category::Unstructured, samples)?.0
+                };
+                let a = perplexity_native(&m, &wt, seq, 16);
+                let c = perplexity_native(&m, &ptb, seq, 16);
+                println!(
+                    "{:>12.0}%{:>12}{:>12.2}{:>12.2}",
+                    p * 100.0, u.name(), a, c
+                );
+                b.row("series", rec(&[
+                    ("model", Json::str(name)),
+                    ("sparsity", Json::num(p)),
+                    ("method", Json::str(u.name())),
+                    ("wikitext2s_ppl", Json::num(a)),
+                    ("ptbs_ppl", Json::num(c)),
+                ]));
+                if p == 0.0 {
+                    break; // dense is method-independent
+                }
+            }
+        }
+    }
+    b.finish();
+    Ok(())
+}

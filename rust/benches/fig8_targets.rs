@@ -1,0 +1,49 @@
+//! Fig. 8: the pruning targets each method assigns across layers and
+//! projections of the LLaMa-3.1-8B proxy at p = 80 %.
+//! Paper shape: global is a flat line; layer varies per layer;
+//! projection varies per projection with the widest range.
+
+use mosaic::bench_support::{rec, Bench};
+use mosaic::coordinator::Mosaic;
+use mosaic::model::config::PROJS;
+use mosaic::prune::{plan, Uniformity};
+use mosaic::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new("fig8_targets",
+                           "per-layer/projection targets at p=0.8");
+    let mut mo = Mosaic::load("tl31")?;
+    let p = 0.8;
+    let samples = Bench::samples();
+    for u in [Uniformity::Global, Uniformity::Layer,
+              Uniformity::Projection] {
+        let rank = mo.global_rank(u, samples)?;
+        let pl = plan(&rank, p, u);
+        println!("\n-- {} --", u.name());
+        let flat: Vec<f64> =
+            pl.targets.iter().flatten().cloned().collect();
+        let lo = flat.iter().cloned().fold(1.0f64, f64::min);
+        let hi = flat.iter().cloned().fold(0.0f64, f64::max);
+        println!("range: {:.1}%..{:.1}%  mean {:.2}%",
+                 lo * 100.0, hi * 100.0, pl.mean_target() * 100.0);
+        for (l, row) in pl.targets.iter().enumerate() {
+            let cells: Vec<String> = row
+                .iter()
+                .zip(PROJS.iter())
+                .map(|(t, n)| format!("{n}:{:.0}%", t * 100.0))
+                .collect();
+            println!("  layer {l:2}: {}", cells.join(" "));
+            b.row(u.name(), rec(&[
+                ("layer", Json::num(l as f64)),
+                ("targets", Json::from_f64s(row)),
+            ]));
+        }
+        b.row("ranges", rec(&[
+            ("method", Json::str(u.name())),
+            ("lo", Json::num(lo)),
+            ("hi", Json::num(hi)),
+        ]));
+    }
+    b.finish();
+    Ok(())
+}

@@ -1,0 +1,110 @@
+//! Fig. 9: inference latency and GPU memory of the LLaMa-7B proxy on
+//! platforms P1–P5 for pruning targets 0–80 % and the three categories.
+//!
+//! Two anchors per configuration:
+//!   * *measured* — the native rust engine on this host (real wall time,
+//!     real byte counts);
+//!   * *simulated* — the platform roofline model fed paper-scale bytes
+//!     (the tiny model's structural fractions scaled to 6.74 B params).
+//!
+//! Paper shape: UP latency/memory flat; composite and SP shrink both;
+//! offload cliff on P3; P5 cannot run dense/UP at all.
+
+use mosaic::bench_support::{rec, Bench};
+use mosaic::coordinator::Mosaic;
+use mosaic::eval::measure_native;
+use mosaic::platform::{self, can_run, ModelProfile, Workload};
+use mosaic::prune::{Category, Uniformity};
+use mosaic::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new("fig9_platforms",
+                           "latency + memory across P1-P5");
+    let mut mo = Mosaic::load("tl1_7")?;
+    let samples = Bench::samples();
+    let dense_bytes = mo.dense.model_bytes() as f64;
+    let paper_params = 6.74e9;
+    let sparsities: &[f64] =
+        if Bench::fast() { &[0.8] } else { &[0.2, 0.4, 0.6, 0.8] };
+
+    // dense reference rows
+    let dense_prof = ModelProfile::paper_scale(paper_params, 32, 4096, 32);
+    for pf in platform::testbed() {
+        let w = if pf.name == "P5" { Workload::edge() }
+                else { Workload::mlperf() };
+        let runnable = can_run(&pf, &dense_prof, &w);
+        let sim = platform::simulate(&pf, &dense_prof, &w);
+        println!(
+            "{} dense: {}",
+            pf.name,
+            if runnable {
+                format!("sim {:.2}s / {} GB{}", sim.latency_s,
+                        sim.mem_bytes >> 30,
+                        if sim.offloading { " (offloading)" } else { "" })
+            } else {
+                "CANNOT RUN".to_string()
+            }
+        );
+        b.row("series", rec(&[
+            ("platform", Json::str(pf.name)),
+            ("category", Json::str("dense")),
+            ("sparsity", Json::num(0.0)),
+            ("runnable", Json::Bool(runnable)),
+            ("latency_s", Json::num(sim.latency_s)),
+            ("mem_mb", Json::num((sim.mem_bytes >> 20) as f64)),
+            ("offloading", Json::Bool(sim.offloading)),
+        ]));
+    }
+
+    for &p in sparsities {
+        for c in [Category::Unstructured, Category::Composite,
+                  Category::Structured] {
+            let (m, _) = mo.prune(p, Uniformity::Projection, c, samples)?;
+            let perf = measure_native(&m, 32, 8, 3);
+            // paper-scale profile: structural byte fraction carries over
+            let frac = m.model_bytes() as f64 / dense_bytes;
+            let live_frac = m.live_proj_params() as f64
+                / mo.dense.live_proj_params() as f64;
+            let kept_head_frac = m.layers[0].kept_heads.len() as f64
+                / m.cfg.n_heads as f64;
+            let mut prof = ModelProfile::paper_scale(
+                paper_params * frac, 32, (4096.0 * kept_head_frac) as usize,
+                (32.0 * kept_head_frac) as usize);
+            prof.live_params = (paper_params * live_frac) as u64;
+            println!("\np={:.0}% {}: host {:.4}s, {} KB", p * 100.0,
+                     c.name(), perf.latency_s, perf.model_bytes / 1024);
+            for pf in platform::testbed() {
+                let w = if pf.name == "P5" { Workload::edge() }
+                        else { Workload::mlperf() };
+                let runnable = can_run(&pf, &prof, &w);
+                let sim = platform::simulate(&pf, &prof, &w);
+                println!(
+                    "  {}: {}",
+                    pf.name,
+                    if runnable {
+                        format!("sim {:.2}s / {} GB{}", sim.latency_s,
+                                sim.mem_bytes >> 30,
+                                if sim.offloading { " (offloading)" }
+                                else { "" })
+                    } else {
+                        "CANNOT RUN".into()
+                    }
+                );
+                b.row("series", rec(&[
+                    ("platform", Json::str(pf.name)),
+                    ("category", Json::str(c.name())),
+                    ("sparsity", Json::num(p)),
+                    ("runnable", Json::Bool(runnable)),
+                    ("latency_s", Json::num(sim.latency_s)),
+                    ("mem_mb", Json::num((sim.mem_bytes >> 20) as f64)),
+                    ("offloading", Json::Bool(sim.offloading)),
+                    ("host_latency_s", Json::num(perf.latency_s)),
+                    ("host_model_bytes",
+                     Json::num(perf.model_bytes as f64)),
+                ]));
+            }
+        }
+    }
+    b.finish();
+    Ok(())
+}

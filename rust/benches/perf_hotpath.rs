@@ -1,0 +1,112 @@
+//! §Perf: L3 hot-path microbenchmarks — matmul/matvec bandwidth, decode
+//! throughput, and RC/PC stage timing. Used for the before/after log in
+//! EXPERIMENTS.md §Perf and as the roofline anchor for the platform
+//! simulator.
+
+use mosaic::bench_support::{rec, Bench};
+use mosaic::coordinator::Mosaic;
+use mosaic::eval::measure_native;
+use mosaic::model::{DecodeState, decode_step};
+use mosaic::tensor::{matmul, matvec, Tensor};
+use mosaic::util::json::Json;
+use mosaic::util::rng::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new("perf_hotpath", "L3 hot-path microbenches");
+    let mut rng = Pcg32::seeded(1);
+
+    // ---- matmul GFLOP/s across shapes
+    for &(m, k, n) in
+        &[(64usize, 64usize, 224usize), (256, 64, 224), (512, 512, 512)]
+    {
+        let x = Tensor::new((0..m * k).map(|_| rng.normal()).collect(),
+                            vec![m, k]);
+        let w = Tensor::new((0..k * n).map(|_| rng.normal()).collect(),
+                            vec![k, n]);
+        let reps = if m >= 512 { 20 } else { 200 };
+        let t0 = std::time::Instant::now();
+        let mut sink = 0f32;
+        for _ in 0..reps {
+            sink += matmul(&x, &w).data[0];
+        }
+        let s = t0.elapsed().as_secs_f64() / reps as f64;
+        let gflops = 2.0 * (m * k * n) as f64 / s / 1e9;
+        println!("matmul {m}x{k}x{n}: {gflops:.2} GFLOP/s (sink {sink:.1})");
+        b.row("matmul", rec(&[
+            ("shape", Json::str(&format!("{m}x{k}x{n}"))),
+            ("gflops", Json::num(gflops)),
+        ]));
+    }
+
+    // ---- matvec effective bandwidth (decode roofline)
+    let (k, n) = (172usize, 4096usize);
+    let w = Tensor::new((0..k * n).map(|_| rng.normal()).collect(),
+                        vec![k, n]);
+    let x: Vec<f32> = (0..k).map(|_| rng.normal()).collect();
+    let mut out = vec![0f32; n];
+    let reps = 2000;
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        matvec(&x, &w, &mut out);
+    }
+    let s = t0.elapsed().as_secs_f64() / reps as f64;
+    let gbs = (k * n * 4) as f64 / s / 1e9;
+    println!("matvec {k}x{n}: {gbs:.2} GB/s effective weight stream");
+    b.set("matvec_gbs", Json::num(gbs));
+
+    // ---- end-to-end decode throughput per model
+    for name in ["tl1_7", "tl31"] {
+        let mo = Mosaic::load(name)?;
+        let m = &mo.dense;
+        let mut st = DecodeState::new(m, 64);
+        // warm
+        for i in 0..8u16 {
+            decode_step(m, &mut st, 3 + i);
+        }
+        st.reset();
+        let t0 = std::time::Instant::now();
+        let n_tok = 48;
+        for i in 0..n_tok {
+            decode_step(m, &mut st, 3 + (i % 40) as u16);
+        }
+        let s = t0.elapsed().as_secs_f64();
+        let tps = n_tok as f64 / s;
+        let wbytes = m.model_bytes() as f64;
+        println!(
+            "{name}: decode {tps:.0} tok/s ({:.2} GB/s weight stream)",
+            tps * wbytes / 1e9
+        );
+        b.row("decode", rec(&[
+            ("model", Json::str(name)),
+            ("tok_per_s", Json::num(tps)),
+            ("weight_gbs", Json::num(tps * wbytes / 1e9)),
+        ]));
+        let perf = measure_native(m, 32, 16, 3);
+        b.row("generate", rec(&[
+            ("model", Json::str(name)),
+            ("latency_s", Json::num(perf.latency_s)),
+            ("prefill_s", Json::num(perf.prefill_s)),
+            ("decode_s", Json::num(perf.decode_s)),
+        ]));
+    }
+
+    // ---- RC/PC stage timing
+    let mut mo = Mosaic::load("tl1_7")?;
+    let t0 = std::time::Instant::now();
+    let _stats = mo.activation_stats(16)?;
+    let profile_s = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let _r = mo.global_rank(mosaic::prune::Uniformity::Projection, 16)?;
+    let rank_s = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let _ = mo.prune(0.6, mosaic::prune::Uniformity::Projection,
+                     mosaic::prune::Category::Composite, 16)?;
+    let prune_s = t0.elapsed().as_secs_f64();
+    println!("RC profile {profile_s:.2}s, rank {rank_s:.2}s, \
+              PC composite prune {prune_s:.2}s");
+    b.set("rc_profile_s", Json::num(profile_s));
+    b.set("rc_rank_s", Json::num(rank_s));
+    b.set("pc_prune_s", Json::num(prune_s));
+    b.finish();
+    Ok(())
+}

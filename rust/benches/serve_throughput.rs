@@ -1,0 +1,107 @@
+//! Serving-layer throughput/latency: dense vs composite-pruned SLMs
+//! under the same Poisson trace, plus batch-width scaling. This is the
+//! deployment-side measurement behind the paper's "up to 67 % faster
+//! inference" once the SLM is actually serving requests.
+
+use std::time::{Duration, Instant};
+
+use mosaic::bench_support::{header, rec, Bench};
+use mosaic::coordinator::Mosaic;
+use mosaic::data::trace::{generate, percentiles, Arrival, TraceConfig};
+use mosaic::prune::{Category, Uniformity};
+use mosaic::serve::{ServeConfig, Server};
+use mosaic::util::json::Json;
+
+fn drive(server: &Server, trace: &[mosaic::data::trace::TraceItem])
+         -> (f64, f64, f64) {
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for item in trace {
+        if let Some(sleep) =
+            Duration::from_secs_f64(item.at_s).checked_sub(t0.elapsed())
+        {
+            std::thread::sleep(sleep);
+        }
+        let sent = Instant::now();
+        if let Ok(rx) = server.submit(item.prompt.clone(), item.max_new) {
+            pending.push((sent, rx));
+        }
+    }
+    let mut lat = Vec::new();
+    let mut tokens = 0usize;
+    for (sent, rx) in pending {
+        if let Ok(r) = rx.recv_timeout(Duration::from_secs(60)) {
+            lat.push(sent.elapsed().as_secs_f64() * 1e3);
+            tokens += r.tokens.len();
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let (p50, p95, _) = percentiles(lat);
+    (tokens as f64 / wall, p50, p95)
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new("serve_throughput",
+                           "continuous-batching serving perf");
+    let mut mo = Mosaic::load("tl1_7")?;
+    let samples = Bench::samples();
+    let n_requests = if Bench::fast() { 16 } else { 48 };
+    // closed-loop saturation: all requests arrive at t=0 so tok/s
+    // reflects engine speed, not the arrival process
+    let trace = generate(&TraceConfig {
+        arrival: Arrival::Batch,
+        rate: 150.0,
+        n_requests,
+        prompt_len_mean: 12,
+        prompt_len_max: 24,
+        max_new: 16,
+        ..Default::default()
+    });
+
+    println!("{}", "— model variants (batch width 6) —");
+    header(&["variant", "tok/s", "p50-ms", "p95-ms"]);
+    let variants: Vec<(&str, mosaic::model::ModelWeights)> = vec![
+        ("dense", mo.dense.clone()),
+        ("composite60",
+         mo.prune(0.6, Uniformity::Projection, Category::Composite,
+                  samples)?.0),
+        ("structured60",
+         mo.prune(0.6, Uniformity::Projection, Category::Structured,
+                  samples)?.0),
+    ];
+    for (name, model) in variants {
+        let srv = Server::start(
+            model, ServeConfig { max_batch: 6, max_queue: 256, ..Default::default() }, 0)?;
+        let (tps, p50, p95) = drive(&srv, &trace);
+        println!("{name:>12}{tps:>12.0}{p50:>12.2}{p95:>12.2}");
+        b.row("variants", rec(&[
+            ("variant", Json::str(name)),
+            ("tok_per_s", Json::num(tps)),
+            ("p50_ms", Json::num(p50)),
+            ("p95_ms", Json::num(p95)),
+            ("occupancy", Json::num(srv.stats.mean_occupancy())),
+        ]));
+        srv.shutdown();
+    }
+
+    println!("\n— batch-width scaling (composite60) —");
+    header(&["width", "tok/s", "p95-ms"]);
+    let (pruned, _) = mo.prune(0.6, Uniformity::Projection,
+                               Category::Composite, samples)?;
+    let widths: &[usize] = if Bench::fast() { &[4] } else { &[1, 2, 4, 8] };
+    for &w in widths {
+        let srv = Server::start(
+            pruned.clone(),
+            ServeConfig { max_batch: w, max_queue: 256, ..Default::default() }, 0)?;
+        let (tps, _p50, p95) = drive(&srv, &trace);
+        println!("{w:>12}{tps:>12.0}{p95:>12.2}");
+        b.row("widths", rec(&[
+            ("width", Json::num(w as f64)),
+            ("tok_per_s", Json::num(tps)),
+            ("p95_ms", Json::num(p95)),
+        ]));
+        srv.shutdown();
+    }
+    b.finish();
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Table V: LLaMa-7B proxy perplexity for unstructured / composite /
+//! structured projection pruning at 0–80 %.
+//! Paper shape: UP degrades gently; composite sits between; structured
+//! collapses past 40 % (up to 36x worse than composite).
+
+use mosaic::bench_support::{header, rec, Bench};
+use mosaic::coordinator::Mosaic;
+use mosaic::eval::perplexity_native;
+use mosaic::prune::{Category, Uniformity};
+use mosaic::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new("tab5_composite_ppl",
+                           "UP vs composite vs SP perplexity");
+    let mut mo = Mosaic::load("tl1_7")?;
+    let seq = mo.dense.cfg.ctx.min(64);
+    let samples = Bench::samples();
+    let sparsities: &[f64] = if Bench::fast() {
+        &[0.4, 0.8]
+    } else {
+        &[0.2, 0.4, 0.6, 0.8]
+    };
+    for split in ["wikitext2s", "ptbs"] {
+        let stream = mo.store.split(split)?;
+        let dense = perplexity_native(&mo.dense, &stream, seq, 16);
+        println!("\n-- {split} (dense {dense:.2}) --");
+        header(&["sparsity", "unstruct", "composite", "structured"]);
+        for &p in sparsities {
+            let mut row = vec![p * 100.0];
+            for c in [Category::Unstructured, Category::Composite,
+                      Category::Structured] {
+                let m = mo.prune(p, Uniformity::Projection, c, samples)?.0;
+                let ppl = perplexity_native(&m, &stream, seq, 16);
+                row.push(ppl);
+                b.row("series", rec(&[
+                    ("split", Json::str(split)),
+                    ("sparsity", Json::num(p)),
+                    ("category", Json::str(c.name())),
+                    ("ppl", Json::num(ppl)),
+                ]));
+            }
+            mosaic::bench_support::rowf(&row);
+        }
+    }
+    b.finish();
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! Shared harness for the paper-reproduction benches (criterion is not
+//! available in this image, so each bench target is `harness = false`
+//! and drives this module directly).
+//!
+//! Every bench prints the paper artifact's rows/series and writes
+//! `bench_results/<id>.json` for EXPERIMENTS.md bookkeeping.
+
+use std::path::PathBuf;
+
+use crate::util::json::Json;
+
+pub struct Bench {
+    pub id: String,
+    pub title: String,
+    result: Json,
+    t0: std::time::Instant,
+}
+
+impl Bench {
+    pub fn new(id: &str, title: &str) -> Self {
+        println!("\n=== {id}: {title} ===");
+        let mut result = Json::obj();
+        result.set("id", Json::str(id));
+        result.set("title", Json::str(title));
+        Bench {
+            id: id.to_string(),
+            title: title.to_string(),
+            result,
+            t0: std::time::Instant::now(),
+        }
+    }
+
+    /// Fast mode trims sweeps for CI (`MOSAIC_BENCH_FAST=1`).
+    pub fn fast() -> bool {
+        std::env::var("MOSAIC_BENCH_FAST").as_deref() == Ok("1")
+    }
+
+    /// Calibration samples to use in benches.
+    pub fn samples() -> usize {
+        if Self::fast() { 8 } else { 32 }
+    }
+
+    pub fn set(&mut self, key: &str, v: Json) {
+        self.result.set(key, v);
+    }
+
+    pub fn row(&mut self, series: &str, v: Json) {
+        // append v to an array under `series`
+        let arr = match self.result.get(series) {
+            Some(Json::Arr(a)) => {
+                let mut a = a.clone();
+                a.push(v);
+                a
+            }
+            _ => vec![v],
+        };
+        self.result.set(series, Json::Arr(arr));
+    }
+
+    pub fn finish(mut self) {
+        let secs = self.t0.elapsed().as_secs_f64();
+        self.result.set("bench_wall_s", Json::num(secs));
+        let dir = PathBuf::from("bench_results");
+        std::fs::create_dir_all(&dir).ok();
+        let path = dir.join(format!("{}.json", self.id));
+        std::fs::write(&path, self.result.to_string()).ok();
+        println!("[{} done in {secs:.1}s -> {}]", self.id, path.display());
+    }
+}
+
+/// Fixed-width table printing.
+pub fn header(cols: &[&str]) {
+    for c in cols {
+        print!("{c:>12}");
+    }
+    println!();
+    println!("{}", "-".repeat(12 * cols.len()));
+}
+
+pub fn cell(s: &str) {
+    print!("{s:>12}");
+}
+
+pub fn rowf(vals: &[f64]) {
+    for v in vals {
+        if v.abs() >= 1000.0 {
+            print!("{v:>12.0}");
+        } else {
+            print!("{v:>12.2}");
+        }
+    }
+    println!();
+}
+
+/// Make a JSON record from (key, value) pairs.
+pub fn rec(pairs: &[(&str, Json)]) -> Json {
+    let mut o = Json::obj();
+    for (k, v) in pairs {
+        o.set(k, v.clone());
+    }
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_rows_accumulate() {
+        let mut b = Bench::new("test_bench", "unit");
+        b.row("series", Json::num(1.0));
+        b.row("series", Json::num(2.0));
+        let arr = b.result.get("series").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+    }
+}

@@ -1,0 +1,79 @@
+//! Lightweight metrics registry for pipeline timing/accounting —
+//! the numbers behind Fig. 11 (end-to-end overheads) and the CLI's
+//! `--metrics` output.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    values: BTreeMap<String, Vec<f64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn record(&mut self, name: &str, value: f64) {
+        self.values.entry(name.to_string()).or_default().push(value);
+    }
+
+    pub fn last(&self, name: &str) -> Option<f64> {
+        self.values.get(name).and_then(|v| v.last().copied())
+    }
+
+    pub fn sum(&self, name: &str) -> f64 {
+        self.values
+            .get(name)
+            .map(|v| v.iter().sum())
+            .unwrap_or(0.0)
+    }
+
+    pub fn total_matching(&self, prefix: &str) -> f64 {
+        self.values
+            .iter()
+            .filter(|(k, _)| k.starts_with(prefix))
+            .flat_map(|(_, v)| v.iter())
+            .sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        for (k, v) in &self.values {
+            o.set(k, Json::from_f64s(v));
+        }
+        o
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for (k, v) in &self.values {
+            let (mean, std) = crate::util::mean_std(v);
+            s.push_str(&format!(
+                "{k}: n={} mean={mean:.4} std={std:.4}\n",
+                v.len()
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_query() {
+        let mut m = Metrics::new();
+        m.record("a_s", 1.0);
+        m.record("a_s", 3.0);
+        m.record("b_s", 2.0);
+        assert_eq!(m.last("a_s"), Some(3.0));
+        assert_eq!(m.sum("a_s"), 4.0);
+        assert_eq!(m.total_matching("a"), 4.0);
+        assert!(m.report().contains("a_s"));
+        assert!(m.to_json().get("b_s").is_some());
+    }
+}

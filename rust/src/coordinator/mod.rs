@@ -1,0 +1,276 @@
+//! Coordinator — wires RC → PC → deployment into the Mosaic pipeline
+//! (the paper's Figure 5 + Figure 6 run back-to-back) and exposes the
+//! pieces the CLI, examples and benches drive.
+
+pub mod metrics;
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::data::{calibration_samples, DataStore};
+use crate::model::capture::{capture_hessians, HessianStats};
+use crate::model::ModelWeights;
+use crate::prune::{
+    self, plan, Category, CompositeOpts, Metric, PruningPlan, Uniformity,
+};
+use crate::rank::{
+    compute_global_rank, lod::compute_lod_rank, profile_activations,
+    ActivationStats, GlobalRank,
+};
+use crate::runtime::ModelRuntime;
+use crate::Artifacts;
+
+pub use metrics::Metrics;
+
+/// Default calibration set size (paper: 128 samples from C4).
+pub const DEFAULT_CALIB_SAMPLES: usize = 64;
+
+/// One loaded model + data + runtime: everything the pipeline needs.
+pub struct Mosaic {
+    pub artifacts: Artifacts,
+    pub name: String,
+    pub dense: ModelWeights,
+    pub store: DataStore,
+    pub runtime: Option<ModelRuntime>,
+    pub metrics: Metrics,
+    stats_cache: Option<(usize, ActivationStats)>,
+    hessian_cache: Option<(usize, HessianStats)>,
+}
+
+impl Mosaic {
+    pub fn load(name: &str) -> Result<Self> {
+        let artifacts = Artifacts::discover()?;
+        let model_dir = artifacts.model_dir(name);
+        anyhow::ensure!(
+            model_dir.join("manifest.json").exists(),
+            "model '{name}' not in artifacts (have: {:?})",
+            artifacts.model_names().unwrap_or_default()
+        );
+        let dense = ModelWeights::load(&model_dir)?;
+        let store = DataStore::load(&artifacts.data_dir())?;
+        Ok(Mosaic {
+            artifacts,
+            name: name.to_string(),
+            dense,
+            store,
+            runtime: None,
+            metrics: Metrics::new(),
+            stats_cache: None,
+            hessian_cache: None,
+        })
+    }
+
+    pub fn model_dir(&self) -> PathBuf {
+        self.artifacts.model_dir(&self.name)
+    }
+
+    /// Lazy PJRT runtime (compiling the HLO graphs takes a moment).
+    pub fn runtime(&mut self) -> Result<&mut ModelRuntime> {
+        if self.runtime.is_none() {
+            let t = Instant::now();
+            self.runtime = Some(ModelRuntime::load(&self.model_dir())?);
+            self.metrics
+                .record("runtime_compile_s", t.elapsed().as_secs_f64());
+        }
+        Ok(self.runtime.as_mut().unwrap())
+    }
+
+    /// RC components 1–3: calibration samples → activation statistics.
+    pub fn activation_stats(
+        &mut self,
+        n_samples: usize,
+    ) -> Result<ActivationStats> {
+        if let Some((n, s)) = &self.stats_cache {
+            if *n == n_samples {
+                return Ok(s.clone());
+            }
+        }
+        let c4 = self.store.split("c4s")?;
+        let seq = {
+            let rt = self.runtime()?;
+            rt.profile_tokens_shape.1
+        };
+        let samples = calibration_samples(&c4, seq, n_samples, 0xCA11B);
+        let t = Instant::now();
+        let stats = profile_activations(self.runtime()?, &samples)?;
+        self.metrics.record("profile_s", t.elapsed().as_secs_f64());
+        self.stats_cache = Some((n_samples, stats.clone()));
+        Ok(stats)
+    }
+
+    /// Calibration Gram matrices for the SparseGPT weight update.
+    pub fn hessians(&mut self, n_samples: usize) -> Result<&HessianStats> {
+        let need = match &self.hessian_cache {
+            Some((n, _)) => *n != n_samples,
+            None => true,
+        };
+        if need {
+            let c4 = self.store.split("c4s")?;
+            let seq = self.dense.cfg.ctx.min(64);
+            let samples =
+                calibration_samples(&c4, seq, n_samples, 0xCA11B);
+            let t = Instant::now();
+            let h = capture_hessians(&self.dense, &samples);
+            self.metrics.record("hessian_s", t.elapsed().as_secs_f64());
+            self.hessian_cache = Some((n_samples, h));
+        }
+        Ok(&self.hessian_cache.as_ref().unwrap().1)
+    }
+
+    /// RC end-to-end: global rank for the requested uniformity method.
+    /// POD runs through the AOT Pallas weight-metric kernel.
+    pub fn global_rank(
+        &mut self,
+        uniformity: Uniformity,
+        n_samples: usize,
+    ) -> Result<GlobalRank> {
+        let stats = self.activation_stats(n_samples)?;
+        let alpha = 5.0;
+        let t = Instant::now();
+        let rank = match uniformity {
+            Uniformity::Global => GlobalRank {
+                rank: vec![vec![1.0; 7]; self.dense.cfg.n_layers],
+                alpha,
+            },
+            Uniformity::Layer => {
+                compute_lod_rank(&self.dense, &stats, alpha)
+            }
+            Uniformity::Projection => {
+                let dense = self.dense.clone();
+                compute_global_rank(
+                    &dense,
+                    &stats,
+                    alpha,
+                    Some(self.runtime()?),
+                )?
+            }
+        };
+        self.metrics.record(
+            &format!("rank_{}_s", uniformity.name()),
+            t.elapsed().as_secs_f64(),
+        );
+        Ok(rank)
+    }
+
+    /// PC: plan + prune a fresh copy of the dense model.
+    pub fn prune(
+        &mut self,
+        p: f64,
+        uniformity: Uniformity,
+        category: Category,
+        n_samples: usize,
+    ) -> Result<(ModelWeights, PruningPlan)> {
+        let rank = self.global_rank(uniformity, n_samples)?;
+        let pl = plan(&rank, p, uniformity);
+        let stats = self.activation_stats(n_samples)?;
+        let mut m = self.dense.clone();
+        let t = Instant::now();
+        match category {
+            Category::Unstructured => {
+                // SparseGPT metric+update (the paper's §V-A3 default)
+                let hess = self.hessians(n_samples)?;
+                prune::sparsegpt::prune_sparsegpt(&mut m, &pl, hess);
+            }
+            Category::Structured => {
+                prune::prune_structured(&mut m, &pl);
+            }
+            Category::Composite => {
+                let hess = self.hessians(n_samples)?.clone_shallow();
+                prune::prune_composite(
+                    &mut m,
+                    &pl,
+                    Some(&stats),
+                    Some(&hess),
+                    CompositeOpts { use_obs: true, ..Default::default() },
+                );
+            }
+        }
+        self.metrics.record(
+            &format!("prune_{}_{}_s", uniformity.name(), category.name()),
+            t.elapsed().as_secs_f64(),
+        );
+        Ok((m, pl))
+    }
+
+    /// Fine-tuning corpus: instruction rows mixed 1:1 with LM windows
+    /// from the training distribution (the Alpaca substitute is a pure
+    /// token-mapping grammar; without LM rows LoRA drifts the model off
+    /// the language — real Alpaca is natural language so carries both
+    /// signals). Rows are shuffled; the holdout tail stays mixed.
+    pub fn finetune_rows(&self) -> Result<(Vec<u16>, usize, usize)> {
+        let (inst, n_inst, seq) = self.store.instruction_rows()?;
+        let trains = self.store.split("trains")?;
+        let mut rows: Vec<Vec<u16>> = inst
+            .chunks(seq)
+            .take(n_inst)
+            .map(|c| c.to_vec())
+            .collect();
+        let mut rng = crate::util::rng::Pcg32::seeded(0xF7);
+        let hi = trains.len() - seq - 1;
+        for _ in 0..2 * n_inst {
+            let s = rng.below(hi);
+            rows.push(trains[s..s + seq].to_vec());
+        }
+        rng.shuffle(&mut rows);
+        let n_rows = rows.len();
+        Ok((rows.concat(), n_rows, seq))
+    }
+
+    /// Fast Wanda-only unstructured prune (no Hessian) — used by sweeps.
+    pub fn prune_wanda(
+        &mut self,
+        p: f64,
+        uniformity: Uniformity,
+        n_samples: usize,
+    ) -> Result<ModelWeights> {
+        let rank = self.global_rank(uniformity, n_samples)?;
+        let pl = plan(&rank, p, uniformity);
+        let stats = self.activation_stats(n_samples)?;
+        let mut m = self.dense.clone();
+        prune::prune_unstructured(&mut m, &pl, Some(&stats), Metric::Wanda);
+        Ok(m)
+    }
+}
+
+impl HessianStats {
+    /// Cheap clone used when both &mut self and &HessianStats are needed.
+    pub fn clone_shallow(&self) -> HessianStats {
+        HessianStats {
+            gram: self.gram.clone(),
+            rows: self.rows,
+        }
+    }
+}
+
+/// Deployment decision (PC component 9: pruning category per platform —
+/// paper §IV: UP for cloud, SP for GPU-less edge, composite in between).
+pub fn choose_category(pf: &crate::platform::Platform) -> Category {
+    const GB: u64 = 1 << 30;
+    if !pf.has_gpu {
+        Category::Structured
+    } else if pf.mem_bytes >= 40 * GB && pf.bw >= 1.0e12 {
+        // cloud-tier: plenty of memory + bandwidth -> quality-first
+        Category::Unstructured
+    } else {
+        // consumer / mobile / older GPUs (P3, P4)
+        Category::Composite
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::testbed;
+
+    #[test]
+    fn category_selection_follows_paper() {
+        let tb = testbed();
+        assert_eq!(choose_category(&tb[0]), Category::Unstructured); // P1
+        assert_eq!(choose_category(&tb[1]), Category::Unstructured); // P2
+        assert_eq!(choose_category(&tb[2]), Category::Composite); // P3
+        assert_eq!(choose_category(&tb[3]), Category::Composite); // P4
+        assert_eq!(choose_category(&tb[4]), Category::Structured); // P5
+    }
+}

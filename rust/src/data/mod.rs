@@ -1,0 +1,184 @@
+//! Dataset loading — synthlang splits + multiple-choice tasks from
+//! artifacts/data/ (generated once by python/compile/synthlang.py) —
+//! plus serving workload traces ([`trace`]).
+
+pub mod trace;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+pub const PAD: u16 = 0;
+
+#[derive(Debug, Clone)]
+pub struct TaskItem {
+    pub context: Vec<u16>,
+    pub choices: Vec<Vec<u16>>,
+    pub label: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub name: String,
+    pub items: Vec<TaskItem>,
+    pub n_choices: usize,
+    pub chance: f64,
+}
+
+pub struct DataStore {
+    pub dir: PathBuf,
+    pub manifest: Json,
+}
+
+impl DataStore {
+    pub fn load(data_dir: &Path) -> Result<Self> {
+        let manifest = Json::parse(&crate::util::read_to_string(
+            &data_dir.join("data_manifest.json"),
+        )?)
+        .map_err(|e| anyhow::anyhow!("data manifest: {e}"))?;
+        Ok(DataStore { dir: data_dir.to_path_buf(), manifest })
+    }
+
+    /// Token stream of a split (wikitext2s / ptbs / c4s / trains).
+    pub fn split(&self, name: &str) -> Result<Vec<u16>> {
+        let file = self
+            .manifest
+            .get("splits")
+            .and_then(|s| s.get(name))
+            .and_then(|s| s.get("file"))
+            .and_then(|s| s.as_str())
+            .with_context(|| format!("split {name}"))?;
+        crate::util::read_u16_file(&self.dir.join(file))
+    }
+
+    /// Instruction rows (alpacas): (rows, seq_len) fixed-width.
+    pub fn instruction_rows(&self) -> Result<(Vec<u16>, usize, usize)> {
+        let meta = self
+            .manifest
+            .get("splits")
+            .and_then(|s| s.get("alpacas"))
+            .context("alpacas split")?;
+        let rows = meta.get("rows").and_then(|v| v.as_usize()).unwrap();
+        let seq = meta.get("seq_len").and_then(|v| v.as_usize()).unwrap();
+        let data = crate::util::read_u16_file(&self.dir.join("alpacas.bin"))?;
+        anyhow::ensure!(data.len() == rows * seq, "alpacas size");
+        Ok((data, rows, seq))
+    }
+
+    pub fn task_names(&self) -> Vec<String> {
+        self.manifest
+            .get("tasks")
+            .and_then(|t| t.as_obj())
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    pub fn task(&self, name: &str) -> Result<Task> {
+        let meta = self
+            .manifest
+            .get("tasks")
+            .and_then(|t| t.get(name))
+            .with_context(|| format!("task {name}"))?;
+        let file = meta.get("file").and_then(|v| v.as_str()).unwrap();
+        let n_choices =
+            meta.get("n_choices").and_then(|v| v.as_usize()).unwrap();
+        let chance = meta
+            .get("chance")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(1.0 / n_choices as f64);
+        let raw = Json::parse(&crate::util::read_to_string(
+            &self.dir.join(file),
+        )?)
+        .map_err(|e| anyhow::anyhow!("task {name}: {e}"))?;
+        let items = raw
+            .as_arr()
+            .context("task items")?
+            .iter()
+            .map(|it| {
+                let toks = |k: &str| -> Vec<u16> {
+                    it.get(k)
+                        .and_then(|v| v.as_arr())
+                        .unwrap()
+                        .iter()
+                        .map(|x| x.as_usize().unwrap() as u16)
+                        .collect()
+                };
+                TaskItem {
+                    context: toks("context"),
+                    choices: it
+                        .get("choices")
+                        .and_then(|v| v.as_arr())
+                        .unwrap()
+                        .iter()
+                        .map(|c| {
+                            c.as_arr()
+                                .unwrap()
+                                .iter()
+                                .map(|x| x.as_usize().unwrap() as u16)
+                                .collect()
+                        })
+                        .collect(),
+                    label: it.get("label").and_then(|v| v.as_usize()).unwrap(),
+                }
+            })
+            .collect();
+        Ok(Task { name: name.to_string(), items, n_choices, chance })
+    }
+}
+
+/// Fixed-stride evaluation windows from a token stream (PPL batches).
+pub fn eval_windows(stream: &[u16], seq: usize, max_windows: usize) -> Vec<Vec<u16>> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + seq + 1 <= stream.len() && out.len() < max_windows {
+        out.push(stream[i..i + seq].to_vec());
+        i += seq;
+    }
+    out
+}
+
+/// Random calibration samples of length `seq` (the RC Sample Loader:
+/// "moves a small calibration set of tokens into memory").
+pub fn calibration_samples(
+    stream: &[u16],
+    seq: usize,
+    n: usize,
+    seed: u64,
+) -> Vec<Vec<u16>> {
+    let mut rng = Pcg32::seeded(seed);
+    let hi = stream.len().saturating_sub(seq + 1).max(1);
+    (0..n)
+        .map(|_| {
+            let s = rng.below(hi);
+            stream[s..s + seq].to_vec()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn windows_cover_stream() {
+        let stream: Vec<u16> = (0..100).map(|x| x as u16).collect();
+        let w = eval_windows(&stream, 16, 100);
+        assert_eq!(w.len(), 6); // starts 0..80; i=80 needs 97 <= 100
+        assert_eq!(w[0][0], 0);
+        assert_eq!(w[1][0], 16);
+        assert_eq!(w[5][0], 80);
+        assert!(w.iter().all(|x| x.len() == 16));
+    }
+
+    #[test]
+    fn calibration_deterministic() {
+        let stream: Vec<u16> = (0..1000).map(|x| (x % 512) as u16).collect();
+        let a = calibration_samples(&stream, 32, 8, 7);
+        let b = calibration_samples(&stream, 32, 8, 7);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 8);
+    }
+}

@@ -1,0 +1,161 @@
+//! Workload trace generation for the serving benchmarks: seeded arrival
+//! processes (Poisson / bursty) with prompt-length and output-length
+//! distributions — the paper's MLPerf-style workload shaped into a
+//! request stream (a substitute for production traces we do not have).
+
+use crate::util::rng::Pcg32;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arrival {
+    /// exponential inter-arrival times (open-loop Poisson)
+    Poisson,
+    /// alternating hot/cold phases (5x rate bursts)
+    Bursty,
+    /// all requests at t=0 (closed-loop saturation)
+    Batch,
+}
+
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub arrival: Arrival,
+    /// mean requests/second (Poisson/Bursty)
+    pub rate: f64,
+    pub n_requests: usize,
+    pub prompt_len_mean: usize,
+    pub prompt_len_max: usize,
+    pub max_new: usize,
+    pub vocab: usize,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            arrival: Arrival::Poisson,
+            rate: 50.0,
+            n_requests: 64,
+            prompt_len_mean: 16,
+            prompt_len_max: 48,
+            max_new: 8,
+            vocab: 512,
+            seed: 42,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TraceItem {
+    /// seconds after trace start
+    pub at_s: f64,
+    pub prompt: Vec<u16>,
+    pub max_new: usize,
+}
+
+/// Generate a deterministic request trace.
+pub fn generate(cfg: &TraceConfig) -> Vec<TraceItem> {
+    let mut rng = Pcg32::seeded(cfg.seed);
+    let mut t = 0f64;
+    let mut out = Vec::with_capacity(cfg.n_requests);
+    for i in 0..cfg.n_requests {
+        let gap = match cfg.arrival {
+            Arrival::Batch => 0.0,
+            Arrival::Poisson => {
+                -(1.0 - rng.f64()).ln() / cfg.rate.max(1e-9)
+            }
+            Arrival::Bursty => {
+                let hot = (i / 16) % 2 == 0;
+                let r = if hot { cfg.rate * 5.0 } else { cfg.rate / 5.0 };
+                -(1.0 - rng.f64()).ln() / r.max(1e-9)
+            }
+        };
+        t += gap;
+        // geometric-ish prompt length around the mean, clamped
+        let mut len = 1 + rng.below(2 * cfg.prompt_len_mean);
+        len = len.min(cfg.prompt_len_max).max(1);
+        let prompt: Vec<u16> = (0..len)
+            .map(|_| (3 + rng.below(cfg.vocab - 3)) as u16)
+            .collect();
+        out.push(TraceItem { at_s: t, prompt, max_new: cfg.max_new });
+    }
+    out
+}
+
+/// p50/p95/p99 percentiles of a latency sample (ms).
+pub fn percentiles(mut xs: Vec<f64>) -> (f64, f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0, 0.0);
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pick = |q: f64| {
+        let i = ((xs.len() as f64 - 1.0) * q).floor() as usize;
+        xs[i]
+    };
+    (pick(0.50), pick(0.95), pick(0.99))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_sized() {
+        let cfg = TraceConfig::default();
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.len(), cfg.n_requests);
+        assert_eq!(a[5].prompt, b[5].prompt);
+        assert!((a[5].at_s - b[5].at_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn poisson_rate_approximate() {
+        let cfg = TraceConfig {
+            rate: 100.0,
+            n_requests: 2000,
+            ..Default::default()
+        };
+        let tr = generate(&cfg);
+        let span = tr.last().unwrap().at_s;
+        let rate = cfg.n_requests as f64 / span;
+        assert!(
+            (rate - 100.0).abs() < 15.0,
+            "empirical rate {rate}"
+        );
+    }
+
+    #[test]
+    fn arrivals_monotone() {
+        for a in [Arrival::Poisson, Arrival::Bursty, Arrival::Batch] {
+            let tr = generate(&TraceConfig {
+                arrival: a,
+                n_requests: 100,
+                ..Default::default()
+            });
+            for w in tr.windows(2) {
+                assert!(w[1].at_s >= w[0].at_s);
+            }
+        }
+    }
+
+    #[test]
+    fn prompt_bounds_respected() {
+        let cfg = TraceConfig {
+            prompt_len_max: 10,
+            n_requests: 300,
+            ..Default::default()
+        };
+        for it in generate(&cfg) {
+            assert!(!it.prompt.is_empty() && it.prompt.len() <= 10);
+            assert!(it.prompt.iter().all(|&t| (t as usize) < cfg.vocab));
+        }
+    }
+
+    #[test]
+    fn percentile_math() {
+        let (p50, p95, p99) =
+            percentiles((1..=100).map(|x| x as f64).collect());
+        assert_eq!(p50, 50.0);
+        assert_eq!(p95, 95.0);
+        assert_eq!(p99, 99.0);
+    }
+}

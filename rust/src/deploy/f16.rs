@@ -1,0 +1,125 @@
+//! IEEE 754 binary16 conversion (no `half` crate in this image).
+//! Round-to-nearest-even on encode; subnormals handled both ways.
+
+/// f32 -> f16 bits (round to nearest even).
+pub fn to_bits(v: f32) -> u16 {
+    let x = v.to_bits();
+    let sign = ((x >> 16) & 0x8000) as u16;
+    let exp = ((x >> 23) & 0xff) as i32;
+    let mant = x & 0x007f_ffff;
+    if exp == 0xff {
+        // inf / nan
+        return sign
+            | 0x7c00
+            | if mant != 0 { 0x0200 } else { 0 };
+    }
+    // unbiased exponent
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if e <= 0 {
+        // subnormal or zero
+        if e < -10 {
+            return sign;
+        }
+        let m = mant | 0x0080_0000; // implicit 1
+        let shift = (14 - e) as u32;
+        // round-to-nearest-even
+        let mut r = m >> shift;
+        let half_ulp = 1u32 << (shift - 1);
+        let rem = m & ((1 << shift) - 1);
+        if rem > half_ulp || (rem == half_ulp && (r & 1) == 1) {
+            r += 1;
+        }
+        return sign | (r as u16);
+    }
+    // normal: round mantissa from 23 to 10 bits
+    let mut m = (mant >> 13) as u16;
+    let rem = mant & 0x1fff;
+    if rem > 0x1000 || (rem == 0x1000 && (m & 1) == 1) {
+        m += 1;
+        if m == 0x400 {
+            // mantissa overflow -> bump exponent
+            return sign | (((e + 1) as u16) << 10);
+        }
+    }
+    sign | ((e as u16) << 10) | m
+}
+
+/// f16 bits -> f32.
+pub fn from_bits(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // subnormal: value = mant · 2⁻²⁴; normalize to f32
+            let mut h = 0u32; // floor(log2(mant))
+            while mant >> (h + 1) != 0 {
+                h += 1;
+            }
+            sign | ((h + 103) << 23) | ((mant << (23 - h)) & 0x007f_ffff)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_integers() {
+        for v in [0.0f32, 1.0, -1.0, 2.0, 0.5, -0.25, 1024.0] {
+            assert_eq!(from_bits(to_bits(v)), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        let mut r = crate::util::rng::Pcg32::seeded(5);
+        for _ in 0..10_000 {
+            let v = r.normal() * 10.0;
+            let q = from_bits(to_bits(v));
+            assert!(
+                (v - q).abs() <= 1e-3 * (1.0 + v.abs()),
+                "{v} -> {q}"
+            );
+        }
+    }
+
+    #[test]
+    fn specials() {
+        assert_eq!(to_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(to_bits(f32::NEG_INFINITY), 0xfc00);
+        assert!(from_bits(to_bits(f32::NAN)).is_nan());
+        assert_eq!(to_bits(1e9), 0x7c00, "overflow -> inf");
+        assert_eq!(from_bits(0x7c00), f32::INFINITY);
+    }
+
+    #[test]
+    fn subnormal_roundtrip() {
+        let tiny = from_bits(0x0001); // smallest positive subnormal
+        assert!(tiny > 0.0 && tiny < 1e-7);
+        assert_eq!(to_bits(tiny), 0x0001);
+        let sub = from_bits(0x03ff); // largest subnormal
+        assert_eq!(to_bits(sub), 0x03ff);
+    }
+
+    #[test]
+    fn monotone_on_positives() {
+        let mut prev = 0.0f32;
+        for bits in 1..0x7c00u16 {
+            let v = from_bits(bits);
+            assert!(v > prev, "bits {bits:#x}");
+            prev = v;
+        }
+    }
+}

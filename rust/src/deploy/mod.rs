@@ -1,0 +1,325 @@
+//! Post-Pruning Optimizer deployment formats (PC component 10: "convert
+//! the model weights into different inference formats") — the on-disk
+//! side of the paper's size story:
+//!
+//!   * DenseF32 — the working format (what the engine mmaps today);
+//!   * DenseF16 — half-precision storage (Table II measures fp16 sizes);
+//!   * SparseCsr — compressed rows for unstructured-pruned projections:
+//!     a masked model whose *resident* bytes don't shrink still ships a
+//!     smaller file (and is what a DeepSparse/CUTLASS-style backend
+//!     would ingest).
+//!
+//! `choose_encoding` picks per projection: CSR when the zero fraction
+//! pays for the index overhead, else dense f16.
+
+pub mod f16;
+
+use anyhow::Result;
+
+use crate::model::config::Proj;
+use crate::model::ModelWeights;
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Encoding {
+    DenseF32,
+    DenseF16,
+    SparseCsr,
+}
+
+/// Serialized size (bytes) of one tensor under an encoding.
+pub fn encoded_bytes(t: &Tensor, e: Encoding) -> usize {
+    match e {
+        Encoding::DenseF32 => 4 * t.numel(),
+        Encoding::DenseF16 => 2 * t.numel(),
+        Encoding::SparseCsr => {
+            let nnz = t.numel() - t.zero_count();
+            // row pointers (u32) + column indices (u16) + f16 values
+            4 * (t.rows() + 1) + 2 * nnz + 2 * nnz
+        }
+    }
+}
+
+/// Pick the cheapest encoding for a tensor.
+pub fn choose_encoding(t: &Tensor) -> Encoding {
+    if encoded_bytes(t, Encoding::SparseCsr)
+        < encoded_bytes(t, Encoding::DenseF16)
+    {
+        Encoding::SparseCsr
+    } else {
+        Encoding::DenseF16
+    }
+}
+
+/// Encode a tensor; `decode` inverts (f16 rounding is lossy by design).
+pub fn encode(t: &Tensor, e: Encoding) -> Vec<u8> {
+    let mut out = Vec::with_capacity(encoded_bytes(t, e) + 16);
+    match e {
+        Encoding::DenseF32 => {
+            for &v in &t.data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Encoding::DenseF16 => {
+            for &v in &t.data {
+                out.extend_from_slice(&f16::to_bits(v).to_le_bytes());
+            }
+        }
+        Encoding::SparseCsr => {
+            let (r, c) = (t.rows(), t.cols());
+            let mut rowptr = Vec::with_capacity(r + 1);
+            let mut cols: Vec<u16> = Vec::new();
+            let mut vals: Vec<u16> = Vec::new();
+            rowptr.push(0u32);
+            for i in 0..r {
+                for j in 0..c {
+                    let v = t.data[i * c + j];
+                    if v != 0.0 {
+                        cols.push(j as u16);
+                        vals.push(f16::to_bits(v));
+                    }
+                }
+                rowptr.push(cols.len() as u32);
+            }
+            for p in rowptr {
+                out.extend_from_slice(&p.to_le_bytes());
+            }
+            for cj in cols {
+                out.extend_from_slice(&cj.to_le_bytes());
+            }
+            for v in vals {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+    out
+}
+
+pub fn decode(
+    bytes: &[u8],
+    shape: &[usize],
+    e: Encoding,
+) -> Result<Tensor> {
+    let numel: usize = shape.iter().product();
+    let mut t = Tensor::zeros(shape);
+    match e {
+        Encoding::DenseF32 => {
+            anyhow::ensure!(bytes.len() == 4 * numel, "f32 size");
+            for (i, ch) in bytes.chunks_exact(4).enumerate() {
+                t.data[i] =
+                    f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+            }
+        }
+        Encoding::DenseF16 => {
+            anyhow::ensure!(bytes.len() == 2 * numel, "f16 size");
+            for (i, ch) in bytes.chunks_exact(2).enumerate() {
+                t.data[i] =
+                    f16::from_bits(u16::from_le_bytes([ch[0], ch[1]]));
+            }
+        }
+        Encoding::SparseCsr => {
+            let (r, c) = (shape[0], shape[1]);
+            let ptr_bytes = 4 * (r + 1);
+            anyhow::ensure!(bytes.len() >= ptr_bytes, "csr header");
+            let mut rowptr = Vec::with_capacity(r + 1);
+            for ch in bytes[..ptr_bytes].chunks_exact(4) {
+                rowptr.push(u32::from_le_bytes([
+                    ch[0], ch[1], ch[2], ch[3],
+                ]) as usize);
+            }
+            let nnz = *rowptr.last().unwrap();
+            let cols_off = ptr_bytes;
+            let vals_off = cols_off + 2 * nnz;
+            anyhow::ensure!(
+                bytes.len() == vals_off + 2 * nnz,
+                "csr payload size"
+            );
+            for i in 0..r {
+                for k in rowptr[i]..rowptr[i + 1] {
+                    let cb = &bytes[cols_off + 2 * k..cols_off + 2 * k + 2];
+                    let vb = &bytes[vals_off + 2 * k..vals_off + 2 * k + 2];
+                    let j = u16::from_le_bytes([cb[0], cb[1]]) as usize;
+                    anyhow::ensure!(j < c, "csr col oob");
+                    t.data[i * c + j] = f16::from_bits(
+                        u16::from_le_bytes([vb[0], vb[1]]),
+                    );
+                }
+            }
+        }
+    }
+    Ok(t)
+}
+
+/// Total shipped size of a model under per-projection `choose_encoding`
+/// (embeddings/norms/head stay dense f16).
+pub fn shipped_bytes(m: &ModelWeights) -> usize {
+    let mut total = 2
+        * (m.embed.numel()
+            + m.lm_head.numel()
+            + m.final_norm.len());
+    for l in &m.layers {
+        total += 2 * (l.attn_norm.len() + l.ffn_norm.len());
+        for &p in Proj::all().iter() {
+            let t = l.proj(p);
+            total += encoded_bytes(t, choose_encoding(t));
+        }
+    }
+    total
+}
+
+/// Write the whole model in deployment format (header JSON + blobs).
+pub fn export_model(m: &ModelWeights, path: &std::path::Path) -> Result<usize> {
+    use crate::util::json::Json;
+    let mut blobs: Vec<u8> = Vec::new();
+    let mut entries = Vec::new();
+    let mut push = |name: String, t: &Tensor, blobs: &mut Vec<u8>| {
+        let e = if name.contains('.') {
+            choose_encoding(t)
+        } else {
+            Encoding::DenseF16
+        };
+        let data = encode(t, e);
+        let mut o = Json::obj();
+        o.set("name", Json::str(&name));
+        o.set(
+            "shape",
+            Json::from_f64s(
+                &t.shape.iter().map(|&s| s as f64).collect::<Vec<_>>(),
+            ),
+        );
+        o.set(
+            "encoding",
+            Json::str(match e {
+                Encoding::DenseF32 => "f32",
+                Encoding::DenseF16 => "f16",
+                Encoding::SparseCsr => "csr",
+            }),
+        );
+        o.set("offset", Json::num(blobs.len() as f64));
+        o.set("bytes", Json::num(data.len() as f64));
+        blobs.extend_from_slice(&data);
+        entries.push(o);
+    };
+    push("embed".into(), &m.embed, &mut blobs);
+    for (li, l) in m.layers.iter().enumerate() {
+        for &p in Proj::all().iter() {
+            push(format!("l{li}.{}", p.name()), l.proj(p), &mut blobs);
+        }
+    }
+    push("lm_head".into(), &m.lm_head, &mut blobs);
+    let mut header = Json::obj();
+    header.set("model", Json::str(&m.cfg.name));
+    header.set("tensors", Json::Arr(entries));
+    let hs = header.to_string();
+    let mut file = Vec::new();
+    file.extend_from_slice(&(hs.len() as u64).to_le_bytes());
+    file.extend_from_slice(hs.as_bytes());
+    file.extend_from_slice(&blobs);
+    std::fs::write(path, &file)?;
+    Ok(file.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::testutil::random_model;
+    use crate::util::rng::Pcg32;
+
+    fn rand_t(seed: u64, r: usize, c: usize) -> Tensor {
+        let mut rng = Pcg32::seeded(seed);
+        Tensor::new(
+            (0..r * c).map(|_| rng.normal()).collect(),
+            vec![r, c],
+        )
+    }
+
+    #[test]
+    fn f32_roundtrip_exact() {
+        let t = rand_t(1, 7, 9);
+        let b = encode(&t, Encoding::DenseF32);
+        let t2 = decode(&b, &t.shape, Encoding::DenseF32).unwrap();
+        assert_eq!(t.data, t2.data);
+    }
+
+    #[test]
+    fn f16_roundtrip_close() {
+        let t = rand_t(2, 8, 8);
+        let b = encode(&t, Encoding::DenseF16);
+        let t2 = decode(&b, &t.shape, Encoding::DenseF16).unwrap();
+        for (a, b) in t.data.iter().zip(t2.data.iter()) {
+            assert!((a - b).abs() < 2e-3 * (1.0 + a.abs()));
+        }
+    }
+
+    #[test]
+    fn csr_roundtrip_preserves_pattern() {
+        let mut t = rand_t(3, 10, 14);
+        // zero 70%
+        for (i, v) in t.data.iter_mut().enumerate() {
+            if i % 10 < 7 {
+                *v = 0.0;
+            }
+        }
+        let b = encode(&t, Encoding::SparseCsr);
+        let t2 = decode(&b, &t.shape, Encoding::SparseCsr).unwrap();
+        for (a, b) in t.data.iter().zip(t2.data.iter()) {
+            if *a == 0.0 {
+                assert_eq!(*b, 0.0);
+            } else {
+                assert!((a - b).abs() < 2e-3 * (1.0 + a.abs()));
+            }
+        }
+        assert!(b.len() < encoded_bytes(&t, Encoding::DenseF16));
+    }
+
+    #[test]
+    fn choose_encoding_crossover() {
+        let dense = rand_t(4, 16, 16);
+        assert_eq!(choose_encoding(&dense), Encoding::DenseF16);
+        let mut sparse = dense.clone();
+        for (i, v) in sparse.data.iter_mut().enumerate() {
+            if i % 5 != 0 {
+                *v = 0.0; // 80% zeros
+            }
+        }
+        assert_eq!(choose_encoding(&sparse), Encoding::SparseCsr);
+    }
+
+    #[test]
+    fn shipped_bytes_shrink_with_unstructured_pruning() {
+        // the paper: UP doesn't shrink the RESIDENT model — but the
+        // deployment FILE should shrink via CSR
+        let m = random_model(401);
+        let dense_file = shipped_bytes(&m);
+        let mut pruned = m.clone();
+        for l in pruned.layers.iter_mut() {
+            for p in l.projs.iter_mut() {
+                let sc: Vec<f64> =
+                    p.data.iter().map(|x| x.abs() as f64).collect();
+                crate::prune::unstructured::mask_lowest(p, &sc, 0.8);
+            }
+        }
+        assert_eq!(pruned.model_bytes(), m.model_bytes());
+        assert!(
+            shipped_bytes(&pruned) < dense_file,
+            "CSR file must shrink: {} vs {dense_file}",
+            shipped_bytes(&pruned)
+        );
+    }
+
+    #[test]
+    fn export_writes_parseable_file() {
+        let m = random_model(402);
+        let path = std::env::temp_dir().join("mosaic_export_test.bin");
+        let n = export_model(&m, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(bytes.len(), n);
+        let hlen = u64::from_le_bytes(bytes[..8].try_into().unwrap())
+            as usize;
+        let header = std::str::from_utf8(&bytes[8..8 + hlen]).unwrap();
+        let j = crate::util::json::Json::parse(header).unwrap();
+        let tensors = j.get("tensors").unwrap().as_arr().unwrap();
+        assert_eq!(tensors.len(), 1 + m.cfg.n_layers * 7 + 1);
+        std::fs::remove_file(&path).ok();
+    }
+}

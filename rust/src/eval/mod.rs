@@ -1,0 +1,248 @@
+//! Evaluation harness: perplexity, zero-shot task accuracy, and
+//! latency/memory measurement (the paper's §V-A4/A5 metrics).
+
+use anyhow::Result;
+
+use crate::data::{eval_windows, DataStore, Task};
+use crate::model::engine::{forward_batch, generate};
+use crate::model::ModelWeights;
+use crate::runtime::ModelRuntime;
+use crate::tensor::log_softmax_at;
+
+/// Perplexity over a split via the **native engine** (works for any
+/// structural shape). exp(mean NLL of next-token predictions).
+pub fn perplexity_native(
+    m: &ModelWeights,
+    stream: &[u16],
+    seq: usize,
+    max_windows: usize,
+) -> f64 {
+    let windows = eval_windows(stream, seq, max_windows);
+    let logits = forward_batch(m, &windows);
+    let vocab = m.cfg.vocab;
+    let mut nll = 0f64;
+    let mut count = 0usize;
+    for (w, lg) in windows.iter().zip(logits.iter()) {
+        for i in 0..w.len() - 1 {
+            let row = &lg.data[i * vocab..(i + 1) * vocab];
+            nll -= log_softmax_at(row, w[i + 1] as usize) as f64;
+            count += 1;
+        }
+    }
+    (nll / count.max(1) as f64).exp()
+}
+
+/// Perplexity via the **PJRT fwd graph** (fixed (B,S) shape; dense or
+/// masked models only). Anchors the native engine numbers.
+pub fn perplexity_pjrt(
+    mrt: &mut ModelRuntime,
+    stream: &[u16],
+    max_batches: usize,
+) -> Result<f64> {
+    let (b, s) = mrt.fwd_tokens_shape;
+    let windows = eval_windows(stream, s, max_batches * b);
+    let vocab = mrt.cfg.vocab;
+    let mut nll = 0f64;
+    let mut count = 0usize;
+    for chunk in windows.chunks(b) {
+        if chunk.len() < b {
+            break;
+        }
+        let mut toks = Vec::with_capacity(b * s);
+        for w in chunk {
+            toks.extend(w.iter().map(|&t| t as i32));
+        }
+        let logits = mrt.forward(&toks)?;
+        for (wi, w) in chunk.iter().enumerate() {
+            for i in 0..s - 1 {
+                let base = (wi * s + i) * vocab;
+                let row = &logits[base..base + vocab];
+                nll -= log_softmax_at(row, w[i + 1] as usize) as f64;
+                count += 1;
+            }
+        }
+    }
+    Ok((nll / count.max(1) as f64).exp())
+}
+
+/// Zero-shot accuracy on one multiple-choice task: pick the choice with
+/// the highest length-normalized log-likelihood given the context
+/// (LM-Evaluation-Harness scoring).
+pub fn task_accuracy(m: &ModelWeights, task: &Task) -> f64 {
+    let vocab = m.cfg.vocab;
+    let mut correct = 0usize;
+    // score all items: build each (context + choice) row
+    let mut rows: Vec<Vec<u16>> = Vec::new();
+    let mut spans = Vec::new(); // (item, choice, ctx_len, total_len)
+    for (ii, item) in task.items.iter().enumerate() {
+        for (ci, ch) in item.choices.iter().enumerate() {
+            let mut row = item.context.clone();
+            row.extend_from_slice(ch);
+            spans.push((ii, ci, item.context.len(), row.len()));
+            rows.push(row);
+        }
+    }
+    let logits = forward_batch(m, &rows);
+    let mut scores =
+        vec![vec![f64::NEG_INFINITY; task.n_choices]; task.items.len()];
+    for (ri, &(ii, ci, ctx, total)) in spans.iter().enumerate() {
+        let lg = &logits[ri];
+        let mut lp = 0f64;
+        for pos in ctx - 1..total - 1 {
+            let row = &lg.data[pos * vocab..(pos + 1) * vocab];
+            lp += log_softmax_at(row, rows[ri][pos + 1] as usize) as f64;
+        }
+        scores[ii][ci] = lp / (total - ctx) as f64;
+    }
+    for (ii, item) in task.items.iter().enumerate() {
+        let best = scores[ii]
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        if best == item.label {
+            correct += 1;
+        }
+    }
+    correct as f64 / task.items.len().max(1) as f64
+}
+
+/// Mean zero-shot accuracy across all seven tasks (the paper's
+/// equal-weighted mean; Table IV).
+pub fn mean_accuracy(m: &ModelWeights, store: &DataStore) -> Result<f64> {
+    let mut names = store.task_names();
+    names.sort();
+    let mut acc = 0f64;
+    let mut n = 0usize;
+    for name in &names {
+        let task = store.task(name)?;
+        acc += task_accuracy(m, &task);
+        n += 1;
+    }
+    Ok(acc / n.max(1) as f64 * 100.0)
+}
+
+/// Per-task accuracies (Tables X–XII rows).
+pub fn per_task_accuracy(
+    m: &ModelWeights,
+    store: &DataStore,
+) -> Result<Vec<(String, f64)>> {
+    let mut names = store.task_names();
+    names.sort();
+    names
+        .iter()
+        .map(|name| {
+            let task = store.task(name)?;
+            Ok((name.clone(), task_accuracy(m, &task) * 100.0))
+        })
+        .collect()
+}
+
+/// Measured inference latency + working memory of the native engine
+/// (prefill `tokens_in`, decode `tokens_out`), averaged over trials.
+pub struct MeasuredPerf {
+    pub latency_s: f64,
+    pub latency_std: f64,
+    pub prefill_s: f64,
+    pub decode_s: f64,
+    pub model_bytes: usize,
+    pub kv_bytes: usize,
+}
+
+pub fn measure_native(
+    m: &ModelWeights,
+    tokens_in: usize,
+    tokens_out: usize,
+    trials: usize,
+) -> MeasuredPerf {
+    let prompt: Vec<u16> =
+        (0..tokens_in).map(|i| (3 + (i * 7) % 500) as u16).collect();
+    let mut lats = Vec::new();
+    let (mut pre, mut dec) = (0.0, 0.0);
+    for _ in 0..trials.max(1) {
+        let (_out, p, d) = generate(m, &prompt, tokens_out);
+        lats.push(p + d);
+        pre = p;
+        dec = d;
+    }
+    let (mean, std) = crate::util::mean_std(&lats);
+    let st = crate::model::DecodeState::new(m, tokens_in + tokens_out);
+    MeasuredPerf {
+        latency_s: mean,
+        latency_std: std,
+        prefill_s: pre,
+        decode_s: dec,
+        model_bytes: m.model_bytes(),
+        kv_bytes: st.kv_bytes(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::testutil::random_model;
+
+    #[test]
+    fn ppl_of_random_model_near_vocab() {
+        // an untrained model ~ uniform predictions => PPL ≈ vocab
+        let m = random_model(101);
+        let stream: Vec<u16> =
+            (0..600).map(|i| ((i * 31 + 7) % 64) as u16).collect();
+        let ppl = perplexity_native(&m, &stream, 16, 8);
+        assert!(ppl > 20.0 && ppl < 200.0, "ppl={ppl}");
+    }
+
+    #[test]
+    fn destroying_weights_raises_ppl() {
+        let m = random_model(102);
+        let stream: Vec<u16> =
+            (0..600).map(|i| ((i * 13 + 3) % 64) as u16).collect();
+        let base = perplexity_native(&m, &stream, 16, 6);
+        let mut wrecked = m.clone();
+        for l in wrecked.layers.iter_mut() {
+            for p in l.projs.iter_mut() {
+                for x in p.data.iter_mut() {
+                    *x = 0.0;
+                }
+            }
+        }
+        let worse = perplexity_native(&wrecked, &stream, 16, 6);
+        // zeroing every projection shouldn't *improve* the LM
+        assert!(
+            worse > base * 0.5,
+            "wrecked {worse} vs base {base}"
+        );
+    }
+
+    #[test]
+    fn task_accuracy_bounds_and_determinism() {
+        let m = random_model(103);
+        let task = Task {
+            name: "t".into(),
+            items: (0..8)
+                .map(|i| crate::data::TaskItem {
+                    context: vec![1, (i % 60) as u16 + 3, 5, 9],
+                    choices: vec![vec![10, 11], vec![20, 21],
+                                  vec![30, 31], vec![40, 41]],
+                    label: (i % 4) as usize,
+                })
+                .collect(),
+            n_choices: 4,
+            chance: 0.25,
+        };
+        let a1 = task_accuracy(&m, &task);
+        let a2 = task_accuracy(&m, &task);
+        assert_eq!(a1, a2);
+        assert!((0.0..=1.0).contains(&a1));
+    }
+
+    #[test]
+    fn measure_native_reports_sane_numbers() {
+        let m = random_model(104);
+        let perf = measure_native(&m, 8, 4, 2);
+        assert!(perf.latency_s > 0.0);
+        assert!(perf.model_bytes > 0);
+        assert!(perf.kv_bytes > 0);
+    }
+}

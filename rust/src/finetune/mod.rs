@@ -1,0 +1,249 @@
+//! LoRA fine-tuning driver (E4 / Fig. 10 / Table VI): rust Adam loop
+//! over the AOT `lora_grad` HLO graph. The pruned base weights sit
+//! frozen on-device; only the LoRA A/B tensors travel per step.
+//! Python is never involved — the gradient graph was lowered at build
+//! time.
+
+use anyhow::Result;
+
+use crate::model::config::Proj;
+use crate::model::ModelWeights;
+use crate::runtime::ModelRuntime;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+pub struct LoraConfig {
+    pub rank: usize,
+    pub alpha: f64,
+    pub lr: f64,
+    pub steps: usize,
+    pub eval_every: usize,
+    pub seed: u64,
+}
+
+impl Default for LoraConfig {
+    fn default() -> Self {
+        LoraConfig {
+            rank: 4,
+            alpha: 8.0,
+            lr: 5e-4,
+            steps: 120,
+            eval_every: 10,
+            seed: 7,
+        }
+    }
+}
+
+pub struct LoraResult {
+    pub lora: Vec<Tensor>,
+    /// (step, train_loss)
+    pub train_curve: Vec<(usize, f64)>,
+    /// (step, eval_loss)
+    pub eval_curve: Vec<(usize, f64)>,
+    pub wall_s: f64,
+}
+
+/// Initialize LoRA params to the manifest shapes (A ~ N(0, .01), B = 0 —
+/// matching python model.init_lora).
+pub fn init_lora(mrt: &ModelRuntime, seed: u64) -> Result<Vec<Tensor>> {
+    let mut rng = Pcg32::seeded(seed);
+    Ok(mrt
+        .lora_shapes()?
+        .into_iter()
+        .map(|shape| {
+            let n: usize = shape.iter().product();
+            let is_a = shape.len() == 2 && shape[1] <= shape[0];
+            let data = if is_a {
+                (0..n).map(|_| rng.normal() * 0.01).collect()
+            } else {
+                vec![0f32; n]
+            };
+            Tensor::new(data, shape)
+        })
+        .collect())
+}
+
+struct Adam {
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    t: usize,
+}
+
+impl Adam {
+    fn new(params: &[Tensor]) -> Self {
+        Adam {
+            m: params.iter().map(|p| vec![0.0; p.numel()]).collect(),
+            v: params.iter().map(|p| vec![0.0; p.numel()]).collect(),
+            t: 0,
+        }
+    }
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f64) {
+        self.t += 1;
+        let (b1, b2, eps) = (0.9f64, 0.999f64, 1e-8f64);
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        for i in 0..params.len() {
+            for j in 0..params[i].numel() {
+                let g = grads[i].data[j] as f64;
+                let m = b1 * self.m[i][j] as f64 + (1.0 - b1) * g;
+                let v = b2 * self.v[i][j] as f64 + (1.0 - b2) * g * g;
+                self.m[i][j] = m as f32;
+                self.v[i][j] = v as f32;
+                let update = lr * (m / bc1) / ((v / bc2).sqrt() + eps);
+                params[i].data[j] -= update as f32;
+            }
+        }
+    }
+}
+
+/// Fine-tune LoRA adapters on instruction rows. `rows` is the flattened
+/// (n_rows × seq) alpacas matrix; a held-out tail is used for eval loss.
+pub fn train_lora(
+    mrt: &mut ModelRuntime,
+    rows: &[u16],
+    n_rows: usize,
+    seq: usize,
+    cfg: &LoraConfig,
+) -> Result<LoraResult> {
+    let (b, s) = mrt.ft_tokens_shape;
+    anyhow::ensure!(s == seq, "ft graph seq {s} != data seq {seq}");
+    let n_eval = (n_rows / 10).clamp(b, 4 * b);
+    let n_train = n_rows - n_eval;
+    let mut rng = Pcg32::seeded(cfg.seed);
+    let mut lora = init_lora(mrt, cfg.seed)?;
+    let mut adam = Adam::new(&lora);
+    let mut train_curve = Vec::new();
+    let mut eval_curve = Vec::new();
+    let t0 = std::time::Instant::now();
+
+    let batch_tokens = |idx: &[usize]| -> Vec<i32> {
+        let mut t = Vec::with_capacity(b * s);
+        for &r in idx {
+            t.extend(
+                rows[r * seq..(r + 1) * seq].iter().map(|&x| x as i32),
+            );
+        }
+        t
+    };
+    let eval_rows: Vec<usize> = (n_train..n_train + n_eval).collect();
+
+    for step in 0..cfg.steps {
+        let idx: Vec<usize> =
+            (0..b).map(|_| rng.below(n_train)).collect();
+        let toks = batch_tokens(&idx);
+        let (loss, grads) = mrt.lora_grad(&toks, &lora)?;
+        adam.step(&mut lora, &grads, cfg.lr);
+        train_curve.push((step, loss as f64));
+        if step % cfg.eval_every == 0 || step == cfg.steps - 1 {
+            // eval loss: forward-only via the grad graph (ignore grads)
+            let mut eloss = 0f64;
+            let mut n = 0usize;
+            for chunk in eval_rows.chunks(b) {
+                if chunk.len() < b {
+                    break;
+                }
+                let toks = batch_tokens(chunk);
+                let (l, _g) = mrt.lora_grad(&toks, &lora)?;
+                eloss += l as f64;
+                n += 1;
+            }
+            eval_curve.push((step, eloss / n.max(1) as f64));
+        }
+    }
+    Ok(LoraResult {
+        lora,
+        train_curve,
+        eval_curve,
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Merge LoRA into the (pruned) base weights:
+/// W ← W + (alpha/r)·A@B per projection (paper: "merges into the
+/// original pruned model weights at runtime").
+pub fn merge_lora(
+    m: &mut ModelWeights,
+    lora: &[Tensor],
+    rank: usize,
+    alpha: f64,
+) {
+    let scale = (alpha / rank as f64) as f32;
+    let mut li = 0;
+    for l in 0..m.layers.len() {
+        for &p in Proj::all().iter() {
+            let a = &lora[li];
+            let bm = &lora[li + 1];
+            li += 2;
+            let w = m.layers[l].proj_mut(p);
+            let (fi, fo) = (w.shape[0], w.shape[1]);
+            debug_assert_eq!(a.shape[0], fi);
+            debug_assert_eq!(bm.shape[1], fo);
+            for i in 0..fi {
+                for r in 0..rank {
+                    let av = a.data[i * rank + r] * scale;
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &bm.data[r * fo..(r + 1) * fo];
+                    let wrow = &mut w.data[i * fo..(i + 1) * fo];
+                    for (wv, &bv) in wrow.iter_mut().zip(brow) {
+                        *wv += av * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Adapter size in bytes (paper: "LoRA creates an 84 MB adapter").
+pub fn adapter_bytes(lora: &[Tensor]) -> usize {
+    lora.iter().map(|t| t.numel() * 4).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::testutil::random_model;
+
+    #[test]
+    fn adam_descends_quadratic() {
+        // minimize ||x - 3||^2 with the same Adam implementation
+        let mut params = vec![Tensor::new(vec![0.0], vec![1])];
+        let mut adam = Adam::new(&params);
+        for _ in 0..500 {
+            let g = 2.0 * (params[0].data[0] - 3.0);
+            let grads = vec![Tensor::new(vec![g], vec![1])];
+            adam.step(&mut params, &grads, 0.05);
+        }
+        assert!((params[0].data[0] - 3.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn merge_lora_adds_outer_product() {
+        let mut m = random_model(111);
+        let orig = m.clone();
+        // lora: A=ones(in,1-rank...) use rank=2 shapes per projection
+        let mut lora = Vec::new();
+        for _l in 0..m.cfg.n_layers {
+            for &p in Proj::all().iter() {
+                let (fi, fo) = m.cfg.proj_shape(p);
+                lora.push(Tensor::new(vec![0.01; fi * 2], vec![fi, 2]));
+                lora.push(Tensor::new(vec![0.5; 2 * fo], vec![2, fo]));
+            }
+        }
+        merge_lora(&mut m, &lora, 2, 8.0);
+        // delta = (8/2) * 0.01*0.5*2 = 0.04 everywhere
+        let dq = m.layers[0].projs[0].data[0]
+            - orig.layers[0].projs[0].data[0];
+        assert!((dq - 0.04).abs() < 1e-5, "delta {dq}");
+    }
+
+    #[test]
+    fn adapter_bytes_counts() {
+        let lora = vec![
+            Tensor::zeros(&[16, 4]),
+            Tensor::zeros(&[4, 16]),
+        ];
+        assert_eq!(adapter_bytes(&lora), (64 + 64) * 4);
+    }
+}

@@ -1,0 +1,75 @@
+//! # Mosaic — Composite Projection Pruning for Resource-efficient LLMs
+//!
+//! Reproduction of Eccles, Wong & Varghese (FGCS 2025,
+//! DOI 10.1016/j.future.2025.108056) as a three-layer rust + JAX + Pallas
+//! system:
+//!
+//! * **L3 (this crate)** — the Mosaic system: Parameter Ranking Controller
+//!   ([`rank`]), Parameter Pruning Controller ([`prune`]), quantizer
+//!   ([`quant`]), platform deployment simulator ([`platform`]), LoRA
+//!   fine-tuning driver ([`finetune`]), evaluation harness ([`eval`]) and
+//!   the end-to-end pipeline ([`coordinator`]).
+//! * **L2/L1 (python, build-time only)** — the JAX decoder model and the
+//!   Pallas kernels, AOT-lowered to HLO text under `artifacts/` and run
+//!   through [`runtime`] (PJRT CPU). Python never executes at runtime.
+//! * **Deployment substrate** — [`model`] is a native rust inference
+//!   engine that runs arbitrary structurally-pruned shapes (the SLM
+//!   Deployer target), validated against the PJRT path.
+//!
+//! See DESIGN.md for the experiment index and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod bench_support;
+pub mod coordinator;
+pub mod data;
+pub mod deploy;
+pub mod eval;
+pub mod finetune;
+pub mod model;
+pub mod platform;
+pub mod prune;
+pub mod quant;
+pub mod rank;
+pub mod runtime;
+pub mod serve;
+pub mod tensor;
+pub mod util;
+
+use std::path::PathBuf;
+
+/// Artifact locations resolved once per process.
+pub struct Artifacts {
+    pub root: PathBuf,
+}
+
+impl Artifacts {
+    pub fn discover() -> anyhow::Result<Self> {
+        let root = crate::util::artifacts_dir();
+        anyhow::ensure!(
+            root.join("index.json").exists(),
+            "artifacts not found at {} — run `make artifacts` first",
+            root.display()
+        );
+        Ok(Artifacts { root })
+    }
+
+    pub fn model_dir(&self, name: &str) -> PathBuf {
+        self.root.join("models").join(name)
+    }
+
+    pub fn data_dir(&self) -> PathBuf {
+        self.root.join("data")
+    }
+
+    pub fn model_names(&self) -> anyhow::Result<Vec<String>> {
+        let idx = crate::util::json::Json::parse(
+            &crate::util::read_to_string(&self.root.join("index.json"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("index.json: {e}"))?;
+        Ok(idx
+            .get("models")
+            .and_then(|m| m.as_obj())
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default())
+    }
+}

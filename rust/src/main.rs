@@ -1,0 +1,353 @@
+//! Mosaic CLI — create, evaluate, fine-tune and deploy pruned SLMs.
+//!
+//! Usage:
+//!   mosaic info
+//!   mosaic rank    --model tl1_7 [--uniformity projection] [--samples 64]
+//!   mosaic prune   --model tl1_7 --p 0.6 [--uniformity projection]
+//!                  [--category composite] [--samples 64]
+//!   mosaic eval    --model tl1_7 [--p 0.6 ...]           (PPL + accuracy)
+//!   mosaic finetune --model tl31 --p 0.8 [--steps 80]
+//!   mosaic deploy  --model tl1_7 --p 0.6 --platform P4
+//!   mosaic pipeline --model tl1_7 --p 0.6                (end-to-end)
+
+use anyhow::{bail, Result};
+use mosaic::coordinator::{choose_category, Mosaic, DEFAULT_CALIB_SAMPLES};
+use mosaic::eval;
+use mosaic::finetune;
+use mosaic::platform::{self, ModelProfile, Workload};
+use mosaic::prune::{Category, Uniformity};
+use mosaic::Artifacts;
+
+/// Tiny flag parser: --key value pairs after the subcommand.
+struct Args {
+    cmd: String,
+    kv: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Result<Self> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".to_string());
+        let mut kv = std::collections::HashMap::new();
+        let rest: Vec<String> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let k = rest[i]
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow::anyhow!("expected --flag: {}", rest[i]))?;
+            let v = rest
+                .get(i + 1)
+                .ok_or_else(|| anyhow::anyhow!("missing value for --{k}"))?;
+            kv.insert(k.to_string(), v.clone());
+            i += 2;
+        }
+        Ok(Args { cmd, kv })
+    }
+    fn get(&self, k: &str, default: &str) -> String {
+        self.kv.get(k).cloned().unwrap_or_else(|| default.to_string())
+    }
+    fn f64(&self, k: &str, default: f64) -> f64 {
+        self.kv.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    fn usize(&self, k: &str, default: usize) -> usize {
+        self.kv.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn parse_uniformity(s: &str) -> Result<Uniformity> {
+    Ok(match s {
+        "global" => Uniformity::Global,
+        "layer" => Uniformity::Layer,
+        "projection" => Uniformity::Projection,
+        _ => bail!("uniformity must be global|layer|projection"),
+    })
+}
+
+fn parse_category(s: &str) -> Result<Category> {
+    Ok(match s {
+        "unstructured" => Category::Unstructured,
+        "structured" => Category::Structured,
+        "composite" => Category::Composite,
+        _ => bail!("category must be unstructured|structured|composite"),
+    })
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse()?;
+    match args.cmd.as_str() {
+        "info" => cmd_info(),
+        "rank" => cmd_rank(&args),
+        "prune" => cmd_prune(&args),
+        "eval" => cmd_eval(&args),
+        "finetune" => cmd_finetune(&args),
+        "deploy" => cmd_deploy(&args),
+        "serve" => cmd_serve(&args),
+        "export" => cmd_export(&args),
+        "pipeline" => cmd_pipeline(&args),
+        _ => {
+            println!(
+                "mosaic — composite projection pruning for LLMs\n\
+                 commands: info | rank | prune | eval | finetune | \
+                 deploy | serve | export | pipeline\n\
+                 (see src/main.rs header for flags)"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    let a = Artifacts::discover()?;
+    println!("artifacts: {}", a.root.display());
+    for name in a.model_names()? {
+        let m = mosaic::model::ModelWeights::load(&a.model_dir(&name))?;
+        println!(
+            "  {name:8} proxy={:14} layers={} d={} ff={} ctx={} \
+             params={} bytes={}",
+            m.cfg.proxy_for,
+            m.cfg.n_layers,
+            m.cfg.d_model,
+            m.cfg.ff_dim,
+            m.cfg.ctx,
+            m.cfg.n_params,
+            m.model_bytes()
+        );
+    }
+    println!("platforms:");
+    for p in platform::testbed() {
+        println!("  {} — {}", p.name, p.description);
+    }
+    Ok(())
+}
+
+fn cmd_rank(args: &Args) -> Result<()> {
+    let mut mo = Mosaic::load(&args.get("model", "tl1_7"))?;
+    let u = parse_uniformity(&args.get("uniformity", "projection"))?;
+    let n = args.usize("samples", DEFAULT_CALIB_SAMPLES);
+    let rank = mo.global_rank(u, n)?;
+    println!("global rank ({} / {} samples):", u.name(), n);
+    for (l, row) in rank.rank.iter().enumerate() {
+        let cells: Vec<String> =
+            row.iter().map(|x| format!("{x:5.2}")).collect();
+        println!("  layer {l:2}: [{}]", cells.join(" "));
+    }
+    let out = mo.model_dir().join(format!("rank_{}.json", u.name()));
+    rank.save(&out)?;
+    println!("saved -> {}", out.display());
+    println!("{}", mo.metrics.report());
+    Ok(())
+}
+
+fn cmd_prune(args: &Args) -> Result<()> {
+    let mut mo = Mosaic::load(&args.get("model", "tl1_7"))?;
+    let p = args.f64("p", 0.5);
+    let u = parse_uniformity(&args.get("uniformity", "projection"))?;
+    let c = parse_category(&args.get("category", "composite"))?;
+    let n = args.usize("samples", DEFAULT_CALIB_SAMPLES);
+    let prunable = mo.dense.cfg.prunable_params();
+    let (m, plan) = mo.prune(p, u, c, n)?;
+    println!(
+        "pruned {} p={p} uniformity={} category={}",
+        mo.name,
+        u.name(),
+        c.name()
+    );
+    println!("  plan mean target: {:.4}", plan.mean_target());
+    println!(
+        "  removed: {:.1}% of projection params",
+        mosaic::prune::composite::removed_fraction(&m, prunable) * 100.0
+    );
+    println!(
+        "  bytes: {} -> {}",
+        mo.dense.model_bytes(),
+        m.model_bytes()
+    );
+    println!("{}", mo.metrics.report());
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let mut mo = Mosaic::load(&args.get("model", "tl1_7"))?;
+    let p = args.f64("p", 0.0);
+    let n = args.usize("samples", DEFAULT_CALIB_SAMPLES);
+    let m = if p > 0.0 {
+        let u = parse_uniformity(&args.get("uniformity", "projection"))?;
+        let c = parse_category(&args.get("category", "unstructured"))?;
+        mo.prune(p, u, c, n)?.0
+    } else {
+        mo.dense.clone()
+    };
+    let seq = m.cfg.ctx.min(64);
+    for split in ["wikitext2s", "ptbs"] {
+        let stream = mo.store.split(split)?;
+        let ppl = eval::perplexity_native(&m, &stream, seq, 24);
+        println!("PPL {split}: {ppl:.2}");
+    }
+    let acc = eval::mean_accuracy(&m, &mo.store)?;
+    println!("mean zero-shot accuracy: {acc:.2}%");
+    for (t, a) in eval::per_task_accuracy(&m, &mo.store)? {
+        println!("  {t}: {a:.1}%");
+    }
+    Ok(())
+}
+
+fn cmd_finetune(args: &Args) -> Result<()> {
+    let mut mo = Mosaic::load(&args.get("model", "tl31"))?;
+    let p = args.f64("p", 0.8);
+    let u = parse_uniformity(&args.get("uniformity", "projection"))?;
+    let n = args.usize("samples", DEFAULT_CALIB_SAMPLES);
+    let (pruned, _) = mo.prune(p, u, Category::Unstructured, n)?;
+    let (rows, n_rows, seq) = mo.finetune_rows()?;
+    let cfg = finetune::LoraConfig {
+        steps: args.usize("steps", 80),
+        ..Default::default()
+    };
+    let rt = mo.runtime()?;
+    rt.set_weights(&pruned)?;
+    let res = finetune::train_lora(rt, &rows, n_rows, seq, &cfg)?;
+    println!(
+        "fine-tuned {} p={p} ({}): {} steps in {:.1}s, adapter {} KB",
+        mo.name,
+        u.name(),
+        cfg.steps,
+        res.wall_s,
+        finetune::adapter_bytes(&res.lora) / 1024
+    );
+    println!(
+        "  train loss {:.3} -> {:.3}",
+        res.train_curve.first().unwrap().1,
+        res.train_curve.last().unwrap().1
+    );
+    println!(
+        "  eval  loss {:.3} -> {:.3}",
+        res.eval_curve.first().unwrap().1,
+        res.eval_curve.last().unwrap().1
+    );
+    Ok(())
+}
+
+fn cmd_deploy(args: &Args) -> Result<()> {
+    let mut mo = Mosaic::load(&args.get("model", "tl1_7"))?;
+    let pf_name = args.get("platform", "P4");
+    let pf = platform::by_name(&pf_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown platform {pf_name}"))?;
+    let p = args.f64("p", 0.6);
+    let n = args.usize("samples", DEFAULT_CALIB_SAMPLES);
+    let cat = choose_category(&pf);
+    println!("deploying to {} ({}) -> category {}",
+             pf.name, pf.description, cat.name());
+    let (m, _) = mo.prune(p, Uniformity::Projection, cat, n)?;
+    // real measurement on this host
+    let perf = eval::measure_native(&m, 32, 8, 3);
+    println!(
+        "  host-measured: {:.3}s ± {:.3}s (model {} KB, kv {} KB)",
+        perf.latency_s,
+        perf.latency_std,
+        perf.model_bytes / 1024,
+        perf.kv_bytes / 1024
+    );
+    // platform-simulated at paper scale
+    let prof = ModelProfile::from_weights(&m);
+    let sim = platform::simulate(&pf, &prof, &Workload::edge());
+    println!(
+        "  simulated on {}: {:.3}s, mem {} MB, offloading={}",
+        pf.name,
+        sim.latency_s,
+        sim.mem_bytes >> 20,
+        sim.offloading
+    );
+    Ok(())
+}
+
+/// Serve a (pruned) SLM over TCP with continuous batching.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut mo = Mosaic::load(&args.get("model", "tl1_7"))?;
+    let p = args.f64("p", 0.0);
+    let model = if p > 0.0 {
+        let u = parse_uniformity(&args.get("uniformity", "projection"))?;
+        let c = parse_category(&args.get("category", "composite"))?;
+        let n = args.usize("samples", DEFAULT_CALIB_SAMPLES);
+        mo.prune(p, u, c, n)?.0
+    } else {
+        mo.dense.clone()
+    };
+    let port = args.usize("port", 7171) as u16;
+    let cfg = mosaic::serve::ServeConfig {
+        max_batch: args.usize("batch", 8),
+        ..Default::default()
+    };
+    let srv = mosaic::serve::Server::start(model, cfg, port)?;
+    println!(
+        "serving {} (p={p}) on {} — line-JSON: \
+         {{\"prompt\": [..], \"max_new\": n}}",
+        mo.name, srv.addr
+    );
+    println!("press ctrl-c to stop");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(5));
+        println!(
+            "completed {} / rejected {} / tok {} / occupancy {:.2}",
+            srv.stats.completed.load(std::sync::atomic::Ordering::Relaxed),
+            srv.stats.rejected.load(std::sync::atomic::Ordering::Relaxed),
+            srv.stats.tokens_out.load(std::sync::atomic::Ordering::Relaxed),
+            srv.stats.mean_occupancy()
+        );
+    }
+}
+
+/// Export a pruned model in the deployment format (f16/CSR blobs).
+fn cmd_export(args: &Args) -> Result<()> {
+    let mut mo = Mosaic::load(&args.get("model", "tl1_7"))?;
+    let p = args.f64("p", 0.6);
+    let u = parse_uniformity(&args.get("uniformity", "projection"))?;
+    let c = parse_category(&args.get("category", "composite"))?;
+    let n = args.usize("samples", DEFAULT_CALIB_SAMPLES);
+    let (m, _) = mo.prune(p, u, c, n)?;
+    let out = args.get("out", "model.mosaic");
+    let bytes =
+        mosaic::deploy::export_model(&m, std::path::Path::new(&out))?;
+    println!(
+        "exported {} ({} {}) -> {out}: {} KB (resident {} KB, \
+         shipped {} KB)",
+        mo.name,
+        u.name(),
+        c.name(),
+        bytes / 1024,
+        m.model_bytes() / 1024,
+        mosaic::deploy::shipped_bytes(&m) / 1024
+    );
+    Ok(())
+}
+
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    let model = args.get("model", "tl1_7");
+    let p = args.f64("p", 0.6);
+    let n = args.usize("samples", DEFAULT_CALIB_SAMPLES);
+    let mut mo = Mosaic::load(&model)?;
+    println!("== Mosaic pipeline: {model} p={p} ==");
+    let seq = mo.dense.cfg.ctx.min(64);
+    let wt = mo.store.split("wikitext2s")?;
+    let base_ppl = eval::perplexity_native(&mo.dense, &wt, seq, 16);
+    println!("dense PPL(wikitext2s) = {base_ppl:.2}");
+    for u in [Uniformity::Global, Uniformity::Layer, Uniformity::Projection]
+    {
+        let m = mo.prune_wanda(p, u, n)?;
+        let ppl = eval::perplexity_native(&m, &wt, seq, 16);
+        println!("  {:10} wanda-unstructured PPL = {ppl:.2}", u.name());
+    }
+    for c in [Category::Unstructured, Category::Composite,
+              Category::Structured]
+    {
+        let (m, _) = mo.prune(p, Uniformity::Projection, c, n)?;
+        let ppl = eval::perplexity_native(&m, &wt, seq, 16);
+        let perf = eval::measure_native(&m, 32, 8, 2);
+        println!(
+            "  {:12} PPL = {ppl:9.2}  latency {:.3}s  bytes {}",
+            c.name(),
+            perf.latency_s,
+            m.model_bytes()
+        );
+    }
+    println!("{}", mo.metrics.report());
+    Ok(())
+}

@@ -1,0 +1,180 @@
+//! Activation capture for the SparseGPT pruner: replays the forward pass
+//! while recording each projection's *input rows* so the pruner can build
+//! per-projection Hessians H = Xᵀ X (the inverse-Hessian weight update
+//! needs off-diagonal terms the profile graph's Σa² vectors don't carry).
+//!
+//! Numerics mirror engine::forward_full exactly (same primitives).
+
+use crate::model::config::Proj;
+use crate::model::weights::ModelWeights;
+use crate::tensor::{self, matmul, rmsnorm, silu, softmax, Tensor};
+
+/// Per (layer, projection) Gram matrix accumulator H = Σ xᵀx over all
+/// captured token rows, plus the row count.
+pub struct HessianStats {
+    /// [layer][proj] -> (in_dim × in_dim) symmetric Gram matrix
+    pub gram: Vec<Vec<Tensor>>,
+    pub rows: usize,
+}
+
+impl HessianStats {
+    pub fn new(m: &ModelWeights) -> Self {
+        let gram = m
+            .layers
+            .iter()
+            .map(|_| {
+                Proj::all()
+                    .iter()
+                    .map(|&p| {
+                        let (i, _) = m.cfg.proj_shape(p);
+                        Tensor::zeros(&[i, i])
+                    })
+                    .collect()
+            })
+            .collect();
+        HessianStats { gram, rows: 0 }
+    }
+
+    fn add_rows(&mut self, l: usize, p: Proj, x: &Tensor) {
+        let g = &mut self.gram[l][p as usize];
+        let k = g.shape[0];
+        for r in 0..x.rows() {
+            let row = x.row(r);
+            for i in 0..k {
+                let xi = row[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                let grow = &mut g.data[i * k..(i + 1) * k];
+                for (gj, &xj) in grow.iter_mut().zip(row.iter()) {
+                    *gj += xi * xj;
+                }
+            }
+        }
+    }
+}
+
+/// Run `tokens` through the model, accumulating projection-input Grams.
+pub fn capture_hessians(
+    m: &ModelWeights,
+    samples: &[Vec<u16>],
+) -> HessianStats {
+    let mut stats = HessianStats::new(m);
+    for tokens in samples {
+        capture_one(m, tokens, &mut stats);
+        stats.rows += tokens.len();
+    }
+    stats
+}
+
+fn capture_one(m: &ModelWeights, tokens: &[u16], stats: &mut HessianStats) {
+    let cfg = &m.cfg;
+    let (s, d, dh) = (tokens.len(), cfg.d_model, cfg.head_dim);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut x = Tensor::zeros(&[s, d]);
+    for (i, &t) in tokens.iter().enumerate() {
+        x.row_mut(i).copy_from_slice(m.embed.row(t as usize));
+    }
+    let mut xn = Tensor::zeros(&[s, d]);
+    for (li, l) in m.layers.iter().enumerate() {
+        let hk = l.kept_heads.len();
+        for i in 0..s {
+            rmsnorm(x.row(i), &l.attn_norm, xn.row_mut(i));
+        }
+        stats.add_rows(li, Proj::Q, &xn);
+        stats.add_rows(li, Proj::K, &xn);
+        stats.add_rows(li, Proj::V, &xn);
+        let mut q = matmul(&xn, l.proj(Proj::Q));
+        let mut k = matmul(&xn, l.proj(Proj::K));
+        let v = matmul(&xn, l.proj(Proj::V));
+        for i in 0..s {
+            for h in 0..hk {
+                tensor::apply_rope(&mut q.row_mut(i)[h * dh..(h + 1) * dh], i);
+                tensor::apply_rope(&mut k.row_mut(i)[h * dh..(h + 1) * dh], i);
+            }
+        }
+        let mut attn = Tensor::zeros(&[s, hk * dh]);
+        let mut scores = vec![0f32; s];
+        for h in 0..hk {
+            for i in 0..s {
+                let qh = &q.row(i)[h * dh..(h + 1) * dh];
+                for j in 0..=i {
+                    let kh = &k.row(j)[h * dh..(h + 1) * dh];
+                    scores[j] = qh
+                        .iter()
+                        .zip(kh)
+                        .map(|(a, b)| a * b)
+                        .sum::<f32>()
+                        * scale;
+                }
+                softmax(&mut scores[..=i]);
+                for j in 0..=i {
+                    let vh = &v.row(j)[h * dh..(h + 1) * dh];
+                    let p = scores[j];
+                    let arow = &mut attn.row_mut(i)[h * dh..(h + 1) * dh];
+                    for (a, &vv) in arow.iter_mut().zip(vh) {
+                        *a += p * vv;
+                    }
+                }
+            }
+        }
+        stats.add_rows(li, Proj::O, &attn);
+        let o = matmul(&attn, l.proj(Proj::O));
+        for i in 0..s * d {
+            x.data[i] += o.data[i];
+        }
+        for i in 0..s {
+            rmsnorm(x.row(i), &l.ffn_norm, xn.row_mut(i));
+        }
+        stats.add_rows(li, Proj::Gate, &xn);
+        stats.add_rows(li, Proj::Up, &xn);
+        let g = matmul(&xn, l.proj(Proj::Gate));
+        let u = matmul(&xn, l.proj(Proj::Up));
+        let c = l.kept_channels.len();
+        let mut hmid = Tensor::zeros(&[s, c]);
+        for i in 0..s * c {
+            hmid.data[i] = silu(g.data[i]) * u.data[i];
+        }
+        stats.add_rows(li, Proj::Down, &hmid);
+        let ffn = matmul(&hmid, l.proj(Proj::Down));
+        for i in 0..s * d {
+            x.data[i] += ffn.data[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::testutil::random_model;
+
+    #[test]
+    fn gram_symmetric_and_psd_diag() {
+        let m = random_model(41);
+        let stats = capture_hessians(&m, &[vec![1, 2, 3, 4, 5]]);
+        for l in &stats.gram {
+            for g in l {
+                let k = g.shape[0];
+                for i in 0..k {
+                    assert!(g.at2(i, i) >= -1e-6, "diag must be ≥ 0");
+                    for j in 0..k {
+                        assert!(
+                            (g.at2(i, j) - g.at2(j, i)).abs() < 1e-3,
+                            "gram must be symmetric"
+                        );
+                    }
+                }
+            }
+        }
+        assert_eq!(stats.rows, 5);
+    }
+
+    #[test]
+    fn qkv_share_inputs() {
+        let m = random_model(42);
+        let stats = capture_hessians(&m, &[vec![7, 8, 9]]);
+        let gq = &stats.gram[0][0];
+        let gk = &stats.gram[0][1];
+        assert_eq!(gq.data, gk.data, "q and k see the same inputs");
+    }
+}

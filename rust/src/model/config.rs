@@ -1,0 +1,139 @@
+//! Model configuration mirrored from python/compile/configs.py via the
+//! artifact manifest (the rust side never hardcodes the zoo).
+
+use crate::util::json::Json;
+
+/// Canonical projection order — must match python `PROJS`.
+pub const PROJS: [&str; 7] = ["q", "k", "v", "o", "gate", "up", "down"];
+pub const N_PROJS: usize = 7;
+
+pub const PAD: u16 = 0;
+pub const BOS: u16 = 1;
+pub const EOS: u16 = 2;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Proj {
+    Q = 0,
+    K = 1,
+    V = 2,
+    O = 3,
+    Gate = 4,
+    Up = 5,
+    Down = 6,
+}
+
+impl Proj {
+    pub fn all() -> [Proj; 7] {
+        [Proj::Q, Proj::K, Proj::V, Proj::O, Proj::Gate, Proj::Up,
+         Proj::Down]
+    }
+    pub fn name(&self) -> &'static str {
+        PROJS[*self as usize]
+    }
+    pub fn from_index(i: usize) -> Proj {
+        Proj::all()[i]
+    }
+    pub fn is_attention(&self) -> bool {
+        matches!(self, Proj::Q | Proj::K | Proj::V | Proj::O)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub proxy_for: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub ff_dim: usize,
+    pub ctx: usize,
+    pub vocab: usize,
+    pub head_dim: usize,
+    pub n_params: usize,
+}
+
+impl ModelConfig {
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let g = |k: &str| -> anyhow::Result<usize> {
+            j.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow::anyhow!("config missing {k}"))
+        };
+        let s = |k: &str| -> String {
+            j.get(k)
+                .and_then(|v| v.as_str())
+                .unwrap_or_default()
+                .to_string()
+        };
+        Ok(ModelConfig {
+            name: s("name"),
+            proxy_for: s("proxy_for"),
+            n_layers: g("n_layers")?,
+            d_model: g("d_model")?,
+            n_heads: g("n_heads")?,
+            ff_dim: g("ff_dim")?,
+            ctx: g("ctx")?,
+            vocab: g("vocab")?,
+            head_dim: g("head_dim")?,
+            n_params: g("n_params")?,
+        })
+    }
+
+    /// (in_features, out_features) of a projection weight.
+    pub fn proj_shape(&self, p: Proj) -> (usize, usize) {
+        let (d, f) = (self.d_model, self.ff_dim);
+        match p {
+            Proj::Q | Proj::K | Proj::V | Proj::O => (d, d),
+            Proj::Gate | Proj::Up => (d, f),
+            Proj::Down => (f, d),
+        }
+    }
+
+    pub fn proj_numel(&self, p: Proj) -> usize {
+        let (i, o) = self.proj_shape(p);
+        i * o
+    }
+
+    /// Total parameters held in projections (the prunable set).
+    pub fn prunable_params(&self) -> usize {
+        self.n_layers
+            * Proj::all().iter().map(|&p| self.proj_numel(p)).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub fn test_config() -> ModelConfig {
+        ModelConfig {
+            name: "test".into(),
+            proxy_for: "unit".into(),
+            n_layers: 2,
+            d_model: 16,
+            n_heads: 2,
+            ff_dim: 40,
+            ctx: 16,
+            vocab: 64,
+            head_dim: 8,
+            n_params: 0,
+        }
+    }
+
+    #[test]
+    fn proj_shapes() {
+        let c = test_config();
+        assert_eq!(c.proj_shape(Proj::Q), (16, 16));
+        assert_eq!(c.proj_shape(Proj::Gate), (16, 40));
+        assert_eq!(c.proj_shape(Proj::Down), (40, 16));
+        assert_eq!(c.prunable_params(), 2 * (4 * 256 + 3 * 640));
+    }
+
+    #[test]
+    fn proj_order_matches_python() {
+        assert_eq!(
+            Proj::all().map(|p| p.name()),
+            ["q", "k", "v", "o", "gate", "up", "down"]
+        );
+    }
+}

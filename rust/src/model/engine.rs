@@ -1,0 +1,383 @@
+//! Native inference engine — the deployment substrate (SLM Deployer
+//! target). Unlike the PJRT path (fixed HLO shapes), this engine runs
+//! *any* structurally-pruned shape: per-layer kept-head and kept-channel
+//! sets from the structured/composite pruners.
+//!
+//! Numerics mirror python/compile/model.py exactly (RMSNorm eps, RoPE
+//! half-split rotation, causal softmax, SwiGLU) — validated against the
+//! AOT HLO graph in rust/tests/test_pjrt_native_parity.rs.
+
+use crate::model::config::Proj;
+use crate::model::weights::ModelWeights;
+use crate::tensor::{self, matmul, matvec, rmsnorm, silu, softmax, Tensor};
+use crate::util::threadpool::par_for;
+
+/// Full-sequence forward (prefill / evaluation): tokens -> (S, vocab).
+pub fn forward_full(m: &ModelWeights, tokens: &[u16]) -> Tensor {
+    let cfg = &m.cfg;
+    let (s, d, dh) = (tokens.len(), cfg.d_model, cfg.head_dim);
+    let scale = 1.0 / (dh as f32).sqrt();
+
+    // x: (S, d)
+    let mut x = Tensor::zeros(&[s, d]);
+    for (i, &t) in tokens.iter().enumerate() {
+        x.row_mut(i).copy_from_slice(m.embed.row(t as usize));
+    }
+
+    let mut xn = Tensor::zeros(&[s, d]);
+    for l in &m.layers {
+        let hk = l.kept_heads.len();
+        let adim = hk * dh;
+        // ---- attention block
+        for i in 0..s {
+            rmsnorm(x.row(i), &l.attn_norm, xn.row_mut(i));
+        }
+        let mut q = matmul(&xn, l.proj(Proj::Q));
+        let mut k = matmul(&xn, l.proj(Proj::K));
+        let v = matmul(&xn, l.proj(Proj::V));
+        // rope on q, k per position per head
+        for i in 0..s {
+            for h in 0..hk {
+                tensor::apply_rope(
+                    &mut q.row_mut(i)[h * dh..(h + 1) * dh], i);
+                tensor::apply_rope(
+                    &mut k.row_mut(i)[h * dh..(h + 1) * dh], i);
+            }
+        }
+        let mut attn = Tensor::zeros(&[s, adim]);
+        // parallel over heads: each head writes its own column block
+        {
+            let q = &q;
+            let k = &k;
+            let v = &v;
+            let attn_ptr = std::sync::Mutex::new(&mut attn);
+            // compute per-head results into local bufs, then write
+            let results: Vec<(usize, Vec<f32>)> = {
+                let heads: Vec<usize> = (0..hk).collect();
+                crate::util::threadpool::par_map(&heads, |&h| {
+                    let mut out = vec![0f32; s * dh];
+                    let mut scores = vec![0f32; s];
+                    for i in 0..s {
+                        let qh = &q.row(i)[h * dh..(h + 1) * dh];
+                        for j in 0..=i {
+                            let kh = &k.row(j)[h * dh..(h + 1) * dh];
+                            scores[j] = qh
+                                .iter()
+                                .zip(kh)
+                                .map(|(a, b)| a * b)
+                                .sum::<f32>()
+                                * scale;
+                        }
+                        softmax(&mut scores[..=i]);
+                        let orow = &mut out[i * dh..(i + 1) * dh];
+                        for j in 0..=i {
+                            let vh = &v.row(j)[h * dh..(h + 1) * dh];
+                            let p = scores[j];
+                            for (o, &vv) in orow.iter_mut().zip(vh) {
+                                *o += p * vv;
+                            }
+                        }
+                    }
+                    (h, out)
+                })
+            };
+            let attn = &mut *attn_ptr.lock().unwrap();
+            for (h, out) in results {
+                for i in 0..s {
+                    attn.row_mut(i)[h * dh..(h + 1) * dh]
+                        .copy_from_slice(&out[i * dh..(i + 1) * dh]);
+                }
+            }
+        }
+        let o = matmul(&attn, l.proj(Proj::O));
+        for i in 0..s * d {
+            x.data[i] += o.data[i];
+        }
+        // ---- feed-forward block
+        for i in 0..s {
+            rmsnorm(x.row(i), &l.ffn_norm, xn.row_mut(i));
+        }
+        let g = matmul(&xn, l.proj(Proj::Gate));
+        let u = matmul(&xn, l.proj(Proj::Up));
+        let c = l.kept_channels.len();
+        let mut hmid = Tensor::zeros(&[s, c]);
+        for i in 0..s * c {
+            hmid.data[i] = silu(g.data[i]) * u.data[i];
+        }
+        let ffn = matmul(&hmid, l.proj(Proj::Down));
+        for i in 0..s * d {
+            x.data[i] += ffn.data[i];
+        }
+    }
+    for i in 0..s {
+        rmsnorm(x.row(i), &m.final_norm, xn.row_mut(i));
+    }
+    matmul(&xn, &m.lm_head)
+}
+
+/// KV cache + scratch for the token-by-token decode path. All buffers are
+/// preallocated — the decode loop does zero heap allocation (perf
+/// deliverable, see EXPERIMENTS.md §Perf).
+pub struct DecodeState {
+    /// per layer: (ctx, kept_heads*dh) keys / values
+    k_cache: Vec<Tensor>,
+    v_cache: Vec<Tensor>,
+    pub pos: usize,
+    x: Vec<f32>,
+    xn: Vec<f32>,
+    qbuf: Vec<f32>,
+    kbuf: Vec<f32>,
+    vbuf: Vec<f32>,
+    abuf: Vec<f32>,
+    obuf: Vec<f32>,
+    gbuf: Vec<f32>,
+    ubuf: Vec<f32>,
+    hbuf: Vec<f32>,
+    fbuf: Vec<f32>,
+    scores: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+impl DecodeState {
+    pub fn new(m: &ModelWeights, max_ctx: usize) -> Self {
+        let cfg = &m.cfg;
+        let dh = cfg.head_dim;
+        let maxa = cfg.n_heads * dh;
+        let maxc = cfg.ff_dim;
+        DecodeState {
+            k_cache: m
+                .layers
+                .iter()
+                .map(|l| Tensor::zeros(&[max_ctx, l.kept_heads.len() * dh]))
+                .collect(),
+            v_cache: m
+                .layers
+                .iter()
+                .map(|l| Tensor::zeros(&[max_ctx, l.kept_heads.len() * dh]))
+                .collect(),
+            pos: 0,
+            x: vec![0.0; cfg.d_model],
+            xn: vec![0.0; cfg.d_model],
+            qbuf: vec![0.0; maxa],
+            kbuf: vec![0.0; maxa],
+            vbuf: vec![0.0; maxa],
+            abuf: vec![0.0; maxa],
+            obuf: vec![0.0; cfg.d_model],
+            gbuf: vec![0.0; maxc],
+            ubuf: vec![0.0; maxc],
+            hbuf: vec![0.0; maxc],
+            fbuf: vec![0.0; cfg.d_model],
+            scores: vec![0.0; max_ctx],
+            logits: vec![0.0; cfg.vocab],
+        }
+    }
+
+    /// KV-cache bytes actually allocated (platform memory model input).
+    pub fn kv_bytes(&self) -> usize {
+        self.k_cache
+            .iter()
+            .chain(self.v_cache.iter())
+            .map(|t| t.numel() * 4)
+            .sum()
+    }
+
+    pub fn reset(&mut self) {
+        self.pos = 0;
+    }
+}
+
+/// One decode step: feed `token` at the current position, return logits.
+pub fn decode_step<'a>(
+    m: &ModelWeights,
+    st: &'a mut DecodeState,
+    token: u16,
+) -> &'a [f32] {
+    let cfg = &m.cfg;
+    let (d, dh) = (cfg.d_model, cfg.head_dim);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let pos = st.pos;
+    st.x.copy_from_slice(m.embed.row(token as usize));
+
+    for (li, l) in m.layers.iter().enumerate() {
+        let hk = l.kept_heads.len();
+        let adim = hk * dh;
+        rmsnorm(&st.x, &l.attn_norm, &mut st.xn);
+        matvec(&st.xn, l.proj(Proj::Q), &mut st.qbuf[..adim]);
+        matvec(&st.xn, l.proj(Proj::K), &mut st.kbuf[..adim]);
+        matvec(&st.xn, l.proj(Proj::V), &mut st.vbuf[..adim]);
+        for h in 0..hk {
+            tensor::apply_rope(&mut st.qbuf[h * dh..(h + 1) * dh], pos);
+            tensor::apply_rope(&mut st.kbuf[h * dh..(h + 1) * dh], pos);
+        }
+        st.k_cache[li].row_mut(pos).copy_from_slice(&st.kbuf[..adim]);
+        st.v_cache[li].row_mut(pos).copy_from_slice(&st.vbuf[..adim]);
+        st.abuf[..adim].fill(0.0);
+        for h in 0..hk {
+            let qh = &st.qbuf[h * dh..(h + 1) * dh];
+            for j in 0..=pos {
+                let kh = &st.k_cache[li].row(j)[h * dh..(h + 1) * dh];
+                st.scores[j] = qh
+                    .iter()
+                    .zip(kh)
+                    .map(|(a, b)| a * b)
+                    .sum::<f32>()
+                    * scale;
+            }
+            softmax(&mut st.scores[..=pos]);
+            let ah =
+                &mut st.abuf[h * dh..(h + 1) * dh];
+            for j in 0..=pos {
+                let vh = &st.v_cache[li].row(j)[h * dh..(h + 1) * dh];
+                let p = st.scores[j];
+                for (a, &vv) in ah.iter_mut().zip(vh) {
+                    *a += p * vv;
+                }
+            }
+        }
+        matvec(&st.abuf[..adim], l.proj(Proj::O), &mut st.obuf);
+        for i in 0..d {
+            st.x[i] += st.obuf[i];
+        }
+        rmsnorm(&st.x, &l.ffn_norm, &mut st.xn);
+        let c = l.kept_channels.len();
+        matvec(&st.xn, l.proj(Proj::Gate), &mut st.gbuf[..c]);
+        matvec(&st.xn, l.proj(Proj::Up), &mut st.ubuf[..c]);
+        for i in 0..c {
+            st.hbuf[i] = silu(st.gbuf[i]) * st.ubuf[i];
+        }
+        matvec(&st.hbuf[..c], l.proj(Proj::Down), &mut st.fbuf);
+        for i in 0..d {
+            st.x[i] += st.fbuf[i];
+        }
+    }
+    rmsnorm(&st.x, &m.final_norm, &mut st.xn);
+    matvec(&st.xn, &m.lm_head, &mut st.logits);
+    st.pos += 1;
+    &st.logits
+}
+
+/// Generate: prefill `prompt` then decode `n_gen` greedy tokens.
+/// Returns (generated tokens, prefill seconds, decode seconds).
+pub fn generate(
+    m: &ModelWeights,
+    prompt: &[u16],
+    n_gen: usize,
+) -> (Vec<u16>, f64, f64) {
+    let mut st = DecodeState::new(m, prompt.len() + n_gen);
+    let t0 = std::time::Instant::now();
+    let mut last = 0usize;
+    for &t in prompt {
+        let logits = decode_step(m, &mut st, t);
+        last = argmax(logits);
+    }
+    let prefill = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    let mut out = Vec::with_capacity(n_gen);
+    for _ in 0..n_gen {
+        out.push(last as u16);
+        let logits = decode_step(m, &mut st, last as u16);
+        last = argmax(logits);
+    }
+    (out, prefill, t1.elapsed().as_secs_f64())
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut bi = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            bi = i;
+        }
+    }
+    bi
+}
+
+/// Batched full-sequence forward over independent rows (batch = outer
+/// parallelism; rows share no state).
+pub fn forward_batch(m: &ModelWeights, batch: &[Vec<u16>]) -> Vec<Tensor> {
+    let mut out: Vec<Option<Tensor>> = vec![None; batch.len()];
+    {
+        let slots: Vec<std::sync::Mutex<&mut Option<Tensor>>> =
+            out.iter_mut().map(std::sync::Mutex::new).collect();
+        par_for(batch.len(), |i| {
+            let r = forward_full(m, &batch[i]);
+            **slots[i].lock().unwrap() = Some(r);
+        });
+    }
+    out.into_iter().map(|t| t.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::testutil::random_model;
+
+    #[test]
+    fn decode_matches_forward_full() {
+        let m = random_model(11);
+        let toks: Vec<u16> = vec![1, 5, 9, 3, 2, 7];
+        let full = forward_full(&m, &toks);
+        let mut st = DecodeState::new(&m, toks.len());
+        for (i, &t) in toks.iter().enumerate() {
+            let logits = decode_step(&m, &mut st, t);
+            for (a, b) in logits.iter().zip(full.row(i)) {
+                assert!(
+                    (a - b).abs() < 1e-4,
+                    "pos {i}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn causality() {
+        let m = random_model(12);
+        let a = forward_full(&m, &[1, 2, 3, 4]);
+        let b = forward_full(&m, &[1, 2, 3, 60]);
+        // positions 0..2 unaffected by changing the last token
+        for i in 0..3 {
+            for (x, y) in a.row(i).iter().zip(b.row(i)) {
+                assert!((x - y).abs() < 1e-6);
+            }
+        }
+        // last position must differ
+        let diff: f32 = a
+            .row(3)
+            .iter()
+            .zip(b.row(3))
+            .map(|(x, y)| (x - y).abs())
+            .sum();
+        assert!(diff > 1e-3);
+    }
+
+    #[test]
+    fn structural_slice_identity() {
+        // removing zero heads/channels == dense
+        let m = random_model(13);
+        let a = forward_full(&m, &[4, 8, 15]);
+        let m2 = m.clone(); // kept_* already full
+        let b = forward_full(&m2, &[4, 8, 15]);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn generate_deterministic() {
+        let m = random_model(14);
+        let (g1, _, _) = generate(&m, &[1, 2, 3], 5);
+        let (g2, _, _) = generate(&m, &[1, 2, 3], 5);
+        assert_eq!(g1, g2);
+        assert_eq!(g1.len(), 5);
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let m = random_model(15);
+        let rows = vec![vec![1u16, 2, 3], vec![9u16, 8, 7, 6]];
+        let batch = forward_batch(&m, &rows);
+        for (i, row) in rows.iter().enumerate() {
+            let single = forward_full(&m, row);
+            assert_eq!(batch[i].data, single.data);
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Model substrate: configuration, weights, and the native inference
+//! engine (the deployment target that supports structurally-pruned
+//! shapes the fixed-shape PJRT graphs cannot express).
+
+pub mod capture;
+pub mod config;
+pub mod engine;
+pub mod weights;
+
+pub use config::{ModelConfig, Proj, N_PROJS, PROJS};
+pub use engine::{decode_step, forward_batch, forward_full, generate,
+                 DecodeState};
+pub use weights::{LayerWeights, ModelWeights};

@@ -1,0 +1,269 @@
+//! Model weights: loading from the artifact manifest + weights.bin, and
+//! the structural metadata the pruners mutate (masks, kept heads/channels).
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::model::config::{ModelConfig, Proj};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// One decoder layer's weights. Projections may be structurally sliced
+/// (kept_heads / kept_channels shrink the inner dimensions) and/or
+/// unstructured-pruned (zeros in the weight data).
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    pub attn_norm: Vec<f32>,
+    pub ffn_norm: Vec<f32>,
+    /// q, k, v, o, gate, up, down in canonical order.
+    pub projs: [Tensor; 7],
+    /// Attention head indices kept after structured pruning (sorted).
+    pub kept_heads: Vec<usize>,
+    /// FFN channel indices kept after structured pruning (sorted).
+    pub kept_channels: Vec<usize>,
+}
+
+impl LayerWeights {
+    pub fn proj(&self, p: Proj) -> &Tensor {
+        &self.projs[p as usize]
+    }
+    pub fn proj_mut(&mut self, p: Proj) -> &mut Tensor {
+        &mut self.projs[p as usize]
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelWeights {
+    pub cfg: ModelConfig,
+    pub embed: Tensor,
+    pub layers: Vec<LayerWeights>,
+    pub final_norm: Vec<f32>,
+    pub lm_head: Tensor,
+}
+
+impl ModelWeights {
+    /// Load from artifacts/models/<name>/ (manifest.json + weights.bin).
+    pub fn load(model_dir: &Path) -> Result<Self> {
+        let manifest = Json::parse(
+            &crate::util::read_to_string(&model_dir.join("manifest.json"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let cfg = ModelConfig::from_json(
+            manifest.get("config").context("manifest missing config")?,
+        )?;
+        let flat = crate::util::read_f32_file(&model_dir.join("weights.bin"))?;
+        let total = manifest
+            .get("total_f32")
+            .and_then(|v| v.as_usize())
+            .context("total_f32")?;
+        ensure!(flat.len() == total, "weights.bin size mismatch");
+
+        // param table: name -> (shape, offset)
+        let mut table = std::collections::HashMap::new();
+        for e in manifest
+            .get("params")
+            .and_then(|v| v.as_arr())
+            .context("params")?
+        {
+            let name = e.get("name").and_then(|v| v.as_str()).unwrap();
+            let shape: Vec<usize> = e
+                .get("shape")
+                .and_then(|v| v.as_arr())
+                .unwrap()
+                .iter()
+                .map(|s| s.as_usize().unwrap())
+                .collect();
+            let offset = e.get("offset").and_then(|v| v.as_usize()).unwrap();
+            table.insert(name.to_string(), (shape, offset));
+        }
+        let get = |name: &str| -> Result<Tensor> {
+            let (shape, offset) = table
+                .get(name)
+                .with_context(|| format!("param {name}"))?
+                .clone();
+            let numel: usize = shape.iter().product();
+            Ok(Tensor::new(
+                flat[offset..offset + numel].to_vec(),
+                shape,
+            ))
+        };
+
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for n in 0..cfg.n_layers {
+            layers.push(LayerWeights {
+                attn_norm: get(&format!("l{n}.attn_norm"))?.data,
+                ffn_norm: get(&format!("l{n}.ffn_norm"))?.data,
+                projs: [
+                    get(&format!("l{n}.q"))?,
+                    get(&format!("l{n}.k"))?,
+                    get(&format!("l{n}.v"))?,
+                    get(&format!("l{n}.o"))?,
+                    get(&format!("l{n}.gate"))?,
+                    get(&format!("l{n}.up"))?,
+                    get(&format!("l{n}.down"))?,
+                ],
+                kept_heads: (0..cfg.n_heads).collect(),
+                kept_channels: (0..cfg.ff_dim).collect(),
+            });
+        }
+        Ok(ModelWeights {
+            embed: get("embed")?,
+            final_norm: get("final_norm")?.data,
+            lm_head: get("lm_head")?,
+            cfg,
+            layers,
+        })
+    }
+
+    /// Flatten back to the canonical parameter order (PJRT input order).
+    /// Only valid for structurally-intact models (PJRT shapes are fixed).
+    pub fn to_flat(&self) -> Vec<Tensor> {
+        let mut out = vec![Tensor::new(
+            self.embed.data.clone(),
+            self.embed.shape.clone(),
+        )];
+        for l in &self.layers {
+            out.push(Tensor::new(l.attn_norm.clone(),
+                                 vec![l.attn_norm.len()]));
+            for p in [Proj::Q, Proj::K, Proj::V, Proj::O] {
+                out.push(l.proj(p).clone());
+            }
+            out.push(Tensor::new(l.ffn_norm.clone(),
+                                 vec![l.ffn_norm.len()]));
+            for p in [Proj::Gate, Proj::Up, Proj::Down] {
+                out.push(l.proj(p).clone());
+            }
+        }
+        out.push(Tensor::new(self.final_norm.clone(),
+                             vec![self.final_norm.len()]));
+        out.push(Tensor::new(self.lm_head.data.clone(),
+                             self.lm_head.shape.clone()));
+        out
+    }
+
+    /// Is the model structurally intact (PJRT-compatible shapes)?
+    pub fn is_dense_shape(&self) -> bool {
+        self.layers.iter().all(|l| {
+            l.kept_heads.len() == self.cfg.n_heads
+                && l.kept_channels.len() == self.cfg.ff_dim
+        })
+    }
+
+    /// Parameters remaining in projections (nonzero, post-slicing).
+    pub fn live_proj_params(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|l| l.projs.iter())
+            .map(|t| t.numel() - t.zero_count())
+            .sum()
+    }
+
+    /// Total projection slots after structural slicing (incl. zeros).
+    pub fn stored_proj_params(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|l| l.projs.iter())
+            .map(|t| t.numel())
+            .sum()
+    }
+
+    /// Model size in bytes if serialized dense f32 (structured slicing
+    /// shrinks this; unstructured zeros do not — the paper's key asymmetry).
+    pub fn model_bytes(&self) -> usize {
+        let fixed = self.embed.numel()
+            + self.lm_head.numel()
+            + self.final_norm.len()
+            + self
+                .layers
+                .iter()
+                .map(|l| l.attn_norm.len() + l.ffn_norm.len())
+                .sum::<usize>();
+        4 * (fixed + self.stored_proj_params())
+    }
+}
+
+/// Test helpers (used by unit, property and integration tests; kept in
+/// the library so `rust/tests/` targets can build random models without
+/// artifacts).
+pub mod testutil {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::util::rng::Pcg32;
+
+    /// Small random model for unit tests (no artifacts needed).
+    pub fn random_model(seed: u64) -> ModelWeights {
+        let cfg = ModelConfig {
+            name: "rand".into(),
+            proxy_for: "unit".into(),
+            n_layers: 2,
+            d_model: 16,
+            n_heads: 2,
+            ff_dim: 40,
+            ctx: 16,
+            vocab: 64,
+            head_dim: 8,
+            n_params: 0,
+        };
+        let mut r = Pcg32::seeded(seed);
+        let mut t = |shape: &[usize]| {
+            let n: usize = shape.iter().product();
+            Tensor::new(
+                (0..n).map(|_| r.normal() * 0.2).collect(),
+                shape.to_vec(),
+            )
+        };
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerWeights {
+                attn_norm: vec![1.0; cfg.d_model],
+                ffn_norm: vec![1.0; cfg.d_model],
+                projs: [
+                    t(&[16, 16]),
+                    t(&[16, 16]),
+                    t(&[16, 16]),
+                    t(&[16, 16]),
+                    t(&[16, 40]),
+                    t(&[16, 40]),
+                    t(&[40, 16]),
+                ],
+                kept_heads: (0..cfg.n_heads).collect(),
+                kept_channels: (0..cfg.ff_dim).collect(),
+            })
+            .collect();
+        ModelWeights {
+            embed: t(&[64, 16]),
+            lm_head: t(&[16, 64]),
+            final_norm: vec![1.0; 16],
+            cfg,
+            layers,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::random_model;
+
+    #[test]
+    fn flat_order_matches_manifest_convention() {
+        let m = random_model(1);
+        let flat = m.to_flat();
+        // embed + per-layer (norm + 4 + norm + 3) + final_norm + head
+        assert_eq!(flat.len(), 1 + m.cfg.n_layers * 9 + 2);
+        assert_eq!(flat[0].shape, vec![64, 16]);
+        assert_eq!(flat[1].shape, vec![16]); // l0.attn_norm
+        assert_eq!(flat[2].shape, vec![16, 16]); // l0.q
+        assert_eq!(flat[6].shape, vec![16]); // l0.ffn_norm
+        assert_eq!(flat[7].shape, vec![16, 40]); // l0.gate
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let mut m = random_model(2);
+        let dense = m.model_bytes();
+        // zeroing weights (unstructured) does NOT shrink bytes
+        m.layers[0].projs[0].data.iter_mut().for_each(|x| *x = 0.0);
+        assert_eq!(m.model_bytes(), dense);
+        assert!(m.live_proj_params() < m.stored_proj_params());
+    }
+}

@@ -1,0 +1,324 @@
+//! Deployment platform registry + analytic performance simulator.
+//!
+//! Substitutes the paper's five-host testbed (Tables I, VII, VIII):
+//! we cannot run on A100s/Orin/Pi5, so platforms are modeled by the
+//! quantities that drive Fig. 2 and Fig. 9 — GPU memory capacity,
+//! memory bandwidth, compute throughput and an offload (swap) path —
+//! and the simulator is *anchored to real measurements* of the native
+//! rust engine on this host (see `calibrate`).
+//!
+//! Mechanics reproduced:
+//!   * token-generation is bandwidth-bound: every generated token
+//!     streams the live model bytes;
+//!   * prefill is compute-bound: 2·params·tokens FLOPs;
+//!   * attention/activation memory grows with t² (Fig. 2);
+//!   * when required memory exceeds capacity, layers spill to storage
+//!     and latency multiplies (Fig. 9's P3/P5 cliff);
+//!   * unstructured zeros do NOT reduce bytes/latency — only structural
+//!     shrinkage does (the paper's central asymmetry).
+
+use crate::model::ModelWeights;
+
+#[derive(Debug, Clone)]
+pub struct Platform {
+    pub name: &'static str,
+    pub description: &'static str,
+    /// accelerator memory capacity (bytes)
+    pub mem_bytes: u64,
+    /// memory bandwidth (bytes/s)
+    pub bw: f64,
+    /// dense f32 compute throughput (FLOP/s)
+    pub flops: f64,
+    /// storage↔memory offload bandwidth (bytes/s); 0 = cannot offload
+    pub offload_bw: f64,
+    /// resident overhead: CUDA/libs/framework (bytes; paper notes this
+    /// varies per platform)
+    pub lib_overhead: u64,
+    pub has_gpu: bool,
+}
+
+const GB: u64 = 1 << 30;
+
+/// Table I / VII / VIII analogues. Throughput numbers are effective
+/// (≈50 % of peak), scaled so ratios between platforms match the paper.
+pub fn testbed() -> Vec<Platform> {
+    vec![
+        Platform {
+            name: "P1",
+            description: "2x A100 80GB (cloud server)",
+            mem_bytes: 160 * GB,
+            bw: 2.0 * 1935.0e9,
+            flops: 2.0 * 9.7e12,
+            offload_bw: 25.0e9,
+            lib_overhead: 2 * GB,
+            has_gpu: true,
+        },
+        Platform {
+            name: "P2",
+            description: "2x RTX A6000 48GB (cloud server)",
+            mem_bytes: 96 * GB,
+            bw: 2.0 * 768.0e9,
+            flops: 2.0 * 19.4e12,
+            offload_bw: 25.0e9,
+            lib_overhead: 2 * GB,
+            has_gpu: true,
+        },
+        Platform {
+            name: "P3",
+            description: "RTX 3080 10GB (consumer desktop)",
+            mem_bytes: 10 * GB,
+            bw: 760.0e9,
+            flops: 14.9e12,
+            offload_bw: 12.0e9,
+            lib_overhead: GB + GB / 2,
+            has_gpu: true,
+        },
+        Platform {
+            name: "P4",
+            description: "Jetson AGX Orin 64GB (edge SoC)",
+            mem_bytes: 64 * GB,
+            bw: 205.0e9,
+            flops: 2.7e12,
+            offload_bw: 2.0e9,
+            lib_overhead: GB,
+            has_gpu: true,
+        },
+        Platform {
+            name: "P5",
+            description: "Raspberry Pi 5 / VideoCore VII 4GB",
+            mem_bytes: 4 * GB,
+            bw: 15.0e9,
+            flops: 0.03e12,
+            offload_bw: 0.4e9,
+            lib_overhead: GB / 2,
+            has_gpu: false,
+        },
+    ]
+}
+
+pub fn by_name(name: &str) -> Option<Platform> {
+    testbed().into_iter().find(|p| p.name == name)
+}
+
+/// Workload for the simulator (MLPerf-style prefill + decode).
+#[derive(Debug, Clone, Copy)]
+pub struct Workload {
+    pub tokens_in: usize,
+    pub tokens_out: usize,
+    pub batch: usize,
+}
+
+impl Workload {
+    /// The paper's MLPerf configuration (P1–P4).
+    pub fn mlperf() -> Self {
+        Workload { tokens_in: 2048, tokens_out: 128, batch: 12 }
+    }
+    /// The paper's reduced P5 configuration.
+    pub fn edge() -> Self {
+        Workload { tokens_in: 128, tokens_out: 16, batch: 1 }
+    }
+}
+
+/// Scale-model description of a (possibly pruned) LLM, derived either
+/// from real `ModelWeights` or from paper-scale parameter counts.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelProfile {
+    /// stored bytes (structural size; unstructured zeros still count)
+    pub bytes: u64,
+    /// live parameters on the matmul path per token
+    pub live_params: u64,
+    /// d_model (activation row width)
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    /// weight element size (2 for fp16 paper models, 4 for our f32)
+    pub elem_bytes: u64,
+}
+
+impl ModelProfile {
+    pub fn from_weights(m: &ModelWeights) -> Self {
+        ModelProfile {
+            bytes: m.model_bytes() as u64,
+            live_params: m.live_proj_params() as u64
+                + (m.embed.numel() + m.lm_head.numel()) as u64,
+            d_model: m.cfg.d_model,
+            n_layers: m.cfg.n_layers,
+            n_heads: m.cfg.n_heads,
+            elem_bytes: 4,
+        }
+    }
+
+    /// Paper-scale profile, e.g. LLaMa-7B = 6.74e9 params fp16.
+    pub fn paper_scale(params: f64, n_layers: usize, d_model: usize,
+                       n_heads: usize) -> Self {
+        ModelProfile {
+            bytes: (params * 2.0) as u64,
+            live_params: params as u64,
+            d_model,
+            n_layers,
+            n_heads,
+            elem_bytes: 2,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct SimResult {
+    pub latency_s: f64,
+    pub mem_bytes: u64,
+    pub offloading: bool,
+    pub fits: bool,
+}
+
+/// Memory model: weights + KV cache + attention scores + activations +
+/// library overhead (Fig. 2's t² growth). Sequences stream through the
+/// batch dimension, so transient state is held for a bounded number of
+/// concurrent sequences (as serving runtimes do), not the whole batch.
+pub fn memory_required(p: &ModelProfile, w: &Workload) -> u64 {
+    let t = (w.tokens_in + w.tokens_out) as u64;
+    let conc = w.batch.min(2) as u64;
+    let kv = 2 * p.n_layers as u64 * t * p.d_model as u64 * p.elem_bytes
+        * conc;
+    let attn = p.n_heads as u64 * t * t * p.elem_bytes * conc;
+    let act = 8 * t * p.d_model as u64 * p.elem_bytes * conc;
+    p.bytes + kv + attn + act
+}
+
+/// Latency model (seconds) for prefill + decode on a platform.
+pub fn simulate(pf: &Platform, p: &ModelProfile, w: &Workload) -> SimResult {
+    let need = memory_required(p, w) + pf.lib_overhead;
+    let fits = need <= pf.mem_bytes;
+    let offloading = !fits && pf.offload_bw > 0.0;
+    // prefill: compute-bound, batched
+    let prefill_flops =
+        2.0 * p.live_params as f64 * w.tokens_in as f64 * w.batch as f64;
+    let mut prefill = prefill_flops / pf.flops;
+    // decode: bandwidth-bound, weight bytes streamed per token (batch
+    // amortizes the stream)
+    let mut decode =
+        w.tokens_out as f64 * p.bytes as f64 / pf.bw;
+    // attention score cost grows with context (Fig. 2 latency growth)
+    let t = (w.tokens_in + w.tokens_out) as f64;
+    let attn_flops = 2.0
+        * p.n_layers as f64
+        * t
+        * t
+        * p.d_model as f64
+        * w.batch as f64;
+    prefill += attn_flops / pf.flops;
+    if offloading {
+        // layers stream from storage every step: latency dominated by
+        // moving the non-resident fraction over the offload link
+        let resident = (pf.mem_bytes.saturating_sub(pf.lib_overhead)) as f64;
+        let spill = (need as f64 - resident).max(0.0).min(p.bytes as f64);
+        let per_pass = spill / pf.offload_bw;
+        prefill += per_pass;
+        decode += w.tokens_out as f64 * per_pass;
+    }
+    SimResult {
+        latency_s: prefill + decode,
+        mem_bytes: need.min(pf.mem_bytes).max(pf.lib_overhead),
+        offloading,
+        fits,
+    }
+}
+
+/// Can this platform run the model at all (paper: dense LLaMa-7B "cannot
+/// be run on P5")? No-GPU platforms with no offload path and over-capacity
+/// requirements cannot.
+pub fn can_run(pf: &Platform, p: &ModelProfile, w: &Workload) -> bool {
+    let need = memory_required(p, w) + pf.lib_overhead;
+    need <= pf.mem_bytes || pf.offload_bw > 0.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn llama7b() -> ModelProfile {
+        ModelProfile::paper_scale(6.74e9, 32, 4096, 32)
+    }
+
+    #[test]
+    fn testbed_has_five_platforms() {
+        let t = testbed();
+        assert_eq!(t.len(), 5);
+        assert!(t[0].bw > t[4].bw, "P1 faster than P5");
+        assert!(t[0].mem_bytes > t[2].mem_bytes);
+    }
+
+    #[test]
+    fn dense_7b_overflows_p3_and_p5() {
+        let m = llama7b();
+        let w = Workload::mlperf();
+        let p3 = by_name("P3").unwrap();
+        assert!(!simulate(&p3, &m, &w).fits, "13.5GB > 10GB must spill");
+        let p5 = by_name("P5").unwrap();
+        assert!(!simulate(&p5, &m, &Workload::edge()).fits);
+    }
+
+    #[test]
+    fn pruning_reduces_latency_and_memory() {
+        let dense = llama7b();
+        let mut half = dense;
+        half.bytes /= 2;
+        half.live_params /= 2;
+        let w = Workload::mlperf();
+        for pf in testbed() {
+            let a = simulate(&pf, &dense, &w);
+            let b = simulate(&pf, &half, &w);
+            assert!(b.latency_s < a.latency_s, "{}", pf.name);
+            assert!(b.mem_bytes <= a.mem_bytes);
+        }
+    }
+
+    #[test]
+    fn offload_cliff_on_p3() {
+        // Fig. 9: once the model fits under 10GB, latency drops ~30x
+        let w = Workload::mlperf();
+        let p3 = by_name("P3").unwrap();
+        let dense = llama7b();
+        let over = simulate(&p3, &dense, &w);
+        let mut small = dense;
+        small.bytes = 4 * (1 << 30); // 4 GB model fits
+        small.live_params = 2_000_000_000;
+        let under = simulate(&p3, &small, &w);
+        assert!(over.offloading && !under.offloading);
+        assert!(
+            over.latency_s / under.latency_s > 5.0,
+            "cliff ratio {}",
+            over.latency_s / under.latency_s
+        );
+    }
+
+    #[test]
+    fn memory_grows_quadratically_with_tokens() {
+        // Fig. 2: 4096-token memory >> 128-token memory
+        let m = ModelProfile::paper_scale(13.02e9, 40, 5120, 40);
+        let short = memory_required(
+            &m,
+            &Workload { tokens_in: 128, tokens_out: 0, batch: 1 },
+        );
+        let long = memory_required(
+            &m,
+            &Workload { tokens_in: 4096, tokens_out: 0, batch: 1 },
+        );
+        let growth = (long - m.bytes) as f64 / (short - m.bytes) as f64;
+        assert!(growth > 30.0, "t^2 term must dominate: {growth}");
+    }
+
+    #[test]
+    fn unstructured_zeros_do_not_help_runtime() {
+        // same bytes, fewer live params: decode latency unchanged
+        let dense = llama7b();
+        let mut sparse = dense;
+        sparse.live_params /= 2; // zeros, bytes unchanged
+        let w = Workload::mlperf();
+        let pf = by_name("P1").unwrap();
+        let a = simulate(&pf, &dense, &w);
+        let b = simulate(&pf, &sparse, &w);
+        // decode dominated by bytes -> latency within a few percent
+        assert!((a.mem_bytes as i64 - b.mem_bytes as i64).abs() < 1024);
+        assert!(b.latency_s > 0.5 * a.latency_s);
+    }
+}

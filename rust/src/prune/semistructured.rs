@@ -1,0 +1,141 @@
+//! N:M semi-structured pruning — the format CUTLASS/sparse tensor cores
+//! accelerate (the paper §VI: unstructured models "require ... a
+//! specific *semi-structured* format", 2:4 at 50 %). Within every group
+//! of M consecutive weights along the input dimension, keep the N
+//! highest-scoring and zero the rest. Hardware-agnostic here, but the
+//! mask layout is exactly what a 2:4 sparse MMA consumes, and it gives
+//! the Post-Pruning Optimizer a CUTLASS-exportable variant.
+
+use crate::model::config::Proj;
+use crate::model::ModelWeights;
+use crate::rank::ActivationStats;
+use crate::tensor::Tensor;
+
+/// Prune one projection to the N:M pattern along the input (row) axis.
+/// `scores` follow unstructured::scores conventions (higher = keep).
+pub fn nm_prune_projection(w: &mut Tensor, scores: &[f64], n: usize, m: usize) {
+    assert!(n <= m && m >= 1);
+    let (k, cols) = (w.shape[0], w.shape[1]);
+    // groups run down the input dimension for each output column,
+    // matching the GEMM's reduction axis (what sparse MMA compresses)
+    for c in 0..cols {
+        let mut g0 = 0;
+        while g0 < k {
+            let g1 = (g0 + m).min(k);
+            // rank the group's members
+            let mut idx: Vec<usize> = (g0..g1).collect();
+            idx.sort_by(|&a, &b| {
+                scores[b * cols + c]
+                    .partial_cmp(&scores[a * cols + c])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+            for &i in idx.iter().skip(n) {
+                w.data[i * cols + c] = 0.0;
+            }
+            g0 = g1;
+        }
+    }
+}
+
+/// 2:4 pattern over every projection (the CUTLASS-accelerated 50 %).
+pub fn prune_nm(
+    model: &mut ModelWeights,
+    stats: Option<&ActivationStats>,
+    n: usize,
+    m: usize,
+) {
+    for l in 0..model.layers.len() {
+        for (pi, &p) in Proj::all().iter().enumerate() {
+            let act = stats.map(|s| s.act_sq[l][pi].as_slice());
+            let w = model.layers[l].proj_mut(p);
+            let sc = super::unstructured::scores(
+                w,
+                act,
+                if act.is_some() {
+                    super::Metric::Wanda
+                } else {
+                    super::Metric::Magnitude
+                },
+            );
+            nm_prune_projection(w, &sc, n, m);
+        }
+    }
+}
+
+/// Verify a tensor satisfies the N:M constraint (tests + deployer gate).
+pub fn check_nm(w: &Tensor, n: usize, m: usize) -> bool {
+    let (k, cols) = (w.shape[0], w.shape[1]);
+    for c in 0..cols {
+        let mut g0 = 0;
+        while g0 < k {
+            let g1 = (g0 + m).min(k);
+            let nonzero = (g0..g1)
+                .filter(|&i| w.data[i * cols + c] != 0.0)
+                .count();
+            if nonzero > n {
+                return false;
+            }
+            g0 = g1;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::testutil::random_model;
+    use crate::util::rng::Pcg32;
+
+    fn rand_t(seed: u64, k: usize, c: usize) -> Tensor {
+        let mut r = Pcg32::seeded(seed);
+        Tensor::new((0..k * c).map(|_| r.normal()).collect(), vec![k, c])
+    }
+
+    #[test]
+    fn two_four_pattern_holds() {
+        let mut w = rand_t(1, 16, 12);
+        let sc: Vec<f64> = w.data.iter().map(|x| x.abs() as f64).collect();
+        nm_prune_projection(&mut w, &sc, 2, 4);
+        assert!(check_nm(&w, 2, 4));
+        assert!((w.sparsity() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn keeps_largest_in_group() {
+        // column of 4: keep the two largest magnitudes
+        let mut w = Tensor::new(vec![0.1, 0.9, 0.5, 0.2], vec![4, 1]);
+        let sc: Vec<f64> = w.data.iter().map(|x| x.abs() as f64).collect();
+        nm_prune_projection(&mut w, &sc, 2, 4);
+        assert_eq!(w.data, vec![0.0, 0.9, 0.5, 0.0]);
+    }
+
+    #[test]
+    fn ragged_tail_group() {
+        // k=6, m=4: tail group of 2 keeps at most n
+        let mut w = rand_t(2, 6, 3);
+        let sc: Vec<f64> = w.data.iter().map(|x| x.abs() as f64).collect();
+        nm_prune_projection(&mut w, &sc, 1, 4);
+        assert!(check_nm(&w, 1, 4));
+    }
+
+    #[test]
+    fn model_level_two_four() {
+        let mut m = random_model(301);
+        prune_nm(&mut m, None, 2, 4);
+        for l in &m.layers {
+            for p in &l.projs {
+                assert!(check_nm(p, 2, 4));
+            }
+        }
+        // model still runs
+        let out = crate::model::engine::forward_full(&m, &[1, 2, 3]);
+        assert!(out.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn check_nm_detects_violation() {
+        let w = Tensor::new(vec![1.0, 1.0, 1.0, 1.0], vec![4, 1]);
+        assert!(!check_nm(&w, 2, 4));
+    }
+}

@@ -1,0 +1,282 @@
+//! SparseGPT-style one-shot unstructured pruning (the paper's §V-A3
+//! default: "prune the lowest ranking parameters using the inverse
+//! Hessian matrix and a subsequent weight update").
+//!
+//! Per projection W (in × out) with calibration Gram H = XᵀX:
+//!   1. dampen H, invert via Cholesky;
+//!   2. saliency metric m[j,o] = w[j,o]² / H⁻¹[j,j]  (OBS saliency);
+//!   3. mask the lowest `target` fraction;
+//!   4. sequential OBS update: zeroing (j,o) compensates the remaining
+//!      rows r>j by  w[r,o] -= (w[j,o]/H⁻¹[j,j])·H⁻¹[r,j].
+
+use crate::model::capture::HessianStats;
+use crate::model::config::Proj;
+use crate::model::ModelWeights;
+use crate::prune::planner::PruningPlan;
+use crate::tensor::Tensor;
+use crate::util::threadpool::par_for;
+
+/// Cholesky factorization (lower) of a symmetric positive-definite
+/// matrix in f64. Returns None if not PD.
+pub fn cholesky(a: &[f64], k: usize) -> Option<Vec<f64>> {
+    let mut l = vec![0f64; k * k];
+    for i in 0..k {
+        for j in 0..=i {
+            let mut s = a[i * k + j];
+            for m in 0..j {
+                s -= l[i * k + m] * l[j * k + m];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l[i * k + i] = s.sqrt();
+            } else {
+                l[i * k + j] = s / l[j * k + j];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Inverse of an SPD matrix via Cholesky (solve L Lᵀ X = I).
+pub fn spd_inverse(a: &[f64], k: usize) -> Option<Vec<f64>> {
+    let l = cholesky(a, k)?;
+    let mut inv = vec![0f64; k * k];
+    // solve for each unit vector
+    let mut y = vec![0f64; k];
+    for col in 0..k {
+        // forward: L y = e_col
+        for i in 0..k {
+            let mut s = if i == col { 1.0 } else { 0.0 };
+            for m in 0..i {
+                s -= l[i * k + m] * y[m];
+            }
+            y[i] = s / l[i * k + i];
+        }
+        // backward: Lᵀ x = y
+        for i in (0..k).rev() {
+            let mut s = y[i];
+            for m in i + 1..k {
+                s -= l[m * k + i] * inv[m * k + col];
+            }
+            inv[i * k + col] = s / l[i * k + i];
+        }
+    }
+    Some(inv)
+}
+
+/// Prune one projection in place with OBS compensation.
+/// `gram`: (K×K) calibration Gram matrix; `target`: sparsity fraction.
+pub fn sparsegpt_prune_projection(
+    w: &mut Tensor,
+    gram: &Tensor,
+    target: f64,
+) {
+    let (k, m) = (w.shape[0], w.shape[1]);
+    if target <= 0.0 {
+        return;
+    }
+    // dampened Hessian in f64
+    let mut h = vec![0f64; k * k];
+    let mut diag_mean = 0f64;
+    for i in 0..k {
+        diag_mean += gram.at2(i, i) as f64;
+    }
+    diag_mean /= k as f64;
+    let lambda = 0.01 * diag_mean + 1e-8;
+    for i in 0..k * k {
+        h[i] = gram.data[i] as f64;
+    }
+    for i in 0..k {
+        h[i * k + i] += lambda;
+    }
+    let hinv = match spd_inverse(&h, k) {
+        Some(v) => v,
+        None => {
+            // fall back to magnitude masking if H is degenerate
+            let sc: Vec<f64> =
+                w.data.iter().map(|x| x.abs() as f64).collect();
+            super::unstructured::mask_lowest(w, &sc, target);
+            return;
+        }
+    };
+    // saliency metric and mask selection
+    let mut scores = vec![0f64; k * m];
+    for j in 0..k {
+        let d = hinv[j * k + j].max(1e-12);
+        for o in 0..m {
+            let wv = w.data[j * m + o] as f64;
+            scores[j * m + o] = wv * wv / d;
+        }
+    }
+    let n_prune = ((k * m) as f64 * target).round() as usize;
+    if n_prune == 0 {
+        return;
+    }
+    let mut idx: Vec<u32> = (0..(k * m) as u32).collect();
+    idx.select_nth_unstable_by(n_prune.min(k * m) - 1, |&a, &b| {
+        scores[a as usize]
+            .partial_cmp(&scores[b as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut mask = vec![false; k * m];
+    for &i in &idx[..n_prune.min(k * m)] {
+        mask[i as usize] = true;
+    }
+    // sequential OBS update, parallel over output columns
+    let wcols = std::sync::Mutex::new(&mut w.data);
+    {
+        let hinv = &hinv;
+        let mask = &mask;
+        // extract columns, process, write back (columns independent)
+        let mut cols: Vec<Vec<f32>> = {
+            let wd = wcols.lock().unwrap();
+            (0..m)
+                .map(|o| (0..k).map(|j| wd[j * m + o]).collect())
+                .collect()
+        };
+        par_for(m, |_| {}); // warm pool (no-op)
+        crate::util::threadpool::par_chunks_mut(&mut cols, 1, |o, ch| {
+            let col = &mut ch[0];
+            for j in 0..k {
+                if !mask[j * m + o] {
+                    continue;
+                }
+                let d = hinv[j * k + j].max(1e-12);
+                let e = col[j] as f64 / d;
+                col[j] = 0.0;
+                // propagate to ALL later rows (masked rows included:
+                // their own error is computed from the updated value
+                // when reached — matches SparseGPT's sequential sweep)
+                for r in j + 1..k {
+                    col[r] -= (e * hinv[r * k + j]) as f32;
+                }
+            }
+            // zero masked entries (sweep leaves them exactly 0 already,
+            // but be defensive against fp drift)
+            for j in 0..k {
+                if mask[j * m + o] {
+                    col[j] = 0.0;
+                }
+            }
+        });
+        let wd = &mut *wcols.lock().unwrap();
+        for (o, col) in cols.iter().enumerate() {
+            for j in 0..k {
+                wd[j * m + o] = col[j];
+            }
+        }
+    }
+}
+
+/// Apply the plan with SparseGPT to every projection.
+pub fn prune_sparsegpt(
+    m: &mut ModelWeights,
+    plan: &PruningPlan,
+    hess: &HessianStats,
+) {
+    for l in 0..m.layers.len() {
+        for (pi, &p) in Proj::all().iter().enumerate() {
+            let target = plan.targets[l][pi];
+            let gram = hess.gram[l][pi].clone();
+            let w = m.layers[l].proj_mut(p);
+            sparsegpt_prune_projection(w, &gram, target);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul;
+    use crate::util::rng::Pcg32;
+
+    fn rand_mat(r: &mut Pcg32, rows: usize, cols: usize) -> Tensor {
+        Tensor::new(
+            (0..rows * cols).map(|_| r.normal()).collect(),
+            vec![rows, cols],
+        )
+    }
+
+    #[test]
+    fn cholesky_identity() {
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let l = cholesky(&a, 2).unwrap();
+        assert_eq!(l, vec![1.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn spd_inverse_correct() {
+        let a = vec![4.0, 2.0, 2.0, 3.0];
+        let inv = spd_inverse(&a, 2).unwrap();
+        // a * inv == I
+        let prod = [
+            a[0] * inv[0] + a[1] * inv[2],
+            a[0] * inv[1] + a[1] * inv[3],
+            a[2] * inv[0] + a[3] * inv[2],
+            a[2] * inv[1] + a[3] * inv[3],
+        ];
+        assert!((prod[0] - 1.0).abs() < 1e-10);
+        assert!(prod[1].abs() < 1e-10);
+        assert!(prod[2].abs() < 1e-10);
+        assert!((prod[3] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn achieves_target_sparsity() {
+        let mut r = Pcg32::seeded(61);
+        let x = rand_mat(&mut r, 64, 16);
+        let mut w = rand_mat(&mut r, 16, 24);
+        let gram = matmul(&x.transpose2(), &x);
+        sparsegpt_prune_projection(&mut w, &gram, 0.5);
+        let s = w.sparsity();
+        assert!((s - 0.5).abs() < 0.05, "sparsity {s}");
+    }
+
+    #[test]
+    fn obs_beats_magnitude_on_reconstruction() {
+        // correlated inputs: OBS compensation should reconstruct X@W
+        // better than plain magnitude masking at the same sparsity.
+        let mut r = Pcg32::seeded(62);
+        let base = rand_mat(&mut r, 128, 8);
+        // make inputs correlated: x = base @ mix
+        let mix = rand_mat(&mut r, 8, 16);
+        let x = matmul(&base, &mix);
+        let w = rand_mat(&mut r, 16, 12);
+        let y_ref = matmul(&x, &w);
+        let gram = matmul(&x.transpose2(), &x);
+
+        let mut w_obs = w.clone();
+        sparsegpt_prune_projection(&mut w_obs, &gram, 0.6);
+        let mut w_mag = w.clone();
+        let sc: Vec<f64> =
+            w_mag.data.iter().map(|v| v.abs() as f64).collect();
+        super::super::unstructured::mask_lowest(&mut w_mag, &sc, 0.6);
+
+        let err = |wp: &Tensor| -> f64 {
+            let y = matmul(&x, wp);
+            y.data
+                .iter()
+                .zip(y_ref.data.iter())
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum()
+        };
+        let (e_obs, e_mag) = (err(&w_obs), err(&w_mag));
+        assert!(
+            e_obs < e_mag,
+            "OBS {e_obs:.3} should beat magnitude {e_mag:.3}"
+        );
+    }
+
+    #[test]
+    fn zero_target_noop() {
+        let mut r = Pcg32::seeded(63);
+        let x = rand_mat(&mut r, 32, 8);
+        let gram = matmul(&x.transpose2(), &x);
+        let w0 = rand_mat(&mut r, 8, 8);
+        let mut w = w0.clone();
+        sparsegpt_prune_projection(&mut w, &gram, 0.0);
+        assert_eq!(w.data, w0.data);
+    }
+}

@@ -1,0 +1,242 @@
+//! Structured projection pruning (LLM-Pruner-style, Figure 4): remove
+//! whole attention heads and FFN channels as dependency-consistent
+//! groups, *shrinking* the stored matrices (unlike unstructured masks).
+//!
+//! Group semantics:
+//!   * an attention head h groups the dh output columns of Q/K/V and the
+//!     dh input rows of O;
+//!   * an FFN channel c groups one output column of Gate/Up and one
+//!     input row of Down.
+//!
+//! Per-projection targets from the planner are averaged over each
+//! group's members (q,k,v,o → head fraction; gate,up,down → channel
+//! fraction) because a group removal affects all of them at once.
+
+use crate::model::config::Proj;
+use crate::model::{LayerWeights, ModelWeights};
+use crate::prune::planner::PruningPlan;
+use crate::tensor::Tensor;
+
+/// ℓ2 importance of each attention head in a layer (over q,k,v out
+/// columns and o in rows).
+pub fn head_importance(l: &LayerWeights, head_dim: usize) -> Vec<f64> {
+    let n_heads = l.kept_heads.len();
+    let mut imp = vec![0f64; n_heads];
+    for (h, imp_h) in imp.iter_mut().enumerate() {
+        let cols = h * head_dim..(h + 1) * head_dim;
+        for p in [Proj::Q, Proj::K, Proj::V] {
+            let w = l.proj(p);
+            let m = w.shape[1];
+            for i in 0..w.shape[0] {
+                for j in cols.clone() {
+                    let v = w.data[i * m + j] as f64;
+                    *imp_h += v * v;
+                }
+            }
+        }
+        let o = l.proj(Proj::O);
+        let m = o.shape[1];
+        for i in cols.clone() {
+            for j in 0..m {
+                let v = o.data[i * m + j] as f64;
+                *imp_h += v * v;
+            }
+        }
+    }
+    imp
+}
+
+/// ℓ2 importance of each FFN channel (gate/up out column + down in row).
+pub fn channel_importance(l: &LayerWeights) -> Vec<f64> {
+    let n_ch = l.kept_channels.len();
+    let mut imp = vec![0f64; n_ch];
+    for p in [Proj::Gate, Proj::Up] {
+        let w = l.proj(p);
+        let m = w.shape[1];
+        for i in 0..w.shape[0] {
+            for (c, imp_c) in imp.iter_mut().enumerate() {
+                let v = w.data[i * m + c] as f64;
+                *imp_c += v * v;
+            }
+        }
+    }
+    let d = l.proj(Proj::Down);
+    let m = d.shape[1];
+    for (c, imp_c) in imp.iter_mut().enumerate() {
+        for j in 0..m {
+            let v = d.data[c * m + j] as f64;
+            *imp_c += v * v;
+        }
+    }
+    imp
+}
+
+/// Select the `keep` highest-importance indices, sorted ascending.
+fn keep_top(imp: &[f64], keep: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..imp.len()).collect();
+    idx.sort_by(|&a, &b| {
+        imp[b].partial_cmp(&imp[a]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut kept: Vec<usize> = idx.into_iter().take(keep).collect();
+    kept.sort_unstable();
+    kept
+}
+
+/// Slice columns (`dim=1`) or rows (`dim=0`) of a matrix, keeping the
+/// given group indices expanded by `group_size`.
+pub fn slice_groups(
+    w: &Tensor,
+    kept_groups: &[usize],
+    group_size: usize,
+    dim: usize,
+) -> Tensor {
+    let (r, c) = (w.shape[0], w.shape[1]);
+    let kept: Vec<usize> = kept_groups
+        .iter()
+        .flat_map(|&g| g * group_size..(g + 1) * group_size)
+        .collect();
+    match dim {
+        1 => {
+            let mut out = Tensor::zeros(&[r, kept.len()]);
+            for i in 0..r {
+                for (jj, &j) in kept.iter().enumerate() {
+                    out.data[i * kept.len() + jj] = w.data[i * c + j];
+                }
+            }
+            out
+        }
+        0 => {
+            let mut out = Tensor::zeros(&[kept.len(), c]);
+            for (ii, &i) in kept.iter().enumerate() {
+                out.row_mut(ii).copy_from_slice(w.row(i));
+            }
+            out
+        }
+        _ => panic!("dim must be 0 or 1"),
+    }
+}
+
+/// Structurally prune one layer to `head_frac` / `chan_frac` removal.
+pub fn prune_layer_structured(
+    l: &mut LayerWeights,
+    head_dim: usize,
+    head_frac: f64,
+    chan_frac: f64,
+) {
+    // ---- heads
+    let n_heads = l.kept_heads.len();
+    let keep_h = ((n_heads as f64) * (1.0 - head_frac)).round() as usize;
+    let keep_h = keep_h.clamp(1, n_heads);
+    if keep_h < n_heads {
+        let imp = head_importance(l, head_dim);
+        let kept = keep_top(&imp, keep_h);
+        for p in [Proj::Q, Proj::K, Proj::V] {
+            *l.proj_mut(p) = slice_groups(l.proj(p), &kept, head_dim, 1);
+        }
+        *l.proj_mut(Proj::O) =
+            slice_groups(l.proj(Proj::O), &kept, head_dim, 0);
+        l.kept_heads = kept.iter().map(|&k| l.kept_heads[k]).collect();
+    }
+    // ---- channels
+    let n_ch = l.kept_channels.len();
+    let keep_c = ((n_ch as f64) * (1.0 - chan_frac)).round() as usize;
+    let keep_c = keep_c.clamp(1, n_ch);
+    if keep_c < n_ch {
+        let imp = channel_importance(l);
+        let kept = keep_top(&imp, keep_c);
+        for p in [Proj::Gate, Proj::Up] {
+            *l.proj_mut(p) = slice_groups(l.proj(p), &kept, 1, 1);
+        }
+        *l.proj_mut(Proj::Down) =
+            slice_groups(l.proj(Proj::Down), &kept, 1, 0);
+        l.kept_channels = kept.iter().map(|&k| l.kept_channels[k]).collect();
+    }
+}
+
+/// Apply the plan with structured pruning: per layer, the head fraction
+/// is the mean of the q,k,v,o targets and the channel fraction the mean
+/// of gate,up,down.
+pub fn prune_structured(m: &mut ModelWeights, plan: &PruningPlan) {
+    let head_dim = m.cfg.head_dim;
+    for (l, layer) in m.layers.iter_mut().enumerate() {
+        let t = &plan.targets[l];
+        let head_frac = (t[0] + t[1] + t[2] + t[3]) / 4.0;
+        let chan_frac = (t[4] + t[5] + t[6]) / 3.0;
+        prune_layer_structured(layer, head_dim, head_frac, chan_frac);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::engine::forward_full;
+    use crate::model::weights::testutil::random_model;
+    use crate::prune::planner::{plan, Uniformity};
+    use crate::rank::GlobalRank;
+
+    #[test]
+    fn shapes_shrink_consistently() {
+        let mut m = random_model(71);
+        let g = GlobalRank { rank: vec![vec![1.0; 7]; 2], alpha: 5.0 };
+        let pl = plan(&g, 0.5, Uniformity::Global);
+        let before = m.model_bytes();
+        prune_structured(&mut m, &pl);
+        assert!(m.model_bytes() < before, "SP must shrink bytes");
+        for l in &m.layers {
+            let hk = l.kept_heads.len();
+            assert_eq!(l.proj(Proj::Q).shape[1], hk * m.cfg.head_dim);
+            assert_eq!(l.proj(Proj::O).shape[0], hk * m.cfg.head_dim);
+            let c = l.kept_channels.len();
+            assert_eq!(l.proj(Proj::Gate).shape[1], c);
+            assert_eq!(l.proj(Proj::Down).shape[0], c);
+        }
+    }
+
+    #[test]
+    fn pruned_model_still_runs() {
+        let mut m = random_model(72);
+        let g = GlobalRank { rank: vec![vec![1.0; 7]; 2], alpha: 5.0 };
+        let pl = plan(&g, 0.5, Uniformity::Global);
+        prune_structured(&mut m, &pl);
+        let logits = forward_full(&m, &[1, 2, 3, 4]);
+        assert_eq!(logits.shape, vec![4, m.cfg.vocab]);
+        assert!(logits.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn keeps_most_important_head() {
+        let mut m = random_model(73);
+        // inflate head 1 of layer 0 (columns dh..2dh of q/k/v)
+        let dh = m.cfg.head_dim;
+        for p in [Proj::Q, Proj::K, Proj::V] {
+            let w = m.layers[0].proj_mut(p);
+            let cols = w.shape[1];
+            for i in 0..w.shape[0] {
+                for j in dh..2 * dh {
+                    w.data[i * cols + j] *= 10.0;
+                }
+            }
+        }
+        let imp = head_importance(&m.layers[0], dh);
+        assert!(imp[1] > imp[0]);
+        prune_layer_structured(&mut m.layers[0], dh, 0.5, 0.0);
+        assert_eq!(m.layers[0].kept_heads, vec![1]);
+    }
+
+    #[test]
+    fn never_removes_all() {
+        let mut m = random_model(74);
+        prune_layer_structured(&mut m.layers[0], m.cfg.head_dim, 0.99, 0.99);
+        assert!(!m.layers[0].kept_heads.is_empty());
+        assert!(!m.layers[0].kept_channels.is_empty());
+    }
+
+    #[test]
+    fn zero_fraction_noop() {
+        let mut m = random_model(75);
+        let orig = m.clone();
+        prune_layer_structured(&mut m.layers[0], m.cfg.head_dim, 0.0, 0.0);
+        assert_eq!(m.layers[0].projs[0].data, orig.layers[0].projs[0].data);
+        assert_eq!(m.layers[0].kept_heads, orig.layers[0].kept_heads);
+    }
+}

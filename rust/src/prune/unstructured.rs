@@ -1,0 +1,182 @@
+//! Unstructured pruning: mask the lowest-ranking weights to zero.
+//!
+//! Two metrics are provided (both paper baselines):
+//!   * magnitude — |w|                          (Magnitude baseline)
+//!   * wanda     — ‖A‖₂ · |w| per input feature (Wanda / Eq. 3+5)
+//!
+//! The model's size does not change (the paper's point about UP): only
+//! zeros are introduced, so `model_bytes()` stays constant while
+//! `live_proj_params()` drops.
+
+use crate::model::config::Proj;
+use crate::model::ModelWeights;
+use crate::prune::planner::PruningPlan;
+use crate::rank::ActivationStats;
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    Magnitude,
+    Wanda,
+}
+
+/// Zero the lowest `target` fraction of a projection by `scores`
+/// (in-place). Returns the number of weights zeroed.
+pub fn mask_lowest(w: &mut Tensor, scores: &[f64], target: f64) -> usize {
+    assert_eq!(scores.len(), w.numel());
+    let n = w.numel();
+    let n_prune = ((n as f64) * target).round() as usize;
+    if n_prune == 0 {
+        return 0;
+    }
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    let k = n_prune.min(n);
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        scores[a as usize]
+            .partial_cmp(&scores[b as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut zeroed = 0;
+    for &i in &idx[..k] {
+        if w.data[i as usize] != 0.0 {
+            zeroed += 1;
+        }
+        w.data[i as usize] = 0.0;
+    }
+    zeroed
+}
+
+/// Score every weight of a projection under the chosen metric.
+pub fn scores(
+    w: &Tensor,
+    act_sq: Option<&[f32]>,
+    metric: Metric,
+) -> Vec<f64> {
+    let (k, m) = (w.shape[0], w.shape[1]);
+    let mut s = vec![0f64; k * m];
+    match metric {
+        Metric::Magnitude => {
+            for i in 0..k * m {
+                s[i] = w.data[i].abs() as f64;
+            }
+        }
+        Metric::Wanda => {
+            let act = act_sq.expect("wanda needs activation stats");
+            for i in 0..k {
+                let a = (act[i] as f64).sqrt();
+                for j in 0..m {
+                    s[i * m + j] = a * w.data[i * m + j].abs() as f64;
+                }
+            }
+        }
+    }
+    s
+}
+
+/// Apply the plan with unstructured masking to every projection.
+pub fn prune_unstructured(
+    m: &mut ModelWeights,
+    plan: &PruningPlan,
+    stats: Option<&ActivationStats>,
+    metric: Metric,
+) {
+    for l in 0..m.layers.len() {
+        for (pi, &p) in Proj::all().iter().enumerate() {
+            let target = plan.targets[l][pi];
+            let act = stats.map(|s| s.act_sq[l][pi].as_slice());
+            let w = m.layers[l].proj_mut(p);
+            let sc = scores(w, act, metric);
+            mask_lowest(w, &sc, target);
+        }
+    }
+}
+
+/// Measured sparsity of the prunable (projection) parameters.
+pub fn projection_sparsity(m: &ModelWeights) -> f64 {
+    let total: usize = m
+        .layers
+        .iter()
+        .flat_map(|l| l.projs.iter())
+        .map(|t| t.numel())
+        .sum();
+    let zeros: usize = m
+        .layers
+        .iter()
+        .flat_map(|l| l.projs.iter())
+        .map(|t| t.zero_count())
+        .sum();
+    zeros as f64 / total.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::testutil::random_model;
+    use crate::prune::planner::{plan, Uniformity};
+    use crate::rank::GlobalRank;
+
+    fn uniform_rank(layers: usize) -> GlobalRank {
+        GlobalRank { rank: vec![vec![1.0; 7]; layers], alpha: 5.0 }
+    }
+
+    #[test]
+    fn mask_exact_fraction() {
+        let mut w = Tensor::new((1..=100).map(|x| x as f32).collect(),
+                                vec![10, 10]);
+        let sc = scores(&w, None, Metric::Magnitude);
+        mask_lowest(&mut w, &sc, 0.3);
+        assert_eq!(w.zero_count(), 30);
+        // lowest magnitudes (1..=30) gone, 31.. kept
+        assert_eq!(w.data[29], 0.0);
+        assert_eq!(w.data[30], 31.0);
+    }
+
+    #[test]
+    fn plan_sparsity_achieved() {
+        let mut m = random_model(51);
+        let g = uniform_rank(m.cfg.n_layers);
+        let pl = plan(&g, 0.5, Uniformity::Global);
+        prune_unstructured(&mut m, &pl, None, Metric::Magnitude);
+        let s = projection_sparsity(&m);
+        assert!((s - 0.5).abs() < 0.02, "sparsity {s}");
+    }
+
+    #[test]
+    fn model_bytes_unchanged_by_unstructured() {
+        let mut m = random_model(52);
+        let before = m.model_bytes();
+        let g = uniform_rank(m.cfg.n_layers);
+        let pl = plan(&g, 0.8, Uniformity::Global);
+        prune_unstructured(&mut m, &pl, None, Metric::Magnitude);
+        assert_eq!(m.model_bytes(), before, "UP must not shrink bytes");
+        assert!(projection_sparsity(&m) > 0.75);
+    }
+
+    #[test]
+    fn wanda_prefers_high_activation_rows() {
+        // two input features; feature 0 has huge activations -> its
+        // weights score higher -> pruned less
+        let mut w = Tensor::new(vec![0.1, 0.1, 0.2, 0.2], vec![2, 2]);
+        let act = vec![100.0f32, 0.01];
+        let sc = scores(&w, Some(&act), Metric::Wanda);
+        mask_lowest(&mut w, &sc, 0.5);
+        assert!(w.data[0] != 0.0 && w.data[1] != 0.0,
+                "high-activation row kept: {:?}", w.data);
+        assert_eq!(w.data[2], 0.0);
+        assert_eq!(w.data[3], 0.0);
+    }
+
+    #[test]
+    fn zero_target_is_noop() {
+        let mut m = random_model(53);
+        let orig = m.clone();
+        let g = uniform_rank(m.cfg.n_layers);
+        let pl = plan(&g, 0.0, Uniformity::Projection);
+        prune_unstructured(&mut m, &pl, None, Metric::Magnitude);
+        for (a, b) in m.layers.iter().zip(orig.layers.iter()) {
+            for (x, y) in a.projs.iter().zip(b.projs.iter()) {
+                assert_eq!(x.data, y.data);
+            }
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! GPTQ-lite: group-wise symmetric quantizer with error feedback.
+
+use crate::model::config::Proj;
+use crate::model::ModelWeights;
+use crate::rank::ActivationStats;
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone, Copy)]
+pub struct QuantConfig {
+    pub bits: u32,
+    /// rows per quantization group (GPTQ's `group` hyperparameter; the
+    /// paper uses 128)
+    pub group: usize,
+}
+
+impl QuantConfig {
+    pub fn new(bits: u32) -> Self {
+        QuantConfig { bits, group: 128 }
+    }
+    /// q ∈ [-qmax, qmax]
+    pub fn qmax(&self) -> i32 {
+        (1 << (self.bits - 1)) - 1
+    }
+    /// Weight-file compression vs f16 (the paper's Comp. column compares
+    /// against FP16 storage; scales add ~0.5 bit per group element).
+    pub fn compression_vs_f16(&self, group: usize) -> f64 {
+        let bits_per_w = self.bits as f64 + 16.0 / group as f64;
+        16.0 / bits_per_w
+    }
+}
+
+/// Quantize one projection in place (simulated: store dequantized f32).
+/// Returns the mean squared quantization error.
+pub fn quantize_projection(
+    w: &mut Tensor,
+    act_sq: Option<&[f32]>,
+    cfg: QuantConfig,
+) -> f64 {
+    let (k, m) = (w.shape[0], w.shape[1]);
+    let qmax = cfg.qmax() as f32;
+    let mut mse = 0f64;
+    for g0 in (0..k).step_by(cfg.group) {
+        let g1 = (g0 + cfg.group).min(k);
+        // per-group, per-column absmax scale
+        for col in 0..m {
+            let mut absmax = 0f32;
+            for j in g0..g1 {
+                absmax = absmax.max(w.data[j * m + col].abs());
+            }
+            let scale = if absmax > 0.0 { absmax / qmax } else { 1.0 };
+            // quantize rows in order; push error onto later rows scaled
+            // by relative activation energy (diagonal-Hessian GPTQ).
+            for j in g0..g1 {
+                let v = w.data[j * m + col];
+                let q = (v / scale).round().clamp(-qmax, qmax);
+                let dq = q * scale;
+                let err = v - dq;
+                mse += (err as f64) * (err as f64);
+                w.data[j * m + col] = dq;
+                if j + 1 < g1 {
+                    // error feedback weight: next row's activation share
+                    let share = match act_sq {
+                        Some(a) => {
+                            let denom: f32 = a[j + 1..g1]
+                                .iter()
+                                .map(|x| x.sqrt())
+                                .sum::<f32>()
+                                .max(1e-12);
+                            a[j + 1].sqrt() / denom
+                        }
+                        None => 1.0 / (g1 - j - 1) as f32,
+                    };
+                    w.data[(j + 1) * m + col] += err * share;
+                }
+            }
+        }
+    }
+    mse / (k * m) as f64
+}
+
+/// Quantize every projection of the model (weights only — activations
+/// stay f32, mirroring the paper's observation that activation memory
+/// is unaffected).
+pub fn quantize_model(
+    m: &mut ModelWeights,
+    stats: Option<&ActivationStats>,
+    cfg: QuantConfig,
+) -> f64 {
+    let mut total = 0f64;
+    let mut count = 0usize;
+    for l in 0..m.layers.len() {
+        for (pi, &p) in Proj::all().iter().enumerate() {
+            let act = stats.map(|s| s.act_sq[l][pi].as_slice());
+            let w = m.layers[l].proj_mut(p);
+            total += quantize_projection(w, act, cfg) * w.numel() as f64;
+            count += w.numel();
+        }
+    }
+    total / count.max(1) as f64
+}
+
+/// Convenience: quantized copy (the deployer keeps the original).
+pub fn dequantized_model(
+    m: &ModelWeights,
+    stats: Option<&ActivationStats>,
+    cfg: QuantConfig,
+) -> (ModelWeights, f64) {
+    let mut q = m.clone();
+    let mse = quantize_model(&mut q, stats, cfg);
+    (q, mse)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::testutil::random_model;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(QuantConfig::new(8).qmax(), 127);
+        assert_eq!(QuantConfig::new(4).qmax(), 7);
+        assert_eq!(QuantConfig::new(2).qmax(), 1);
+    }
+
+    #[test]
+    fn compression_ratios_in_paper_ballpark() {
+        // paper Table XIII: 8-bit 1.74x, 4-bit 2.80x, 3-bit 3.31x, 2-bit 4.04x
+        // (theirs include metadata; ours is the idealized weight ratio)
+        let c8 = QuantConfig::new(8).compression_vs_f16(128);
+        let c4 = QuantConfig::new(4).compression_vs_f16(128);
+        let c2 = QuantConfig::new(2).compression_vs_f16(128);
+        assert!(c8 > 1.5 && c8 < 2.1, "{c8}");
+        assert!(c4 > 3.0 && c4 < 4.5, "{c4}");
+        assert!(c2 > 6.0, "{c2}");
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let mut r = Pcg32::seeded(91);
+        let w = Tensor::new(
+            (0..64 * 48).map(|_| r.normal()).collect(), vec![64, 48]);
+        let errs: Vec<f64> = [2u32, 3, 4, 8]
+            .iter()
+            .map(|&b| {
+                let mut wc = w.clone();
+                quantize_projection(&mut wc, None, QuantConfig::new(b))
+            })
+            .collect();
+        assert!(errs[0] > errs[1]);
+        assert!(errs[1] > errs[2]);
+        assert!(errs[2] > errs[3]);
+    }
+
+    #[test]
+    fn eight_bit_nearly_lossless_model() {
+        let m = random_model(92);
+        let (q, mse) =
+            dequantized_model(&m, None, QuantConfig::new(8));
+        assert!(mse < 1e-5, "8-bit mse {mse}");
+        // forward outputs close to dense
+        let a = crate::model::engine::forward_full(&m, &[1, 2, 3]);
+        let b = crate::model::engine::forward_full(&q, &[1, 2, 3]);
+        let max_rel = a
+            .data
+            .iter()
+            .zip(b.data.iter())
+            .map(|(x, y)| (x - y).abs())
+            .fold(0f32, f32::max);
+        assert!(max_rel < 0.3, "8-bit drift {max_rel}");
+    }
+
+    #[test]
+    fn quantized_values_on_grid() {
+        let mut r = Pcg32::seeded(93);
+        let mut w = Tensor::new((0..256).map(|_| r.normal()).collect(),
+                                vec![16, 16]);
+        let cfg = QuantConfig { bits: 4, group: 16 };
+        // disable error feedback effect check by verifying grid per column
+        quantize_projection(&mut w, None, cfg);
+        // each column within a group: values/scale must be near-integers
+        for col in 0..16 {
+            let mut absmax = 0f32;
+            for j in 0..16 {
+                absmax = absmax.max(w.data[j * 16 + col].abs());
+            }
+            if absmax == 0.0 {
+                continue;
+            }
+            let scale = absmax / cfg.qmax() as f32;
+            for j in 0..16 {
+                let q = w.data[j * 16 + col] / scale;
+                assert!(
+                    (q - q.round()).abs() < 0.51,
+                    "value off grid: {q}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Post-Pruning Optimizer: GPTQ-style group-wise weight quantization
+//! (the paper's Table XIII comparator and PC component 10).
+//!
+//! Group-128 symmetric quantization to b ∈ {2,3,4,8} bits with greedy
+//! error feedback along the input dimension (a diagonal-Hessian GPTQ):
+//! quantizing row j pushes its rounding error onto the not-yet-quantized
+//! rows weighted by their calibration activation energy.
+
+pub mod gptq;
+
+pub use gptq::{dequantized_model, quantize_model, QuantConfig};

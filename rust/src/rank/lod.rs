@@ -1,0 +1,112 @@
+//! Layer Outlier Distribution (LOD) — the OWL baseline (Eq. 3–4).
+//!
+//! Identical weight metric to POD, but outliers are identified *across
+//! the whole layer* (all seven projections pooled) so every projection
+//! in a layer inherits the same rank — the paper's "quasi-non-uniform"
+//! layer pruning.
+
+use crate::model::config::Proj;
+use crate::model::ModelWeights;
+use crate::rank::{normalize_rank, ActivationStats, GlobalRank};
+
+/// Per-layer outlier ratio across the pooled projections, expanded back
+/// to [layer][proj] (each projection gets its layer's value).
+pub fn compute_lod_rank(
+    weights: &ModelWeights,
+    stats: &ActivationStats,
+    alpha: f64,
+) -> GlobalRank {
+    let mut layer_ratio = Vec::with_capacity(weights.cfg.n_layers);
+    for (l, layer) in weights.layers.iter().enumerate() {
+        // First pass: layer-wide mean of omega.
+        let mut sum = 0f64;
+        let mut count = 0usize;
+        for (pi, &p) in Proj::all().iter().enumerate() {
+            let w = layer.proj(p);
+            let act = &stats.act_sq[l][pi];
+            let m = w.shape[1];
+            for i in 0..w.shape[0] {
+                let a = (act[i] as f64).sqrt();
+                for j in 0..m {
+                    sum += a * w.data[i * m + j].abs() as f64;
+                }
+            }
+            count += w.numel();
+        }
+        let mean = sum / count.max(1) as f64;
+        let thr = alpha * mean;
+        // Second pass: outliers vs the LAYER mean (Eq. 4).
+        let mut outliers = 0usize;
+        for (pi, &p) in Proj::all().iter().enumerate() {
+            let w = layer.proj(p);
+            let act = &stats.act_sq[l][pi];
+            let m = w.shape[1];
+            for i in 0..w.shape[0] {
+                let a = (act[i] as f64).sqrt();
+                for j in 0..m {
+                    if a * w.data[i * m + j].abs() as f64 > thr {
+                        outliers += 1;
+                    }
+                }
+            }
+        }
+        layer_ratio.push(outliers as f64 / count.max(1) as f64 * 100.0);
+    }
+    let mut rank: Vec<Vec<f64>> = layer_ratio
+        .iter()
+        .map(|&r| vec![r; Proj::all().len()])
+        .collect();
+    normalize_rank(&mut rank);
+    GlobalRank { rank, alpha }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::Proj;
+    use crate::model::weights::testutil::random_model;
+    use crate::rank::ActivationStats;
+
+    fn uniform_stats(m: &ModelWeights) -> ActivationStats {
+        let cfg = m.cfg.clone();
+        let mut s = ActivationStats::zeros(cfg.n_layers, &|_l, p| {
+            if matches!(p, Proj::Down) { cfg.ff_dim } else { cfg.d_model }
+        });
+        for l in s.act_sq.iter_mut() {
+            for p in l.iter_mut() {
+                p.iter_mut().for_each(|x| *x = 1.0);
+            }
+        }
+        s.n_samples = 1;
+        s
+    }
+
+    #[test]
+    fn lod_uniform_within_layer() {
+        let m = random_model(31);
+        let stats = uniform_stats(&m);
+        let g = compute_lod_rank(&m, &stats, 2.0);
+        for layer in &g.rank {
+            for p in layer {
+                assert!((p - layer[0]).abs() < 1e-12,
+                        "LOD must assign one value per layer");
+            }
+        }
+    }
+
+    #[test]
+    fn lod_detects_outlier_layer() {
+        let mut m = random_model(32);
+        // blow up one projection's weights in layer 1 -> more outliers
+        for x in m.layers[1].projs[0].data.iter_mut() {
+            *x *= 50.0;
+        }
+        let stats = uniform_stats(&m);
+        let g = compute_lod_rank(&m, &stats, 3.0);
+        assert!(
+            g.rank[1][0] > g.rank[0][0],
+            "layer with inflated weights should rank higher: {:?}",
+            g.layer_means()
+        );
+    }
+}

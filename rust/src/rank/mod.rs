@@ -1,0 +1,301 @@
+//! Parameter Ranking Controller (RC) — Figure 5 / Algorithm 1.
+//!
+//! Pipeline (component names follow the paper):
+//!   1. Sample Loader        — calibration tokens from the c4s split
+//!   2. LLM Profiler         — run the AOT *profile* graph per sample
+//!   3. Activation Processor — accumulate Σ activation² per projection
+//!   4. Rank Pre-Processor   — weight metric ω = ‖A‖₂·|θ| (Eq. 5)
+//!   5. Mosaic Parameter Ranker — POD outlier counts (Eq. 6), via the
+//!      AOT Pallas `weight_metric` kernel (L1 on the request path)
+//!   6. Rank Post-Processor  — normalize into the global rank R_LLM
+//!
+//! The global rank is computed ONCE per model and reused for every
+//! pruning level p (paper §IV) — `GlobalRank` serializes to JSON.
+
+pub mod lod;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::model::config::{Proj, N_PROJS};
+use crate::model::ModelWeights;
+use crate::runtime::ModelRuntime;
+use crate::util::json::Json;
+
+/// Σ activation² per (layer, projection) input feature, accumulated over
+/// the calibration set. `sqrt` of these is the ‖A‖₂ term of Eq. 5.
+#[derive(Debug, Clone)]
+pub struct ActivationStats {
+    /// [layer][proj] -> per-input-feature Σ act²
+    pub act_sq: Vec<Vec<Vec<f32>>>,
+    pub n_samples: usize,
+}
+
+impl ActivationStats {
+    pub fn zeros(n_layers: usize, dims: &dyn Fn(usize, Proj) -> usize) -> Self {
+        let act_sq = (0..n_layers)
+            .map(|l| {
+                Proj::all()
+                    .iter()
+                    .map(|&p| vec![0f32; dims(l, p)])
+                    .collect()
+            })
+            .collect();
+        ActivationStats { act_sq, n_samples: 0 }
+    }
+
+    /// Fold one profile-graph output (canonical (layer, proj) order).
+    pub fn accumulate(&mut self, acts: &[Vec<f32>]) {
+        let mut i = 0;
+        for l in 0..self.act_sq.len() {
+            for p in 0..N_PROJS {
+                for (dst, src) in
+                    self.act_sq[l][p].iter_mut().zip(acts[i].iter())
+                {
+                    *dst += *src;
+                }
+                i += 1;
+            }
+        }
+        self.n_samples += 1;
+    }
+}
+
+/// Profile the model over `samples` calibration sequences (components
+/// 1–3 of the RC). Uses the PJRT profile graph — L2 on the request path.
+pub fn profile_activations(
+    mrt: &mut ModelRuntime,
+    samples: &[Vec<u16>],
+) -> Result<ActivationStats> {
+    let cfg = mrt.cfg.clone();
+    let in_dim = move |_l: usize, p: Proj| match p {
+        Proj::Down => cfg.ff_dim,
+        _ => cfg.d_model,
+    };
+    let mut stats = ActivationStats::zeros(mrt.cfg.n_layers, &in_dim);
+    let (_, s) = mrt.profile_tokens_shape;
+    for sample in samples {
+        let mut toks: Vec<i32> =
+            sample.iter().map(|&t| t as i32).collect();
+        toks.resize(s, 0); // pad to the fixed profile shape
+        let (_logits, acts) = mrt.profile(&toks)?;
+        stats.accumulate(&acts);
+    }
+    Ok(stats)
+}
+
+/// R_LLM — the paper's global rank: per (layer, projection) outlier
+/// percentage, normalized (Alg. 1 line 19).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GlobalRank {
+    /// [layer][proj] outlier ratio (percent of parameters that are
+    /// outliers), normalized so the mean is 1.0.
+    pub rank: Vec<Vec<f64>>,
+    pub alpha: f64,
+}
+
+impl GlobalRank {
+    pub fn n_layers(&self) -> usize {
+        self.rank.len()
+    }
+
+    /// Flatten layer ranks: mean over projections (for layer/LOD use).
+    pub fn layer_means(&self) -> Vec<f64> {
+        self.rank
+            .iter()
+            .map(|r| r.iter().sum::<f64>() / r.len() as f64)
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("alpha", Json::num(self.alpha));
+        o.set(
+            "rank",
+            Json::arr(
+                self.rank.iter().map(|r| Json::from_f64s(r)).collect(),
+            ),
+        );
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let alpha = j
+            .get("alpha")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("rank alpha"))?;
+        let rank = j
+            .get("rank")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("rank array"))?
+            .iter()
+            .map(|r| {
+                r.as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|x| x.as_f64().unwrap())
+                    .collect()
+            })
+            .collect();
+        Ok(GlobalRank { rank, alpha })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let j = Json::parse(&crate::util::read_to_string(path)?)
+            .map_err(|e| anyhow::anyhow!("rank file: {e}"))?;
+        Self::from_json(&j)
+    }
+}
+
+/// Components 4–6: weight metric → POD outlier counts → normalized
+/// global rank. Outlier counting runs through the AOT Pallas
+/// `weight_metric` kernel when `mrt` is given; the pure-rust fallback
+/// (`pod_outlier_ratio`) is used by unit tests and kept bit-compatible.
+pub fn compute_global_rank(
+    weights: &ModelWeights,
+    stats: &ActivationStats,
+    alpha: f64,
+    mut mrt: Option<&mut ModelRuntime>,
+) -> Result<GlobalRank> {
+    let mut rank = Vec::with_capacity(weights.cfg.n_layers);
+    for (l, layer) in weights.layers.iter().enumerate() {
+        let mut row = Vec::with_capacity(N_PROJS);
+        for (pi, &p) in Proj::all().iter().enumerate() {
+            let w = layer.proj(p);
+            let act = &stats.act_sq[l][pi];
+            let ratio = match mrt.as_deref_mut() {
+                Some(rt) => {
+                    let (count, _sum) = rt.weight_metric(w, act)?;
+                    count as f64 / w.numel() as f64
+                }
+                None => pod_outlier_ratio(w, act, alpha),
+            };
+            row.push(ratio * 100.0); // Alg. 1 line 15: percentage
+        }
+        rank.push(row);
+    }
+    normalize_rank(&mut rank);
+    Ok(GlobalRank { rank, alpha })
+}
+
+/// Pure-rust POD (Eq. 5–6): fraction of parameters whose
+/// ω = sqrt(Σa²)·|w| exceeds α · mean(ω) within the projection.
+pub fn pod_outlier_ratio(
+    w: &crate::tensor::Tensor,
+    act_sq: &[f32],
+    alpha: f64,
+) -> f64 {
+    let (k, m) = (w.shape[0], w.shape[1]);
+    debug_assert_eq!(k, act_sq.len());
+    let mut sum = 0f64;
+    for i in 0..k {
+        let a = (act_sq[i] as f64).sqrt();
+        for j in 0..m {
+            sum += a * w.data[i * m + j].abs() as f64;
+        }
+    }
+    let mean = sum / (k * m) as f64;
+    let thr = alpha * mean;
+    let mut count = 0usize;
+    for i in 0..k {
+        let a = (act_sq[i] as f64).sqrt();
+        for j in 0..m {
+            if a * w.data[i * m + j].abs() as f64 > thr {
+                count += 1;
+            }
+        }
+    }
+    count as f64 / (k * m) as f64
+}
+
+/// Rank Post-Processor: scale ranks so the global mean is 1.0 (relative
+/// importance). Keeps zeros meaningful (a projection with no outliers).
+pub fn normalize_rank(rank: &mut [Vec<f64>]) {
+    let n: usize = rank.iter().map(|r| r.len()).sum();
+    let mean: f64 =
+        rank.iter().flat_map(|r| r.iter()).sum::<f64>() / n.max(1) as f64;
+    if mean > 0.0 {
+        for r in rank.iter_mut() {
+            for x in r.iter_mut() {
+                *x /= mean;
+            }
+        }
+    } else {
+        for r in rank.iter_mut() {
+            for x in r.iter_mut() {
+                *x = 1.0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::testutil::random_model;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn pod_counts_match_definition() {
+        // 2x2 weights, uniform activations: omega = |w|
+        let w = Tensor::new(vec![1.0, 1.0, 1.0, 100.0], vec![2, 2]);
+        let act = vec![1.0, 1.0];
+        // mean omega = 25.75, alpha=2 -> thr 51.5 -> one outlier
+        let r = pod_outlier_ratio(&w, &act, 2.0);
+        assert!((r - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rank_normalizes_to_mean_one() {
+        let mut rank = vec![vec![2.0, 4.0], vec![6.0, 8.0]];
+        normalize_rank(&mut rank);
+        let mean: f64 = rank.iter().flatten().sum::<f64>() / 4.0;
+        assert!((mean - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_rank_degrades_to_uniform() {
+        let mut rank = vec![vec![0.0, 0.0]];
+        normalize_rank(&mut rank);
+        assert_eq!(rank[0], vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn global_rank_json_roundtrip() {
+        let g = GlobalRank {
+            rank: vec![vec![1.0, 0.5, 1.5], vec![0.9, 1.1, 1.0]],
+            alpha: 5.0,
+        };
+        let j = g.to_json();
+        let g2 = GlobalRank::from_json(&j).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn compute_rank_pure_rust() {
+        let m = random_model(21);
+        let cfg = m.cfg.clone();
+        let stats = ActivationStats::zeros(cfg.n_layers, &|_l, p| {
+            if matches!(p, Proj::Down) { cfg.ff_dim } else { cfg.d_model }
+        });
+        // uniform fake activations
+        let mut stats = stats;
+        for l in stats.act_sq.iter_mut() {
+            for p in l.iter_mut() {
+                p.iter_mut().for_each(|x| *x = 1.0);
+            }
+        }
+        stats.n_samples = 1;
+        let g = compute_global_rank(&m, &stats, 2.0, None).unwrap();
+        assert_eq!(g.rank.len(), 2);
+        assert_eq!(g.rank[0].len(), 7);
+        let mean: f64 = g.rank.iter().flatten().sum::<f64>() / 14.0;
+        assert!((mean - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,301 @@
+//! PJRT runtime — loads the AOT HLO-text artifacts produced by
+//! python/compile/aot.py and executes them on the CPU PJRT client.
+//!
+//! This is the only place the `xla` crate is touched. Weights are uploaded
+//! once as device-resident `PjRtBuffer`s and reused across executions
+//! (`execute_b`), so the evaluation hot path does a single host→device
+//! token copy per batch — not a weights copy (perf deliverable).
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serializes protos with 64-bit
+//! instruction ids which xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::model::config::ModelConfig;
+use crate::model::weights::ModelWeights;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn compile_hlo_text(
+        &self,
+        path: &Path,
+    ) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("path utf8")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+
+    pub fn upload_f32(
+        &self,
+        data: &[f32],
+        dims: &[usize],
+    ) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    pub fn upload_i32(
+        &self,
+        data: &[i32],
+        dims: &[usize],
+    ) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+}
+
+/// A model's compiled graphs + device-resident weights.
+pub struct ModelRuntime {
+    pub rt: Runtime,
+    pub cfg: ModelConfig,
+    pub manifest: Json,
+    pub model_dir: PathBuf,
+    fwd: Option<xla::PjRtLoadedExecutable>,
+    profile: Option<xla::PjRtLoadedExecutable>,
+    lora_grad: Option<xla::PjRtLoadedExecutable>,
+    wmetric: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// device-resident params in canonical order
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    pub fwd_tokens_shape: (usize, usize),
+    pub profile_tokens_shape: (usize, usize),
+    pub ft_tokens_shape: (usize, usize),
+    pub n_act_outputs: usize,
+}
+
+impl ModelRuntime {
+    /// Load a model's artifacts and upload its (dense) weights.
+    pub fn load(model_dir: &Path) -> Result<Self> {
+        let rt = Runtime::cpu()?;
+        let manifest = Json::parse(&crate::util::read_to_string(
+            &model_dir.join("manifest.json"),
+        )?)
+        .map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let cfg = ModelConfig::from_json(
+            manifest.get("config").context("config")?,
+        )?;
+        let shapes = |g: &str| -> Result<(usize, usize)> {
+            let t = manifest
+                .get("hlo")
+                .and_then(|h| h.get(g))
+                .and_then(|v| v.get("tokens_shape"))
+                .and_then(|v| v.as_arr())
+                .with_context(|| format!("hlo.{g}.tokens_shape"))?;
+            Ok((t[0].as_usize().unwrap(), t[1].as_usize().unwrap()))
+        };
+        let fwd_tokens_shape = shapes("fwd")?;
+        let profile_tokens_shape = shapes("profile")?;
+        let ft_tokens_shape = shapes("lora_grad")?;
+        let n_act_outputs = manifest
+            .get("hlo")
+            .and_then(|h| h.get("profile"))
+            .and_then(|v| v.get("n_act_outputs"))
+            .and_then(|v| v.as_usize())
+            .context("n_act_outputs")?;
+        let mut mr = ModelRuntime {
+            rt,
+            cfg,
+            manifest,
+            model_dir: model_dir.to_path_buf(),
+            fwd: None,
+            profile: None,
+            lora_grad: None,
+            wmetric: HashMap::new(),
+            weight_bufs: Vec::new(),
+            fwd_tokens_shape,
+            profile_tokens_shape,
+            ft_tokens_shape,
+            n_act_outputs,
+        };
+        let weights = ModelWeights::load(model_dir)?;
+        mr.set_weights(&weights)?;
+        Ok(mr)
+    }
+
+    /// Upload a (structurally-intact) weight set as device buffers.
+    /// Called once per pruning variant — NOT per batch.
+    pub fn set_weights(&mut self, w: &ModelWeights) -> Result<()> {
+        anyhow::ensure!(
+            w.is_dense_shape(),
+            "PJRT graphs have fixed shapes; structurally-pruned models \
+             must use the native engine"
+        );
+        self.weight_bufs = w
+            .to_flat()
+            .iter()
+            .map(|t| self.rt.upload_f32(&t.data, &t.shape))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(())
+    }
+
+    /// Upload raw flat tensors (order must match the manifest).
+    pub fn set_weights_flat(&mut self, flat: &[Tensor]) -> Result<()> {
+        self.weight_bufs = flat
+            .iter()
+            .map(|t| self.rt.upload_f32(&t.data, &t.shape))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(())
+    }
+
+    fn graph(&mut self, name: &str) -> Result<()> {
+        let file = self
+            .manifest
+            .get("hlo")
+            .and_then(|h| h.get(name))
+            .and_then(|v| v.get("file"))
+            .and_then(|v| v.as_str())
+            .with_context(|| format!("hlo.{name}.file"))?
+            .to_string();
+        let loaded = match name {
+            "fwd" => self.fwd.is_some(),
+            "profile" => self.profile.is_some(),
+            "lora_grad" => self.lora_grad.is_some(),
+            _ => anyhow::bail!("unknown graph {name}"),
+        };
+        if !loaded {
+            let exe = self.rt.compile_hlo_text(&self.model_dir.join(&file))?;
+            match name {
+                "fwd" => self.fwd = Some(exe),
+                "profile" => self.profile = Some(exe),
+                _ => self.lora_grad = Some(exe),
+            }
+        }
+        Ok(())
+    }
+
+    /// fwd: tokens (B,S) i32 → logits (B·S·vocab) row-major.
+    pub fn forward(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let (b, s) = self.fwd_tokens_shape;
+        anyhow::ensure!(tokens.len() == b * s, "fwd tokens shape");
+        let tok_buf = self.rt.upload_i32(tokens, &[b, s])?;
+        self.graph("fwd")?;
+        let exe = self.fwd.as_ref().unwrap();
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&tok_buf];
+        args.extend(self.weight_bufs.iter());
+        let result = exe.execute_b(&args)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// profile: tokens (1,S) → (logits, act_sq…) where act_sq[i] is the
+    /// Σ activation² vector of the i-th (layer, projection) in canonical
+    /// order. Accumulated across calibration samples by the RC.
+    pub fn profile(
+        &mut self,
+        tokens: &[i32],
+    ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+        let (b, s) = self.profile_tokens_shape;
+        anyhow::ensure!(tokens.len() == b * s, "profile tokens shape");
+        let tok_buf = self.rt.upload_i32(tokens, &[b, s])?;
+        self.graph("profile")?;
+        let exe = self.profile.as_ref().unwrap();
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&tok_buf];
+        args.extend(self.weight_bufs.iter());
+        let result = exe.execute_b(&args)?[0][0].to_literal_sync()?;
+        let mut parts = result.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == 1 + self.n_act_outputs,
+            "profile output arity {} != {}",
+            parts.len(),
+            1 + self.n_act_outputs
+        );
+        let logits = parts.remove(0).to_vec::<f32>()?;
+        let acts = parts
+            .into_iter()
+            .map(|l| Ok(l.to_vec::<f32>()?))
+            .collect::<Result<Vec<_>>>()?;
+        Ok((logits, acts))
+    }
+
+    /// lora_grad: tokens (B,32) + lora params → (loss, grads…).
+    pub fn lora_grad(
+        &mut self,
+        tokens: &[i32],
+        lora: &[Tensor],
+    ) -> Result<(f32, Vec<Tensor>)> {
+        let (b, s) = self.ft_tokens_shape;
+        anyhow::ensure!(tokens.len() == b * s, "ft tokens shape");
+        let tok_buf = self.rt.upload_i32(tokens, &[b, s])?;
+        let lora_bufs = lora
+            .iter()
+            .map(|t| self.rt.upload_f32(&t.data, &t.shape))
+            .collect::<Result<Vec<_>>>()?;
+        self.graph("lora_grad")?;
+        let exe = self.lora_grad.as_ref().unwrap();
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&tok_buf];
+        args.extend(self.weight_bufs.iter());
+        args.extend(lora_bufs.iter());
+        let result = exe.execute_b(&args)?[0][0].to_literal_sync()?;
+        let mut parts = result.to_tuple()?;
+        anyhow::ensure!(parts.len() == 1 + lora.len(), "lora output arity");
+        let loss = parts.remove(0).to_vec::<f32>()?[0];
+        let grads = parts
+            .into_iter()
+            .zip(lora.iter())
+            .map(|(l, t)| {
+                Ok(Tensor::new(l.to_vec::<f32>()?, t.shape.clone()))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok((loss, grads))
+    }
+
+    /// LoRA parameter shapes from the manifest (canonical order).
+    pub fn lora_shapes(&self) -> Result<Vec<Vec<usize>>> {
+        Ok(self
+            .manifest
+            .get("lora_params")
+            .and_then(|v| v.as_arr())
+            .context("lora_params")?
+            .iter()
+            .map(|e| {
+                e.get("shape")
+                    .and_then(|v| v.as_arr())
+                    .unwrap()
+                    .iter()
+                    .map(|s| s.as_usize().unwrap())
+                    .collect()
+            })
+            .collect())
+    }
+
+    /// weight_metric Pallas kernel: (W, act_sq) → (outlier_count, ω sum).
+    /// The RC's POD hot spot runs through this AOT L1 kernel.
+    pub fn weight_metric(
+        &mut self,
+        w: &Tensor,
+        act_sq: &[f32],
+    ) -> Result<(f32, f32)> {
+        let key = format!("{}x{}", w.shape[0], w.shape[1]);
+        if !self.wmetric.contains_key(&key) {
+            let file = self
+                .manifest
+                .get("hlo")
+                .and_then(|h| h.get("weight_metric"))
+                .and_then(|v| v.get(&key))
+                .and_then(|v| v.as_str())
+                .with_context(|| format!("weight_metric {key}"))?
+                .to_string();
+            let exe =
+                self.rt.compile_hlo_text(&self.model_dir.join(file))?;
+            self.wmetric.insert(key.clone(), exe);
+        }
+        let exe = &self.wmetric[&key];
+        let wb = self.rt.upload_f32(&w.data, &w.shape)?;
+        let ab = self.rt.upload_f32(act_sq, &[act_sq.len()])?;
+        let result = exe.execute_b(&[&wb, &ab])?[0][0].to_literal_sync()?;
+        let (c, s) = result.to_tuple2()?;
+        Ok((c.to_vec::<f32>()?[0], s.to_vec::<f32>()?[0]))
+    }
+}

@@ -1,0 +1,476 @@
+//! Serving layer — what the SLM Deployer actually deploys *into*.
+//!
+//! The paper's end state is an SLM answering requests on the target
+//! device (§IV component 11). This module provides that runtime: a
+//! TCP front-end speaking a line-JSON protocol, a bounded admission
+//! queue, and a **continuous-batching** engine loop (token-level
+//! interleaving across active sequences, vLLM-style) over the native
+//! engine's per-sequence `DecodeState`s — so a structurally-pruned
+//! Mosaic model genuinely serves more tokens/s than the dense one.
+//!
+//! Everything is std-only (no tokio in this image): one OS thread per
+//! connection for IO, a single engine thread owning the model.
+
+pub mod protocol;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::model::engine::{argmax, decode_step};
+use crate::model::{DecodeState, ModelWeights};
+use crate::model::config::EOS;
+
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// max sequences decoded concurrently (continuous batch width)
+    pub max_batch: usize,
+    /// admission queue bound (backpressure: reject beyond this)
+    pub max_queue: usize,
+    pub default_max_new: usize,
+    /// hard cap on prompt + generation length
+    pub max_ctx: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 8,
+            max_queue: 64,
+            default_max_new: 16,
+            max_ctx: 256,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u16>,
+    pub max_new: usize,
+    pub enqueued: Instant,
+    pub reply: mpsc::Sender<Reply>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Reply {
+    pub id: u64,
+    pub tokens: Vec<u16>,
+    pub queue_ms: f64,
+    pub prefill_ms: f64,
+    pub decode_ms: f64,
+}
+
+/// Aggregate serving metrics (lock-free; read by /stats and tests).
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    pub accepted: AtomicU64,
+    pub rejected: AtomicU64,
+    pub completed: AtomicU64,
+    pub tokens_out: AtomicU64,
+    pub batch_occupancy_sum: AtomicU64,
+    pub batch_steps: AtomicU64,
+}
+
+impl ServeStats {
+    pub fn mean_occupancy(&self) -> f64 {
+        let steps = self.batch_steps.load(Ordering::Relaxed);
+        if steps == 0 {
+            return 0.0;
+        }
+        self.batch_occupancy_sum.load(Ordering::Relaxed) as f64
+            / steps as f64
+    }
+}
+
+struct ActiveSeq {
+    req: Request,
+    state: DecodeState,
+    generated: Vec<u16>,
+    next_token: u16,
+    prefill_ms: f64,
+    decode_t0: Instant,
+}
+
+/// The engine loop: admit → prefill → interleaved decode → complete.
+/// Runs until `stop` is set and the queue drains.
+pub fn engine_loop(
+    model: Arc<ModelWeights>,
+    cfg: ServeConfig,
+    rx: mpsc::Receiver<Request>,
+    stats: Arc<ServeStats>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut active: Vec<ActiveSeq> = Vec::new();
+    loop {
+        // ---- admission: fill the batch from the queue
+        while active.len() < cfg.max_batch {
+            let req = if active.is_empty() {
+                // idle: block briefly so shutdown stays responsive
+                match rx.recv_timeout(Duration::from_millis(20)) {
+                    Ok(r) => r,
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => return,
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(r) => r,
+                    Err(_) => break,
+                }
+            };
+            let queue_ms =
+                req.enqueued.elapsed().as_secs_f64() * 1e3;
+            let mut state = DecodeState::new(
+                &model,
+                (req.prompt.len() + req.max_new).min(cfg.max_ctx),
+            );
+            // prefill
+            let t0 = Instant::now();
+            let mut next = EOS;
+            for &t in req
+                .prompt
+                .iter()
+                .take(cfg.max_ctx.saturating_sub(req.max_new))
+            {
+                let logits = decode_step(&model, &mut state, t);
+                next = argmax(logits) as u16;
+            }
+            let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+            active.push(ActiveSeq {
+                req,
+                state,
+                generated: Vec::new(),
+                next_token: next,
+                prefill_ms: prefill_ms + queue_ms, // carry queue for reply
+                decode_t0: Instant::now(),
+            });
+        }
+        if active.is_empty() {
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            continue;
+        }
+        // ---- one interleaved decode step across the whole batch
+        stats
+            .batch_occupancy_sum
+            .fetch_add(active.len() as u64, Ordering::Relaxed);
+        stats.batch_steps.fetch_add(1, Ordering::Relaxed);
+        let mut i = 0;
+        while i < active.len() {
+            let seq = &mut active[i];
+            let tok = seq.next_token;
+            seq.generated.push(tok);
+            let done = seq.generated.len() >= seq.req.max_new
+                || tok == EOS
+                || seq.state.pos + 1
+                    >= seq.req.prompt.len() + seq.req.max_new;
+            if !done {
+                let logits = decode_step(&model, &mut seq.state, tok);
+                seq.next_token = argmax(logits) as u16;
+                i += 1;
+                continue;
+            }
+            // completed — reply and drop from the batch
+            let seq = active.swap_remove(i);
+            let queue_ms = 0.0; // folded into prefill_ms above
+            let reply = Reply {
+                id: seq.req.id,
+                tokens: seq.generated.clone(),
+                queue_ms,
+                prefill_ms: seq.prefill_ms,
+                decode_ms: seq.decode_t0.elapsed().as_secs_f64() * 1e3,
+            };
+            stats.completed.fetch_add(1, Ordering::Relaxed);
+            stats.tokens_out.fetch_add(
+                seq.generated.len() as u64,
+                Ordering::Relaxed,
+            );
+            let _ = seq.req.reply.send(reply);
+        }
+    }
+}
+
+/// In-process handle to a running server.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    pub stats: Arc<ServeStats>,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+    engine_handle: Option<std::thread::JoinHandle<()>>,
+    next_id: AtomicU64,
+    tx: mpsc::SyncSender<Request>,
+}
+
+impl Server {
+    /// Start serving `model` on 127.0.0.1 (port 0 = ephemeral).
+    pub fn start(
+        model: ModelWeights,
+        cfg: ServeConfig,
+        port: u16,
+    ) -> anyhow::Result<Server> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stats = Arc::new(ServeStats::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = mpsc::sync_channel::<Request>(cfg.max_queue);
+        let model = Arc::new(model);
+
+        let engine_handle = {
+            let (model, cfg, stats, stop) =
+                (model.clone(), cfg.clone(), stats.clone(), stop.clone());
+            std::thread::spawn(move || {
+                engine_loop(model, cfg, rx, stats, stop)
+            })
+        };
+        let accept_handle = {
+            let stop = stop.clone();
+            let stats = stats.clone();
+            let tx = tx.clone();
+            let cfg = cfg.clone();
+            std::thread::spawn(move || {
+                accept_loop(listener, tx, cfg, stats, stop)
+            })
+        };
+        Ok(Server {
+            addr,
+            stats,
+            stop,
+            accept_handle: Some(accept_handle),
+            engine_handle: Some(engine_handle),
+            next_id: AtomicU64::new(1),
+            tx,
+        })
+    }
+
+    /// In-process request (no TCP) — used by tests and the load bench.
+    pub fn submit(
+        &self,
+        prompt: Vec<u16>,
+        max_new: usize,
+    ) -> anyhow::Result<mpsc::Receiver<Reply>> {
+        let (rtx, rrx) = mpsc::channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            prompt,
+            max_new,
+            enqueued: Instant::now(),
+            reply: rtx,
+        };
+        match self.tx.try_send(req) {
+            Ok(()) => {
+                self.stats.accepted.fetch_add(1, Ordering::Relaxed);
+                Ok(rrx)
+            }
+            Err(_) => {
+                self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                anyhow::bail!("queue full (backpressure)")
+            }
+        }
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        // engine drains and exits once the channel closes or stop is set
+        drop(self.tx.clone());
+        if let Some(h) = self.engine_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    tx: mpsc::SyncSender<Request>,
+    cfg: ServeConfig,
+    stats: Arc<ServeStats>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut id = 1_000_000u64;
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                id += 1;
+                let tx = tx.clone();
+                let cfg = cfg.clone();
+                let stats = stats.clone();
+                let rid = id;
+                std::thread::spawn(move || {
+                    let _ =
+                        handle_conn(stream, tx, cfg, stats, rid);
+                });
+            }
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::WouldBlock =>
+            {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    tx: mpsc::SyncSender<Request>,
+    cfg: ServeConfig,
+    stats: Arc<ServeStats>,
+    id: u64,
+) -> anyhow::Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(());
+        }
+        let parsed = match protocol::parse_request(&line) {
+            Ok(p) => p,
+            Err(e) => {
+                out.write_all(
+                    protocol::error_line(&e).as_bytes(),
+                )?;
+                continue;
+            }
+        };
+        let (rtx, rrx) = mpsc::channel();
+        let req = Request {
+            id,
+            prompt: parsed.prompt,
+            max_new: parsed.max_new.unwrap_or(cfg.default_max_new),
+            enqueued: Instant::now(),
+            reply: rtx,
+        };
+        if tx.try_send(req).is_err() {
+            stats.rejected.fetch_add(1, Ordering::Relaxed);
+            out.write_all(
+                protocol::error_line("queue full").as_bytes(),
+            )?;
+            continue;
+        }
+        stats.accepted.fetch_add(1, Ordering::Relaxed);
+        match rrx.recv() {
+            Ok(reply) => {
+                out.write_all(
+                    protocol::reply_line(&reply).as_bytes(),
+                )?;
+            }
+            Err(_) => {
+                out.write_all(
+                    protocol::error_line("engine gone").as_bytes(),
+                )?;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::testutil::random_model;
+
+    #[test]
+    fn serve_roundtrip_in_process() {
+        let m = random_model(201);
+        let srv = Server::start(m, ServeConfig::default(), 0).unwrap();
+        let rx = srv.submit(vec![1, 5, 9], 4).unwrap();
+        let reply = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        // EOS may terminate greedy decoding early
+        assert!((1..=4).contains(&reply.tokens.len()));
+        assert_eq!(srv.stats.completed.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            srv.stats.tokens_out.load(Ordering::Relaxed),
+            reply.tokens.len() as u64
+        );
+        srv.shutdown();
+    }
+
+    #[test]
+    fn serve_batches_concurrent_requests() {
+        let m = random_model(202);
+        let srv = Server::start(
+            m,
+            ServeConfig { max_batch: 4, ..Default::default() },
+            0,
+        )
+        .unwrap();
+        let rxs: Vec<_> = (0..8)
+            .map(|i| {
+                srv.submit(vec![1, (3 + i) as u16, 7], 6).unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(20)).unwrap();
+            assert!((1..=6).contains(&r.tokens.len()));
+        }
+        assert_eq!(srv.stats.completed.load(Ordering::Relaxed), 8);
+        // with 8 requests and width 4, interleaving must have happened
+        assert!(srv.stats.mean_occupancy() > 1.0);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn serve_tcp_protocol() {
+        let m = random_model(203);
+        let srv = Server::start(m, ServeConfig::default(), 0).unwrap();
+        let addr = srv.addr;
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream
+            .write_all(b"{\"prompt\": [1, 4, 9], \"max_new\": 3}\n")
+            .unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"tokens\""), "{line}");
+        let j = crate::util::json::Json::parse(line.trim()).unwrap();
+        let n = j.get("tokens").unwrap().as_arr().unwrap().len();
+        assert!((1..=3).contains(&n));
+        srv.shutdown();
+    }
+
+    #[test]
+    fn serve_rejects_on_backpressure() {
+        let m = random_model(204);
+        let srv = Server::start(
+            m,
+            ServeConfig {
+                max_batch: 1,
+                max_queue: 1,
+                ..Default::default()
+            },
+            0,
+        )
+        .unwrap();
+        // flood: some must be rejected
+        let mut ok = 0;
+        let mut rejected = 0;
+        let mut rxs = Vec::new();
+        for i in 0..50 {
+            match srv.submit(vec![1, (3 + i % 40) as u16], 8) {
+                Ok(rx) => {
+                    ok += 1;
+                    rxs.push(rx);
+                }
+                Err(_) => rejected += 1,
+            }
+        }
+        assert!(ok >= 1);
+        assert!(rejected > 0, "backpressure must reject");
+        for rx in rxs {
+            let _ = rx.recv_timeout(Duration::from_secs(30));
+        }
+        srv.shutdown();
+    }
+}

@@ -1,0 +1,106 @@
+//! Line-JSON wire protocol for the serving layer.
+//!
+//! Request:  {"prompt": [int, ...], "max_new": int?}\n
+//! Reply:    {"id": n, "tokens": [...], "queue_ms": f, "prefill_ms": f,
+//!            "decode_ms": f}\n
+//! Error:    {"error": "..."}\n
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParsedRequest {
+    pub prompt: Vec<u16>,
+    pub max_new: Option<usize>,
+}
+
+pub fn parse_request(line: &str) -> Result<ParsedRequest, String> {
+    let j = Json::parse(line.trim())?;
+    let prompt = j
+        .get("prompt")
+        .and_then(|p| p.as_arr())
+        .ok_or("missing 'prompt' array")?
+        .iter()
+        .map(|t| {
+            t.as_usize()
+                .filter(|&v| v < 65536)
+                .map(|v| v as u16)
+                .ok_or_else(|| "prompt token out of range".to_string())
+        })
+        .collect::<Result<Vec<u16>, String>>()?;
+    if prompt.is_empty() {
+        return Err("empty prompt".into());
+    }
+    let max_new = j.get("max_new").and_then(|v| v.as_usize());
+    if let Some(n) = max_new {
+        if n == 0 || n > 4096 {
+            return Err("max_new out of range".into());
+        }
+    }
+    Ok(ParsedRequest { prompt, max_new })
+}
+
+pub fn reply_line(r: &super::Reply) -> String {
+    let mut o = Json::obj();
+    o.set("id", Json::num(r.id as f64));
+    o.set(
+        "tokens",
+        Json::Arr(r.tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+    );
+    o.set("queue_ms", Json::num(r.queue_ms));
+    o.set("prefill_ms", Json::num(r.prefill_ms));
+    o.set("decode_ms", Json::num(r.decode_ms));
+    format!("{o}\n")
+}
+
+pub fn error_line(msg: &str) -> String {
+    let mut o = Json::obj();
+    o.set("error", Json::str(msg));
+    format!("{o}\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_valid() {
+        let p =
+            parse_request("{\"prompt\": [1, 2, 3], \"max_new\": 5}\n")
+                .unwrap();
+        assert_eq!(p.prompt, vec![1, 2, 3]);
+        assert_eq!(p.max_new, Some(5));
+    }
+
+    #[test]
+    fn parse_defaults() {
+        let p = parse_request("{\"prompt\": [7]}").unwrap();
+        assert_eq!(p.max_new, None);
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        assert!(parse_request("{}").is_err());
+        assert!(parse_request("{\"prompt\": []}").is_err());
+        assert!(parse_request("{\"prompt\": [99999]}").is_err());
+        assert!(parse_request(
+            "{\"prompt\": [1], \"max_new\": 0}"
+        )
+        .is_err());
+        assert!(parse_request("not json").is_err());
+    }
+
+    #[test]
+    fn reply_roundtrips_through_json() {
+        let r = super::super::Reply {
+            id: 42,
+            tokens: vec![1, 2, 3],
+            queue_ms: 0.5,
+            prefill_ms: 1.25,
+            decode_ms: 9.0,
+        };
+        let line = reply_line(&r);
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("id").unwrap().as_usize(), Some(42));
+        assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 3);
+    }
+}

@@ -1,0 +1,287 @@
+//! Dense f32 tensors + the math kernels the native engine needs.
+//!
+//! Row-major layout throughout. The matmul uses an axpy inner loop over
+//! the output row (`out[i, :] += x[i, k] * w[k, :]`) which the compiler
+//! auto-vectorizes, with row-block parallelism from util::threadpool —
+//! this is the L3 deployment hot path (see EXPERIMENTS.md §Perf).
+
+use crate::util::threadpool::par_chunks_mut;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, shape: Vec<usize>) -> Self {
+        assert_eq!(
+            data.len(),
+            shape.iter().product::<usize>(),
+            "data/shape mismatch {shape:?}"
+        );
+        Tensor { data, shape }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor {
+            data: vec![0.0; shape.iter().product()],
+            shape: shape.to_vec(),
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        *self.shape.last().unwrap()
+    }
+
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols() + j]
+    }
+
+    #[inline]
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        let c = self.cols();
+        self.data[i * c + j] = v;
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Count of exactly-zero entries (sparsity accounting).
+    pub fn zero_count(&self) -> usize {
+        self.data.iter().filter(|&&x| x == 0.0).count()
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        self.zero_count() as f64 / self.numel().max(1) as f64
+    }
+
+    pub fn transpose2(&self) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0f32; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                out[j * r + i] = self.data[i * c + j];
+            }
+        }
+        Tensor::new(out, vec![c, r])
+    }
+}
+
+/// Rows of x processed together per task: each streamed w row is reused
+/// across RB output rows (register blocking), cutting w-traffic RB-fold.
+/// See EXPERIMENTS.md §Perf for the before/after.
+const RB: usize = 4;
+
+/// out(M,N) = x(M,K) @ w(K,N). Parallel over RB-row blocks of x.
+pub fn matmul(x: &Tensor, w: &Tensor) -> Tensor {
+    let (m, k) = (x.shape[0], x.shape[1]);
+    let (k2, n) = (w.shape[0], w.shape[1]);
+    assert_eq!(k, k2, "matmul inner dims {:?} {:?}", x.shape, w.shape);
+    let mut out = Tensor::zeros(&[m, n]);
+    let xd = &x.data;
+    let wd = &w.data;
+    // (an L1 accumulator-tile variant was tried and measured slower on
+    // this single-core host — see EXPERIMENTS.md §Perf iteration log)
+    par_chunks_mut(&mut out.data, RB * n, |bi, ochunk| {
+        let r0 = bi * RB;
+        let rows = ochunk.len() / n;
+        for kk in 0..k {
+            let wrow = &wd[kk * n..kk * n + n];
+            for r in 0..rows {
+                let xv = xd[(r0 + r) * k + kk];
+                if xv == 0.0 {
+                    continue;
+                }
+                let orow = &mut ochunk[r * n..(r + 1) * n];
+                for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
+                    *o += xv * wv;
+                }
+            }
+        }
+    });
+    out
+}
+
+/// y(N) = x(K) @ w(K,N) — the token-generation (decode) hot path.
+pub fn matvec(x: &[f32], w: &Tensor, out: &mut [f32]) {
+    let (k, n) = (w.shape[0], w.shape[1]);
+    debug_assert_eq!(x.len(), k);
+    debug_assert_eq!(out.len(), n);
+    out.fill(0.0);
+    let wd = &w.data;
+    for (kk, &xv) in x.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let wrow = &wd[kk * n..kk * n + n];
+        for (o, &wv) in out.iter_mut().zip(wrow.iter()) {
+            *o += xv * wv;
+        }
+    }
+}
+
+/// RMSNorm: y = x / rms(x) * w (matches kernels/ref.py, eps=1e-5).
+pub fn rmsnorm(x: &[f32], w: &[f32], out: &mut [f32]) {
+    let n = x.len();
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / n as f32;
+    let inv = 1.0 / (ms + 1e-5).sqrt();
+    for i in 0..n {
+        out[i] = x[i] * inv * w[i];
+    }
+}
+
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// In-place numerically-stable softmax.
+pub fn softmax(x: &mut [f32]) {
+    let max = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for v in x.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// log-softmax value of index `t` of logits (PPL scoring).
+pub fn log_softmax_at(logits: &[f32], t: usize) -> f32 {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse = logits.iter().map(|v| (v - max).exp()).sum::<f32>().ln() + max;
+    logits[t] - lse
+}
+
+/// Rotary embedding applied in-place to one head vector (matches
+/// model.py apply_rope: half-split rotation).
+pub fn apply_rope(x: &mut [f32], pos: usize) {
+    let half = x.len() / 2;
+    for i in 0..half {
+        let inv = 1.0 / 10000f32.powf(i as f32 / half as f32);
+        let t = pos as f32 * inv;
+        let (c, s) = (t.cos(), t.sin());
+        let (a, b) = (x[i], x[i + half]);
+        x[i] = a * c - b * s;
+        x[i + half] = a * s + b * c;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn rand_t(r: &mut Pcg32, shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::new((0..n).map(|_| r.normal()).collect(), shape.to_vec())
+    }
+
+    /// Naive triple loop as oracle.
+    fn matmul_naive(x: &Tensor, w: &Tensor) -> Tensor {
+        let (m, k, n) = (x.shape[0], x.shape[1], w.shape[1]);
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for kk in 0..k {
+                    acc += x.at2(i, kk) * w.at2(kk, j);
+                }
+                out.set2(i, j, acc);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut r = Pcg32::seeded(1);
+        for &(m, k, n) in &[(1, 4, 3), (5, 7, 9), (17, 64, 33), (32, 80, 216)] {
+            let x = rand_t(&mut r, &[m, k]);
+            let w = rand_t(&mut r, &[k, n]);
+            let a = matmul(&x, &w);
+            let b = matmul_naive(&x, &w);
+            for (p, q) in a.data.iter().zip(b.data.iter()) {
+                assert!((p - q).abs() < 1e-3, "{p} vs {q}");
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut r = Pcg32::seeded(2);
+        let x = rand_t(&mut r, &[1, 48]);
+        let w = rand_t(&mut r, &[48, 96]);
+        let full = matmul(&x, &w);
+        let mut out = vec![0f32; 96];
+        matvec(&x.data, &w, &mut out);
+        for (a, b) in out.iter().zip(full.data.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut x = vec![1.0, 2.0, 3.0, -1.0];
+        softmax(&mut x);
+        assert!((x.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(x[2] > x[1] && x[1] > x[0] && x[0] > x[3]);
+    }
+
+    #[test]
+    fn log_softmax_consistent() {
+        let logits = vec![0.5, -1.0, 2.0];
+        let mut p = logits.clone();
+        softmax(&mut p);
+        for t in 0..3 {
+            assert!((log_softmax_at(&logits, t) - p[t].ln()).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale() {
+        let x = vec![3.0, 4.0];
+        let w = vec![1.0, 1.0];
+        let mut out = vec![0.0; 2];
+        rmsnorm(&x, &w, &mut out);
+        // rms = sqrt(12.5), out = x / rms
+        let rms = 12.5f32.sqrt();
+        assert!((out[0] - 3.0 / rms).abs() < 1e-4);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut r = Pcg32::seeded(3);
+        let t = rand_t(&mut r, &[5, 9]);
+        assert_eq!(t.transpose2().transpose2(), t);
+    }
+
+    #[test]
+    fn sparsity_counting() {
+        let mut t = Tensor::zeros(&[4, 4]);
+        t.data[0] = 1.0;
+        t.data[5] = 2.0;
+        assert_eq!(t.zero_count(), 14);
+        assert!((t.sparsity() - 14.0 / 16.0).abs() < 1e-9);
+    }
+}

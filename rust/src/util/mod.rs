@@ -1,0 +1,104 @@
+//! Substrate utilities built from scratch for this image (no serde /
+//! rand / rayon / criterion available): JSON, PCG RNG, thread helpers,
+//! binary IO, and a tiny timing harness used by the benches.
+
+pub mod json;
+pub mod rng;
+pub mod threadpool;
+
+use std::io::Read;
+use std::path::Path;
+use std::time::Instant;
+
+/// Read a little-endian f32 buffer.
+pub fn read_f32_file(path: &Path) -> anyhow::Result<Vec<f32>> {
+    let bytes = std::fs::read(path)?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "f32 file not multiple of 4");
+    let mut out = vec![0f32; bytes.len() / 4];
+    for (i, ch) in bytes.chunks_exact(4).enumerate() {
+        out[i] = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+    }
+    Ok(out)
+}
+
+/// Read a little-endian u16 buffer (token streams).
+pub fn read_u16_file(path: &Path) -> anyhow::Result<Vec<u16>> {
+    let bytes = std::fs::read(path)?;
+    anyhow::ensure!(bytes.len() % 2 == 0, "u16 file not multiple of 2");
+    Ok(bytes
+        .chunks_exact(2)
+        .map(|c| u16::from_le_bytes([c[0], c[1]]))
+        .collect())
+}
+
+pub fn write_f32_file(path: &Path, data: &[f32]) -> anyhow::Result<()> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for &x in data {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    std::fs::write(path, bytes)?;
+    Ok(())
+}
+
+pub fn read_to_string(path: &Path) -> anyhow::Result<String> {
+    let mut s = String::new();
+    std::fs::File::open(path)?.read_to_string(&mut s)?;
+    Ok(s)
+}
+
+/// Wall-clock timing of a closure in seconds.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Mean and sample standard deviation over repeated trials (the paper
+/// reports "average from five trials, and one standard deviation").
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    let n = xs.len().max(1) as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    if xs.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+        / (n - 1.0);
+    (mean, var.sqrt())
+}
+
+/// Resolve the artifacts directory (env override for tests).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("MOSAIC_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            // repo root = two levels above this source file at build time;
+            // at run time prefer CWD/artifacts then CARGO_MANIFEST_DIR.
+            let cwd = std::path::PathBuf::from("artifacts");
+            if cwd.exists() {
+                return cwd;
+            }
+            std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+                .join("artifacts")
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let tmp = std::env::temp_dir().join("mosaic_f32_rt.bin");
+        let data = vec![1.5f32, -2.25, 0.0, f32::MAX];
+        write_f32_file(&tmp, &data).unwrap();
+        assert_eq!(read_f32_file(&tmp).unwrap(), data);
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = mean_std(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((m - 5.0).abs() < 1e-9);
+        assert!((s - 2.138).abs() < 0.01);
+    }
+}

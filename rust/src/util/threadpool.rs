@@ -1,0 +1,149 @@
+//! Scoped data-parallel helpers on std threads (no rayon in this image).
+//!
+//! The native inference engine and the pruners use `par_chunks_mut` /
+//! `par_for` to spread row blocks over cores. Work is split statically —
+//! the workloads here (matmul row blocks, per-projection pruning) are
+//! uniform enough that work stealing would not pay for its complexity.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (capped, overridable via MOSAIC_THREADS).
+pub fn n_threads() -> usize {
+    if let Ok(v) = std::env::var("MOSAIC_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+/// Run `f(index)` for every index in 0..n across the pool.
+pub fn par_for<F>(n: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = n_threads().min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = counter.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Split `data` into contiguous chunks of `chunk` elements and run
+/// `f(chunk_index, chunk)` in parallel. Chunks are disjoint &mut slices.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if data.is_empty() {
+        return;
+    }
+    let chunks: Vec<(usize, &mut [T])> =
+        data.chunks_mut(chunk).enumerate().collect();
+    let threads = n_threads().min(chunks.len());
+    if threads <= 1 {
+        for (i, c) in chunks {
+            f(i, c);
+        }
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    let items: Vec<std::sync::Mutex<Option<(usize, &mut [T])>>> =
+        chunks.into_iter().map(|c| std::sync::Mutex::new(Some(c))).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = counter.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                if let Some((idx, c)) = items[i].lock().unwrap().take() {
+                    f(idx, c);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel map that preserves order.
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    {
+        let slots: Vec<std::sync::Mutex<&mut Option<R>>> =
+            out.iter_mut().map(std::sync::Mutex::new).collect();
+        let counter = AtomicUsize::new(0);
+        let threads = n_threads().min(n.max(1));
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| loop {
+                    let i = counter.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = f(&items[i]);
+                    **slots[i].lock().unwrap() = Some(r);
+                });
+            }
+        });
+    }
+    out.into_iter().map(|x| x.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_for_visits_all() {
+        let sum = AtomicU64::new(0);
+        par_for(1000, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn chunks_disjoint_and_complete() {
+        let mut v = vec![0u32; 1003];
+        par_chunks_mut(&mut v, 64, |idx, c| {
+            for x in c.iter_mut() {
+                *x = idx as u32 + 1;
+            }
+        });
+        assert!(v.iter().all(|&x| x > 0));
+        assert_eq!(v[0], 1);
+        assert_eq!(v[1002], (1002 / 64 + 1) as u32);
+    }
+
+    #[test]
+    fn par_map_order() {
+        let items: Vec<usize> = (0..257).collect();
+        let out = par_map(&items, |&x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,128 @@
+//! Integration: the full RC→PC→eval→finetune pipeline over real
+//! artifacts (skips if `make artifacts` has not run).
+
+use mosaic::coordinator::{choose_category, Mosaic};
+use mosaic::eval::{mean_accuracy, perplexity_native};
+use mosaic::finetune::{merge_lora, train_lora, LoraConfig};
+use mosaic::platform;
+use mosaic::prune::{Category, Uniformity};
+
+fn load(name: &str) -> Option<Mosaic> {
+    Mosaic::load(name).ok()
+}
+
+#[test]
+fn rank_reuse_across_pruning_levels() {
+    let Some(mut mo) = load("tl1_7") else { return };
+    // the paper: profile once, reuse the global rank for any p
+    let r1 = mo.global_rank(Uniformity::Projection, 8).unwrap();
+    let r2 = mo.global_rank(Uniformity::Projection, 8).unwrap();
+    assert_eq!(r1.rank, r2.rank, "rank must be deterministic/reusable");
+    assert_eq!(r1.rank.len(), mo.dense.cfg.n_layers);
+    assert!(r1.rank.iter().all(|r| r.len() == 7));
+}
+
+#[test]
+fn pruned_ppl_ordering_holds() {
+    let Some(mut mo) = load("tl1_7") else { return };
+    let wt = mo.store.split("wikitext2s").unwrap();
+    let seq = mo.dense.cfg.ctx.min(64);
+    let dense = perplexity_native(&mo.dense, &wt, seq, 12);
+    let m20 = mo.prune_wanda(0.2, Uniformity::Projection, 8).unwrap();
+    let m80 = mo.prune_wanda(0.8, Uniformity::Projection, 8).unwrap();
+    let p20 = perplexity_native(&m20, &wt, seq, 12);
+    let p80 = perplexity_native(&m80, &wt, seq, 12);
+    assert!(dense <= p20 * 1.05, "dense {dense} vs 20% {p20}");
+    assert!(p20 < p80, "20% {p20} must beat 80% {p80}");
+}
+
+#[test]
+fn composite_is_smaller_and_sparser_than_unstructured() {
+    let Some(mut mo) = load("tl1_7") else { return };
+    let (un, _) = mo
+        .prune(0.6, Uniformity::Projection, Category::Unstructured, 8)
+        .unwrap();
+    let (co, _) = mo
+        .prune(0.6, Uniformity::Projection, Category::Composite, 8)
+        .unwrap();
+    let (st, _) = mo
+        .prune(0.6, Uniformity::Projection, Category::Structured, 8)
+        .unwrap();
+    // bytes: unstructured unchanged; composite between; structured least
+    assert_eq!(un.model_bytes(), mo.dense.model_bytes());
+    assert!(co.model_bytes() < un.model_bytes());
+    assert!(st.model_bytes() < co.model_bytes());
+    // removed fraction comparable across categories
+    let prunable = mo.dense.cfg.prunable_params();
+    for (name, m) in [("un", &un), ("co", &co), ("st", &st)] {
+        let removed =
+            mosaic::prune::composite::removed_fraction(m, prunable);
+        assert!(
+            (removed - 0.6).abs() < 0.15,
+            "{name} removed {removed}"
+        );
+    }
+}
+
+#[test]
+fn accuracy_degrades_to_chance_at_extreme_sparsity() {
+    let Some(mut mo) = load("tl1_7") else { return };
+    let dense_acc = mean_accuracy(&mo.dense, &mo.store).unwrap();
+    let m = mo.prune_wanda(0.95, Uniformity::Global, 8).unwrap();
+    let acc = mean_accuracy(&m, &mo.store).unwrap();
+    assert!(dense_acc > acc, "dense {dense_acc} vs 95% {acc}");
+    // 4x 4-choice (25%) + 3x 2-choice (50%) -> chance mean ≈ 35.7%
+    assert!(acc < dense_acc.max(45.0), "collapsed model near chance");
+}
+
+#[test]
+fn lora_finetune_improves_pruned_model() {
+    let Some(mut mo) = load("tl1_7") else { return };
+    let (pruned, _) = mo
+        .prune(0.8, Uniformity::Projection, Category::Unstructured, 8)
+        .unwrap();
+    let (rows, n_rows, seq) = mo.store.instruction_rows().unwrap();
+    let cfg = LoraConfig { steps: 25, ..Default::default() };
+    let rt = mo.runtime().unwrap();
+    rt.set_weights(&pruned).unwrap();
+    let res = train_lora(rt, &rows, n_rows, seq, &cfg).unwrap();
+    let first = res.train_curve.first().unwrap().1;
+    let last = res.train_curve.last().unwrap().1;
+    assert!(last < first, "loss must decrease: {first} -> {last}");
+    // merged model runs and stays finite
+    let mut merged = pruned.clone();
+    merge_lora(&mut merged, &res.lora, cfg.rank, cfg.alpha);
+    let wt = mo.store.split("wikitext2s").unwrap();
+    let ppl = perplexity_native(&merged, &wt, pruned.cfg.ctx.min(64), 6);
+    assert!(ppl.is_finite() && ppl > 1.0);
+}
+
+#[test]
+fn deployment_categories_run_on_their_platforms() {
+    let Some(mut mo) = load("tl1_7") else { return };
+    for pf in platform::testbed() {
+        let cat = choose_category(&pf);
+        let (m, _) =
+            mo.prune(0.6, Uniformity::Projection, cat, 8).unwrap();
+        // deployable model must produce finite logits
+        let logits =
+            mosaic::model::engine::forward_full(&m, &[3, 7, 11, 13]);
+        assert!(
+            logits.data.iter().all(|x| x.is_finite()),
+            "{} ({})",
+            pf.name,
+            cat.name()
+        );
+    }
+}
+
+#[test]
+fn vicuna_variant_loads_and_evaluates() {
+    let Some(mut mo) = load("tvic") else { return };
+    let acc = mean_accuracy(&mo.dense, &mo.store).unwrap();
+    assert!(acc > 20.0 && acc <= 100.0);
+    let m = mo.prune_wanda(0.4, Uniformity::Projection, 8).unwrap();
+    let wt = mo.store.split("wikitext2s").unwrap();
+    let ppl = perplexity_native(&m, &wt, m.cfg.ctx.min(64), 8);
+    assert!(ppl.is_finite());
+}

@@ -1,0 +1,202 @@
+//! Property tests (hand-rolled seeded sweeps — proptest is not in this
+//! image) over the planner / pruner / quantizer invariants, independent
+//! of artifacts.
+
+use mosaic::model::config::Proj;
+use mosaic::model::weights::testutil::random_model;
+use mosaic::prune::composite::{split_plan, CompositeOpts};
+use mosaic::prune::planner::{plan, MAX_TARGET};
+use mosaic::prune::{
+    prune_composite, prune_structured, prune_unstructured, Metric,
+    Uniformity,
+};
+use mosaic::quant::{quantize_model, QuantConfig};
+use mosaic::rank::{normalize_rank, GlobalRank};
+use mosaic::util::rng::Pcg32;
+
+fn rand_rank(rng: &mut Pcg32, layers: usize) -> GlobalRank {
+    let mut rank: Vec<Vec<f64>> = (0..layers)
+        .map(|_| (0..7).map(|_| rng.f64() * 3.0).collect())
+        .collect();
+    normalize_rank(&mut rank);
+    GlobalRank { rank, alpha: 5.0 }
+}
+
+#[test]
+fn planner_invariants_sweep() {
+    let mut rng = Pcg32::seeded(0x50 + 1);
+    for trial in 0..300 {
+        let layers = 1 + rng.below(16);
+        let g = rand_rank(&mut rng, layers);
+        let p = rng.f64() * 0.93;
+        for u in [Uniformity::Global, Uniformity::Layer,
+                  Uniformity::Projection] {
+            let pl = plan(&g, p, u);
+            // I1: mean == p
+            assert!(
+                (pl.mean_target() - p).abs() < 2e-3,
+                "trial {trial}: mean {} != {p}",
+                pl.mean_target()
+            );
+            // I2: bounds
+            for t in pl.targets.iter().flatten() {
+                assert!((0.0..=MAX_TARGET + 1e-12).contains(t));
+            }
+            // I3: shape
+            assert_eq!(pl.targets.len(), layers);
+        }
+    }
+}
+
+#[test]
+fn composite_split_preserves_live_fraction() {
+    let mut rng = Pcg32::seeded(77);
+    for _ in 0..200 {
+        let layers = 1 + rng.below(8);
+        let g = rand_rank(&mut rng, layers);
+        let p = rng.f64() * 0.9;
+        let share = rng.f64();
+        let pl = plan(&g, p, Uniformity::Projection);
+        let (st, un) = split_plan(&pl, share);
+        for ((a, b), t) in st
+            .targets
+            .iter()
+            .flatten()
+            .zip(un.targets.iter().flatten())
+            .zip(pl.targets.iter().flatten())
+        {
+            let live = (1.0 - a) * (1.0 - b);
+            assert!(
+                (live - (1.0 - t)).abs() < 1e-9,
+                "live {live} target {t}"
+            );
+        }
+    }
+}
+
+#[test]
+fn unstructured_hits_requested_sparsity_sweep() {
+    let mut rng = Pcg32::seeded(99);
+    for trial in 0..20 {
+        let mut m = random_model(1000 + trial);
+        let g = rand_rank(&mut rng, m.cfg.n_layers);
+        let p = 0.1 + 0.8 * rng.f64();
+        let pl = plan(&g, p, Uniformity::Projection);
+        prune_unstructured(&mut m, &pl, None, Metric::Magnitude);
+        let s = mosaic::prune::unstructured::projection_sparsity(&m);
+        assert!((s - p).abs() < 0.03, "trial {trial}: {s} vs {p}");
+    }
+}
+
+#[test]
+fn structured_never_empties_and_stays_consistent() {
+    let mut rng = Pcg32::seeded(123);
+    for trial in 0..20 {
+        let mut m = random_model(2000 + trial);
+        let g = rand_rank(&mut rng, m.cfg.n_layers);
+        let p = rng.f64() * 0.93;
+        let pl = plan(&g, p, Uniformity::Projection);
+        prune_structured(&mut m, &pl);
+        for l in &m.layers {
+            let hk = l.kept_heads.len();
+            let c = l.kept_channels.len();
+            assert!(hk >= 1 && c >= 1);
+            assert_eq!(l.proj(Proj::Q).shape[1], hk * m.cfg.head_dim);
+            assert_eq!(l.proj(Proj::K).shape[1], hk * m.cfg.head_dim);
+            assert_eq!(l.proj(Proj::V).shape[1], hk * m.cfg.head_dim);
+            assert_eq!(l.proj(Proj::O).shape[0], hk * m.cfg.head_dim);
+            assert_eq!(l.proj(Proj::Gate).shape[1], c);
+            assert_eq!(l.proj(Proj::Up).shape[1], c);
+            assert_eq!(l.proj(Proj::Down).shape[0], c);
+            // kept lists strictly increasing (valid index maps)
+            assert!(l.kept_heads.windows(2).all(|w| w[0] < w[1]));
+            assert!(l.kept_channels.windows(2).all(|w| w[0] < w[1]));
+        }
+        // pruned model produces finite output
+        let out = mosaic::model::engine::forward_full(&m, &[1, 2, 3]);
+        assert!(out.data.iter().all(|x| x.is_finite()), "trial {trial}");
+    }
+}
+
+#[test]
+fn composite_monotone_bytes_in_share() {
+    // more structural share => smaller stored model
+    let mut prev = usize::MAX;
+    for share in [0.0, 0.25, 0.5, 0.75] {
+        let mut m = random_model(42);
+        let g = GlobalRank {
+            rank: vec![vec![1.0; 7]; m.cfg.n_layers],
+            alpha: 5.0,
+        };
+        let pl = plan(&g, 0.7, Uniformity::Global);
+        prune_composite(
+            &mut m,
+            &pl,
+            None,
+            None,
+            CompositeOpts { struct_share: share, use_obs: false },
+        );
+        assert!(
+            m.model_bytes() <= prev,
+            "share {share}: {} > {prev}",
+            m.model_bytes()
+        );
+        prev = m.model_bytes();
+    }
+}
+
+#[test]
+fn quantizer_error_monotone_in_bits_sweep() {
+    for seed in 0..5 {
+        let m = random_model(3000 + seed);
+        let mut last = f64::MAX;
+        for bits in [2u32, 3, 4, 8] {
+            let mut q = m.clone();
+            let mse = quantize_model(&mut q, None, QuantConfig::new(bits));
+            assert!(
+                mse < last * 1.001,
+                "seed {seed} bits {bits}: {mse} !< {last}"
+            );
+            last = mse;
+        }
+    }
+}
+
+#[test]
+fn json_fuzz_roundtrip() {
+    use mosaic::util::json::Json;
+    let mut rng = Pcg32::seeded(314);
+    fn gen(rng: &mut Pcg32, depth: usize) -> Json {
+        match if depth > 3 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.f64() * 2e6).round() / 1000.0 - 1000.0),
+            3 => Json::Str(
+                (0..rng.below(12))
+                    .map(|_| {
+                        let c = b" abc\"\\\n\tXYZ"[rng.below(11)];
+                        c as char
+                    })
+                    .collect::<String>(),
+            ),
+            4 => Json::Arr(
+                (0..rng.below(5)).map(|_| gen(rng, depth + 1)).collect(),
+            ),
+            _ => {
+                let mut o = Json::obj();
+                for i in 0..rng.below(5) {
+                    o.set(&format!("k{i}"), gen(rng, depth + 1));
+                }
+                o
+            }
+        }
+    }
+    for _ in 0..500 {
+        let v = gen(&mut rng, 0);
+        let s = v.to_string();
+        let v2 = Json::parse(&s).unwrap_or_else(|e| {
+            panic!("reparse failed: {e} for {s}")
+        });
+        assert_eq!(v, v2, "roundtrip mismatch for {s}");
+    }
+}

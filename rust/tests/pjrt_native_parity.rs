@@ -1,0 +1,125 @@
+//! Integration: the native rust engine must match the AOT jax/Pallas
+//! graph (via PJRT) bit-closely on dense AND masked weights — the
+//! numerical contract that lets the deployer swap engines.
+//!
+//! Requires artifacts (run `make artifacts` first). Skips gracefully if
+//! they are absent so `cargo test` works in a fresh checkout.
+
+use mosaic::eval::{perplexity_native, perplexity_pjrt};
+use mosaic::model::engine::forward_full;
+use mosaic::model::ModelWeights;
+use mosaic::prune::{plan, prune_unstructured, Metric, Uniformity};
+use mosaic::rank::GlobalRank;
+use mosaic::runtime::ModelRuntime;
+use mosaic::Artifacts;
+
+fn artifacts() -> Option<Artifacts> {
+    Artifacts::discover().ok()
+}
+
+#[test]
+fn native_matches_pjrt_dense() {
+    let Some(a) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let dir = a.model_dir("tl1_7");
+    let weights = ModelWeights::load(&dir).unwrap();
+    let mut rt = ModelRuntime::load(&dir).unwrap();
+    let (bsz, s) = rt.fwd_tokens_shape;
+    // deterministic tokens
+    let toks: Vec<i32> =
+        (0..bsz * s).map(|i| 3 + (i as i32 * 17) % 500).collect();
+    let pjrt_logits = rt.forward(&toks).unwrap();
+    let vocab = weights.cfg.vocab;
+    for bi in 0..bsz {
+        let row: Vec<u16> =
+            toks[bi * s..(bi + 1) * s].iter().map(|&t| t as u16).collect();
+        let native = forward_full(&weights, &row);
+        let mut max_err = 0f32;
+        for i in 0..s * vocab {
+            let p = pjrt_logits[bi * s * vocab + i];
+            let n = native.data[i];
+            max_err = max_err.max((p - n).abs());
+        }
+        assert!(
+            max_err < 2e-2,
+            "batch {bi}: native vs pjrt max err {max_err}"
+        );
+    }
+}
+
+#[test]
+fn native_matches_pjrt_masked() {
+    let Some(a) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let dir = a.model_dir("tl1_7");
+    let mut weights = ModelWeights::load(&dir).unwrap();
+    let rank = GlobalRank {
+        rank: vec![vec![1.0; 7]; weights.cfg.n_layers],
+        alpha: 5.0,
+    };
+    let pl = plan(&rank, 0.5, Uniformity::Global);
+    prune_unstructured(&mut weights, &pl, None, Metric::Magnitude);
+
+    let mut rt = ModelRuntime::load(&dir).unwrap();
+    rt.set_weights(&weights).unwrap();
+    let (bsz, s) = rt.fwd_tokens_shape;
+    let toks: Vec<i32> =
+        (0..bsz * s).map(|i| 3 + (i as i32 * 29) % 500).collect();
+    let pjrt_logits = rt.forward(&toks).unwrap();
+    let vocab = weights.cfg.vocab;
+    let row: Vec<u16> = toks[..s].iter().map(|&t| t as u16).collect();
+    let native = forward_full(&weights, &row);
+    let mut max_err = 0f32;
+    for i in 0..s * vocab {
+        max_err = max_err.max((pjrt_logits[i] - native.data[i]).abs());
+    }
+    assert!(max_err < 2e-2, "masked parity err {max_err}");
+}
+
+#[test]
+fn perplexity_paths_agree() {
+    let Some(a) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let dir = a.model_dir("tl1_7");
+    let weights = ModelWeights::load(&dir).unwrap();
+    let store =
+        mosaic::data::DataStore::load(&a.data_dir()).unwrap();
+    let stream = store.split("wikitext2s").unwrap();
+    let mut rt = ModelRuntime::load(&dir).unwrap();
+    let (b, s) = rt.fwd_tokens_shape;
+    let n_batches = 3;
+    let ppl_pjrt = perplexity_pjrt(&mut rt, &stream, n_batches).unwrap();
+    let ppl_native =
+        perplexity_native(&weights, &stream, s, n_batches * b);
+    let rel = (ppl_pjrt - ppl_native).abs() / ppl_native;
+    assert!(
+        rel < 0.02,
+        "PPL disagree: pjrt {ppl_pjrt} native {ppl_native}"
+    );
+}
+
+#[test]
+fn weight_metric_kernel_matches_rust_pod() {
+    let Some(a) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let dir = a.model_dir("tl1_7");
+    let weights = ModelWeights::load(&dir).unwrap();
+    let mut rt = ModelRuntime::load(&dir).unwrap();
+    let w = weights.layers[0].projs[0].clone();
+    let act: Vec<f32> = (0..w.shape[0]).map(|i| 1.0 + i as f32).collect();
+    let (count, _sum) = rt.weight_metric(&w, &act).unwrap();
+    let ratio = mosaic::rank::pod_outlier_ratio(&w, &act, 5.0);
+    let expect = ratio * w.numel() as f64;
+    assert!(
+        (count as f64 - expect).abs() <= 1.0,
+        "pallas kernel {count} vs rust {expect}"
+    );
+}
