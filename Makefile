@@ -1,0 +1,32 @@
+# Build / verify entry points. Tier-1 is `make build test`; `make check`
+# adds formatting + lint gates (skipped gracefully when the component is
+# not installed in the image).
+
+CARGO ?= cargo
+
+.PHONY: build test fmt check bench
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+fmt:
+	$(CARGO) fmt
+
+check:
+	@if $(CARGO) fmt --version >/dev/null 2>&1; then \
+		$(CARGO) fmt --check; \
+	else \
+		echo "make check: rustfmt unavailable — skipping fmt gate"; \
+	fi
+	@if $(CARGO) clippy --version >/dev/null 2>&1; then \
+		$(CARGO) clippy --all-targets -- -D warnings; \
+	else \
+		echo "make check: clippy unavailable — skipping lint gate"; \
+	fi
+	$(CARGO) test -q
+
+bench:
+	$(CARGO) bench

@@ -1,4 +1,4 @@
-//! End-to-end validation driver (EXPERIMENTS.md §E2E): exercises every
+//! End-to-end validation driver (ARCHITECTURE.md §E2E): exercises every
 //! layer of the stack on a real workload and prints the paper's headline
 //! comparisons —
 //!   * RC: PJRT profile graph + Pallas weight-metric kernel (L1+L2)

@@ -17,7 +17,7 @@ mask multiply of `masked_matmul` fuses into the MXU epilogue instead of a
 semi-structured gather. interpret=True is mandatory here — real TPU
 lowering emits Mosaic custom-calls the CPU PJRT plugin cannot execute, so
 correctness flows through the interpreter and TPU efficiency is estimated
-analytically in DESIGN.md §8.
+analytically in ARCHITECTURE.md (kernel notes).
 """
 
 import functools

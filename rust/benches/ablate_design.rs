@@ -1,4 +1,4 @@
-//! Ablations over the design choices DESIGN.md calls out:
+//! Ablations over the design choices ARCHITECTURE.md calls out:
 //!   A1 — POD outlier threshold α (Eq. 6; paper: "typically five")
 //!   A2 — composite structural share σ (our split of the p budget)
 //!   A3 — planner spreads γ_L/γ_P (the non-uniformity strength)

@@ -59,26 +59,42 @@ fn main() -> anyhow::Result<()> {
     });
 
     println!("{}", "— model variants (batch width 6) —");
-    header(&["variant", "tok/s", "p50-ms", "p95-ms"]);
+    header(&["variant", "tok/s", "p50-ms", "p95-ms", "res-KB"]);
+    // sealed variants run the engine directly on f16/CSR storage — the
+    // first time an unstructured-pruned model serves both smaller and
+    // faster than its dense working copy
+    let unstructured70 = mo.prune_wanda(0.7, Uniformity::Projection,
+                                        samples)?;
+    let mut unstructured70_sealed = unstructured70.clone();
+    unstructured70_sealed.compact();
+    let composite60 =
+        mo.prune(0.6, Uniformity::Projection, Category::Composite,
+                 samples)?.0;
+    let mut composite60_sealed = composite60.clone();
+    composite60_sealed.compact();
     let variants: Vec<(&str, mosaic::model::ModelWeights)> = vec![
         ("dense", mo.dense.clone()),
-        ("composite60",
-         mo.prune(0.6, Uniformity::Projection, Category::Composite,
-                  samples)?.0),
+        ("unstr70", unstructured70),
+        ("unstr70-seal", unstructured70_sealed),
+        ("composite60", composite60),
+        ("comp60-seal", composite60_sealed),
         ("structured60",
          mo.prune(0.6, Uniformity::Projection, Category::Structured,
                   samples)?.0),
     ];
     for (name, model) in variants {
+        let resident = model.resident_bytes();
         let srv = Server::start(
             model, ServeConfig { max_batch: 6, max_queue: 256, ..Default::default() }, 0)?;
         let (tps, p50, p95) = drive(&srv, &trace);
-        println!("{name:>12}{tps:>12.0}{p50:>12.2}{p95:>12.2}");
+        println!("{name:>12}{tps:>12.0}{p50:>12.2}{p95:>12.2}{:>12}",
+                 resident / 1024);
         b.row("variants", rec(&[
             ("variant", Json::str(name)),
             ("tok_per_s", Json::num(tps)),
             ("p50_ms", Json::num(p50)),
             ("p95_ms", Json::num(p95)),
+            ("resident_bytes", Json::num(resident as f64)),
             ("occupancy", Json::num(srv.stats.mean_occupancy())),
         ]));
         srv.shutdown();

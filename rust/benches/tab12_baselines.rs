@@ -15,7 +15,7 @@ fn main() -> anyhow::Result<()> {
     let mut mo = Mosaic::load("tl1_7")?;
     // paper's setting: LLaMa-7B at 70 % (note: our synthetic tasks are
     // easier than the paper's suite, so absolute gaps compress — see
-    // EXPERIMENTS.md TAB12 discussion)
+    // ARCHITECTURE.md §Benches TAB12 discussion)
     let p = 0.7;
     let samples = Bench::samples();
     let stats = mo.activation_stats(samples)?;

@@ -3,7 +3,8 @@
 //! and drives this module directly).
 //!
 //! Every bench prints the paper artifact's rows/series and writes
-//! `bench_results/<id>.json` for EXPERIMENTS.md bookkeeping.
+//! `bench_results/<id>.json` for the perf-trajectory bookkeeping
+//! (ARCHITECTURE.md §Perf).
 
 use std::path::PathBuf;
 

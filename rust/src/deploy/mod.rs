@@ -1,24 +1,27 @@
 //! Post-Pruning Optimizer deployment formats (PC component 10: "convert
-//! the model weights into different inference formats") — the on-disk
-//! side of the paper's size story:
+//! the model weights into different inference formats") — both the
+//! on-disk side of the paper's size story and, since the storage-backend
+//! refactor, the *runtime* formats the engine executes directly:
 //!
-//!   * DenseF32 — the working format (what the engine mmaps today);
+//!   * DenseF32 — the mutable working format the pruners operate on;
 //!   * DenseF16 — half-precision storage (Table II measures fp16 sizes);
-//!   * SparseCsr — compressed rows for unstructured-pruned projections:
-//!     a masked model whose *resident* bytes don't shrink still ships a
-//!     smaller file (and is what a DeepSparse/CUTLASS-style backend
-//!     would ingest).
+//!   * SparseCsr — compressed rows for unstructured-pruned projections.
 //!
 //! `choose_encoding` picks per projection: CSR when the zero fraction
-//! pays for the index overhead, else dense f16.
+//! pays for the index overhead, else dense f16. `ModelWeights::compact`
+//! applies that choice in memory ([`crate::tensor::ProjStorage`]), and
+//! [`load_encoded`] reconstructs storage straight from the encoded bytes
+//! — no densify round-trip on either path. See ARCHITECTURE.md §Storage
+//! backends.
 
-pub mod f16;
+pub use crate::util::f16;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use crate::model::config::Proj;
-use crate::model::ModelWeights;
-use crate::tensor::Tensor;
+use crate::model::config::{ModelConfig, Proj};
+use crate::model::{LayerWeights, ModelWeights};
+use crate::tensor::{ProjStorage, Tensor};
+use crate::util::json::Json;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Encoding {
@@ -27,23 +30,56 @@ pub enum Encoding {
     SparseCsr,
 }
 
-/// Serialized size (bytes) of one tensor under an encoding.
-pub fn encoded_bytes(t: &Tensor, e: Encoding) -> usize {
-    match e {
-        Encoding::DenseF32 => 4 * t.numel(),
-        Encoding::DenseF16 => 2 * t.numel(),
-        Encoding::SparseCsr => {
-            let nnz = t.numel() - t.zero_count();
-            // row pointers (u32) + column indices (u16) + f16 values
-            4 * (t.rows() + 1) + 2 * nnz + 2 * nnz
+impl Encoding {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Encoding::DenseF32 => "f32",
+            Encoding::DenseF16 => "f16",
+            Encoding::SparseCsr => "csr",
         }
+    }
+
+    pub fn from_name(s: &str) -> Result<Encoding> {
+        Ok(match s {
+            "f32" => Encoding::DenseF32,
+            "f16" => Encoding::DenseF16,
+            "csr" => Encoding::SparseCsr,
+            other => anyhow::bail!("unknown encoding '{other}'"),
+        })
     }
 }
 
-/// Pick the cheapest encoding for a tensor.
-pub fn choose_encoding(t: &Tensor) -> Encoding {
-    if encoded_bytes(t, Encoding::SparseCsr)
-        < encoded_bytes(t, Encoding::DenseF16)
+/// Serialized size (bytes) under an encoding, from pre-computed
+/// dimensions. `nnz` is only consulted for CSR — callers that already
+/// know it (CSR storage caches it at construction) avoid the O(n)
+/// rescan `encoded_bytes` would do.
+pub fn encoded_bytes_for(
+    rows: usize,
+    numel: usize,
+    nnz: usize,
+    e: Encoding,
+) -> usize {
+    match e {
+        Encoding::DenseF32 => 4 * numel,
+        Encoding::DenseF16 => 2 * numel,
+        // row pointers (u32) + column indices (u16) + f16 values
+        Encoding::SparseCsr => 4 * (rows + 1) + 2 * nnz + 2 * nnz,
+    }
+}
+
+/// Serialized size (bytes) of one tensor under an encoding (one scan).
+pub fn encoded_bytes(t: &Tensor, e: Encoding) -> usize {
+    let nnz = match e {
+        Encoding::SparseCsr => t.numel() - t.zero_count(),
+        _ => 0,
+    };
+    encoded_bytes_for(t.rows(), t.numel(), nnz, e)
+}
+
+/// Pick the cheapest encoding from pre-computed dimensions.
+pub fn choose_encoding_for(rows: usize, numel: usize, nnz: usize) -> Encoding {
+    if encoded_bytes_for(rows, numel, nnz, Encoding::SparseCsr)
+        < encoded_bytes_for(rows, numel, nnz, Encoding::DenseF16)
     {
         Encoding::SparseCsr
     } else {
@@ -51,172 +87,392 @@ pub fn choose_encoding(t: &Tensor) -> Encoding {
     }
 }
 
+/// Pick the cheapest encoding for a tensor (single zero-count scan —
+/// the sizing loops used to rescan per candidate encoding).
+pub fn choose_encoding(t: &Tensor) -> Encoding {
+    let nnz = t.numel() - t.zero_count();
+    choose_encoding_for(t.rows(), t.numel(), nnz)
+}
+
+/// Seal a dense tensor into runtime storage under an explicit encoding.
+pub fn seal(t: &Tensor, e: Encoding) -> ProjStorage {
+    match e {
+        Encoding::DenseF32 => ProjStorage::from_dense(t.clone()),
+        Encoding::DenseF16 => ProjStorage::seal_f16(t),
+        Encoding::SparseCsr => ProjStorage::seal_csr(t),
+    }
+}
+
+/// Serialize runtime storage in its own encoding — sealed backends
+/// stream their buffers out directly (no densify round-trip); a dense
+/// f32 working copy gets `choose_encoding` applied first.
+pub fn encode_storage(s: &ProjStorage) -> (Encoding, Vec<u8>) {
+    match s {
+        ProjStorage::DenseF32(t) => {
+            let e = choose_encoding(t);
+            (e, encode(t, e))
+        }
+        ProjStorage::DenseF16 { bits, .. } => {
+            let mut out = Vec::with_capacity(2 * bits.len());
+            for b in bits {
+                out.extend_from_slice(&b.to_le_bytes());
+            }
+            (Encoding::DenseF16, out)
+        }
+        ProjStorage::SparseCsr { row_ptr, col_idx, vals_f16, .. } => {
+            let mut out =
+                Vec::with_capacity(4 * row_ptr.len() + 4 * vals_f16.len());
+            for p in row_ptr {
+                out.extend_from_slice(&p.to_le_bytes());
+            }
+            for c in col_idx {
+                out.extend_from_slice(&c.to_le_bytes());
+            }
+            for v in vals_f16 {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            (Encoding::SparseCsr, out)
+        }
+    }
+}
+
 /// Encode a tensor; `decode` inverts (f16 rounding is lossy by design).
 pub fn encode(t: &Tensor, e: Encoding) -> Vec<u8> {
-    let mut out = Vec::with_capacity(encoded_bytes(t, e) + 16);
     match e {
         Encoding::DenseF32 => {
+            let mut out = Vec::with_capacity(4 * t.numel());
             for &v in &t.data {
                 out.extend_from_slice(&v.to_le_bytes());
             }
+            out
         }
         Encoding::DenseF16 => {
+            let mut out = Vec::with_capacity(2 * t.numel());
             for &v in &t.data {
                 out.extend_from_slice(&f16::to_bits(v).to_le_bytes());
             }
+            out
         }
-        Encoding::SparseCsr => {
-            let (r, c) = (t.rows(), t.cols());
-            let mut rowptr = Vec::with_capacity(r + 1);
-            let mut cols: Vec<u16> = Vec::new();
-            let mut vals: Vec<u16> = Vec::new();
-            rowptr.push(0u32);
-            for i in 0..r {
-                for j in 0..c {
-                    let v = t.data[i * c + j];
-                    if v != 0.0 {
-                        cols.push(j as u16);
-                        vals.push(f16::to_bits(v));
-                    }
-                }
-                rowptr.push(cols.len() as u32);
-            }
-            for p in rowptr {
-                out.extend_from_slice(&p.to_le_bytes());
-            }
-            for cj in cols {
-                out.extend_from_slice(&cj.to_le_bytes());
-            }
-            for v in vals {
-                out.extend_from_slice(&v.to_le_bytes());
-            }
-        }
+        Encoding::SparseCsr => encode_storage(&ProjStorage::seal_csr(t)).1,
     }
-    out
 }
 
-pub fn decode(
+/// Parse encoded bytes straight into runtime storage (2-D tensors only;
+/// this is what `load_encoded` uses so a shipped CSR/f16 projection
+/// never materializes as dense f32).
+pub fn decode_storage(
     bytes: &[u8],
     shape: &[usize],
     e: Encoding,
-) -> Result<Tensor> {
-    let numel: usize = shape.iter().product();
-    let mut t = Tensor::zeros(shape);
+) -> Result<ProjStorage> {
+    anyhow::ensure!(shape.len() == 2, "projection storage is 2-D");
+    let (r, c) = (shape[0], shape[1]);
     match e {
-        Encoding::DenseF32 => {
-            anyhow::ensure!(bytes.len() == 4 * numel, "f32 size");
-            for (i, ch) in bytes.chunks_exact(4).enumerate() {
-                t.data[i] =
-                    f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
-            }
-        }
+        Encoding::DenseF32 => Ok(ProjStorage::from_dense(decode(
+            bytes, shape, e,
+        )?)),
         Encoding::DenseF16 => {
-            anyhow::ensure!(bytes.len() == 2 * numel, "f16 size");
-            for (i, ch) in bytes.chunks_exact(2).enumerate() {
-                t.data[i] =
-                    f16::from_bits(u16::from_le_bytes([ch[0], ch[1]]));
-            }
+            anyhow::ensure!(bytes.len() == 2 * r * c, "f16 size");
+            let bits = bytes
+                .chunks_exact(2)
+                .map(|ch| u16::from_le_bytes([ch[0], ch[1]]))
+                .collect();
+            Ok(ProjStorage::DenseF16 { bits, shape: [r, c] })
         }
         Encoding::SparseCsr => {
-            let (r, c) = (shape[0], shape[1]);
             let ptr_bytes = 4 * (r + 1);
             anyhow::ensure!(bytes.len() >= ptr_bytes, "csr header");
-            let mut rowptr = Vec::with_capacity(r + 1);
+            let mut row_ptr = Vec::with_capacity(r + 1);
             for ch in bytes[..ptr_bytes].chunks_exact(4) {
-                rowptr.push(u32::from_le_bytes([
+                row_ptr.push(u32::from_le_bytes([
                     ch[0], ch[1], ch[2], ch[3],
-                ]) as usize);
+                ]));
             }
-            let nnz = *rowptr.last().unwrap();
+            anyhow::ensure!(
+                row_ptr.first() == Some(&0),
+                "csr row_ptr must start at 0"
+            );
+            for w in row_ptr.windows(2) {
+                anyhow::ensure!(w[0] <= w[1], "csr row_ptr not monotone");
+            }
+            let nnz = *row_ptr.last().unwrap() as usize;
             let cols_off = ptr_bytes;
             let vals_off = cols_off + 2 * nnz;
             anyhow::ensure!(
                 bytes.len() == vals_off + 2 * nnz,
                 "csr payload size"
             );
-            for i in 0..r {
-                for k in rowptr[i]..rowptr[i + 1] {
-                    let cb = &bytes[cols_off + 2 * k..cols_off + 2 * k + 2];
-                    let vb = &bytes[vals_off + 2 * k..vals_off + 2 * k + 2];
-                    let j = u16::from_le_bytes([cb[0], cb[1]]) as usize;
-                    anyhow::ensure!(j < c, "csr col oob");
-                    t.data[i * c + j] = f16::from_bits(
-                        u16::from_le_bytes([vb[0], vb[1]]),
-                    );
-                }
+            let col_idx: Vec<u16> = bytes[cols_off..vals_off]
+                .chunks_exact(2)
+                .map(|ch| u16::from_le_bytes([ch[0], ch[1]]))
+                .collect();
+            for &j in &col_idx {
+                anyhow::ensure!((j as usize) < c, "csr col oob");
             }
+            let vals_f16: Vec<u16> = bytes[vals_off..]
+                .chunks_exact(2)
+                .map(|ch| u16::from_le_bytes([ch[0], ch[1]]))
+                .collect();
+            Ok(ProjStorage::SparseCsr {
+                row_ptr,
+                col_idx,
+                vals_f16,
+                shape: [r, c],
+                nnz,
+            })
         }
     }
-    Ok(t)
+}
+
+/// Decode to a dense f32 tensor (norms/embeddings, tests, tooling).
+pub fn decode(
+    bytes: &[u8],
+    shape: &[usize],
+    e: Encoding,
+) -> Result<Tensor> {
+    let numel: usize = shape.iter().product();
+    match e {
+        Encoding::DenseF32 => {
+            anyhow::ensure!(bytes.len() == 4 * numel, "f32 size");
+            let mut t = Tensor::zeros(shape);
+            for (i, ch) in bytes.chunks_exact(4).enumerate() {
+                t.data[i] =
+                    f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+            }
+            Ok(t)
+        }
+        Encoding::DenseF16 => {
+            anyhow::ensure!(bytes.len() == 2 * numel, "f16 size");
+            let mut t = Tensor::zeros(shape);
+            for (i, ch) in bytes.chunks_exact(2).enumerate() {
+                t.data[i] =
+                    f16::from_bits(u16::from_le_bytes([ch[0], ch[1]]));
+            }
+            Ok(t)
+        }
+        Encoding::SparseCsr => {
+            Ok(decode_storage(bytes, shape, e)?.to_dense())
+        }
+    }
 }
 
 /// Total shipped size of a model under per-projection `choose_encoding`
-/// (embeddings/norms/head stay dense f16).
+/// (embeddings/head ship f16; norms ship exact f32). Sealed projections
+/// reuse their cached nnz instead of rescanning.
 pub fn shipped_bytes(m: &ModelWeights) -> usize {
-    let mut total = 2
-        * (m.embed.numel()
-            + m.lm_head.numel()
-            + m.final_norm.len());
+    let mut total = 2 * (m.embed.numel() + m.lm_head.numel())
+        + 4 * m.final_norm.len();
     for l in &m.layers {
-        total += 2 * (l.attn_norm.len() + l.ffn_norm.len());
+        total += 4 * (l.attn_norm.len() + l.ffn_norm.len());
         for &p in Proj::all().iter() {
-            let t = l.proj(p);
-            total += encoded_bytes(t, choose_encoding(t));
+            total += match l.proj(p) {
+                ProjStorage::DenseF32(t) => {
+                    let nnz = t.numel() - t.zero_count();
+                    encoded_bytes_for(
+                        t.rows(),
+                        t.numel(),
+                        nnz,
+                        choose_encoding_for(t.rows(), t.numel(), nnz),
+                    )
+                }
+                sealed => sealed.resident_bytes(),
+            };
         }
     }
     total
 }
 
-/// Write the whole model in deployment format (header JSON + blobs).
-pub fn export_model(m: &ModelWeights, path: &std::path::Path) -> Result<usize> {
-    use crate::util::json::Json;
-    let mut blobs: Vec<u8> = Vec::new();
-    let mut entries = Vec::new();
-    let mut push = |name: String, t: &Tensor, blobs: &mut Vec<u8>| {
-        let e = if name.contains('.') {
-            choose_encoding(t)
-        } else {
-            Encoding::DenseF16
-        };
-        let data = encode(t, e);
+struct BlobWriter {
+    blobs: Vec<u8>,
+    entries: Vec<Json>,
+}
+
+impl BlobWriter {
+    fn add(&mut self, name: &str, shape: &[usize], e: Encoding, data: &[u8]) {
         let mut o = Json::obj();
-        o.set("name", Json::str(&name));
+        o.set("name", Json::str(name));
         o.set(
             "shape",
             Json::from_f64s(
-                &t.shape.iter().map(|&s| s as f64).collect::<Vec<_>>(),
+                &shape.iter().map(|&s| s as f64).collect::<Vec<_>>(),
             ),
         );
-        o.set(
-            "encoding",
-            Json::str(match e {
-                Encoding::DenseF32 => "f32",
-                Encoding::DenseF16 => "f16",
-                Encoding::SparseCsr => "csr",
-            }),
-        );
-        o.set("offset", Json::num(blobs.len() as f64));
+        o.set("encoding", Json::str(e.name()));
+        o.set("offset", Json::num(self.blobs.len() as f64));
         o.set("bytes", Json::num(data.len() as f64));
-        blobs.extend_from_slice(&data);
-        entries.push(o);
-    };
-    push("embed".into(), &m.embed, &mut blobs);
+        self.blobs.extend_from_slice(data);
+        self.entries.push(o);
+    }
+
+    fn add_tensor(&mut self, name: &str, t: &Tensor, e: Encoding) {
+        let data = encode(t, e);
+        self.add(name, &t.shape, e, &data);
+    }
+
+    fn add_vec(&mut self, name: &str, v: &[f32]) {
+        let t = Tensor::new(v.to_vec(), vec![v.len()]);
+        self.add_tensor(name, &t, Encoding::DenseF32);
+    }
+}
+
+fn usizes_json(v: &[usize]) -> Json {
+    Json::from_f64s(&v.iter().map(|&x| x as f64).collect::<Vec<_>>())
+}
+
+/// Write the whole model in deployment format (header JSON + blobs).
+/// The header carries the config and per-layer kept structure so
+/// [`load_encoded`] can rebuild a runnable `ModelWeights` whose
+/// projections live directly in their encoded storage backend.
+pub fn export_model(m: &ModelWeights, path: &std::path::Path) -> Result<usize> {
+    let mut w = BlobWriter { blobs: Vec::new(), entries: Vec::new() };
+    w.add_tensor("embed", &m.embed, Encoding::DenseF16);
     for (li, l) in m.layers.iter().enumerate() {
+        w.add_vec(&format!("l{li}.attn_norm"), &l.attn_norm);
+        w.add_vec(&format!("l{li}.ffn_norm"), &l.ffn_norm);
         for &p in Proj::all().iter() {
-            push(format!("l{li}.{}", p.name()), l.proj(p), &mut blobs);
+            let s = l.proj(p);
+            let (e, data) = encode_storage(s);
+            let shape = s.shape();
+            w.add(&format!("l{li}.{}", p.name()), &shape, e, &data);
         }
     }
-    push("lm_head".into(), &m.lm_head, &mut blobs);
+    w.add_vec("final_norm", &m.final_norm);
+    w.add_tensor("lm_head", &m.lm_head, Encoding::DenseF16);
+
     let mut header = Json::obj();
     header.set("model", Json::str(&m.cfg.name));
-    header.set("tensors", Json::Arr(entries));
+    header.set("version", Json::num(2.0));
+    header.set("config", m.cfg.to_json());
+    header.set(
+        "layers",
+        Json::Arr(
+            m.layers
+                .iter()
+                .map(|l| {
+                    let mut o = Json::obj();
+                    o.set("kept_heads", usizes_json(&l.kept_heads));
+                    o.set("kept_channels", usizes_json(&l.kept_channels));
+                    o
+                })
+                .collect(),
+        ),
+    );
+    header.set("tensors", Json::Arr(w.entries));
     let hs = header.to_string();
     let mut file = Vec::new();
     file.extend_from_slice(&(hs.len() as u64).to_le_bytes());
     file.extend_from_slice(hs.as_bytes());
-    file.extend_from_slice(&blobs);
+    file.extend_from_slice(&w.blobs);
     std::fs::write(path, &file)?;
     Ok(file.len())
+}
+
+type TensorTable =
+    std::collections::HashMap<String, (Vec<usize>, Encoding, usize, usize)>;
+
+fn fetch_blob<'a>(
+    table: &TensorTable,
+    blobs: &'a [u8],
+    name: &str,
+) -> Result<(Vec<usize>, Encoding, &'a [u8])> {
+    let (shape, e, off, len) = table
+        .get(name)
+        .with_context(|| format!("deploy tensor {name}"))?
+        .clone();
+    Ok((shape, e, &blobs[off..off + len]))
+}
+
+/// Load a deployment file into a runnable `ModelWeights`, constructing
+/// each projection's [`ProjStorage`] directly from the encoded bytes —
+/// a 70 % CSR projection is never densified to f32 on the way in.
+pub fn load_encoded(path: &std::path::Path) -> Result<ModelWeights> {
+    let file = std::fs::read(path)?;
+    anyhow::ensure!(file.len() >= 8, "deploy file truncated");
+    let hlen = u64::from_le_bytes(file[..8].try_into().unwrap()) as usize;
+    anyhow::ensure!(file.len() >= 8 + hlen, "deploy header truncated");
+    let header = std::str::from_utf8(&file[8..8 + hlen])
+        .map_err(|_| anyhow::anyhow!("deploy header not utf8"))?;
+    let j = Json::parse(header)
+        .map_err(|e| anyhow::anyhow!("deploy header: {e}"))?;
+    let cfg = ModelConfig::from_json(
+        j.get("config")
+            .context("deploy header missing config (v1 file? re-export)")?,
+    )?;
+    let blobs = &file[8 + hlen..];
+
+    let mut table: TensorTable = TensorTable::new();
+    for e in j.get("tensors").and_then(|v| v.as_arr()).context("tensors")? {
+        let name = e
+            .get("name")
+            .and_then(|v| v.as_str())
+            .context("tensor name")?;
+        let shape: Vec<usize> = e
+            .get("shape")
+            .and_then(|v| v.as_arr())
+            .context("tensor shape")?
+            .iter()
+            .map(|s| {
+                s.as_usize()
+                    .with_context(|| format!("tensor shape entry for {name}"))
+            })
+            .collect::<Result<Vec<usize>>>()?;
+        let enc = Encoding::from_name(
+            e.get("encoding")
+                .and_then(|v| v.as_str())
+                .context("tensor encoding")?,
+        )?;
+        let offset =
+            e.get("offset").and_then(|v| v.as_usize()).context("offset")?;
+        let nbytes =
+            e.get("bytes").and_then(|v| v.as_usize()).context("bytes")?;
+        anyhow::ensure!(offset + nbytes <= blobs.len(), "blob out of range");
+        table.insert(name.to_string(), (shape, enc, offset, nbytes));
+    }
+    let dense = |name: &str| -> Result<Tensor> {
+        let (shape, e, b) = fetch_blob(&table, blobs, name)?;
+        decode(b, &shape, e)
+    };
+
+    let layers_meta =
+        j.get("layers").and_then(|v| v.as_arr()).context("deploy layers")?;
+    anyhow::ensure!(layers_meta.len() == cfg.n_layers, "layer count");
+    let mut layers = Vec::with_capacity(cfg.n_layers);
+    for (li, lm) in layers_meta.iter().enumerate() {
+        let kept = |key: &str| -> Result<Vec<usize>> {
+            lm.get(key)
+                .and_then(|v| v.as_arr())
+                .with_context(|| format!("l{li}.{key}"))?
+                .iter()
+                .map(|x| {
+                    x.as_usize()
+                        .with_context(|| format!("l{li}.{key} entry"))
+                })
+                .collect::<Result<Vec<usize>>>()
+        };
+        let mut projs: Vec<ProjStorage> = Vec::with_capacity(7);
+        for &p in Proj::all().iter() {
+            let (shape, e, b) =
+                fetch_blob(&table, blobs, &format!("l{li}.{}", p.name()))?;
+            projs.push(decode_storage(b, &shape, e)?);
+        }
+        let projs: [ProjStorage; 7] = projs
+            .try_into()
+            .map_err(|_| anyhow::anyhow!("projection count"))?;
+        layers.push(LayerWeights {
+            attn_norm: dense(&format!("l{li}.attn_norm"))?.data,
+            ffn_norm: dense(&format!("l{li}.ffn_norm"))?.data,
+            projs,
+            kept_heads: kept("kept_heads")?,
+            kept_channels: kept("kept_channels")?,
+        });
+    }
+    Ok(ModelWeights {
+        embed: dense("embed")?,
+        lm_head: dense("lm_head")?,
+        final_norm: dense("final_norm")?.data,
+        cfg,
+        layers,
+    })
 }
 
 #[cfg(test)]
@@ -273,6 +529,43 @@ mod tests {
     }
 
     #[test]
+    fn randomized_sparsity_storage_byte_roundtrip() {
+        // every encoding, across random sparsity levels: bytes →
+        // decode_storage → re-encode must be stable, and the storage
+        // must agree with the dense decode
+        let mut rng = Pcg32::seeded(44);
+        for trial in 0u64..12 {
+            let mut t = rand_t(100 + trial, 9 + trial as usize, 17);
+            let sparsity = rng.f64();
+            for v in t.data.iter_mut() {
+                if rng.f64() < sparsity {
+                    *v = 0.0;
+                }
+            }
+            for e in
+                [Encoding::DenseF32, Encoding::DenseF16, Encoding::SparseCsr]
+            {
+                let bytes = encode(&t, e);
+                assert_eq!(
+                    bytes.len(),
+                    encoded_bytes(&t, e),
+                    "size formula mismatch for {}",
+                    e.name()
+                );
+                let s = decode_storage(&bytes, &t.shape, e).unwrap();
+                let dense = decode(&bytes, &t.shape, e).unwrap();
+                assert_eq!(s.to_dense().data, dense.data);
+                // re-encode is byte-identical (canonical form)
+                let (e2, bytes2) = encode_storage(&s);
+                if e != Encoding::DenseF32 {
+                    assert_eq!(e2, e);
+                    assert_eq!(bytes2, bytes, "trial {trial} {}", e.name());
+                }
+            }
+        }
+    }
+
+    #[test]
     fn choose_encoding_crossover() {
         let dense = rand_t(4, 16, 16);
         assert_eq!(choose_encoding(&dense), Encoding::DenseF16);
@@ -283,20 +576,27 @@ mod tests {
             }
         }
         assert_eq!(choose_encoding(&sparse), Encoding::SparseCsr);
+        // the nnz-parameterized variant agrees with the scanning one
+        let nnz = sparse.numel() - sparse.zero_count();
+        assert_eq!(
+            choose_encoding_for(sparse.rows(), sparse.numel(), nnz),
+            Encoding::SparseCsr
+        );
     }
 
     #[test]
     fn shipped_bytes_shrink_with_unstructured_pruning() {
-        // the paper: UP doesn't shrink the RESIDENT model — but the
-        // deployment FILE should shrink via CSR
+        // the paper: UP doesn't shrink the RESIDENT model (until
+        // compact()) — but the deployment FILE should shrink via CSR
         let m = random_model(401);
         let dense_file = shipped_bytes(&m);
         let mut pruned = m.clone();
         for l in pruned.layers.iter_mut() {
             for p in l.projs.iter_mut() {
+                let t = p.dense_mut();
                 let sc: Vec<f64> =
-                    p.data.iter().map(|x| x.abs() as f64).collect();
-                crate::prune::unstructured::mask_lowest(p, &sc, 0.8);
+                    t.data.iter().map(|x| x.abs() as f64).collect();
+                crate::prune::unstructured::mask_lowest(t, &sc, 0.8);
             }
         }
         assert_eq!(pruned.model_bytes(), m.model_bytes());
@@ -305,6 +605,10 @@ mod tests {
             "CSR file must shrink: {} vs {dense_file}",
             shipped_bytes(&pruned)
         );
+        // sealing does not change what would be shipped
+        let mut sealed = pruned.clone();
+        sealed.compact();
+        assert_eq!(shipped_bytes(&sealed), shipped_bytes(&pruned));
     }
 
     #[test]
@@ -319,7 +623,47 @@ mod tests {
         let header = std::str::from_utf8(&bytes[8..8 + hlen]).unwrap();
         let j = crate::util::json::Json::parse(header).unwrap();
         let tensors = j.get("tensors").unwrap().as_arr().unwrap();
-        assert_eq!(tensors.len(), 1 + m.cfg.n_layers * 7 + 1);
+        // embed + per-layer (2 norms + 7 projs) + final_norm + lm_head
+        assert_eq!(tensors.len(), 1 + m.cfg.n_layers * 9 + 2);
+        assert!(j.get("config").is_some());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn export_load_roundtrip_without_densify() {
+        use crate::model::engine::forward_full;
+        // prune 70% so CSR is chosen, then ship and reload
+        let mut m = random_model(403);
+        for l in m.layers.iter_mut() {
+            for p in l.projs.iter_mut() {
+                let t = p.dense_mut();
+                let sc: Vec<f64> =
+                    t.data.iter().map(|x| x.abs() as f64).collect();
+                crate::prune::unstructured::mask_lowest(t, &sc, 0.7);
+            }
+        }
+        let path = std::env::temp_dir().join("mosaic_export_rt.bin");
+        export_model(&m, &path).unwrap();
+        let loaded = load_encoded(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        // projections arrive sealed, not as densified f32 copies
+        assert!(loaded.is_compacted());
+        assert!(loaded
+            .layers
+            .iter()
+            .flat_map(|l| l.projs.iter())
+            .all(|s| !s.is_dense_f32()));
+        assert!(loaded.resident_bytes() < m.resident_bytes());
+        // same structure, near-identical logits (f16 rounding only)
+        assert_eq!(loaded.cfg.n_layers, m.cfg.n_layers);
+        let toks: Vec<u16> = vec![1, 8, 3, 5];
+        let a = forward_full(&m, &toks);
+        let b = forward_full(&loaded, &toks);
+        for (x, y) in a.data.iter().zip(b.data.iter()) {
+            assert!(
+                (x - y).abs() < 5e-2 * (1.0 + x.abs()),
+                "{x} vs {y}"
+            );
+        }
     }
 }

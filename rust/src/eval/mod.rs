@@ -146,7 +146,11 @@ pub struct MeasuredPerf {
     pub latency_std: f64,
     pub prefill_s: f64,
     pub decode_s: f64,
+    /// Dense-f32-serialized size (the paper's UP/SP asymmetry axis).
     pub model_bytes: usize,
+    /// True in-memory size under the current storage backends — drops
+    /// after `ModelWeights::compact()` even for unstructured pruning.
+    pub resident_bytes: usize,
     pub kv_bytes: usize,
 }
 
@@ -174,6 +178,7 @@ pub fn measure_native(
         prefill_s: pre,
         decode_s: dec,
         model_bytes: m.model_bytes(),
+        resident_bytes: m.resident_bytes(),
         kv_bytes: st.kv_bytes(),
     }
 }
@@ -202,7 +207,7 @@ mod tests {
         let mut wrecked = m.clone();
         for l in wrecked.layers.iter_mut() {
             for p in l.projs.iter_mut() {
-                for x in p.data.iter_mut() {
+                for x in p.dense_mut().data.iter_mut() {
                     *x = 0.0;
                 }
             }

@@ -233,8 +233,8 @@ mod tests {
         }
         merge_lora(&mut m, &lora, 2, 8.0);
         // delta = (8/2) * 0.01*0.5*2 = 0.04 everywhere
-        let dq = m.layers[0].projs[0].data[0]
-            - orig.layers[0].projs[0].data[0];
+        let dq = m.layers[0].projs[0].dense().data[0]
+            - orig.layers[0].projs[0].dense().data[0];
         assert!((dq - 0.04).abs() < 1e-5, "delta {dq}");
     }
 

@@ -16,8 +16,9 @@
 //!   engine that runs arbitrary structurally-pruned shapes (the SLM
 //!   Deployer target), validated against the PJRT path.
 //!
-//! See DESIGN.md for the experiment index and EXPERIMENTS.md for
-//! paper-vs-measured results.
+//! See ARCHITECTURE.md for the layer/module map, the runtime storage
+//! backends (f16/CSR projections on the serving hot path), and the
+//! perf/bench bookkeeping conventions.
 
 pub mod bench_support;
 pub mod coordinator;

@@ -271,11 +271,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         mo.dense.clone()
     };
+    // --seal 1 (default for pruned models): run the serving hot path on
+    // f16/CSR storage — lower resident bytes, faster decode, f16-level
+    // rounding. --seal 0 serves the exact f32 weights the quality
+    // numbers were measured on.
+    let seal = args.usize("seal", if p > 0.0 { 1 } else { 0 }) != 0;
+    let model = if seal {
+        let mut m = model;
+        m.compact();
+        println!("sealed projections into f16/CSR storage (--seal 0 \
+                  serves exact f32)");
+        m
+    } else {
+        model
+    };
     let port = args.usize("port", 7171) as u16;
     let cfg = mosaic::serve::ServeConfig {
         max_batch: args.usize("batch", 8),
         ..Default::default()
     };
+    println!(
+        "model resident: {} KB ({} KB as dense f32)",
+        model.resident_bytes() / 1024,
+        model.model_bytes() / 1024
+    );
     let srv = mosaic::serve::Server::start(model, cfg, port)?;
     println!(
         "serving {} (p={p}) on {} — line-JSON: \
@@ -302,17 +321,19 @@ fn cmd_export(args: &Args) -> Result<()> {
     let u = parse_uniformity(&args.get("uniformity", "projection"))?;
     let c = parse_category(&args.get("category", "composite"))?;
     let n = args.usize("samples", DEFAULT_CALIB_SAMPLES);
-    let (m, _) = mo.prune(p, u, c, n)?;
+    let (mut m, _) = mo.prune(p, u, c, n)?;
+    m.compact(); // seal into the storage backends the file will carry
     let out = args.get("out", "model.mosaic");
     let bytes =
         mosaic::deploy::export_model(&m, std::path::Path::new(&out))?;
     println!(
         "exported {} ({} {}) -> {out}: {} KB (resident {} KB, \
-         shipped {} KB)",
+         dense-f32 {} KB, shipped {} KB)",
         mo.name,
         u.name(),
         c.name(),
         bytes / 1024,
+        m.resident_bytes() / 1024,
         m.model_bytes() / 1024,
         mosaic::deploy::shipped_bytes(&m) / 1024
     );

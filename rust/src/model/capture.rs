@@ -4,6 +4,8 @@
 //! needs off-diagonal terms the profile graph's Σa² vectors don't carry).
 //!
 //! Numerics mirror engine::forward_full exactly (same primitives).
+//! Capture runs in the dense working phase (before `compact()` seals the
+//! projections), so it reads weights through `proj_dense`.
 
 use crate::model::config::Proj;
 use crate::model::weights::ModelWeights;
@@ -84,9 +86,9 @@ fn capture_one(m: &ModelWeights, tokens: &[u16], stats: &mut HessianStats) {
         stats.add_rows(li, Proj::Q, &xn);
         stats.add_rows(li, Proj::K, &xn);
         stats.add_rows(li, Proj::V, &xn);
-        let mut q = matmul(&xn, l.proj(Proj::Q));
-        let mut k = matmul(&xn, l.proj(Proj::K));
-        let v = matmul(&xn, l.proj(Proj::V));
+        let mut q = matmul(&xn, l.proj_dense(Proj::Q));
+        let mut k = matmul(&xn, l.proj_dense(Proj::K));
+        let v = matmul(&xn, l.proj_dense(Proj::V));
         for i in 0..s {
             for h in 0..hk {
                 tensor::apply_rope(&mut q.row_mut(i)[h * dh..(h + 1) * dh], i);
@@ -119,7 +121,7 @@ fn capture_one(m: &ModelWeights, tokens: &[u16], stats: &mut HessianStats) {
             }
         }
         stats.add_rows(li, Proj::O, &attn);
-        let o = matmul(&attn, l.proj(Proj::O));
+        let o = matmul(&attn, l.proj_dense(Proj::O));
         for i in 0..s * d {
             x.data[i] += o.data[i];
         }
@@ -128,15 +130,15 @@ fn capture_one(m: &ModelWeights, tokens: &[u16], stats: &mut HessianStats) {
         }
         stats.add_rows(li, Proj::Gate, &xn);
         stats.add_rows(li, Proj::Up, &xn);
-        let g = matmul(&xn, l.proj(Proj::Gate));
-        let u = matmul(&xn, l.proj(Proj::Up));
+        let g = matmul(&xn, l.proj_dense(Proj::Gate));
+        let u = matmul(&xn, l.proj_dense(Proj::Up));
         let c = l.kept_channels.len();
         let mut hmid = Tensor::zeros(&[s, c]);
         for i in 0..s * c {
             hmid.data[i] = silu(g.data[i]) * u.data[i];
         }
         stats.add_rows(li, Proj::Down, &hmid);
-        let ffn = matmul(&hmid, l.proj(Proj::Down));
+        let ffn = matmul(&hmid, l.proj_dense(Proj::Down));
         for i in 0..s * d {
             x.data[i] += ffn.data[i];
         }

@@ -79,6 +79,26 @@ impl ModelConfig {
         })
     }
 
+    /// Serialize (deploy export header); inverse of `from_json`.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", Json::str(&self.name));
+        o.set("proxy_for", Json::str(&self.proxy_for));
+        for (k, v) in [
+            ("n_layers", self.n_layers),
+            ("d_model", self.d_model),
+            ("n_heads", self.n_heads),
+            ("ff_dim", self.ff_dim),
+            ("ctx", self.ctx),
+            ("vocab", self.vocab),
+            ("head_dim", self.head_dim),
+            ("n_params", self.n_params),
+        ] {
+            o.set(k, Json::num(v as f64));
+        }
+        o
+    }
+
     /// (in_features, out_features) of a projection weight.
     pub fn proj_shape(&self, p: Proj) -> (usize, usize) {
         let (d, f) = (self.d_model, self.ff_dim);
@@ -127,6 +147,17 @@ mod tests {
         assert_eq!(c.proj_shape(Proj::Gate), (16, 40));
         assert_eq!(c.proj_shape(Proj::Down), (40, 16));
         assert_eq!(c.prunable_params(), 2 * (4 * 256 + 3 * 640));
+    }
+
+    #[test]
+    fn config_json_roundtrip() {
+        let c = test_config();
+        let c2 = ModelConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.name, c.name);
+        assert_eq!(c2.n_layers, c.n_layers);
+        assert_eq!(c2.ff_dim, c.ff_dim);
+        assert_eq!(c2.head_dim, c.head_dim);
+        assert_eq!(c2.vocab, c.vocab);
     }
 
     #[test]

@@ -5,11 +5,21 @@
 //!
 //! Numerics mirror python/compile/model.py exactly (RMSNorm eps, RoPE
 //! half-split rotation, causal softmax, SwiGLU) — validated against the
-//! AOT HLO graph in rust/tests/test_pjrt_native_parity.rs.
+//! AOT HLO graph in rust/tests/pjrt_native_parity.rs.
+//!
+//! Projections are dispatched through their [`crate::tensor::ProjStorage`]
+//! backend (dense f32/f16 or CSR), so a `compact()`ed model runs the
+//! decode loop directly on the deployment format — zeros are skipped
+//! structurally instead of being branched over per element. The lm_head
+//! matvec (the single largest per-token matmul) runs column-block
+//! parallel via [`matvec_par`].
 
 use crate::model::config::Proj;
 use crate::model::weights::ModelWeights;
-use crate::tensor::{self, matmul, matvec, rmsnorm, silu, softmax, Tensor};
+use crate::tensor::{
+    self, matmul, matmul_storage, matvec_par, matvec_storage, rmsnorm, silu,
+    softmax, Tensor,
+};
 use crate::util::threadpool::par_for;
 
 /// Full-sequence forward (prefill / evaluation): tokens -> (S, vocab).
@@ -32,9 +42,9 @@ pub fn forward_full(m: &ModelWeights, tokens: &[u16]) -> Tensor {
         for i in 0..s {
             rmsnorm(x.row(i), &l.attn_norm, xn.row_mut(i));
         }
-        let mut q = matmul(&xn, l.proj(Proj::Q));
-        let mut k = matmul(&xn, l.proj(Proj::K));
-        let v = matmul(&xn, l.proj(Proj::V));
+        let mut q = matmul_storage(&xn, l.proj(Proj::Q));
+        let mut k = matmul_storage(&xn, l.proj(Proj::K));
+        let v = matmul_storage(&xn, l.proj(Proj::V));
         // rope on q, k per position per head
         for i in 0..s {
             for h in 0..hk {
@@ -89,7 +99,7 @@ pub fn forward_full(m: &ModelWeights, tokens: &[u16]) -> Tensor {
                 }
             }
         }
-        let o = matmul(&attn, l.proj(Proj::O));
+        let o = matmul_storage(&attn, l.proj(Proj::O));
         for i in 0..s * d {
             x.data[i] += o.data[i];
         }
@@ -97,14 +107,14 @@ pub fn forward_full(m: &ModelWeights, tokens: &[u16]) -> Tensor {
         for i in 0..s {
             rmsnorm(x.row(i), &l.ffn_norm, xn.row_mut(i));
         }
-        let g = matmul(&xn, l.proj(Proj::Gate));
-        let u = matmul(&xn, l.proj(Proj::Up));
+        let g = matmul_storage(&xn, l.proj(Proj::Gate));
+        let u = matmul_storage(&xn, l.proj(Proj::Up));
         let c = l.kept_channels.len();
         let mut hmid = Tensor::zeros(&[s, c]);
         for i in 0..s * c {
             hmid.data[i] = silu(g.data[i]) * u.data[i];
         }
-        let ffn = matmul(&hmid, l.proj(Proj::Down));
+        let ffn = matmul_storage(&hmid, l.proj(Proj::Down));
         for i in 0..s * d {
             x.data[i] += ffn.data[i];
         }
@@ -117,7 +127,7 @@ pub fn forward_full(m: &ModelWeights, tokens: &[u16]) -> Tensor {
 
 /// KV cache + scratch for the token-by-token decode path. All buffers are
 /// preallocated — the decode loop does zero heap allocation (perf
-/// deliverable, see EXPERIMENTS.md §Perf).
+/// deliverable, see ARCHITECTURE.md §Perf).
 pub struct DecodeState {
     /// per layer: (ctx, kept_heads*dh) keys / values
     k_cache: Vec<Tensor>,
@@ -202,9 +212,9 @@ pub fn decode_step<'a>(
         let hk = l.kept_heads.len();
         let adim = hk * dh;
         rmsnorm(&st.x, &l.attn_norm, &mut st.xn);
-        matvec(&st.xn, l.proj(Proj::Q), &mut st.qbuf[..adim]);
-        matvec(&st.xn, l.proj(Proj::K), &mut st.kbuf[..adim]);
-        matvec(&st.xn, l.proj(Proj::V), &mut st.vbuf[..adim]);
+        matvec_storage(&st.xn, l.proj(Proj::Q), &mut st.qbuf[..adim]);
+        matvec_storage(&st.xn, l.proj(Proj::K), &mut st.kbuf[..adim]);
+        matvec_storage(&st.xn, l.proj(Proj::V), &mut st.vbuf[..adim]);
         for h in 0..hk {
             tensor::apply_rope(&mut st.qbuf[h * dh..(h + 1) * dh], pos);
             tensor::apply_rope(&mut st.kbuf[h * dh..(h + 1) * dh], pos);
@@ -234,24 +244,24 @@ pub fn decode_step<'a>(
                 }
             }
         }
-        matvec(&st.abuf[..adim], l.proj(Proj::O), &mut st.obuf);
+        matvec_storage(&st.abuf[..adim], l.proj(Proj::O), &mut st.obuf);
         for i in 0..d {
             st.x[i] += st.obuf[i];
         }
         rmsnorm(&st.x, &l.ffn_norm, &mut st.xn);
         let c = l.kept_channels.len();
-        matvec(&st.xn, l.proj(Proj::Gate), &mut st.gbuf[..c]);
-        matvec(&st.xn, l.proj(Proj::Up), &mut st.ubuf[..c]);
+        matvec_storage(&st.xn, l.proj(Proj::Gate), &mut st.gbuf[..c]);
+        matvec_storage(&st.xn, l.proj(Proj::Up), &mut st.ubuf[..c]);
         for i in 0..c {
             st.hbuf[i] = silu(st.gbuf[i]) * st.ubuf[i];
         }
-        matvec(&st.hbuf[..c], l.proj(Proj::Down), &mut st.fbuf);
+        matvec_storage(&st.hbuf[..c], l.proj(Proj::Down), &mut st.fbuf);
         for i in 0..d {
             st.x[i] += st.fbuf[i];
         }
     }
     rmsnorm(&st.x, &m.final_norm, &mut st.xn);
-    matvec(&st.xn, &m.lm_head, &mut st.logits);
+    matvec_par(&st.xn, &m.lm_head, &mut st.logits);
     st.pos += 1;
     &st.logits
 }
@@ -326,6 +336,46 @@ mod tests {
                     (a - b).abs() < 1e-4,
                     "pos {i}: {a} vs {b}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn compacted_model_stays_close_and_consistent() {
+        use crate::prune::unstructured::{mask_lowest, scores, Metric};
+        let mut m = random_model(16);
+        // mask 70% of every projection so compact() picks CSR for most
+        for l in m.layers.iter_mut() {
+            for s in l.projs.iter_mut() {
+                let t = s.dense_mut();
+                let sc = scores(t, None, Metric::Magnitude);
+                mask_lowest(t, &sc, 0.7);
+            }
+        }
+        let toks: Vec<u16> = vec![2, 9, 4, 7, 1];
+        let dense_logits = forward_full(&m, &toks);
+        let mut mc = m.clone();
+        mc.compact();
+        assert!(
+            mc.resident_bytes() < m.resident_bytes(),
+            "sealed {} vs dense {}",
+            mc.resident_bytes(),
+            m.resident_bytes()
+        );
+        // sealed forward stays within f16 tolerance of the dense path
+        let sealed_logits = forward_full(&mc, &toks);
+        for (a, b) in dense_logits.data.iter().zip(sealed_logits.data.iter()) {
+            assert!(
+                (a - b).abs() < 5e-2 * (1.0 + a.abs()),
+                "{a} vs {b}"
+            );
+        }
+        // decode on the sealed model matches its own full forward tightly
+        let mut st = DecodeState::new(&mc, toks.len());
+        for (i, &t) in toks.iter().enumerate() {
+            let logits = decode_step(&mc, &mut st, t);
+            for (a, b) in logits.iter().zip(sealed_logits.row(i)) {
+                assert!((a - b).abs() < 1e-4, "pos {i}: {a} vs {b}");
             }
         }
     }

@@ -1,23 +1,27 @@
-//! Model weights: loading from the artifact manifest + weights.bin, and
-//! the structural metadata the pruners mutate (masks, kept heads/channels).
+//! Model weights: loading from the artifact manifest + weights.bin, the
+//! structural metadata the pruners mutate (masks, kept heads/channels),
+//! and the storage lifecycle: projections load as dense f32 working
+//! copies, pruners mutate them in place, and [`ModelWeights::compact`]
+//! seals each one into the cheapest [`ProjStorage`] backend for the
+//! serving hot path (see ARCHITECTURE.md §Storage backends).
 
 use std::path::Path;
 
 use anyhow::{ensure, Context, Result};
 
 use crate::model::config::{ModelConfig, Proj};
-use crate::tensor::Tensor;
+use crate::tensor::{ProjStorage, Tensor};
 use crate::util::json::Json;
 
 /// One decoder layer's weights. Projections may be structurally sliced
-/// (kept_heads / kept_channels shrink the inner dimensions) and/or
-/// unstructured-pruned (zeros in the weight data).
+/// (kept_heads / kept_channels shrink the inner dimensions), masked
+/// (zeros in the weight data), and/or sealed into f16/CSR storage.
 #[derive(Debug, Clone)]
 pub struct LayerWeights {
     pub attn_norm: Vec<f32>,
     pub ffn_norm: Vec<f32>,
     /// q, k, v, o, gate, up, down in canonical order.
-    pub projs: [Tensor; 7],
+    pub projs: [ProjStorage; 7],
     /// Attention head indices kept after structured pruning (sorted).
     pub kept_heads: Vec<usize>,
     /// FFN channel indices kept after structured pruning (sorted).
@@ -25,11 +29,20 @@ pub struct LayerWeights {
 }
 
 impl LayerWeights {
-    pub fn proj(&self, p: Proj) -> &Tensor {
+    pub fn proj(&self, p: Proj) -> &ProjStorage {
         &self.projs[p as usize]
     }
+
+    /// Dense f32 view of a projection — valid only before `compact()`.
+    /// The rank/prune phases read through this; the engine dispatches
+    /// through [`ProjStorage`] instead and never densifies.
+    pub fn proj_dense(&self, p: Proj) -> &Tensor {
+        self.projs[p as usize].dense()
+    }
+
+    /// Mutable dense working copy — valid only before `compact()`.
     pub fn proj_mut(&mut self, p: Proj) -> &mut Tensor {
-        &mut self.projs[p as usize]
+        self.projs[p as usize].dense_mut()
     }
 }
 
@@ -44,6 +57,8 @@ pub struct ModelWeights {
 
 impl ModelWeights {
     /// Load from artifacts/models/<name>/ (manifest.json + weights.bin).
+    /// Projections start as dense f32 working copies so the pruners can
+    /// mutate them; call [`ModelWeights::compact`] before serving.
     pub fn load(model_dir: &Path) -> Result<Self> {
         let manifest = Json::parse(
             &crate::util::read_to_string(&model_dir.join("manifest.json"))?,
@@ -88,6 +103,9 @@ impl ModelWeights {
                 shape,
             ))
         };
+        let getp = |name: &str| -> Result<ProjStorage> {
+            Ok(ProjStorage::from_dense(get(name)?))
+        };
 
         let mut layers = Vec::with_capacity(cfg.n_layers);
         for n in 0..cfg.n_layers {
@@ -95,13 +113,13 @@ impl ModelWeights {
                 attn_norm: get(&format!("l{n}.attn_norm"))?.data,
                 ffn_norm: get(&format!("l{n}.ffn_norm"))?.data,
                 projs: [
-                    get(&format!("l{n}.q"))?,
-                    get(&format!("l{n}.k"))?,
-                    get(&format!("l{n}.v"))?,
-                    get(&format!("l{n}.o"))?,
-                    get(&format!("l{n}.gate"))?,
-                    get(&format!("l{n}.up"))?,
-                    get(&format!("l{n}.down"))?,
+                    getp(&format!("l{n}.q"))?,
+                    getp(&format!("l{n}.k"))?,
+                    getp(&format!("l{n}.v"))?,
+                    getp(&format!("l{n}.o"))?,
+                    getp(&format!("l{n}.gate"))?,
+                    getp(&format!("l{n}.up"))?,
+                    getp(&format!("l{n}.down"))?,
                 ],
                 kept_heads: (0..cfg.n_heads).collect(),
                 kept_channels: (0..cfg.ff_dim).collect(),
@@ -116,6 +134,44 @@ impl ModelWeights {
         })
     }
 
+    /// Seal every projection into the cheapest storage backend
+    /// (per-projection choice via `deploy::choose_encoding`): CSR when
+    /// the zero fraction pays for the index overhead, dense f16
+    /// otherwise. After this, `proj_mut`/`proj_dense` panic — the model
+    /// is in serving form. Inverse: [`ModelWeights::decompact`].
+    pub fn compact(&mut self) {
+        for l in &mut self.layers {
+            for s in l.projs.iter_mut() {
+                if let ProjStorage::DenseF32(t) = &*s {
+                    let e = crate::deploy::choose_encoding(t);
+                    let sealed = crate::deploy::seal(t, e);
+                    *s = sealed;
+                }
+            }
+        }
+    }
+
+    /// Densify every sealed projection back into an f32 working copy
+    /// (pruner/finetune phases). f16 rounding stays baked in.
+    pub fn decompact(&mut self) {
+        for l in &mut self.layers {
+            for s in l.projs.iter_mut() {
+                if !s.is_dense_f32() {
+                    let dense = s.to_dense();
+                    *s = ProjStorage::from_dense(dense);
+                }
+            }
+        }
+    }
+
+    /// Has any projection been sealed into a storage backend?
+    pub fn is_compacted(&self) -> bool {
+        self.layers
+            .iter()
+            .flat_map(|l| l.projs.iter())
+            .any(|s| !s.is_dense_f32())
+    }
+
     /// Flatten back to the canonical parameter order (PJRT input order).
     /// Only valid for structurally-intact models (PJRT shapes are fixed).
     pub fn to_flat(&self) -> Vec<Tensor> {
@@ -127,12 +183,12 @@ impl ModelWeights {
             out.push(Tensor::new(l.attn_norm.clone(),
                                  vec![l.attn_norm.len()]));
             for p in [Proj::Q, Proj::K, Proj::V, Proj::O] {
-                out.push(l.proj(p).clone());
+                out.push(l.proj(p).to_dense());
             }
             out.push(Tensor::new(l.ffn_norm.clone(),
                                  vec![l.ffn_norm.len()]));
             for p in [Proj::Gate, Proj::Up, Proj::Down] {
-                out.push(l.proj(p).clone());
+                out.push(l.proj(p).to_dense());
             }
         }
         out.push(Tensor::new(self.final_norm.clone(),
@@ -155,7 +211,7 @@ impl ModelWeights {
         self.layers
             .iter()
             .flat_map(|l| l.projs.iter())
-            .map(|t| t.numel() - t.zero_count())
+            .map(|s| s.nnz())
             .sum()
     }
 
@@ -164,45 +220,75 @@ impl ModelWeights {
         self.layers
             .iter()
             .flat_map(|l| l.projs.iter())
-            .map(|t| t.numel())
+            .map(|s| s.numel())
             .sum()
     }
 
     /// Model size in bytes if serialized dense f32 (structured slicing
-    /// shrinks this; unstructured zeros do not — the paper's key asymmetry).
+    /// shrinks this; unstructured zeros do not — the paper's key
+    /// asymmetry). Storage backends do not change this number; see
+    /// [`ModelWeights::resident_bytes`] for what is actually in memory.
     pub fn model_bytes(&self) -> usize {
-        let fixed = self.embed.numel()
+        4 * (self.fixed_params() + self.stored_proj_params())
+    }
+
+    /// Bytes the model actually occupies in memory right now: f32 for
+    /// the embeddings/norms/head plus each projection's storage-backend
+    /// footprint. This is the number the benches report — after
+    /// `compact()` an unstructured-pruned model finally gets smaller.
+    pub fn resident_bytes(&self) -> usize {
+        4 * self.fixed_params()
+            + self
+                .layers
+                .iter()
+                .flat_map(|l| l.projs.iter())
+                .map(|s| s.resident_bytes())
+                .sum::<usize>()
+    }
+
+    /// Parameter count outside the projections (always dense f32).
+    fn fixed_params(&self) -> usize {
+        self.embed.numel()
             + self.lm_head.numel()
             + self.final_norm.len()
             + self
                 .layers
                 .iter()
                 .map(|l| l.attn_norm.len() + l.ffn_norm.len())
-                .sum::<usize>();
-        4 * (fixed + self.stored_proj_params())
+                .sum::<usize>()
     }
 }
 
-/// Test helpers (used by unit, property and integration tests; kept in
-/// the library so `rust/tests/` targets can build random models without
-/// artifacts).
+/// Test helpers (used by unit, property and integration tests plus the
+/// artifact-free benches; kept in the library so `rust/tests/` targets
+/// can build random models without artifacts).
 pub mod testutil {
     use super::*;
     use crate::model::config::ModelConfig;
     use crate::util::rng::Pcg32;
 
-    /// Small random model for unit tests (no artifacts needed).
-    pub fn random_model(seed: u64) -> ModelWeights {
+    /// Random model of an arbitrary size (benches use this to measure
+    /// storage backends without artifacts).
+    pub fn random_model_sized(
+        seed: u64,
+        n_layers: usize,
+        d_model: usize,
+        n_heads: usize,
+        ff_dim: usize,
+        vocab: usize,
+        ctx: usize,
+    ) -> ModelWeights {
+        assert_eq!(d_model % n_heads, 0);
         let cfg = ModelConfig {
             name: "rand".into(),
             proxy_for: "unit".into(),
-            n_layers: 2,
-            d_model: 16,
-            n_heads: 2,
-            ff_dim: 40,
-            ctx: 16,
-            vocab: 64,
-            head_dim: 8,
+            n_layers,
+            d_model,
+            n_heads,
+            ff_dim,
+            ctx,
+            vocab,
+            head_dim: d_model / n_heads,
             n_params: 0,
         };
         let mut r = Pcg32::seeded(seed);
@@ -213,36 +299,43 @@ pub mod testutil {
                 shape.to_vec(),
             )
         };
+        let mut tp = |shape: &[usize]| ProjStorage::from_dense(t(shape));
         let layers = (0..cfg.n_layers)
             .map(|_| LayerWeights {
                 attn_norm: vec![1.0; cfg.d_model],
                 ffn_norm: vec![1.0; cfg.d_model],
                 projs: [
-                    t(&[16, 16]),
-                    t(&[16, 16]),
-                    t(&[16, 16]),
-                    t(&[16, 16]),
-                    t(&[16, 40]),
-                    t(&[16, 40]),
-                    t(&[40, 16]),
+                    tp(&[d_model, d_model]),
+                    tp(&[d_model, d_model]),
+                    tp(&[d_model, d_model]),
+                    tp(&[d_model, d_model]),
+                    tp(&[d_model, ff_dim]),
+                    tp(&[d_model, ff_dim]),
+                    tp(&[ff_dim, d_model]),
                 ],
                 kept_heads: (0..cfg.n_heads).collect(),
                 kept_channels: (0..cfg.ff_dim).collect(),
             })
             .collect();
         ModelWeights {
-            embed: t(&[64, 16]),
-            lm_head: t(&[16, 64]),
-            final_norm: vec![1.0; 16],
+            embed: t(&[vocab, d_model]),
+            lm_head: t(&[d_model, vocab]),
+            final_norm: vec![1.0; d_model],
             cfg,
             layers,
         }
+    }
+
+    /// Small random model for unit tests (no artifacts needed).
+    pub fn random_model(seed: u64) -> ModelWeights {
+        random_model_sized(seed, 2, 16, 2, 40, 64, 16)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::testutil::random_model;
+    use super::*;
 
     #[test]
     fn flat_order_matches_manifest_convention() {
@@ -261,9 +354,75 @@ mod tests {
     fn byte_accounting() {
         let mut m = random_model(2);
         let dense = m.model_bytes();
-        // zeroing weights (unstructured) does NOT shrink bytes
-        m.layers[0].projs[0].data.iter_mut().for_each(|x| *x = 0.0);
+        // zeroing weights (unstructured) does NOT shrink model_bytes
+        m.layers[0].projs[0]
+            .dense_mut()
+            .data
+            .iter_mut()
+            .for_each(|x| *x = 0.0);
         assert_eq!(m.model_bytes(), dense);
         assert!(m.live_proj_params() < m.stored_proj_params());
+    }
+
+    #[test]
+    fn compact_shrinks_resident_bytes() {
+        let mut m = random_model(3);
+        // mask 80% of every projection so CSR wins the size race
+        for l in m.layers.iter_mut() {
+            for s in l.projs.iter_mut() {
+                let t = s.dense_mut();
+                for (i, v) in t.data.iter_mut().enumerate() {
+                    if i % 5 != 0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+        }
+        let before = m.resident_bytes();
+        assert_eq!(before, m.model_bytes());
+        m.compact();
+        assert!(m.is_compacted());
+        // model_bytes (dense-f32-serialized notion) is unchanged …
+        assert_eq!(m.model_bytes(), before);
+        // … but the runtime footprint finally shrinks
+        assert!(
+            m.resident_bytes() * 2 < before,
+            "resident {} vs dense {before}",
+            m.resident_bytes()
+        );
+        for l in &m.layers {
+            for s in &l.projs {
+                assert_eq!(s.encoding_name(), "csr");
+            }
+        }
+    }
+
+    #[test]
+    fn decompact_restores_working_copies() {
+        let mut m = random_model(4);
+        // mask the smallest 30% by magnitude: every survivor is far
+        // above the f16 subnormal range, so compact/decompact must
+        // preserve the live/zero pattern exactly
+        for l in m.layers.iter_mut() {
+            for s in l.projs.iter_mut() {
+                let t = s.dense_mut();
+                let sc: Vec<f64> =
+                    t.data.iter().map(|x| x.abs() as f64).collect();
+                crate::prune::unstructured::mask_lowest(t, &sc, 0.3);
+            }
+        }
+        let live = m.live_proj_params();
+        let orig: Vec<f32> = m.layers[0].projs[0].dense().data.clone();
+        m.compact();
+        assert_eq!(m.live_proj_params(), live, "sealing must not drop weights");
+        assert!(m.is_compacted());
+        m.decompact();
+        assert!(!m.is_compacted());
+        assert_eq!(m.live_proj_params(), live, "round trip must keep pattern");
+        assert_eq!(m.stored_proj_params(), random_model(4).stored_proj_params());
+        let back = &m.layers[0].projs[0].dense().data;
+        for (a, b) in orig.iter().zip(back.iter()) {
+            assert!((a - b).abs() <= 1e-3 * (1.0 + a.abs()));
+        }
     }
 }

@@ -170,7 +170,7 @@ mod tests {
         prune_unstructured(&mut m2, &pl, None, Metric::Magnitude);
         for (a, b) in m1.layers.iter().zip(m2.layers.iter()) {
             for (x, y) in a.projs.iter().zip(b.projs.iter()) {
-                assert_eq!(x.data, y.data);
+                assert_eq!(x.dense().data, y.dense().data);
             }
         }
     }

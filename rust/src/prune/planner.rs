@@ -52,7 +52,7 @@ impl PruningPlan {
 ///   γ_L — layer-level deviation from the layer-mean outlier ratio,
 ///   γ_P — within-layer projection refinement.
 ///
-/// SIGN NOTE (calibrated, see DESIGN.md §6): under metric-based masking
+/// SIGN NOTE (calibrated, see ARCHITECTURE.md §Planner): under metric-based masking
 /// an outlier-rich component *tolerates more pruning* — its information
 /// is concentrated in outliers that survive the mask — so targets grow
 /// with the outlier rank. This was validated by joint-plan sweeps on all

@@ -125,7 +125,7 @@ mod tests {
         prune_nm(&mut m, None, 2, 4);
         for l in &m.layers {
             for p in &l.projs {
-                assert!(check_nm(p, 2, 4));
+                assert!(check_nm(p.dense(), 2, 4));
             }
         }
         // model still runs

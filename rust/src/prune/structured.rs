@@ -25,7 +25,7 @@ pub fn head_importance(l: &LayerWeights, head_dim: usize) -> Vec<f64> {
     for (h, imp_h) in imp.iter_mut().enumerate() {
         let cols = h * head_dim..(h + 1) * head_dim;
         for p in [Proj::Q, Proj::K, Proj::V] {
-            let w = l.proj(p);
+            let w = l.proj_dense(p);
             let m = w.shape[1];
             for i in 0..w.shape[0] {
                 for j in cols.clone() {
@@ -34,7 +34,7 @@ pub fn head_importance(l: &LayerWeights, head_dim: usize) -> Vec<f64> {
                 }
             }
         }
-        let o = l.proj(Proj::O);
+        let o = l.proj_dense(Proj::O);
         let m = o.shape[1];
         for i in cols.clone() {
             for j in 0..m {
@@ -51,7 +51,7 @@ pub fn channel_importance(l: &LayerWeights) -> Vec<f64> {
     let n_ch = l.kept_channels.len();
     let mut imp = vec![0f64; n_ch];
     for p in [Proj::Gate, Proj::Up] {
-        let w = l.proj(p);
+        let w = l.proj_dense(p);
         let m = w.shape[1];
         for i in 0..w.shape[0] {
             for (c, imp_c) in imp.iter_mut().enumerate() {
@@ -60,7 +60,7 @@ pub fn channel_importance(l: &LayerWeights) -> Vec<f64> {
             }
         }
     }
-    let d = l.proj(Proj::Down);
+    let d = l.proj_dense(Proj::Down);
     let m = d.shape[1];
     for (c, imp_c) in imp.iter_mut().enumerate() {
         for j in 0..m {
@@ -131,10 +131,10 @@ pub fn prune_layer_structured(
         let imp = head_importance(l, head_dim);
         let kept = keep_top(&imp, keep_h);
         for p in [Proj::Q, Proj::K, Proj::V] {
-            *l.proj_mut(p) = slice_groups(l.proj(p), &kept, head_dim, 1);
+            *l.proj_mut(p) = slice_groups(l.proj_dense(p), &kept, head_dim, 1);
         }
         *l.proj_mut(Proj::O) =
-            slice_groups(l.proj(Proj::O), &kept, head_dim, 0);
+            slice_groups(l.proj_dense(Proj::O), &kept, head_dim, 0);
         l.kept_heads = kept.iter().map(|&k| l.kept_heads[k]).collect();
     }
     // ---- channels
@@ -145,10 +145,10 @@ pub fn prune_layer_structured(
         let imp = channel_importance(l);
         let kept = keep_top(&imp, keep_c);
         for p in [Proj::Gate, Proj::Up] {
-            *l.proj_mut(p) = slice_groups(l.proj(p), &kept, 1, 1);
+            *l.proj_mut(p) = slice_groups(l.proj_dense(p), &kept, 1, 1);
         }
         *l.proj_mut(Proj::Down) =
-            slice_groups(l.proj(Proj::Down), &kept, 1, 0);
+            slice_groups(l.proj_dense(Proj::Down), &kept, 1, 0);
         l.kept_channels = kept.iter().map(|&k| l.kept_channels[k]).collect();
     }
 }
@@ -184,11 +184,11 @@ mod tests {
         assert!(m.model_bytes() < before, "SP must shrink bytes");
         for l in &m.layers {
             let hk = l.kept_heads.len();
-            assert_eq!(l.proj(Proj::Q).shape[1], hk * m.cfg.head_dim);
-            assert_eq!(l.proj(Proj::O).shape[0], hk * m.cfg.head_dim);
+            assert_eq!(l.proj(Proj::Q).cols(), hk * m.cfg.head_dim);
+            assert_eq!(l.proj(Proj::O).rows(), hk * m.cfg.head_dim);
             let c = l.kept_channels.len();
-            assert_eq!(l.proj(Proj::Gate).shape[1], c);
-            assert_eq!(l.proj(Proj::Down).shape[0], c);
+            assert_eq!(l.proj(Proj::Gate).cols(), c);
+            assert_eq!(l.proj(Proj::Down).rows(), c);
         }
     }
 
@@ -236,7 +236,8 @@ mod tests {
         let mut m = random_model(75);
         let orig = m.clone();
         prune_layer_structured(&mut m.layers[0], m.cfg.head_dim, 0.0, 0.0);
-        assert_eq!(m.layers[0].projs[0].data, orig.layers[0].projs[0].data);
+        assert_eq!(m.layers[0].projs[0].dense().data,
+                   orig.layers[0].projs[0].dense().data);
         assert_eq!(m.layers[0].kept_heads, orig.layers[0].kept_heads);
     }
 }

@@ -175,7 +175,7 @@ mod tests {
         prune_unstructured(&mut m, &pl, None, Metric::Magnitude);
         for (a, b) in m.layers.iter().zip(orig.layers.iter()) {
             for (x, y) in a.projs.iter().zip(b.projs.iter()) {
-                assert_eq!(x.data, y.data);
+                assert_eq!(x.dense().data, y.dense().data);
             }
         }
     }

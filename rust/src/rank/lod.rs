@@ -22,7 +22,7 @@ pub fn compute_lod_rank(
         let mut sum = 0f64;
         let mut count = 0usize;
         for (pi, &p) in Proj::all().iter().enumerate() {
-            let w = layer.proj(p);
+            let w = layer.proj_dense(p);
             let act = &stats.act_sq[l][pi];
             let m = w.shape[1];
             for i in 0..w.shape[0] {
@@ -38,7 +38,7 @@ pub fn compute_lod_rank(
         // Second pass: outliers vs the LAYER mean (Eq. 4).
         let mut outliers = 0usize;
         for (pi, &p) in Proj::all().iter().enumerate() {
-            let w = layer.proj(p);
+            let w = layer.proj_dense(p);
             let act = &stats.act_sq[l][pi];
             let m = w.shape[1];
             for i in 0..w.shape[0] {
@@ -98,7 +98,7 @@ mod tests {
     fn lod_detects_outlier_layer() {
         let mut m = random_model(32);
         // blow up one projection's weights in layer 1 -> more outliers
-        for x in m.layers[1].projs[0].data.iter_mut() {
+        for x in m.layers[1].projs[0].dense_mut().data.iter_mut() {
             *x *= 50.0;
         }
         let stats = uniform_stats(&m);

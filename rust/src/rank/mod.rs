@@ -167,7 +167,7 @@ pub fn compute_global_rank(
     for (l, layer) in weights.layers.iter().enumerate() {
         let mut row = Vec::with_capacity(N_PROJS);
         for (pi, &p) in Proj::all().iter().enumerate() {
-            let w = layer.proj(p);
+            let w = layer.proj_dense(p);
             let act = &stats.act_sq[l][pi];
             let ratio = match mrt.as_deref_mut() {
                 Some(rt) => {

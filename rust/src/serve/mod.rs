@@ -7,6 +7,8 @@
 //! interleaving across active sequences, vLLM-style) over the native
 //! engine's per-sequence `DecodeState`s — so a structurally-pruned
 //! Mosaic model genuinely serves more tokens/s than the dense one.
+//! The loop is storage-agnostic: a `compact()`ed model (f16/CSR
+//! projections) serves through the same code path, smaller and faster.
 //!
 //! Everything is std-only (no tokio in this image): one OS thread per
 //! connection for IO, a single engine thread owning the model.

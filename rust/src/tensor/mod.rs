@@ -3,9 +3,17 @@
 //! Row-major layout throughout. The matmul uses an axpy inner loop over
 //! the output row (`out[i, :] += x[i, k] * w[k, :]`) which the compiler
 //! auto-vectorizes, with row-block parallelism from util::threadpool —
-//! this is the L3 deployment hot path (see EXPERIMENTS.md §Perf).
+//! this is the L3 deployment hot path (see ARCHITECTURE.md §Perf).
+//!
+//! [`storage`] holds the runtime projection storage backends (dense
+//! f32/f16 and CSR) plus the storage-aware kernels the engine
+//! dispatches through.
 
-use crate::util::threadpool::par_chunks_mut;
+pub mod storage;
+
+pub use storage::{matmul_storage, matvec_storage, ProjStorage};
+
+use crate::util::threadpool::{n_threads, par_chunks_mut};
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
@@ -87,7 +95,7 @@ impl Tensor {
 
 /// Rows of x processed together per task: each streamed w row is reused
 /// across RB output rows (register blocking), cutting w-traffic RB-fold.
-/// See EXPERIMENTS.md §Perf for the before/after.
+/// See ARCHITECTURE.md §Perf for the before/after.
 const RB: usize = 4;
 
 /// out(M,N) = x(M,K) @ w(K,N). Parallel over RB-row blocks of x.
@@ -99,7 +107,7 @@ pub fn matmul(x: &Tensor, w: &Tensor) -> Tensor {
     let xd = &x.data;
     let wd = &w.data;
     // (an L1 accumulator-tile variant was tried and measured slower on
-    // this single-core host — see EXPERIMENTS.md §Perf iteration log)
+    // this single-core host — see ARCHITECTURE.md §Perf)
     par_chunks_mut(&mut out.data, RB * n, |bi, ochunk| {
         let r0 = bi * RB;
         let rows = ochunk.len() / n;
@@ -136,6 +144,41 @@ pub fn matvec(x: &[f32], w: &Tensor, out: &mut [f32]) {
             *o += xv * wv;
         }
     }
+}
+
+/// Below this weight count the scoped-thread fan-out costs more than the
+/// matvec itself (spawning ~n_threads workers is tens of microseconds),
+/// so `matvec_par` stays single-threaded for small heads.
+pub const PAR_MATVEC_MIN_ELEMS: usize = 1 << 19;
+
+/// y(N) = x(K) @ w(K,N), parallel over column blocks of w — used for the
+/// lm_head projection in the decode loop, the single largest matvec per
+/// token. Each worker owns a contiguous `out` block and streams the
+/// matching column stripe of every live w row, so per-element summation
+/// order (and thus the result) is identical to [`matvec`].
+pub fn matvec_par(x: &[f32], w: &Tensor, out: &mut [f32]) {
+    let (k, n) = (w.shape[0], w.shape[1]);
+    debug_assert_eq!(x.len(), k);
+    debug_assert_eq!(out.len(), n);
+    let threads = n_threads();
+    if threads <= 1 || k * n < PAR_MATVEC_MIN_ELEMS || n < 2 * threads {
+        return matvec(x, w, out);
+    }
+    let block = n.div_ceil(threads);
+    let wd = &w.data;
+    par_chunks_mut(out, block, |bi, oc| {
+        let j0 = bi * block;
+        oc.fill(0.0);
+        for (kk, &xv) in x.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &wd[kk * n + j0..kk * n + j0 + oc.len()];
+            for (o, &wv) in oc.iter_mut().zip(wrow.iter()) {
+                *o += xv * wv;
+            }
+        }
+    });
 }
 
 /// RMSNorm: y = x / rms(x) * w (matches kernels/ref.py, eps=1e-5).
@@ -238,6 +281,30 @@ mod tests {
         for (a, b) in out.iter().zip(full.data.iter()) {
             assert!((a - b).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn matvec_par_matches_serial() {
+        let mut r = Pcg32::seeded(7);
+        // big enough to take the parallel path (k*n ≥ PAR_MATVEC_MIN_ELEMS)
+        let (k, n) = (512usize, 1200usize);
+        assert!(k * n >= PAR_MATVEC_MIN_ELEMS);
+        let w = rand_t(&mut r, &[k, n]);
+        let mut x: Vec<f32> = (0..k).map(|_| r.normal()).collect();
+        x[3] = 0.0; // exercise the zero-skip
+        let mut serial = vec![0f32; n];
+        matvec(&x, &w, &mut serial);
+        let mut par = vec![0f32; n];
+        matvec_par(&x, &w, &mut par);
+        assert_eq!(serial, par, "column-block split must not change sums");
+        // small path falls back to the serial kernel
+        let ws = rand_t(&mut r, &[8, 16]);
+        let xs: Vec<f32> = (0..8).map(|_| r.normal()).collect();
+        let mut a = vec![0f32; 16];
+        let mut b = vec![0f32; 16];
+        matvec(&xs, &ws, &mut a);
+        matvec_par(&xs, &ws, &mut b);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -1,0 +1,439 @@
+//! Runtime projection storage backends — the in-memory side of the
+//! deploy encodings (see ARCHITECTURE.md §Storage backends).
+//!
+//! A pruned projection used to be densified back to an f32 [`Tensor`]
+//! before the engine touched it, so an unstructured-pruned model was
+//! exactly as large and as slow to decode as the dense one. A
+//! [`ProjStorage`] keeps the projection in its deployment format at
+//! runtime:
+//!
+//!   * `DenseF32`  — the mutable working format the pruners operate on;
+//!   * `DenseF16`  — half-precision bits, streamed through a 64Ki-entry
+//!     f16→f32 lookup table (one L2-resident gather per weight, no
+//!     per-row scratch buffer);
+//!   * `SparseCsr` — compressed rows (u32 row pointers, u16 column
+//!     indices, f16 values) so the matvec visits only the `nnz` live
+//!     weights instead of branching on zeros.
+//!
+//! The kernels here ([`matvec_storage`], [`matmul_storage`]) are what
+//! `model::engine` dispatches through on the decode/prefill hot path.
+
+use std::sync::OnceLock;
+
+use crate::tensor::{matmul, matvec, Tensor};
+use crate::util::f16;
+use crate::util::threadpool::par_chunks_mut;
+
+/// One projection's runtime storage. `shape` is always `[in, out]`
+/// (row-major, like the dense working copy).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ProjStorage {
+    /// Mutable dense working copy (load/prune/finetune phases).
+    DenseF32(Tensor),
+    /// Sealed half-precision dense storage (2 bytes/weight).
+    DenseF16 { bits: Vec<u16>, shape: [usize; 2] },
+    /// Sealed compressed sparse rows; `nnz` is cached at construction
+    /// so size accounting never rescans the weights.
+    SparseCsr {
+        row_ptr: Vec<u32>,
+        col_idx: Vec<u16>,
+        vals_f16: Vec<u16>,
+        shape: [usize; 2],
+        nnz: usize,
+    },
+}
+
+/// Shared f16→f32 decode table (256 KiB, built once per process).
+/// Indexing with a `u16` is always in bounds, so the gather compiles
+/// down to a single masked load.
+fn f16_table() -> &'static [f32; 65536] {
+    static TABLE: OnceLock<Box<[f32; 65536]>> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let v: Vec<f32> = (0..=u16::MAX).map(f16::from_bits).collect();
+        let boxed: Box<[f32]> = v.into_boxed_slice();
+        boxed.try_into().expect("f16 table is 65536 entries")
+    })
+}
+
+impl ProjStorage {
+    /// Wrap a dense f32 tensor (the working format).
+    pub fn from_dense(t: Tensor) -> ProjStorage {
+        assert_eq!(t.shape.len(), 2, "projections are 2-D");
+        ProjStorage::DenseF32(t)
+    }
+
+    /// Seal into half-precision dense storage.
+    pub fn seal_f16(t: &Tensor) -> ProjStorage {
+        assert_eq!(t.shape.len(), 2, "projections are 2-D");
+        ProjStorage::DenseF16 {
+            bits: t.data.iter().map(|&v| f16::to_bits(v)).collect(),
+            shape: [t.shape[0], t.shape[1]],
+        }
+    }
+
+    /// Seal into CSR storage (f16 values). Column indices are u16, so
+    /// the projection may have at most 65536 output features.
+    pub fn seal_csr(t: &Tensor) -> ProjStorage {
+        assert_eq!(t.shape.len(), 2, "projections are 2-D");
+        let (r, c) = (t.shape[0], t.shape[1]);
+        assert!(c <= 1 << 16, "CSR column index is u16 ({c} cols)");
+        let mut row_ptr = Vec::with_capacity(r + 1);
+        let mut col_idx: Vec<u16> = Vec::new();
+        let mut vals_f16: Vec<u16> = Vec::new();
+        row_ptr.push(0u32);
+        for i in 0..r {
+            for j in 0..c {
+                let v = t.data[i * c + j];
+                if v != 0.0 {
+                    col_idx.push(j as u16);
+                    vals_f16.push(f16::to_bits(v));
+                }
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        let nnz = vals_f16.len();
+        ProjStorage::SparseCsr { row_ptr, col_idx, vals_f16, shape: [r, c], nnz }
+    }
+
+    pub fn shape(&self) -> [usize; 2] {
+        match self {
+            ProjStorage::DenseF32(t) => [t.shape[0], t.shape[1]],
+            ProjStorage::DenseF16 { shape, .. } => *shape,
+            ProjStorage::SparseCsr { shape, .. } => *shape,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.shape()[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        self.shape()[1]
+    }
+
+    pub fn numel(&self) -> usize {
+        let [r, c] = self.shape();
+        r * c
+    }
+
+    pub fn is_dense_f32(&self) -> bool {
+        matches!(self, ProjStorage::DenseF32(_))
+    }
+
+    /// Short name of the backing encoding ("f32" / "f16" / "csr").
+    pub fn encoding_name(&self) -> &'static str {
+        match self {
+            ProjStorage::DenseF32(_) => "f32",
+            ProjStorage::DenseF16 { .. } => "f16",
+            ProjStorage::SparseCsr { .. } => "csr",
+        }
+    }
+
+    /// Live (nonzero) weights. O(1) for CSR (cached at construction),
+    /// one scan for the dense variants — accounting only, never on the
+    /// decode path.
+    pub fn nnz(&self) -> usize {
+        match self {
+            ProjStorage::DenseF32(t) => t.numel() - t.zero_count(),
+            ProjStorage::DenseF16 { bits, .. } => {
+                // ±0.0 are the only f16 encodings of zero
+                bits.iter().filter(|&&b| b & 0x7fff != 0).count()
+            }
+            ProjStorage::SparseCsr { nnz, .. } => *nnz,
+        }
+    }
+
+    pub fn zero_count(&self) -> usize {
+        self.numel() - self.nnz()
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        self.zero_count() as f64 / self.numel().max(1) as f64
+    }
+
+    /// Bytes this projection actually occupies in memory at runtime —
+    /// the quantity the paper's 68 % memory-reduction claim is about.
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            ProjStorage::DenseF32(t) => 4 * t.numel(),
+            ProjStorage::DenseF16 { bits, .. } => 2 * bits.len(),
+            ProjStorage::SparseCsr { row_ptr, col_idx, vals_f16, .. } => {
+                4 * row_ptr.len() + 2 * col_idx.len() + 2 * vals_f16.len()
+            }
+        }
+    }
+
+    /// Dense f32 view — only valid before sealing. Pruners/finetuners go
+    /// through this; the engine never does.
+    pub fn dense(&self) -> &Tensor {
+        match self {
+            ProjStorage::DenseF32(t) => t,
+            _ => panic!(
+                "projection is sealed ({}); call ModelWeights::decompact() \
+                 for a dense working copy",
+                self.encoding_name()
+            ),
+        }
+    }
+
+    /// Mutable dense f32 view — only valid before sealing.
+    pub fn dense_mut(&mut self) -> &mut Tensor {
+        match self {
+            ProjStorage::DenseF32(t) => t,
+            _ => panic!(
+                "projection is sealed ({}); call ModelWeights::decompact() \
+                 for a dense working copy",
+                self.encoding_name()
+            ),
+        }
+    }
+
+    /// Materialize a dense f32 copy (f16 rounding is already baked in
+    /// for sealed variants).
+    pub fn to_dense(&self) -> Tensor {
+        match self {
+            ProjStorage::DenseF32(t) => t.clone(),
+            ProjStorage::DenseF16 { bits, shape } => {
+                let lut = f16_table();
+                Tensor::new(
+                    bits.iter().map(|&b| lut[b as usize]).collect(),
+                    shape.to_vec(),
+                )
+            }
+            ProjStorage::SparseCsr { row_ptr, col_idx, vals_f16, shape, .. } => {
+                let lut = f16_table();
+                let (r, c) = (shape[0], shape[1]);
+                let mut t = Tensor::zeros(&[r, c]);
+                for i in 0..r {
+                    let (s, e) = (row_ptr[i] as usize, row_ptr[i + 1] as usize);
+                    for (&j, &v) in col_idx[s..e].iter().zip(&vals_f16[s..e]) {
+                        t.data[i * c + j as usize] = lut[v as usize];
+                    }
+                }
+                t
+            }
+        }
+    }
+}
+
+/// y(N) = x(K) @ w(K,N) through any storage backend — the decode hot
+/// path. CSR skips zeros structurally; f16 streams through the lookup
+/// table in registers.
+pub fn matvec_storage(x: &[f32], w: &ProjStorage, out: &mut [f32]) {
+    match w {
+        ProjStorage::DenseF32(t) => matvec(x, t, out),
+        ProjStorage::DenseF16 { bits, shape } => {
+            let (k, n) = (shape[0], shape[1]);
+            debug_assert_eq!(x.len(), k);
+            debug_assert_eq!(out.len(), n);
+            let lut = f16_table();
+            out.fill(0.0);
+            for (kk, &xv) in x.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &bits[kk * n..kk * n + n];
+                for (o, &wb) in out.iter_mut().zip(wrow.iter()) {
+                    *o += xv * lut[wb as usize];
+                }
+            }
+        }
+        ProjStorage::SparseCsr { row_ptr, col_idx, vals_f16, shape, .. } => {
+            let (k, n) = (shape[0], shape[1]);
+            debug_assert_eq!(x.len(), k);
+            debug_assert_eq!(out.len(), n);
+            let lut = f16_table();
+            out.fill(0.0);
+            for (kk, &xv) in x.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let (s, e) = (row_ptr[kk] as usize, row_ptr[kk + 1] as usize);
+                for (&j, &v) in col_idx[s..e].iter().zip(&vals_f16[s..e]) {
+                    out[j as usize] += xv * lut[v as usize];
+                }
+            }
+        }
+    }
+}
+
+/// Rows of x processed together per task — each streamed w row (dense
+/// f16) or CSR row slice is reused across RB output rows, matching the
+/// dense kernel's register blocking so sealed prefill does not pay
+/// RB× extra weight traffic.
+const RB: usize = 4;
+
+/// out(M,N) = x(M,K) @ w(K,N) through any storage backend (prefill /
+/// evaluation path). Dense f32 keeps the blocked f32 kernel; sealed
+/// backends run the same RB-row-block scheme over their own layout.
+/// Per-output-element summation order (kk ascending) is identical to
+/// [`matvec_storage`], so decode and prefill agree bit-for-bit.
+pub fn matmul_storage(x: &Tensor, w: &ProjStorage) -> Tensor {
+    if let ProjStorage::DenseF32(t) = w {
+        return matmul(x, t);
+    }
+    let (m, k) = (x.shape[0], x.shape[1]);
+    let [k2, n] = w.shape();
+    assert_eq!(k, k2, "matmul inner dims {:?} {:?}", x.shape, w.shape());
+    let mut out = Tensor::zeros(&[m, n]);
+    let xd = &x.data;
+    let lut = f16_table();
+    match w {
+        ProjStorage::DenseF16 { bits, .. } => {
+            par_chunks_mut(&mut out.data, RB * n, |bi, ochunk| {
+                let r0 = bi * RB;
+                let rows = ochunk.len() / n;
+                for kk in 0..k {
+                    let wrow = &bits[kk * n..kk * n + n];
+                    for r in 0..rows {
+                        let xv = xd[(r0 + r) * k + kk];
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let orow = &mut ochunk[r * n..(r + 1) * n];
+                        for (o, &wb) in orow.iter_mut().zip(wrow.iter()) {
+                            *o += xv * lut[wb as usize];
+                        }
+                    }
+                }
+            });
+        }
+        ProjStorage::SparseCsr { row_ptr, col_idx, vals_f16, .. } => {
+            par_chunks_mut(&mut out.data, RB * n, |bi, ochunk| {
+                let r0 = bi * RB;
+                let rows = ochunk.len() / n;
+                for kk in 0..k {
+                    let (s, e) =
+                        (row_ptr[kk] as usize, row_ptr[kk + 1] as usize);
+                    if s == e {
+                        continue;
+                    }
+                    let cols = &col_idx[s..e];
+                    let vals = &vals_f16[s..e];
+                    for r in 0..rows {
+                        let xv = xd[(r0 + r) * k + kk];
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let orow = &mut ochunk[r * n..(r + 1) * n];
+                        for (&j, &vb) in cols.iter().zip(vals.iter()) {
+                            orow[j as usize] += xv * lut[vb as usize];
+                        }
+                    }
+                }
+            });
+        }
+        ProjStorage::DenseF32(_) => unreachable!(),
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn rand_sparse(seed: u64, r: usize, c: usize, sparsity: f64) -> Tensor {
+        let mut rng = Pcg32::seeded(seed);
+        let data: Vec<f32> = (0..r * c)
+            .map(|_| {
+                let v = rng.normal();
+                if rng.f64() < sparsity {
+                    0.0
+                } else {
+                    v
+                }
+            })
+            .collect();
+        Tensor::new(data, vec![r, c])
+    }
+
+    #[test]
+    fn seal_roundtrip_within_f16_tolerance() {
+        let t = rand_sparse(1, 20, 33, 0.6);
+        for s in [ProjStorage::seal_f16(&t), ProjStorage::seal_csr(&t)] {
+            let back = s.to_dense();
+            assert_eq!(back.shape, t.shape);
+            for (a, b) in t.data.iter().zip(back.data.iter()) {
+                assert!((a - b).abs() <= 1e-3 * (1.0 + a.abs()), "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn csr_caches_nnz_and_pattern() {
+        let t = rand_sparse(2, 16, 24, 0.75);
+        let want = t.numel() - t.zero_count();
+        let s = ProjStorage::seal_csr(&t);
+        assert_eq!(s.nnz(), want);
+        assert_eq!(s.zero_count(), t.zero_count());
+        let back = s.to_dense();
+        for (a, b) in t.data.iter().zip(back.data.iter()) {
+            assert_eq!(*a == 0.0, *b == 0.0);
+        }
+    }
+
+    #[test]
+    fn matvec_storage_matches_dense() {
+        let mut rng = Pcg32::seeded(3);
+        let t = rand_sparse(4, 48, 96, 0.7);
+        let x: Vec<f32> = (0..48).map(|_| rng.normal()).collect();
+        let mut want = vec![0f32; 96];
+        matvec(&x, &t, &mut want);
+        for s in [
+            ProjStorage::from_dense(t.clone()),
+            ProjStorage::seal_f16(&t),
+            ProjStorage::seal_csr(&t),
+        ] {
+            let mut got = vec![0f32; 96];
+            matvec_storage(&x, &s, &mut got);
+            for (a, b) in want.iter().zip(got.iter()) {
+                assert!(
+                    (a - b).abs() <= 2e-2 * (1.0 + a.abs()),
+                    "{}: {a} vs {b}",
+                    s.encoding_name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_storage_matches_dense() {
+        let mut rng = Pcg32::seeded(5);
+        let t = rand_sparse(6, 32, 40, 0.5);
+        let x = Tensor::new(
+            (0..7 * 32).map(|_| rng.normal()).collect(),
+            vec![7, 32],
+        );
+        let want = matmul(&x, &t);
+        for s in [ProjStorage::seal_f16(&t), ProjStorage::seal_csr(&t)] {
+            let got = matmul_storage(&x, &s);
+            assert_eq!(got.shape, want.shape);
+            for (a, b) in want.data.iter().zip(got.data.iter()) {
+                assert!(
+                    (a - b).abs() <= 2e-2 * (1.0 + a.abs()),
+                    "{}: {a} vs {b}",
+                    s.encoding_name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn resident_bytes_ordering_at_high_sparsity() {
+        let t = rand_sparse(7, 64, 64, 0.9);
+        let f32b = ProjStorage::from_dense(t.clone()).resident_bytes();
+        let f16b = ProjStorage::seal_f16(&t).resident_bytes();
+        let csrb = ProjStorage::seal_csr(&t).resident_bytes();
+        assert_eq!(f32b, 4 * 64 * 64);
+        assert_eq!(f16b, 2 * 64 * 64);
+        assert!(csrb < f16b, "csr {csrb} must beat f16 {f16b} at 90%");
+    }
+
+    #[test]
+    #[should_panic(expected = "sealed")]
+    fn dense_view_of_sealed_panics() {
+        let t = rand_sparse(8, 4, 4, 0.0);
+        ProjStorage::seal_f16(&t).dense();
+    }
+}

@@ -1,5 +1,9 @@
 //! IEEE 754 binary16 conversion (no `half` crate in this image).
 //! Round-to-nearest-even on encode; subnormals handled both ways.
+//!
+//! Lives in `util` because both the deploy encoder and the runtime
+//! storage kernels (`tensor::storage`) depend on it; `deploy::f16`
+//! re-exports this module for backwards compatibility.
 
 /// f32 -> f16 bits (round to nearest even).
 pub fn to_bits(v: f32) -> u16 {

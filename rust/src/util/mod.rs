@@ -2,6 +2,7 @@
 //! rand / rayon / criterion available): JSON, PCG RNG, thread helpers,
 //! binary IO, and a tiny timing harness used by the benches.
 
+pub mod f16;
 pub mod json;
 pub mod rng;
 pub mod threadpool;

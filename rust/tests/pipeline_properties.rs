@@ -101,13 +101,13 @@ fn structured_never_empties_and_stays_consistent() {
             let hk = l.kept_heads.len();
             let c = l.kept_channels.len();
             assert!(hk >= 1 && c >= 1);
-            assert_eq!(l.proj(Proj::Q).shape[1], hk * m.cfg.head_dim);
-            assert_eq!(l.proj(Proj::K).shape[1], hk * m.cfg.head_dim);
-            assert_eq!(l.proj(Proj::V).shape[1], hk * m.cfg.head_dim);
-            assert_eq!(l.proj(Proj::O).shape[0], hk * m.cfg.head_dim);
-            assert_eq!(l.proj(Proj::Gate).shape[1], c);
-            assert_eq!(l.proj(Proj::Up).shape[1], c);
-            assert_eq!(l.proj(Proj::Down).shape[0], c);
+            assert_eq!(l.proj(Proj::Q).cols(), hk * m.cfg.head_dim);
+            assert_eq!(l.proj(Proj::K).cols(), hk * m.cfg.head_dim);
+            assert_eq!(l.proj(Proj::V).cols(), hk * m.cfg.head_dim);
+            assert_eq!(l.proj(Proj::O).rows(), hk * m.cfg.head_dim);
+            assert_eq!(l.proj(Proj::Gate).cols(), c);
+            assert_eq!(l.proj(Proj::Up).cols(), c);
+            assert_eq!(l.proj(Proj::Down).rows(), c);
             // kept lists strictly increasing (valid index maps)
             assert!(l.kept_heads.windows(2).all(|w| w[0] < w[1]));
             assert!(l.kept_channels.windows(2).all(|w| w[0] < w[1]));
@@ -142,6 +142,70 @@ fn composite_monotone_bytes_in_share() {
             m.model_bytes()
         );
         prev = m.model_bytes();
+    }
+}
+
+#[test]
+fn storage_roundtrip_logits_within_f16_tolerance() {
+    // Property (encode→load→decode parity): a model round-tripped
+    // through each ProjStorage variant — sealed in memory AND shipped
+    // through the deploy byte format — produces logits within f16
+    // tolerance of the dense-f32 path, across random sparsity levels.
+    use mosaic::model::engine::forward_full;
+    use mosaic::tensor::ProjStorage;
+    let mut rng = Pcg32::seeded(451);
+    for trial in 0u64..6 {
+        let mut m = random_model(4000 + trial);
+        let p = 0.9 * rng.f64();
+        let g = rand_rank(&mut rng, m.cfg.n_layers);
+        let pl = plan(&g, p, Uniformity::Projection);
+        prune_unstructured(&mut m, &pl, None, Metric::Magnitude);
+        let toks: Vec<u16> = (0..8)
+            .map(|i| ((i * 13 + trial as usize) % 60 + 2) as u16)
+            .collect();
+        let dense = forward_full(&m, &toks);
+        let close = |name: &str, got: &mosaic::tensor::Tensor| {
+            assert_eq!(got.shape, dense.shape);
+            for (a, b) in dense.data.iter().zip(got.data.iter()) {
+                assert!(
+                    (a - b).abs() < 5e-2 * (1.0 + a.abs()),
+                    "trial {trial} p={p:.2} {name}: {a} vs {b}"
+                );
+            }
+        };
+        // each variant forced explicitly
+        type SealFn = fn(&mosaic::tensor::Tensor) -> ProjStorage;
+        let variants: [(&str, SealFn); 2] = [
+            ("f16", ProjStorage::seal_f16),
+            ("csr", ProjStorage::seal_csr),
+        ];
+        for (name, seal) in variants {
+            let mut sealed = m.clone();
+            for l in sealed.layers.iter_mut() {
+                for s in l.projs.iter_mut() {
+                    let v = seal(s.dense());
+                    *s = v;
+                }
+            }
+            close(name, &forward_full(&sealed, &toks));
+        }
+        // auto-chosen backends (compact) …
+        let mut mc = m.clone();
+        mc.compact();
+        assert!(mc.resident_bytes() <= m.resident_bytes());
+        close("compact", &forward_full(&mc, &toks));
+        // … and the full export→load_encoded byte round trip
+        let path = std::env::temp_dir()
+            .join(format!("mosaic_prop_rt_{trial}.bin"));
+        mosaic::deploy::export_model(&m, &path).unwrap();
+        let loaded = mosaic::deploy::load_encoded(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(loaded
+            .layers
+            .iter()
+            .flat_map(|l| l.projs.iter())
+            .all(|s| !s.is_dense_f32()));
+        close("load_encoded", &forward_full(&loaded, &toks));
     }
 }
 

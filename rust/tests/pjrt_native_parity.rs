@@ -113,7 +113,7 @@ fn weight_metric_kernel_matches_rust_pod() {
     let dir = a.model_dir("tl1_7");
     let weights = ModelWeights::load(&dir).unwrap();
     let mut rt = ModelRuntime::load(&dir).unwrap();
-    let w = weights.layers[0].projs[0].clone();
+    let w = weights.layers[0].projs[0].dense().clone();
     let act: Vec<f32> = (0..w.shape[0]).map(|i| 1.0 + i as f32).collect();
     let (count, _sum) = rt.weight_metric(&w, &act).unwrap();
     let ratio = mosaic::rank::pod_outlier_ratio(&w, &act, 5.0);

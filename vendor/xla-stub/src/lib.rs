@@ -1,0 +1,150 @@
+//! Offline stub of the `xla` (PJRT / xla_extension) bindings.
+//!
+//! This image has no xla_extension shared library and no registry
+//! access, so the workspace vendors this API-compatible stub: every
+//! entry point returns an "unavailable" error at *runtime*, while the
+//! `runtime::ModelRuntime` code keeps compiling unchanged. The PJRT
+//! paths already degrade gracefully — artifact-dependent tests and
+//! benches skip when `ModelRuntime::load` fails — and the native engine
+//! (the L3 deployment substrate) covers every runtime scenario.
+//!
+//! To run the real PJRT paths, point the `xla` dependency in the root
+//! Cargo.toml at the actual bindings instead of this stub.
+
+use std::fmt;
+
+/// Error carrying the unavailability message (or any stub failure).
+pub struct Error(pub String);
+
+impl Error {
+    fn unavailable() -> Error {
+        Error(
+            "xla/PJRT unavailable: built with the vendored stub \
+             (see vendor/xla-stub)"
+                .to_string(),
+        )
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla::Error({})", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+pub struct PjRtClient {
+    _priv: (),
+}
+
+pub struct PjRtDevice {
+    _priv: (),
+}
+
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+pub struct XlaComputation {
+    _priv: (),
+}
+
+pub struct Literal {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(Error::unavailable())
+    }
+
+    pub fn compile(
+        &self,
+        _comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable())
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::unavailable())
+    }
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable())
+    }
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(
+        &self,
+        _args: &[&PjRtBuffer],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable())
+    }
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+}
+
+impl Literal {
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_tuple2(self) -> Result<(Literal, Literal)> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("unavailable"));
+        assert!(HloModuleProto::from_text_file("x").is_err());
+    }
+}
