@@ -4,7 +4,7 @@
 
 CARGO ?= cargo
 
-.PHONY: build test fmt check bench
+.PHONY: build test fmt check bench bench-serve
 
 build:
 	$(CARGO) build --release
@@ -30,3 +30,8 @@ check:
 
 bench:
 	$(CARGO) bench
+
+# Serving perf trajectory: runs the continuous-batching bench and emits
+# machine-readable BENCH_serve.json (tok/s, occupancy, resident bytes).
+bench-serve:
+	$(CARGO) bench --bench serve_throughput

@@ -1,19 +1,41 @@
 //! Serving-layer throughput/latency: dense vs composite-pruned SLMs
-//! under the same Poisson trace, plus batch-width scaling. This is the
-//! deployment-side measurement behind the paper's "up to 67 % faster
-//! inference" once the SLM is actually serving requests.
+//! under the same Poisson trace, plus batch-width scaling through the
+//! batched decode path (one weight pass per projection per step). This
+//! is the deployment-side measurement behind the paper's "up to 67 %
+//! faster inference" once the SLM is actually serving requests.
+//!
+//! The batch-width sweep is artifact-free (random 70 %-pruned model,
+//! dense working copies vs `compact()`ed storage) and must show
+//! per-step cost growing **sublinearly** from width 1 → 8: the weights
+//! are streamed once per step however many sequences share it. The
+//! model-variant section needs artifacts and is skipped without them.
+//!
+//! Emits `BENCH_serve.json` (tokens/s, mean occupancy, resident bytes
+//! per row) for cross-PR perf tracking — run via `make bench-serve`.
 
+use std::sync::atomic::Ordering;
 use std::time::{Duration, Instant};
 
 use mosaic::bench_support::{header, rec, Bench};
 use mosaic::coordinator::Mosaic;
 use mosaic::data::trace::{generate, percentiles, Arrival, TraceConfig};
+use mosaic::model::weights::testutil::random_model_sized;
+use mosaic::prune::unstructured::{mask_lowest, scores, Metric};
 use mosaic::prune::{Category, Uniformity};
 use mosaic::serve::{ServeConfig, Server};
 use mosaic::util::json::Json;
 
+struct DriveOut {
+    tok_per_s: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+    occupancy: f64,
+    /// mean wall time per batched engine step
+    step_us: f64,
+}
+
 fn drive(server: &Server, trace: &[mosaic::data::trace::TraceItem])
-         -> (f64, f64, f64) {
+         -> DriveOut {
     let t0 = Instant::now();
     let mut pending = Vec::new();
     for item in trace {
@@ -36,14 +58,25 @@ fn drive(server: &Server, trace: &[mosaic::data::trace::TraceItem])
         }
     }
     let wall = t0.elapsed().as_secs_f64();
+    let steps = server.stats.batch_steps.load(Ordering::Relaxed);
+    let step_us =
+        server.stats.step_wall_us.load(Ordering::Relaxed) as f64
+            / steps.max(1) as f64;
     let (p50, p95, _) = percentiles(lat);
-    (tokens as f64 / wall, p50, p95)
+    DriveOut {
+        tok_per_s: tokens as f64 / wall,
+        p50_ms: p50,
+        p95_ms: p95,
+        occupancy: server.stats.mean_occupancy(),
+        // engine-side wall per decode-carrying batch pass (excludes
+        // queue/idle time — the sublinear-growth signal)
+        step_us,
+    }
 }
 
 fn main() -> anyhow::Result<()> {
     let mut b = Bench::new("serve_throughput",
                            "continuous-batching serving perf");
-    let mut mo = Mosaic::load("tl1_7")?;
     let samples = Bench::samples();
     let n_requests = if Bench::fast() { 16 } else { 48 };
     // closed-loop saturation: all requests arrive at t=0 so tok/s
@@ -57,67 +90,133 @@ fn main() -> anyhow::Result<()> {
         max_new: 16,
         ..Default::default()
     });
+    // rows mirrored into BENCH_serve.json for cross-PR tracking
+    let mut summary: Vec<Json> = Vec::new();
 
-    println!("{}", "— model variants (batch width 6) —");
-    header(&["variant", "tok/s", "p50-ms", "p95-ms", "res-KB"]);
-    // sealed variants run the engine directly on f16/CSR storage — the
-    // first time an unstructured-pruned model serves both smaller and
-    // faster than its dense working copy
-    let unstructured70 = mo.prune_wanda(0.7, Uniformity::Projection,
-                                        samples)?;
-    let mut unstructured70_sealed = unstructured70.clone();
-    unstructured70_sealed.compact();
-    let composite60 =
-        mo.prune(0.6, Uniformity::Projection, Category::Composite,
-                 samples)?.0;
-    let mut composite60_sealed = composite60.clone();
-    composite60_sealed.compact();
-    let variants: Vec<(&str, mosaic::model::ModelWeights)> = vec![
-        ("dense", mo.dense.clone()),
-        ("unstr70", unstructured70),
-        ("unstr70-seal", unstructured70_sealed),
-        ("composite60", composite60),
-        ("comp60-seal", composite60_sealed),
-        ("structured60",
-         mo.prune(0.6, Uniformity::Projection, Category::Structured,
-                  samples)?.0),
-    ];
-    for (name, model) in variants {
+    // ---- model variants (needs artifacts)
+    match Mosaic::load("tl1_7") {
+        Ok(mut mo) => {
+            println!("{}", "— model variants (batch width 6) —");
+            header(&["variant", "tok/s", "p50-ms", "p95-ms", "res-KB"]);
+            // sealed variants run the engine directly on f16/CSR
+            // storage — an unstructured-pruned model serving both
+            // smaller and faster than its dense working copy
+            let unstructured70 =
+                mo.prune_wanda(0.7, Uniformity::Projection, samples)?;
+            let mut unstructured70_sealed = unstructured70.clone();
+            unstructured70_sealed.compact();
+            let composite60 = mo
+                .prune(0.6, Uniformity::Projection, Category::Composite,
+                       samples)?
+                .0;
+            let mut composite60_sealed = composite60.clone();
+            composite60_sealed.compact();
+            let variants: Vec<(&str, mosaic::model::ModelWeights)> = vec![
+                ("dense", mo.dense.clone()),
+                ("unstr70", unstructured70),
+                ("unstr70-seal", unstructured70_sealed),
+                ("composite60", composite60),
+                ("comp60-seal", composite60_sealed),
+                ("structured60",
+                 mo.prune(0.6, Uniformity::Projection,
+                          Category::Structured, samples)?.0),
+            ];
+            for (name, model) in variants {
+                let resident = model.resident_bytes();
+                let srv = Server::start(
+                    model,
+                    ServeConfig {
+                        max_batch: 6,
+                        max_queue: 256,
+                        ..Default::default()
+                    },
+                    0,
+                )?;
+                let d = drive(&srv, &trace);
+                println!(
+                    "{name:>12}{:>12.0}{:>12.2}{:>12.2}{:>12}",
+                    d.tok_per_s, d.p50_ms, d.p95_ms, resident / 1024
+                );
+                let row = rec(&[
+                    ("section", Json::str("variants")),
+                    ("variant", Json::str(name)),
+                    ("tok_per_s", Json::num(d.tok_per_s)),
+                    ("p50_ms", Json::num(d.p50_ms)),
+                    ("p95_ms", Json::num(d.p95_ms)),
+                    ("resident_bytes", Json::num(resident as f64)),
+                    ("occupancy", Json::num(d.occupancy)),
+                ]);
+                b.row("variants", row.clone());
+                summary.push(row);
+                srv.shutdown();
+            }
+        }
+        Err(e) => println!("skipping model-variant rows: {e}"),
+    }
+
+    // ---- batch-width sweep (artifact-free): 70 %-pruned random
+    // model, dense working copies vs compact()ed storage. Sublinear
+    // per-step cost from width 1 → 8 is the one-weight-pass invariant
+    // showing up on the wall clock.
+    let mk = || {
+        let mut m = random_model_sized(9, 4, 256, 8, 704, 512, 128);
+        for l in m.layers.iter_mut() {
+            for s in l.projs.iter_mut() {
+                let t = s.dense_mut();
+                let sc = scores(t, None, Metric::Magnitude);
+                mask_lowest(t, &sc, 0.7);
+            }
+        }
+        m
+    };
+    let dense = mk();
+    let mut sealed = dense.clone();
+    sealed.compact();
+    let widths: &[usize] =
+        if Bench::fast() { &[1, 4] } else { &[1, 2, 4, 8] };
+    println!("\n— batch-width sweep (70% pruned, dense vs sealed) —");
+    header(&["variant", "width", "tok/s", "p95-ms", "step-us", "occ"]);
+    for (vname, model) in [("dense", &dense), ("sealed", &sealed)] {
         let resident = model.resident_bytes();
-        let srv = Server::start(
-            model, ServeConfig { max_batch: 6, max_queue: 256, ..Default::default() }, 0)?;
-        let (tps, p50, p95) = drive(&srv, &trace);
-        println!("{name:>12}{tps:>12.0}{p50:>12.2}{p95:>12.2}{:>12}",
-                 resident / 1024);
-        b.row("variants", rec(&[
-            ("variant", Json::str(name)),
-            ("tok_per_s", Json::num(tps)),
-            ("p50_ms", Json::num(p50)),
-            ("p95_ms", Json::num(p95)),
-            ("resident_bytes", Json::num(resident as f64)),
-            ("occupancy", Json::num(srv.stats.mean_occupancy())),
-        ]));
-        srv.shutdown();
+        for &w in widths {
+            let srv = Server::start(
+                model.clone(),
+                ServeConfig {
+                    max_batch: w,
+                    max_queue: 256,
+                    ..Default::default()
+                },
+                0,
+            )?;
+            let d = drive(&srv, &trace);
+            println!(
+                "{vname:>12}{w:>12}{:>12.0}{:>12.2}{:>12.0}{:>12.2}",
+                d.tok_per_s, d.p95_ms, d.step_us, d.occupancy
+            );
+            let row = rec(&[
+                ("section", Json::str("widths")),
+                ("variant", Json::str(vname)),
+                ("width", Json::num(w as f64)),
+                ("tok_per_s", Json::num(d.tok_per_s)),
+                ("p95_ms", Json::num(d.p95_ms)),
+                ("step_us", Json::num(d.step_us)),
+                ("occupancy", Json::num(d.occupancy)),
+                ("resident_bytes", Json::num(resident as f64)),
+            ]);
+            b.row("widths", row.clone());
+            summary.push(row);
+            srv.shutdown();
+        }
     }
 
-    println!("\n— batch-width scaling (composite60) —");
-    header(&["width", "tok/s", "p95-ms"]);
-    let (pruned, _) = mo.prune(0.6, Uniformity::Projection,
-                               Category::Composite, samples)?;
-    let widths: &[usize] = if Bench::fast() { &[4] } else { &[1, 2, 4, 8] };
-    for &w in widths {
-        let srv = Server::start(
-            pruned.clone(),
-            ServeConfig { max_batch: w, max_queue: 256, ..Default::default() }, 0)?;
-        let (tps, _p50, p95) = drive(&srv, &trace);
-        println!("{w:>12}{tps:>12.0}{p95:>12.2}");
-        b.row("widths", rec(&[
-            ("width", Json::num(w as f64)),
-            ("tok_per_s", Json::num(tps)),
-            ("p95_ms", Json::num(p95)),
-        ]));
-        srv.shutdown();
-    }
+    // machine-readable perf-trajectory file (make bench-serve)
+    let mut out = Json::obj();
+    out.set("bench", Json::str("serve_throughput"));
+    out.set("n_requests", Json::num(n_requests as f64));
+    out.set("rows", Json::Arr(summary));
+    std::fs::write("BENCH_serve.json", out.to_string())?;
+    println!("[wrote BENCH_serve.json]");
+
     b.finish();
     Ok(())
 }

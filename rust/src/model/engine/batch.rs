@@ -1,0 +1,530 @@
+//! Batched decode — one weight pass per projection per step across the
+//! continuous batch.
+//!
+//! The serve loop used to call [`super::decode_step`] once per active
+//! sequence, so every projection (dense f32/f16 or CSR) was re-streamed
+//! B times per batch step and the memory-bandwidth-bound decode path got
+//! *slower per token* as the continuous batch filled. [`DecodeBatch`]
+//! owns N per-sequence KV caches and positions, gathers the N current
+//! activation vectors into an (N, d) matrix, and runs **one**
+//! [`matmul_storage_into`] per projection per layer per step — f16 bits
+//! are decoded and CSR rows are traversed exactly once regardless of
+//! batch width (asserted against `tensor::storage::weight_passes` in
+//! rust/tests/batched_decode.rs). RoPE and attention stay per-sequence:
+//! each row attends over its own cache at its own position, parallel
+//! over sequence×head, and the lm_head runs through the
+//! column-block-parallel [`matmul_colpar`].
+//!
+//! Numerics: per-output-element summation order is kk-ascending in every
+//! kernel here, the same as the single-sequence kernels, so a sequence's
+//! logits are bit-identical no matter which batch it shares a step with
+//! — width-1 and width-8 serving produce identical greedy tokens.
+//!
+//! Prefill goes through the same storage-aware batched kernels, and
+//! [`DecodeBatch::step_fused`] goes further: decode tokens AND pending
+//! prompt chunks are staged as rows of the *same* (B, d) matrix, so
+//! even during an admission burst the engine makes one weight pass per
+//! projection per iteration — not one per prefilling sequence plus one
+//! for the decode step. The lm_head then runs only over the rows that
+//! actually need logits (decode rows + each completed prompt's last
+//! row).
+
+use crate::model::config::Proj;
+use crate::model::weights::ModelWeights;
+use crate::tensor::{
+    self, gather_rows, matmul_colpar, matmul_storage_into, rmsnorm, silu,
+    softmax, Tensor,
+};
+use crate::util::threadpool::par_chunks_mut;
+
+/// Prompt tokens prefilled per [`DecodeBatch::prefill_chunk`] call:
+/// bounds how long a freshly-admitted long prompt can stall the decode
+/// steps of the other sequences in the batch.
+pub const PREFILL_CHUNK: usize = 32;
+
+/// One sequence's private decode state: per-layer KV cache + position.
+struct SeqKv {
+    /// per layer: (cap, kept_heads * head_dim)
+    k: Vec<Tensor>,
+    v: Vec<Tensor>,
+    pos: usize,
+    cap: usize,
+}
+
+/// Continuous-batching decode state: N per-sequence KV caches plus the
+/// shared, preallocated activation scratch the batched step runs in.
+/// Scratch buffers are sized once at construction and only resized
+/// within that capacity, so steady-state steps do not allocate.
+pub struct DecodeBatch {
+    seqs: Vec<SeqKv>,
+    max_batch: usize,
+    max_ctx: usize,
+    /// scratch row capacity: max_batch decode rows + a PREFILL_CHUNK
+    /// budget of prompt rows can share one fused pass
+    cap_rows: usize,
+    // ---- preallocated scratch (cap_rows × widest per-layer dimension)
+    x: Tensor,
+    xn: Tensor,
+    q: Tensor,
+    k: Tensor,
+    v: Tensor,
+    attn: Tensor,
+    o: Tensor,
+    g: Tensor,
+    u: Tensor,
+    h: Tensor,
+    f: Tensor,
+    logits: Tensor,
+    /// attention scratch: one (max_ctx scores + head_dim output lanes)
+    /// stripe per row×head task — parallel attention without allocation
+    /// or shared-write locking
+    aw: Vec<f32>,
+    head_scratch: Vec<f32>,
+    /// per batch row: (sequence index, position being written)
+    rows: Vec<(usize, usize)>,
+    /// per batch row: input token (embedding gather source)
+    toks: Vec<u16>,
+    gath: Vec<usize>,
+    /// rows whose logits are wanted (lm_head runs only over these)
+    sel: Vec<usize>,
+}
+
+/// Reshape a scratch tensor to (rows, cols), shrinking/regrowing within
+/// the capacity reserved at construction.
+fn shape2(t: &mut Tensor, rows: usize, cols: usize) {
+    t.data.resize(rows * cols, 0.0);
+    t.shape[0] = rows;
+    t.shape[1] = cols;
+}
+
+impl DecodeBatch {
+    /// Scratch for up to `max_batch` concurrent sequences, each with a
+    /// KV cache of at most `max_ctx` positions.
+    pub fn new(m: &ModelWeights, max_batch: usize, max_ctx: usize) -> Self {
+        let cfg = &m.cfg;
+        let dh = cfg.head_dim;
+        let maxa = cfg.n_heads * dh;
+        let maxc = cfg.ff_dim;
+        let cap_rows = max_batch + PREFILL_CHUNK;
+        DecodeBatch {
+            seqs: Vec::with_capacity(max_batch),
+            max_batch,
+            max_ctx,
+            cap_rows,
+            x: Tensor::zeros(&[cap_rows, cfg.d_model]),
+            xn: Tensor::zeros(&[cap_rows, cfg.d_model]),
+            q: Tensor::zeros(&[cap_rows, maxa]),
+            k: Tensor::zeros(&[cap_rows, maxa]),
+            v: Tensor::zeros(&[cap_rows, maxa]),
+            attn: Tensor::zeros(&[cap_rows, maxa]),
+            o: Tensor::zeros(&[cap_rows, cfg.d_model]),
+            g: Tensor::zeros(&[cap_rows, maxc]),
+            u: Tensor::zeros(&[cap_rows, maxc]),
+            h: Tensor::zeros(&[cap_rows, maxc]),
+            f: Tensor::zeros(&[cap_rows, cfg.d_model]),
+            logits: Tensor::zeros(&[max_batch.max(1), cfg.vocab]),
+            aw: vec![0.0; cap_rows * cfg.n_heads * (max_ctx + dh)],
+            head_scratch: Vec::new(),
+            rows: Vec::with_capacity(cap_rows),
+            toks: Vec::with_capacity(cap_rows),
+            gath: Vec::with_capacity(cap_rows),
+            sel: Vec::with_capacity(max_batch.max(1)),
+        }
+    }
+
+    /// Admit a new sequence with KV capacity `cap` rows (clamped to
+    /// this batch's `max_ctx`). Returns its index. Indices are stable
+    /// until a [`DecodeBatch::retire`], which `swap_remove`s — callers
+    /// holding per-sequence metadata must mirror that move.
+    pub fn admit(&mut self, m: &ModelWeights, cap: usize) -> usize {
+        assert!(self.seqs.len() < self.max_batch, "batch full");
+        let cap = cap.min(self.max_ctx).max(1);
+        let dh = m.cfg.head_dim;
+        let kv = || -> Vec<Tensor> {
+            m.layers
+                .iter()
+                .map(|l| Tensor::zeros(&[cap, l.kept_heads.len() * dh]))
+                .collect()
+        };
+        self.seqs.push(SeqKv { k: kv(), v: kv(), pos: 0, cap });
+        self.seqs.len() - 1
+    }
+
+    /// Drop sequence `si` from the batch (`swap_remove` semantics: the
+    /// last sequence takes index `si`).
+    pub fn retire(&mut self, si: usize) {
+        self.seqs.swap_remove(si);
+    }
+
+    pub fn len(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seqs.is_empty()
+    }
+
+    /// Tokens already consumed by sequence `si` (prompt + generated).
+    pub fn pos(&self, si: usize) -> usize {
+        self.seqs[si].pos
+    }
+
+    /// KV rows allocated for sequence `si`.
+    pub fn cap(&self, si: usize) -> usize {
+        self.seqs[si].cap
+    }
+
+    /// KV-cache bytes resident across all admitted sequences.
+    pub fn kv_bytes(&self) -> usize {
+        self.seqs
+            .iter()
+            .flat_map(|s| s.k.iter().chain(s.v.iter()))
+            .map(|t| t.numel() * 4)
+            .sum()
+    }
+
+    /// One batched decode step. `inputs[r] = (sequence index, token)`:
+    /// each listed sequence consumes its token at its own position and
+    /// advances by one. Sequences not listed (e.g. still prefilling)
+    /// are untouched. Returns logits with row r matching `inputs[r]`.
+    pub fn step(
+        &mut self,
+        m: &ModelWeights,
+        inputs: &[(usize, u16)],
+    ) -> &Tensor {
+        assert!(!inputs.is_empty(), "empty step");
+        self.step_fused(m, inputs, &[])
+    }
+
+    /// One fused batch pass: every decode token in `decode` AND every
+    /// staged prompt chunk in `prefill` (`(sequence, tokens,
+    /// want_logits)`) ride the same (B, d) activation matrix — one
+    /// weight pass per projection per call even while sequences are
+    /// being admitted. A sequence may appear in at most one role per
+    /// call. Returns logits: first one row per `decode` entry in
+    /// order, then one row per `want_logits` prefill entry in order
+    /// (the chunk's last position — a completed prompt's first
+    /// generated token). The lm_head runs only over those rows.
+    pub fn step_fused(
+        &mut self,
+        m: &ModelWeights,
+        decode: &[(usize, u16)],
+        prefill: &[(usize, &[u16], bool)],
+    ) -> &Tensor {
+        debug_assert!(
+            {
+                let mut ids: Vec<usize> = decode
+                    .iter()
+                    .map(|&(si, _)| si)
+                    .chain(prefill.iter().map(|&(si, _, _)| si))
+                    .collect();
+                ids.sort_unstable();
+                ids.windows(2).all(|w| w[0] != w[1])
+            },
+            "sequence staged twice in one fused step"
+        );
+        self.rows.clear();
+        self.toks.clear();
+        for &(si, t) in decode {
+            let s = &self.seqs[si];
+            assert!(s.pos < s.cap, "seq {si} out of KV capacity");
+            self.rows.push((si, s.pos));
+            self.toks.push(t);
+        }
+        for &(si, tokens, _) in prefill {
+            assert!(!tokens.is_empty(), "empty prefill chunk");
+            let pos0 = self.seqs[si].pos;
+            assert!(
+                pos0 + tokens.len() <= self.seqs[si].cap,
+                "seq {si} prefill past KV capacity"
+            );
+            for (i, &t) in tokens.iter().enumerate() {
+                self.rows.push((si, pos0 + i));
+                self.toks.push(t);
+            }
+        }
+        let b = self.toks.len();
+        assert!(b > 0 && b <= self.cap_rows, "fused step width {b}");
+        self.forward_rows(m);
+        for &(si, _) in decode {
+            self.seqs[si].pos += 1;
+        }
+        for &(si, tokens, _) in prefill {
+            self.seqs[si].pos += tokens.len();
+        }
+        // lm_head over only the rows that need logits: decode rows,
+        // then each want_logits chunk's last row
+        self.sel.clear();
+        self.sel.extend(0..decode.len());
+        let mut base = decode.len();
+        for &(_, tokens, want) in prefill {
+            if want {
+                self.sel.push(base + tokens.len() - 1);
+            }
+            base += tokens.len();
+        }
+        let nsel = self.sel.len();
+        if nsel == 0 {
+            return &self.logits;
+        }
+        let (d, vocab) = (m.cfg.d_model, m.cfg.vocab);
+        shape2(&mut self.xn, nsel, d);
+        for (j, &r) in self.sel.iter().enumerate() {
+            rmsnorm(self.x.row(r), &m.final_norm, self.xn.row_mut(j));
+        }
+        shape2(&mut self.logits, nsel, vocab);
+        matmul_colpar(
+            &self.xn,
+            &m.lm_head,
+            &mut self.head_scratch,
+            &mut self.logits.data,
+        );
+        &self.logits
+    }
+
+    /// Feed up to [`PREFILL_CHUNK`] of sequence `si`'s prompt through
+    /// the batched full-sequence path: one weight pass per projection
+    /// for the whole chunk, causal attention over the sequence's own
+    /// cache. Returns the last position's logits when `want_logits`
+    /// (they pick a completed prompt's first generated token); an empty
+    /// slice otherwise.
+    pub fn prefill_chunk(
+        &mut self,
+        m: &ModelWeights,
+        si: usize,
+        tokens: &[u16],
+        want_logits: bool,
+    ) -> &[f32] {
+        let s = tokens.len();
+        assert!(s > 0 && s <= PREFILL_CHUNK, "prefill chunk len {s}");
+        self.step_fused(m, &[], &[(si, tokens, want_logits)]);
+        if want_logits {
+            self.logits.row(0)
+        } else {
+            &[]
+        }
+    }
+
+    /// Transformer stack over the rows staged in `self.rows`/`self.toks`
+    /// (row r: token `toks[r]` at position `rows[r].1` of sequence
+    /// `rows[r].0`). Leaves the final residual stream in `self.x`.
+    fn forward_rows(&mut self, m: &ModelWeights) {
+        let b = self.toks.len();
+        let cfg = &m.cfg;
+        let (d, dh) = (cfg.d_model, cfg.head_dim);
+        let scale = 1.0 / (dh as f32).sqrt();
+        shape2(&mut self.x, b, d);
+        shape2(&mut self.xn, b, d);
+        self.gath.clear();
+        self.gath.extend(self.toks.iter().map(|&t| t as usize));
+        gather_rows(&m.embed, &self.gath, &mut self.x);
+        for (li, l) in m.layers.iter().enumerate() {
+            let hk = l.kept_heads.len();
+            let adim = hk * dh;
+            // ---- attention block
+            for r in 0..b {
+                rmsnorm(self.x.row(r), &l.attn_norm, self.xn.row_mut(r));
+            }
+            shape2(&mut self.q, b, adim);
+            shape2(&mut self.k, b, adim);
+            shape2(&mut self.v, b, adim);
+            matmul_storage_into(&self.xn, l.proj(Proj::Q), &mut self.q.data);
+            matmul_storage_into(&self.xn, l.proj(Proj::K), &mut self.k.data);
+            matmul_storage_into(&self.xn, l.proj(Proj::V), &mut self.v.data);
+            // rope at each row's own sequence position
+            for r in 0..b {
+                let pos = self.rows[r].1;
+                for h in 0..hk {
+                    tensor::apply_rope(
+                        &mut self.q.row_mut(r)[h * dh..(h + 1) * dh],
+                        pos,
+                    );
+                    tensor::apply_rope(
+                        &mut self.k.row_mut(r)[h * dh..(h + 1) * dh],
+                        pos,
+                    );
+                }
+            }
+            // scatter K/V rows into each sequence's own cache
+            for r in 0..b {
+                let (si, pos) = self.rows[r];
+                self.seqs[si].k[li]
+                    .row_mut(pos)
+                    .copy_from_slice(self.k.row(r));
+                self.seqs[si].v[li]
+                    .row_mut(pos)
+                    .copy_from_slice(self.v.row(r));
+            }
+            shape2(&mut self.attn, b, adim);
+            // attention, parallel over row×head: each task owns one
+            // `aw` stripe (scores + output lanes) — no allocation, no
+            // shared-write locking. Row r attends over its own
+            // sequence's cache up to its own position.
+            {
+                let stride = self.max_ctx + dh;
+                let seqs = &self.seqs;
+                let rows = &self.rows;
+                let q = &self.q;
+                par_chunks_mut(
+                    &mut self.aw[..b * hk * stride],
+                    stride,
+                    |idx, chunk| {
+                        let (r, h) = (idx / hk, idx % hk);
+                        let (si, pos) = rows[r];
+                        let qh = &q.row(r)[h * dh..(h + 1) * dh];
+                        let kc = &seqs[si].k[li];
+                        let vc = &seqs[si].v[li];
+                        let (scores, out) =
+                            chunk.split_at_mut(stride - dh);
+                        for j in 0..=pos {
+                            let kh = &kc.row(j)[h * dh..(h + 1) * dh];
+                            scores[j] = qh
+                                .iter()
+                                .zip(kh)
+                                .map(|(a, b)| a * b)
+                                .sum::<f32>()
+                                * scale;
+                        }
+                        softmax(&mut scores[..=pos]);
+                        out.fill(0.0);
+                        for j in 0..=pos {
+                            let vh = &vc.row(j)[h * dh..(h + 1) * dh];
+                            let p = scores[j];
+                            for (o, &vv) in out.iter_mut().zip(vh) {
+                                *o += p * vv;
+                            }
+                        }
+                    },
+                );
+                for r in 0..b {
+                    for h in 0..hk {
+                        let base =
+                            (r * hk + h) * stride + (stride - dh);
+                        self.attn.row_mut(r)[h * dh..(h + 1) * dh]
+                            .copy_from_slice(&self.aw[base..base + dh]);
+                    }
+                }
+            }
+            shape2(&mut self.o, b, d);
+            matmul_storage_into(&self.attn, l.proj(Proj::O), &mut self.o.data);
+            for i in 0..b * d {
+                self.x.data[i] += self.o.data[i];
+            }
+            // ---- feed-forward block
+            for r in 0..b {
+                rmsnorm(self.x.row(r), &l.ffn_norm, self.xn.row_mut(r));
+            }
+            let c = l.kept_channels.len();
+            shape2(&mut self.g, b, c);
+            shape2(&mut self.u, b, c);
+            shape2(&mut self.h, b, c);
+            matmul_storage_into(&self.xn, l.proj(Proj::Gate), &mut self.g.data);
+            matmul_storage_into(&self.xn, l.proj(Proj::Up), &mut self.u.data);
+            for i in 0..b * c {
+                self.h.data[i] = silu(self.g.data[i]) * self.u.data[i];
+            }
+            shape2(&mut self.f, b, d);
+            matmul_storage_into(&self.h, l.proj(Proj::Down), &mut self.f.data);
+            for i in 0..b * d {
+                self.x.data[i] += self.f.data[i];
+            }
+        }
+    }
+}
+
+/// Fill sequence `si`'s KV cache with `tokens` via the batched
+/// full-sequence path in [`PREFILL_CHUNK`]-bounded chunks, returning
+/// the logits after the last token (empty `tokens` → empty slice).
+pub fn prefill_into<'a>(
+    m: &ModelWeights,
+    batch: &'a mut DecodeBatch,
+    si: usize,
+    tokens: &[u16],
+) -> &'a [f32] {
+    if tokens.is_empty() {
+        return &[];
+    }
+    let mut start = 0;
+    while tokens.len() - start > PREFILL_CHUNK {
+        batch.prefill_chunk(
+            m,
+            si,
+            &tokens[start..start + PREFILL_CHUNK],
+            false,
+        );
+        start += PREFILL_CHUNK;
+    }
+    batch.prefill_chunk(m, si, &tokens[start..], true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::engine::{decode_step, DecodeState};
+    use crate::model::weights::testutil::random_model;
+
+    fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert!(
+                (x - y).abs() < tol,
+                "{what}[{i}]: {x} vs {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn single_row_step_matches_decode_step() {
+        let m = random_model(41);
+        let toks: Vec<u16> = vec![1, 5, 9, 3, 2, 7];
+        let mut st = DecodeState::new(&m, toks.len());
+        let mut batch = DecodeBatch::new(&m, 2, toks.len());
+        let si = batch.admit(&m, toks.len());
+        for &t in &toks {
+            let want = decode_step(&m, &mut st, t).to_vec();
+            let got = batch.step(&m, &[(si, t)]);
+            assert_close(got.row(0), &want, 1e-4, "logits");
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_matches_token_by_token() {
+        let m = random_model(42);
+        // prompt longer than one chunk → exercises the chunk loop
+        let prompt: Vec<u16> =
+            (0..(PREFILL_CHUNK + 7)).map(|i| (i % 60) as u16).collect();
+        let mut st = DecodeState::new(&m, prompt.len() + 1);
+        let mut want: Vec<f32> = Vec::new();
+        for &t in &prompt {
+            want = decode_step(&m, &mut st, t).to_vec();
+        }
+        let mut batch = DecodeBatch::new(&m, 1, prompt.len() + 1);
+        let si = batch.admit(&m, prompt.len() + 1);
+        let got = prefill_into(&m, &mut batch, si, &prompt).to_vec();
+        assert_close(&got, &want, 1e-4, "prefill logits");
+        assert_eq!(batch.pos(si), prompt.len());
+        // and the caches line up: next decode step agrees too
+        let want_next = decode_step(&m, &mut st, 4).to_vec();
+        let got_next = batch.step(&m, &[(si, 4)]);
+        assert_close(got_next.row(0), &want_next, 1e-4, "post-prefill");
+    }
+
+    #[test]
+    fn admit_retire_bookkeeping() {
+        let m = random_model(43);
+        let mut batch = DecodeBatch::new(&m, 3, 8);
+        assert!(batch.is_empty());
+        let a = batch.admit(&m, 8);
+        let b = batch.admit(&m, 4);
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch.cap(1), 4);
+        let per_seq8 = 2 * m.cfg.n_layers * 8 * m.cfg.d_model * 4;
+        let per_seq4 = per_seq8 / 2;
+        assert_eq!(batch.kv_bytes(), per_seq8 + per_seq4);
+        batch.retire(0); // seq b slides into index 0
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch.cap(0), 4);
+        assert_eq!(batch.kv_bytes(), per_seq4);
+    }
+}

@@ -13,6 +13,16 @@
 //! structurally instead of being branched over per element. The lm_head
 //! matvec (the single largest per-token matmul) runs column-block
 //! parallel via [`matvec_par`].
+//!
+//! [`batch`] holds the continuous-batching decode subsystem
+//! ([`DecodeBatch`]): N sequences share one weight pass per projection
+//! per step — the serving hot path. The single-sequence
+//! [`decode_step`] below remains the parity oracle and the
+//! single-stream (CLI / eval) path.
+
+pub mod batch;
+
+pub use batch::{prefill_into, DecodeBatch, PREFILL_CHUNK};
 
 use crate::model::config::Proj;
 use crate::model::weights::ModelWeights;
@@ -20,7 +30,7 @@ use crate::tensor::{
     self, matmul, matmul_storage, matvec_par, matvec_storage, rmsnorm, silu,
     softmax, Tensor,
 };
-use crate::util::threadpool::par_for;
+use crate::util::threadpool::{par_chunks_mut_scratch, par_map};
 
 /// Full-sequence forward (prefill / evaluation): tokens -> (S, vocab).
 pub fn forward_full(m: &ModelWeights, tokens: &[u16]) -> Tensor {
@@ -55,49 +65,40 @@ pub fn forward_full(m: &ModelWeights, tokens: &[u16]) -> Tensor {
             }
         }
         let mut attn = Tensor::zeros(&[s, adim]);
-        // parallel over heads: each head writes its own column block
+        // parallel over (position, head): chunking attn by dh hands
+        // every task its own (i, h) output block directly — no mutex,
+        // no per-head result buffers copied back afterwards. The score
+        // lanes are per-worker scratch, not per-task allocations.
         {
             let q = &q;
             let k = &k;
             let v = &v;
-            let attn_ptr = std::sync::Mutex::new(&mut attn);
-            // compute per-head results into local bufs, then write
-            let results: Vec<(usize, Vec<f32>)> = {
-                let heads: Vec<usize> = (0..hk).collect();
-                crate::util::threadpool::par_map(&heads, |&h| {
-                    let mut out = vec![0f32; s * dh];
-                    let mut scores = vec![0f32; s];
-                    for i in 0..s {
-                        let qh = &q.row(i)[h * dh..(h + 1) * dh];
-                        for j in 0..=i {
-                            let kh = &k.row(j)[h * dh..(h + 1) * dh];
-                            scores[j] = qh
-                                .iter()
-                                .zip(kh)
-                                .map(|(a, b)| a * b)
-                                .sum::<f32>()
-                                * scale;
-                        }
-                        softmax(&mut scores[..=i]);
-                        let orow = &mut out[i * dh..(i + 1) * dh];
-                        for j in 0..=i {
-                            let vh = &v.row(j)[h * dh..(h + 1) * dh];
-                            let p = scores[j];
-                            for (o, &vv) in orow.iter_mut().zip(vh) {
-                                *o += p * vv;
-                            }
+            par_chunks_mut_scratch(
+                &mut attn.data,
+                dh,
+                || vec![0f32; s],
+                |idx, ahead, scores| {
+                    let (i, h) = (idx / hk, idx % hk);
+                    let qh = &q.row(i)[h * dh..(h + 1) * dh];
+                    for j in 0..=i {
+                        let kh = &k.row(j)[h * dh..(h + 1) * dh];
+                        scores[j] = qh
+                            .iter()
+                            .zip(kh)
+                            .map(|(a, b)| a * b)
+                            .sum::<f32>()
+                            * scale;
+                    }
+                    softmax(&mut scores[..=i]);
+                    for j in 0..=i {
+                        let vh = &v.row(j)[h * dh..(h + 1) * dh];
+                        let p = scores[j];
+                        for (o, &vv) in ahead.iter_mut().zip(vh) {
+                            *o += p * vv;
                         }
                     }
-                    (h, out)
-                })
-            };
-            let attn = &mut *attn_ptr.lock().unwrap();
-            for (h, out) in results {
-                for i in 0..s {
-                    attn.row_mut(i)[h * dh..(h + 1) * dh]
-                        .copy_from_slice(&out[i * dh..(i + 1) * dh]);
-                }
-            }
+                },
+            );
         }
         let o = matmul_storage(&attn, l.proj(Proj::O));
         for i in 0..s * d {
@@ -306,16 +307,7 @@ pub fn argmax(xs: &[f32]) -> usize {
 /// Batched full-sequence forward over independent rows (batch = outer
 /// parallelism; rows share no state).
 pub fn forward_batch(m: &ModelWeights, batch: &[Vec<u16>]) -> Vec<Tensor> {
-    let mut out: Vec<Option<Tensor>> = vec![None; batch.len()];
-    {
-        let slots: Vec<std::sync::Mutex<&mut Option<Tensor>>> =
-            out.iter_mut().map(std::sync::Mutex::new).collect();
-        par_for(batch.len(), |i| {
-            let r = forward_full(m, &batch[i]);
-            **slots[i].lock().unwrap() = Some(r);
-        });
-    }
-    out.into_iter().map(|t| t.unwrap()).collect()
+    par_map(batch, |row| forward_full(m, row))
 }
 
 #[cfg(test)]

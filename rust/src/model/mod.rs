@@ -9,5 +9,5 @@ pub mod weights;
 
 pub use config::{ModelConfig, Proj, N_PROJS, PROJS};
 pub use engine::{decode_step, forward_batch, forward_full, generate,
-                 DecodeState};
+                 prefill_into, DecodeBatch, DecodeState, PREFILL_CHUNK};
 pub use weights::{LayerWeights, ModelWeights};

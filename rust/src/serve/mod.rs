@@ -4,11 +4,20 @@
 //! device (§IV component 11). This module provides that runtime: a
 //! TCP front-end speaking a line-JSON protocol, a bounded admission
 //! queue, and a **continuous-batching** engine loop (token-level
-//! interleaving across active sequences, vLLM-style) over the native
-//! engine's per-sequence `DecodeState`s — so a structurally-pruned
-//! Mosaic model genuinely serves more tokens/s than the dense one.
-//! The loop is storage-agnostic: a `compact()`ed model (f16/CSR
-//! projections) serves through the same code path, smaller and faster.
+//! interleaving across active sequences, vLLM-style) over one shared
+//! [`DecodeBatch`] — every batch step makes exactly one weight pass
+//! per projection per layer no matter how many sequences are in
+//! flight, so a structurally-pruned Mosaic model genuinely serves
+//! more tokens/s than the dense one and per-step cost grows
+//! sublinearly with batch width. The loop is storage-agnostic: a
+//! `compact()`ed model (f16/CSR projections) serves through the same
+//! code path, smaller and faster.
+//!
+//! Admission uses **chunked prefill**: a freshly-admitted prompt is
+//! fed [`PREFILL_CHUNK`] tokens per engine iteration through the
+//! batched full-sequence path, so a long prompt delays the decode
+//! steps of the rest of the batch by a bounded amount instead of
+//! stalling the whole loop.
 //!
 //! Everything is std-only (no tokio in this image): one OS thread per
 //! connection for IO, a single engine thread owning the model.
@@ -22,9 +31,9 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::model::engine::{argmax, decode_step};
-use crate::model::{DecodeState, ModelWeights};
 use crate::model::config::EOS;
+use crate::model::engine::argmax;
+use crate::model::{DecodeBatch, ModelWeights, PREFILL_CHUNK};
 
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -75,6 +84,11 @@ pub struct ServeStats {
     pub tokens_out: AtomicU64,
     pub batch_occupancy_sum: AtomicU64,
     pub batch_steps: AtomicU64,
+    /// decode-row share of wall µs spent inside fused batch passes
+    /// that carried at least one decode row (pairs with `batch_steps`:
+    /// per-step decode cost without queue/idle/prefill time — what the
+    /// width-sweep bench reports)
+    pub step_wall_us: AtomicU64,
 }
 
 impl ServeStats {
@@ -90,15 +104,27 @@ impl ServeStats {
 
 struct ActiveSeq {
     req: Request,
-    state: DecodeState,
     generated: Vec<u16>,
     next_token: u16,
+    /// prompt tokens fed so far (chunked-prefill cursor)
+    cursor: usize,
+    /// effective prompt length after the ctx cap
+    limit: usize,
+    queue_ms: f64,
     prefill_ms: f64,
     decode_t0: Instant,
 }
 
-/// The engine loop: admit → prefill → interleaved decode → complete.
-/// Runs until `stop` is set and the queue drains.
+impl ActiveSeq {
+    fn prefilling(&self) -> bool {
+        self.cursor < self.limit
+    }
+}
+
+/// The engine loop: admit → chunked prefill → one batched decode step
+/// per iteration → retire. `active[i]` mirrors batch sequence `i`
+/// (admission appends to both, retirement `swap_remove`s both). Runs
+/// until `stop` is set and the queue drains.
 pub fn engine_loop(
     model: Arc<ModelWeights>,
     cfg: ServeConfig,
@@ -106,7 +132,9 @@ pub fn engine_loop(
     stats: Arc<ServeStats>,
     stop: Arc<AtomicBool>,
 ) {
+    let mut batch = DecodeBatch::new(&model, cfg.max_batch, cfg.max_ctx);
     let mut active: Vec<ActiveSeq> = Vec::new();
+    let mut inputs: Vec<(usize, u16)> = Vec::with_capacity(cfg.max_batch);
     loop {
         // ---- admission: fill the batch from the queue
         while active.len() < cfg.max_batch {
@@ -123,30 +151,21 @@ pub fn engine_loop(
                     Err(_) => break,
                 }
             };
-            let queue_ms =
-                req.enqueued.elapsed().as_secs_f64() * 1e3;
-            let mut state = DecodeState::new(
-                &model,
-                (req.prompt.len() + req.max_new).min(cfg.max_ctx),
-            );
-            // prefill
-            let t0 = Instant::now();
-            let mut next = EOS;
-            for &t in req
+            let queue_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+            let limit = req
                 .prompt
-                .iter()
-                .take(cfg.max_ctx.saturating_sub(req.max_new))
-            {
-                let logits = decode_step(&model, &mut state, t);
-                next = argmax(logits) as u16;
-            }
-            let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+                .len()
+                .min(cfg.max_ctx.saturating_sub(req.max_new));
+            let si = batch.admit(&model, limit + req.max_new);
+            debug_assert_eq!(si, active.len());
             active.push(ActiveSeq {
                 req,
-                state,
                 generated: Vec::new(),
-                next_token: next,
-                prefill_ms: prefill_ms + queue_ms, // carry queue for reply
+                next_token: EOS,
+                cursor: 0,
+                limit,
+                queue_ms,
+                prefill_ms: 0.0,
                 decode_t0: Instant::now(),
             });
         }
@@ -156,42 +175,108 @@ pub fn engine_loop(
             }
             continue;
         }
-        // ---- one interleaved decode step across the whole batch
-        stats
-            .batch_occupancy_sum
-            .fetch_add(active.len() as u64, Ordering::Relaxed);
-        stats.batch_steps.fetch_add(1, Ordering::Relaxed);
+        // ---- commit each decode-phase sequence's pending token;
+        //      retire the finished ones
         let mut i = 0;
         while i < active.len() {
-            let seq = &mut active[i];
-            let tok = seq.next_token;
-            seq.generated.push(tok);
-            let done = seq.generated.len() >= seq.req.max_new
-                || tok == EOS
-                || seq.state.pos + 1
-                    >= seq.req.prompt.len() + seq.req.max_new;
-            if !done {
-                let logits = decode_step(&model, &mut seq.state, tok);
-                seq.next_token = argmax(logits) as u16;
+            if active[i].prefilling() {
                 i += 1;
                 continue;
             }
-            // completed — reply and drop from the batch
+            let tok = active[i].next_token;
+            active[i].generated.push(tok);
+            let seq = &active[i];
+            let done = seq.generated.len() >= seq.req.max_new
+                || tok == EOS
+                || batch.pos(i) >= batch.cap(i);
+            if !done {
+                i += 1;
+                continue;
+            }
+            // completed — reply and drop from batch + active in lockstep
             let seq = active.swap_remove(i);
-            let queue_ms = 0.0; // folded into prefill_ms above
-            let reply = Reply {
-                id: seq.req.id,
-                tokens: seq.generated.clone(),
-                queue_ms,
-                prefill_ms: seq.prefill_ms,
-                decode_ms: seq.decode_t0.elapsed().as_secs_f64() * 1e3,
-            };
+            batch.retire(i);
             stats.completed.fetch_add(1, Ordering::Relaxed);
             stats.tokens_out.fetch_add(
                 seq.generated.len() as u64,
                 Ordering::Relaxed,
             );
+            let reply = Reply {
+                id: seq.req.id,
+                tokens: seq.generated,
+                queue_ms: seq.queue_ms,
+                prefill_ms: seq.prefill_ms,
+                decode_ms: seq.decode_t0.elapsed().as_secs_f64() * 1e3,
+            };
             let _ = seq.req.reply.send(reply);
+        }
+        // ---- stage one fused pass: every decode-phase sequence's
+        //      pending token, plus up to PREFILL_CHUNK prompt tokens
+        //      shared across the still-prefilling sequences — ONE
+        //      weight pass per projection per iteration, admission
+        //      bursts included
+        inputs.clear();
+        let mut jobs: Vec<(usize, std::ops::Range<usize>, bool)> =
+            Vec::new();
+        let mut budget = PREFILL_CHUNK;
+        for (i, seq) in active.iter().enumerate() {
+            if seq.prefilling() {
+                if budget == 0 {
+                    continue;
+                }
+                let take = budget.min(seq.limit - seq.cursor);
+                let end = seq.cursor + take;
+                jobs.push((i, seq.cursor..end, end == seq.limit));
+                budget -= take;
+            } else {
+                inputs.push((i, seq.next_token));
+            }
+        }
+        if inputs.is_empty() && jobs.is_empty() {
+            continue;
+        }
+        let prefill_rows: usize =
+            jobs.iter().map(|(_, r, _)| r.len()).sum();
+        let total_rows = inputs.len() + prefill_rows;
+        let t0 = Instant::now();
+        let logits = {
+            let staged: Vec<(usize, &[u16], bool)> = jobs
+                .iter()
+                .map(|(i, r, w)| {
+                    (*i, &active[*i].req.prompt[r.clone()], *w)
+                })
+                .collect();
+            batch.step_fused(&model, &inputs, &staged)
+        };
+        let elapsed_us = t0.elapsed().as_secs_f64() * 1e6;
+        if !inputs.is_empty() {
+            stats
+                .batch_occupancy_sum
+                .fetch_add(inputs.len() as u64, Ordering::Relaxed);
+            stats.batch_steps.fetch_add(1, Ordering::Relaxed);
+            // attribute by decode-row share so co-riding prefill rows
+            // don't inflate the per-step decode cost at wide batches
+            let decode_share = elapsed_us * inputs.len() as f64
+                / total_rows as f64;
+            stats
+                .step_wall_us
+                .fetch_add(decode_share as u64, Ordering::Relaxed);
+        }
+        for (r, &(i, _)) in inputs.iter().enumerate() {
+            active[i].next_token = argmax(logits.row(r)) as u16;
+        }
+        let mut lrow = inputs.len();
+        for (i, range, completes) in jobs {
+            let seq = &mut active[i];
+            // fused-pass wall time attributed by row share
+            seq.prefill_ms += elapsed_us / 1e3 * range.len() as f64
+                / total_rows as f64;
+            seq.cursor = range.end;
+            if completes {
+                seq.next_token = argmax(logits.row(lrow)) as u16;
+                lrow += 1;
+                seq.decode_t0 = Instant::now();
+            }
         }
     }
 }
@@ -203,8 +288,12 @@ pub struct Server {
     stop: Arc<AtomicBool>,
     accept_handle: Option<std::thread::JoinHandle<()>>,
     engine_handle: Option<std::thread::JoinHandle<()>>,
-    next_id: AtomicU64,
-    tx: mpsc::SyncSender<Request>,
+    /// request-id source, shared with the TCP front-end so every
+    /// request — in-process or on a connection — gets a distinct id
+    next_id: Arc<AtomicU64>,
+    /// `Some` while running; [`Server::shutdown`] takes it so the
+    /// engine's queue actually disconnects
+    tx: Option<mpsc::SyncSender<Request>>,
 }
 
 impl Server {
@@ -229,13 +318,15 @@ impl Server {
                 engine_loop(model, cfg, rx, stats, stop)
             })
         };
+        let next_id = Arc::new(AtomicU64::new(1));
         let accept_handle = {
             let stop = stop.clone();
             let stats = stats.clone();
             let tx = tx.clone();
             let cfg = cfg.clone();
+            let next_id = next_id.clone();
             std::thread::spawn(move || {
-                accept_loop(listener, tx, cfg, stats, stop)
+                accept_loop(listener, tx, cfg, stats, next_id, stop)
             })
         };
         Ok(Server {
@@ -244,8 +335,8 @@ impl Server {
             stop,
             accept_handle: Some(accept_handle),
             engine_handle: Some(engine_handle),
-            next_id: AtomicU64::new(1),
-            tx,
+            next_id,
+            tx: Some(tx),
         })
     }
 
@@ -263,7 +354,8 @@ impl Server {
             enqueued: Instant::now(),
             reply: rtx,
         };
-        match self.tx.try_send(req) {
+        let tx = self.tx.as_ref().expect("server running");
+        match tx.try_send(req) {
             Ok(()) => {
                 self.stats.accepted.fetch_add(1, Ordering::Relaxed);
                 Ok(rrx)
@@ -280,8 +372,11 @@ impl Server {
         if let Some(h) = self.accept_handle.take() {
             let _ = h.join();
         }
-        // engine drains and exits once the channel closes or stop is set
-        drop(self.tx.clone());
+        // actually drop the held sender (not a clone of it) so the
+        // engine's queue disconnects; the engine then exits on
+        // Disconnected immediately instead of waiting for the
+        // stop-flag poll
+        drop(self.tx.take());
         if let Some(h) = self.engine_handle.take() {
             let _ = h.join();
         }
@@ -293,23 +388,22 @@ fn accept_loop(
     tx: mpsc::SyncSender<Request>,
     cfg: ServeConfig,
     stats: Arc<ServeStats>,
+    next_id: Arc<AtomicU64>,
     stop: Arc<AtomicBool>,
 ) {
-    let mut id = 1_000_000u64;
     loop {
         if stop.load(Ordering::Relaxed) {
             return;
         }
         match listener.accept() {
             Ok((stream, _)) => {
-                id += 1;
                 let tx = tx.clone();
                 let cfg = cfg.clone();
                 let stats = stats.clone();
-                let rid = id;
+                let next_id = next_id.clone();
                 std::thread::spawn(move || {
                     let _ =
-                        handle_conn(stream, tx, cfg, stats, rid);
+                        handle_conn(stream, tx, cfg, stats, next_id);
                 });
             }
             Err(ref e)
@@ -327,7 +421,7 @@ fn handle_conn(
     tx: mpsc::SyncSender<Request>,
     cfg: ServeConfig,
     stats: Arc<ServeStats>,
-    id: u64,
+    next_id: Arc<AtomicU64>,
 ) -> anyhow::Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
@@ -348,8 +442,11 @@ fn handle_conn(
             }
         };
         let (rtx, rrx) = mpsc::channel();
+        // each request on the connection gets its own id (the reply's
+        // `id` field is only meaningful if it names the request, not
+        // the connection)
         let req = Request {
-            id,
+            id: next_id.fetch_add(1, Ordering::Relaxed),
             prompt: parsed.prompt,
             max_new: parsed.max_new.unwrap_or(cfg.default_max_new),
             enqueued: Instant::now(),
@@ -439,6 +536,71 @@ mod tests {
         let j = crate::util::json::Json::parse(line.trim()).unwrap();
         let n = j.get("tokens").unwrap().as_arr().unwrap().len();
         assert!((1..=3).contains(&n));
+        srv.shutdown();
+    }
+
+    #[test]
+    fn batched_serving_matches_width1() {
+        // greedy decode through DecodeBatch is bit-deterministic and
+        // batch-width independent, so occupancy > 1 must yield exactly
+        // the width-1 tokens
+        let m = random_model(205);
+        let prompts: Vec<Vec<u16>> = (0..8)
+            .map(|i| {
+                (0..(2 + i % 5))
+                    .map(|j| (1 + 7 * i + 3 * j) as u16 % 64)
+                    .collect()
+            })
+            .collect();
+        let run = |width: usize| -> Vec<Vec<u16>> {
+            let srv = Server::start(
+                m.clone(),
+                ServeConfig { max_batch: width, ..Default::default() },
+                0,
+            )
+            .unwrap();
+            let rxs: Vec<_> = prompts
+                .iter()
+                .map(|p| srv.submit(p.clone(), 8).unwrap())
+                .collect();
+            let out: Vec<Vec<u16>> = rxs
+                .into_iter()
+                .map(|rx| {
+                    rx.recv_timeout(Duration::from_secs(30))
+                        .unwrap()
+                        .tokens
+                })
+                .collect();
+            if width > 1 {
+                assert!(
+                    srv.stats.mean_occupancy() > 1.0,
+                    "batch must actually interleave"
+                );
+            }
+            srv.shutdown();
+            out
+        };
+        assert_eq!(run(1), run(4), "width-4 tokens must match width-1");
+    }
+
+    #[test]
+    fn tcp_requests_get_distinct_ids() {
+        let m = random_model(206);
+        let srv = Server::start(m, ServeConfig::default(), 0).unwrap();
+        let mut stream = TcpStream::connect(srv.addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut ids = Vec::new();
+        for _ in 0..2 {
+            stream
+                .write_all(b"{\"prompt\": [1, 4], \"max_new\": 2}\n")
+                .unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let j = crate::util::json::Json::parse(line.trim()).unwrap();
+            ids.push(j.get("id").unwrap().as_usize().unwrap());
+            assert!(j.get("queue_ms").is_some());
+        }
+        assert_ne!(ids[0], ids[1], "per-request ids, not per-connection");
         srv.shutdown();
     }
 

@@ -11,7 +11,9 @@
 
 pub mod storage;
 
-pub use storage::{matmul_storage, matvec_storage, ProjStorage};
+pub use storage::{
+    matmul_storage, matmul_storage_into, matvec_storage, ProjStorage,
+};
 
 use crate::util::threadpool::{n_threads, par_chunks_mut};
 
@@ -100,17 +102,27 @@ const RB: usize = 4;
 
 /// out(M,N) = x(M,K) @ w(K,N). Parallel over RB-row blocks of x.
 pub fn matmul(x: &Tensor, w: &Tensor) -> Tensor {
+    let mut out = Tensor::zeros(&[x.shape[0], w.shape[1]]);
+    matmul_into(x, w, &mut out.data);
+    out
+}
+
+/// out(M,N) = x(M,K) @ w(K,N) into a caller-provided buffer — the
+/// batched decode path reuses one scratch buffer per projection across
+/// steps instead of allocating a fresh output tensor each token.
+pub fn matmul_into(x: &Tensor, w: &Tensor, out: &mut [f32]) {
     let (m, k) = (x.shape[0], x.shape[1]);
     let (k2, n) = (w.shape[0], w.shape[1]);
     assert_eq!(k, k2, "matmul inner dims {:?} {:?}", x.shape, w.shape);
-    let mut out = Tensor::zeros(&[m, n]);
+    assert_eq!(out.len(), m * n, "matmul out buffer");
     let xd = &x.data;
     let wd = &w.data;
     // (an L1 accumulator-tile variant was tried and measured slower on
     // this single-core host — see ARCHITECTURE.md §Perf)
-    par_chunks_mut(&mut out.data, RB * n, |bi, ochunk| {
+    par_chunks_mut(out, RB * n, |bi, ochunk| {
         let r0 = bi * RB;
         let rows = ochunk.len() / n;
+        ochunk.fill(0.0);
         for kk in 0..k {
             let wrow = &wd[kk * n..kk * n + n];
             for r in 0..rows {
@@ -125,7 +137,6 @@ pub fn matmul(x: &Tensor, w: &Tensor) -> Tensor {
             }
         }
     });
-    out
 }
 
 /// y(N) = x(K) @ w(K,N) — the token-generation (decode) hot path.
@@ -179,6 +190,77 @@ pub fn matvec_par(x: &[f32], w: &Tensor, out: &mut [f32]) {
             }
         }
     });
+}
+
+/// out(M,N) = x(M,K) @ w(K,N), parallel over column blocks of w — the
+/// batched lm_head. Each worker owns one column stripe and streams the
+/// matching stripe of every live w row exactly once, reusing it across
+/// all M batch rows, so the head weights are read once per step
+/// regardless of batch width. Workers write stripe-major into `scratch`
+/// (resized here; steady-state calls never reallocate) and the stripes
+/// are then copied back row-major into `out`. Per-output-element
+/// summation order (kk ascending) is identical to [`matvec`] /
+/// [`matvec_par`], so batched and single-sequence logits agree exactly.
+pub fn matmul_colpar(
+    x: &Tensor,
+    w: &Tensor,
+    scratch: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    let (m, k) = (x.shape[0], x.shape[1]);
+    let (k2, n) = (w.shape[0], w.shape[1]);
+    assert_eq!(k, k2, "matmul inner dims {:?} {:?}", x.shape, w.shape);
+    assert_eq!(out.len(), m * n, "matmul out buffer");
+    let threads = n_threads();
+    if threads <= 1 || k * n < PAR_MATVEC_MIN_ELEMS || n < 2 * threads {
+        for r in 0..m {
+            matvec(x.row(r), w, &mut out[r * n..(r + 1) * n]);
+        }
+        return;
+    }
+    let block = n.div_ceil(threads);
+    let nblocks = n.div_ceil(block);
+    scratch.resize(nblocks * m * block, 0.0);
+    let xd = &x.data;
+    let wd = &w.data;
+    par_chunks_mut(&mut scratch[..], m * block, |bi, chunk| {
+        let j0 = bi * block;
+        let bn = block.min(n - j0);
+        chunk.fill(0.0);
+        for kk in 0..k {
+            let wrow = &wd[kk * n + j0..kk * n + j0 + bn];
+            for r in 0..m {
+                let xv = xd[r * k + kk];
+                if xv == 0.0 {
+                    continue;
+                }
+                let orow = &mut chunk[r * block..r * block + bn];
+                for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
+                    *o += xv * wv;
+                }
+            }
+        }
+    });
+    for bi in 0..nblocks {
+        let j0 = bi * block;
+        let bn = block.min(n - j0);
+        let base = bi * m * block;
+        for r in 0..m {
+            out[r * n + j0..r * n + j0 + bn].copy_from_slice(
+                &scratch[base + r * block..base + r * block + bn],
+            );
+        }
+    }
+}
+
+/// Gather rows of `src` into the first `idx.len()` rows of `out` —
+/// ragged batch assembly (e.g. the embedding lookup for a decode batch).
+pub fn gather_rows(src: &Tensor, idx: &[usize], out: &mut Tensor) {
+    debug_assert_eq!(src.cols(), out.cols(), "gather_rows col mismatch");
+    debug_assert!(idx.len() <= out.rows(), "gather_rows row overflow");
+    for (r, &i) in idx.iter().enumerate() {
+        out.row_mut(r).copy_from_slice(src.row(i));
+    }
 }
 
 /// RMSNorm: y = x / rms(x) * w (matches kernels/ref.py, eps=1e-5).
@@ -305,6 +387,61 @@ mod tests {
         matvec(&xs, &ws, &mut a);
         matvec_par(&xs, &ws, &mut b);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn matmul_colpar_matches_per_row_matvec() {
+        let mut r = Pcg32::seeded(11);
+        // big enough for the column-parallel path
+        let (m, k, n) = (5usize, 512usize, 1200usize);
+        assert!(k * n >= PAR_MATVEC_MIN_ELEMS);
+        let x = rand_t(&mut r, &[m, k]);
+        let w = rand_t(&mut r, &[k, n]);
+        let mut scratch = Vec::new();
+        let mut got = vec![0f32; m * n];
+        matmul_colpar(&x, &w, &mut scratch, &mut got);
+        for row in 0..m {
+            let mut want = vec![0f32; n];
+            matvec(x.row(row), &w, &mut want);
+            assert_eq!(
+                &got[row * n..(row + 1) * n],
+                &want[..],
+                "row {row}: column-block split must not change sums"
+            );
+        }
+        // small path falls back to per-row matvec
+        let xs = rand_t(&mut r, &[3, 8]);
+        let ws = rand_t(&mut r, &[8, 16]);
+        let mut a = vec![0f32; 3 * 16];
+        matmul_colpar(&xs, &ws, &mut scratch, &mut a);
+        for row in 0..3 {
+            let mut want = vec![0f32; 16];
+            matvec(xs.row(row), &ws, &mut want);
+            assert_eq!(&a[row * 16..(row + 1) * 16], &want[..]);
+        }
+    }
+
+    #[test]
+    fn matmul_into_matches_matmul() {
+        let mut r = Pcg32::seeded(12);
+        let x = rand_t(&mut r, &[6, 20]);
+        let w = rand_t(&mut r, &[20, 15]);
+        let want = matmul(&x, &w);
+        let mut out = vec![7.0f32; 6 * 15]; // dirty buffer must be zeroed
+        matmul_into(&x, &w, &mut out);
+        assert_eq!(out, want.data);
+    }
+
+    #[test]
+    fn gather_rows_copies_selected() {
+        let mut r = Pcg32::seeded(13);
+        let src = rand_t(&mut r, &[9, 7]);
+        let mut out = Tensor::zeros(&[4, 7]);
+        gather_rows(&src, &[3, 0, 8, 3], &mut out);
+        assert_eq!(out.row(0), src.row(3));
+        assert_eq!(out.row(1), src.row(0));
+        assert_eq!(out.row(2), src.row(8));
+        assert_eq!(out.row(3), src.row(3));
     }
 
     #[test]

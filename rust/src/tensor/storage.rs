@@ -18,11 +18,33 @@
 //! The kernels here ([`matvec_storage`], [`matmul_storage`]) are what
 //! `model::engine` dispatches through on the decode/prefill hot path.
 
+use std::cell::Cell;
 use std::sync::OnceLock;
 
-use crate::tensor::{matmul, matvec, Tensor};
+use crate::tensor::{matmul_into, matvec, Tensor};
 use crate::util::f16;
 use crate::util::threadpool::par_chunks_mut;
+
+thread_local! {
+    static WEIGHT_PASSES: Cell<u64> = Cell::new(0);
+}
+
+/// Storage-kernel weight passes made by the *calling* thread: one per
+/// [`matvec_storage`] / [`matmul_storage`] invocation, i.e. one full
+/// traversal of a projection's resident weights (the worker threads a
+/// kernel fans out to internally do not count — the pass is noted once
+/// on the dispatching thread). The batched-decode invariant — exactly
+/// one pass per projection per layer per step, regardless of batch
+/// width — is asserted against this counter in
+/// rust/tests/batched_decode.rs.
+pub fn weight_passes() -> u64 {
+    WEIGHT_PASSES.with(|c| c.get())
+}
+
+#[inline]
+fn note_pass() {
+    WEIGHT_PASSES.with(|c| c.set(c.get() + 1));
+}
 
 /// One projection's runtime storage. `shape` is always `[in, out]`
 /// (row-major, like the dense working copy).
@@ -220,6 +242,7 @@ impl ProjStorage {
 /// path. CSR skips zeros structurally; f16 streams through the lookup
 /// table in registers.
 pub fn matvec_storage(x: &[f32], w: &ProjStorage, out: &mut [f32]) {
+    note_pass();
     match w {
         ProjStorage::DenseF32(t) => matvec(x, t, out),
         ProjStorage::DenseF16 { bits, shape } => {
@@ -269,20 +292,32 @@ const RB: usize = 4;
 /// Per-output-element summation order (kk ascending) is identical to
 /// [`matvec_storage`], so decode and prefill agree bit-for-bit.
 pub fn matmul_storage(x: &Tensor, w: &ProjStorage) -> Tensor {
-    if let ProjStorage::DenseF32(t) = w {
-        return matmul(x, t);
-    }
+    let mut out = Tensor::zeros(&[x.shape[0], w.shape()[1]]);
+    matmul_storage_into(x, w, &mut out.data);
+    out
+}
+
+/// [`matmul_storage`] into a caller-provided buffer — the batched
+/// decode step reuses one scratch buffer per projection, and each call
+/// is exactly one weight pass (f16 bits decoded / CSR rows traversed
+/// once) shared by every row of `x`.
+pub fn matmul_storage_into(x: &Tensor, w: &ProjStorage, out: &mut [f32]) {
+    note_pass();
     let (m, k) = (x.shape[0], x.shape[1]);
     let [k2, n] = w.shape();
     assert_eq!(k, k2, "matmul inner dims {:?} {:?}", x.shape, w.shape());
-    let mut out = Tensor::zeros(&[m, n]);
+    assert_eq!(out.len(), m * n, "matmul out buffer");
+    if let ProjStorage::DenseF32(t) = w {
+        return matmul_into(x, t, out);
+    }
     let xd = &x.data;
     let lut = f16_table();
     match w {
         ProjStorage::DenseF16 { bits, .. } => {
-            par_chunks_mut(&mut out.data, RB * n, |bi, ochunk| {
+            par_chunks_mut(out, RB * n, |bi, ochunk| {
                 let r0 = bi * RB;
                 let rows = ochunk.len() / n;
+                ochunk.fill(0.0);
                 for kk in 0..k {
                     let wrow = &bits[kk * n..kk * n + n];
                     for r in 0..rows {
@@ -299,9 +334,10 @@ pub fn matmul_storage(x: &Tensor, w: &ProjStorage) -> Tensor {
             });
         }
         ProjStorage::SparseCsr { row_ptr, col_idx, vals_f16, .. } => {
-            par_chunks_mut(&mut out.data, RB * n, |bi, ochunk| {
+            par_chunks_mut(out, RB * n, |bi, ochunk| {
                 let r0 = bi * RB;
                 let rows = ochunk.len() / n;
+                ochunk.fill(0.0);
                 for kk in 0..k {
                     let (s, e) =
                         (row_ptr[kk] as usize, row_ptr[kk + 1] as usize);
@@ -325,12 +361,12 @@ pub fn matmul_storage(x: &Tensor, w: &ProjStorage) -> Tensor {
         }
         ProjStorage::DenseF32(_) => unreachable!(),
     }
-    out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::matmul;
     use crate::util::rng::Pcg32;
 
     fn rand_sparse(seed: u64, r: usize, c: usize, sparsity: f64) -> Tensor {
@@ -416,6 +452,33 @@ mod tests {
                     s.encoding_name()
                 );
             }
+        }
+    }
+
+    #[test]
+    fn matmul_storage_into_reuses_buffer_and_counts_one_pass() {
+        let mut rng = Pcg32::seeded(9);
+        let t = rand_sparse(9, 24, 32, 0.5);
+        let x = Tensor::new(
+            (0..5 * 24).map(|_| rng.normal()).collect(),
+            vec![5, 24],
+        );
+        for s in [
+            ProjStorage::from_dense(t.clone()),
+            ProjStorage::seal_f16(&t),
+            ProjStorage::seal_csr(&t),
+        ] {
+            let want = matmul_storage(&x, &s);
+            let mut out = vec![9.0f32; 5 * 32]; // dirty buffer
+            let before = weight_passes();
+            matmul_storage_into(&x, &s, &mut out);
+            assert_eq!(
+                weight_passes() - before,
+                1,
+                "{}: one call = one weight pass",
+                s.encoding_name()
+            );
+            assert_eq!(out, want.data, "{}", s.encoding_name());
         }
     }
 

@@ -83,7 +83,58 @@ where
     });
 }
 
-/// Parallel map that preserves order.
+/// [`par_chunks_mut`] with a per-worker scratch value: `init` runs once
+/// on each worker thread and the resulting scratch is reused across all
+/// chunks that worker processes — tasks that need a temporary buffer
+/// (e.g. attention score lanes) allocate per *worker*, not per chunk.
+pub fn par_chunks_mut_scratch<T, S, I, F>(
+    data: &mut [T],
+    chunk: usize,
+    init: I,
+    f: F,
+) where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(usize, &mut [T], &mut S) + Sync,
+{
+    if data.is_empty() {
+        return;
+    }
+    let chunks: Vec<(usize, &mut [T])> =
+        data.chunks_mut(chunk).enumerate().collect();
+    let threads = n_threads().min(chunks.len());
+    if threads <= 1 {
+        let mut scratch = init();
+        for (i, c) in chunks {
+            f(i, c, &mut scratch);
+        }
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    let items: Vec<std::sync::Mutex<Option<(usize, &mut [T])>>> =
+        chunks.into_iter().map(|c| std::sync::Mutex::new(Some(c))).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| {
+                let mut scratch = init();
+                loop {
+                    let i = counter.fetch_add(1, Ordering::Relaxed);
+                    if i >= items.len() {
+                        break;
+                    }
+                    if let Some((idx, c)) = items[i].lock().unwrap().take()
+                    {
+                        f(idx, c, &mut scratch);
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// Parallel map that preserves order. Workers stream `(index, result)`
+/// pairs back over a channel and the calling thread reassembles them —
+/// no per-slot locking.
 pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
 where
     T: Sync,
@@ -91,25 +142,30 @@ where
     F: Fn(&T) -> R + Sync,
 {
     let n = items.len();
-    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-    {
-        let slots: Vec<std::sync::Mutex<&mut Option<R>>> =
-            out.iter_mut().map(std::sync::Mutex::new).collect();
-        let counter = AtomicUsize::new(0);
-        let threads = n_threads().min(n.max(1));
-        std::thread::scope(|s| {
-            for _ in 0..threads {
-                s.spawn(|| loop {
-                    let i = counter.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let r = f(&items[i]);
-                    **slots[i].lock().unwrap() = Some(r);
-                });
-            }
-        });
+    let threads = n_threads().min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return items.iter().map(f).collect();
     }
+    let counter = AtomicUsize::new(0);
+    let (tx, rx) = std::sync::mpsc::channel::<(usize, R)>();
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let (f, counter) = (&f, &counter);
+        for _ in 0..threads {
+            let tx = tx.clone();
+            s.spawn(move || loop {
+                let i = counter.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let _ = tx.send((i, f(&items[i])));
+            });
+        }
+        drop(tx);
+        for (i, r) in rx {
+            out[i] = Some(r);
+        }
+    });
     out.into_iter().map(|x| x.unwrap()).collect()
 }
 
@@ -138,6 +194,25 @@ mod tests {
         assert!(v.iter().all(|&x| x > 0));
         assert_eq!(v[0], 1);
         assert_eq!(v[1002], (1002 / 64 + 1) as u32);
+    }
+
+    #[test]
+    fn chunks_scratch_visits_all_with_worker_buffer() {
+        let mut v = vec![0u32; 515];
+        par_chunks_mut_scratch(
+            &mut v,
+            32,
+            || vec![0u8; 4],
+            |idx, c, scratch| {
+                assert_eq!(scratch.len(), 4);
+                for x in c.iter_mut() {
+                    *x = idx as u32 + 1;
+                }
+            },
+        );
+        assert!(v.iter().all(|&x| x > 0));
+        assert_eq!(v[0], 1);
+        assert_eq!(v[514], (514 / 32 + 1) as u32);
     }
 
     #[test]

@@ -1,0 +1,191 @@
+//! Batched-decode parity and the one-weight-pass invariant.
+//!
+//! `DecodeBatch` must produce the same logits as the single-sequence
+//! `decode_step` oracle — on dense AND `compact()`ed (f16/CSR) models,
+//! with ragged positions (sequences admitted mid-flight, retired
+//! early) — and every batched step must make exactly one storage-kernel
+//! pass per projection per layer regardless of batch width.
+
+use mosaic::model::weights::testutil::random_model;
+use mosaic::model::{
+    decode_step, prefill_into, DecodeBatch, DecodeState, ModelWeights,
+};
+use mosaic::prune::unstructured::{mask_lowest, scores, Metric};
+use mosaic::tensor::storage::weight_passes;
+
+fn assert_close(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert!((x - y).abs() < 1e-4, "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+/// Per-token logits oracle: replay `fed` through the single-sequence
+/// decode path.
+fn replay_single(m: &ModelWeights, fed: &[u16]) -> Vec<Vec<f32>> {
+    let mut st = DecodeState::new(m, fed.len());
+    fed.iter()
+        .map(|&t| decode_step(m, &mut st, t).to_vec())
+        .collect()
+}
+
+/// Ragged continuous-batching scenario: A prefills first, B is admitted
+/// mid-flight, C is admitted later via bounded prefill chunks, A
+/// retires early. Every logit row the batch produces must match the
+/// single-sequence oracle for that sequence.
+fn parity_scenario(m: &ModelWeights) {
+    let mut batch = DecodeBatch::new(m, 3, 32);
+
+    let prompt_a: Vec<u16> = vec![1, 5, 9, 3, 2];
+    let mut fed_a = prompt_a.clone();
+    let a = batch.admit(m, 32);
+    let la = prefill_into(m, &mut batch, a, &prompt_a).to_vec();
+
+    // step A alone
+    let s1 = batch.step(m, &[(a, 7)]).row(0).to_vec();
+    fed_a.push(7);
+
+    // admit B mid-flight
+    let prompt_b: Vec<u16> = vec![4, 8];
+    let mut fed_b = prompt_b.clone();
+    let b = batch.admit(m, 32);
+    let lb = prefill_into(m, &mut batch, b, &prompt_b).to_vec();
+
+    // step A and B together
+    let got = batch.step(m, &[(a, 11), (b, 6)]);
+    let (s2a, s2b) = (got.row(0).to_vec(), got.row(1).to_vec());
+    fed_a.push(11);
+    fed_b.push(6);
+
+    // admit C, prefilled in explicitly bounded chunks
+    let prompt_c: Vec<u16> = vec![2, 9, 4, 7, 1, 6, 3];
+    let mut fed_c = prompt_c.clone();
+    let c = batch.admit(m, 32);
+    batch.prefill_chunk(m, c, &prompt_c[..3], false);
+    let lc = batch.prefill_chunk(m, c, &prompt_c[3..], true).to_vec();
+
+    // full-width step
+    let got = batch.step(m, &[(a, 1), (b, 2), (c, 5)]);
+    let (s3a, s3b, s3c) =
+        (got.row(0).to_vec(), got.row(1).to_vec(), got.row(2).to_vec());
+    fed_a.push(1);
+    fed_b.push(2);
+    fed_c.push(5);
+
+    // retire A early: C (last) slides into index 0, B stays at 1
+    batch.retire(a);
+    let got = batch.step(m, &[(0, 9), (1, 13)]);
+    let (s4c, s4b) = (got.row(0).to_vec(), got.row(1).to_vec());
+    fed_c.push(9);
+    fed_b.push(13);
+
+    // oracle comparison at every position we observed logits for
+    let ra = replay_single(m, &fed_a);
+    assert_close(&la, &ra[prompt_a.len() - 1], "A prefill");
+    assert_close(&s1, &ra[prompt_a.len()], "A step1");
+    assert_close(&s2a, &ra[prompt_a.len() + 1], "A step2");
+    assert_close(&s3a, &ra[prompt_a.len() + 2], "A step3");
+
+    let rb = replay_single(m, &fed_b);
+    assert_close(&lb, &rb[prompt_b.len() - 1], "B prefill");
+    assert_close(&s2b, &rb[prompt_b.len()], "B step2");
+    assert_close(&s3b, &rb[prompt_b.len() + 1], "B step3");
+    assert_close(&s4b, &rb[prompt_b.len() + 2], "B step4");
+
+    let rc = replay_single(m, &fed_c);
+    assert_close(&lc, &rc[prompt_c.len() - 1], "C prefill");
+    assert_close(&s3c, &rc[prompt_c.len()], "C step3");
+    assert_close(&s4c, &rc[prompt_c.len() + 1], "C step4");
+}
+
+#[test]
+fn batched_matches_single_dense() {
+    let m = random_model(31);
+    parity_scenario(&m);
+}
+
+#[test]
+fn batched_matches_single_sealed() {
+    let mut m = random_model(32);
+    // mask 70% of every projection so compact() picks CSR/f16 storage
+    for l in m.layers.iter_mut() {
+        for s in l.projs.iter_mut() {
+            let t = s.dense_mut();
+            let sc = scores(t, None, Metric::Magnitude);
+            mask_lowest(t, &sc, 0.7);
+        }
+    }
+    m.compact();
+    assert!(m.is_compacted());
+    parity_scenario(&m);
+}
+
+#[test]
+fn fused_step_parity_and_single_pass() {
+    let m = random_model(35);
+    let mut batch = DecodeBatch::new(&m, 2, 32);
+    let a = batch.admit(&m, 32);
+    prefill_into(&m, &mut batch, a, &[1, 5, 9]);
+    let b = batch.admit(&m, 32);
+    let chunk: Vec<u16> = vec![4, 8, 2];
+    // A decodes token 7 while B prefills its whole prompt — still ONE
+    // storage pass per projection for the combined work
+    let before = weight_passes();
+    let logits = batch.step_fused(&m, &[(a, 7)], &[(b, &chunk, true)]);
+    let got_a = logits.row(0).to_vec();
+    let got_b = logits.row(1).to_vec();
+    assert_eq!(
+        weight_passes() - before,
+        (m.cfg.n_layers * 7) as u64,
+        "decode + admission prefill must share one weight pass"
+    );
+    assert_eq!((batch.pos(a), batch.pos(b)), (4, 3));
+    let ra = replay_single(&m, &[1, 5, 9, 7]);
+    assert_close(&got_a, &ra[3], "A fused decode");
+    let rb = replay_single(&m, &chunk);
+    assert_close(&got_b, &rb[2], "B fused prefill");
+}
+
+#[test]
+fn one_weight_pass_per_projection_per_step() {
+    let m = random_model(33);
+    let passes_per_step = (m.cfg.n_layers * 7) as u64;
+    let mut batch = DecodeBatch::new(&m, 4, 16);
+    for si in 0..4usize {
+        let s = batch.admit(&m, 16);
+        assert_eq!(s, si);
+        prefill_into(&m, &mut batch, s, &[1, 2 + si as u16]);
+    }
+    // weight_passes is thread-local, so concurrent tests in this
+    // binary cannot perturb the deltas measured here
+    let before = weight_passes();
+    batch.step(&m, &[(0, 3), (1, 4), (2, 5), (3, 6)]);
+    assert_eq!(
+        weight_passes() - before,
+        passes_per_step,
+        "width-4 step must make exactly one storage pass per projection"
+    );
+    let before = weight_passes();
+    batch.step(&m, &[(0, 7)]);
+    assert_eq!(
+        weight_passes() - before,
+        passes_per_step,
+        "per-step weight traffic must be independent of batch width"
+    );
+}
+
+#[test]
+fn prefill_chunk_counts_one_pass_per_projection() {
+    let m = random_model(34);
+    let mut batch = DecodeBatch::new(&m, 1, 64);
+    let si = batch.admit(&m, 64);
+    let before = weight_passes();
+    // 40 tokens = 2 chunks → 2 × (layers × 7) passes, not 40 ×
+    let prompt: Vec<u16> = (0..40).map(|i| (i % 60) as u16).collect();
+    prefill_into(&m, &mut batch, si, &prompt);
+    assert_eq!(
+        weight_passes() - before,
+        2 * (m.cfg.n_layers * 7) as u64,
+        "chunked prefill streams weights once per chunk, not per token"
+    );
+}
