@@ -4,7 +4,7 @@
 
 CARGO ?= cargo
 
-.PHONY: build test fmt check bench bench-serve
+.PHONY: build test fmt check bench bench-serve bench-produce
 
 build:
 	$(CARGO) build --release
@@ -35,3 +35,10 @@ bench:
 # machine-readable BENCH_serve.json (tok/s, occupancy, resident bytes).
 bench-serve:
 	$(CARGO) bench --bench serve_throughput
+
+# Model-production perf trajectory: sequential whole-model pruning vs
+# the streaming layer-parallel pipeline at 1/2/4/8 workers; emits
+# machine-readable BENCH_produce.json (per-stage ms, peak resident
+# bytes, speedup).
+bench-produce:
+	$(CARGO) bench --bench produce_speed

@@ -1,0 +1,174 @@
+//! Model-production speed: sequential whole-model prune + end-of-pass
+//! `compact()` vs the streaming layer-parallel pipeline at 1/2/4/8
+//! workers — the systems claim behind the paper's "7.19× faster model
+//! production" is about this stage, not serving.
+//!
+//! Artifact-free (random seeded model, native calibration capture).
+//! For every pruner kind the bench reports per-stage times
+//! (capture / rank / prune / seal), end-to-end wall, and the
+//! production working-set high-water mark — the sequential reference's
+//! working set is a full dense model clone, the pipeline's must stay
+//! below it. Each pipeline run is parity-checked against the
+//! sequential output before its row is recorded (a perf number for a
+//! wrong model is worthless).
+//!
+//! Emits `BENCH_produce.json` for cross-PR perf tracking — run via
+//! `make bench-produce`.
+
+use std::time::Instant;
+
+use mosaic::bench_support::{header, rec, Bench};
+use mosaic::model::capture::capture_calibration;
+use mosaic::model::weights::testutil::random_model_sized;
+use mosaic::model::ModelWeights;
+use mosaic::prune::pipeline::{
+    produce_with_snapshot, sequential_reference, ProduceOpts, PrunerKind,
+};
+use mosaic::prune::planner::PruningPlan;
+use mosaic::prune::CompositeOpts;
+use mosaic::util::json::Json;
+
+fn identical(a: &ModelWeights, b: &ModelWeights) -> bool {
+    a.layers.len() == b.layers.len()
+        && a.layers.iter().zip(b.layers.iter()).all(|(x, y)| {
+            x.kept_heads == y.kept_heads
+                && x.kept_channels == y.kept_channels
+                && x.projs == y.projs
+        })
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new(
+        "produce_speed",
+        "sequential vs streaming layer-parallel model production",
+    );
+    let fast = Bench::fast();
+    // ≥ 12 layers so even the 8-worker sweep streams (in-flight dense
+    // layers always a minority of the model)
+    let (layers, d_model, ff) =
+        if fast { (12, 32, 64) } else { (16, 64, 128) };
+    let vocab = 256;
+    let src =
+        random_model_sized(0xBE7, layers, d_model, 4, ff, vocab, 32);
+    let p = 0.7;
+    let pl = PruningPlan::uniform(layers, p);
+    let samples: Vec<Vec<u16>> = (0..if fast { 2 } else { 4 })
+        .map(|s| {
+            (0..16)
+                .map(|i| ((i * 13 + s * 29) % (vocab - 4) + 2) as u16)
+                .collect()
+        })
+        .collect();
+    let dense_bytes = src.model_bytes();
+    b.set("layers", Json::num(layers as f64));
+    b.set("d_model", Json::num(d_model as f64));
+    b.set("p", Json::num(p));
+    b.set("dense_bytes", Json::num(dense_bytes as f64));
+
+    // shared snapshot: both paths read the same statistics, so rows
+    // measure production, not calibration variance
+    let t = Instant::now();
+    let snap = capture_calibration(&src, &samples, true);
+    let capture_ms = t.elapsed().as_secs_f64() * 1e3;
+    let stats = &snap.stats;
+    let hess = snap.hess.as_ref().expect("grams requested");
+    println!("capture: {capture_ms:.1} ms (shared snapshot)");
+    b.set("capture_ms", Json::num(capture_ms));
+
+    let kinds = [
+        PrunerKind::Magnitude,
+        PrunerKind::Wanda,
+        PrunerKind::SparseGpt,
+        PrunerKind::SemiStructured { n: 2, m: 4 },
+        PrunerKind::Structured,
+        PrunerKind::Composite(CompositeOpts {
+            use_obs: true,
+            ..Default::default()
+        }),
+    ];
+    let workers = [1usize, 2, 4, 8];
+    let mut summary: Vec<Json> = Vec::new();
+    for kind in &kinds {
+        println!("\n— {} —", kind.name());
+        header(&[
+            "mode", "workers", "rank-ms", "prune-ms", "seal-ms",
+            "wall-ms", "peak-KB",
+        ]);
+        let t = Instant::now();
+        let want = sequential_reference(kind, &src, &pl, stats, hess);
+        let seq_ms = t.elapsed().as_secs_f64() * 1e3;
+        // sequential working set: the full dense clone it prunes
+        println!(
+            "{:>12}{:>12}{:>12}{:>12}{:>12}{:>12.1}{:>12.0}",
+            "sequential", "-", "-", "-", "-", seq_ms,
+            dense_bytes as f64 / 1024.0
+        );
+        summary.push(rec(&[
+            ("kind", Json::str(kind.name())),
+            ("mode", Json::str("sequential")),
+            ("wall_ms", Json::num(seq_ms)),
+            ("peak_bytes", Json::num(dense_bytes as f64)),
+        ]));
+        for &w in &workers {
+            let rep = produce_with_snapshot(
+                &src,
+                &pl,
+                Some(stats),
+                Some(hess),
+                &ProduceOpts::new(*kind).with_workers(w),
+            );
+            assert!(
+                identical(&want, &rep.model),
+                "{} at {w} workers diverged from sequential",
+                kind.name()
+            );
+            assert!(
+                rep.peak_resident_bytes < dense_bytes,
+                "{} at {w} workers: peak {} !< dense {}",
+                kind.name(),
+                rep.peak_resident_bytes,
+                dense_bytes
+            );
+            println!(
+                "{:>12}{:>12}{:>12.1}{:>12.1}{:>12.1}{:>12.1}{:>12.0}",
+                "pipeline",
+                w,
+                rep.rank_ms,
+                rep.prune_ms,
+                rep.seal_ms,
+                rep.wall_ms,
+                rep.peak_resident_bytes as f64 / 1024.0
+            );
+            summary.push(rec(&[
+                ("kind", Json::str(kind.name())),
+                ("mode", Json::str("pipeline")),
+                ("workers", Json::num(w as f64)),
+                ("rank_ms", Json::num(rep.rank_ms)),
+                ("prune_ms", Json::num(rep.prune_ms)),
+                ("seal_ms", Json::num(rep.seal_ms)),
+                ("wall_ms", Json::num(rep.wall_ms)),
+                ("peak_bytes", Json::num(rep.peak_resident_bytes as f64)),
+                ("sealed_bytes", Json::num(rep.sealed_bytes as f64)),
+                ("speedup_vs_seq", Json::num(seq_ms / rep.wall_ms.max(1e-9))),
+            ]));
+        }
+    }
+
+    // machine-readable perf-trajectory file (make bench-produce)
+    let mut out = Json::obj();
+    out.set("bench", Json::str("produce_speed"));
+    out.set("layers", Json::num(layers as f64));
+    out.set("d_model", Json::num(d_model as f64));
+    out.set("p", Json::num(p));
+    out.set("dense_bytes", Json::num(dense_bytes as f64));
+    out.set("capture_ms", Json::num(capture_ms));
+    out.set("rows", Json::Arr(summary.clone()));
+    std::fs::write("BENCH_produce.json", out.to_string())?;
+    println!("\n[wrote BENCH_produce.json]");
+
+    for row in summary {
+        b.row("rows", row);
+    }
+    b.finish();
+    Ok(())
+}

@@ -218,6 +218,36 @@ impl Mosaic {
         Ok((rows.concat(), n_rows, seq))
     }
 
+    /// Streaming layer-parallel production: one native calibration
+    /// pass (stats and/or Grams, as `opts.kind` requires), then layers
+    /// are ranked, pruned and sealed across the worker pool — the
+    /// sealed model plus per-stage wall/busy times and the working-set
+    /// high-water mark come back in the [`ProduceReport`].
+    pub fn produce(
+        &mut self,
+        plan: &PruningPlan,
+        opts: &prune::ProduceOpts,
+    ) -> Result<prune::ProduceReport> {
+        // statless pruners (magnitude, structured) skip calibration
+        // entirely — don't require the c4s split for them
+        let samples = if opts.kind.needs_stats()
+            || opts.kind.needs_hessians()
+        {
+            let c4 = self.store.split("c4s")?;
+            let seq = self.dense.cfg.ctx.min(64);
+            calibration_samples(&c4, seq, opts.n_samples, 0xCA11B)
+        } else {
+            Vec::new()
+        };
+        let t = Instant::now();
+        let rep = prune::pipeline::produce(&self.dense, plan, &samples, opts);
+        self.metrics.record(
+            &format!("produce_{}_s", opts.kind.name()),
+            t.elapsed().as_secs_f64(),
+        );
+        Ok(rep)
+    }
+
     /// Fast Wanda-only unstructured prune (no Hessian) — used by sweeps.
     pub fn prune_wanda(
         &mut self,
@@ -231,16 +261,6 @@ impl Mosaic {
         let mut m = self.dense.clone();
         prune::prune_unstructured(&mut m, &pl, Some(&stats), Metric::Wanda);
         Ok(m)
-    }
-}
-
-impl HessianStats {
-    /// Cheap clone used when both &mut self and &HessianStats are needed.
-    pub fn clone_shallow(&self) -> HessianStats {
-        HessianStats {
-            gram: self.gram.clone(),
-            rows: self.rows,
-        }
     }
 }
 

@@ -103,6 +103,14 @@ pub fn seal(t: &Tensor, e: Encoding) -> ProjStorage {
     }
 }
 
+/// Seal under the cheapest encoding ([`choose_encoding`] + [`seal`]).
+/// `ModelWeights::compact` and the streaming pipeline's per-layer seal
+/// both go through this, so a layer sealed mid-pipeline is bit-identical
+/// to one compacted at the end of a sequential pass.
+pub fn seal_auto(t: &Tensor) -> ProjStorage {
+    seal(t, choose_encoding(t))
+}
+
 /// Serialize runtime storage in its own encoding — sealed backends
 /// stream their buffers out directly (no densify round-trip); a dense
 /// f32 working copy gets `choose_encoding` applied first.

@@ -1,21 +1,31 @@
-//! Activation capture for the SparseGPT pruner: replays the forward pass
-//! while recording each projection's *input rows* so the pruner can build
-//! per-projection Hessians H = Xᵀ X (the inverse-Hessian weight update
-//! needs off-diagonal terms the profile graph's Σa² vectors don't carry).
+//! Native calibration capture: replays the forward pass while recording
+//! each projection's *input rows*, producing in ONE pass everything the
+//! pruners need — per-input-feature Σ activation² (the Wanda/POD ‖A‖₂
+//! term) and, when requested, the full per-projection Gram matrices
+//! H = Xᵀ X for the SparseGPT inverse-Hessian weight update (the
+//! off-diagonal terms the profile graph's Σa² vectors don't carry).
 //!
 //! Numerics mirror engine::forward_full exactly (same primitives).
 //! Capture runs in the dense working phase (before `compact()` seals the
-//! projections), so it reads weights through `proj_dense`.
+//! projections), so it reads weights through `proj_dense`. This is the
+//! "capture" stage of the streaming production pipeline
+//! ([`crate::prune::pipeline`]): the snapshot is built once, then shared
+//! read-only across the layer workers.
+
+use std::sync::Arc;
 
 use crate::model::config::Proj;
 use crate::model::weights::ModelWeights;
+use crate::rank::ActivationStats;
 use crate::tensor::{self, matmul, rmsnorm, silu, softmax, Tensor};
 
 /// Per (layer, projection) Gram matrix accumulator H = Σ xᵀx over all
-/// captured token rows, plus the row count.
+/// captured token rows, plus the row count. Grams are `Arc`-shared:
+/// [`HessianStats::clone_shallow`] hands out a second handle to the
+/// same buffers instead of copying O(k²) floats per projection.
 pub struct HessianStats {
     /// [layer][proj] -> (in_dim × in_dim) symmetric Gram matrix
-    pub gram: Vec<Vec<Tensor>>,
+    pub gram: Vec<Vec<Arc<Tensor>>>,
     pub rows: usize,
 }
 
@@ -24,12 +34,12 @@ impl HessianStats {
         let gram = m
             .layers
             .iter()
-            .map(|_| {
+            .map(|l| {
                 Proj::all()
                     .iter()
                     .map(|&p| {
-                        let (i, _) = m.cfg.proj_shape(p);
-                        Tensor::zeros(&[i, i])
+                        let i = l.proj(p).rows();
+                        Arc::new(Tensor::zeros(&[i, i]))
                     })
                     .collect()
             })
@@ -37,8 +47,16 @@ impl HessianStats {
         HessianStats { gram, rows: 0 }
     }
 
+    /// Cheap clone used when both &mut self and &HessianStats are
+    /// needed: the sample (Gram) buffers are SHARED via `Arc`, not
+    /// copied — the clone is O(layers · projections) handle copies.
+    pub fn clone_shallow(&self) -> HessianStats {
+        HessianStats { gram: self.gram.clone(), rows: self.rows }
+    }
+
     fn add_rows(&mut self, l: usize, p: Proj, x: &Tensor) {
-        let g = &mut self.gram[l][p as usize];
+        let g = Arc::get_mut(&mut self.gram[l][p as usize])
+            .expect("grams are uniquely owned during capture");
         let k = g.shape[0];
         for r in 0..x.rows() {
             let row = x.row(r);
@@ -56,20 +74,68 @@ impl HessianStats {
     }
 }
 
-/// Run `tokens` through the model, accumulating projection-input Grams.
+/// Shared read-only calibration snapshot: one forward pass populates
+/// both the activation statistics (always) and the Gram matrices (only
+/// when a Hessian-based pruner asked for them — the Grams are O(k²) per
+/// token, the diagonals O(k)).
+pub struct CalibSnapshot {
+    pub stats: ActivationStats,
+    pub hess: Option<HessianStats>,
+}
+
+struct Accum<'a> {
+    stats: &'a mut ActivationStats,
+    hess: Option<&'a mut HessianStats>,
+}
+
+impl Accum<'_> {
+    fn add(&mut self, l: usize, p: Proj, x: &Tensor) {
+        let acc = &mut self.stats.act_sq[l][p as usize];
+        for r in 0..x.rows() {
+            for (a, &v) in acc.iter_mut().zip(x.row(r).iter()) {
+                *a += v * v;
+            }
+        }
+        if let Some(h) = self.hess.as_deref_mut() {
+            h.add_rows(l, p, x);
+        }
+    }
+}
+
+/// Run `samples` through the model once, accumulating per-projection
+/// input statistics: Σ act² always, full Grams iff `full_hessian`.
+pub fn capture_calibration(
+    m: &ModelWeights,
+    samples: &[Vec<u16>],
+    full_hessian: bool,
+) -> CalibSnapshot {
+    let mut stats = ActivationStats::zeros(m.layers.len(), &|l, p| {
+        m.layers[l].proj(p).rows()
+    });
+    let mut hess = full_hessian.then(|| HessianStats::new(m));
+    for tokens in samples {
+        let mut acc = Accum { stats: &mut stats, hess: hess.as_mut() };
+        capture_one(m, tokens, &mut acc);
+        if let Some(h) = hess.as_mut() {
+            h.rows += tokens.len();
+        }
+        stats.n_samples += 1;
+    }
+    CalibSnapshot { stats, hess }
+}
+
+/// Run `tokens` through the model, accumulating projection-input Grams
+/// (compatibility wrapper over [`capture_calibration`]).
 pub fn capture_hessians(
     m: &ModelWeights,
     samples: &[Vec<u16>],
 ) -> HessianStats {
-    let mut stats = HessianStats::new(m);
-    for tokens in samples {
-        capture_one(m, tokens, &mut stats);
-        stats.rows += tokens.len();
-    }
-    stats
+    capture_calibration(m, samples, true)
+        .hess
+        .expect("full_hessian requested")
 }
 
-fn capture_one(m: &ModelWeights, tokens: &[u16], stats: &mut HessianStats) {
+fn capture_one(m: &ModelWeights, tokens: &[u16], acc: &mut Accum) {
     let cfg = &m.cfg;
     let (s, d, dh) = (tokens.len(), cfg.d_model, cfg.head_dim);
     let scale = 1.0 / (dh as f32).sqrt();
@@ -83,9 +149,9 @@ fn capture_one(m: &ModelWeights, tokens: &[u16], stats: &mut HessianStats) {
         for i in 0..s {
             rmsnorm(x.row(i), &l.attn_norm, xn.row_mut(i));
         }
-        stats.add_rows(li, Proj::Q, &xn);
-        stats.add_rows(li, Proj::K, &xn);
-        stats.add_rows(li, Proj::V, &xn);
+        acc.add(li, Proj::Q, &xn);
+        acc.add(li, Proj::K, &xn);
+        acc.add(li, Proj::V, &xn);
         let mut q = matmul(&xn, l.proj_dense(Proj::Q));
         let mut k = matmul(&xn, l.proj_dense(Proj::K));
         let v = matmul(&xn, l.proj_dense(Proj::V));
@@ -120,7 +186,7 @@ fn capture_one(m: &ModelWeights, tokens: &[u16], stats: &mut HessianStats) {
                 }
             }
         }
-        stats.add_rows(li, Proj::O, &attn);
+        acc.add(li, Proj::O, &attn);
         let o = matmul(&attn, l.proj_dense(Proj::O));
         for i in 0..s * d {
             x.data[i] += o.data[i];
@@ -128,8 +194,8 @@ fn capture_one(m: &ModelWeights, tokens: &[u16], stats: &mut HessianStats) {
         for i in 0..s {
             rmsnorm(x.row(i), &l.ffn_norm, xn.row_mut(i));
         }
-        stats.add_rows(li, Proj::Gate, &xn);
-        stats.add_rows(li, Proj::Up, &xn);
+        acc.add(li, Proj::Gate, &xn);
+        acc.add(li, Proj::Up, &xn);
         let g = matmul(&xn, l.proj_dense(Proj::Gate));
         let u = matmul(&xn, l.proj_dense(Proj::Up));
         let c = l.kept_channels.len();
@@ -137,7 +203,7 @@ fn capture_one(m: &ModelWeights, tokens: &[u16], stats: &mut HessianStats) {
         for i in 0..s * c {
             hmid.data[i] = silu(g.data[i]) * u.data[i];
         }
-        stats.add_rows(li, Proj::Down, &hmid);
+        acc.add(li, Proj::Down, &hmid);
         let ffn = matmul(&hmid, l.proj_dense(Proj::Down));
         for i in 0..s * d {
             x.data[i] += ffn.data[i];
@@ -178,5 +244,52 @@ mod tests {
         let gq = &stats.gram[0][0];
         let gk = &stats.gram[0][1];
         assert_eq!(gq.data, gk.data, "q and k see the same inputs");
+    }
+
+    #[test]
+    fn clone_shallow_shares_sample_buffers() {
+        let m = random_model(43);
+        let h = capture_hessians(&m, &[vec![1, 2, 3]]);
+        let c = h.clone_shallow();
+        assert_eq!(c.rows, h.rows);
+        for (lo, lc) in h.gram.iter().zip(c.gram.iter()) {
+            for (a, b) in lo.iter().zip(lc.iter()) {
+                assert!(
+                    Arc::ptr_eq(a, b),
+                    "clone_shallow must share, not copy, the Gram buffers"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn calibration_diag_matches_gram_diagonal() {
+        // the one-pass snapshot: act_sq must be exactly the Gram
+        // diagonal (both are Σ x_i² over the same captured rows)
+        let m = random_model(44);
+        let snap = capture_calibration(&m, &[vec![5, 6, 7, 8]], true);
+        let hess = snap.hess.expect("hessians requested");
+        for (l, row) in snap.stats.act_sq.iter().enumerate() {
+            for (pi, act) in row.iter().enumerate() {
+                let g = &hess.gram[l][pi];
+                for (i, &a) in act.iter().enumerate() {
+                    assert!(
+                        (a - g.at2(i, i)).abs() <= 1e-4 * (1.0 + a.abs()),
+                        "l{l} p{pi} i{i}: {a} vs {}",
+                        g.at2(i, i)
+                    );
+                }
+            }
+        }
+        assert_eq!(snap.stats.n_samples, 1);
+    }
+
+    #[test]
+    fn diag_only_capture_skips_grams() {
+        let m = random_model(45);
+        let snap = capture_calibration(&m, &[vec![2, 3]], false);
+        assert!(snap.hess.is_none());
+        // stats still populated
+        assert!(snap.stats.act_sq[0][0].iter().any(|&x| x > 0.0));
     }
 }

@@ -143,9 +143,7 @@ impl ModelWeights {
         for l in &mut self.layers {
             for s in l.projs.iter_mut() {
                 if let ProjStorage::DenseF32(t) = &*s {
-                    let e = crate::deploy::choose_encoding(t);
-                    let sealed = crate::deploy::seal(t, e);
-                    *s = sealed;
+                    *s = crate::deploy::seal_auto(t);
                 }
             }
         }

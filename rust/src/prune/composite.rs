@@ -10,13 +10,20 @@
 //!     s_u = 1 − (1−p)/(1−σ·p)
 //! so the live-parameter fraction is (1−σp)(1−s_u) = 1−p per projection.
 
+use std::sync::Arc;
+
 use crate::model::capture::HessianStats;
-use crate::model::ModelWeights;
+use crate::model::{LayerWeights, ModelWeights};
 use crate::prune::planner::PruningPlan;
-use crate::prune::sparsegpt::prune_sparsegpt;
-use crate::prune::structured::prune_structured;
-use crate::prune::unstructured::{prune_unstructured, Metric};
+use crate::prune::sparsegpt::{prune_sparsegpt, sparsegpt_prune_layer};
+use crate::prune::structured::{
+    plan_fracs, prune_layer_structured_timed, prune_structured,
+};
+use crate::prune::unstructured::{
+    prune_layer_unstructured, prune_unstructured, Metric,
+};
 use crate::rank::ActivationStats;
+use crate::tensor::Tensor;
 
 /// Default structural share of the pruning budget. At σ = 0.5 an 80 %
 /// composite prune removes ~40 % of structure (bytes/latency win) and
@@ -38,22 +45,19 @@ impl Default for CompositeOpts {
     }
 }
 
-/// Split the plan: structural fraction per projection + the residual
-/// unstructured sparsity that lands the combined live fraction on p.
-pub fn split_plan(
-    plan: &PruningPlan,
+/// Split one layer's per-projection targets into the structural
+/// fraction and the residual unstructured sparsity that lands the
+/// combined live fraction on p — the row-level unit [`split_plan`] and
+/// the streaming pipeline share (identical float ops, so the parallel
+/// path stays bit-identical to the sequential one).
+pub fn split_targets_row(
+    targets: &[f64],
     struct_share: f64,
-) -> (PruningPlan, PruningPlan) {
+) -> (Vec<f64>, Vec<f64>) {
     let s = struct_share.clamp(0.0, 1.0);
-    let mut structural = plan.clone();
-    let mut unstructured = plan.clone();
-    for (ts, tu) in structural
-        .targets
-        .iter_mut()
-        .flatten()
-        .zip(unstructured.targets.iter_mut().flatten())
-    {
-        let p = *ts;
+    let mut structural = Vec::with_capacity(targets.len());
+    let mut unstructured = Vec::with_capacity(targets.len());
+    for &p in targets {
         let p_struct = s * p;
         let live_struct = 1.0 - p_struct;
         let s_u = if live_struct <= 0.0 {
@@ -61,10 +65,58 @@ pub fn split_plan(
         } else {
             (1.0 - (1.0 - p) / live_struct).max(0.0)
         };
-        *ts = p_struct;
-        *tu = s_u;
+        structural.push(p_struct);
+        unstructured.push(s_u);
     }
     (structural, unstructured)
+}
+
+/// Split the plan: structural fraction per projection + the residual
+/// unstructured sparsity that lands the combined live fraction on p.
+pub fn split_plan(
+    plan: &PruningPlan,
+    struct_share: f64,
+) -> (PruningPlan, PruningPlan) {
+    let mut structural = plan.clone();
+    let mut unstructured = plan.clone();
+    for (l, row) in plan.targets.iter().enumerate() {
+        let (st, un) = split_targets_row(row, struct_share);
+        structural.targets[l] = st;
+        unstructured.targets[l] = un;
+    }
+    (structural, unstructured)
+}
+
+/// Composite-prune one layer: unstructured mask at the residual
+/// sparsity (OBS when a Gram row is given and `use_obs`, else
+/// Wanda/magnitude), then structured group removal — both computed on
+/// this layer only, so the whole-model sequential pass and the
+/// layer-parallel pipeline produce identical weights. Returns
+/// (rank_µs, prune_µs).
+pub fn prune_layer_composite(
+    layer: &mut LayerWeights,
+    head_dim: usize,
+    targets: &[f64],
+    acts: Option<&[Vec<f32>]>,
+    grams: Option<&[Arc<Tensor>]>,
+    opts: CompositeOpts,
+) -> (u64, u64) {
+    let (st_row, un_row) = split_targets_row(targets, opts.struct_share);
+    let (mut rank_us, mut prune_us) = match (opts.use_obs, grams) {
+        (true, Some(g)) => sparsegpt_prune_layer(layer, &un_row, g),
+        _ => prune_layer_unstructured(
+            layer,
+            &un_row,
+            acts,
+            if acts.is_some() { Metric::Wanda } else { Metric::Magnitude },
+        ),
+    };
+    let (head_frac, chan_frac) = plan_fracs(&st_row);
+    let (r, u) =
+        prune_layer_structured_timed(layer, head_dim, head_frac, chan_frac);
+    rank_us += r;
+    prune_us += u;
+    (rank_us, prune_us)
 }
 
 /// Composite projection pruning: mask per POD, then remove the lowest

@@ -4,9 +4,13 @@
 //! Projection Planner ([`planner`]), Mosaic Pruner (the three category
 //! methods: [`unstructured`], [`structured`], [`composite`], plus the
 //! [`sparsegpt`] OBS engine), Post-Pruning Optimizer (crate::quant) and
-//! SLM Deployer (crate::coordinator::deploy).
+//! SLM Deployer (crate::coordinator::deploy). The streaming
+//! layer-parallel production path lives in [`pipeline`]; the per-method
+//! `prune_*` entry points remain the sequential oracle its parity tests
+//! compare against.
 
 pub mod composite;
+pub mod pipeline;
 pub mod planner;
 pub mod semistructured;
 pub mod sparsegpt;
@@ -14,6 +18,9 @@ pub mod structured;
 pub mod unstructured;
 
 pub use composite::{prune_composite, CompositeOpts};
+pub use pipeline::{
+    LayerCtx, LayerPruner, ProduceOpts, ProduceReport, PrunerKind,
+};
 pub use planner::{plan, PruningPlan, Uniformity};
 pub use structured::prune_structured;
 pub use unstructured::{prune_unstructured, Metric};

@@ -1,0 +1,540 @@
+//! Streaming layer-parallel pruning pipeline — model *production* as a
+//! hot path (the paper's 7.19× faster-production claim is about this
+//! stage, not serving).
+//!
+//! Shape (see ARCHITECTURE.md §Production pipeline):
+//!
+//!   1. **Capture** — ONE native calibration forward pass
+//!      ([`crate::model::capture::capture_calibration`]) populates the
+//!      per-layer activation/Hessian statistics into a shared read-only
+//!      snapshot (Grams only when the pruner needs them).
+//!   2. **Rank + prune** — layers are dispatched across the worker pool
+//!      ([`crate::util::threadpool::par_map_with`]); each worker clones
+//!      ONE dense layer from the source, ranks and prunes it through a
+//!      [`LayerPruner`] (the per-layer units extracted from the five
+//!      `prune/*` modules), …
+//!   3. **Seal** — … and immediately seals every projection through
+//!      [`crate::deploy::seal_auto`] into its cheapest
+//!      [`crate::tensor::ProjStorage`] backend. The dense working copy
+//!      is dropped right there, so the production working set stays at
+//!      ~(sealed prefix + `workers` dense layers) instead of a full
+//!      dense model clone.
+//!
+//! Determinism rule: every pruner is layer-local (no cross-layer
+//! state), each layer's computation is independent of the worker that
+//! runs it, results are reassembled in layer-index order, and all
+//! model-level reductions (sizes, sparsity) sum in index-ascending
+//! order — so the pipeline is bit-identical to the sequential
+//! reference (`prune_*` + `compact()`) at ANY worker count. Locked
+//! down by rust/tests/pipeline_parity.rs.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::model::capture::{capture_calibration, HessianStats};
+use crate::model::{LayerWeights, ModelWeights};
+use crate::prune::composite::{prune_layer_composite, CompositeOpts};
+use crate::prune::planner::PruningPlan;
+use crate::prune::semistructured::nm_prune_layer;
+use crate::prune::sparsegpt::sparsegpt_prune_layer;
+use crate::prune::structured::{plan_fracs, prune_layer_structured_timed};
+use crate::prune::unstructured::{prune_layer_unstructured, Metric};
+use crate::rank::ActivationStats;
+use crate::tensor::Tensor;
+use crate::util::threadpool::{n_threads, par_map_with};
+
+/// Which pruner the pipeline runs — the five per-layer methods plus
+/// the Mosaic composite that combines them.
+#[derive(Debug, Clone, Copy)]
+pub enum PrunerKind {
+    /// Unstructured masking by |w|.
+    Magnitude,
+    /// Unstructured masking by ‖A‖₂·|w| (needs activation stats).
+    Wanda,
+    /// OBS metric + weight update (needs calibration Grams).
+    SparseGpt,
+    /// N:M pattern along the input dim (Wanda scores when stats exist).
+    SemiStructured { n: usize, m: usize },
+    /// Whole-head / whole-channel group removal.
+    Structured,
+    /// Mosaic composite: unstructured within kept structure + removal.
+    Composite(CompositeOpts),
+}
+
+impl PrunerKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PrunerKind::Magnitude => "magnitude",
+            PrunerKind::Wanda => "wanda",
+            PrunerKind::SparseGpt => "sparsegpt",
+            PrunerKind::SemiStructured { .. } => "semistructured",
+            PrunerKind::Structured => "structured",
+            PrunerKind::Composite(_) => "composite",
+        }
+    }
+
+    /// Does the capture stage need activation (Σ act²) statistics?
+    pub fn needs_stats(&self) -> bool {
+        match self {
+            PrunerKind::Wanda | PrunerKind::SemiStructured { .. } => true,
+            PrunerKind::Composite(o) => !o.use_obs,
+            _ => false,
+        }
+    }
+
+    /// Does the capture stage need full calibration Grams?
+    pub fn needs_hessians(&self) -> bool {
+        match self {
+            PrunerKind::SparseGpt => true,
+            PrunerKind::Composite(o) => o.use_obs,
+            _ => false,
+        }
+    }
+
+    /// Materialize the per-layer pruner.
+    pub fn build(&self) -> Box<dyn LayerPruner> {
+        match *self {
+            PrunerKind::Magnitude => Box::new(MagnitudePruner),
+            PrunerKind::Wanda => Box::new(WandaPruner),
+            PrunerKind::SparseGpt => Box::new(SparseGptPruner),
+            PrunerKind::SemiStructured { n, m } => {
+                Box::new(SemiStructuredPruner { n, m })
+            }
+            PrunerKind::Structured => Box::new(StructuredPruner),
+            PrunerKind::Composite(opts) => {
+                Box::new(CompositePruner { opts })
+            }
+        }
+    }
+}
+
+/// Everything a layer worker may read while pruning one layer: the
+/// plan row plus this layer's slice of the shared calibration snapshot.
+pub struct LayerCtx<'a> {
+    pub li: usize,
+    pub head_dim: usize,
+    /// Per-projection sparsity targets (`PruningPlan::targets[li]`).
+    pub targets: &'a [f64],
+    /// Per-projection Σ act² rows (`ActivationStats::act_sq[li]`).
+    pub acts: Option<&'a [Vec<f32>]>,
+    /// Per-projection Gram matrices (`HessianStats::gram[li]`).
+    pub grams: Option<&'a [Arc<Tensor>]>,
+}
+
+/// One pruning method's layer-local unit — rank + prune one layer in
+/// place. Implementations MUST be layer-local and deterministic for a
+/// fixed (layer, ctx): the pipeline's bit-parity guarantee rests on it.
+/// Returns (rank_µs, prune_µs) for the report's stage accounting.
+pub trait LayerPruner: Sync {
+    fn name(&self) -> &'static str;
+    fn prune_layer(
+        &self,
+        layer: &mut LayerWeights,
+        ctx: &LayerCtx<'_>,
+    ) -> (u64, u64);
+}
+
+pub struct MagnitudePruner;
+
+impl LayerPruner for MagnitudePruner {
+    fn name(&self) -> &'static str {
+        "magnitude"
+    }
+    fn prune_layer(
+        &self,
+        layer: &mut LayerWeights,
+        ctx: &LayerCtx<'_>,
+    ) -> (u64, u64) {
+        prune_layer_unstructured(layer, ctx.targets, None, Metric::Magnitude)
+    }
+}
+
+pub struct WandaPruner;
+
+impl LayerPruner for WandaPruner {
+    fn name(&self) -> &'static str {
+        "wanda"
+    }
+    fn prune_layer(
+        &self,
+        layer: &mut LayerWeights,
+        ctx: &LayerCtx<'_>,
+    ) -> (u64, u64) {
+        let acts = ctx.acts.expect("wanda needs activation stats");
+        prune_layer_unstructured(layer, ctx.targets, Some(acts), Metric::Wanda)
+    }
+}
+
+pub struct SparseGptPruner;
+
+impl LayerPruner for SparseGptPruner {
+    fn name(&self) -> &'static str {
+        "sparsegpt"
+    }
+    fn prune_layer(
+        &self,
+        layer: &mut LayerWeights,
+        ctx: &LayerCtx<'_>,
+    ) -> (u64, u64) {
+        let grams = ctx.grams.expect("sparsegpt needs calibration grams");
+        sparsegpt_prune_layer(layer, ctx.targets, grams)
+    }
+}
+
+pub struct SemiStructuredPruner {
+    pub n: usize,
+    pub m: usize,
+}
+
+impl LayerPruner for SemiStructuredPruner {
+    fn name(&self) -> &'static str {
+        "semistructured"
+    }
+    fn prune_layer(
+        &self,
+        layer: &mut LayerWeights,
+        ctx: &LayerCtx<'_>,
+    ) -> (u64, u64) {
+        nm_prune_layer(layer, ctx.acts, self.n, self.m)
+    }
+}
+
+pub struct StructuredPruner;
+
+impl LayerPruner for StructuredPruner {
+    fn name(&self) -> &'static str {
+        "structured"
+    }
+    fn prune_layer(
+        &self,
+        layer: &mut LayerWeights,
+        ctx: &LayerCtx<'_>,
+    ) -> (u64, u64) {
+        let (head_frac, chan_frac) = plan_fracs(ctx.targets);
+        prune_layer_structured_timed(layer, ctx.head_dim, head_frac, chan_frac)
+    }
+}
+
+pub struct CompositePruner {
+    pub opts: CompositeOpts,
+}
+
+impl LayerPruner for CompositePruner {
+    fn name(&self) -> &'static str {
+        "composite"
+    }
+    fn prune_layer(
+        &self,
+        layer: &mut LayerWeights,
+        ctx: &LayerCtx<'_>,
+    ) -> (u64, u64) {
+        prune_layer_composite(
+            layer,
+            ctx.head_dim,
+            ctx.targets,
+            ctx.acts,
+            ctx.grams,
+            self.opts,
+        )
+    }
+}
+
+/// Pipeline options. `workers == 0` uses the pool default
+/// ([`n_threads`]); tests pin 1/2/8 for the determinism sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct ProduceOpts {
+    pub kind: PrunerKind,
+    pub workers: usize,
+    /// Calibration samples for the capture stage (coordinator path).
+    pub n_samples: usize,
+}
+
+impl ProduceOpts {
+    pub fn new(kind: PrunerKind) -> Self {
+        ProduceOpts { kind, workers: 0, n_samples: 16 }
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+}
+
+/// What `produce` hands back: the sealed model plus the per-stage
+/// accounting the production benches track.
+pub struct ProduceReport {
+    /// The pruned model, every projection sealed (never `DenseF32`).
+    pub model: ModelWeights,
+    /// Workers actually used for the layer fan-out.
+    pub workers: usize,
+    /// Wall time of the calibration capture stage (0 when the pruner
+    /// needs no statistics, or when a prebuilt snapshot was supplied).
+    pub capture_ms: f64,
+    /// Cumulative scoring/importance time summed over all layer
+    /// workers (busy time — can exceed `wall_ms` when workers > 1).
+    pub rank_ms: f64,
+    /// Cumulative mask/slice/OBS-sweep time summed over all workers.
+    pub prune_ms: f64,
+    /// Cumulative storage-sealing time summed over all workers.
+    pub seal_ms: f64,
+    /// End-to-end wall time (capture + fan-out + assembly).
+    pub wall_ms: f64,
+    /// High-water mark of the production working set: the output's
+    /// fixed f32 tensors + sealed prefix + in-flight dense layer
+    /// clones. The dense *source* model is not counted (it belongs to
+    /// the caller); the sequential reference's working set is a full
+    /// dense clone, i.e. `src.model_bytes()`.
+    pub peak_resident_bytes: usize,
+    /// `model.resident_bytes()` of the sealed output.
+    pub sealed_bytes: usize,
+}
+
+/// The sequential reference the parity tests and the production bench
+/// compare against: whole-model dense `prune_*` pass, then seal
+/// everything at the very end via `compact()`. Kept as ONE shared
+/// oracle so the pipeline is always measured against the same code.
+pub fn sequential_reference(
+    kind: &PrunerKind,
+    src: &ModelWeights,
+    plan: &PruningPlan,
+    stats: &ActivationStats,
+    hess: &HessianStats,
+) -> ModelWeights {
+    let mut m = src.clone();
+    match kind {
+        PrunerKind::Magnitude => crate::prune::prune_unstructured(
+            &mut m,
+            plan,
+            None,
+            Metric::Magnitude,
+        ),
+        PrunerKind::Wanda => crate::prune::prune_unstructured(
+            &mut m,
+            plan,
+            Some(stats),
+            Metric::Wanda,
+        ),
+        PrunerKind::SparseGpt => {
+            crate::prune::sparsegpt::prune_sparsegpt(&mut m, plan, hess)
+        }
+        PrunerKind::SemiStructured { n, m: mm } => {
+            crate::prune::semistructured::prune_nm(
+                &mut m,
+                Some(stats),
+                *n,
+                *mm,
+            )
+        }
+        PrunerKind::Structured => {
+            crate::prune::prune_structured(&mut m, plan)
+        }
+        PrunerKind::Composite(o) => crate::prune::prune_composite(
+            &mut m,
+            plan,
+            Some(stats),
+            Some(hess),
+            *o,
+        ),
+    }
+    m.compact();
+    m
+}
+
+fn layer_resident(l: &LayerWeights) -> usize {
+    4 * (l.attn_norm.len() + l.ffn_norm.len())
+        + l.projs.iter().map(|s| s.resident_bytes()).sum::<usize>()
+}
+
+/// Apply `delta` to the live working-set counter and fold the result
+/// into the high-water mark.
+fn bump(cur: &AtomicUsize, peak: &AtomicUsize, delta: isize) {
+    let now = if delta >= 0 {
+        cur.fetch_add(delta as usize, Ordering::Relaxed) + delta as usize
+    } else {
+        cur.fetch_sub(delta.unsigned_abs(), Ordering::Relaxed)
+            - delta.unsigned_abs()
+    };
+    peak.fetch_max(now, Ordering::Relaxed);
+}
+
+/// Full pipeline: capture (one calibration pass, iff the pruner needs
+/// statistics) + layer-parallel rank/prune/seal.
+pub fn produce(
+    src: &ModelWeights,
+    plan: &PruningPlan,
+    samples: &[Vec<u16>],
+    opts: &ProduceOpts,
+) -> ProduceReport {
+    let t0 = Instant::now();
+    let snap = (opts.kind.needs_stats() || opts.kind.needs_hessians())
+        .then(|| capture_calibration(src, samples, opts.kind.needs_hessians()));
+    let capture_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let (stats, hess) = match &snap {
+        Some(s) => (
+            if opts.kind.needs_stats() { Some(&s.stats) } else { None },
+            s.hess.as_ref(),
+        ),
+        None => (None, None),
+    };
+    let mut rep = produce_with_snapshot(src, plan, stats, hess, opts);
+    rep.capture_ms = capture_ms;
+    rep.wall_ms += capture_ms;
+    rep
+}
+
+/// Pipeline fan-out against a prebuilt snapshot — the parity tests use
+/// this so the oracle and the pipeline read the exact same statistics.
+pub fn produce_with_snapshot(
+    src: &ModelWeights,
+    plan: &PruningPlan,
+    stats: Option<&ActivationStats>,
+    hess: Option<&HessianStats>,
+    opts: &ProduceOpts,
+) -> ProduceReport {
+    assert_eq!(
+        plan.targets.len(),
+        src.layers.len(),
+        "plan rows must match model layers"
+    );
+    let t0 = Instant::now();
+    let workers =
+        if opts.workers == 0 { n_threads() } else { opts.workers };
+    let pruner = opts.kind.build();
+    let head_dim = src.cfg.head_dim;
+
+    // Working-set accounting: fixed output tensors are alive for the
+    // whole run; per-layer bytes enter dense and leave sealed.
+    let fixed_bytes = 4
+        * (src.embed.numel() + src.lm_head.numel() + src.final_norm.len());
+    let cur = AtomicUsize::new(0);
+    let peak = AtomicUsize::new(0);
+    let rank_us = AtomicU64::new(0);
+    let prune_us = AtomicU64::new(0);
+    let seal_us = AtomicU64::new(0);
+
+    let idx: Vec<usize> = (0..src.layers.len()).collect();
+    let layers: Vec<LayerWeights> = par_map_with(&idx, workers, |&li| {
+        let mut layer = src.layers[li].clone();
+        let dense_b = layer_resident(&layer);
+        bump(&cur, &peak, dense_b as isize);
+        let ctx = LayerCtx {
+            li,
+            head_dim,
+            targets: &plan.targets[li],
+            acts: stats.map(|s| s.act_sq[li].as_slice()),
+            grams: hess.map(|h| h.gram[li].as_slice()),
+        };
+        let (r, p) = pruner.prune_layer(&mut layer, &ctx);
+        rank_us.fetch_add(r, Ordering::Relaxed);
+        prune_us.fetch_add(p, Ordering::Relaxed);
+        // structured pruning shrinks the dense copy in place; re-read
+        // it so the working-set counter drops to what is really held
+        let shrunk_b = layer_resident(&layer);
+        if shrunk_b != dense_b {
+            bump(&cur, &peak, shrunk_b as isize - dense_b as isize);
+        }
+        let t = Instant::now();
+        for s in layer.projs.iter_mut() {
+            if s.is_dense_f32() {
+                // projection-granular swap: the sealed buffer and the
+                // dense one only coexist for a single projection, so
+                // the in-flight overlap stays ~one projection wide
+                let db = s.resident_bytes();
+                let sealed = crate::deploy::seal_auto(s.dense());
+                bump(&cur, &peak, sealed.resident_bytes() as isize);
+                *s = sealed;
+                bump(&cur, &peak, -(db as isize));
+            }
+        }
+        seal_us.fetch_add(t.elapsed().as_micros() as u64, Ordering::Relaxed);
+        layer
+    });
+
+    let model = ModelWeights {
+        cfg: src.cfg.clone(),
+        embed: src.embed.clone(),
+        final_norm: src.final_norm.clone(),
+        lm_head: src.lm_head.clone(),
+        layers,
+    };
+    // index-ascending reduction (determinism rule)
+    let sealed_bytes = model.resident_bytes();
+    ProduceReport {
+        model,
+        workers,
+        capture_ms: 0.0,
+        rank_ms: rank_us.load(Ordering::Relaxed) as f64 / 1e3,
+        prune_ms: prune_us.load(Ordering::Relaxed) as f64 / 1e3,
+        seal_ms: seal_us.load(Ordering::Relaxed) as f64 / 1e3,
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        peak_resident_bytes: fixed_bytes + peak.load(Ordering::Relaxed),
+        sealed_bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::testutil::random_model;
+
+    #[test]
+    fn produce_seals_every_projection() {
+        let m = random_model(91);
+        let plan = PruningPlan::uniform(m.cfg.n_layers, 0.5);
+        let rep = produce(
+            &m,
+            &plan,
+            &[vec![1, 2, 3, 4]],
+            &ProduceOpts::new(PrunerKind::Magnitude).with_workers(2),
+        );
+        assert!(rep.model.is_compacted());
+        assert!(rep
+            .model
+            .layers
+            .iter()
+            .flat_map(|l| l.projs.iter())
+            .all(|s| !s.is_dense_f32()));
+        assert_eq!(rep.workers, 2);
+        assert_eq!(rep.sealed_bytes, rep.model.resident_bytes());
+        assert!(rep.peak_resident_bytes > 0);
+    }
+
+    #[test]
+    fn capture_skipped_for_statless_pruners() {
+        let m = random_model(92);
+        let plan = PruningPlan::uniform(m.cfg.n_layers, 0.3);
+        let rep = produce(
+            &m,
+            &plan,
+            &[],
+            &ProduceOpts::new(PrunerKind::Structured).with_workers(1),
+        );
+        // no samples needed, no capture cost, still a fully sealed
+        // model (per-projection: is_compacted alone is an ANY)
+        assert!(rep
+            .model
+            .layers
+            .iter()
+            .flat_map(|l| l.projs.iter())
+            .all(|s| !s.is_dense_f32()));
+        for l in &rep.model.layers {
+            assert!(l.kept_heads.len() < m.cfg.n_heads);
+        }
+    }
+
+    #[test]
+    fn kind_requirements() {
+        assert!(!PrunerKind::Magnitude.needs_stats());
+        assert!(PrunerKind::Wanda.needs_stats());
+        assert!(PrunerKind::SparseGpt.needs_hessians());
+        assert!(PrunerKind::SemiStructured { n: 2, m: 4 }.needs_stats());
+        let obs = PrunerKind::Composite(CompositeOpts {
+            use_obs: true,
+            ..Default::default()
+        });
+        assert!(obs.needs_hessians() && !obs.needs_stats());
+        let wanda = PrunerKind::Composite(CompositeOpts::default());
+        assert!(wanda.needs_stats() && !wanda.needs_hessians());
+    }
+}

@@ -40,6 +40,21 @@ pub struct PruningPlan {
 }
 
 impl PruningPlan {
+    /// Uniform plan: every projection targeted at exactly `p` (what
+    /// `plan()` produces for `Uniformity::Global` with any rank) —
+    /// artifact-free tests and benches build plans with this.
+    pub fn uniform(n_layers: usize, p: f64) -> PruningPlan {
+        assert!((0.0..1.0).contains(&p), "p must be in [0,1)");
+        PruningPlan {
+            targets: vec![
+                vec![p; crate::model::config::N_PROJS];
+                n_layers
+            ],
+            p,
+            uniformity: Uniformity::Global,
+        }
+    }
+
     pub fn mean_target(&self) -> f64 {
         let n: usize = self.targets.iter().map(|t| t.len()).sum();
         self.targets.iter().flat_map(|t| t.iter()).sum::<f64>()

@@ -6,10 +6,12 @@
 //! mask layout is exactly what a 2:4 sparse MMA consumes, and it gives
 //! the Post-Pruning Optimizer a CUTLASS-exportable variant.
 
+use std::time::Instant;
+
 use crate::model::config::Proj;
-use crate::model::ModelWeights;
+use crate::model::{LayerWeights, ModelWeights};
 use crate::rank::ActivationStats;
-use crate::tensor::Tensor;
+use crate::tensor::{ProjStorage, Tensor};
 
 /// Prune one projection to the N:M pattern along the input (row) axis.
 /// `scores` follow unstructured::scores conventions (higher = keep).
@@ -37,6 +39,38 @@ pub fn nm_prune_projection(w: &mut Tensor, scores: &[f64], n: usize, m: usize) {
     }
 }
 
+/// N:M-prune one layer's projections (Wanda scores when activation
+/// stats are given, magnitude otherwise) — the layer-local unit shared
+/// by [`prune_nm`] and the streaming pipeline. Returns
+/// (rank_µs, prune_µs).
+pub fn nm_prune_layer(
+    layer: &mut LayerWeights,
+    acts: Option<&[Vec<f32>]>,
+    n: usize,
+    m: usize,
+) -> (u64, u64) {
+    let (mut rank_us, mut prune_us) = (0u64, 0u64);
+    for (pi, &p) in Proj::all().iter().enumerate() {
+        let act = acts.map(|a| a[pi].as_slice());
+        let w = layer.proj_mut(p);
+        let t = Instant::now();
+        let sc = super::unstructured::scores(
+            w,
+            act,
+            if act.is_some() {
+                super::Metric::Wanda
+            } else {
+                super::Metric::Magnitude
+            },
+        );
+        rank_us += t.elapsed().as_micros() as u64;
+        let t = Instant::now();
+        nm_prune_projection(w, &sc, n, m);
+        prune_us += t.elapsed().as_micros() as u64;
+    }
+    (rank_us, prune_us)
+}
+
 /// 2:4 pattern over every projection (the CUTLASS-accelerated 50 %).
 pub fn prune_nm(
     model: &mut ModelWeights,
@@ -44,21 +78,20 @@ pub fn prune_nm(
     n: usize,
     m: usize,
 ) {
-    for l in 0..model.layers.len() {
-        for (pi, &p) in Proj::all().iter().enumerate() {
-            let act = stats.map(|s| s.act_sq[l][pi].as_slice());
-            let w = model.layers[l].proj_mut(p);
-            let sc = super::unstructured::scores(
-                w,
-                act,
-                if act.is_some() {
-                    super::Metric::Wanda
-                } else {
-                    super::Metric::Magnitude
-                },
-            );
-            nm_prune_projection(w, &sc, n, m);
-        }
+    for (l, layer) in model.layers.iter_mut().enumerate() {
+        let acts = stats.map(|s| s.act_sq[l].as_slice());
+        nm_prune_layer(layer, acts, n, m);
+    }
+}
+
+/// [`check_nm`] through any storage backend: sealed (f16/CSR)
+/// projections are decoded to dense first, so the N:M gate also covers
+/// layers the streaming pipeline sealed to CSR. f16 rounding can only
+/// flush values *to* zero, so sealing never breaks a valid pattern.
+pub fn check_nm_storage(s: &ProjStorage, n: usize, m: usize) -> bool {
+    match s {
+        ProjStorage::DenseF32(t) => check_nm(t, n, m),
+        sealed => check_nm(&sealed.to_dense(), n, m),
     }
 }
 

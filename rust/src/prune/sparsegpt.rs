@@ -9,9 +9,12 @@
 //!   4. sequential OBS update: zeroing (j,o) compensates the remaining
 //!      rows r>j by  w[r,o] -= (w[j,o]/H⁻¹[j,j])·H⁻¹[r,j].
 
+use std::sync::Arc;
+use std::time::Instant;
+
 use crate::model::capture::HessianStats;
 use crate::model::config::Proj;
-use crate::model::ModelWeights;
+use crate::model::{LayerWeights, ModelWeights};
 use crate::prune::planner::PruningPlan;
 use crate::tensor::Tensor;
 use crate::util::threadpool::par_for;
@@ -73,9 +76,21 @@ pub fn sparsegpt_prune_projection(
     gram: &Tensor,
     target: f64,
 ) {
+    sparsegpt_prune_projection_timed(w, gram, target);
+}
+
+/// [`sparsegpt_prune_projection`] returning (rank_µs, prune_µs):
+/// Hessian inversion + saliency + mask selection count as ranking, the
+/// sequential OBS sweep + write-back as pruning.
+pub fn sparsegpt_prune_projection_timed(
+    w: &mut Tensor,
+    gram: &Tensor,
+    target: f64,
+) -> (u64, u64) {
+    let t_rank = Instant::now();
     let (k, m) = (w.shape[0], w.shape[1]);
     if target <= 0.0 {
-        return;
+        return (t_rank.elapsed().as_micros() as u64, 0);
     }
     // dampened Hessian in f64
     let mut h = vec![0f64; k * k];
@@ -97,8 +112,10 @@ pub fn sparsegpt_prune_projection(
             // fall back to magnitude masking if H is degenerate
             let sc: Vec<f64> =
                 w.data.iter().map(|x| x.abs() as f64).collect();
+            let rank_us = t_rank.elapsed().as_micros() as u64;
+            let t_prune = Instant::now();
             super::unstructured::mask_lowest(w, &sc, target);
-            return;
+            return (rank_us, t_prune.elapsed().as_micros() as u64);
         }
     };
     // saliency metric and mask selection
@@ -112,7 +129,7 @@ pub fn sparsegpt_prune_projection(
     }
     let n_prune = ((k * m) as f64 * target).round() as usize;
     if n_prune == 0 {
-        return;
+        return (t_rank.elapsed().as_micros() as u64, 0);
     }
     let mut idx: Vec<u32> = (0..(k * m) as u32).collect();
     idx.select_nth_unstable_by(n_prune.min(k * m) - 1, |&a, &b| {
@@ -124,6 +141,8 @@ pub fn sparsegpt_prune_projection(
     for &i in &idx[..n_prune.min(k * m)] {
         mask[i as usize] = true;
     }
+    let rank_us = t_rank.elapsed().as_micros() as u64;
+    let t_prune = Instant::now();
     // sequential OBS update, parallel over output columns
     let wcols = std::sync::Mutex::new(&mut w.data);
     {
@@ -168,6 +187,27 @@ pub fn sparsegpt_prune_projection(
             }
         }
     }
+    (rank_us, t_prune.elapsed().as_micros() as u64)
+}
+
+/// SparseGPT-prune one layer against its per-projection `targets` and
+/// Gram row (`HessianStats::gram[l]`) — the layer-local unit shared by
+/// [`prune_sparsegpt`] and the streaming pipeline. Returns
+/// (rank_µs, prune_µs).
+pub fn sparsegpt_prune_layer(
+    layer: &mut LayerWeights,
+    targets: &[f64],
+    grams: &[Arc<Tensor>],
+) -> (u64, u64) {
+    let (mut rank_us, mut prune_us) = (0u64, 0u64);
+    for (pi, &p) in Proj::all().iter().enumerate() {
+        let gram: &Tensor = &grams[pi];
+        let w = layer.proj_mut(p);
+        let (r, u) = sparsegpt_prune_projection_timed(w, gram, targets[pi]);
+        rank_us += r;
+        prune_us += u;
+    }
+    (rank_us, prune_us)
 }
 
 /// Apply the plan with SparseGPT to every projection.
@@ -176,13 +216,8 @@ pub fn prune_sparsegpt(
     plan: &PruningPlan,
     hess: &HessianStats,
 ) {
-    for l in 0..m.layers.len() {
-        for (pi, &p) in Proj::all().iter().enumerate() {
-            let target = plan.targets[l][pi];
-            let gram = hess.gram[l][pi].clone();
-            let w = m.layers[l].proj_mut(p);
-            sparsegpt_prune_projection(w, &gram, target);
-        }
+    for (l, layer) in m.layers.iter_mut().enumerate() {
+        sparsegpt_prune_layer(layer, &plan.targets[l], &hess.gram[l]);
     }
 }
 

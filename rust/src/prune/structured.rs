@@ -12,6 +12,8 @@
 //! group's members (q,k,v,o → head fraction; gate,up,down → channel
 //! fraction) because a group removal affects all of them at once.
 
+use std::time::Instant;
+
 use crate::model::config::Proj;
 use crate::model::{LayerWeights, ModelWeights};
 use crate::prune::planner::PruningPlan;
@@ -116,6 +118,16 @@ pub fn slice_groups(
     }
 }
 
+/// Per-projection plan targets → (head fraction, channel fraction):
+/// a group removal affects all its member projections at once, so the
+/// head fraction is the mean of the q,k,v,o targets and the channel
+/// fraction the mean of gate,up,down.
+pub fn plan_fracs(targets: &[f64]) -> (f64, f64) {
+    let head_frac = (targets[0] + targets[1] + targets[2] + targets[3]) / 4.0;
+    let chan_frac = (targets[4] + targets[5] + targets[6]) / 3.0;
+    (head_frac, chan_frac)
+}
+
 /// Structurally prune one layer to `head_frac` / `chan_frac` removal.
 pub fn prune_layer_structured(
     l: &mut LayerWeights,
@@ -123,45 +135,64 @@ pub fn prune_layer_structured(
     head_frac: f64,
     chan_frac: f64,
 ) {
+    prune_layer_structured_timed(l, head_dim, head_frac, chan_frac);
+}
+
+/// [`prune_layer_structured`] returning (rank_µs, prune_µs): group
+/// importance scoring time vs matrix slicing time — the pipeline's
+/// per-stage accounting.
+pub fn prune_layer_structured_timed(
+    l: &mut LayerWeights,
+    head_dim: usize,
+    head_frac: f64,
+    chan_frac: f64,
+) -> (u64, u64) {
+    let (mut rank_us, mut prune_us) = (0u64, 0u64);
     // ---- heads
     let n_heads = l.kept_heads.len();
     let keep_h = ((n_heads as f64) * (1.0 - head_frac)).round() as usize;
     let keep_h = keep_h.clamp(1, n_heads);
     if keep_h < n_heads {
+        let t = Instant::now();
         let imp = head_importance(l, head_dim);
         let kept = keep_top(&imp, keep_h);
+        rank_us += t.elapsed().as_micros() as u64;
+        let t = Instant::now();
         for p in [Proj::Q, Proj::K, Proj::V] {
             *l.proj_mut(p) = slice_groups(l.proj_dense(p), &kept, head_dim, 1);
         }
         *l.proj_mut(Proj::O) =
             slice_groups(l.proj_dense(Proj::O), &kept, head_dim, 0);
         l.kept_heads = kept.iter().map(|&k| l.kept_heads[k]).collect();
+        prune_us += t.elapsed().as_micros() as u64;
     }
     // ---- channels
     let n_ch = l.kept_channels.len();
     let keep_c = ((n_ch as f64) * (1.0 - chan_frac)).round() as usize;
     let keep_c = keep_c.clamp(1, n_ch);
     if keep_c < n_ch {
+        let t = Instant::now();
         let imp = channel_importance(l);
         let kept = keep_top(&imp, keep_c);
+        rank_us += t.elapsed().as_micros() as u64;
+        let t = Instant::now();
         for p in [Proj::Gate, Proj::Up] {
             *l.proj_mut(p) = slice_groups(l.proj_dense(p), &kept, 1, 1);
         }
         *l.proj_mut(Proj::Down) =
             slice_groups(l.proj_dense(Proj::Down), &kept, 1, 0);
         l.kept_channels = kept.iter().map(|&k| l.kept_channels[k]).collect();
+        prune_us += t.elapsed().as_micros() as u64;
     }
+    (rank_us, prune_us)
 }
 
-/// Apply the plan with structured pruning: per layer, the head fraction
-/// is the mean of the q,k,v,o targets and the channel fraction the mean
-/// of gate,up,down.
+/// Apply the plan with structured pruning (see [`plan_fracs`] for the
+/// per-layer group fractions).
 pub fn prune_structured(m: &mut ModelWeights, plan: &PruningPlan) {
     let head_dim = m.cfg.head_dim;
     for (l, layer) in m.layers.iter_mut().enumerate() {
-        let t = &plan.targets[l];
-        let head_frac = (t[0] + t[1] + t[2] + t[3]) / 4.0;
-        let chan_frac = (t[4] + t[5] + t[6]) / 3.0;
+        let (head_frac, chan_frac) = plan_fracs(&plan.targets[l]);
         prune_layer_structured(layer, head_dim, head_frac, chan_frac);
     }
 }

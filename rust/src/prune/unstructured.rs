@@ -8,8 +8,10 @@
 //! zeros are introduced, so `model_bytes()` stays constant while
 //! `live_proj_params()` drops.
 
+use std::time::Instant;
+
 use crate::model::config::Proj;
-use crate::model::ModelWeights;
+use crate::model::{LayerWeights, ModelWeights};
 use crate::prune::planner::PruningPlan;
 use crate::rank::ActivationStats;
 use crate::tensor::Tensor;
@@ -73,6 +75,31 @@ pub fn scores(
     s
 }
 
+/// Mask one layer's projections to their per-projection `targets` —
+/// the layer-local unit both the sequential entry point and the
+/// streaming pipeline dispatch. `acts` is the layer's act² row
+/// (`ActivationStats::act_sq[l]`). Returns (rank_µs, prune_µs):
+/// scoring time vs mask-application time.
+pub fn prune_layer_unstructured(
+    layer: &mut LayerWeights,
+    targets: &[f64],
+    acts: Option<&[Vec<f32>]>,
+    metric: Metric,
+) -> (u64, u64) {
+    let (mut rank_us, mut prune_us) = (0u64, 0u64);
+    for (pi, &p) in Proj::all().iter().enumerate() {
+        let act = acts.map(|a| a[pi].as_slice());
+        let w = layer.proj_mut(p);
+        let t = Instant::now();
+        let sc = scores(w, act, metric);
+        rank_us += t.elapsed().as_micros() as u64;
+        let t = Instant::now();
+        mask_lowest(w, &sc, targets[pi]);
+        prune_us += t.elapsed().as_micros() as u64;
+    }
+    (rank_us, prune_us)
+}
+
 /// Apply the plan with unstructured masking to every projection.
 pub fn prune_unstructured(
     m: &mut ModelWeights,
@@ -80,14 +107,9 @@ pub fn prune_unstructured(
     stats: Option<&ActivationStats>,
     metric: Metric,
 ) {
-    for l in 0..m.layers.len() {
-        for (pi, &p) in Proj::all().iter().enumerate() {
-            let target = plan.targets[l][pi];
-            let act = stats.map(|s| s.act_sq[l][pi].as_slice());
-            let w = m.layers[l].proj_mut(p);
-            let sc = scores(w, act, metric);
-            mask_lowest(w, &sc, target);
-        }
+    for (l, layer) in m.layers.iter_mut().enumerate() {
+        let acts = stats.map(|s| s.act_sq[l].as_slice());
+        prune_layer_unstructured(layer, &plan.targets[l], acts, metric);
     }
 }
 

@@ -141,8 +141,21 @@ where
     R: Send,
     F: Fn(&T) -> R + Sync,
 {
+    par_map_with(items, n_threads(), f)
+}
+
+/// [`par_map`] with an explicit worker count. The streaming pruning
+/// pipeline sweeps 1/2/4/8 workers and its determinism tests pin the
+/// count; results always come back in item order regardless of which
+/// worker computed them.
+pub fn par_map_with<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
     let n = items.len();
-    let threads = n_threads().min(n.max(1));
+    let threads = workers.max(1).min(n.max(1));
     if threads <= 1 || n <= 1 {
         return items.iter().map(f).collect();
     }
@@ -220,5 +233,15 @@ mod tests {
         let items: Vec<usize> = (0..257).collect();
         let out = par_map(&items, |&x| x * 2);
         assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_with_order_any_worker_count() {
+        let items: Vec<usize> = (0..113).collect();
+        let want: Vec<usize> = items.iter().map(|x| x * 3 + 1).collect();
+        for workers in [1, 2, 8, 64] {
+            let out = par_map_with(&items, workers, |&x| x * 3 + 1);
+            assert_eq!(out, want, "workers={workers}");
+        }
     }
 }

@@ -1,0 +1,202 @@
+//! Parity/determinism harness for the streaming layer-parallel
+//! production pipeline: for every pruner, `prune::pipeline` must be
+//! BIT-identical — weights, masks, kept-structure metadata, sealed
+//! storage encodings — to the sequential reference
+//! (`prune_*` + `compact()`) at any worker count. Both paths read the
+//! same calibration snapshot, so any divergence is a pipeline bug, not
+//! a statistics difference.
+
+use mosaic::model::capture::capture_calibration;
+use mosaic::model::weights::testutil::random_model_sized;
+use mosaic::model::ModelWeights;
+use mosaic::prune::pipeline::{
+    produce_with_snapshot, sequential_reference, ProduceOpts, PrunerKind,
+};
+use mosaic::prune::planner::PruningPlan;
+use mosaic::prune::semistructured::check_nm_storage;
+use mosaic::prune::{plan, CompositeOpts, Uniformity};
+use mosaic::rank::{normalize_rank, GlobalRank};
+use mosaic::util::rng::Pcg32;
+
+fn test_model(seed: u64, layers: usize) -> ModelWeights {
+    random_model_sized(seed, layers, 16, 2, 40, 64, 16)
+}
+
+fn calib_samples() -> Vec<Vec<u16>> {
+    (0..4)
+        .map(|s| {
+            (0..12)
+                .map(|i| ((i * 7 + s * 13) % 60 + 2) as u16)
+                .collect()
+        })
+        .collect()
+}
+
+/// Non-uniform projection-level plan so per-projection targets differ
+/// (the parity claim must hold beyond the uniform case).
+fn test_plan(seed: u64, layers: usize, p: f64) -> PruningPlan {
+    let mut rng = Pcg32::seeded(seed);
+    let mut rank: Vec<Vec<f64>> = (0..layers)
+        .map(|_| (0..7).map(|_| rng.f64() * 3.0).collect())
+        .collect();
+    normalize_rank(&mut rank);
+    plan(&GlobalRank { rank, alpha: 5.0 }, p, Uniformity::Projection)
+}
+
+fn assert_models_identical(
+    want: &ModelWeights,
+    got: &ModelWeights,
+    kind: &str,
+    workers: usize,
+) {
+    let tag = format!("{kind} workers={workers}");
+    assert_eq!(want.layers.len(), got.layers.len(), "{tag}: layer count");
+    assert_eq!(want.embed.data, got.embed.data, "{tag}: embed");
+    assert_eq!(want.lm_head.data, got.lm_head.data, "{tag}: lm_head");
+    assert_eq!(want.final_norm, got.final_norm, "{tag}: final_norm");
+    for (li, (a, b)) in
+        want.layers.iter().zip(got.layers.iter()).enumerate()
+    {
+        assert_eq!(a.kept_heads, b.kept_heads, "{tag} l{li}: kept_heads");
+        assert_eq!(
+            a.kept_channels, b.kept_channels,
+            "{tag} l{li}: kept_channels"
+        );
+        assert_eq!(a.attn_norm, b.attn_norm, "{tag} l{li}: attn_norm");
+        assert_eq!(a.ffn_norm, b.ffn_norm, "{tag} l{li}: ffn_norm");
+        for (pi, (x, y)) in a.projs.iter().zip(b.projs.iter()).enumerate()
+        {
+            assert!(
+                x == y,
+                "{tag} l{li} p{pi}: storage mismatch ({} vs {})",
+                x.encoding_name(),
+                y.encoding_name()
+            );
+        }
+    }
+}
+
+#[test]
+fn pipeline_bit_identical_to_sequential_all_pruners() {
+    let layers = 6;
+    let m = test_model(7001, layers);
+    let pl = test_plan(11, layers, 0.6);
+    let snap = capture_calibration(&m, &calib_samples(), true);
+    let stats = &snap.stats;
+    let hess = snap.hess.as_ref().expect("grams requested");
+    let kinds = [
+        PrunerKind::Magnitude,
+        PrunerKind::Wanda,
+        PrunerKind::SparseGpt,
+        PrunerKind::SemiStructured { n: 2, m: 4 },
+        PrunerKind::Structured,
+        // the Mosaic composite rides along in both flavours
+        PrunerKind::Composite(CompositeOpts {
+            use_obs: true,
+            ..Default::default()
+        }),
+        PrunerKind::Composite(CompositeOpts::default()),
+    ];
+    for kind in kinds {
+        let want = sequential_reference(&kind, &m, &pl, stats, hess);
+        for workers in [1usize, 2, 8] {
+            let rep = produce_with_snapshot(
+                &m,
+                &pl,
+                Some(stats),
+                Some(hess),
+                &ProduceOpts::new(kind).with_workers(workers),
+            );
+            assert_models_identical(
+                &want,
+                &rep.model,
+                kind.name(),
+                workers,
+            );
+            assert_eq!(
+                rep.sealed_bytes,
+                want.resident_bytes(),
+                "{} workers={workers}: sealed size",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn streaming_peak_stays_below_dense_model() {
+    // the memory story: sequential production clones the FULL dense
+    // model; the pipeline's working set is sealed prefix + in-flight
+    // dense layers, which must stay below one dense model.
+    let layers = 12;
+    let m = test_model(7002, layers);
+    let pl = PruningPlan::uniform(layers, 0.5);
+    let rep = produce_with_snapshot(
+        &m,
+        &pl,
+        None,
+        None,
+        &ProduceOpts::new(PrunerKind::Magnitude).with_workers(2),
+    );
+    let dense = m.model_bytes();
+    assert!(
+        rep.peak_resident_bytes < dense,
+        "peak {} must stay below dense {}",
+        rep.peak_resident_bytes,
+        dense
+    );
+    assert!(rep.sealed_bytes < dense, "sealed output must be smaller");
+    // every projection sealed, not just some (is_compacted is an ANY)
+    assert!(rep
+        .model
+        .layers
+        .iter()
+        .flat_map(|l| l.projs.iter())
+        .all(|s| !s.is_dense_f32()));
+    assert!(
+        rep.peak_resident_bytes >= rep.sealed_bytes,
+        "peak covers at least the sealed output"
+    );
+}
+
+#[test]
+fn nm_pattern_survives_pipeline_seal_including_csr() {
+    // closes the gap where check_nm only ever ran on dense tensors:
+    // after pipeline N:M pruning every SEALED projection must still
+    // satisfy the pattern — including CSR layers (decode-then-check).
+    let layers = 4;
+    let m = test_model(7003, layers);
+    let pl = PruningPlan::uniform(layers, 0.5); // N:M ignores targets
+    let snap = capture_calibration(&m, &calib_samples(), false);
+    for (n, mm) in [(2usize, 4usize), (1, 8)] {
+        let rep = produce_with_snapshot(
+            &m,
+            &pl,
+            Some(&snap.stats),
+            None,
+            &ProduceOpts::new(PrunerKind::SemiStructured { n, m: mm })
+                .with_workers(2),
+        );
+        for (li, l) in rep.model.layers.iter().enumerate() {
+            for (pi, s) in l.projs.iter().enumerate() {
+                assert!(!s.is_dense_f32(), "l{li} p{pi} must be sealed");
+                assert!(
+                    check_nm_storage(s, n, mm),
+                    "{n}:{mm} violated at l{li} p{pi} (enc {})",
+                    s.encoding_name()
+                );
+            }
+        }
+        if (n, mm) == (1, 8) {
+            // 87.5 % sparsity clears the CSR size crossover
+            assert!(
+                rep.model
+                    .layers
+                    .iter()
+                    .flat_map(|l| l.projs.iter())
+                    .any(|s| s.encoding_name() == "csr"),
+                "1:8 pruning should seal projections to CSR"
+            );
+        }
+    }
+}

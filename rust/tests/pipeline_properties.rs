@@ -210,6 +210,109 @@ fn storage_roundtrip_logits_within_f16_tolerance() {
 }
 
 #[test]
+fn produce_composite_targets_and_roundtrip() {
+    // Property over the streaming pipeline (satellite of the
+    // production-pipeline PR): after `produce` with a composite plan,
+    // (a) removed_fraction lands on the plan's p (group rounding is
+    // coarse at unit scale), (b) projection sparsity behaves —
+    // exactly p for the pure-mask pruner, near the residual
+    // unstructured share s_u for the composite — and (c) every sealed
+    // projection round-trips through export_model/load_encoded
+    // unchanged, byte for byte.
+    use mosaic::prune::composite::removed_fraction;
+    use mosaic::prune::pipeline::{produce, ProduceOpts, PrunerKind};
+    use mosaic::prune::planner::PruningPlan;
+    use mosaic::prune::unstructured::projection_sparsity;
+
+    let samples: Vec<Vec<u16>> = (0..3)
+        .map(|s| {
+            (0..10)
+                .map(|i| ((i * 5 + s * 11) % 60 + 2) as u16)
+                .collect()
+        })
+        .collect();
+    // p values where group rounding at unit scale (2 heads, 40
+    // channels) keeps the structural share realizable
+    for (trial, p) in [(0u64, 0.6), (1, 0.65), (2, 0.7)] {
+        let m = random_model(6000 + trial);
+        let prunable = m.cfg.prunable_params();
+        let pl = PruningPlan::uniform(m.cfg.n_layers, p);
+
+        // pure-mask pruner: measured sparsity must hit p tightly
+        let rep_mag = produce(
+            &m,
+            &pl,
+            &samples,
+            &ProduceOpts::new(PrunerKind::Magnitude).with_workers(4),
+        );
+        let s = projection_sparsity(&rep_mag.model);
+        assert!(
+            (s - p).abs() < 0.03,
+            "trial {trial} magnitude sparsity {s} vs target {p}"
+        );
+
+        // composite plan: removed fraction lands on p; kept-structure
+        // sparsity sits near the residual share s_u (the structural
+        // step preferentially removes hollowed-out groups, so it may
+        // come in under s_u — never far over)
+        let rep = produce(
+            &m,
+            &pl,
+            &samples,
+            &ProduceOpts::new(PrunerKind::Composite(
+                CompositeOpts::default(),
+            ))
+            .with_workers(4),
+        );
+        let removed = removed_fraction(&rep.model, prunable);
+        assert!(
+            (removed - p).abs() < 0.12,
+            "trial {trial}: removed {removed} vs target {p}"
+        );
+        let share = mosaic::prune::composite::DEFAULT_STRUCT_SHARE;
+        let s_u = 1.0 - (1.0 - p) / (1.0 - share * p);
+        let got = projection_sparsity(&rep.model);
+        assert!(
+            got < s_u + 0.05 && got > s_u - 0.25,
+            "trial {trial}: kept-structure sparsity {got} vs s_u {s_u}"
+        );
+
+        // sealed projections round-trip through the deploy format
+        // unchanged (f16/CSR bytes are canonical)
+        let path = std::env::temp_dir()
+            .join(format!("mosaic_produce_rt_{trial}.bin"));
+        mosaic::deploy::export_model(&rep.model, &path).unwrap();
+        let loaded = mosaic::deploy::load_encoded(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded.layers.len(), rep.model.layers.len());
+        for (li, (a, b)) in rep
+            .model
+            .layers
+            .iter()
+            .zip(loaded.layers.iter())
+            .enumerate()
+        {
+            assert_eq!(a.kept_heads, b.kept_heads, "trial {trial} l{li}");
+            assert_eq!(
+                a.kept_channels, b.kept_channels,
+                "trial {trial} l{li}"
+            );
+            for (pi, (x, y)) in
+                a.projs.iter().zip(b.projs.iter()).enumerate()
+            {
+                assert!(
+                    x == y,
+                    "trial {trial} l{li} p{pi}: projection changed \
+                     across export/load ({} vs {})",
+                    x.encoding_name(),
+                    y.encoding_name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn quantizer_error_monotone_in_bits_sweep() {
     for seed in 0..5 {
         let m = random_model(3000 + seed);
