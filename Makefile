@@ -4,7 +4,7 @@
 
 CARGO ?= cargo
 
-.PHONY: build test fmt check bench bench-serve bench-produce
+.PHONY: build test fmt check bench bench-serve bench-produce serve-smoke
 
 build:
 	$(CARGO) build --release
@@ -32,9 +32,17 @@ bench:
 	$(CARGO) bench
 
 # Serving perf trajectory: runs the continuous-batching bench and emits
-# machine-readable BENCH_serve.json (tok/s, occupancy, resident bytes).
+# machine-readable BENCH_serve.json (tok/s, occupancy, resident bytes;
+# includes registry rows: dense vs sealed variant from one process).
 bench-serve:
 	$(CARGO) bench --bench serve_throughput
+
+# End-to-end serve smoke (artifact-free): registry server on
+# random-weights models, greedy + sampled + streaming + stop-token
+# requests driven through the typed client over real TCP. Wired into
+# pytest via python/tests/test_serve_smoke.py.
+serve-smoke:
+	$(CARGO) run --release --example serve_client
 
 # Model-production perf trajectory: sequential whole-model pruning vs
 # the streaming layer-parallel pipeline at 1/2/4/8 workers; emits

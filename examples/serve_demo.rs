@@ -10,7 +10,7 @@ use std::time::{Duration, Instant};
 use mosaic::coordinator::Mosaic;
 use mosaic::data::trace::{generate, percentiles, Arrival, TraceConfig};
 use mosaic::prune::{Category, Uniformity};
-use mosaic::serve::{ServeConfig, Server};
+use mosaic::serve::{wait_reply, ServeConfig, Server};
 
 fn drive(server: &Server, trace: &[mosaic::data::trace::TraceItem])
          -> (f64, f64, f64, f64) {
@@ -31,7 +31,7 @@ fn drive(server: &Server, trace: &[mosaic::data::trace::TraceItem])
     }
     let mut tokens = 0usize;
     for (sent, rx) in pending {
-        if let Ok(reply) = rx.recv_timeout(Duration::from_secs(60)) {
+        if let Ok(reply) = wait_reply(&rx, Duration::from_secs(60)) {
             latencies.push(sent.elapsed().as_secs_f64() * 1e3);
             tokens += reply.tokens.len();
         }

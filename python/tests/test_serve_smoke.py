@@ -1,0 +1,33 @@
+"""Wire `make serve-smoke` into the pytest-driven run: start a
+registry server on random-weights models and drive greedy, seeded-
+sampled, streaming and stop-token requests end-to-end through the
+typed rust client (examples/serve_client.rs asserts the protocol v1
+contract and prints SERVE-SMOKE OK on success).
+
+Skips when the rust toolchain is not present in the image, mirroring
+test_make_check.py."""
+import os
+import shutil
+import subprocess
+
+import pytest
+
+ROOT = os.path.dirname(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+)
+
+
+def test_serve_smoke():
+    if shutil.which("cargo") is None or shutil.which("make") is None:
+        pytest.skip("cargo/make not available in this image")
+    r = subprocess.run(
+        ["make", "-C", ROOT, "serve-smoke"],
+        capture_output=True,
+        text=True,
+        timeout=3600,
+    )
+    assert r.returncode == 0, (
+        f"make serve-smoke failed\n--- stdout ---\n{r.stdout[-4000:]}"
+        f"\n--- stderr ---\n{r.stderr[-4000:]}"
+    )
+    assert "SERVE-SMOKE OK" in r.stdout, r.stdout[-4000:]

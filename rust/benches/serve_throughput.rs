@@ -22,7 +22,9 @@ use mosaic::data::trace::{generate, percentiles, Arrival, TraceConfig};
 use mosaic::model::weights::testutil::random_model_sized;
 use mosaic::prune::unstructured::{mask_lowest, scores, Metric};
 use mosaic::prune::{Category, Uniformity};
-use mosaic::serve::{ServeConfig, Server};
+use mosaic::serve::{
+    wait_reply, ModelRegistry, ServeConfig, Server, SubmitSpec,
+};
 use mosaic::util::json::Json;
 
 struct DriveOut {
@@ -36,6 +38,16 @@ struct DriveOut {
 
 fn drive(server: &Server, trace: &[mosaic::data::trace::TraceItem])
          -> DriveOut {
+    drive_model(server, None, trace)
+}
+
+/// Replay `trace` against one registered model (None = the default);
+/// per-step stats come from that model's engine.
+fn drive_model(
+    server: &Server,
+    model: Option<&str>,
+    trace: &[mosaic::data::trace::TraceItem],
+) -> DriveOut {
     let t0 = Instant::now();
     let mut pending = Vec::new();
     for item in trace {
@@ -45,29 +57,36 @@ fn drive(server: &Server, trace: &[mosaic::data::trace::TraceItem])
             std::thread::sleep(sleep);
         }
         let sent = Instant::now();
-        if let Ok(rx) = server.submit(item.prompt.clone(), item.max_new) {
+        let spec = SubmitSpec {
+            model: model.map(String::from),
+            ..SubmitSpec::greedy(&item.prompt, item.max_new)
+        };
+        if let Ok(rx) = server.submit_spec(spec) {
             pending.push((sent, rx));
         }
     }
     let mut lat = Vec::new();
     let mut tokens = 0usize;
     for (sent, rx) in pending {
-        if let Ok(r) = rx.recv_timeout(Duration::from_secs(60)) {
+        if let Ok(r) = wait_reply(&rx, Duration::from_secs(60)) {
             lat.push(sent.elapsed().as_secs_f64() * 1e3);
             tokens += r.tokens.len();
         }
     }
     let wall = t0.elapsed().as_secs_f64();
-    let steps = server.stats.batch_steps.load(Ordering::Relaxed);
-    let step_us =
-        server.stats.step_wall_us.load(Ordering::Relaxed) as f64
-            / steps.max(1) as f64;
+    let stats = match model {
+        None => server.stats.clone(),
+        Some(name) => server.model_stats(name).expect("registered"),
+    };
+    let steps = stats.batch_steps.load(Ordering::Relaxed);
+    let step_us = stats.step_wall_us.load(Ordering::Relaxed) as f64
+        / steps.max(1) as f64;
     let (p50, p95, _) = percentiles(lat);
     DriveOut {
         tok_per_s: tokens as f64 / wall,
         p50_ms: p50,
         p95_ms: p95,
-        occupancy: server.stats.mean_occupancy(),
+        occupancy: stats.mean_occupancy(),
         // engine-side wall per decode-carrying batch pass (excludes
         // queue/idle time — the sublinear-growth signal)
         step_us,
@@ -207,6 +226,56 @@ fn main() -> anyhow::Result<()> {
             summary.push(row);
             srv.shutdown();
         }
+    }
+
+    // ---- registry (artifact-free): dense and a sealed 70 %-pruned
+    // variant served from ONE process, routed per request — the
+    // family-serving deployment story, with resident bytes per model
+    println!("\n— registry: dense + sealed from one process —");
+    header(&["model", "tok/s", "p95-ms", "res-KB", "occ"]);
+    {
+        // unmasked twin of the sweep model: truly dense weights next
+        // to the sealed 70 %-pruned variant
+        let dense_unmasked =
+            random_model_sized(9, 4, 256, 8, 704, 512, 128);
+        let mut reg = ModelRegistry::new();
+        reg.register("dense", dense_unmasked)?;
+        reg.register("comp70-seal", sealed.clone())?;
+        let srv = Server::start_registry(
+            reg,
+            ServeConfig {
+                max_batch: 6,
+                max_queue: 256,
+                ..Default::default()
+            },
+            0,
+        )?;
+        let residents: Vec<(String, usize)> = srv
+            .models()
+            .iter()
+            .map(|mi| (mi.name.clone(), mi.resident_bytes))
+            .collect();
+        for (mname, resident) in residents {
+            let d = drive_model(&srv, Some(&mname), &trace);
+            println!(
+                "{mname:>12}{:>12.0}{:>12.2}{:>12}{:>12.2}",
+                d.tok_per_s,
+                d.p95_ms,
+                resident / 1024,
+                d.occupancy
+            );
+            let row = rec(&[
+                ("section", Json::str("registry")),
+                ("model", Json::str(&mname)),
+                ("tok_per_s", Json::num(d.tok_per_s)),
+                ("p95_ms", Json::num(d.p95_ms)),
+                ("resident_bytes", Json::num(resident as f64)),
+                ("occupancy", Json::num(d.occupancy)),
+            ]);
+            b.row("registry", row.clone());
+            summary.push(row);
+        }
+        srv.shutdown();
     }
 
     // machine-readable perf-trajectory file (make bench-serve)

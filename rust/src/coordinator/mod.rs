@@ -248,6 +248,27 @@ impl Mosaic {
         Ok(rep)
     }
 
+    /// Produce a sealed variant with the streaming pipeline and
+    /// publish it into a serving registry under `name` — the Mosaic
+    /// family story end-to-end: one dense checkpoint, several named
+    /// deployable variants in one server process. The sealed model is
+    /// *moved* into the registry (no copy); the production wall time
+    /// and the registered variant's resident bytes come back for
+    /// reporting.
+    pub fn produce_into(
+        &mut self,
+        registry: &mut crate::serve::ModelRegistry,
+        name: &str,
+        plan: &PruningPlan,
+        opts: &prune::ProduceOpts,
+    ) -> Result<(f64, usize)> {
+        let rep = self.produce(plan, opts)?;
+        let (wall_ms, resident) =
+            (rep.wall_ms, rep.model.resident_bytes());
+        registry.register(name, rep.model)?;
+        Ok((wall_ms, resident))
+    }
+
     /// Fast Wanda-only unstructured prune (no Hessian) — used by sweeps.
     pub fn prune_wanda(
         &mut self,

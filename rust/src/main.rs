@@ -8,6 +8,11 @@
 //!   mosaic eval    --model tl1_7 [--p 0.6 ...]           (PPL + accuracy)
 //!   mosaic finetune --model tl31 --p 0.8 [--steps 80]
 //!   mosaic deploy  --model tl1_7 --p 0.6 --platform P4
+//!   mosaic serve   --model tl1_7
+//!                  [--models dense,composite@0.6,unstructured@0.7,
+//!                            name=path.mosaic,...]   (registry list)
+//!                  [--default-model NAME] [--stream 0|1]
+//!                  [--batch 8] [--queue 64] [--port 7171] [--seal 0|1]
 //!   mosaic pipeline --model tl1_7 --p 0.6                (end-to-end)
 
 use anyhow::{bail, Result};
@@ -259,58 +264,155 @@ fn cmd_deploy(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Serve a (pruned) SLM over TCP with continuous batching.
+/// Serve a registry of model variants over TCP (protocol v1) with
+/// continuous batching per model.
+///
+/// `--models` is a comma-separated registry list of `[name=]source`
+/// entries; a source is `dense` (the checkpoint as-is), a
+/// `<category>@<p>` variant (pruned through the production pipeline
+/// and sealed into f16/CSR storage), or a `.mosaic` deployment file.
+/// `--default-model` picks which entry serves requests without a
+/// "model" field; `--stream 0` refuses streaming requests. Without
+/// `--models`, the legacy `--p`/`--category` flags map onto a
+/// single-entry registry.
 fn cmd_serve(args: &Args) -> Result<()> {
+    use mosaic::prune::{plan, CompositeOpts, ProduceOpts, PrunerKind};
+    use mosaic::serve::{ModelRegistry, ServeConfig, Server};
+
     let mut mo = Mosaic::load(&args.get("model", "tl1_7"))?;
-    let p = args.f64("p", 0.0);
-    let model = if p > 0.0 {
-        let u = parse_uniformity(&args.get("uniformity", "projection"))?;
-        let c = parse_category(&args.get("category", "composite"))?;
-        let n = args.usize("samples", DEFAULT_CALIB_SAMPLES);
-        mo.prune(p, u, c, n)?.0
-    } else {
-        mo.dense.clone()
+    let n = args.usize("samples", DEFAULT_CALIB_SAMPLES);
+    let legacy_p = args.f64("p", 0.0);
+    let specs = args.get(
+        "models",
+        &if legacy_p > 0.0 {
+            format!("{}@{legacy_p}", args.get("category", "composite"))
+        } else {
+            "dense".to_string()
+        },
+    );
+    let u = parse_uniformity(&args.get("uniformity", "projection"))?;
+    // one ranking pass shared by every pruned spec (only the per-spec
+    // plan differs)
+    let mut rank: Option<mosaic::rank::GlobalRank> = None;
+    let mut registry = ModelRegistry::new();
+    for spec in specs.split(',').map(str::trim).filter(|s| !s.is_empty())
+    {
+        let (name_opt, source) = match spec.split_once('=') {
+            Some((n, s)) => (Some(n.to_string()), s),
+            None => (None, spec),
+        };
+        if source == "dense" {
+            // --seal 1 runs even the dense weights on f16 storage;
+            // default 0 serves the exact f32 the quality numbers were
+            // measured on
+            let mut m = mo.dense.clone();
+            if args.usize("seal", 0) != 0 {
+                m.compact();
+            }
+            let name = name_opt.unwrap_or_else(|| "dense".into());
+            println!(
+                "registered '{name}': dense checkpoint ({} KB resident)",
+                m.resident_bytes() / 1024
+            );
+            registry.register(&name, m)?;
+        } else if let Some((cat_s, p_s)) = source.split_once('@') {
+            let cat = parse_category(cat_s)?;
+            let p: f64 = p_s.parse().map_err(|_| {
+                anyhow::anyhow!("bad prune fraction in '{spec}'")
+            })?;
+            let name = name_opt.unwrap_or_else(|| source.to_string());
+            if args.usize("seal", 1) != 0 {
+                // default for pruned variants: production pipeline →
+                // sealed f16/CSR storage, moved into the registry
+                if rank.is_none() {
+                    rank = Some(mo.global_rank(u, n)?);
+                }
+                let pl = plan(rank.as_ref().unwrap(), p, u);
+                let kind = match cat {
+                    Category::Unstructured => PrunerKind::SparseGpt,
+                    Category::Structured => PrunerKind::Structured,
+                    Category::Composite => PrunerKind::Composite(
+                        CompositeOpts {
+                            use_obs: true,
+                            ..Default::default()
+                        },
+                    ),
+                };
+                let opts = ProduceOpts {
+                    n_samples: n,
+                    ..ProduceOpts::new(kind)
+                };
+                let (wall_ms, resident) =
+                    mo.produce_into(&mut registry, &name, &pl, &opts)?;
+                println!(
+                    "registered '{name}': {source} sealed in \
+                     {wall_ms:.0} ms ({} KB resident)",
+                    resident / 1024
+                );
+            } else {
+                // --seal 0: serve the exact f32 pruned weights the
+                // quality numbers were measured on
+                let (m, _) = mo.prune(p, u, cat, n)?;
+                println!(
+                    "registered '{name}': {source} exact f32 \
+                     ({} KB resident)",
+                    m.resident_bytes() / 1024
+                );
+                registry.register(&name, m)?;
+            }
+        } else {
+            let path = std::path::Path::new(source);
+            anyhow::ensure!(
+                path.exists(),
+                "model source '{source}' is neither 'dense', \
+                 '<category>@<p>', nor an existing deployment file"
+            );
+            let name = name_opt.unwrap_or_else(|| {
+                path.file_stem()
+                    .and_then(|s| s.to_str())
+                    .unwrap_or("file")
+                    .to_string()
+            });
+            registry.register_file(&name, path)?;
+            println!("registered '{name}': {}", path.display());
+        }
+    }
+    let default_model = {
+        let d = args.get("default-model", "");
+        (!d.is_empty()).then_some(d)
     };
-    // --seal 1 (default for pruned models): run the serving hot path on
-    // f16/CSR storage — lower resident bytes, faster decode, f16-level
-    // rounding. --seal 0 serves the exact f32 weights the quality
-    // numbers were measured on.
-    let seal = args.usize("seal", if p > 0.0 { 1 } else { 0 }) != 0;
-    let model = if seal {
-        let mut m = model;
-        m.compact();
-        println!("sealed projections into f16/CSR storage (--seal 0 \
-                  serves exact f32)");
-        m
-    } else {
-        model
-    };
-    let port = args.usize("port", 7171) as u16;
-    let cfg = mosaic::serve::ServeConfig {
+    let cfg = ServeConfig {
         max_batch: args.usize("batch", 8),
+        max_queue: args.usize("queue", 64),
+        allow_stream: args.usize("stream", 1) != 0,
+        default_model,
         ..Default::default()
     };
+    let port = args.usize("port", 7171) as u16;
+    let srv = Server::start_registry(registry, cfg, port)?;
     println!(
-        "model resident: {} KB ({} KB as dense f32)",
-        model.resident_bytes() / 1024,
-        model.model_bytes() / 1024
-    );
-    let srv = mosaic::serve::Server::start(model, cfg, port)?;
-    println!(
-        "serving {} (p={p}) on {} — line-JSON: \
-         {{\"prompt\": [..], \"max_new\": n}}",
+        "serving {} on {} — protocol v1 line-JSON: \
+         {{\"prompt\": [..], \"max_new\": n, \"model\": \"name\"?, \
+         \"temperature\"|\"top_k\"|\"top_p\"|\"seed\"?, \
+         \"stop_tokens\": [..]?, \"stream\": true?}} \
+         (v0 requests answered unchanged)",
         mo.name, srv.addr
     );
     println!("press ctrl-c to stop");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(5));
-        println!(
-            "completed {} / rejected {} / tok {} / occupancy {:.2}",
-            srv.stats.completed.load(std::sync::atomic::Ordering::Relaxed),
-            srv.stats.rejected.load(std::sync::atomic::Ordering::Relaxed),
-            srv.stats.tokens_out.load(std::sync::atomic::Ordering::Relaxed),
-            srv.stats.mean_occupancy()
-        );
+        for mi in srv.models() {
+            use std::sync::atomic::Ordering::Relaxed;
+            println!(
+                "  {:<16} completed {} / rejected {} / tok {} / \
+                 occupancy {:.2}",
+                mi.name,
+                mi.stats.completed.load(Relaxed),
+                mi.stats.rejected.load(Relaxed),
+                mi.stats.tokens_out.load(Relaxed),
+                mi.stats.mean_occupancy()
+            );
+        }
     }
 }
 

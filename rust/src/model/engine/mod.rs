@@ -21,8 +21,10 @@
 //! single-stream (CLI / eval) path.
 
 pub mod batch;
+pub mod sampler;
 
 pub use batch::{prefill_into, DecodeBatch, PREFILL_CHUNK};
+pub use sampler::{Sampler, SamplingParams};
 
 use crate::model::config::Proj;
 use crate::model::weights::ModelWeights;

@@ -1,0 +1,251 @@
+//! Per-request token sampling — temperature / top-k / top-p over one
+//! logits row, drawn from a request-owned seeded RNG.
+//!
+//! The serving determinism rule (ARCHITECTURE.md §Serving) extends to
+//! sampled decoding: a [`Sampler`] consumes **only** its own request's
+//! logits row plus its own [`Pcg32`] state, and the batched decode path
+//! produces bit-identical logits rows regardless of batch composition —
+//! so a seeded request generates the same tokens at serving width 1, 2
+//! or 8. Greedy decoding stays the seedless default and never touches
+//! an RNG, so pre-existing greedy outputs are unchanged.
+//!
+//! The filter chain is the conventional one: logits are scaled by
+//! `1/temperature`, restricted to the `top_k` largest (0 = off), then
+//! to the smallest nucleus whose probability mass reaches `top_p`
+//! (1.0 = off), renormalised, and sampled with a single uniform draw.
+//! Where the filters need a candidate ranking it is descending logit
+//! with ascending-index tie-breaks (a total order), and the walk order
+//! of the draw is fixed per parameter set — so the outcome is fully
+//! deterministic in the row and the RNG state.
+
+use crate::util::rng::Pcg32;
+
+/// Request-level sampling knobs. `Default` is temperature 1.0 with both
+/// filters off and seed 0 — what a request gets when it names *any*
+/// sampling field; requests naming none stay greedy (no `Sampler` is
+/// built at all).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplingParams {
+    /// Softmax temperature; must be finite and > 0.
+    pub temperature: f32,
+    /// Keep only the k largest logits (0 = disabled).
+    pub top_k: usize,
+    /// Keep the smallest prefix with cumulative mass >= top_p
+    /// (1.0 = disabled).
+    pub top_p: f32,
+    /// Seed for the request-owned RNG.
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams { temperature: 1.0, top_k: 0, top_p: 1.0, seed: 0 }
+    }
+}
+
+impl SamplingParams {
+    /// Range checks shared by the wire protocol and in-process callers.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.temperature.is_finite() && self.temperature > 0.0) {
+            return Err("temperature must be finite and > 0".into());
+        }
+        if self.temperature > 1e3 {
+            return Err("temperature out of range (0, 1000]".into());
+        }
+        if self.top_k > 65536 {
+            return Err("top_k out of range [1, 65536]".into());
+        }
+        if !(self.top_p > 0.0 && self.top_p <= 1.0) {
+            return Err("top_p out of range (0, 1]".into());
+        }
+        Ok(())
+    }
+}
+
+/// One request's sampling state: the validated params, the seeded RNG,
+/// and a reusable candidate buffer (no per-token allocation after the
+/// first step).
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    params: SamplingParams,
+    rng: Pcg32,
+    /// (token id, working value): logits going in, probabilities after
+    /// the softmax — reused across steps.
+    cand: Vec<(u32, f32)>,
+}
+
+impl Sampler {
+    pub fn new(params: SamplingParams) -> Self {
+        Sampler {
+            params,
+            rng: Pcg32::seeded(params.seed),
+            cand: Vec::new(),
+        }
+    }
+
+    pub fn params(&self) -> &SamplingParams {
+        &self.params
+    }
+
+    /// Draw the next token from one logits row. Exactly one RNG draw
+    /// per call, so a request's token stream depends only on its own
+    /// call count — never on what else shares the batch. Candidates
+    /// are ranked only as far as the filters require: top-k uses an
+    /// O(V + k log k) partition + small sort, pure nucleus needs the
+    /// full ranking, and plain temperature sampling walks the row in
+    /// index order with no ranking at all.
+    pub fn sample(&mut self, logits: &[f32]) -> u16 {
+        debug_assert!(!logits.is_empty());
+        // descending logit, ascending index on ties: a total, input-
+        // order-independent candidate ranking
+        fn rank(a: &(u32, f32), b: &(u32, f32)) -> std::cmp::Ordering {
+            b.1.total_cmp(&a.1).then(a.0.cmp(&b.0))
+        }
+        self.cand.clear();
+        self.cand.extend(
+            logits.iter().enumerate().map(|(i, &v)| (i as u32, v)),
+        );
+        let k = self.params.top_k;
+        let mut n = self.cand.len();
+        if k > 0 && k < n {
+            // the first k entries become exactly the top-k set (the
+            // comparator is total, so the partition is deterministic),
+            // then only those k get sorted
+            self.cand.select_nth_unstable_by(k - 1, rank);
+            n = k;
+            self.cand[..n].sort_unstable_by(rank);
+        } else if self.params.top_p < 1.0 {
+            // nucleus over the whole row needs the complete ranking
+            self.cand.sort_unstable_by(rank);
+        }
+        // temperature-scaled softmax over the surviving candidates
+        // (scaling preserves the ranking, so it can happen after top-k)
+        let top = self.cand[..n]
+            .iter()
+            .map(|c| c.1)
+            .fold(f32::NEG_INFINITY, f32::max);
+        let inv_t = 1.0 / self.params.temperature;
+        let mut total = 0f32;
+        for c in &mut self.cand[..n] {
+            let d = c.1 - top;
+            // d == 0 explicitly maps to weight 1: at extreme
+            // temperatures inv_t can be inf and 0 * inf would be NaN
+            c.1 = if d == 0.0 { 1.0 } else { (d * inv_t).exp() };
+            total += c.1;
+        }
+        if self.params.top_p < 1.0 {
+            // cand[..n] is ranking-sorted on every path that gets here
+            let target = self.params.top_p * total;
+            let mut cum = 0f32;
+            let mut keep = n;
+            for (i, c) in self.cand[..n].iter().enumerate() {
+                cum += c.1;
+                if cum >= target {
+                    keep = i + 1;
+                    break;
+                }
+            }
+            n = keep;
+            total = self.cand[..n].iter().map(|c| c.1).sum();
+        }
+        let u = self.rng.f32() * total;
+        let mut cum = 0f32;
+        for c in &self.cand[..n] {
+            cum += c.1;
+            if u < cum {
+                return c.0 as u16;
+            }
+        }
+        // f32 prefix-sum round-off can leave u just past the total
+        self.cand[n - 1].0 as u16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::engine::argmax;
+
+    fn logits(seed: u64, n: usize) -> Vec<f32> {
+        let mut r = Pcg32::seeded(seed);
+        (0..n).map(|_| r.normal() * 2.0).collect()
+    }
+
+    #[test]
+    fn top_k1_is_argmax() {
+        let row = logits(1, 64);
+        let mut s = Sampler::new(SamplingParams {
+            top_k: 1,
+            ..Default::default()
+        });
+        for _ in 0..10 {
+            assert_eq!(s.sample(&row) as usize, argmax(&row));
+        }
+    }
+
+    #[test]
+    fn tiny_top_p_is_argmax() {
+        let row = logits(2, 64);
+        let mut s = Sampler::new(SamplingParams {
+            top_p: 1e-6,
+            ..Default::default()
+        });
+        assert_eq!(s.sample(&row) as usize, argmax(&row));
+    }
+
+    #[test]
+    fn same_seed_same_stream() {
+        let p = SamplingParams {
+            temperature: 0.8,
+            top_k: 12,
+            top_p: 0.9,
+            seed: 77,
+        };
+        let mut a = Sampler::new(p);
+        let mut b = Sampler::new(p);
+        for i in 0..50 {
+            let row = logits(100 + i, 64);
+            assert_eq!(a.sample(&row), b.sample(&row));
+        }
+    }
+
+    #[test]
+    fn respects_top_k_support() {
+        let row = logits(3, 64);
+        let mut ranked: Vec<usize> = (0..row.len()).collect();
+        ranked.sort_by(|&a, &b| row[b].total_cmp(&row[a]).then(a.cmp(&b)));
+        let allowed = &ranked[..3];
+        let mut s = Sampler::new(SamplingParams {
+            temperature: 2.0, // flat enough to visit several candidates
+            top_k: 3,
+            ..Default::default()
+        });
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..200 {
+            let t = s.sample(&row) as usize;
+            assert!(allowed.contains(&t), "token {t} outside top-3");
+            seen.insert(t);
+        }
+        assert!(seen.len() > 1, "temperature 2.0 should not be greedy");
+    }
+
+    #[test]
+    fn validate_rejects_bad_params() {
+        let bad = [
+            SamplingParams { temperature: 0.0, ..Default::default() },
+            SamplingParams { temperature: -1.0, ..Default::default() },
+            SamplingParams {
+                temperature: f32::NAN,
+                ..Default::default()
+            },
+            SamplingParams { temperature: 2e3, ..Default::default() },
+            SamplingParams { top_p: 0.0, ..Default::default() },
+            SamplingParams { top_p: 1.5, ..Default::default() },
+            SamplingParams { top_k: 70_000, ..Default::default() },
+        ];
+        for p in bad {
+            assert!(p.validate().is_err(), "{p:?} should be rejected");
+        }
+        assert!(SamplingParams::default().validate().is_ok());
+    }
+}

@@ -1,0 +1,295 @@
+//! Typed client for the serving protocol — the one place request
+//! serialization and reply/stream parsing live, so examples, benches
+//! and smoke tests stop hand-rolling JSON lines.
+//!
+//! A [`GenRequest`] built with only `prompt`/`max_new` serializes as a
+//! pure v0 request (and therefore gets a v0 reply); touching any v1
+//! knob (model routing, sampling, stop tokens, streaming) upgrades the
+//! wire request to v1. Streamed replies are validated while they
+//! arrive: token events must be contiguous and must mirror the final
+//! summary's token list.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::engine::sampler::SamplingParams;
+use crate::util::json::Json;
+
+/// One generation request (builder-style).
+#[derive(Debug, Clone, Default)]
+pub struct GenRequest {
+    pub prompt: Vec<u16>,
+    pub max_new: Option<usize>,
+    pub model: Option<String>,
+    pub sampling: Option<SamplingParams>,
+    pub stop_tokens: Vec<u16>,
+    pub stream: bool,
+}
+
+impl GenRequest {
+    /// Greedy request against the server's default model — serializes
+    /// as v0 until any v1 field is set.
+    pub fn greedy(prompt: &[u16]) -> Self {
+        GenRequest { prompt: prompt.to_vec(), ..Default::default() }
+    }
+
+    pub fn max_new(mut self, n: usize) -> Self {
+        self.max_new = Some(n);
+        self
+    }
+
+    /// Route to a registered model by name (v1).
+    pub fn model(mut self, name: &str) -> Self {
+        self.model = Some(name.to_string());
+        self
+    }
+
+    /// Seeded sampling (v1); greedy when never called.
+    pub fn sampled(mut self, params: SamplingParams) -> Self {
+        self.sampling = Some(params);
+        self
+    }
+
+    pub fn stop_tokens(mut self, toks: &[u16]) -> Self {
+        self.stop_tokens = toks.to_vec();
+        self
+    }
+
+    /// Ask for per-token streaming (v1).
+    pub fn streaming(mut self) -> Self {
+        self.stream = true;
+        self
+    }
+
+    /// Wire form: exactly the fields that were set, so an untouched
+    /// request stays a v0 line.
+    fn wire_line(&self) -> String {
+        let mut o = Json::obj();
+        o.set(
+            "prompt",
+            Json::Arr(
+                self.prompt
+                    .iter()
+                    .map(|&t| Json::num(t as f64))
+                    .collect(),
+            ),
+        );
+        if let Some(n) = self.max_new {
+            o.set("max_new", Json::num(n as f64));
+        }
+        if let Some(m) = &self.model {
+            o.set("model", Json::str(m));
+        }
+        if let Some(sp) = &self.sampling {
+            // temperature + seed always go out so the server enters
+            // sampling mode even at their default values
+            o.set("temperature", Json::num(sp.temperature as f64));
+            o.set("seed", Json::num(sp.seed as f64));
+            if sp.top_k > 0 {
+                o.set("top_k", Json::num(sp.top_k as f64));
+            }
+            if sp.top_p < 1.0 {
+                o.set("top_p", Json::num(sp.top_p as f64));
+            }
+        }
+        if !self.stop_tokens.is_empty() {
+            o.set(
+                "stop_tokens",
+                Json::Arr(
+                    self.stop_tokens
+                        .iter()
+                        .map(|&t| Json::num(t as f64))
+                        .collect(),
+                ),
+            );
+        }
+        if self.stream {
+            o.set("stream", Json::Bool(true));
+        }
+        format!("{o}\n")
+    }
+}
+
+/// Parsed reply. `finish_reason`/`model` are `None` on v0 replies
+/// (the server echoes the request's protocol version).
+#[derive(Debug, Clone)]
+pub struct GenReply {
+    pub id: u64,
+    pub tokens: Vec<u16>,
+    pub finish_reason: Option<String>,
+    pub model: Option<String>,
+    pub queue_ms: f64,
+    pub prefill_ms: f64,
+    pub decode_ms: f64,
+}
+
+/// Blocking line-JSON client over one TCP connection. Requests on a
+/// connection are processed in order; a `Client` is cheap enough to
+/// open per worker thread.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    out: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Client> {
+        let out = TcpStream::connect(addr)
+            .context("connect to serve endpoint")?;
+        out.set_nodelay(true).ok();
+        let reader = BufReader::new(out.try_clone()?);
+        Ok(Client { reader, out })
+    }
+
+    /// Send one request and wait for the full reply (token events, if
+    /// streaming, are folded into the returned token list).
+    pub fn generate(&mut self, req: &GenRequest) -> Result<GenReply> {
+        self.generate_with(req, |_, _| {})
+    }
+
+    /// Send one request; `on_token(index, token)` fires for every
+    /// streamed token event as it arrives (never for non-streaming
+    /// requests). The client validates the stream framing: contiguous
+    /// indices, and the final summary's tokens must equal the streamed
+    /// sequence.
+    pub fn generate_with(
+        &mut self,
+        req: &GenRequest,
+        mut on_token: impl FnMut(usize, u16),
+    ) -> Result<GenReply> {
+        self.out.write_all(req.wire_line().as_bytes())?;
+        let mut streamed: Vec<u16> = Vec::new();
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if self.reader.read_line(&mut line)? == 0 {
+                bail!("server closed the connection mid-reply");
+            }
+            let j = Json::parse(line.trim())
+                .map_err(|e| anyhow!("bad reply line: {e} ({line})"))?;
+            if let Some(e) = j.get("error") {
+                bail!(
+                    "server error: {}",
+                    e.as_str().unwrap_or("(non-string error)")
+                );
+            }
+            match j.get("event").and_then(|e| e.as_str()) {
+                Some("token") => {
+                    let index = j
+                        .get("index")
+                        .and_then(|v| v.as_usize())
+                        .ok_or_else(|| anyhow!("token event: index"))?;
+                    let token = j
+                        .get("token")
+                        .and_then(|v| v.as_usize())
+                        .filter(|&t| t < 65536)
+                        .ok_or_else(|| anyhow!("token event: token"))?
+                        as u16;
+                    anyhow::ensure!(
+                        index == streamed.len(),
+                        "stream framing: expected index {}, got {index}",
+                        streamed.len()
+                    );
+                    streamed.push(token);
+                    on_token(index, token);
+                }
+                Some("done") | None => {
+                    let reply = parse_reply(&j)
+                        .map_err(|e| anyhow!("{e} ({line})"))?;
+                    if !streamed.is_empty() || req.stream {
+                        anyhow::ensure!(
+                            streamed == reply.tokens,
+                            "stream framing: streamed tokens {:?} != \
+                             final tokens {:?}",
+                            streamed,
+                            reply.tokens
+                        );
+                    }
+                    return Ok(reply);
+                }
+                Some(other) => bail!("unknown event '{other}'"),
+            }
+        }
+    }
+}
+
+fn parse_reply(j: &Json) -> Result<GenReply, String> {
+    let num = |key: &str| -> Result<f64, String> {
+        j.get(key)
+            .and_then(|v| v.as_f64())
+            .ok_or(format!("reply missing '{key}'"))
+    };
+    let tokens = j
+        .get("tokens")
+        .and_then(|t| t.as_arr())
+        .ok_or("reply missing 'tokens'")?
+        .iter()
+        .map(|t| {
+            t.as_usize()
+                .filter(|&v| v < 65536)
+                .map(|v| v as u16)
+                .ok_or_else(|| "reply token out of range".to_string())
+        })
+        .collect::<Result<Vec<u16>, String>>()?;
+    Ok(GenReply {
+        id: num("id")? as u64,
+        tokens,
+        finish_reason: j
+            .get("finish_reason")
+            .and_then(|v| v.as_str())
+            .map(String::from),
+        model: j.get("model").and_then(|v| v.as_str()).map(String::from),
+        queue_ms: num("queue_ms")?,
+        prefill_ms: num("prefill_ms")?,
+        decode_ms: num("decode_ms")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn untouched_request_is_v0_on_the_wire() {
+        let line = GenRequest::greedy(&[1, 2, 3]).max_new(5).wire_line();
+        let parsed = crate::serve::protocol::parse_request(&line).unwrap();
+        assert!(!parsed.v1, "greedy default must stay v0: {line}");
+        assert_eq!(parsed.prompt, vec![1, 2, 3]);
+        assert_eq!(parsed.max_new, Some(5));
+    }
+
+    #[test]
+    fn v1_knobs_roundtrip_through_the_protocol() {
+        let sp = SamplingParams {
+            temperature: 0.7,
+            top_k: 8,
+            top_p: 0.9,
+            seed: 13,
+        };
+        let line = GenRequest::greedy(&[4])
+            .max_new(3)
+            .model("comp60")
+            .sampled(sp)
+            .stop_tokens(&[2, 7])
+            .streaming()
+            .wire_line();
+        let p = crate::serve::protocol::parse_request(&line).unwrap();
+        assert!(p.v1);
+        assert_eq!(p.model.as_deref(), Some("comp60"));
+        assert_eq!(p.sampling, Some(sp));
+        assert_eq!(p.stop_tokens, vec![2, 7]);
+        assert!(p.stream);
+    }
+
+    #[test]
+    fn default_sampling_params_still_serialize() {
+        // temperature/seed at their defaults must still reach the wire
+        // so the server samples instead of going greedy
+        let line = GenRequest::greedy(&[4])
+            .sampled(SamplingParams::default())
+            .wire_line();
+        let p = crate::serve::protocol::parse_request(&line).unwrap();
+        assert_eq!(p.sampling, Some(SamplingParams::default()));
+    }
+}

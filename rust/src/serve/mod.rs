@@ -1,27 +1,36 @@
 //! Serving layer — what the SLM Deployer actually deploys *into*.
 //!
 //! The paper's end state is an SLM answering requests on the target
-//! device (§IV component 11). This module provides that runtime: a
-//! TCP front-end speaking a line-JSON protocol, a bounded admission
-//! queue, and a **continuous-batching** engine loop (token-level
-//! interleaving across active sequences, vLLM-style) over one shared
-//! [`DecodeBatch`] — every batch step makes exactly one weight pass
-//! per projection per layer no matter how many sequences are in
-//! flight, so a structurally-pruned Mosaic model genuinely serves
-//! more tokens/s than the dense one and per-step cost grows
-//! sublinearly with batch width. The loop is storage-agnostic: a
-//! `compact()`ed model (f16/CSR projections) serves through the same
-//! code path, smaller and faster.
+//! device (§IV component 11), and Mosaic's production story is that one
+//! dense checkpoint yields a *family* of deployable variants (dense /
+//! unstructured / structured / composite). This module serves that
+//! family from one process: a [`ModelRegistry`] of named sealed
+//! variants, each owning its own engine thread and [`DecodeBatch`],
+//! behind a TCP front-end speaking the versioned line-JSON protocol in
+//! [`protocol`] (v0 token-greedy requests still accepted verbatim).
+//! Requests route per-request by `"model"` name; the registry owns
+//! admission (vocab validation, routing, backpressure).
 //!
-//! Admission uses **chunked prefill**: a freshly-admitted prompt is
-//! fed [`PREFILL_CHUNK`] tokens per engine iteration through the
-//! batched full-sequence path, so a long prompt delays the decode
-//! steps of the rest of the batch by a bounded amount instead of
-//! stalling the whole loop.
+//! Each engine runs the **continuous-batching** loop (token-level
+//! interleaving across active sequences, vLLM-style) over one shared
+//! [`DecodeBatch`] — every batch step makes exactly one weight pass per
+//! projection per layer no matter how many sequences are in flight.
+//! Admission uses **chunked prefill**: a freshly-admitted prompt is fed
+//! [`PREFILL_CHUNK`] tokens per engine iteration through the batched
+//! full-sequence path. The loop is storage-agnostic: a `compact()`ed
+//! model (f16/CSR projections) serves through the same code path.
+//!
+//! Protocol v1 adds per-request seeded sampling ([`SamplingParams`] —
+//! the [`Sampler`] consumes only its own request's logits row + its own
+//! RNG state, so sampled tokens are bit-identical regardless of batch
+//! composition; greedy stays the seedless default), stop conditions
+//! (`stop_tokens` + `max_new` → [`FinishReason`]), and opt-in
+//! per-token streaming ([`Event::Token`] lines as tokens are decoded).
 //!
 //! Everything is std-only (no tokio in this image): one OS thread per
-//! connection for IO, a single engine thread owning the model.
+//! connection for IO, one engine thread per registered model.
 
+pub mod client;
 pub mod protocol;
 
 use std::io::{BufRead, BufReader, Write};
@@ -35,15 +44,28 @@ use crate::model::config::EOS;
 use crate::model::engine::argmax;
 use crate::model::{DecodeBatch, ModelWeights, PREFILL_CHUNK};
 
+pub use crate::model::engine::sampler::{Sampler, SamplingParams};
+
+/// Name the single-model [`Server::start`] path registers its model
+/// under (kept for v0 compatibility: those servers have one anonymous
+/// model).
+pub const DEFAULT_MODEL: &str = "default";
+
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
-    /// max sequences decoded concurrently (continuous batch width)
+    /// max sequences decoded concurrently per model (continuous batch
+    /// width)
     pub max_batch: usize,
-    /// admission queue bound (backpressure: reject beyond this)
+    /// per-model admission queue bound (backpressure: reject beyond)
     pub max_queue: usize,
     pub default_max_new: usize,
     /// hard cap on prompt + generation length
     pub max_ctx: usize,
+    /// accept `"stream": true` requests (protocol error when off)
+    pub allow_stream: bool,
+    /// registered model that serves requests without a `"model"` field
+    /// (None → the first registered model)
+    pub default_model: Option<String>,
 }
 
 impl Default for ServeConfig {
@@ -53,6 +75,29 @@ impl Default for ServeConfig {
             max_queue: 64,
             default_max_new: 16,
             max_ctx: 256,
+            allow_stream: true,
+            default_model: None,
+        }
+    }
+}
+
+/// Why a generation ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// `max_new` tokens generated, or the sequence's KV capacity ran
+    /// out.
+    Length,
+    /// EOS or one of the request's `stop_tokens` was generated (the
+    /// stopping token is included in the output, matching v0's EOS
+    /// behavior).
+    Stop,
+}
+
+impl FinishReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::Stop => "stop",
         }
     }
 }
@@ -62,20 +107,57 @@ pub struct Request {
     pub id: u64,
     pub prompt: Vec<u16>,
     pub max_new: usize,
+    /// `Some` → seeded sampling; `None` → greedy (seedless default).
+    pub sampling: Option<SamplingParams>,
+    /// Generation ends when any of these is produced (EOS always
+    /// stops).
+    pub stop_tokens: Vec<u16>,
+    /// Emit [`Event::Token`] per decoded token before the final
+    /// [`Event::Done`].
+    pub stream: bool,
     pub enqueued: Instant,
-    pub reply: mpsc::Sender<Reply>,
+    pub reply: mpsc::Sender<Event>,
 }
 
 #[derive(Debug, Clone)]
 pub struct Reply {
     pub id: u64,
     pub tokens: Vec<u16>,
+    pub finish_reason: FinishReason,
+    /// Registered name of the model that served the request.
+    pub model: String,
     pub queue_ms: f64,
     pub prefill_ms: f64,
     pub decode_ms: f64,
 }
 
-/// Aggregate serving metrics (lock-free; read by /stats and tests).
+/// What a request's reply channel carries: zero or more token events
+/// (streaming requests only, in decode order, as the engine commits
+/// them) followed by exactly one [`Event::Done`].
+#[derive(Debug, Clone)]
+pub enum Event {
+    Token { id: u64, index: usize, token: u16 },
+    Done(Reply),
+}
+
+/// Drain a reply channel until the terminal event, discarding token
+/// events — the non-streaming caller's one-liner.
+pub fn wait_reply(
+    rx: &mpsc::Receiver<Event>,
+    timeout: Duration,
+) -> Result<Reply, mpsc::RecvTimeoutError> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let left = deadline.saturating_duration_since(Instant::now());
+        match rx.recv_timeout(left)? {
+            Event::Done(r) => return Ok(r),
+            Event::Token { .. } => continue,
+        }
+    }
+}
+
+/// Aggregate per-model serving metrics (lock-free; read by tests,
+/// benches and the CLI status loop).
 #[derive(Debug, Default)]
 pub struct ServeStats {
     pub accepted: AtomicU64,
@@ -102,10 +184,207 @@ impl ServeStats {
     }
 }
 
+/// In-process request description (the typed mirror of a v1 wire
+/// request; [`protocol::parse_request`] output maps onto it 1:1).
+#[derive(Debug, Clone, Default)]
+pub struct SubmitSpec {
+    pub prompt: Vec<u16>,
+    /// None → the server's `default_max_new`.
+    pub max_new: Option<usize>,
+    /// None → the server's default model.
+    pub model: Option<String>,
+    pub sampling: Option<SamplingParams>,
+    pub stop_tokens: Vec<u16>,
+    pub stream: bool,
+}
+
+impl SubmitSpec {
+    pub fn greedy(prompt: &[u16], max_new: usize) -> Self {
+        SubmitSpec {
+            prompt: prompt.to_vec(),
+            max_new: Some(max_new),
+            ..Default::default()
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Model registry
+// ---------------------------------------------------------------------
+
+/// The set of named model variants one server process hosts. Built
+/// up-front (weights registered by name — in-memory, from a deployment
+/// file via [`ModelRegistry::register_file`], or published by
+/// `coordinator::Mosaic::produce_into`), then consumed by
+/// [`Server::start_registry`], which gives every model its own engine
+/// thread, [`DecodeBatch`] and admission queue.
+#[derive(Default)]
+pub struct ModelRegistry {
+    models: Vec<(String, ModelWeights)>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        ModelRegistry { models: Vec::new() }
+    }
+
+    /// Register `model` under `name`. Names are unique and non-empty.
+    pub fn register(
+        &mut self,
+        name: &str,
+        model: ModelWeights,
+    ) -> anyhow::Result<&mut Self> {
+        anyhow::ensure!(!name.is_empty(), "model name must be non-empty");
+        anyhow::ensure!(
+            self.models.iter().all(|(n, _)| n != name),
+            "model '{name}' already registered"
+        );
+        self.models.push((name.to_string(), model));
+        Ok(self)
+    }
+
+    /// Register a sealed variant straight from a deployment file
+    /// (`deploy::load_encoded` — f16/CSR projections come back as
+    /// runtime storage, no densify round-trip).
+    pub fn register_file(
+        &mut self,
+        name: &str,
+        path: &std::path::Path,
+    ) -> anyhow::Result<&mut Self> {
+        let m = crate::deploy::load_encoded(path)?;
+        self.register(name, m)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.models.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+}
+
+/// One running engine: the admission-side view of a registered model.
+struct EngineEntry {
+    name: Arc<String>,
+    vocab: usize,
+    resident_bytes: usize,
+    tx: mpsc::SyncSender<Request>,
+    stats: Arc<ServeStats>,
+}
+
+/// Admission + routing state shared by the accept loop, every
+/// connection thread, and in-process submitters. All checks that need
+/// the *routed model* (vocab bound, existence) happen here — the
+/// protocol parser only validates structure.
+struct Router {
+    entries: Vec<EngineEntry>,
+    default_ix: usize,
+    next_id: AtomicU64,
+    default_max_new: usize,
+    allow_stream: bool,
+    /// server-wide stop flag: admission refuses once shutdown begins,
+    /// so engines (which exit when idle) cannot be kept alive forever
+    /// by connection threads that outlive the accept loop
+    stop: Arc<AtomicBool>,
+}
+
+impl Router {
+    fn resolve(&self, model: Option<&str>) -> Result<&EngineEntry, String> {
+        match model {
+            None => Ok(&self.entries[self.default_ix]),
+            Some(name) => self
+                .entries
+                .iter()
+                .find(|e| e.name.as_str() == name)
+                .ok_or_else(|| {
+                    let known: Vec<&str> = self
+                        .entries
+                        .iter()
+                        .map(|e| e.name.as_str())
+                        .collect();
+                    format!(
+                        "unknown model '{name}' (registered: {})",
+                        known.join(", ")
+                    )
+                }),
+        }
+    }
+
+    /// Admission: route, validate against the routed model, enqueue
+    /// with backpressure. Returns the reply channel.
+    fn admit(
+        &self,
+        spec: SubmitSpec,
+    ) -> Result<mpsc::Receiver<Event>, String> {
+        if self.stop.load(Ordering::Relaxed) {
+            return Err("server shutting down".into());
+        }
+        let entry = self.resolve(spec.model.as_deref())?;
+        if spec.stream && !self.allow_stream {
+            return Err("streaming disabled on this server".into());
+        }
+        if spec.prompt.is_empty() {
+            return Err("empty prompt".into());
+        }
+        // the protocol only bounds tokens structurally (< 65536); the
+        // served model's real vocab is enforced here so out-of-vocab
+        // ids never reach the embedding gather
+        for &t in &spec.prompt {
+            if t as usize >= entry.vocab {
+                return Err(format!(
+                    "prompt token {t} out of vocab for model '{}' \
+                     (vocab {})",
+                    entry.name, entry.vocab
+                ));
+            }
+        }
+        if let Some(sp) = &spec.sampling {
+            sp.validate()?;
+        }
+        let (rtx, rrx) = mpsc::channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            prompt: spec.prompt,
+            max_new: spec.max_new.unwrap_or(self.default_max_new),
+            sampling: spec.sampling,
+            stop_tokens: spec.stop_tokens,
+            stream: spec.stream,
+            enqueued: Instant::now(),
+            reply: rtx,
+        };
+        match entry.tx.try_send(req) {
+            Ok(()) => {
+                entry.stats.accepted.fetch_add(1, Ordering::Relaxed);
+                Ok(rrx)
+            }
+            Err(mpsc::TrySendError::Full(_)) => {
+                entry.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                Err("queue full".into())
+            }
+            // a dead engine is not backpressure — don't count it as a
+            // rejection and don't disguise it as one
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                Err("engine gone".into())
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Engine loop
+// ---------------------------------------------------------------------
+
 struct ActiveSeq {
     req: Request,
     generated: Vec<u16>,
     next_token: u16,
+    /// per-request sampling state (None = greedy argmax)
+    sampler: Option<Sampler>,
     /// prompt tokens fed so far (chunked-prefill cursor)
     cursor: usize,
     /// effective prompt length after the ctx cap
@@ -119,6 +398,16 @@ impl ActiveSeq {
     fn prefilling(&self) -> bool {
         self.cursor < self.limit
     }
+
+    /// Pick the next token from this sequence's logits row. The
+    /// sampler (when present) reads only this row and its own RNG, so
+    /// the choice is independent of batch composition.
+    fn pick(&mut self, row: &[f32]) -> u16 {
+        match self.sampler.as_mut() {
+            Some(s) => s.sample(row),
+            None => argmax(row) as u16,
+        }
+    }
 }
 
 /// The engine loop: admit → chunked prefill → one batched decode step
@@ -127,6 +416,7 @@ impl ActiveSeq {
 /// until `stop` is set and the queue drains.
 pub fn engine_loop(
     model: Arc<ModelWeights>,
+    name: Arc<String>,
     cfg: ServeConfig,
     rx: mpsc::Receiver<Request>,
     stats: Arc<ServeStats>,
@@ -158,10 +448,12 @@ pub fn engine_loop(
                 .min(cfg.max_ctx.saturating_sub(req.max_new));
             let si = batch.admit(&model, limit + req.max_new);
             debug_assert_eq!(si, active.len());
+            let sampler = req.sampling.map(Sampler::new);
             active.push(ActiveSeq {
                 req,
                 generated: Vec::new(),
                 next_token: EOS,
+                sampler,
                 cursor: 0,
                 limit,
                 queue_ms,
@@ -176,7 +468,7 @@ pub fn engine_loop(
             continue;
         }
         // ---- commit each decode-phase sequence's pending token;
-        //      retire the finished ones
+        //      stream it out; retire the finished ones
         let mut i = 0;
         while i < active.len() {
             if active[i].prefilling() {
@@ -186,8 +478,17 @@ pub fn engine_loop(
             let tok = active[i].next_token;
             active[i].generated.push(tok);
             let seq = &active[i];
-            let done = seq.generated.len() >= seq.req.max_new
-                || tok == EOS
+            if seq.req.stream {
+                let _ = seq.req.reply.send(Event::Token {
+                    id: seq.req.id,
+                    index: seq.generated.len() - 1,
+                    token: tok,
+                });
+            }
+            let stopped =
+                tok == EOS || seq.req.stop_tokens.contains(&tok);
+            let done = stopped
+                || seq.generated.len() >= seq.req.max_new
                 || batch.pos(i) >= batch.cap(i);
             if !done {
                 i += 1;
@@ -204,11 +505,17 @@ pub fn engine_loop(
             let reply = Reply {
                 id: seq.req.id,
                 tokens: seq.generated,
+                finish_reason: if stopped {
+                    FinishReason::Stop
+                } else {
+                    FinishReason::Length
+                },
+                model: (*name).clone(),
                 queue_ms: seq.queue_ms,
                 prefill_ms: seq.prefill_ms,
                 decode_ms: seq.decode_t0.elapsed().as_secs_f64() * 1e3,
             };
-            let _ = seq.req.reply.send(reply);
+            let _ = seq.req.reply.send(Event::Done(reply));
         }
         // ---- stage one fused pass: every decode-phase sequence's
         //      pending token, plus up to PREFILL_CHUNK prompt tokens
@@ -263,121 +570,201 @@ pub fn engine_loop(
                 .fetch_add(decode_share as u64, Ordering::Relaxed);
         }
         for (r, &(i, _)) in inputs.iter().enumerate() {
-            active[i].next_token = argmax(logits.row(r)) as u16;
+            let next = active[i].pick(logits.row(r));
+            active[i].next_token = next;
         }
         let mut lrow = inputs.len();
         for (i, range, completes) in jobs {
-            let seq = &mut active[i];
             // fused-pass wall time attributed by row share
-            seq.prefill_ms += elapsed_us / 1e3 * range.len() as f64
+            active[i].prefill_ms += elapsed_us / 1e3
+                * range.len() as f64
                 / total_rows as f64;
-            seq.cursor = range.end;
+            active[i].cursor = range.end;
             if completes {
-                seq.next_token = argmax(logits.row(lrow)) as u16;
+                let next = active[i].pick(logits.row(lrow));
+                active[i].next_token = next;
                 lrow += 1;
-                seq.decode_t0 = Instant::now();
+                active[i].decode_t0 = Instant::now();
             }
         }
     }
 }
 
-/// In-process handle to a running server.
+// ---------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------
+
+/// Name + memory footprint + live stats of one registered model.
+pub struct ModelInfo {
+    pub name: String,
+    pub resident_bytes: usize,
+    pub stats: Arc<ServeStats>,
+}
+
+/// In-process handle to a running registry server.
 pub struct Server {
     pub addr: std::net::SocketAddr,
+    /// Default model's stats (the whole server's stats when started
+    /// with a single model via [`Server::start`]).
     pub stats: Arc<ServeStats>,
+    router: Arc<Router>,
     stop: Arc<AtomicBool>,
     accept_handle: Option<std::thread::JoinHandle<()>>,
-    engine_handle: Option<std::thread::JoinHandle<()>>,
-    /// request-id source, shared with the TCP front-end so every
-    /// request — in-process or on a connection — gets a distinct id
-    next_id: Arc<AtomicU64>,
-    /// `Some` while running; [`Server::shutdown`] takes it so the
-    /// engine's queue actually disconnects
-    tx: Option<mpsc::SyncSender<Request>>,
+    engine_handles: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
-    /// Start serving `model` on 127.0.0.1 (port 0 = ephemeral).
+    /// Serve a single anonymous model (registered as
+    /// [`DEFAULT_MODEL`]) on 127.0.0.1 (port 0 = ephemeral) — the v0
+    /// entry point, unchanged behavior.
     pub fn start(
         model: ModelWeights,
         cfg: ServeConfig,
         port: u16,
     ) -> anyhow::Result<Server> {
+        let mut reg = ModelRegistry::new();
+        reg.register(DEFAULT_MODEL, model)?;
+        Server::start_registry(reg, cfg, port)
+    }
+
+    /// Serve every model in `registry`, each with its own engine
+    /// thread, batch and queue. `cfg.default_model` picks which one
+    /// serves requests with no `"model"` field (default: the first
+    /// registered).
+    pub fn start_registry(
+        registry: ModelRegistry,
+        cfg: ServeConfig,
+        port: u16,
+    ) -> anyhow::Result<Server> {
+        anyhow::ensure!(
+            !registry.is_empty(),
+            "registry has no models to serve"
+        );
+        let default_ix = match &cfg.default_model {
+            None => 0,
+            Some(name) => registry
+                .models
+                .iter()
+                .position(|(n, _)| n == name)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "default_model '{name}' is not registered \
+                         (have: {:?})",
+                        registry.names()
+                    )
+                })?,
+        };
         let listener = TcpListener::bind(("127.0.0.1", port))?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
-        let stats = Arc::new(ServeStats::default());
         let stop = Arc::new(AtomicBool::new(false));
-        let (tx, rx) = mpsc::sync_channel::<Request>(cfg.max_queue);
-        let model = Arc::new(model);
 
-        let engine_handle = {
-            let (model, cfg, stats, stop) =
-                (model.clone(), cfg.clone(), stats.clone(), stop.clone());
-            std::thread::spawn(move || {
-                engine_loop(model, cfg, rx, stats, stop)
-            })
-        };
-        let next_id = Arc::new(AtomicU64::new(1));
+        let mut entries = Vec::new();
+        let mut engine_handles = Vec::new();
+        for (name, model) in registry.models {
+            let name = Arc::new(name);
+            let stats = Arc::new(ServeStats::default());
+            let (tx, rx) = mpsc::sync_channel::<Request>(cfg.max_queue);
+            let vocab = model.cfg.vocab;
+            let resident_bytes = model.resident_bytes();
+            let model = Arc::new(model);
+            let handle = {
+                let (name, cfg, stats, stop) = (
+                    name.clone(),
+                    cfg.clone(),
+                    stats.clone(),
+                    stop.clone(),
+                );
+                std::thread::spawn(move || {
+                    engine_loop(model, name, cfg, rx, stats, stop)
+                })
+            };
+            engine_handles.push(handle);
+            entries.push(EngineEntry {
+                name,
+                vocab,
+                resident_bytes,
+                tx,
+                stats,
+            });
+        }
+        let router = Arc::new(Router {
+            entries,
+            default_ix,
+            next_id: AtomicU64::new(1),
+            default_max_new: cfg.default_max_new,
+            allow_stream: cfg.allow_stream,
+            stop: stop.clone(),
+        });
+        let stats = router.entries[default_ix].stats.clone();
         let accept_handle = {
-            let stop = stop.clone();
-            let stats = stats.clone();
-            let tx = tx.clone();
-            let cfg = cfg.clone();
-            let next_id = next_id.clone();
+            let (router, stop) = (router.clone(), stop.clone());
             std::thread::spawn(move || {
-                accept_loop(listener, tx, cfg, stats, next_id, stop)
+                accept_loop(listener, router, stop)
             })
         };
         Ok(Server {
             addr,
             stats,
+            router,
             stop,
             accept_handle: Some(accept_handle),
-            engine_handle: Some(engine_handle),
-            next_id,
-            tx: Some(tx),
+            engine_handles,
         })
     }
 
-    /// In-process request (no TCP) — used by tests and the load bench.
+    /// In-process greedy request against the default model (no TCP) —
+    /// kept source-compatible with the v0 server for tests and the
+    /// load benches.
     pub fn submit(
         &self,
         prompt: Vec<u16>,
         max_new: usize,
-    ) -> anyhow::Result<mpsc::Receiver<Reply>> {
-        let (rtx, rrx) = mpsc::channel();
-        let req = Request {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
-            prompt,
-            max_new,
-            enqueued: Instant::now(),
-            reply: rtx,
-        };
-        let tx = self.tx.as_ref().expect("server running");
-        match tx.try_send(req) {
-            Ok(()) => {
-                self.stats.accepted.fetch_add(1, Ordering::Relaxed);
-                Ok(rrx)
-            }
-            Err(_) => {
-                self.stats.rejected.fetch_add(1, Ordering::Relaxed);
-                anyhow::bail!("queue full (backpressure)")
-            }
-        }
+    ) -> anyhow::Result<mpsc::Receiver<Event>> {
+        self.submit_spec(SubmitSpec::greedy(&prompt, max_new))
+    }
+
+    /// In-process v1 request: sampling, stop conditions, streaming and
+    /// model routing — exactly what a wire request can say.
+    pub fn submit_spec(
+        &self,
+        spec: SubmitSpec,
+    ) -> anyhow::Result<mpsc::Receiver<Event>> {
+        self.router.admit(spec).map_err(anyhow::Error::msg)
+    }
+
+    /// Registered models with their live stats, in registration order.
+    pub fn models(&self) -> Vec<ModelInfo> {
+        self.router
+            .entries
+            .iter()
+            .map(|e| ModelInfo {
+                name: (*e.name).clone(),
+                resident_bytes: e.resident_bytes,
+                stats: e.stats.clone(),
+            })
+            .collect()
+    }
+
+    /// Live stats for one registered model.
+    pub fn model_stats(&self, name: &str) -> Option<Arc<ServeStats>> {
+        self.router
+            .entries
+            .iter()
+            .find(|e| e.name.as_str() == name)
+            .map(|e| e.stats.clone())
     }
 
     pub fn shutdown(mut self) {
+        // the router checks this flag at admission, so no new work can
+        // arrive (even from connection threads that outlive the accept
+        // loop); engines drain in-flight + queued requests and exit at
+        // their next idle poll (≤ 20 ms)
         self.stop.store(true, Ordering::Relaxed);
         if let Some(h) = self.accept_handle.take() {
             let _ = h.join();
         }
-        // actually drop the held sender (not a clone of it) so the
-        // engine's queue disconnects; the engine then exits on
-        // Disconnected immediately instead of waiting for the
-        // stop-flag poll
-        drop(self.tx.take());
-        if let Some(h) = self.engine_handle.take() {
+        for h in self.engine_handles.drain(..) {
             let _ = h.join();
         }
     }
@@ -385,10 +772,7 @@ impl Server {
 
 fn accept_loop(
     listener: TcpListener,
-    tx: mpsc::SyncSender<Request>,
-    cfg: ServeConfig,
-    stats: Arc<ServeStats>,
-    next_id: Arc<AtomicU64>,
+    router: Arc<Router>,
     stop: Arc<AtomicBool>,
 ) {
     loop {
@@ -397,13 +781,9 @@ fn accept_loop(
         }
         match listener.accept() {
             Ok((stream, _)) => {
-                let tx = tx.clone();
-                let cfg = cfg.clone();
-                let stats = stats.clone();
-                let next_id = next_id.clone();
+                let router = router.clone();
                 std::thread::spawn(move || {
-                    let _ =
-                        handle_conn(stream, tx, cfg, stats, next_id);
+                    let _ = handle_conn(stream, router);
                 });
             }
             Err(ref e)
@@ -418,10 +798,7 @@ fn accept_loop(
 
 fn handle_conn(
     stream: TcpStream,
-    tx: mpsc::SyncSender<Request>,
-    cfg: ServeConfig,
-    stats: Arc<ServeStats>,
-    next_id: Arc<AtomicU64>,
+    router: Arc<Router>,
 ) -> anyhow::Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
@@ -441,35 +818,51 @@ fn handle_conn(
                 continue;
             }
         };
-        let (rtx, rrx) = mpsc::channel();
-        // each request on the connection gets its own id (the reply's
-        // `id` field is only meaningful if it names the request, not
-        // the connection)
-        let req = Request {
-            id: next_id.fetch_add(1, Ordering::Relaxed),
+        let (v1, streaming) = (parsed.v1, parsed.stream);
+        let spec = SubmitSpec {
             prompt: parsed.prompt,
-            max_new: parsed.max_new.unwrap_or(cfg.default_max_new),
-            enqueued: Instant::now(),
-            reply: rtx,
+            max_new: parsed.max_new,
+            model: parsed.model,
+            sampling: parsed.sampling,
+            stop_tokens: parsed.stop_tokens,
+            stream: parsed.stream,
         };
-        if tx.try_send(req).is_err() {
-            stats.rejected.fetch_add(1, Ordering::Relaxed);
-            out.write_all(
-                protocol::error_line("queue full").as_bytes(),
-            )?;
-            continue;
-        }
-        stats.accepted.fetch_add(1, Ordering::Relaxed);
-        match rrx.recv() {
-            Ok(reply) => {
+        let rrx = match router.admit(spec) {
+            Ok(rx) => rx,
+            Err(e) => {
                 out.write_all(
-                    protocol::reply_line(&reply).as_bytes(),
+                    protocol::error_line(&e).as_bytes(),
                 )?;
+                continue;
             }
-            Err(_) => {
-                out.write_all(
-                    protocol::error_line("engine gone").as_bytes(),
-                )?;
+        };
+        loop {
+            match rrx.recv() {
+                Ok(Event::Token { id, index, token }) => {
+                    // token events flow as they are decoded (nodelay
+                    // is set; each event is one line)
+                    out.write_all(
+                        protocol::token_line(id, index, token)
+                            .as_bytes(),
+                    )?;
+                }
+                Ok(Event::Done(reply)) => {
+                    let line = if streaming {
+                        protocol::done_line(&reply)
+                    } else if v1 {
+                        protocol::reply_line_v1(&reply)
+                    } else {
+                        protocol::reply_line(&reply)
+                    };
+                    out.write_all(line.as_bytes())?;
+                    break;
+                }
+                Err(_) => {
+                    out.write_all(
+                        protocol::error_line("engine gone").as_bytes(),
+                    )?;
+                    break;
+                }
             }
         }
     }
@@ -478,16 +871,22 @@ fn handle_conn(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::weights::testutil::random_model;
+    use crate::model::weights::testutil::{
+        random_model, random_model_sized,
+    };
+
+    const T10: Duration = Duration::from_secs(10);
+    const T30: Duration = Duration::from_secs(30);
 
     #[test]
     fn serve_roundtrip_in_process() {
         let m = random_model(201);
         let srv = Server::start(m, ServeConfig::default(), 0).unwrap();
         let rx = srv.submit(vec![1, 5, 9], 4).unwrap();
-        let reply = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        let reply = wait_reply(&rx, T10).unwrap();
         // EOS may terminate greedy decoding early
         assert!((1..=4).contains(&reply.tokens.len()));
+        assert_eq!(reply.model, DEFAULT_MODEL);
         assert_eq!(srv.stats.completed.load(Ordering::Relaxed), 1);
         assert_eq!(
             srv.stats.tokens_out.load(Ordering::Relaxed),
@@ -511,7 +910,7 @@ mod tests {
             })
             .collect();
         for rx in rxs {
-            let r = rx.recv_timeout(Duration::from_secs(20)).unwrap();
+            let r = wait_reply(&rx, Duration::from_secs(20)).unwrap();
             assert!((1..=6).contains(&r.tokens.len()));
         }
         assert_eq!(srv.stats.completed.load(Ordering::Relaxed), 8);
@@ -536,6 +935,10 @@ mod tests {
         let j = crate::util::json::Json::parse(line.trim()).unwrap();
         let n = j.get("tokens").unwrap().as_arr().unwrap().len();
         assert!((1..=3).contains(&n));
+        // v0 requests must get v0 replies: no v1 fields on the wire
+        assert!(j.get("finish_reason").is_none(), "{line}");
+        assert!(j.get("model").is_none(), "{line}");
+        assert!(j.get("event").is_none(), "{line}");
         srv.shutdown();
     }
 
@@ -565,11 +968,7 @@ mod tests {
                 .collect();
             let out: Vec<Vec<u16>> = rxs
                 .into_iter()
-                .map(|rx| {
-                    rx.recv_timeout(Duration::from_secs(30))
-                        .unwrap()
-                        .tokens
-                })
+                .map(|rx| wait_reply(&rx, T30).unwrap().tokens)
                 .collect();
             if width > 1 {
                 assert!(
@@ -581,6 +980,270 @@ mod tests {
             out
         };
         assert_eq!(run(1), run(4), "width-4 tokens must match width-1");
+    }
+
+    #[test]
+    fn sampled_serving_matches_any_width() {
+        // the sampled extension of batched_serving_matches_width1: a
+        // seeded request's tokens are a function of its own prompt,
+        // params and seed only — batch composition at widths 1/2/8
+        // must not change a single token
+        let m = random_model(207);
+        let prompts: Vec<Vec<u16>> = (0..8)
+            .map(|i| {
+                (0..(2 + i % 5))
+                    .map(|j| (1 + 5 * i + 3 * j) as u16 % 64)
+                    .collect()
+            })
+            .collect();
+        let run = |width: usize| -> Vec<Vec<u16>> {
+            let srv = Server::start(
+                m.clone(),
+                ServeConfig { max_batch: width, ..Default::default() },
+                0,
+            )
+            .unwrap();
+            let rxs: Vec<_> = prompts
+                .iter()
+                .enumerate()
+                .map(|(i, p)| {
+                    let spec = SubmitSpec {
+                        sampling: Some(SamplingParams {
+                            temperature: 0.9,
+                            top_k: 16,
+                            top_p: 0.95,
+                            seed: 1000 + i as u64,
+                        }),
+                        ..SubmitSpec::greedy(p, 8)
+                    };
+                    srv.submit_spec(spec).unwrap()
+                })
+                .collect();
+            let out: Vec<Vec<u16>> = rxs
+                .into_iter()
+                .map(|rx| wait_reply(&rx, T30).unwrap().tokens)
+                .collect();
+            if width > 1 {
+                assert!(srv.stats.mean_occupancy() > 1.0);
+            }
+            srv.shutdown();
+            out
+        };
+        let w1 = run(1);
+        assert_eq!(w1, run(2), "width-2 sampled tokens must match");
+        assert_eq!(w1, run(8), "width-8 sampled tokens must match");
+    }
+
+    #[test]
+    fn stop_tokens_end_generation() {
+        let m = random_model(208);
+        let srv = Server::start(m, ServeConfig::default(), 0).unwrap();
+        let prompt = vec![1u16, 5, 9];
+        let free = wait_reply(&srv.submit(prompt.clone(), 6).unwrap(), T10)
+            .unwrap();
+        assert!(!free.tokens.is_empty());
+        // stop on the first generated token: greedy decoding repeats
+        // the identical prefix, so the stopped run is exactly one
+        // token (included, like v0's EOS) with finish_reason "stop"
+        let stop_tok = free.tokens[0];
+        let spec = SubmitSpec {
+            stop_tokens: vec![stop_tok],
+            ..SubmitSpec::greedy(&prompt, 6)
+        };
+        let stopped =
+            wait_reply(&srv.submit_spec(spec).unwrap(), T10).unwrap();
+        assert_eq!(stopped.tokens, vec![stop_tok]);
+        assert_eq!(stopped.finish_reason, FinishReason::Stop);
+        // an un-stopped full-length run finishes with "length" (unless
+        // EOS cut it off, which greedy random models may do)
+        if free.tokens.len() == 6 && *free.tokens.last().unwrap() != EOS
+        {
+            assert_eq!(free.finish_reason, FinishReason::Length);
+        } else {
+            assert_eq!(free.finish_reason, FinishReason::Stop);
+        }
+        srv.shutdown();
+    }
+
+    #[test]
+    fn streaming_emits_every_token_then_done() {
+        let m = random_model(209);
+        let srv = Server::start(m, ServeConfig::default(), 0).unwrap();
+        let spec = SubmitSpec {
+            stream: true,
+            ..SubmitSpec::greedy(&[1, 5, 9], 5)
+        };
+        let rx = srv.submit_spec(spec).unwrap();
+        let mut streamed = Vec::new();
+        let reply = loop {
+            match rx.recv_timeout(T10).unwrap() {
+                Event::Token { index, token, .. } => {
+                    assert_eq!(index, streamed.len(), "event order");
+                    streamed.push(token);
+                }
+                Event::Done(r) => break r,
+            }
+        };
+        assert_eq!(streamed, reply.tokens, "stream must mirror reply");
+        assert!(rx.recv_timeout(Duration::from_millis(50)).is_err());
+        srv.shutdown();
+    }
+
+    #[test]
+    fn streaming_can_be_disabled() {
+        let m = random_model(210);
+        let srv = Server::start(
+            m,
+            ServeConfig { allow_stream: false, ..Default::default() },
+            0,
+        )
+        .unwrap();
+        let spec = SubmitSpec {
+            stream: true,
+            ..SubmitSpec::greedy(&[1, 2], 2)
+        };
+        let err = srv.submit_spec(spec).unwrap_err().to_string();
+        assert!(err.contains("streaming disabled"), "{err}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn vocab_validated_at_admission() {
+        // random_model has vocab 64; tokens 64..65535 used to pass the
+        // protocol's structural bound and index the embedding table
+        let m = random_model(211);
+        assert_eq!(m.cfg.vocab, 64);
+        let srv = Server::start(m, ServeConfig::default(), 0).unwrap();
+        let err =
+            srv.submit(vec![1, 64], 4).unwrap_err().to_string();
+        assert!(err.contains("out of vocab"), "{err}");
+        let err =
+            srv.submit(vec![1, 9999], 4).unwrap_err().to_string();
+        assert!(err.contains("out of vocab"), "{err}");
+        // in-vocab boundary passes
+        let rx = srv.submit(vec![63], 2).unwrap();
+        assert!(wait_reply(&rx, T10).is_ok());
+        // and the wire path rejects with a protocol error, not a hang
+        let mut stream = TcpStream::connect(srv.addr).unwrap();
+        stream
+            .write_all(b"{\"prompt\": [1, 9999], \"max_new\": 2}\n")
+            .unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = crate::util::json::Json::parse(line.trim()).unwrap();
+        assert!(
+            j.get("error").unwrap().as_str().unwrap()
+                .contains("out of vocab"),
+            "{line}"
+        );
+        srv.shutdown();
+    }
+
+    #[test]
+    fn registry_routes_per_request() {
+        // two different models in one server: the "model" field picks
+        // the engine, and the variants genuinely reply differently
+        let a = random_model_sized(301, 2, 16, 2, 40, 64, 16);
+        let b = random_model_sized(302, 2, 16, 2, 40, 64, 16);
+        let mut reg = ModelRegistry::new();
+        reg.register("alpha", a).unwrap();
+        reg.register("beta", b).unwrap();
+        let srv = Server::start_registry(
+            reg,
+            ServeConfig {
+                default_model: Some("alpha".into()),
+                ..Default::default()
+            },
+            0,
+        )
+        .unwrap();
+        let prompt = vec![1u16, 9, 4];
+        let ask = |model: Option<&str>| {
+            let spec = SubmitSpec {
+                model: model.map(String::from),
+                ..SubmitSpec::greedy(&prompt, 12)
+            };
+            wait_reply(&srv.submit_spec(spec).unwrap(), T10).unwrap()
+        };
+        let ra = ask(Some("alpha"));
+        let rb = ask(Some("beta"));
+        assert_eq!(ra.model, "alpha");
+        assert_eq!(rb.model, "beta");
+        assert_ne!(
+            ra.tokens, rb.tokens,
+            "different weights must reply differently"
+        );
+        // default routing goes to alpha
+        let rd = ask(None);
+        assert_eq!(rd.model, "alpha");
+        assert_eq!(rd.tokens, ra.tokens);
+        // per-model stats: alpha served 2, beta 1
+        assert_eq!(
+            srv.model_stats("alpha")
+                .unwrap()
+                .completed
+                .load(Ordering::Relaxed),
+            2
+        );
+        assert_eq!(
+            srv.model_stats("beta")
+                .unwrap()
+                .completed
+                .load(Ordering::Relaxed),
+            1
+        );
+        // unknown model is an admission error
+        let err = srv
+            .submit_spec(SubmitSpec {
+                model: Some("gamma".into()),
+                ..SubmitSpec::greedy(&prompt, 2)
+            })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown model"), "{err}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn registry_vocab_is_per_model() {
+        // routing must validate against the routed model's vocab, not
+        // the default's
+        let wide = random_model_sized(303, 2, 16, 2, 40, 64, 16);
+        let narrow = random_model_sized(304, 2, 16, 2, 40, 32, 16);
+        let mut reg = ModelRegistry::new();
+        reg.register("wide", wide).unwrap();
+        reg.register("narrow", narrow).unwrap();
+        let srv =
+            Server::start_registry(reg, ServeConfig::default(), 0)
+                .unwrap();
+        let spec = |model: &str| SubmitSpec {
+            model: Some(model.into()),
+            ..SubmitSpec::greedy(&[40], 2)
+        };
+        assert!(srv.submit_spec(spec("wide")).is_ok());
+        let err =
+            srv.submit_spec(spec("narrow")).unwrap_err().to_string();
+        assert!(err.contains("out of vocab"), "{err}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn registry_rejects_duplicate_and_unknown_default() {
+        let mut reg = ModelRegistry::new();
+        reg.register("m", random_model(305)).unwrap();
+        assert!(reg.register("m", random_model(306)).is_err());
+        assert!(
+            Server::start_registry(
+                reg,
+                ServeConfig {
+                    default_model: Some("nope".into()),
+                    ..Default::default()
+                },
+                0
+            )
+            .is_err()
+        );
     }
 
     #[test]
@@ -633,7 +1296,7 @@ mod tests {
         assert!(ok >= 1);
         assert!(rejected > 0, "backpressure must reject");
         for rx in rxs {
-            let _ = rx.recv_timeout(Duration::from_secs(30));
+            let _ = wait_reply(&rx, T30);
         }
         srv.shutdown();
     }

@@ -1,45 +1,168 @@
-//! Line-JSON wire protocol for the serving layer.
+//! Versioned line-JSON wire protocol for the serving layer.
 //!
-//! Request:  {"prompt": [int, ...], "max_new": int?}\n
-//! Reply:    {"id": n, "tokens": [...], "queue_ms": f, "prefill_ms": f,
-//!            "decode_ms": f}\n
-//! Error:    {"error": "..."}\n
+//! **v0** (unchanged since the first server, still accepted verbatim):
+//!
+//!   Request:  {"prompt": [int, ...], "max_new": int?}\n
+//!   Reply:    {"id": n, "tokens": [...], "queue_ms": f,
+//!              "prefill_ms": f, "decode_ms": f}\n
+//!
+//! **v1** — a request becomes v1 by naming any v1 field (or `"v": 1`
+//! explicitly); v0 requests keep byte-identical replies:
+//!
+//!   Request:  {"prompt": [int, ...], "max_new": int?,
+//!              "model": str?,            // registry routing
+//!              "temperature": f?, "top_k": int?, "top_p": f?,
+//!              "seed": int?,             // any → seeded sampling
+//!              "stop_tokens": [int,...]?,
+//!              "stream": bool?, "v": 1?}\n
+//!   Reply:    v0 fields + {"finish_reason": "length"|"stop",
+//!              "model": str}\n
+//!   Stream:   {"event": "token", "id": n, "index": i, "token": t}\n
+//!             ... one line per decoded token, then a final
+//!             {"event": "done", ...v1 reply fields...}\n
+//!   Error:    {"error": "..."}\n   (either version, any stage)
+//!
+//! Parsing validates structure and ranges only; model-dependent checks
+//! (prompt tokens vs the routed model's vocab, model-name existence)
+//! happen at admission in [`super::ModelRegistry`], which knows the
+//! routed model.
 
+use crate::model::engine::sampler::SamplingParams;
 use crate::util::json::Json;
+
+/// Hard cap on `stop_tokens` length (sanity bound, not a tuning knob).
+pub const MAX_STOP_TOKENS: usize = 64;
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct ParsedRequest {
+    /// True when the request named any v1 field; replies to v0 requests
+    /// must stay byte-identical to the pre-v1 server.
+    pub v1: bool,
     pub prompt: Vec<u16>,
     pub max_new: Option<usize>,
+    pub model: Option<String>,
+    /// `Some` when any sampling field was present; `None` = greedy.
+    pub sampling: Option<SamplingParams>,
+    pub stop_tokens: Vec<u16>,
+    pub stream: bool,
+}
+
+fn token_array(j: &Json, key: &str) -> Result<Vec<u16>, String> {
+    j.get(key)
+        .and_then(|p| p.as_arr())
+        .ok_or_else(|| format!("missing '{key}' array"))?
+        .iter()
+        .map(|t| {
+            t.as_f64()
+                .filter(|v| v.fract() == 0.0 && (0.0..65536.0).contains(v))
+                .map(|v| v as u16)
+                .ok_or_else(|| format!("{key} token out of range"))
+        })
+        .collect()
 }
 
 pub fn parse_request(line: &str) -> Result<ParsedRequest, String> {
     let j = Json::parse(line.trim())?;
-    let prompt = j
-        .get("prompt")
-        .and_then(|p| p.as_arr())
-        .ok_or("missing 'prompt' array")?
-        .iter()
-        .map(|t| {
-            t.as_usize()
-                .filter(|&v| v < 65536)
-                .map(|v| v as u16)
-                .ok_or_else(|| "prompt token out of range".to_string())
-        })
-        .collect::<Result<Vec<u16>, String>>()?;
+    let mut v1 = match j.get("v") {
+        None => false,
+        Some(v) if v.as_f64() == Some(1.0) => true,
+        Some(_) => {
+            return Err("unsupported protocol version (expected \"v\": 1)"
+                .into())
+        }
+    };
+    let prompt = token_array(&j, "prompt")?;
     if prompt.is_empty() {
         return Err("empty prompt".into());
     }
-    let max_new = j.get("max_new").and_then(|v| v.as_usize());
-    if let Some(n) = max_new {
-        if n == 0 || n > 4096 {
-            return Err("max_new out of range".into());
+    let max_new = match j.get("max_new") {
+        None => None,
+        Some(v) => Some(
+            v.as_f64()
+                .filter(|m| {
+                    m.fract() == 0.0 && (1.0..=4096.0).contains(m)
+                })
+                .ok_or("max_new out of range")? as usize,
+        ),
+    };
+    let model = match j.get("model") {
+        None => None,
+        Some(m) => {
+            let name = m
+                .as_str()
+                .filter(|s| !s.is_empty())
+                .ok_or("model must be a non-empty string")?;
+            v1 = true;
+            Some(name.to_string())
         }
+    };
+    // any sampling field present → seeded sampling with defaults for
+    // the rest; none present → greedy (no RNG at all)
+    let mut sp = SamplingParams::default();
+    let mut sampled = false;
+    if let Some(v) = j.get("temperature") {
+        let t = v.as_f64().ok_or("temperature must be a number")?;
+        sp.temperature = t as f32;
+        sampled = true;
     }
-    Ok(ParsedRequest { prompt, max_new })
+    if let Some(v) = j.get("top_k") {
+        let k = v
+            .as_f64()
+            .filter(|k| k.fract() == 0.0 && (1.0..=65536.0).contains(k))
+            .ok_or("top_k out of range [1, 65536]")?;
+        sp.top_k = k as usize;
+        sampled = true;
+    }
+    if let Some(v) = j.get("top_p") {
+        let p = v.as_f64().ok_or("top_p must be a number")?;
+        sp.top_p = p as f32;
+        sampled = true;
+    }
+    if let Some(v) = j.get("seed") {
+        let s = v
+            .as_f64()
+            .filter(|s| s.fract() == 0.0 && (0.0..9e15).contains(s))
+            .ok_or("seed must be a non-negative integer")?;
+        sp.seed = s as u64;
+        sampled = true;
+    }
+    if sampled {
+        sp.validate()?;
+        v1 = true;
+    }
+    let stop_tokens = match j.get("stop_tokens") {
+        None => Vec::new(),
+        Some(_) => {
+            v1 = true;
+            let toks = token_array(&j, "stop_tokens")?;
+            if toks.len() > MAX_STOP_TOKENS {
+                return Err(format!(
+                    "too many stop_tokens (max {MAX_STOP_TOKENS})"
+                ));
+            }
+            toks
+        }
+    };
+    let stream = match j.get("stream") {
+        None => false,
+        Some(b) => {
+            v1 = true;
+            b.as_bool().ok_or("stream must be a boolean")?
+        }
+    };
+    Ok(ParsedRequest {
+        v1,
+        prompt,
+        max_new,
+        model,
+        sampling: sampled.then_some(sp),
+        stop_tokens,
+        stream,
+    })
 }
 
-pub fn reply_line(r: &super::Reply) -> String {
+/// Shared v0 field set (every reply carries these).
+fn base_reply(r: &super::Reply) -> Json {
     let mut o = Json::obj();
     o.set("id", Json::num(r.id as f64));
     o.set(
@@ -49,6 +172,42 @@ pub fn reply_line(r: &super::Reply) -> String {
     o.set("queue_ms", Json::num(r.queue_ms));
     o.set("prefill_ms", Json::num(r.prefill_ms));
     o.set("decode_ms", Json::num(r.decode_ms));
+    o
+}
+
+/// v0 reply — byte-identical to the pre-v1 server (compat-tested).
+pub fn reply_line(r: &super::Reply) -> String {
+    format!("{}\n", base_reply(r))
+}
+
+/// v0 fields + finish_reason + the serving model's name (shared by
+/// the v1 reply and the streaming summary so the two cannot diverge).
+fn v1_reply(r: &super::Reply) -> Json {
+    let mut o = base_reply(r);
+    o.set("finish_reason", Json::str(r.finish_reason.as_str()));
+    o.set("model", Json::str(&r.model));
+    o
+}
+
+/// v1 reply: v0 fields + finish_reason + the serving model's name.
+pub fn reply_line_v1(r: &super::Reply) -> String {
+    format!("{}\n", v1_reply(r))
+}
+
+/// One streamed token event.
+pub fn token_line(id: u64, index: usize, token: u16) -> String {
+    let mut o = Json::obj();
+    o.set("event", Json::str("token"));
+    o.set("id", Json::num(id as f64));
+    o.set("index", Json::num(index as f64));
+    o.set("token", Json::num(token as f64));
+    format!("{o}\n")
+}
+
+/// Final line of a streamed reply (v1 fields + the event marker).
+pub fn done_line(r: &super::Reply) -> String {
+    let mut o = v1_reply(r);
+    o.set("event", Json::str("done"));
     format!("{o}\n")
 }
 
@@ -60,47 +219,182 @@ pub fn error_line(msg: &str) -> String {
 
 #[cfg(test)]
 mod tests {
+    use super::super::{FinishReason, Reply};
     use super::*;
 
+    fn reply() -> Reply {
+        Reply {
+            id: 42,
+            tokens: vec![1, 2, 3],
+            finish_reason: FinishReason::Length,
+            model: "default".into(),
+            queue_ms: 0.5,
+            prefill_ms: 1.25,
+            decode_ms: 9.0,
+        }
+    }
+
     #[test]
-    fn parse_valid() {
+    fn parse_valid_v0() {
         let p =
             parse_request("{\"prompt\": [1, 2, 3], \"max_new\": 5}\n")
                 .unwrap();
         assert_eq!(p.prompt, vec![1, 2, 3]);
         assert_eq!(p.max_new, Some(5));
+        assert!(!p.v1, "plain prompt/max_new must stay v0");
+        assert!(p.sampling.is_none() && !p.stream);
+        assert!(p.stop_tokens.is_empty() && p.model.is_none());
     }
 
     #[test]
     fn parse_defaults() {
         let p = parse_request("{\"prompt\": [7]}").unwrap();
         assert_eq!(p.max_new, None);
+        assert!(!p.v1);
+    }
+
+    #[test]
+    fn parse_v1_fields() {
+        let p = parse_request(
+            "{\"prompt\": [1], \"model\": \"comp60\", \
+             \"temperature\": 0.8, \"top_k\": 16, \"top_p\": 0.95, \
+             \"seed\": 42, \"stop_tokens\": [2, 9], \"stream\": true}",
+        )
+        .unwrap();
+        assert!(p.v1);
+        assert_eq!(p.model.as_deref(), Some("comp60"));
+        let sp = p.sampling.unwrap();
+        assert!((sp.temperature - 0.8).abs() < 1e-6);
+        assert_eq!(sp.top_k, 16);
+        assert!((sp.top_p - 0.95).abs() < 1e-6);
+        assert_eq!(sp.seed, 42);
+        assert_eq!(p.stop_tokens, vec![2, 9]);
+        assert!(p.stream);
+    }
+
+    #[test]
+    fn any_sampling_field_turns_v1_with_defaults() {
+        let p = parse_request("{\"prompt\": [1], \"seed\": 7}").unwrap();
+        assert!(p.v1);
+        let sp = p.sampling.unwrap();
+        assert_eq!(sp.seed, 7);
+        assert_eq!(sp.temperature, 1.0);
+        assert_eq!((sp.top_k, sp.top_p), (0, 1.0));
+    }
+
+    #[test]
+    fn explicit_version_marker() {
+        assert!(parse_request("{\"prompt\": [1], \"v\": 1}").unwrap().v1);
+        assert!(parse_request("{\"prompt\": [1], \"v\": 2}").is_err());
+        assert!(parse_request("{\"prompt\": [1], \"v\": \"1\"}").is_err());
     }
 
     #[test]
     fn rejects_bad_requests() {
+        // v0 corpus (unchanged behavior)
         assert!(parse_request("{}").is_err());
         assert!(parse_request("{\"prompt\": []}").is_err());
         assert!(parse_request("{\"prompt\": [99999]}").is_err());
-        assert!(parse_request(
-            "{\"prompt\": [1], \"max_new\": 0}"
-        )
-        .is_err());
+        // deliberate v1-era tightening: the v0 parser silently
+        // truncated fractional/negative tokens (1.5 → 1, -1 → 0),
+        // serving a *different* token than requested — now an error
+        assert!(parse_request("{\"prompt\": [1.5]}").is_err());
+        assert!(parse_request("{\"prompt\": [-1]}").is_err());
+        // (same tightening: non-integer max_new used to silently fall
+        // back to the server default instead of erroring)
+        assert!(parse_request("{\"prompt\": [1], \"max_new\": 2.5}")
+            .is_err());
+        assert!(parse_request("{\"prompt\": [1], \"max_new\": \"5\"}")
+            .is_err());
+        assert!(parse_request("{\"prompt\": [1], \"max_new\": 0}")
+            .is_err());
+        assert!(parse_request("{\"prompt\": [1], \"max_new\": 9999}")
+            .is_err());
         assert!(parse_request("not json").is_err());
+        // v1 corpus: bad sampling params
+        for bad in [
+            "{\"prompt\": [1], \"temperature\": 0}",
+            "{\"prompt\": [1], \"temperature\": -0.5}",
+            "{\"prompt\": [1], \"temperature\": 2000}",
+            "{\"prompt\": [1], \"temperature\": \"hot\"}",
+            "{\"prompt\": [1], \"top_k\": 0}",
+            "{\"prompt\": [1], \"top_k\": 1.5}",
+            "{\"prompt\": [1], \"top_k\": 100000}",
+            "{\"prompt\": [1], \"top_p\": 0}",
+            "{\"prompt\": [1], \"top_p\": 1.01}",
+            "{\"prompt\": [1], \"seed\": -3}",
+            "{\"prompt\": [1], \"seed\": 1.5}",
+            // bad routing / framing fields
+            "{\"prompt\": [1], \"model\": 7}",
+            "{\"prompt\": [1], \"model\": \"\"}",
+            "{\"prompt\": [1], \"stream\": \"yes\"}",
+            "{\"prompt\": [1], \"stop_tokens\": [70000]}",
+            "{\"prompt\": [1], \"stop_tokens\": 4}",
+        ] {
+            assert!(parse_request(bad).is_err(), "should reject: {bad}");
+        }
+        // boundary: the largest valid values parse
+        assert!(parse_request(
+            "{\"prompt\": [65535], \"max_new\": 4096, \
+             \"temperature\": 1000, \"top_k\": 65536, \"top_p\": 1}"
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn too_many_stop_tokens_rejected() {
+        let toks: Vec<String> =
+            (0..65).map(|i| i.to_string()).collect();
+        let line = format!(
+            "{{\"prompt\": [1], \"stop_tokens\": [{}]}}",
+            toks.join(",")
+        );
+        assert!(parse_request(&line).is_err());
+    }
+
+    #[test]
+    fn v0_reply_bytes_are_frozen() {
+        // the exact pre-v1 wire bytes — the v0 compat contract
+        assert_eq!(
+            reply_line(&reply()),
+            "{\"decode_ms\":9,\"id\":42,\"prefill_ms\":1.25,\
+             \"queue_ms\":0.5,\"tokens\":[1,2,3]}\n"
+        );
+    }
+
+    #[test]
+    fn v1_reply_adds_finish_and_model() {
+        let line = reply_line_v1(&reply());
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(
+            j.get("finish_reason").unwrap().as_str(),
+            Some("length")
+        );
+        assert_eq!(j.get("model").unwrap().as_str(), Some("default"));
+        assert!(j.get("event").is_none());
+    }
+
+    #[test]
+    fn stream_framing_roundtrips() {
+        let t = token_line(7, 0, 123);
+        let j = Json::parse(t.trim()).unwrap();
+        assert_eq!(j.get("event").unwrap().as_str(), Some("token"));
+        assert_eq!(j.get("index").unwrap().as_usize(), Some(0));
+        assert_eq!(j.get("token").unwrap().as_usize(), Some(123));
+        let d = done_line(&reply());
+        let j = Json::parse(d.trim()).unwrap();
+        assert_eq!(j.get("event").unwrap().as_str(), Some("done"));
+        assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 3);
     }
 
     #[test]
     fn reply_roundtrips_through_json() {
-        let r = super::super::Reply {
-            id: 42,
-            tokens: vec![1, 2, 3],
-            queue_ms: 0.5,
-            prefill_ms: 1.25,
-            decode_ms: 9.0,
-        };
-        let line = reply_line(&r);
+        let line = reply_line(&reply());
         let j = Json::parse(line.trim()).unwrap();
         assert_eq!(j.get("id").unwrap().as_usize(), Some(42));
         assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 3);
+        // v0 replies must not leak v1 fields
+        assert!(j.get("finish_reason").is_none());
+        assert!(j.get("model").is_none());
     }
 }

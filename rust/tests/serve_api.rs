@@ -1,0 +1,234 @@
+//! Serving protocol v1 end-to-end over real TCP: v0 wire
+//! compatibility, typed-client round-trips, registry routing, and
+//! streaming framing. Complements the in-module tests in
+//! `serve/mod.rs` (engine-level determinism, stop conditions, vocab
+//! admission) by exercising the public surface the way an external
+//! client would.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use mosaic::model::weights::testutil::{random_model, random_model_sized};
+use mosaic::serve::client::{Client, GenRequest};
+use mosaic::serve::{
+    ModelRegistry, SamplingParams, ServeConfig, Server,
+};
+use mosaic::util::json::Json;
+
+/// v0 request → byte-level v0 reply: exactly the five pre-v1 keys in
+/// the frozen serialization order, greedy tokens, fully deterministic.
+/// (The serializer's exact bytes are frozen in
+/// `protocol::tests::v0_reply_bytes_are_frozen`; this covers the wire
+/// path end-to-end.)
+#[test]
+fn v0_wire_compat_is_exact() {
+    let m = random_model(501);
+    let srv = Server::start(m, ServeConfig::default(), 0).unwrap();
+    let mut stream = TcpStream::connect(srv.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut runs: Vec<Vec<u16>> = Vec::new();
+    for _ in 0..2 {
+        stream
+            .write_all(b"{\"prompt\": [1, 4, 9], \"max_new\": 3}\n")
+            .unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        // exactly the v0 key set — nothing leaked from v1
+        let keys: Vec<&str> = j
+            .as_obj()
+            .unwrap()
+            .keys()
+            .map(|k| k.as_str())
+            .collect();
+        assert_eq!(
+            keys,
+            vec!["decode_ms", "id", "prefill_ms", "queue_ms", "tokens"],
+            "{line}"
+        );
+        runs.push(
+            j.get("tokens")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|t| t.as_usize().unwrap() as u16)
+                .collect(),
+        );
+    }
+    assert!(!runs[0].is_empty());
+    assert_eq!(runs[0], runs[1], "greedy serving must be deterministic");
+    srv.shutdown();
+}
+
+/// The typed client against a two-model registry: routing, sampling
+/// reproducibility, and stop conditions over real TCP.
+#[test]
+fn client_routes_samples_and_stops() {
+    let mut reg = ModelRegistry::new();
+    reg.register("a", random_model_sized(502, 2, 16, 2, 40, 64, 16))
+        .unwrap();
+    reg.register("b", random_model_sized(503, 2, 16, 2, 40, 64, 16))
+        .unwrap();
+    let srv = Server::start_registry(
+        reg,
+        ServeConfig {
+            default_model: Some("a".into()),
+            ..Default::default()
+        },
+        0,
+    )
+    .unwrap();
+    let mut c = Client::connect(srv.addr).unwrap();
+    let prompt = [1u16, 9, 4];
+    let ra = c
+        .generate(&GenRequest::greedy(&prompt).max_new(12).model("a"))
+        .unwrap();
+    let rb = c
+        .generate(&GenRequest::greedy(&prompt).max_new(12).model("b"))
+        .unwrap();
+    assert_eq!(ra.model.as_deref(), Some("a"));
+    assert_eq!(rb.model.as_deref(), Some("b"));
+    assert_ne!(ra.tokens, rb.tokens, "different weights, same tokens?");
+    // default routing (v1 via explicit sampling) goes to "a"
+    let sp = SamplingParams {
+        temperature: 0.8,
+        top_k: 8,
+        seed: 7,
+        ..Default::default()
+    };
+    let s1 = c
+        .generate(&GenRequest::greedy(&prompt).max_new(10).sampled(sp))
+        .unwrap();
+    let s2 = c
+        .generate(&GenRequest::greedy(&prompt).max_new(10).sampled(sp))
+        .unwrap();
+    assert_eq!(s1.model.as_deref(), Some("a"));
+    assert_eq!(s1.tokens, s2.tokens, "seeded sampling must reproduce");
+    // stop on the first greedy token
+    let stopped = c
+        .generate(
+            &GenRequest::greedy(&prompt)
+                .max_new(12)
+                .model("a")
+                .stop_tokens(&[ra.tokens[0]]),
+        )
+        .unwrap();
+    assert_eq!(stopped.tokens, vec![ra.tokens[0]]);
+    assert_eq!(stopped.finish_reason.as_deref(), Some("stop"));
+    // unknown model comes back as a server error, not a hang
+    let err = c
+        .generate(&GenRequest::greedy(&prompt).model("nope"))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown model"), "{err}");
+    // ... and the connection stays usable afterwards
+    let again = c
+        .generate(&GenRequest::greedy(&prompt).max_new(2))
+        .unwrap();
+    assert!(!again.tokens.is_empty());
+    srv.shutdown();
+}
+
+/// Streaming over the wire: per-token event lines, ascending indices,
+/// and a final summary that mirrors them (Client validates framing
+/// internally; the raw-socket pass checks the actual line shapes).
+#[test]
+fn streaming_framing_on_the_wire() {
+    let m = random_model(504);
+    let srv = Server::start(m, ServeConfig::default(), 0).unwrap();
+    let mut stream = TcpStream::connect(srv.addr).unwrap();
+    stream
+        .write_all(
+            b"{\"prompt\": [1, 5, 9], \"max_new\": 5, \"stream\": true}\n",
+        )
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut tokens = Vec::new();
+    let done = loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        match j.get("event").and_then(|e| e.as_str()) {
+            Some("token") => {
+                assert_eq!(
+                    j.get("index").unwrap().as_usize().unwrap(),
+                    tokens.len(),
+                    "{line}"
+                );
+                tokens.push(
+                    j.get("token").unwrap().as_usize().unwrap() as u16,
+                );
+            }
+            Some("done") => break j,
+            other => panic!("unexpected event {other:?}: {line}"),
+        }
+    };
+    let final_tokens: Vec<u16> = done
+        .get("tokens")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_usize().unwrap() as u16)
+        .collect();
+    assert_eq!(tokens, final_tokens, "stream must mirror the summary");
+    assert!(done.get("finish_reason").is_some());
+    assert!(done.get("queue_ms").is_some());
+    assert!(done.get("prefill_ms").is_some());
+    assert!(done.get("decode_ms").is_some());
+    // the same connection then handles a typed streaming request
+    drop(reader);
+    drop(stream);
+    let mut c = Client::connect(srv.addr).unwrap();
+    let mut seen = 0usize;
+    let r = c
+        .generate_with(
+            &GenRequest::greedy(&[1, 5, 9]).max_new(5).streaming(),
+            |_, _| seen += 1,
+        )
+        .unwrap();
+    assert_eq!(seen, r.tokens.len());
+    assert_eq!(r.tokens, final_tokens, "greedy stream is deterministic");
+    srv.shutdown();
+}
+
+/// Malformed/boundary corpus over the wire: every bad line gets an
+/// error reply and the connection keeps serving.
+#[test]
+fn wire_errors_keep_connection_alive() {
+    let m = random_model(505);
+    let srv = Server::start(m, ServeConfig::default(), 0).unwrap();
+    let mut stream = TcpStream::connect(srv.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let bad: &[&str] = &[
+        "garbage",
+        "{\"max_new\": 3}",
+        "{\"prompt\": []}",
+        "{\"prompt\": [1], \"temperature\": -2}",
+        "{\"prompt\": [1], \"top_k\": 0}",
+        "{\"prompt\": [1], \"top_p\": 2}",
+        "{\"prompt\": [1], \"model\": \"ghost\"}",
+        "{\"prompt\": [63000], \"max_new\": 2}",
+        "{\"prompt\": [1], \"v\": 9}",
+    ];
+    for req in bad {
+        stream.write_all(format!("{req}\n").as_bytes()).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert!(
+            j.get("error").is_some(),
+            "expected error for {req}: {line}"
+        );
+    }
+    // still alive: a good request succeeds on the same connection
+    stream
+        .write_all(b"{\"prompt\": [1, 4], \"max_new\": 2}\n")
+        .unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    assert!(j.get("tokens").is_some(), "{line}");
+    srv.shutdown();
+}
