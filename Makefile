@@ -4,7 +4,8 @@
 
 CARGO ?= cargo
 
-.PHONY: build test fmt check bench bench-serve bench-produce serve-smoke
+.PHONY: build test fmt check bench bench-serve bench-produce \
+	bench-spec serve-smoke spec-smoke
 
 build:
 	$(CARGO) build --release
@@ -43,6 +44,22 @@ bench-serve:
 # pytest via python/tests/test_serve_smoke.py.
 serve-smoke:
 	$(CARGO) run --release --example serve_client
+
+# Speculative-serving perf trajectory: pruned-draft / dense-verify
+# pairs swept over draft depth K ∈ {0 (off), 2, 4, 8} at widths 1/4;
+# every row parity-checked against target-only output before it is
+# recorded. Emits machine-readable BENCH_spec.json (tok/s, acceptance
+# rate, p95).
+bench-spec:
+	$(CARGO) bench --bench spec_speed
+
+# Speculative-serving smoke (artifact-free): dense + sealed-70% draft
+# + pair registry over real TCP; asserts greedy spec replies are
+# byte-identical to dense-only replies and sampled streams are
+# acceptance-invariant. Wired into pytest via
+# python/tests/test_spec_smoke.py.
+spec-smoke:
+	$(CARGO) run --release --example spec_smoke
 
 # Model-production perf trajectory: sequential whole-model pruning vs
 # the streaming layer-parallel pipeline at 1/2/4/8 workers; emits

@@ -1,0 +1,35 @@
+"""Wire `make spec-smoke` into the pytest-driven run: a registry
+server with a dense model, its sealed 70%-pruned variant and a
+speculative pair coupling them, driven over real TCP by the typed
+rust client (examples/spec_smoke.rs). The example asserts the
+speculative contract — greedy spec replies byte-identical to the
+dense-only replies, seeded sampling streams unchanged by the
+acceptance pattern — and prints SPEC-SMOKE OK on success.
+
+Skips when the rust toolchain is not present in the image, mirroring
+test_serve_smoke.py."""
+import os
+import shutil
+import subprocess
+
+import pytest
+
+ROOT = os.path.dirname(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+)
+
+
+def test_spec_smoke():
+    if shutil.which("cargo") is None or shutil.which("make") is None:
+        pytest.skip("cargo/make not available in this image")
+    r = subprocess.run(
+        ["make", "-C", ROOT, "spec-smoke"],
+        capture_output=True,
+        text=True,
+        timeout=3600,
+    )
+    assert r.returncode == 0, (
+        f"make spec-smoke failed\n--- stdout ---\n{r.stdout[-4000:]}"
+        f"\n--- stderr ---\n{r.stderr[-4000:]}"
+    )
+    assert "SPEC-SMOKE OK" in r.stdout, r.stdout[-4000:]

@@ -1,0 +1,201 @@
+//! Speculative-serving throughput: dense-verified tokens drafted by a
+//! sealed 70 %-pruned variant, swept over draft depth K ∈ {0 (off), 2,
+//! 4, 8} at serving widths 1 and 4. The deployment question behind
+//! Mosaic's "up to 67 % faster" claim, asked end-to-end: how much of
+//! the pruned model's speed survives as DENSE-QUALITY token throughput
+//! once the dense parent verifies every token?
+//!
+//! Every speculative row is parity-checked against the K = 0 baseline
+//! before it is recorded — the bit-identity contract is an invariant
+//! here, not an assumption — and each row carries its acceptance rate
+//! (accepted / drafted) so the tok/s trajectory can be read against
+//! how often the draft actually guessed right.
+//!
+//! Emits `BENCH_spec.json` (tok/s, acceptance, p95) via
+//! `make bench-spec` for cross-PR perf tracking. Artifact-free: runs
+//! on random weights anywhere.
+
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use mosaic::bench_support::{header, rec, Bench};
+use mosaic::data::trace::{generate, percentiles, Arrival, TraceConfig};
+use mosaic::model::weights::testutil::random_model_sized;
+use mosaic::prune::unstructured::{mask_lowest, scores, Metric};
+use mosaic::serve::{
+    wait_reply, ModelRegistry, ServeConfig, Server, SpecRequest,
+    SubmitSpec,
+};
+use mosaic::util::json::Json;
+
+struct DriveOut {
+    tokens: Vec<Vec<u16>>,
+    tok_per_s: f64,
+    p95_ms: f64,
+    drafted: u64,
+    accepted: u64,
+}
+
+/// Replay `trace` routed to `model` (k = None → plain entry, Some →
+/// per-request spec depth), collecting tokens in request order for the
+/// parity check and the pair engine's counter deltas for this run.
+fn drive(
+    srv: &Server,
+    model: &str,
+    k: Option<usize>,
+    trace: &[mosaic::data::trace::TraceItem],
+) -> DriveOut {
+    let stats = srv.model_stats("pair").expect("pair registered");
+    let d0 = stats.drafted.load(Ordering::Relaxed);
+    let a0 = stats.draft_accepted.load(Ordering::Relaxed);
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for item in trace {
+        let spec = SubmitSpec {
+            model: Some(model.into()),
+            spec: k.map(|k| SpecRequest { draft: None, k: Some(k) }),
+            ..SubmitSpec::greedy(&item.prompt, item.max_new)
+        };
+        let sent = Instant::now();
+        let rx = srv.submit_spec(spec).expect("queue sized for trace");
+        pending.push((sent, rx));
+    }
+    let mut tokens = Vec::new();
+    let mut lat = Vec::new();
+    let mut n_tok = 0usize;
+    for (sent, rx) in pending {
+        let r = wait_reply(&rx, Duration::from_secs(120)).unwrap();
+        lat.push(sent.elapsed().as_secs_f64() * 1e3);
+        n_tok += r.tokens.len();
+        tokens.push(r.tokens);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let (_, p95, _) = percentiles(lat);
+    DriveOut {
+        tokens,
+        tok_per_s: n_tok as f64 / wall,
+        p95_ms: p95,
+        drafted: stats.drafted.load(Ordering::Relaxed) - d0,
+        accepted: stats.draft_accepted.load(Ordering::Relaxed) - a0,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new(
+        "spec_speed",
+        "self-speculative serving: pruned draft, dense verify",
+    );
+    let n_requests = if Bench::fast() { 12 } else { 32 };
+    // closed-loop: all requests at t=0 so tok/s reflects engine speed
+    let trace = generate(&TraceConfig {
+        arrival: Arrival::Batch,
+        rate: 150.0,
+        n_requests,
+        prompt_len_mean: 12,
+        prompt_len_max: 24,
+        max_new: 16,
+        ..Default::default()
+    });
+
+    // dense target + sealed 70 %-magnitude-pruned draft — the Mosaic
+    // self-speculative topology on random weights
+    let dense = random_model_sized(9, 4, 256, 8, 704, 512, 128);
+    let mut draft = dense.clone();
+    for l in draft.layers.iter_mut() {
+        for s in l.projs.iter_mut() {
+            let t = s.dense_mut();
+            let sc = scores(t, None, Metric::Magnitude);
+            mask_lowest(t, &sc, 0.7);
+        }
+    }
+    draft.compact();
+    println!(
+        "dense {} KB, sealed draft {} KB resident",
+        dense.resident_bytes() / 1024,
+        draft.resident_bytes() / 1024
+    );
+
+    let widths: &[usize] = if Bench::fast() { &[1] } else { &[1, 4] };
+    let ks: &[usize] = &[0, 2, 4, 8];
+    let mut summary: Vec<Json> = Vec::new();
+    println!("\n— K sweep (draft=sealed70, verify=dense) —");
+    header(&["width", "k", "tok/s", "p95-ms", "accept", "vs-off"]);
+    for &w in widths {
+        let mut reg = ModelRegistry::new();
+        reg.register("dense", dense.clone())?;
+        reg.register("draft70", draft.clone())?;
+        reg.register_spec("pair", "dense", "draft70", 8)?;
+        let srv = Server::start_registry(
+            reg,
+            ServeConfig {
+                max_batch: w,
+                max_queue: 256,
+                ..Default::default()
+            },
+            0,
+        )?;
+        // K = 0 baseline: target-only serving through the plain dense
+        // entry — what "speculation off" actually means in production
+        let mut off_tok_per_s = 0.0;
+        let mut off_tokens: Vec<Vec<u16>> = Vec::new();
+        for &k in ks {
+            let d = if k == 0 {
+                drive(&srv, "dense", None, &trace)
+            } else {
+                drive(&srv, "pair", Some(k), &trace)
+            };
+            if k == 0 {
+                off_tok_per_s = d.tok_per_s;
+                off_tokens = d.tokens.clone();
+            } else {
+                // the contract the whole feature stands on: dense-
+                // verified speculative output IS the dense output
+                assert_eq!(
+                    d.tokens, off_tokens,
+                    "width {w} k {k}: speculative tokens diverged"
+                );
+            }
+            let acceptance = if d.drafted > 0 {
+                d.accepted as f64 / d.drafted as f64
+            } else {
+                0.0
+            };
+            println!(
+                "{w:>12}{k:>12}{:>12.0}{:>12.2}{:>12.2}{:>12.2}",
+                d.tok_per_s,
+                d.p95_ms,
+                acceptance,
+                d.tok_per_s / off_tok_per_s.max(1e-9)
+            );
+            let row = rec(&[
+                ("section", Json::str("spec_sweep")),
+                ("width", Json::num(w as f64)),
+                ("k", Json::num(k as f64)),
+                ("tok_per_s", Json::num(d.tok_per_s)),
+                ("p95_ms", Json::num(d.p95_ms)),
+                ("acceptance", Json::num(acceptance)),
+                ("drafted", Json::num(d.drafted as f64)),
+                ("accepted", Json::num(d.accepted as f64)),
+                (
+                    "speedup_vs_off",
+                    Json::num(d.tok_per_s / off_tok_per_s.max(1e-9)),
+                ),
+                ("parity", Json::Bool(true)),
+            ]);
+            b.row("spec_sweep", row.clone());
+            summary.push(row);
+        }
+        srv.shutdown();
+    }
+
+    // machine-readable perf-trajectory file (make bench-spec)
+    let mut out = Json::obj();
+    out.set("bench", Json::str("spec_speed"));
+    out.set("n_requests", Json::num(n_requests as f64));
+    out.set("rows", Json::Arr(summary));
+    std::fs::write("BENCH_spec.json", out.to_string())?;
+    println!("[wrote BENCH_spec.json]");
+
+    b.finish();
+    Ok(())
+}

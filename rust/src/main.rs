@@ -11,6 +11,7 @@
 //!   mosaic serve   --model tl1_7
 //!                  [--models dense,composite@0.6,unstructured@0.7,
 //!                            name=path.mosaic,...]   (registry list)
+//!                  [--spec target:draft@k[,name=target:draft@k...]]
 //!                  [--default-model NAME] [--stream 0|1]
 //!                  [--batch 8] [--queue 64] [--port 7171] [--seal 0|1]
 //!   mosaic pipeline --model tl1_7 --p 0.6                (end-to-end)
@@ -275,6 +276,14 @@ fn cmd_deploy(args: &Args) -> Result<()> {
 /// "model" field; `--stream 0` refuses streaming requests. Without
 /// `--models`, the legacy `--p`/`--category` flags map onto a
 /// single-entry registry.
+///
+/// `--spec` registers speculative pairs over entries the `--models`
+/// list already created: `dense:sealed70@4` serves dense-verified
+/// tokens (bit-identical to the dense entry) drafted 4 per round by
+/// the sealed70 entry. Entries are `[name=]target:draft@k`; the
+/// default name is the spec string itself, so requests route to it
+/// with `"model": "dense:sealed70@4"` (or via the `"spec"` request
+/// field on the target model).
 fn cmd_serve(args: &Args) -> Result<()> {
     use mosaic::prune::{plan, CompositeOpts, ProduceOpts, PrunerKind};
     use mosaic::serve::{ModelRegistry, ServeConfig, Server};
@@ -377,6 +386,40 @@ fn cmd_serve(args: &Args) -> Result<()> {
             println!("registered '{name}': {}", path.display());
         }
     }
+    // speculative pairs over the registered entries:
+    // [name=]target:draft@k
+    for spec in args
+        .get("spec", "")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+    {
+        let (name, source) = match spec.split_once('=') {
+            Some((n, s)) => (n.to_string(), s),
+            None => (spec.to_string(), spec),
+        };
+        // LAST '@' separates the depth: registry names may themselves
+        // contain '@' (e.g. the default 'composite@0.6' naming)
+        let (pair, k_s) = source.rsplit_once('@').ok_or_else(|| {
+            anyhow::anyhow!(
+                "bad --spec entry '{spec}' (want target:draft@k)"
+            )
+        })?;
+        let (target, draft) = pair.split_once(':').ok_or_else(|| {
+            anyhow::anyhow!(
+                "bad --spec entry '{spec}' (want target:draft@k)"
+            )
+        })?;
+        let k: usize = k_s.parse().map_err(|_| {
+            anyhow::anyhow!("bad draft depth in --spec entry '{spec}'")
+        })?;
+        registry.register_spec(&name, target, draft, k)?;
+        println!(
+            "registered '{name}': speculative pair — '{draft}' drafts \
+             {k}/round, '{target}' verifies (output bit-identical to \
+             '{target}')"
+        );
+    }
     let default_model = {
         let d = args.get("default-model", "");
         (!d.is_empty()).then_some(d)
@@ -403,9 +446,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         std::thread::sleep(std::time::Duration::from_secs(5));
         for mi in srv.models() {
             use std::sync::atomic::Ordering::Relaxed;
+            let spec = if mi.stats.drafted.load(Relaxed) > 0 {
+                format!(
+                    " / accept {:.0}%",
+                    mi.stats.acceptance_rate() * 100.0
+                )
+            } else {
+                String::new()
+            };
             println!(
                 "  {:<16} completed {} / rejected {} / tok {} / \
-                 occupancy {:.2}",
+                 occupancy {:.2}{spec}",
                 mi.name,
                 mi.stats.completed.load(Relaxed),
                 mi.stats.rejected.load(Relaxed),

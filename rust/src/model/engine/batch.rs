@@ -28,6 +28,17 @@
 //! for the decode step. The lm_head then runs only over the rows that
 //! actually need logits (decode rows + each completed prompt's last
 //! row).
+//!
+//! [`DecodeBatch::step_verify`] is the speculative-decoding verify
+//! primitive: multi-token chunks consumed like prefill chunks but with
+//! the lm_head over **every** staged row — the target model scores all
+//! drafted positions in one fused weight pass. Because every row goes
+//! through exactly the per-row kernels a decode row would (summation
+//! kk-ascending, attention over the row's own cache position), a
+//! verify row's logits are bit-identical to the decode step that would
+//! have produced them one token at a time. Rejected draft rows are
+//! discarded with [`DecodeBatch::truncate`], which rolls a sequence's
+//! KV cursor back so the next feed overwrites them.
 
 use crate::model::config::Proj;
 use crate::model::weights::ModelWeights;
@@ -99,13 +110,31 @@ fn shape2(t: &mut Tensor, rows: usize, cols: usize) {
 
 impl DecodeBatch {
     /// Scratch for up to `max_batch` concurrent sequences, each with a
-    /// KV cache of at most `max_ctx` positions.
+    /// KV cache of at most `max_ctx` positions. One fused pass can
+    /// carry `max_batch` decode rows plus a [`PREFILL_CHUNK`] budget of
+    /// prompt rows; callers staging wider passes (speculative verify)
+    /// use [`DecodeBatch::with_rows`].
     pub fn new(m: &ModelWeights, max_batch: usize, max_ctx: usize) -> Self {
+        Self::with_rows(m, max_batch, max_ctx, PREFILL_CHUNK)
+    }
+
+    /// Like [`DecodeBatch::new`], but reserving `row_budget` staged
+    /// rows beyond the `max_batch` decode rows for chunked input
+    /// (prefill and verify rows share this budget). The speculative
+    /// verify path sizes it at `max_batch * (k + 1) + PREFILL_CHUNK`
+    /// so every sequence's whole draft window plus an admission chunk
+    /// fit in one fused pass.
+    pub fn with_rows(
+        m: &ModelWeights,
+        max_batch: usize,
+        max_ctx: usize,
+        row_budget: usize,
+    ) -> Self {
         let cfg = &m.cfg;
         let dh = cfg.head_dim;
         let maxa = cfg.n_heads * dh;
         let maxc = cfg.ff_dim;
-        let cap_rows = max_batch + PREFILL_CHUNK;
+        let cap_rows = max_batch + row_budget.max(PREFILL_CHUNK);
         DecodeBatch {
             seqs: Vec::with_capacity(max_batch),
             max_batch,
@@ -154,6 +183,20 @@ impl DecodeBatch {
     /// last sequence takes index `si`).
     pub fn retire(&mut self, si: usize) {
         self.seqs.swap_remove(si);
+    }
+
+    /// Roll sequence `si` back to `len` consumed tokens, discarding
+    /// the KV rows past it — the speculative-decoding rejection path.
+    /// The discarded rows are not zeroed: attention only ever reads
+    /// `..=pos`, and the next feed overwrites them in place.
+    pub fn truncate(&mut self, si: usize, len: usize) {
+        let s = &mut self.seqs[si];
+        assert!(
+            len <= s.pos,
+            "truncate to {len} past seq {si} pos {}",
+            s.pos
+        );
+        s.pos = len;
     }
 
     pub fn len(&self) -> usize {
@@ -211,11 +254,43 @@ impl DecodeBatch {
         decode: &[(usize, u16)],
         prefill: &[(usize, &[u16], bool)],
     ) -> &Tensor {
+        self.fused(m, decode, &[], prefill)
+    }
+
+    /// Speculative verify: each `(sequence, tokens)` chunk is consumed
+    /// like a prefill chunk — same fused pass, same per-row kernels —
+    /// but the lm_head runs over **every** staged row, so the caller
+    /// gets the target model's logits at every drafted position from
+    /// one weight pass per projection. Returns logits with one row per
+    /// verify token in stage order, then one row per `want_logits`
+    /// prefill entry. Rejected positions are rolled back afterwards
+    /// with [`DecodeBatch::truncate`].
+    pub fn step_verify(
+        &mut self,
+        m: &ModelWeights,
+        verify: &[(usize, &[u16])],
+        prefill: &[(usize, &[u16], bool)],
+    ) -> &Tensor {
+        self.fused(m, &[], verify, prefill)
+    }
+
+    /// Shared fused pass: decode rows, verify chunks and prefill
+    /// chunks all ride one (B, d) activation matrix. Logits rows come
+    /// back in group order: decode entries, every verify row, then
+    /// each `want_logits` prefill chunk's last row.
+    fn fused(
+        &mut self,
+        m: &ModelWeights,
+        decode: &[(usize, u16)],
+        verify: &[(usize, &[u16])],
+        prefill: &[(usize, &[u16], bool)],
+    ) -> &Tensor {
         debug_assert!(
             {
                 let mut ids: Vec<usize> = decode
                     .iter()
                     .map(|&(si, _)| si)
+                    .chain(verify.iter().map(|&(si, _)| si))
                     .chain(prefill.iter().map(|&(si, _, _)| si))
                     .collect();
                 ids.sort_unstable();
@@ -230,6 +305,18 @@ impl DecodeBatch {
             assert!(s.pos < s.cap, "seq {si} out of KV capacity");
             self.rows.push((si, s.pos));
             self.toks.push(t);
+        }
+        for &(si, tokens) in verify {
+            assert!(!tokens.is_empty(), "empty verify chunk");
+            let pos0 = self.seqs[si].pos;
+            assert!(
+                pos0 + tokens.len() <= self.seqs[si].cap,
+                "seq {si} verify past KV capacity"
+            );
+            for (i, &t) in tokens.iter().enumerate() {
+                self.rows.push((si, pos0 + i));
+                self.toks.push(t);
+            }
         }
         for &(si, tokens, _) in prefill {
             assert!(!tokens.is_empty(), "empty prefill chunk");
@@ -249,14 +336,21 @@ impl DecodeBatch {
         for &(si, _) in decode {
             self.seqs[si].pos += 1;
         }
+        for &(si, tokens) in verify {
+            self.seqs[si].pos += tokens.len();
+        }
         for &(si, tokens, _) in prefill {
             self.seqs[si].pos += tokens.len();
         }
         // lm_head over only the rows that need logits: decode rows,
-        // then each want_logits chunk's last row
+        // every verify row, then each want_logits chunk's last row
         self.sel.clear();
         self.sel.extend(0..decode.len());
         let mut base = decode.len();
+        for &(_, tokens) in verify {
+            self.sel.extend(base..base + tokens.len());
+            base += tokens.len();
+        }
         for &(_, tokens, want) in prefill {
             if want {
                 self.sel.push(base + tokens.len() - 1);
@@ -507,6 +601,72 @@ mod tests {
         let want_next = decode_step(&m, &mut st, 4).to_vec();
         let got_next = batch.step(&m, &[(si, 4)]);
         assert_close(got_next.row(0), &want_next, 1e-4, "post-prefill");
+    }
+
+    #[test]
+    fn verify_rows_match_single_decode_steps_bitwise() {
+        // the speculative bit-identity contract at the engine level: a
+        // multi-row verify pass must produce, at every position, the
+        // EXACT logits bytes the one-token-at-a-time decode path would
+        // — same kernels, same summation order, only the row count
+        // differs
+        let m = random_model(44);
+        let prompt: Vec<u16> = vec![3, 1, 4, 1, 5];
+        let drafts: Vec<u16> = vec![9, 2, 6, 5];
+        let cap = prompt.len() + drafts.len() + 1;
+        let mut one = DecodeBatch::new(&m, 1, cap);
+        let s1 = one.admit(&m, cap);
+        prefill_into(&m, &mut one, s1, &prompt);
+        let mut want: Vec<Vec<f32>> = Vec::new();
+        for &t in &drafts {
+            want.push(one.step(&m, &[(s1, t)]).row(0).to_vec());
+        }
+        let mut ver = DecodeBatch::with_rows(&m, 1, cap, drafts.len());
+        let s2 = ver.admit(&m, cap);
+        prefill_into(&m, &mut ver, s2, &prompt);
+        let got = ver.step_verify(&m, &[(s2, &drafts)], &[]);
+        assert_eq!(got.rows(), drafts.len());
+        for (j, w) in want.iter().enumerate() {
+            assert_eq!(
+                got.row(j),
+                w.as_slice(),
+                "verify row {j} must be bit-identical to its decode step"
+            );
+        }
+        assert_eq!(ver.pos(s2), prompt.len() + drafts.len());
+    }
+
+    #[test]
+    fn truncate_rolls_back_rejected_rows() {
+        // feed rejected draft tokens, truncate them away, then resume
+        // on the corrected token: logits must be bit-identical to a
+        // fresh batch that never saw the rejected tokens
+        let m = random_model(45);
+        let prompt: Vec<u16> = vec![2, 7, 1];
+        let mut a = DecodeBatch::with_rows(&m, 1, 16, 8);
+        let sa = a.admit(&m, 16);
+        prefill_into(&m, &mut a, sa, &prompt);
+        // verify a 3-token draft window, accept only the first token
+        a.step_verify(&m, &[(sa, &[5, 9, 9])], &[]);
+        a.truncate(sa, prompt.len() + 1); // keep [prompt, 5]
+        assert_eq!(a.pos(sa), prompt.len() + 1);
+        let got = a.step(&m, &[(sa, 8)]).row(0).to_vec();
+        let mut b = DecodeBatch::new(&m, 1, 16);
+        let sb = b.admit(&m, 16);
+        prefill_into(&m, &mut b, sb, &prompt);
+        b.step(&m, &[(sb, 5)]);
+        let want = b.step(&m, &[(sb, 8)]).row(0).to_vec();
+        assert_eq!(got, want, "post-rollback logits must match");
+    }
+
+    #[test]
+    #[should_panic(expected = "truncate")]
+    fn truncate_past_pos_panics() {
+        let m = random_model(46);
+        let mut batch = DecodeBatch::new(&m, 1, 8);
+        let si = batch.admit(&m, 8);
+        batch.step(&m, &[(si, 1)]);
+        batch.truncate(si, 2);
     }
 
     #[test]

@@ -52,8 +52,10 @@ impl SamplingParams {
         if self.temperature > 1e3 {
             return Err("temperature out of range (0, 1000]".into());
         }
+        // 0 disables the filter — the error text must say so (the old
+        // message claimed [1, 65536] while 0 was accepted all along)
         if self.top_k > 65536 {
-            return Err("top_k out of range [1, 65536]".into());
+            return Err("top_k out of range [0, 65536] (0 = off)".into());
         }
         if !(self.top_p > 0.0 && self.top_p <= 1.0) {
             return Err("top_p out of range (0, 1]".into());
@@ -161,6 +163,34 @@ impl Sampler {
     }
 }
 
+/// The speculative acceptance rule: pick the target's own token for
+/// one verify row and report whether the draft guessed it.
+///
+/// The pick is exactly what target-only decoding would do — greedy
+/// argmax when `sampler` is `None`, otherwise one [`Sampler::sample`]
+/// call consuming exactly one RNG draw — and a draft token is accepted
+/// only when it **equals** that pick. Rejection "resampling" is
+/// therefore deterministic and free: the committed token is the
+/// target's own pick, no second draw. Two consequences the serving
+/// layer builds its contract on:
+///
+/// * the committed token stream is bit-identical to target-only
+///   decoding, for greedy and seeded sampling alike;
+/// * the per-request PCG32 stream advances once per committed token,
+///   so the acceptance pattern (how many drafts matched) cannot shift
+///   any later draw.
+pub fn verify_pick(
+    sampler: &mut Option<Sampler>,
+    row: &[f32],
+    draft: Option<u16>,
+) -> (u16, bool) {
+    let tok = match sampler.as_mut() {
+        Some(s) => s.sample(row),
+        None => crate::model::engine::argmax(row) as u16,
+    };
+    (tok, draft == Some(tok))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -247,5 +277,62 @@ mod tests {
             assert!(p.validate().is_err(), "{p:?} should be rejected");
         }
         assert!(SamplingParams::default().validate().is_ok());
+    }
+
+    #[test]
+    fn top_k_boundary_values() {
+        // 0 means "filter off" and must validate; the message for the
+        // out-of-range case must state the real range (regression: the
+        // old text claimed [1, 65536] while accepting 0)
+        for ok in [0usize, 1, 65536] {
+            let p = SamplingParams { top_k: ok, ..Default::default() };
+            assert!(p.validate().is_ok(), "top_k {ok} must validate");
+        }
+        let p = SamplingParams { top_k: 65537, ..Default::default() };
+        let err = p.validate().unwrap_err();
+        assert!(err.contains("[0, 65536]"), "{err}");
+        // and top_k: 0 genuinely samples from the full row (off), not
+        // from an empty candidate set
+        let row = logits(9, 64);
+        let mut s = Sampler::new(SamplingParams {
+            top_k: 0,
+            temperature: 2.0,
+            ..Default::default()
+        });
+        for _ in 0..20 {
+            assert!((s.sample(&row) as usize) < row.len());
+        }
+    }
+
+    #[test]
+    fn verify_pick_matches_target_and_stream_is_acceptance_invariant() {
+        let row = logits(4, 64);
+        // greedy: pick == argmax; acceptance is pure equality
+        let mut none = None;
+        let (t, acc) = verify_pick(&mut none, &row, Some(argmax(&row) as u16));
+        assert_eq!(t as usize, argmax(&row));
+        assert!(acc);
+        let (t2, acc2) = verify_pick(&mut none, &row, Some(t.wrapping_add(1)));
+        assert_eq!(t2, t);
+        assert!(!acc2);
+        // seeded: one draw per pick, so feeding different draft guesses
+        // (any acceptance pattern) leaves the token stream unchanged
+        let p = SamplingParams {
+            temperature: 1.3,
+            top_k: 8,
+            seed: 5,
+            ..Default::default()
+        };
+        let rows: Vec<Vec<f32>> = (0..12).map(|i| logits(50 + i, 64)).collect();
+        let run = |guess: fn(usize) -> Option<u16>| -> Vec<u16> {
+            let mut s = Some(Sampler::new(p));
+            rows.iter()
+                .enumerate()
+                .map(|(i, r)| verify_pick(&mut s, r, guess(i)).0)
+                .collect()
+        };
+        let a = run(|_| None);
+        let b = run(|i| Some((i * 7) as u16 % 64));
+        assert_eq!(a, b, "draws must not depend on the draft guesses");
     }
 }

@@ -15,6 +15,7 @@ use std::net::{TcpStream, ToSocketAddrs};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::model::engine::sampler::SamplingParams;
+use crate::serve::spec::{SpecRequest, SpecUsage};
 use crate::util::json::Json;
 
 /// One generation request (builder-style).
@@ -25,6 +26,7 @@ pub struct GenRequest {
     pub model: Option<String>,
     pub sampling: Option<SamplingParams>,
     pub stop_tokens: Vec<u16>,
+    pub spec: Option<SpecRequest>,
     pub stream: bool,
 }
 
@@ -60,6 +62,22 @@ impl GenRequest {
     /// Ask for per-token streaming (v1).
     pub fn streaming(mut self) -> Self {
         self.stream = true;
+        self
+    }
+
+    /// Speculative decoding (v1): serve through the routed model's
+    /// registered pair — optionally pinning a specific `draft` — with
+    /// an optional per-request depth `k` (0 = speculation off for this
+    /// request; `None` = the pair's registered depth).
+    pub fn speculative(
+        mut self,
+        draft: Option<&str>,
+        k: Option<usize>,
+    ) -> Self {
+        self.spec = Some(SpecRequest {
+            draft: draft.map(String::from),
+            k,
+        });
         self
     }
 
@@ -105,6 +123,16 @@ impl GenRequest {
                 ),
             );
         }
+        if let Some(sr) = &self.spec {
+            let mut s = Json::obj();
+            if let Some(d) = &sr.draft {
+                s.set("draft", Json::str(d));
+            }
+            if let Some(k) = sr.k {
+                s.set("k", Json::num(k as f64));
+            }
+            o.set("spec", s);
+        }
         if self.stream {
             o.set("stream", Json::Bool(true));
         }
@@ -120,6 +148,8 @@ pub struct GenReply {
     pub tokens: Vec<u16>,
     pub finish_reason: Option<String>,
     pub model: Option<String>,
+    /// Acceptance counters when a speculative pair served the request.
+    pub spec: Option<SpecUsage>,
     pub queue_ms: f64,
     pub prefill_ms: f64,
     pub decode_ms: f64,
@@ -232,6 +262,21 @@ fn parse_reply(j: &Json) -> Result<GenReply, String> {
                 .ok_or_else(|| "reply token out of range".to_string())
         })
         .collect::<Result<Vec<u16>, String>>()?;
+    let spec = match j.get("spec") {
+        None => None,
+        Some(s) => {
+            let field = |key: &str| -> Result<u64, String> {
+                s.get(key)
+                    .and_then(|v| v.as_f64())
+                    .map(|v| v as u64)
+                    .ok_or(format!("reply spec missing '{key}'"))
+            };
+            Some(SpecUsage {
+                drafted: field("drafted")?,
+                accepted: field("accepted")?,
+            })
+        }
+    };
     Ok(GenReply {
         id: num("id")? as u64,
         tokens,
@@ -240,6 +285,7 @@ fn parse_reply(j: &Json) -> Result<GenReply, String> {
             .and_then(|v| v.as_str())
             .map(String::from),
         model: j.get("model").and_then(|v| v.as_str()).map(String::from),
+        spec,
         queue_ms: num("queue_ms")?,
         prefill_ms: num("prefill_ms")?,
         decode_ms: num("decode_ms")?,
@@ -280,6 +326,24 @@ mod tests {
         assert_eq!(p.sampling, Some(sp));
         assert_eq!(p.stop_tokens, vec![2, 7]);
         assert!(p.stream);
+    }
+
+    #[test]
+    fn spec_knobs_roundtrip_through_the_protocol() {
+        let line = GenRequest::greedy(&[4])
+            .model("dense")
+            .speculative(Some("mosaic70"), Some(6))
+            .wire_line();
+        let p = crate::serve::protocol::parse_request(&line).unwrap();
+        assert!(p.v1);
+        let s = p.spec.unwrap();
+        assert_eq!(s.draft.as_deref(), Some("mosaic70"));
+        assert_eq!(s.k, Some(6));
+        // bare opt-in: "use whatever pair the routed model has"
+        let line =
+            GenRequest::greedy(&[4]).speculative(None, None).wire_line();
+        let p = crate::serve::protocol::parse_request(&line).unwrap();
+        assert_eq!(p.spec, Some(SpecRequest::default()));
     }
 
     #[test]

@@ -27,11 +27,18 @@
 //! (`stop_tokens` + `max_new` → [`FinishReason`]), and opt-in
 //! per-token streaming ([`Event::Token`] lines as tokens are decoded).
 //!
+//! [`spec`] adds **speculative pairs**
+//! ([`ModelRegistry::register_spec`]): a registered pruned variant
+//! drafts k tokens per round and its dense parent verifies them in one
+//! fused pass — dense-quality tokens, bit-identical to serving the
+//! target alone, requested via the `"spec"` protocol field.
+//!
 //! Everything is std-only (no tokio in this image): one OS thread per
 //! connection for IO, one engine thread per registered model.
 
 pub mod client;
 pub mod protocol;
+pub mod spec;
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -45,6 +52,7 @@ use crate::model::engine::argmax;
 use crate::model::{DecodeBatch, ModelWeights, PREFILL_CHUNK};
 
 pub use crate::model::engine::sampler::{Sampler, SamplingParams};
+pub use spec::{spec_engine_loop, SpecRequest, SpecUsage, MAX_SPEC_K};
 
 /// Name the single-model [`Server::start`] path registers its model
 /// under (kept for v0 compatibility: those servers have one anonymous
@@ -115,6 +123,10 @@ pub struct Request {
     /// Emit [`Event::Token`] per decoded token before the final
     /// [`Event::Done`].
     pub stream: bool,
+    /// Per-request draft depth for a speculative pair engine (resolved
+    /// at admission from the request's `"spec"` field; `None` = the
+    /// pair's registered depth; ignored by plain model engines).
+    pub spec_k: Option<usize>,
     pub enqueued: Instant,
     pub reply: mpsc::Sender<Event>,
 }
@@ -126,6 +138,9 @@ pub struct Reply {
     pub finish_reason: FinishReason,
     /// Registered name of the model that served the request.
     pub model: String,
+    /// Speculation counters when a [`SpecRequest`]-routed pair served
+    /// the request (`None` for plain model engines).
+    pub spec: Option<SpecUsage>,
     pub queue_ms: f64,
     pub prefill_ms: f64,
     pub decode_ms: f64,
@@ -171,6 +186,12 @@ pub struct ServeStats {
     /// per-step decode cost without queue/idle/prefill time — what the
     /// width-sweep bench reports)
     pub step_wall_us: AtomicU64,
+    /// tokens proposed by a speculative pair's draft engine
+    pub drafted: AtomicU64,
+    /// drafted tokens the target's own pick confirmed (committed)
+    pub draft_accepted: AtomicU64,
+    /// draft→verify round trips completed (per sequence per round)
+    pub spec_rounds: AtomicU64,
 }
 
 impl ServeStats {
@@ -181,6 +202,16 @@ impl ServeStats {
         }
         self.batch_occupancy_sum.load(Ordering::Relaxed) as f64
             / steps as f64
+    }
+
+    /// Fraction of drafted tokens the target confirmed (0.0 when the
+    /// engine never drafted — plain models, or k = 0 requests).
+    pub fn acceptance_rate(&self) -> f64 {
+        let d = self.drafted.load(Ordering::Relaxed);
+        if d == 0 {
+            return 0.0;
+        }
+        self.draft_accepted.load(Ordering::Relaxed) as f64 / d as f64
     }
 }
 
@@ -196,6 +227,10 @@ pub struct SubmitSpec {
     pub sampling: Option<SamplingParams>,
     pub stop_tokens: Vec<u16>,
     pub stream: bool,
+    /// Speculative decoding knobs: route to the pair serving the
+    /// routed model (optionally requiring a specific draft) with an
+    /// optional per-request depth override.
+    pub spec: Option<SpecRequest>,
 }
 
 impl SubmitSpec {
@@ -221,6 +256,18 @@ impl SubmitSpec {
 #[derive(Default)]
 pub struct ModelRegistry {
     models: Vec<(String, ModelWeights)>,
+    specs: Vec<SpecPairDef>,
+}
+
+/// A registered speculative pair: `draft` proposes `k` tokens per
+/// round, `target` verifies them in one fused pass. Both must name
+/// already-registered models; the pair gets its own engine thread
+/// (sharing the two models' weights by `Arc`), queue and stats.
+struct SpecPairDef {
+    name: String,
+    target: String,
+    draft: String,
+    k: usize,
 }
 
 impl ModelRegistry {
@@ -236,11 +283,66 @@ impl ModelRegistry {
     ) -> anyhow::Result<&mut Self> {
         anyhow::ensure!(!name.is_empty(), "model name must be non-empty");
         anyhow::ensure!(
-            self.models.iter().all(|(n, _)| n != name),
+            self.name_free(name),
             "model '{name}' already registered"
         );
         self.models.push((name.to_string(), model));
         Ok(self)
+    }
+
+    /// Register a speculative pair under `name`: requests routed to it
+    /// are drafted `k` tokens per round by the registered model
+    /// `draft` and verified by the registered model `target`, with
+    /// output bit-identical to serving `target` alone. Both models
+    /// must be registered first (the pair shares their weights, it
+    /// does not copy them); the two vocabularies must match (the draft
+    /// proposes tokens the target scores).
+    pub fn register_spec(
+        &mut self,
+        name: &str,
+        target: &str,
+        draft: &str,
+        k: usize,
+    ) -> anyhow::Result<&mut Self> {
+        anyhow::ensure!(!name.is_empty(), "pair name must be non-empty");
+        anyhow::ensure!(
+            self.name_free(name),
+            "model '{name}' already registered"
+        );
+        anyhow::ensure!(
+            (1..=spec::MAX_SPEC_K).contains(&k),
+            "spec pair depth k={k} out of range [1, {}]",
+            spec::MAX_SPEC_K
+        );
+        let find = |who: &str| {
+            self.models
+                .iter()
+                .find(|(n, _)| n == who)
+                .map(|(_, m)| m)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "spec pair '{name}' references unregistered \
+                         model '{who}' (register it first)"
+                    )
+                })
+        };
+        let (tv, dv) = (find(target)?.cfg.vocab, find(draft)?.cfg.vocab);
+        anyhow::ensure!(
+            tv == dv,
+            "spec pair '{name}': target vocab {tv} != draft vocab {dv}"
+        );
+        self.specs.push(SpecPairDef {
+            name: name.to_string(),
+            target: target.to_string(),
+            draft: draft.to_string(),
+            k,
+        });
+        Ok(self)
+    }
+
+    fn name_free(&self, name: &str) -> bool {
+        self.models.iter().all(|(n, _)| n != name)
+            && self.specs.iter().all(|s| s.name != name)
     }
 
     /// Register a sealed variant straight from a deployment file
@@ -268,13 +370,22 @@ impl ModelRegistry {
     }
 }
 
-/// One running engine: the admission-side view of a registered model.
+/// What kind of engine an entry fronts: a plain model, or a
+/// speculative pair (draft + target coupled in one engine thread).
+enum EntryKind {
+    Model,
+    Spec { target: String, draft: String, k: usize },
+}
+
+/// One running engine: the admission-side view of a registered model
+/// or speculative pair.
 struct EngineEntry {
     name: Arc<String>,
     vocab: usize,
     resident_bytes: usize,
     tx: mpsc::SyncSender<Request>,
     stats: Arc<ServeStats>,
+    kind: EntryKind,
 }
 
 /// Admission + routing state shared by the accept loop, every
@@ -286,6 +397,7 @@ struct Router {
     default_ix: usize,
     next_id: AtomicU64,
     default_max_new: usize,
+    max_ctx: usize,
     allow_stream: bool,
     /// server-wide stop flag: admission refuses once shutdown begins,
     /// so engines (which exit when idle) cannot be kept alive forever
@@ -315,6 +427,60 @@ impl Router {
         }
     }
 
+    /// Pick the engine a speculative request actually runs on: the
+    /// routed entry when it already is a pair, otherwise the pair
+    /// whose target is the routed model (and whose draft matches, when
+    /// the request names one).
+    fn resolve_spec<'a>(
+        &'a self,
+        routed: &'a EngineEntry,
+        want: &SpecRequest,
+    ) -> Result<&'a EngineEntry, String> {
+        if let Some(k) = want.k {
+            if k > MAX_SPEC_K {
+                return Err(format!(
+                    "spec k {k} out of range [0, {MAX_SPEC_K}]"
+                ));
+            }
+        }
+        let draft_ok = |draft: &str| match want.draft.as_deref() {
+            None => true,
+            Some(d) => d == draft,
+        };
+        match &routed.kind {
+            EntryKind::Spec { draft, .. } => {
+                if !draft_ok(draft) {
+                    return Err(format!(
+                        "pair '{}' drafts with '{draft}', not '{}'",
+                        routed.name,
+                        want.draft.as_deref().unwrap_or(""),
+                    ));
+                }
+                Ok(routed)
+            }
+            EntryKind::Model => self
+                .entries
+                .iter()
+                .find(|e| match &e.kind {
+                    EntryKind::Spec { target, draft, .. } => {
+                        *target == *routed.name && draft_ok(draft)
+                    }
+                    EntryKind::Model => false,
+                })
+                .ok_or_else(|| {
+                    let with = match &want.draft {
+                        Some(d) => format!(" with draft '{d}'"),
+                        None => String::new(),
+                    };
+                    format!(
+                        "no speculative pair registered for model \
+                         '{}'{with}",
+                        routed.name
+                    )
+                }),
+        }
+    }
+
     /// Admission: route, validate against the routed model, enqueue
     /// with backpressure. Returns the reply channel.
     fn admit(
@@ -324,12 +490,35 @@ impl Router {
         if self.stop.load(Ordering::Relaxed) {
             return Err("server shutting down".into());
         }
-        let entry = self.resolve(spec.model.as_deref())?;
+        let routed = self.resolve(spec.model.as_deref())?;
+        let (entry, spec_k) = match &spec.spec {
+            None => (routed, None),
+            Some(want) => {
+                let pair = self.resolve_spec(routed, want)?;
+                let k = match (&pair.kind, want.k) {
+                    (_, Some(k)) => k,
+                    (EntryKind::Spec { k, .. }, None) => *k,
+                    (EntryKind::Model, None) => unreachable!(),
+                };
+                (pair, Some(k))
+            }
+        };
         if spec.stream && !self.allow_stream {
             return Err("streaming disabled on this server".into());
         }
         if spec.prompt.is_empty() {
             return Err("empty prompt".into());
+        }
+        // a request must FIT: silently clamping the prompt to
+        // max_ctx - max_new used to shred it to zero tokens whenever
+        // max_new >= max_ctx and serve garbage from an empty prefix
+        let max_new = spec.max_new.unwrap_or(self.default_max_new);
+        if spec.prompt.len() + max_new > self.max_ctx {
+            return Err(format!(
+                "prompt + max_new exceeds context ({} + {max_new} > {})",
+                spec.prompt.len(),
+                self.max_ctx
+            ));
         }
         // the protocol only bounds tokens structurally (< 65536); the
         // served model's real vocab is enforced here so out-of-vocab
@@ -350,10 +539,11 @@ impl Router {
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             prompt: spec.prompt,
-            max_new: spec.max_new.unwrap_or(self.default_max_new),
+            max_new,
             sampling: spec.sampling,
             stop_tokens: spec.stop_tokens,
             stream: spec.stream,
+            spec_k,
             enqueued: Instant::now(),
             reply: rtx,
         };
@@ -387,7 +577,7 @@ struct ActiveSeq {
     sampler: Option<Sampler>,
     /// prompt tokens fed so far (chunked-prefill cursor)
     cursor: usize,
-    /// effective prompt length after the ctx cap
+    /// prompt length (admission guarantees prompt + max_new fits)
     limit: usize,
     queue_ms: f64,
     prefill_ms: f64,
@@ -442,10 +632,14 @@ pub fn engine_loop(
                 }
             };
             let queue_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
-            let limit = req
-                .prompt
-                .len()
-                .min(cfg.max_ctx.saturating_sub(req.max_new));
+            // admission rejects anything that cannot fit — never clamp
+            // the prompt here (a clamp silently truncates it to zero
+            // tokens when max_new >= max_ctx and serves garbage)
+            debug_assert!(
+                req.prompt.len() + req.max_new <= cfg.max_ctx,
+                "admission must reject requests that cannot fit"
+            );
+            let limit = req.prompt.len();
             let si = batch.admit(&model, limit + req.max_new);
             debug_assert_eq!(si, active.len());
             let sampler = req.sampling.map(Sampler::new);
@@ -511,6 +705,7 @@ pub fn engine_loop(
                     FinishReason::Length
                 },
                 model: (*name).clone(),
+                spec: None,
                 queue_ms: seq.queue_ms,
                 prefill_ms: seq.prefill_ms,
                 decode_ms: seq.decode_t0.elapsed().as_secs_f64() * 1e3,
@@ -640,12 +835,16 @@ impl Server {
             !registry.is_empty(),
             "registry has no models to serve"
         );
+        // entry order: models first, then spec pairs — default_model
+        // may name either
         let default_ix = match &cfg.default_model {
             None => 0,
             Some(name) => registry
                 .models
                 .iter()
-                .position(|(n, _)| n == name)
+                .map(|(n, _)| n.as_str())
+                .chain(registry.specs.iter().map(|s| s.name.as_str()))
+                .position(|n| n == name)
                 .ok_or_else(|| {
                     anyhow::anyhow!(
                         "default_model '{name}' is not registered \
@@ -661,6 +860,9 @@ impl Server {
 
         let mut entries = Vec::new();
         let mut engine_handles = Vec::new();
+        // model weights live behind Arcs so spec pairs can share them
+        // with the plain engines without copying
+        let mut arcs: Vec<(Arc<String>, Arc<ModelWeights>)> = Vec::new();
         for (name, model) in registry.models {
             let name = Arc::new(name);
             let stats = Arc::new(ServeStats::default());
@@ -668,6 +870,7 @@ impl Server {
             let vocab = model.cfg.vocab;
             let resident_bytes = model.resident_bytes();
             let model = Arc::new(model);
+            arcs.push((name.clone(), model.clone()));
             let handle = {
                 let (name, cfg, stats, stop) = (
                     name.clone(),
@@ -686,6 +889,52 @@ impl Server {
                 resident_bytes,
                 tx,
                 stats,
+                kind: EntryKind::Model,
+            });
+        }
+        for pair in registry.specs {
+            let lookup = |who: &str| {
+                arcs.iter()
+                    .find(|(n, _)| n.as_str() == who)
+                    .map(|(_, m)| m.clone())
+                    .expect("register_spec validated the names")
+            };
+            let (target, draft) = (lookup(&pair.target), lookup(&pair.draft));
+            let name = Arc::new(pair.name);
+            let stats = Arc::new(ServeStats::default());
+            let (tx, rx) = mpsc::sync_channel::<Request>(cfg.max_queue);
+            let vocab = target.cfg.vocab;
+            // the working set the pair actually streams per round
+            let resident_bytes =
+                target.resident_bytes() + draft.resident_bytes();
+            let handle = {
+                let (target, draft, name, k, cfg, stats, stop) = (
+                    target,
+                    draft,
+                    name.clone(),
+                    pair.k,
+                    cfg.clone(),
+                    stats.clone(),
+                    stop.clone(),
+                );
+                std::thread::spawn(move || {
+                    spec_engine_loop(
+                        target, draft, name, k, cfg, rx, stats, stop,
+                    )
+                })
+            };
+            engine_handles.push(handle);
+            entries.push(EngineEntry {
+                name,
+                vocab,
+                resident_bytes,
+                tx,
+                stats,
+                kind: EntryKind::Spec {
+                    target: pair.target,
+                    draft: pair.draft,
+                    k: pair.k,
+                },
             });
         }
         let router = Arc::new(Router {
@@ -693,6 +942,7 @@ impl Server {
             default_ix,
             next_id: AtomicU64::new(1),
             default_max_new: cfg.default_max_new,
+            max_ctx: cfg.max_ctx,
             allow_stream: cfg.allow_stream,
             stop: stop.clone(),
         });
@@ -826,6 +1076,7 @@ fn handle_conn(
             sampling: parsed.sampling,
             stop_tokens: parsed.stop_tokens,
             stream: parsed.stream,
+            spec: parsed.spec,
         };
         let rrx = match router.admit(spec) {
             Ok(rx) => rx,
@@ -1264,6 +1515,159 @@ mod tests {
             assert!(j.get("queue_ms").is_some());
         }
         assert_ne!(ids[0], ids[1], "per-request ids, not per-connection");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn admission_rejects_prompt_plus_max_new_over_ctx() {
+        // regression: admission used to clamp the prompt with
+        // max_ctx - max_new, so max_new >= max_ctx shredded it to ZERO
+        // tokens and served garbage from an empty prefix — now a
+        // request that cannot fit is refused outright
+        let m = random_model(212);
+        let srv = Server::start(
+            m,
+            ServeConfig { max_ctx: 32, ..Default::default() },
+            0,
+        )
+        .unwrap();
+        // boundary fits exactly: 4 + 28 == 32
+        let rx = srv.submit(vec![1, 2, 3, 4], 28).unwrap();
+        assert!(wait_reply(&rx, T30).is_ok());
+        // one past the boundary is refused
+        let err =
+            srv.submit(vec![1, 2, 3, 4], 29).unwrap_err().to_string();
+        assert!(err.contains("exceeds context"), "{err}");
+        // the old failure mode: max_new alone >= max_ctx
+        let err =
+            srv.submit(vec![1, 2, 3], 32).unwrap_err().to_string();
+        assert!(err.contains("exceeds context"), "{err}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn spec_pair_serves_bit_identical_greedy() {
+        use crate::prune::unstructured::{mask_lowest, scores, Metric};
+        // dense target + its 70 %-magnitude-pruned sealed variant as
+        // the draft: the canonical self-speculative topology
+        let dense = random_model_sized(310, 2, 16, 2, 40, 64, 16);
+        let mut draft = dense.clone();
+        for l in draft.layers.iter_mut() {
+            for s in l.projs.iter_mut() {
+                let t = s.dense_mut();
+                let sc = scores(t, None, Metric::Magnitude);
+                mask_lowest(t, &sc, 0.7);
+            }
+        }
+        draft.compact();
+        let mut reg = ModelRegistry::new();
+        reg.register("dense", dense).unwrap();
+        reg.register("d70", draft).unwrap();
+        reg.register_spec("spec", "dense", "d70", 4).unwrap();
+        let srv =
+            Server::start_registry(reg, ServeConfig::default(), 0)
+                .unwrap();
+        let prompt = vec![1u16, 9, 4, 7];
+        let ask = |model: &str, sr: Option<SpecRequest>| {
+            let spec = SubmitSpec {
+                model: Some(model.into()),
+                spec: sr,
+                ..SubmitSpec::greedy(&prompt, 12)
+            };
+            wait_reply(&srv.submit_spec(spec).unwrap(), T30).unwrap()
+        };
+        let base = ask("dense", None);
+        assert!(base.spec.is_none(), "plain engines carry no counters");
+        // routed by pair name
+        let by_name = ask("spec", None);
+        assert_eq!(by_name.tokens, base.tokens, "bit-identity");
+        assert_eq!(by_name.model, "spec");
+        let u = by_name.spec.expect("pair replies carry counters");
+        assert!(u.accepted <= u.drafted, "{u:?}");
+        // routed from the target via the "spec" request field, with a
+        // per-request depth override
+        let by_field = ask(
+            "dense",
+            Some(SpecRequest {
+                draft: Some("d70".into()),
+                k: Some(8),
+            }),
+        );
+        assert_eq!(by_field.tokens, base.tokens);
+        assert_eq!(by_field.model, "spec");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn spec_routing_validation() {
+        let mut reg = ModelRegistry::new();
+        reg.register("a", random_model(311)).unwrap();
+        reg.register("b", random_model(312)).unwrap();
+        // bad registrations: unknown members, name clash, bad depth
+        assert!(reg.register_spec("p", "a", "ghost", 4).is_err());
+        assert!(reg.register_spec("p", "ghost", "b", 4).is_err());
+        assert!(reg.register_spec("a", "a", "b", 4).is_err());
+        assert!(reg.register_spec("p", "a", "b", 0).is_err());
+        assert!(reg
+            .register_spec("p", "a", "b", MAX_SPEC_K + 1)
+            .is_err());
+        reg.register_spec("p", "a", "b", 4).unwrap();
+        assert!(reg.register_spec("p", "a", "b", 4).is_err());
+        // a model can't be registered over a pair name either
+        assert!(reg.register("p", random_model(313)).is_err());
+        let srv =
+            Server::start_registry(reg, ServeConfig::default(), 0)
+                .unwrap();
+        let sub = |model: &str, sr: SpecRequest| {
+            srv.submit_spec(SubmitSpec {
+                model: Some(model.into()),
+                spec: Some(sr),
+                ..SubmitSpec::greedy(&[1, 2], 4)
+            })
+        };
+        // model b has no pair
+        let err =
+            sub("b", SpecRequest::default()).unwrap_err().to_string();
+        assert!(err.contains("no speculative pair"), "{err}");
+        // the pair drafts with b, not a
+        let err = sub(
+            "p",
+            SpecRequest { draft: Some("a".into()), k: None },
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("drafts with"), "{err}");
+        // per-request k over the cap
+        let err = sub(
+            "a",
+            SpecRequest { draft: None, k: Some(MAX_SPEC_K + 1) },
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("out of range"), "{err}");
+        // k = 0 through the pair: target-only decoding, zero drafts,
+        // and STILL the target's exact tokens (the draft model b has
+        // completely different weights — it must not matter)
+        let base = wait_reply(
+            &srv.submit(vec![1, 2], 4).unwrap(),
+            T30,
+        )
+        .unwrap(); // default model is "a"
+        let off = wait_reply(
+            &sub("a", SpecRequest { draft: None, k: Some(0) }).unwrap(),
+            T30,
+        )
+        .unwrap();
+        assert_eq!(off.tokens, base.tokens);
+        assert_eq!(off.spec.unwrap().drafted, 0);
+        // full depth through a *wrong-weights* draft: acceptance may
+        // be poor but output must be the target's exactly
+        let full = wait_reply(
+            &sub("a", SpecRequest { draft: None, k: Some(8) }).unwrap(),
+            T30,
+        )
+        .unwrap();
+        assert_eq!(full.tokens, base.tokens);
         srv.shutdown();
     }
 

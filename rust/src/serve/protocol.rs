@@ -14,9 +14,11 @@
 //!              "temperature": f?, "top_k": int?, "top_p": f?,
 //!              "seed": int?,             // any → seeded sampling
 //!              "stop_tokens": [int,...]?,
+//!              "spec": {"draft": str?, "k": int?}?,  // speculative
 //!              "stream": bool?, "v": 1?}\n
 //!   Reply:    v0 fields + {"finish_reason": "length"|"stop",
-//!              "model": str}\n
+//!              "model": str}
+//!             + {"spec": {"drafted": n, "accepted": n}}?  // pairs\n
 //!   Stream:   {"event": "token", "id": n, "index": i, "token": t}\n
 //!             ... one line per decoded token, then a final
 //!             {"event": "done", ...v1 reply fields...}\n
@@ -28,6 +30,7 @@
 //! routed model.
 
 use crate::model::engine::sampler::SamplingParams;
+use crate::serve::spec::{SpecRequest, MAX_SPEC_K};
 use crate::util::json::Json;
 
 /// Hard cap on `stop_tokens` length (sanity bound, not a tuning knob).
@@ -44,6 +47,9 @@ pub struct ParsedRequest {
     /// `Some` when any sampling field was present; `None` = greedy.
     pub sampling: Option<SamplingParams>,
     pub stop_tokens: Vec<u16>,
+    /// `Some` when the request asked for speculative decoding
+    /// (`"spec"` object); admission resolves the pair.
+    pub spec: Option<SpecRequest>,
     pub stream: bool,
 }
 
@@ -106,10 +112,13 @@ pub fn parse_request(line: &str) -> Result<ParsedRequest, String> {
         sampled = true;
     }
     if let Some(v) = j.get("top_k") {
+        // 0 disables the filter — the old bound rejected it on the
+        // wire while the in-process validator accepted it, and the
+        // error text lied about the range either way
         let k = v
             .as_f64()
-            .filter(|k| k.fract() == 0.0 && (1.0..=65536.0).contains(k))
-            .ok_or("top_k out of range [1, 65536]")?;
+            .filter(|k| k.fract() == 0.0 && (0.0..=65536.0).contains(k))
+            .ok_or("top_k out of range [0, 65536] (0 = off)")?;
         sp.top_k = k as usize;
         sampled = true;
     }
@@ -143,6 +152,36 @@ pub fn parse_request(line: &str) -> Result<ParsedRequest, String> {
             toks
         }
     };
+    let spec = match j.get("spec") {
+        None => None,
+        Some(s) => {
+            v1 = true;
+            s.as_obj().ok_or("spec must be an object")?;
+            let draft = match s.get("draft") {
+                None => None,
+                Some(d) => Some(
+                    d.as_str()
+                        .filter(|n| !n.is_empty())
+                        .ok_or("spec.draft must be a non-empty string")?
+                        .to_string(),
+                ),
+            };
+            let k = match s.get("k") {
+                None => None,
+                Some(v) => Some(
+                    v.as_f64()
+                        .filter(|k| {
+                            k.fract() == 0.0
+                                && (0.0..=MAX_SPEC_K as f64).contains(k)
+                        })
+                        .ok_or(format!(
+                            "spec.k out of range [0, {MAX_SPEC_K}]"
+                        ))? as usize,
+                ),
+            };
+            Some(SpecRequest { draft, k })
+        }
+    };
     let stream = match j.get("stream") {
         None => false,
         Some(b) => {
@@ -157,6 +196,7 @@ pub fn parse_request(line: &str) -> Result<ParsedRequest, String> {
         model,
         sampling: sampled.then_some(sp),
         stop_tokens,
+        spec,
         stream,
     })
 }
@@ -182,10 +222,18 @@ pub fn reply_line(r: &super::Reply) -> String {
 
 /// v0 fields + finish_reason + the serving model's name (shared by
 /// the v1 reply and the streaming summary so the two cannot diverge).
+/// Requests served by a speculative pair additionally carry the
+/// acceptance counters.
 fn v1_reply(r: &super::Reply) -> Json {
     let mut o = base_reply(r);
     o.set("finish_reason", Json::str(r.finish_reason.as_str()));
     o.set("model", Json::str(&r.model));
+    if let Some(u) = &r.spec {
+        let mut s = Json::obj();
+        s.set("drafted", Json::num(u.drafted as f64));
+        s.set("accepted", Json::num(u.accepted as f64));
+        o.set("spec", s);
+    }
     o
 }
 
@@ -228,6 +276,7 @@ mod tests {
             tokens: vec![1, 2, 3],
             finish_reason: FinishReason::Length,
             model: "default".into(),
+            spec: None,
             queue_ms: 0.5,
             prefill_ms: 1.25,
             decode_ms: 9.0,
@@ -317,9 +366,16 @@ mod tests {
             "{\"prompt\": [1], \"temperature\": -0.5}",
             "{\"prompt\": [1], \"temperature\": 2000}",
             "{\"prompt\": [1], \"temperature\": \"hot\"}",
-            "{\"prompt\": [1], \"top_k\": 0}",
             "{\"prompt\": [1], \"top_k\": 1.5}",
+            "{\"prompt\": [1], \"top_k\": 65537}",
             "{\"prompt\": [1], \"top_k\": 100000}",
+            // bad speculative fields
+            "{\"prompt\": [1], \"spec\": 4}",
+            "{\"prompt\": [1], \"spec\": {\"draft\": \"\"}}",
+            "{\"prompt\": [1], \"spec\": {\"draft\": 9}}",
+            "{\"prompt\": [1], \"spec\": {\"k\": 17}}",
+            "{\"prompt\": [1], \"spec\": {\"k\": -1}}",
+            "{\"prompt\": [1], \"spec\": {\"k\": 1.5}}",
             "{\"prompt\": [1], \"top_p\": 0}",
             "{\"prompt\": [1], \"top_p\": 1.01}",
             "{\"prompt\": [1], \"seed\": -3}",
@@ -339,6 +395,75 @@ mod tests {
              \"temperature\": 1000, \"top_k\": 65536, \"top_p\": 1}"
         )
         .is_ok());
+    }
+
+    #[test]
+    fn top_k_boundary_values_on_the_wire() {
+        // regression (pre-fix this failed): 0 means "top-k off" and
+        // must be accepted on the wire exactly like the in-process
+        // validator accepts it; 65536 is the top of the range, 65537
+        // is out and the error must state the REAL range
+        for (k, ok) in
+            [(0u32, true), (1, true), (65536, true), (65537, false)]
+        {
+            let line = format!("{{\"prompt\": [1], \"top_k\": {k}}}");
+            let res = parse_request(&line);
+            assert_eq!(res.is_ok(), ok, "top_k {k}: {res:?}");
+        }
+        let err = parse_request("{\"prompt\": [1], \"top_k\": 70000}")
+            .unwrap_err();
+        assert!(err.contains("[0, 65536]"), "{err}");
+        let p = parse_request("{\"prompt\": [1], \"top_k\": 0}").unwrap();
+        assert_eq!(p.sampling.unwrap().top_k, 0);
+        assert!(p.sampling.unwrap().validate().is_ok());
+    }
+
+    #[test]
+    fn parse_spec_field() {
+        let p = parse_request(
+            "{\"prompt\": [1], \
+             \"spec\": {\"draft\": \"mosaic70\", \"k\": 4}}",
+        )
+        .unwrap();
+        assert!(p.v1, "spec is a v1 field");
+        let s = p.spec.unwrap();
+        assert_eq!(s.draft.as_deref(), Some("mosaic70"));
+        assert_eq!(s.k, Some(4));
+        // both members optional; empty object = "the routed model's
+        // pair at its default depth"
+        let p = parse_request("{\"prompt\": [1], \"spec\": {}}").unwrap();
+        assert_eq!(p.spec, Some(SpecRequest::default()));
+        // k boundaries: 0 (off) and MAX_SPEC_K parse
+        for k in [0, MAX_SPEC_K] {
+            let line =
+                format!("{{\"prompt\": [1], \"spec\": {{\"k\": {k}}}}}");
+            let p = parse_request(&line).unwrap();
+            assert_eq!(p.spec.unwrap().k, Some(k));
+        }
+        // a plain request carries no spec
+        assert!(parse_request("{\"prompt\": [1]}").unwrap().spec.is_none());
+    }
+
+    #[test]
+    fn spec_counters_in_v1_reply_only_for_pairs() {
+        use crate::serve::SpecUsage;
+        let mut r = reply();
+        // plain engines: no "spec" key at all
+        let line = reply_line_v1(&r);
+        assert!(Json::parse(line.trim()).unwrap().get("spec").is_none());
+        r.spec = Some(SpecUsage { drafted: 12, accepted: 9 });
+        let line = reply_line_v1(&r);
+        let j = Json::parse(line.trim()).unwrap();
+        let s = j.get("spec").unwrap();
+        assert_eq!(s.get("drafted").unwrap().as_usize(), Some(12));
+        assert_eq!(s.get("accepted").unwrap().as_usize(), Some(9));
+        // the streaming summary shares the builder
+        let d = done_line(&r);
+        let j = Json::parse(d.trim()).unwrap();
+        assert!(j.get("spec").is_some());
+        // and v0 replies never leak it
+        let v0 = reply_line(&r);
+        assert!(Json::parse(v0.trim()).unwrap().get("spec").is_none());
     }
 
     #[test]

@@ -1,0 +1,524 @@
+//! Self-speculative serving: the Mosaic-pruned variant drafts, the
+//! dense parent verifies — dense-quality tokens at pruned-model speed.
+//!
+//! The paper's deployment claim is that composite-pruned models decode
+//! up to 67 % faster while staying close to dense quality (PAPER.md
+//! §Evaluation). A spec pair (`super::ModelRegistry::register_spec`)
+//! turns that speed into **dense-quality** throughput: per round the
+//! draft engine (the pruned variant) proposes `k` tokens one step at a
+//! time, then the target engine (the dense parent) scores all `k + 1`
+//! positions in ONE fused pass ([`DecodeBatch::step_verify`] — one
+//! weight pass per projection for the whole window) and the longest
+//! agreeing prefix plus one corrected token is committed.
+//!
+//! ## The bit-identity contract
+//!
+//! Acceptance is **equality against the target's own pick**
+//! ([`verify_pick`]): at every verified position the target picks its
+//! token exactly as target-only decoding would (greedy argmax, or one
+//! `Sampler::sample` draw), and a draft token survives only when it
+//! equals that pick. Two guarantees follow, and the parity harness in
+//! `rust/tests/spec_decode.rs` locks both down:
+//!
+//! * **greedy output is byte-identical to target-only decoding** — the
+//!   committed stream IS the target's stream, speculation only changes
+//!   how many weight passes it took to produce it;
+//! * **seeded sampling consumes the same per-request PCG32 stream
+//!   regardless of acceptance pattern** — exactly one draw per
+//!   committed token, never one for a rejected draft, so the sampled
+//!   stream is also bit-identical to target-only decoding.
+//!
+//! The draft side never touches the request RNG: drafts are always
+//! greedy argmax picks (a draft is a *guess* at the target's choice,
+//! and it cannot see the target's draw).
+//!
+//! ## KV rollback
+//!
+//! The verify pass writes the whole draft window into the target's KV
+//! cache. After acceptance, [`DecodeBatch::truncate`] rolls the cache
+//! cursor back to `committed + 1 + matched` rows; the rejected rows
+//! are overwritten by the next feed. The draft cache rolls back the
+//! same way — except after a *fully accepted* round, where the draft
+//! never consumed its own last token `d_k`: that token is carried as a
+//! one-token `lag` and fed together with the next round's first draft
+//! feed (a two-token chunk through the same fused pass).
+//!
+//! ## Round trip
+//!
+//! ```text
+//!          pending ──► draft engine ──► d1..dk      (k fused passes,
+//!             ▲         (pruned)                      argmax picks)
+//!             │                                          │
+//!   truncate both KVs                                    ▼
+//!   to committed+1+m ◄── accept walk ◄── target step_verify
+//!   commit d1..dm + t    (equality,      [pending,d1..dk] → k+1
+//!   pending ← t           one RNG draw    logits rows, ONE weight
+//!                         per commit)     pass per projection
+//! ```
+//!
+//! Scheduling mirrors [`super::engine_loop`]: continuous batching over
+//! one pair of [`DecodeBatch`]es (`active[i]` ↔ target seq `i` ↔ draft
+//! seq `i`, retirement `swap_remove`s all three in lockstep), chunked
+//! prompt prefill feeding BOTH engines the same chunk per iteration,
+//! and per-request draft depth `k` (the `"spec": {"k": n}` field)
+//! clamped to [`MAX_SPEC_K`] and to the tokens actually remaining.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::model::config::EOS;
+use crate::model::engine::argmax;
+use crate::model::engine::sampler::verify_pick;
+use crate::model::{DecodeBatch, ModelWeights, PREFILL_CHUNK};
+
+use super::{
+    Event, FinishReason, Reply, Request, Sampler, ServeConfig, ServeStats,
+};
+
+/// Hard cap on a speculative pair's draft depth (registry default and
+/// the per-request `"spec": {"k": n}` override alike). Bounds the
+/// verify-window scratch a spec engine preallocates.
+pub const MAX_SPEC_K: usize = 16;
+
+/// Per-request speculative knobs (the typed mirror of the wire
+/// `"spec"` object): route to the pair whose draft is `draft` (None =
+/// whatever pair the routed model has) and draft `k` tokens per round
+/// (None = the pair's registered depth; 0 = speculation off, the
+/// request decodes target-only through the pair engine).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SpecRequest {
+    pub draft: Option<String>,
+    pub k: Option<usize>,
+}
+
+/// Speculation counters for one served request (carried on
+/// [`Reply`]'s `spec` field and the v1 wire reply's `"spec"`
+/// object): `drafted` tokens proposed by the draft model, `accepted`
+/// of them committed. `accepted / drafted` is the acceptance rate;
+/// every round also commits one verified token on top.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpecUsage {
+    pub drafted: u64,
+    pub accepted: u64,
+}
+
+/// One in-flight speculative sequence. Invariant between rounds: both
+/// KV caches hold exactly `committed` consumed tokens (the draft's may
+/// be one short, carried in `lag`), and `pending` is the last emitted
+/// token, not yet consumed by either model.
+struct SpecSeq {
+    req: Request,
+    generated: Vec<u16>,
+    /// last emitted token, not yet fed to either engine
+    pending: u16,
+    /// this round's draft proposals d1..dk
+    drafts: Vec<u16>,
+    /// verify window scratch: [pending, d1..dk]
+    vbuf: Vec<u16>,
+    /// committed token the draft engine has not consumed yet (set
+    /// after a fully-accepted round)
+    lag: Option<u16>,
+    sampler: Option<Sampler>,
+    /// per-request draft depth (0 = target-only)
+    k: usize,
+    /// prompt tokens fed so far (chunked-prefill cursor, shared by
+    /// both engines)
+    cursor: usize,
+    limit: usize,
+    /// tokens consumed & valid in the target KV
+    committed: usize,
+    queue_ms: f64,
+    prefill_ms: f64,
+    decode_t0: Instant,
+    finish: Option<FinishReason>,
+    drafted: u64,
+    accepted: u64,
+}
+
+impl SpecSeq {
+    fn prefilling(&self) -> bool {
+        self.cursor < self.limit
+    }
+
+    /// Emit one committed token (stream event included) and evaluate
+    /// the stop conditions — the same order target-only serving
+    /// commits in, so a stopping token truncates the round's remaining
+    /// commits exactly where target-only decoding would have stopped.
+    /// Returns true when the sequence is finished.
+    fn commit(&mut self, tok: u16) -> bool {
+        self.generated.push(tok);
+        if self.req.stream {
+            let _ = self.req.reply.send(Event::Token {
+                id: self.req.id,
+                index: self.generated.len() - 1,
+                token: tok,
+            });
+        }
+        if tok == EOS || self.req.stop_tokens.contains(&tok) {
+            self.finish = Some(FinishReason::Stop);
+        } else if self.generated.len() >= self.req.max_new {
+            self.finish = Some(FinishReason::Length);
+        }
+        self.finish.is_some()
+    }
+}
+
+/// The speculative engine loop: one thread, two engines. Per
+/// iteration: admit → retire finished → chunked prefill staged for
+/// both engines → draft phase (up to `k` fused passes on the draft) →
+/// one fused verify pass on the target → accept walk + KV rollback.
+pub fn spec_engine_loop(
+    target: Arc<ModelWeights>,
+    draft: Arc<ModelWeights>,
+    name: Arc<String>,
+    pair_k: usize,
+    cfg: ServeConfig,
+    rx: mpsc::Receiver<Request>,
+    stats: Arc<ServeStats>,
+    stop: Arc<AtomicBool>,
+) {
+    // verify windows are up to (MAX_SPEC_K + 1) rows per sequence and
+    // share the fused pass with prefill chunks; the draft side carries
+    // at most a 2-token lag chunk per sequence on top of its budget
+    let mut tb = DecodeBatch::with_rows(
+        &target,
+        cfg.max_batch,
+        cfg.max_ctx,
+        cfg.max_batch * (MAX_SPEC_K + 1) + PREFILL_CHUNK,
+    );
+    let mut db = DecodeBatch::with_rows(
+        &draft,
+        cfg.max_batch,
+        cfg.max_ctx,
+        2 * cfg.max_batch + PREFILL_CHUNK,
+    );
+    let mut active: Vec<SpecSeq> = Vec::new();
+    loop {
+        // ---- admission: fill the batch from the queue (both engines
+        //      admit in lockstep so indices stay mirrored)
+        while active.len() < cfg.max_batch {
+            let req = if active.is_empty() {
+                match rx.recv_timeout(Duration::from_millis(20)) {
+                    Ok(r) => r,
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => return,
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(r) => r,
+                    Err(_) => break,
+                }
+            };
+            let queue_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+            // admission rejects anything that cannot fit — never clamp
+            // the prompt (see engine_loop: a clamp can shred it to
+            // zero tokens and this loop would then verify against the
+            // placeholder pending token)
+            debug_assert!(
+                req.prompt.len() + req.max_new <= cfg.max_ctx,
+                "admission must reject requests that cannot fit"
+            );
+            let limit = req.prompt.len();
+            let ti = tb.admit(&target, limit + req.max_new);
+            let di = db.admit(&draft, limit + req.max_new);
+            debug_assert_eq!(ti, active.len());
+            debug_assert_eq!(di, active.len());
+            let sampler = req.sampling.map(Sampler::new);
+            let k = req.spec_k.unwrap_or(pair_k).min(MAX_SPEC_K);
+            active.push(SpecSeq {
+                req,
+                generated: Vec::new(),
+                pending: EOS,
+                drafts: Vec::new(),
+                vbuf: Vec::new(),
+                lag: None,
+                sampler,
+                k,
+                cursor: 0,
+                limit,
+                committed: 0,
+                queue_ms,
+                prefill_ms: 0.0,
+                decode_t0: Instant::now(),
+                finish: None,
+                drafted: 0,
+                accepted: 0,
+            });
+        }
+        if active.is_empty() {
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            continue;
+        }
+        // ---- retire sequences finished by the previous round
+        //      (swap_remove in lockstep across active + both batches)
+        let mut i = 0;
+        while i < active.len() {
+            let reason = match active[i].finish {
+                Some(r) => r,
+                None => {
+                    i += 1;
+                    continue;
+                }
+            };
+            let seq = active.swap_remove(i);
+            tb.retire(i);
+            db.retire(i);
+            stats.completed.fetch_add(1, Ordering::Relaxed);
+            stats.tokens_out.fetch_add(
+                seq.generated.len() as u64,
+                Ordering::Relaxed,
+            );
+            let reply = Reply {
+                id: seq.req.id,
+                tokens: seq.generated,
+                finish_reason: reason,
+                model: (*name).clone(),
+                spec: Some(SpecUsage {
+                    drafted: seq.drafted,
+                    accepted: seq.accepted,
+                }),
+                queue_ms: seq.queue_ms,
+                prefill_ms: seq.prefill_ms,
+                decode_ms: seq.decode_t0.elapsed().as_secs_f64() * 1e3,
+            };
+            let _ = seq.req.reply.send(Event::Done(reply));
+        }
+        if active.is_empty() {
+            continue;
+        }
+        // ---- plan this iteration's prompt chunks: one shared
+        //      PREFILL_CHUNK budget; the SAME chunk feeds both engines
+        //      so their caches stay positionally in sync
+        let mut pjobs: Vec<(usize, std::ops::Range<usize>, bool)> =
+            Vec::new();
+        let mut budget = PREFILL_CHUNK;
+        for (i, seq) in active.iter().enumerate() {
+            if seq.prefilling() && budget > 0 {
+                let take = budget.min(seq.limit - seq.cursor);
+                let end = seq.cursor + take;
+                pjobs.push((i, seq.cursor..end, end == seq.limit));
+                budget -= take;
+            }
+        }
+        // ---- draft phase: every decode-phase sequence proposes up to
+        //      k_eff tokens, clamped so the round can never commit past
+        //      max_new (hence never past the KV capacity admission
+        //      guarantees). Draft picks are greedy argmax — the
+        //      request's RNG belongs to the target.
+        let mut keff = vec![0usize; active.len()];
+        for (i, seq) in active.iter_mut().enumerate() {
+            seq.drafts.clear();
+            if !seq.prefilling() {
+                let remaining = seq.req.max_new - seq.generated.len();
+                keff[i] = seq.k.min(remaining.saturating_sub(1));
+            }
+        }
+        let rounds = keff.iter().copied().max().unwrap_or(0);
+        {
+            // pass 0 also carries the draft-side prompt chunks and the
+            // lag catch-up chunks ([d_k, pending] after a fully
+            // accepted round)
+            let mut dec: Vec<(usize, u16)> = Vec::new();
+            let mut lags: Vec<(usize, [u16; 2])> = Vec::new();
+            for (i, seq) in active.iter().enumerate() {
+                if keff[i] == 0 {
+                    continue;
+                }
+                match seq.lag {
+                    Some(l) => lags.push((i, [l, seq.pending])),
+                    None => dec.push((i, seq.pending)),
+                }
+            }
+            // k = 0 requests never use their draft cache, so their
+            // prompt chunks skip the draft engine entirely
+            let dpre: Vec<(usize, std::ops::Range<usize>)> = pjobs
+                .iter()
+                .filter(|(i, _, _)| active[*i].k > 0)
+                .map(|(i, r, _)| (*i, r.clone()))
+                .collect();
+            if !dec.is_empty() || !lags.is_empty() || !dpre.is_empty() {
+                let logits = {
+                    let mut staged: Vec<(usize, &[u16], bool)> =
+                        Vec::new();
+                    for (i, pair) in &lags {
+                        staged.push((*i, &pair[..], true));
+                    }
+                    for (i, r) in &dpre {
+                        staged.push((
+                            *i,
+                            &active[*i].req.prompt[r.clone()],
+                            false,
+                        ));
+                    }
+                    db.step_fused(&draft, &dec, &staged)
+                };
+                // logits rows: decode entries first, then the
+                // want_logits (= lag) chunks in stage order
+                for (r, &(i, _)) in dec.iter().enumerate() {
+                    active[i]
+                        .drafts
+                        .push(argmax(logits.row(r)) as u16);
+                }
+                for (r, &(i, _)) in lags.iter().enumerate() {
+                    active[i]
+                        .drafts
+                        .push(argmax(logits.row(dec.len() + r)) as u16);
+                }
+            }
+            for (i, _) in lags {
+                active[i].lag = None;
+            }
+        }
+        for j in 1..rounds {
+            let dec: Vec<(usize, u16)> = active
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| keff[i] > j)
+                .map(|(i, seq)| (i, seq.drafts[j - 1]))
+                .collect();
+            if dec.is_empty() {
+                break;
+            }
+            let logits = db.step(&draft, &dec);
+            for (r, &(i, _)) in dec.iter().enumerate() {
+                active[i].drafts.push(argmax(logits.row(r)) as u16);
+            }
+        }
+        // ---- target pass: every decode-phase sequence's verify
+        //      window [pending, d1..dk] (logits at EVERY row) plus the
+        //      target-side prompt chunks — one fused weight pass
+        for seq in active.iter_mut() {
+            if !seq.prefilling() {
+                seq.vbuf.clear();
+                seq.vbuf.push(seq.pending);
+                seq.vbuf.extend_from_slice(&seq.drafts);
+            }
+        }
+        // (index, window length) pairs owned up-front so the accept
+        // walk below can mutate `active` after the borrow ends
+        let windows: Vec<(usize, usize)> = active
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.prefilling())
+            .map(|(i, s)| (i, s.vbuf.len()))
+            .collect();
+        let vrows: usize = windows.iter().map(|&(_, l)| l).sum();
+        let prows: usize = pjobs.iter().map(|(_, r, _)| r.len()).sum();
+        if vrows + prows == 0 {
+            continue;
+        }
+        let t0 = Instant::now();
+        let logits = {
+            let verify: Vec<(usize, &[u16])> = windows
+                .iter()
+                .map(|&(i, _)| (i, active[i].vbuf.as_slice()))
+                .collect();
+            let staged: Vec<(usize, &[u16], bool)> = pjobs
+                .iter()
+                .map(|(i, r, w)| {
+                    (*i, &active[*i].req.prompt[r.clone()], *w)
+                })
+                .collect();
+            tb.step_verify(&target, &verify, &staged)
+        };
+        let elapsed_us = t0.elapsed().as_secs_f64() * 1e6;
+        if !windows.is_empty() {
+            stats
+                .batch_occupancy_sum
+                .fetch_add(windows.len() as u64, Ordering::Relaxed);
+            stats.batch_steps.fetch_add(1, Ordering::Relaxed);
+            stats.spec_rounds.fetch_add(
+                windows.len() as u64,
+                Ordering::Relaxed,
+            );
+            let verify_share =
+                elapsed_us * vrows as f64 / (vrows + prows) as f64;
+            stats
+                .step_wall_us
+                .fetch_add(verify_share as u64, Ordering::Relaxed);
+        }
+        // ---- accept walk: the target's own pick decides every
+        //      position; a draft survives only by equality. Rollbacks
+        //      are collected first (the logits borrow pins the batch)
+        //      and applied after.
+        let mut truncs: Vec<(usize, usize, bool)> = Vec::new();
+        let mut row = 0usize;
+        for &(i, wlen) in &windows {
+            let seq = &mut active[i];
+            let kd = wlen - 1;
+            seq.drafted += kd as u64;
+            stats.drafted.fetch_add(kd as u64, Ordering::Relaxed);
+            let mut matched = 0usize;
+            let mut last = seq.pending;
+            for j in 0..wlen {
+                let guess = seq.drafts.get(j).copied();
+                let (tok, accepted) = verify_pick(
+                    &mut seq.sampler,
+                    logits.row(row + j),
+                    guess,
+                );
+                if accepted {
+                    matched += 1;
+                }
+                last = tok;
+                let done = seq.commit(tok);
+                if done || !accepted {
+                    break;
+                }
+            }
+            row += wlen;
+            seq.accepted += matched as u64;
+            stats
+                .draft_accepted
+                .fetch_add(matched as u64, Ordering::Relaxed);
+            // valid target rows: old pending + the matched drafts; the
+            // last committed token becomes the next round's pending
+            seq.committed += 1 + matched;
+            if seq.finish.is_some() {
+                continue; // retires next iteration; caches are dropped
+            }
+            seq.pending = last;
+            let full = matched == kd && kd > 0;
+            if full {
+                // draft never consumed its own last proposal — carry
+                // it into the next round's first draft feed
+                seq.lag = Some(seq.drafts[kd - 1]);
+            }
+            truncs.push((i, seq.committed, seq.k > 0 && !full));
+        }
+        // ---- prefill bookkeeping: advance cursors; a completed
+        //      prompt's first token comes from ITS target logits row
+        //      (the target decides everything, draft included)
+        let mut prow = vrows;
+        for (i, r, completes) in pjobs {
+            let seq = &mut active[i];
+            seq.prefill_ms += elapsed_us / 1e3 * r.len() as f64
+                / (vrows + prows) as f64;
+            seq.cursor = r.end;
+            if completes {
+                let (tok, _) = verify_pick(
+                    &mut seq.sampler,
+                    logits.row(prow),
+                    None,
+                );
+                prow += 1;
+                seq.committed = seq.limit;
+                seq.commit(tok);
+                seq.pending = tok;
+                seq.decode_t0 = Instant::now();
+            }
+        }
+        // ---- KV rollback (after the last read of the verify logits,
+        //      which borrow the target batch): drop every rejected row
+        for (i, committed, roll_draft) in truncs {
+            tb.truncate(i, committed);
+            if roll_draft {
+                db.truncate(i, committed);
+            }
+        }
+    }
+}

@@ -175,6 +175,54 @@ fn one_weight_pass_per_projection_per_step() {
 }
 
 #[test]
+fn prefill_chunk_boundary_parity() {
+    // the chunk loop bounds the speculative verify path reuses: prompts
+    // of length exactly PREFILL_CHUNK, PREFILL_CHUNK±1 and
+    // 2*PREFILL_CHUNK must produce logits BIT-IDENTICAL to one
+    // unchunked fused pass over the whole prompt (same kernels, same
+    // summation order — only the row grouping differs), and close to
+    // the forward_full oracle
+    use mosaic::model::{forward_full, PREFILL_CHUNK};
+    let m = random_model(36);
+    for len in [
+        PREFILL_CHUNK - 1,
+        PREFILL_CHUNK,
+        PREFILL_CHUNK + 1,
+        2 * PREFILL_CHUNK,
+    ] {
+        let prompt: Vec<u16> =
+            (0..len).map(|i| (3 + 5 * i) as u16 % 60).collect();
+        let cap = len + 1;
+        // chunked: the production prefill loop
+        let mut chunked = DecodeBatch::new(&m, 1, cap);
+        let sc = chunked.admit(&m, cap);
+        let got =
+            prefill_into(&m, &mut chunked, sc, &prompt).to_vec();
+        assert_eq!(chunked.pos(sc), len, "len {len}: cursor");
+        // unchunked: the whole prompt as ONE fused pass (row budget
+        // sized to fit), logits at the last row
+        let mut whole = DecodeBatch::with_rows(&m, 1, cap, len);
+        let sw = whole.admit(&m, cap);
+        let want = whole
+            .step_fused(&m, &[], &[(sw, &prompt, true)])
+            .row(0)
+            .to_vec();
+        assert_eq!(
+            got, want,
+            "len {len}: chunk boundaries must not change a single bit"
+        );
+        // and both agree with the full-sequence engine oracle
+        let full = forward_full(&m, &prompt);
+        assert_close(&got, full.row(len - 1), "chunked vs forward_full");
+        // the caches line up too: the next decode step matches the
+        // oracle continuation
+        let next_c = chunked.step(&m, &[(sc, 9)]).row(0).to_vec();
+        let next_w = whole.step(&m, &[(sw, 9)]).row(0).to_vec();
+        assert_eq!(next_c, next_w, "len {len}: post-prefill step");
+    }
+}
+
+#[test]
 fn prefill_chunk_counts_one_pass_per_projection() {
     let m = random_model(34);
     let mut batch = DecodeBatch::new(&m, 1, 64);

@@ -206,11 +206,14 @@ fn wire_errors_keep_connection_alive() {
         "{\"max_new\": 3}",
         "{\"prompt\": []}",
         "{\"prompt\": [1], \"temperature\": -2}",
-        "{\"prompt\": [1], \"top_k\": 0}",
+        "{\"prompt\": [1], \"top_k\": 65537}",
         "{\"prompt\": [1], \"top_p\": 2}",
         "{\"prompt\": [1], \"model\": \"ghost\"}",
         "{\"prompt\": [63000], \"max_new\": 2}",
         "{\"prompt\": [1], \"v\": 9}",
+        "{\"prompt\": [1], \"spec\": {\"k\": 99}}",
+        // no pair is registered on this server at all
+        "{\"prompt\": [1], \"spec\": {}}",
     ];
     for req in bad {
         stream.write_all(format!("{req}\n").as_bytes()).unwrap();
@@ -222,13 +225,119 @@ fn wire_errors_keep_connection_alive() {
             "expected error for {req}: {line}"
         );
     }
-    // still alive: a good request succeeds on the same connection
+    // still alive: a good request succeeds on the same connection —
+    // and top_k 0 (= off) is now VALID on the wire, matching the
+    // in-process validator (regression: it used to be rejected while
+    // the error text claimed the range started at 1)
     stream
-        .write_all(b"{\"prompt\": [1, 4], \"max_new\": 2}\n")
+        .write_all(
+            b"{\"prompt\": [1, 4], \"max_new\": 2, \"top_k\": 0, \
+               \"seed\": 3}\n",
+        )
         .unwrap();
     let mut line = String::new();
     reader.read_line(&mut line).unwrap();
     let j = Json::parse(line.trim()).unwrap();
     assert!(j.get("tokens").is_some(), "{line}");
+    srv.shutdown();
+}
+
+/// Satellite regression, wire-level: a request whose prompt + max_new
+/// cannot fit in the context window must be refused with a protocol
+/// error — the old admission clamped the prompt to
+/// `max_ctx - max_new`, which for `max_new >= max_ctx` truncated it to
+/// ZERO tokens and served garbage from an empty prefix.
+#[test]
+fn wire_rejects_prompt_plus_max_new_over_context() {
+    let m = random_model(506);
+    let srv = Server::start(
+        m,
+        ServeConfig { max_ctx: 64, ..Default::default() },
+        0,
+    )
+    .unwrap();
+    let mut stream = TcpStream::connect(srv.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    // max_new == max_ctx: the exact pre-fix garbage-serving shape
+    stream
+        .write_all(b"{\"prompt\": [1, 2, 3], \"max_new\": 64}\n")
+        .unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    let err = j.get("error").expect("must be refused").as_str().unwrap();
+    assert!(err.contains("exceeds context"), "{line}");
+    // the boundary request on the same connection still serves
+    stream
+        .write_all(b"{\"prompt\": [1, 2, 3], \"max_new\": 61}\n")
+        .unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    assert!(j.get("tokens").is_some(), "{line}");
+    srv.shutdown();
+}
+
+/// Speculative pair over real TCP through the typed client: routed by
+/// pair name or via the "spec" field, byte-identical to the dense
+/// reply, acceptance counters on the wire.
+#[test]
+fn client_drives_speculative_pair() {
+    use mosaic::prune::unstructured::{mask_lowest, scores, Metric};
+    let dense = random_model_sized(507, 2, 16, 2, 40, 64, 16);
+    let mut draft = dense.clone();
+    for l in draft.layers.iter_mut() {
+        for s in l.projs.iter_mut() {
+            let t = s.dense_mut();
+            let sc = scores(t, None, Metric::Magnitude);
+            mask_lowest(t, &sc, 0.7);
+        }
+    }
+    draft.compact();
+    let mut reg = ModelRegistry::new();
+    reg.register("dense", dense).unwrap();
+    reg.register("d70", draft).unwrap();
+    reg.register_spec("pair", "dense", "d70", 4).unwrap();
+    let srv =
+        Server::start_registry(reg, ServeConfig::default(), 0).unwrap();
+    let mut c = Client::connect(srv.addr).unwrap();
+    let prompt = [1u16, 9, 4, 7];
+    let base = c
+        .generate(&GenRequest::greedy(&prompt).max_new(12).model("dense"))
+        .unwrap();
+    assert!(base.spec.is_none(), "plain reply has no spec counters");
+    // by pair name
+    let by_name = c
+        .generate(&GenRequest::greedy(&prompt).max_new(12).model("pair"))
+        .unwrap();
+    assert_eq!(by_name.tokens, base.tokens, "wire-level bit-identity");
+    assert_eq!(by_name.model.as_deref(), Some("pair"));
+    let u = by_name.spec.expect("pair reply carries spec counters");
+    assert!(u.accepted <= u.drafted, "{u:?}");
+    // via the "spec" request field on the target model
+    let by_field = c
+        .generate(
+            &GenRequest::greedy(&prompt)
+                .max_new(12)
+                .model("dense")
+                .speculative(Some("d70"), Some(2)),
+        )
+        .unwrap();
+    assert_eq!(by_field.tokens, base.tokens);
+    assert_eq!(by_field.model.as_deref(), Some("pair"));
+    // a wrong draft name is an admission error, connection survives
+    let err = c
+        .generate(
+            &GenRequest::greedy(&prompt)
+                .model("dense")
+                .speculative(Some("ghost"), None),
+        )
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("no speculative pair"), "{err}");
+    let again = c
+        .generate(&GenRequest::greedy(&prompt).max_new(2))
+        .unwrap();
+    assert!(!again.tokens.is_empty());
     srv.shutdown();
 }
