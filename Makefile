@@ -5,7 +5,7 @@
 CARGO ?= cargo
 
 .PHONY: build test fmt check bench bench-serve bench-produce \
-	bench-spec serve-smoke spec-smoke
+	bench-spec bench-kv serve-smoke spec-smoke
 
 build:
 	$(CARGO) build --release
@@ -52,6 +52,14 @@ serve-smoke:
 # rate, p95).
 bench-spec:
 	$(CARGO) bench --bench spec_speed
+
+# Paged-KV capacity trajectory: slab vs observed-residency vs
+# prefix-reuse admission at one fixed page budget, parity-checked
+# (decoded tokens identical across modes; shared cached head costs
+# zero prefill weight passes). Emits machine-readable BENCH_kv.json.
+# Wired into pytest via python/tests/test_kv_smoke.py.
+bench-kv:
+	$(CARGO) bench --bench kv_paging
 
 # Speculative-serving smoke (artifact-free): dense + sealed-70% draft
 # + pair registry over real TCP; asserts greedy spec replies are

@@ -1,0 +1,38 @@
+"""Wire `make bench-kv` into the pytest-driven run: the paged-KV
+admission bench (rust/benches/kv_paging.rs) runs slab, paged and
+paged+prefix admission policies against ONE fixed page budget, checks
+decoded tokens stay identical across modes, asserts observed-residency
+accounting at least doubles admitted concurrency and that a cached
+shared head prefills with zero weight passes, then emits BENCH_kv.json
+and prints KV-BENCH OK.
+
+Skips when the rust toolchain is not present in the image, mirroring
+test_serve_smoke.py."""
+import os
+import shutil
+import subprocess
+
+import pytest
+
+ROOT = os.path.dirname(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+)
+
+
+def test_kv_bench_smoke():
+    if shutil.which("cargo") is None or shutil.which("make") is None:
+        pytest.skip("cargo/make not available in this image")
+    env = dict(os.environ, MOSAIC_BENCH_FAST="1")
+    r = subprocess.run(
+        ["make", "-C", ROOT, "bench-kv"],
+        capture_output=True,
+        text=True,
+        timeout=3600,
+        env=env,
+    )
+    assert r.returncode == 0, (
+        f"make bench-kv failed\n--- stdout ---\n{r.stdout[-4000:]}"
+        f"\n--- stderr ---\n{r.stderr[-4000:]}"
+    )
+    assert "KV-BENCH OK" in r.stdout, r.stdout[-4000:]
+    assert os.path.exists(os.path.join(ROOT, "BENCH_kv.json"))

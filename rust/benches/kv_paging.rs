@@ -1,0 +1,273 @@
+//! Paged-KV admission capacity: how many sequences fit a FIXED page
+//! budget when admission accounts worst-case slabs vs observed
+//! residency vs observed residency + prefix reuse of a shared system
+//! prompt. Same pool, same workload, three admission policies:
+//!
+//! * `slab`  — reserve `max_ctx` rows per sequence up-front (the old
+//!   per-sequence slab accounting);
+//! * `paged` — reserve only `prompt + max_new` (observed need);
+//! * `paged+prefix` — observed need minus the cached shared head.
+//!
+//! Every admitted sequence then actually runs (chunked prefill +
+//! greedy decode), and decoded tokens are parity-checked across modes
+//! — capacity gains that changed a single token would be bugs, not
+//! wins. The prefix mode additionally asserts the shared head costs
+//! ZERO weight passes at prefill (one tail chunk per sequence only).
+//!
+//! Emits `BENCH_kv.json` via `make bench-kv` for cross-PR tracking.
+//! Artifact-free: runs on random weights anywhere.
+
+use std::time::Instant;
+
+use mosaic::bench_support::{header, rec, Bench};
+use mosaic::model::weights::testutil::random_model_sized;
+use mosaic::model::{
+    prefill_into, DecodeBatch, KvConfig, ModelWeights, KV_PAGE,
+    PREFILL_CHUNK,
+};
+use mosaic::tensor::storage::weight_passes;
+use mosaic::util::json::Json;
+
+const MAX_CTX: usize = 256;
+const MAX_BATCH: usize = 32;
+const BUDGET_PAGES: usize = 32; // 1024 positions — 1/8 of worst case
+const HEAD_LEN: usize = 2 * KV_PAGE; // shared system prompt, page-aligned
+const TAIL_LEN: usize = 8; // per-request distinct suffix
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Slab,
+    Paged,
+    PagedPrefix,
+}
+
+impl Mode {
+    fn name(self) -> &'static str {
+        match self {
+            Mode::Slab => "slab",
+            Mode::Paged => "paged",
+            Mode::PagedPrefix => "paged+prefix",
+        }
+    }
+}
+
+struct ModeOut {
+    admitted: usize,
+    /// decoded tokens per admitted request, keyed by request index
+    tokens: Vec<(usize, Vec<u16>)>,
+    kv_bytes: usize,
+    prefix_hit_tokens: u64,
+    prefill_passes: u64,
+    tok_per_s: f64,
+}
+
+fn argmax(row: &[f32]) -> u16 {
+    let mut best = 0usize;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best as u16
+}
+
+/// Admit as many requests as the policy's accounting allows against
+/// the fixed budget, then run them all to completion concurrently.
+fn run_mode(
+    m: &ModelWeights,
+    prompts: &[Vec<u16>],
+    max_new: usize,
+    mode: Mode,
+) -> ModeOut {
+    let kv = KvConfig {
+        page_positions: KV_PAGE,
+        pages: BUDGET_PAGES,
+        prefix_entries: if mode == Mode::PagedPrefix { 8 } else { 0 },
+    };
+    let mut batch =
+        DecodeBatch::with_kv(m, MAX_BATCH, MAX_CTX, PREFILL_CHUNK, kv);
+
+    if mode == Mode::PagedPrefix {
+        // a completed earlier request published the shared head — the
+        // steady-state a long-running server converges to
+        let si = batch.admit(prompts[0].len()).unwrap();
+        prefill_into(m, &mut batch, si, &prompts[0]);
+        batch.cache_prefix(si, &prompts[0]);
+        batch.retire(si);
+    }
+
+    // admission wave: one request at a time until the policy's own
+    // accounting says the budget is spent
+    let mut admitted: Vec<(usize, usize)> = Vec::new(); // (request, hit)
+    for (ri, p) in prompts.iter().enumerate() {
+        if batch.len() == MAX_BATCH {
+            break;
+        }
+        let limit = p.len() + max_new;
+        let (cap, hit) = match mode {
+            Mode::Slab => (MAX_CTX, 0),
+            Mode::Paged => (limit, 0),
+            Mode::PagedPrefix => (limit, batch.prefix_peek(p)),
+        };
+        let need = batch.pages_for(cap) - batch.pages_for(hit);
+        if batch.available_pages() < need {
+            break;
+        }
+        let si = batch.admit_prompt(cap, p, hit).unwrap();
+        assert_eq!(si, admitted.len());
+        assert!(
+            batch.try_reserve(si, cap - hit),
+            "{}: accounting admitted more than the pool holds",
+            mode.name()
+        );
+        admitted.push((ri, hit));
+    }
+    assert!(!admitted.is_empty(), "{}: nothing admitted", mode.name());
+
+    // run everything that got in: chunked prefill, then greedy decode
+    let t0 = Instant::now();
+    let p0 = weight_passes();
+    let mut tokens: Vec<(usize, Vec<u16>)> = Vec::new();
+    for (si, &(ri, hit)) in admitted.iter().enumerate() {
+        let logits =
+            prefill_into(m, &mut batch, si, &prompts[ri][hit..]).to_vec();
+        tokens.push((ri, vec![argmax(&logits)]));
+    }
+    let prefill_passes = weight_passes() - p0;
+    for _ in 1..max_new {
+        let inputs: Vec<(usize, u16)> = tokens
+            .iter()
+            .enumerate()
+            .map(|(si, (_, t))| (si, *t.last().unwrap()))
+            .collect();
+        let rows: Vec<Vec<u16>> = {
+            let t = batch.step(m, &inputs);
+            (0..inputs.len()).map(|r| vec![argmax(t.row(r))]).collect()
+        };
+        for (si, r) in rows.into_iter().enumerate() {
+            tokens[si].1.extend(r);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    ModeOut {
+        admitted: admitted.len(),
+        kv_bytes: batch.kv_bytes(),
+        prefix_hit_tokens: batch.prefix_hit_tokens(),
+        prefill_passes,
+        tok_per_s: (admitted.len() * max_new) as f64 / wall.max(1e-9),
+        tokens,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new(
+        "kv_paging",
+        "paged KV: admitted concurrency at a fixed page budget",
+    );
+    let max_new = if Bench::fast() { 8 } else { 16 };
+    let m = random_model_sized(9, 2, 32, 2, 64, 64, MAX_CTX);
+    // every request shares a page-aligned system head, then diverges
+    let head: Vec<u16> = (0..HEAD_LEN).map(|i| (7 + 5 * i) as u16 % 60).collect();
+    let prompts: Vec<Vec<u16>> = (0..MAX_BATCH)
+        .map(|ri| {
+            let mut p = head.clone();
+            p.extend((0..TAIL_LEN).map(|j| (1 + 3 * ri + 7 * j) as u16 % 60));
+            p
+        })
+        .collect();
+    println!(
+        "budget {BUDGET_PAGES} pages × {KV_PAGE} positions, max_ctx \
+         {MAX_CTX}, prompt {} (shared head {HEAD_LEN}), max_new {max_new}",
+        prompts[0].len()
+    );
+
+    let mut outs: Vec<(Mode, ModeOut)> = Vec::new();
+    println!("\n— admission policy sweep (same pool, same workload) —");
+    header(&["mode", "admitted", "kv-KB", "hit-tok", "tok/s"]);
+    for mode in [Mode::Slab, Mode::Paged, Mode::PagedPrefix] {
+        let o = run_mode(&m, &prompts, max_new, mode);
+        println!(
+            "{:>12}{:>12}{:>12}{:>12}{:>12.0}",
+            mode.name(),
+            o.admitted,
+            o.kv_bytes / 1024,
+            o.prefix_hit_tokens,
+            o.tok_per_s
+        );
+        outs.push((mode, o));
+    }
+
+    // parity: every request admitted by several modes decoded the same
+    // tokens — paging and prefix reuse are capacity features, not
+    // output changes
+    let slab = &outs[0].1;
+    for (mode, o) in &outs[1..] {
+        for (ri, toks) in &o.tokens {
+            if let Some((_, want)) = slab.tokens.iter().find(|(r, _)| r == ri) {
+                assert_eq!(
+                    toks, want,
+                    "{}: request {ri} diverged from slab output",
+                    mode.name()
+                );
+            }
+        }
+    }
+    let (slab_n, paged_n, prefix_n) =
+        (outs[0].1.admitted, outs[1].1.admitted, outs[2].1.admitted);
+    assert!(
+        paged_n >= 2 * slab_n,
+        "observed-residency accounting must at least double admitted \
+         concurrency ({paged_n} vs {slab_n})"
+    );
+    assert!(prefix_n > paged_n, "prefix reuse must admit more still");
+    // shared head costs zero weight passes: one tail chunk per seq,
+    // instead of ceil(prompt/chunk) chunks
+    let chunks_full = prompts[0].len().div_ceil(PREFILL_CHUNK) as u64;
+    let per_chunk = (m.cfg.n_layers * 7) as u64;
+    assert_eq!(
+        outs[1].1.prefill_passes,
+        paged_n as u64 * chunks_full * per_chunk,
+        "paged mode prefills the whole prompt"
+    );
+    assert_eq!(
+        outs[2].1.prefill_passes,
+        prefix_n as u64 * per_chunk,
+        "cached head must prefill with ZERO weight passes (tail only)"
+    );
+    assert_eq!(
+        outs[2].1.prefix_hit_tokens,
+        (prefix_n * HEAD_LEN) as u64,
+        "every prefix-mode admission serves the head from cache"
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+    for (mode, o) in &outs {
+        rows.push(rec(&[
+            ("section", Json::str("kv_admission")),
+            ("mode", Json::str(mode.name())),
+            ("budget_pages", Json::num(BUDGET_PAGES as f64)),
+            ("admitted", Json::num(o.admitted as f64)),
+            ("kv_bytes", Json::num(o.kv_bytes as f64)),
+            ("prefix_hit_tokens", Json::num(o.prefix_hit_tokens as f64)),
+            ("prefill_passes", Json::num(o.prefill_passes as f64)),
+            ("tok_per_s", Json::num(o.tok_per_s)),
+            ("parity", Json::Bool(true)),
+        ]));
+    }
+    for r in &rows {
+        b.row("kv_admission", r.clone());
+    }
+    let mut out = Json::obj();
+    out.set("bench", Json::str("kv_paging"));
+    out.set("max_new", Json::num(max_new as f64));
+    out.set("rows", Json::Arr(rows));
+    std::fs::write("BENCH_kv.json", out.to_string())?;
+    println!("[wrote BENCH_kv.json]");
+
+    println!(
+        "KV-BENCH OK: slab {slab_n} → paged {paged_n} → paged+prefix \
+         {prefix_n} admitted at {BUDGET_PAGES} pages"
+    );
+    b.finish();
+    Ok(())
+}

@@ -273,9 +273,12 @@ fn cmd_deploy(args: &Args) -> Result<()> {
 /// `<category>@<p>` variant (pruned through the production pipeline
 /// and sealed into f16/CSR storage), or a `.mosaic` deployment file.
 /// `--default-model` picks which entry serves requests without a
-/// "model" field; `--stream 0` refuses streaming requests. Without
-/// `--models`, the legacy `--p`/`--category` flags map onto a
-/// single-entry registry.
+/// "model" field; `--stream 0` refuses streaming requests;
+/// `--kv-pages N` caps each engine's paged-KV pool at N pages so
+/// admission oversubscribes worst-case context against observed page
+/// residency (default: slab-equivalent budget, allocation never
+/// fails). Without `--models`, the legacy `--p`/`--category` flags
+/// map onto a single-entry registry.
 ///
 /// `--spec` registers speculative pairs over entries the `--models`
 /// list already created: `dense:sealed70@4` serves dense-verified
@@ -429,6 +432,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_queue: args.usize("queue", 64),
         allow_stream: args.usize("stream", 1) != 0,
         default_model,
+        // --kv-pages N caps each engine's KV pool at N pages
+        // (oversubscribing max_ctx against observed residency);
+        // default 0 keeps the slab-equivalent worst-case budget
+        kv_pages: {
+            let p = args.usize("kv-pages", 0);
+            (p > 0).then_some(p)
+        },
         ..Default::default()
     };
     let port = args.usize("port", 7171) as u16;

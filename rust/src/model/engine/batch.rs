@@ -5,7 +5,7 @@
 //! sequence, so every projection (dense f32/f16 or CSR) was re-streamed
 //! B times per batch step and the memory-bandwidth-bound decode path got
 //! *slower per token* as the continuous batch filled. [`DecodeBatch`]
-//! owns N per-sequence KV caches and positions, gathers the N current
+//! owns N per-sequence positions and page tables, gathers the N current
 //! activation vectors into an (N, d) matrix, and runs **one**
 //! [`matmul_storage_into`] per projection per layer per step — f16 bits
 //! are decoded and CSR rows are traversed exactly once regardless of
@@ -15,10 +15,18 @@
 //! over sequence×head, and the lm_head runs through the
 //! column-block-parallel [`matmul_colpar`].
 //!
-//! Numerics: per-output-element summation order is kk-ascending in every
-//! kernel here, the same as the single-sequence kernels, so a sequence's
-//! logits are bit-identical no matter which batch it shares a step with
-//! — width-1 and width-8 serving produce identical greedy tokens.
+//! KV storage is **paged** (see [`super::paging`]): a sequence's cache
+//! is a page table over a shared [`KvPagePool`], pages are allocated
+//! lazily as positions are written, and refcounted pages let the
+//! prefix cache map a shared prompt head into several sequences at
+//! once with copy-on-write on the first diverging write. The attention
+//! walk visits pages in position-ascending order, so per-score
+//! summation stays kk-ascending — a sequence's logits are
+//! bit-identical no matter the page size, which batch it shares a step
+//! with, or whether its prompt head came from the prefix cache
+//! (width-1 and width-8 serving produce identical greedy tokens;
+//! paged-vs-slab byte-equality is locked down in
+//! rust/tests/kv_paging.rs).
 //!
 //! Prefill goes through the same storage-aware batched kernels, and
 //! [`DecodeBatch::step_fused`] goes further: decode tokens AND pending
@@ -38,9 +46,13 @@
 //! verify row's logits are bit-identical to the decode step that would
 //! have produced them one token at a time. Rejected draft rows are
 //! discarded with [`DecodeBatch::truncate`], which rolls a sequence's
-//! KV cursor back so the next feed overwrites them.
+//! KV cursor back so the next feed overwrites them (through CoW if the
+//! rolled-back page is meanwhile shared with the prefix cache).
+
+use anyhow::{bail, Result};
 
 use crate::model::config::Proj;
+use crate::model::engine::paging::{KvConfig, KvPagePool};
 use crate::model::weights::ModelWeights;
 use crate::tensor::{
     self, gather_rows, matmul_colpar, matmul_storage_into, rmsnorm, silu,
@@ -53,21 +65,27 @@ use crate::util::threadpool::par_chunks_mut;
 /// steps of the other sequences in the batch.
 pub const PREFILL_CHUNK: usize = 32;
 
-/// One sequence's private decode state: per-layer KV cache + position.
+/// One sequence's private decode state: page table + position.
 struct SeqKv {
-    /// per layer: (cap, kept_heads * head_dim)
-    k: Vec<Tensor>,
-    v: Vec<Tensor>,
+    /// page table: position `j`'s KV rows live in pool page
+    /// `table[j / page_positions]`, slot `j % page_positions`. Grown
+    /// lazily as positions are written; never shrunk before retire.
+    table: Vec<u32>,
     pos: usize,
     cap: usize,
+    /// prompt positions attached from the prefix cache at admission
+    prefix_hit: usize,
 }
 
-/// Continuous-batching decode state: N per-sequence KV caches plus the
-/// shared, preallocated activation scratch the batched step runs in.
-/// Scratch buffers are sized once at construction and only resized
-/// within that capacity, so steady-state steps do not allocate.
+/// Continuous-batching decode state: per-sequence page tables over a
+/// shared [`KvPagePool`] plus the preallocated activation scratch the
+/// batched step runs in. Scratch buffers are sized once at
+/// construction and only resized within that capacity (the attention
+/// stripe buffer grows with the longest *observed* sequence, not
+/// `max_ctx`), so steady-state steps do not allocate.
 pub struct DecodeBatch {
     seqs: Vec<SeqKv>,
+    pool: KvPagePool,
     max_batch: usize,
     max_ctx: usize,
     /// scratch row capacity: max_batch decode rows + a PREFILL_CHUNK
@@ -86,9 +104,10 @@ pub struct DecodeBatch {
     h: Tensor,
     f: Tensor,
     logits: Tensor,
-    /// attention scratch: one (max_ctx scores + head_dim output lanes)
-    /// stripe per row×head task — parallel attention without allocation
-    /// or shared-write locking
+    /// attention scratch: one (scores + head_dim output lanes) stripe
+    /// per row×head task — parallel attention without allocation or
+    /// shared-write locking. Sized by the longest sequence staged so
+    /// far (grow-only), not by `max_ctx`.
     aw: Vec<f32>,
     head_scratch: Vec<f32>,
     /// per batch row: (sequence index, position being written)
@@ -113,7 +132,10 @@ impl DecodeBatch {
     /// KV cache of at most `max_ctx` positions. One fused pass can
     /// carry `max_batch` decode rows plus a [`PREFILL_CHUNK`] budget of
     /// prompt rows; callers staging wider passes (speculative verify)
-    /// use [`DecodeBatch::with_rows`].
+    /// use [`DecodeBatch::with_rows`]. The KV pool is sized
+    /// slab-equivalent (every sequence can reach `max_ctx`), so page
+    /// allocation cannot fail; callers oversubscribing memory pass an
+    /// explicit [`KvConfig`] to [`DecodeBatch::with_kv`].
     pub fn new(m: &ModelWeights, max_batch: usize, max_ctx: usize) -> Self {
         Self::with_rows(m, max_batch, max_ctx, PREFILL_CHUNK)
     }
@@ -130,6 +152,29 @@ impl DecodeBatch {
         max_ctx: usize,
         row_budget: usize,
     ) -> Self {
+        Self::with_kv(
+            m,
+            max_batch,
+            max_ctx,
+            row_budget,
+            KvConfig::slab_equivalent(max_batch, max_ctx),
+        )
+    }
+
+    /// Full-control constructor: explicit [`KvConfig`] for the page
+    /// pool, allowing page budgets *below* `max_batch × max_ctx`
+    /// (oversubscription against observed residency) and tuning the
+    /// prefix cache. With a smaller budget, page allocation can fail
+    /// mid-step — serve-side callers gate staging on
+    /// [`DecodeBatch::try_reserve`] so the fused pass itself never
+    /// runs out.
+    pub fn with_kv(
+        m: &ModelWeights,
+        max_batch: usize,
+        max_ctx: usize,
+        row_budget: usize,
+        kv: KvConfig,
+    ) -> Self {
         let cfg = &m.cfg;
         let dh = cfg.head_dim;
         let maxa = cfg.n_heads * dh;
@@ -137,6 +182,7 @@ impl DecodeBatch {
         let cap_rows = max_batch + row_budget.max(PREFILL_CHUNK);
         DecodeBatch {
             seqs: Vec::with_capacity(max_batch),
+            pool: KvPagePool::new(m, &kv),
             max_batch,
             max_ctx,
             cap_rows,
@@ -152,7 +198,7 @@ impl DecodeBatch {
             h: Tensor::zeros(&[cap_rows, maxc]),
             f: Tensor::zeros(&[cap_rows, cfg.d_model]),
             logits: Tensor::zeros(&[max_batch.max(1), cfg.vocab]),
-            aw: vec![0.0; cap_rows * cfg.n_heads * (max_ctx + dh)],
+            aw: Vec::new(),
             head_scratch: Vec::new(),
             rows: Vec::with_capacity(cap_rows),
             toks: Vec::with_capacity(cap_rows),
@@ -161,34 +207,143 @@ impl DecodeBatch {
         }
     }
 
-    /// Admit a new sequence with KV capacity `cap` rows (clamped to
-    /// this batch's `max_ctx`). Returns its index. Indices are stable
-    /// until a [`DecodeBatch::retire`], which `swap_remove`s — callers
-    /// holding per-sequence metadata must mirror that move.
-    pub fn admit(&mut self, m: &ModelWeights, cap: usize) -> usize {
-        assert!(self.seqs.len() < self.max_batch, "batch full");
-        let cap = cap.min(self.max_ctx).max(1);
-        let dh = m.cfg.head_dim;
-        let kv = || -> Vec<Tensor> {
-            m.layers
-                .iter()
-                .map(|l| Tensor::zeros(&[cap, l.kept_heads.len() * dh]))
-                .collect()
-        };
-        self.seqs.push(SeqKv { k: kv(), v: kv(), pos: 0, cap });
-        self.seqs.len() - 1
+    /// Admit a new sequence with KV capacity `cap` positions. Errors
+    /// when the batch is full or `cap` is outside `1..=max_ctx`
+    /// (out-of-range capacity is an admission bug upstream — it used
+    /// to be silently clamped, which truncated generations). No pages
+    /// are allocated yet. Returns the sequence index; indices are
+    /// stable until a [`DecodeBatch::retire`], which `swap_remove`s —
+    /// callers holding per-sequence metadata must mirror that move.
+    pub fn admit(&mut self, cap: usize) -> Result<usize> {
+        self.admit_prompt(cap, &[], 0)
     }
 
-    /// Drop sequence `si` from the batch (`swap_remove` semantics: the
-    /// last sequence takes index `si`).
+    /// Like [`DecodeBatch::admit`], but mapping the first `hit`
+    /// positions of `prompt` from the prefix cache (`hit` comes from
+    /// [`DecodeBatch::prefix_peek`], possibly capped lower): the
+    /// sequence starts at `pos == hit` with the cached pages shared
+    /// into its table — zero weight passes for the shared head. The
+    /// caller feeds `prompt[hit..]` as usual; the first write into a
+    /// shared tail page is redirected through copy-on-write, so the
+    /// cached bytes survive.
+    pub fn admit_prompt(
+        &mut self,
+        cap: usize,
+        prompt: &[u16],
+        hit: usize,
+    ) -> Result<usize> {
+        if self.seqs.len() >= self.max_batch {
+            bail!("batch full ({} sequences)", self.max_batch);
+        }
+        if cap == 0 || cap > self.max_ctx {
+            bail!(
+                "seq capacity {cap} out of range 1..={}",
+                self.max_ctx
+            );
+        }
+        let table = if hit > 0 {
+            if hit >= prompt.len() || hit >= cap {
+                bail!(
+                    "prefix hit {hit} must leave room to feed \
+                     (prompt {}, cap {cap})",
+                    prompt.len()
+                );
+            }
+            self.pool.prefix_attach(prompt, hit)
+        } else {
+            Vec::new()
+        };
+        self.seqs.push(SeqKv {
+            table,
+            pos: hit,
+            cap,
+            prefix_hit: hit,
+        });
+        Ok(self.seqs.len() - 1)
+    }
+
+    /// Longest cached prompt head usable for `prompt`, in positions —
+    /// capped at `prompt.len() - 1` so admission always has at least
+    /// one token left to feed (logits come from fed rows only). Pass
+    /// the result to [`DecodeBatch::admit_prompt`].
+    pub fn prefix_peek(&self, prompt: &[u16]) -> usize {
+        self.pool
+            .prefix_peek(prompt)
+            .min(prompt.len().saturating_sub(1))
+    }
+
+    /// Publish sequence `si`'s prefilled prompt head to the prefix
+    /// cache (call once the prompt is fully consumed). Only the
+    /// page-aligned head of `tokens` is cached; shorter-than-a-page
+    /// prompts and disabled caches no-op. The cache retains the pages,
+    /// so they outlive the sequence's retire.
+    pub fn cache_prefix(&mut self, si: usize, tokens: &[u16]) {
+        let s = &self.seqs[si];
+        let n = s.pos.min(tokens.len());
+        let pp = self.pool.page_positions();
+        let np = n / pp;
+        if np == 0 {
+            return;
+        }
+        let pages: Vec<u32> = s.table[..np].to_vec();
+        self.pool.prefix_insert(&tokens[..np * pp], &pages);
+    }
+
+    /// Ensure sequence `si` can consume `extra` more positions: grow
+    /// its page table (lazy allocation) and redirect any shared page
+    /// in the write range `[pos, pos + extra)` through copy-on-write.
+    /// Returns false when the pool is exhausted (every page held by a
+    /// live sequence) — partial progress is kept and retrying after
+    /// another sequence retires is safe. Serve-side staging calls this
+    /// before listing the sequence in a fused pass; under the default
+    /// slab-equivalent pool it cannot fail.
+    pub fn try_reserve(&mut self, si: usize, extra: usize) -> bool {
+        if extra == 0 {
+            return true;
+        }
+        let pp = self.pool.page_positions();
+        let (pos, cap) = (self.seqs[si].pos, self.seqs[si].cap);
+        let upto = pos + extra;
+        assert!(upto <= cap, "reserve to {upto} past seq {si} cap {cap}");
+        let need = upto.div_ceil(pp);
+        while self.seqs[si].table.len() < need {
+            match self.pool.alloc() {
+                Some(p) => self.seqs[si].table.push(p),
+                None => return false,
+            }
+        }
+        for pi in pos / pp..=(upto - 1) / pp {
+            let pg = self.seqs[si].table[pi];
+            if self.pool.ref_count(pg) > 1 {
+                let fresh = match self.pool.alloc() {
+                    Some(f) => f,
+                    None => return false,
+                };
+                self.pool.copy_page(pg, fresh);
+                self.pool.release(pg);
+                self.seqs[si].table[pi] = fresh;
+            }
+        }
+        true
+    }
+
+    /// Drop sequence `si` from the batch, releasing its pages back to
+    /// the pool (`swap_remove` semantics: the last sequence takes
+    /// index `si`). Pages shared with the prefix cache or other
+    /// sequences stay resident until their last holder lets go.
     pub fn retire(&mut self, si: usize) {
-        self.seqs.swap_remove(si);
+        let s = self.seqs.swap_remove(si);
+        for pg in s.table {
+            self.pool.release(pg);
+        }
     }
 
     /// Roll sequence `si` back to `len` consumed tokens, discarding
     /// the KV rows past it — the speculative-decoding rejection path.
-    /// The discarded rows are not zeroed: attention only ever reads
-    /// `..=pos`, and the next feed overwrites them in place.
+    /// The discarded rows are not zeroed and their pages are kept
+    /// mapped: attention only ever reads `..=pos`, and the next feed
+    /// overwrites them in place (through CoW if the page is meanwhile
+    /// shared with the prefix cache).
     pub fn truncate(&mut self, si: usize, len: usize) {
         let s = &mut self.seqs[si];
         assert!(
@@ -212,18 +367,57 @@ impl DecodeBatch {
         self.seqs[si].pos
     }
 
-    /// KV rows allocated for sequence `si`.
+    /// KV position capacity admitted for sequence `si`.
     pub fn cap(&self, si: usize) -> usize {
         self.seqs[si].cap
     }
 
-    /// KV-cache bytes resident across all admitted sequences.
+    /// Pages currently mapped by sequence `si` (shared pages count as
+    /// mapped for every holder).
+    pub fn seq_pages(&self, si: usize) -> usize {
+        self.seqs[si].table.len()
+    }
+
+    /// Prompt positions sequence `si` got from the prefix cache.
+    pub fn prefix_hit(&self, si: usize) -> usize {
+        self.seqs[si].prefix_hit
+    }
+
+    /// Physical pages in the pool.
+    pub fn pages_total(&self) -> usize {
+        self.pool.pages_total()
+    }
+
+    /// Physical pages with at least one holder (sequences + prefix
+    /// cache) — the *observed* KV residency admission accounts
+    /// against.
+    pub fn pages_in_use(&self) -> usize {
+        self.pool.pages_in_use()
+    }
+
+    /// Pages an allocation burst could obtain right now (free +
+    /// evictable prefix-cache pages).
+    pub fn available_pages(&self) -> usize {
+        self.pool.available_pages()
+    }
+
+    /// Pages needed to hold `positions` KV rows at this pool's page
+    /// size.
+    pub fn pages_for(&self, positions: usize) -> usize {
+        positions.div_ceil(self.pool.page_positions())
+    }
+
+    /// Cumulative prompt positions served from the prefix cache
+    /// instead of being re-prefilled.
+    pub fn prefix_hit_tokens(&self) -> u64 {
+        self.pool.prefix_hit_tokens()
+    }
+
+    /// KV-cache bytes physically resident (pages with a holder —
+    /// observed residency, not the worst-case `max_ctx` bound the
+    /// slab layout used to reserve).
     pub fn kv_bytes(&self) -> usize {
-        self.seqs
-            .iter()
-            .flat_map(|s| s.k.iter().chain(s.v.iter()))
-            .map(|t| t.numel() * 4)
-            .sum()
+        self.pool.pages_in_use() * self.pool.page_bytes()
     }
 
     /// One batched decode step. `inputs[r] = (sequence index, token)`:
@@ -303,7 +497,12 @@ impl DecodeBatch {
         for &(si, t) in decode {
             let s = &self.seqs[si];
             assert!(s.pos < s.cap, "seq {si} out of KV capacity");
-            self.rows.push((si, s.pos));
+            assert!(
+                self.try_reserve(si, 1),
+                "seq {si} decode out of KV pages"
+            );
+            let pos = self.seqs[si].pos;
+            self.rows.push((si, pos));
             self.toks.push(t);
         }
         for &(si, tokens) in verify {
@@ -312,6 +511,10 @@ impl DecodeBatch {
             assert!(
                 pos0 + tokens.len() <= self.seqs[si].cap,
                 "seq {si} verify past KV capacity"
+            );
+            assert!(
+                self.try_reserve(si, tokens.len()),
+                "seq {si} verify out of KV pages"
             );
             for (i, &t) in tokens.iter().enumerate() {
                 self.rows.push((si, pos0 + i));
@@ -324,6 +527,10 @@ impl DecodeBatch {
             assert!(
                 pos0 + tokens.len() <= self.seqs[si].cap,
                 "seq {si} prefill past KV capacity"
+            );
+            assert!(
+                self.try_reserve(si, tokens.len()),
+                "seq {si} prefill out of KV pages"
             );
             for (i, &t) in tokens.iter().enumerate() {
                 self.rows.push((si, pos0 + i));
@@ -407,6 +614,17 @@ impl DecodeBatch {
         let cfg = &m.cfg;
         let (d, dh) = (cfg.d_model, cfg.head_dim);
         let scale = 1.0 / (dh as f32).sqrt();
+        // attention stripe: scores for the longest staged row's
+        // context + dh output lanes. Grow-only, sized by observed
+        // length — a batch of short sequences never touches
+        // max_ctx-sized scratch.
+        let maxpos =
+            self.rows.iter().map(|&(_, p)| p).max().unwrap_or(0);
+        let stride = maxpos + 1 + dh;
+        let aw_need = b * cfg.n_heads * stride;
+        if self.aw.len() < aw_need {
+            self.aw.resize(aw_need, 0.0);
+        }
         shape2(&mut self.x, b, d);
         shape2(&mut self.xn, b, d);
         self.gath.clear();
@@ -439,23 +657,29 @@ impl DecodeBatch {
                     );
                 }
             }
-            // scatter K/V rows into each sequence's own cache
+            // scatter K/V rows into each sequence's own pages (the
+            // write slots were reserved — and CoW-redirected if shared
+            // — during staging)
+            let pp = self.pool.page_positions();
             for r in 0..b {
                 let (si, pos) = self.rows[r];
-                self.seqs[si].k[li]
-                    .row_mut(pos)
+                let pg = self.seqs[si].table[pos / pp];
+                self.pool
+                    .k_slot_mut(pg, li, pos % pp)
                     .copy_from_slice(self.k.row(r));
-                self.seqs[si].v[li]
-                    .row_mut(pos)
+                self.pool
+                    .v_slot_mut(pg, li, pos % pp)
                     .copy_from_slice(self.v.row(r));
             }
             shape2(&mut self.attn, b, adim);
             // attention, parallel over row×head: each task owns one
             // `aw` stripe (scores + output lanes) — no allocation, no
-            // shared-write locking. Row r attends over its own
-            // sequence's cache up to its own position.
+            // shared-write locking. Row r walks its own sequence's
+            // page table up to its own position; pages are visited in
+            // position-ascending order, so the summation order is
+            // identical to a flat slab.
             {
-                let stride = self.max_ctx + dh;
+                let pool = &self.pool;
                 let seqs = &self.seqs;
                 let rows = &self.rows;
                 let q = &self.q;
@@ -466,26 +690,39 @@ impl DecodeBatch {
                         let (r, h) = (idx / hk, idx % hk);
                         let (si, pos) = rows[r];
                         let qh = &q.row(r)[h * dh..(h + 1) * dh];
-                        let kc = &seqs[si].k[li];
-                        let vc = &seqs[si].v[li];
+                        let table = &seqs[si].table;
                         let (scores, out) =
                             chunk.split_at_mut(stride - dh);
-                        for j in 0..=pos {
-                            let kh = &kc.row(j)[h * dh..(h + 1) * dh];
-                            scores[j] = qh
-                                .iter()
-                                .zip(kh)
-                                .map(|(a, b)| a * b)
-                                .sum::<f32>()
-                                * scale;
+                        for pi in 0..=pos / pp {
+                            let base = pi * pp;
+                            let n = (pos + 1 - base).min(pp);
+                            let kreg = pool.k_page(table[pi], li);
+                            for s in 0..n {
+                                let kh = &kreg[s * adim + h * dh
+                                    ..s * adim + (h + 1) * dh];
+                                scores[base + s] = qh
+                                    .iter()
+                                    .zip(kh)
+                                    .map(|(a, b)| a * b)
+                                    .sum::<f32>()
+                                    * scale;
+                            }
                         }
                         softmax(&mut scores[..=pos]);
                         out.fill(0.0);
-                        for j in 0..=pos {
-                            let vh = &vc.row(j)[h * dh..(h + 1) * dh];
-                            let p = scores[j];
-                            for (o, &vv) in out.iter_mut().zip(vh) {
-                                *o += p * vv;
+                        for pi in 0..=pos / pp {
+                            let base = pi * pp;
+                            let n = (pos + 1 - base).min(pp);
+                            let vreg = pool.v_page(table[pi], li);
+                            for s in 0..n {
+                                let vh = &vreg[s * adim + h * dh
+                                    ..s * adim + (h + 1) * dh];
+                                let p = scores[base + s];
+                                for (o, &vv) in
+                                    out.iter_mut().zip(vh)
+                                {
+                                    *o += p * vv;
+                                }
                             }
                         }
                     },
@@ -573,7 +810,7 @@ mod tests {
         let toks: Vec<u16> = vec![1, 5, 9, 3, 2, 7];
         let mut st = DecodeState::new(&m, toks.len());
         let mut batch = DecodeBatch::new(&m, 2, toks.len());
-        let si = batch.admit(&m, toks.len());
+        let si = batch.admit(toks.len()).unwrap();
         for &t in &toks {
             let want = decode_step(&m, &mut st, t).to_vec();
             let got = batch.step(&m, &[(si, t)]);
@@ -593,7 +830,7 @@ mod tests {
             want = decode_step(&m, &mut st, t).to_vec();
         }
         let mut batch = DecodeBatch::new(&m, 1, prompt.len() + 1);
-        let si = batch.admit(&m, prompt.len() + 1);
+        let si = batch.admit(prompt.len() + 1).unwrap();
         let got = prefill_into(&m, &mut batch, si, &prompt).to_vec();
         assert_close(&got, &want, 1e-4, "prefill logits");
         assert_eq!(batch.pos(si), prompt.len());
@@ -615,14 +852,14 @@ mod tests {
         let drafts: Vec<u16> = vec![9, 2, 6, 5];
         let cap = prompt.len() + drafts.len() + 1;
         let mut one = DecodeBatch::new(&m, 1, cap);
-        let s1 = one.admit(&m, cap);
+        let s1 = one.admit(cap).unwrap();
         prefill_into(&m, &mut one, s1, &prompt);
         let mut want: Vec<Vec<f32>> = Vec::new();
         for &t in &drafts {
             want.push(one.step(&m, &[(s1, t)]).row(0).to_vec());
         }
         let mut ver = DecodeBatch::with_rows(&m, 1, cap, drafts.len());
-        let s2 = ver.admit(&m, cap);
+        let s2 = ver.admit(cap).unwrap();
         prefill_into(&m, &mut ver, s2, &prompt);
         let got = ver.step_verify(&m, &[(s2, &drafts)], &[]);
         assert_eq!(got.rows(), drafts.len());
@@ -644,7 +881,7 @@ mod tests {
         let m = random_model(45);
         let prompt: Vec<u16> = vec![2, 7, 1];
         let mut a = DecodeBatch::with_rows(&m, 1, 16, 8);
-        let sa = a.admit(&m, 16);
+        let sa = a.admit(16).unwrap();
         prefill_into(&m, &mut a, sa, &prompt);
         // verify a 3-token draft window, accept only the first token
         a.step_verify(&m, &[(sa, &[5, 9, 9])], &[]);
@@ -652,7 +889,7 @@ mod tests {
         assert_eq!(a.pos(sa), prompt.len() + 1);
         let got = a.step(&m, &[(sa, 8)]).row(0).to_vec();
         let mut b = DecodeBatch::new(&m, 1, 16);
-        let sb = b.admit(&m, 16);
+        let sb = b.admit(16).unwrap();
         prefill_into(&m, &mut b, sb, &prompt);
         b.step(&m, &[(sb, 5)]);
         let want = b.step(&m, &[(sb, 8)]).row(0).to_vec();
@@ -664,27 +901,86 @@ mod tests {
     fn truncate_past_pos_panics() {
         let m = random_model(46);
         let mut batch = DecodeBatch::new(&m, 1, 8);
-        let si = batch.admit(&m, 8);
+        let si = batch.admit(8).unwrap();
         batch.step(&m, &[(si, 1)]);
         batch.truncate(si, 2);
     }
 
     #[test]
+    fn admit_rejects_out_of_range_capacity() {
+        let m = random_model(47);
+        let mut batch = DecodeBatch::new(&m, 1, 8);
+        assert!(batch.admit(0).is_err(), "cap 0 must be rejected");
+        assert!(batch.admit(9).is_err(), "cap > max_ctx must be rejected");
+        assert!(batch.is_empty(), "failed admits leave no residue");
+        let si = batch.admit(8).unwrap();
+        assert_eq!(si, 0);
+        assert!(batch.admit(4).is_err(), "batch full must be rejected");
+    }
+
+    #[test]
     fn admit_retire_bookkeeping() {
+        // pages are allocated lazily: admission reserves nothing,
+        // feeding tokens allocates exactly the pages the positions
+        // need, retire releases them
         let m = random_model(43);
-        let mut batch = DecodeBatch::new(&m, 3, 8);
+        let mut batch = DecodeBatch::new(&m, 3, 64);
         assert!(batch.is_empty());
-        let a = batch.admit(&m, 8);
-        let b = batch.admit(&m, 4);
+        let a = batch.admit(64).unwrap();
+        let b = batch.admit(40).unwrap();
         assert_eq!((a, b), (0, 1));
         assert_eq!(batch.len(), 2);
-        assert_eq!(batch.cap(1), 4);
-        let per_seq8 = 2 * m.cfg.n_layers * 8 * m.cfg.d_model * 4;
-        let per_seq4 = per_seq8 / 2;
-        assert_eq!(batch.kv_bytes(), per_seq8 + per_seq4);
-        batch.retire(0); // seq b slides into index 0
+        assert_eq!(batch.cap(1), 40);
+        assert_eq!(batch.kv_bytes(), 0, "admission allocates no pages");
+        // one decode step each → one page each (page = PREFILL_CHUNK)
+        batch.step(&m, &[(a, 1), (b, 2)]);
+        assert_eq!((batch.seq_pages(a), batch.seq_pages(b)), (1, 1));
+        assert_eq!(batch.pages_in_use(), 2);
+        let page = batch.kv_bytes() / 2;
+        assert_eq!(page, 2 * m.cfg.n_layers * PREFILL_CHUNK * m.cfg.d_model * 4);
+        // crossing the page boundary allocates the second page
+        let toks: Vec<u16> = (0..PREFILL_CHUNK as u16).collect();
+        prefill_into(&m, &mut batch, a, &toks);
+        assert_eq!(batch.seq_pages(a), 2);
+        assert_eq!(batch.pages_in_use(), 3);
+        batch.retire(a); // seq b slides into index 0
         assert_eq!(batch.len(), 1);
-        assert_eq!(batch.cap(0), 4);
-        assert_eq!(batch.kv_bytes(), per_seq4);
+        assert_eq!(batch.cap(0), 40);
+        assert_eq!(batch.pages_in_use(), 1);
+        assert_eq!(batch.kv_bytes(), page);
+    }
+
+    #[test]
+    fn prefix_reuse_is_bit_identical_and_skips_prefill() {
+        use crate::tensor::storage::weight_passes;
+        let m = random_model(48);
+        // head spans exactly one page so the whole head is cacheable
+        let head: Vec<u16> =
+            (0..PREFILL_CHUNK).map(|i| (i * 3 % 60) as u16).collect();
+        let mut tail: Vec<u16> = vec![7, 21, 9];
+        let mut prompt = head.clone();
+        prompt.append(&mut tail);
+        let mut batch = DecodeBatch::new(&m, 2, 64);
+        // first sequence prefills the whole prompt and publishes it
+        let a = batch.admit(64).unwrap();
+        let la = prefill_into(&m, &mut batch, a, &prompt).to_vec();
+        batch.cache_prefix(a, &prompt);
+        batch.retire(a);
+        // second sequence maps the head from the cache and only feeds
+        // the tail — one chunk, one weight pass per projection
+        let hit = batch.prefix_peek(&prompt);
+        assert_eq!(hit, PREFILL_CHUNK);
+        let b = batch.admit_prompt(64, &prompt, hit).unwrap();
+        assert_eq!(batch.pos(b), hit);
+        let before = weight_passes();
+        let lb =
+            prefill_into(&m, &mut batch, b, &prompt[hit..]).to_vec();
+        assert_eq!(
+            weight_passes() - before,
+            (m.cfg.n_layers * 7) as u64,
+            "shared head must cost zero weight passes"
+        );
+        assert_eq!(lb, la, "prefix-reused logits must be bit-identical");
+        assert_eq!(batch.prefix_hit_tokens(), hit as u64);
     }
 }

@@ -21,9 +21,11 @@
 //! single-stream (CLI / eval) path.
 
 pub mod batch;
+pub mod paging;
 pub mod sampler;
 
 pub use batch::{prefill_into, DecodeBatch, PREFILL_CHUNK};
+pub use paging::{KvConfig, KvPagePool, KV_PAGE};
 pub use sampler::{Sampler, SamplingParams};
 
 use crate::model::config::Proj;

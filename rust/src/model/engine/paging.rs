@@ -1,0 +1,580 @@
+//! Paged KV storage for the continuous-batching engine.
+//!
+//! [`super::batch::DecodeBatch`] used to preallocate one `max_ctx`-sized
+//! KV slab per admitted sequence, so serve-side concurrency was bounded
+//! by *worst-case* context even though most requests use a fraction of
+//! it. [`KvPagePool`] replaces the slabs with a block-granular
+//! allocator (vLLM-style): KV rows live in fixed-size **pages** of
+//! [`KV_PAGE`] positions, sequences hold **page tables** (position `j`
+//! lives in page `table[j / page_positions]`, slot `j %
+//! page_positions`), and pages are allocated lazily as positions are
+//! actually written — admission can oversubscribe against observed
+//! residency instead of reserving `max_ctx` rows up-front.
+//!
+//! Pages are **refcounted** so physical pages can be shared:
+//!
+//! * the [`PrefixCache`] retains the page run holding a finished
+//!   prompt head (keyed on the hash of its page-aligned token run), and
+//!   a later sequence with the same head attaches those pages instead
+//!   of re-prefilling them — zero weight passes for the shared head;
+//! * a sequence that writes into a shared page (the partially-filled
+//!   tail page of an attached prefix, or rows re-fed after a
+//!   speculative `truncate`) first gets its own **copy-on-write**
+//!   clone, so the cached bytes are never clobbered.
+//!
+//! Layout: one page holds `page_positions` positions × every layer's K
+//! and V regions back-to-back (`k_off[l]` / `v_off[l]` float offsets,
+//! per-layer width `kept_heads × head_dim` — structurally-pruned shapes
+//! keep their per-layer widths). Keeping all layers in one page means
+//! one table entry per `page_positions` positions rather than per
+//! layer, and the attention walk reads each layer's region
+//! contiguously, slot-ascending — the same kk-ascending summation
+//! order as the flat slab, so logits stay **bit-identical** across
+//! page sizes (locked down in rust/tests/kv_paging.rs).
+//!
+//! Allocation evicts least-recently-used prefix-cache entries before
+//! failing, so cached heads are strictly bonus memory: a pool sized
+//! like the old slabs (`KvConfig::slab_equivalent`) can never refuse a
+//! write the slab engine would have accepted.
+
+use crate::model::weights::ModelWeights;
+
+/// Default page granularity in positions. Matches
+/// [`super::batch::PREFILL_CHUNK`] so one admission chunk fills exactly
+/// one page.
+pub const KV_PAGE: usize = 32;
+
+/// Sizing knobs for a [`KvPagePool`] (and the `DecodeBatch` on top).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KvConfig {
+    /// Positions per page.
+    pub page_positions: usize,
+    /// Physical pages in the pool (the memory budget).
+    pub pages: usize,
+    /// Max prefix-cache entries (0 disables prefix reuse).
+    pub prefix_entries: usize,
+}
+
+impl KvConfig {
+    /// A pool holding exactly the memory the per-sequence slabs used
+    /// to reserve: every sequence can still grow to `max_ctx`, so
+    /// allocation can never fail — the drop-in default.
+    pub fn slab_equivalent(max_batch: usize, max_ctx: usize) -> KvConfig {
+        KvConfig {
+            page_positions: KV_PAGE,
+            pages: max_batch * pages_for(max_ctx, KV_PAGE),
+            prefix_entries: 32,
+        }
+    }
+
+    /// Degenerate single-page-per-sequence config: one page spans the
+    /// whole context, no sharing — byte-for-byte the old slab layout.
+    /// The paged-vs-slab property tests use it as the oracle side.
+    pub fn slab_oracle(max_batch: usize, max_ctx: usize) -> KvConfig {
+        KvConfig {
+            page_positions: max_ctx.max(1),
+            pages: max_batch,
+            prefix_entries: 0,
+        }
+    }
+
+    /// Pages needed to hold `positions` KV rows.
+    pub fn pages_for(&self, positions: usize) -> usize {
+        pages_for(positions, self.page_positions)
+    }
+}
+
+fn pages_for(positions: usize, page: usize) -> usize {
+    positions.div_ceil(page)
+}
+
+/// FNV-1a over the token run — the prefix-cache key.
+fn hash_tokens(tokens: &[u16]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// One cached prompt head: the page-aligned token run it was computed
+/// from, and the retained pages holding its KV rows.
+struct PrefixEntry {
+    hash: u64,
+    tokens: Vec<u16>,
+    pages: Vec<u32>,
+    last_used: u64,
+}
+
+/// LRU-bounded prefix cache (lives inside the pool so eviction and
+/// allocation share the refcounts).
+struct PrefixCache {
+    entries: Vec<PrefixEntry>,
+    max_entries: usize,
+    clock: u64,
+}
+
+/// The paged KV allocator: page storage + refcounts + free list +
+/// prefix cache. See the module docs for layout and sharing rules.
+pub struct KvPagePool {
+    page_positions: usize,
+    /// per-layer KV width (`kept_heads * head_dim`)
+    widths: Vec<usize>,
+    /// per-layer float offset of the K region within a page
+    k_off: Vec<usize>,
+    /// per-layer float offset of the V region within a page
+    v_off: Vec<usize>,
+    /// floats per page
+    page_floats: usize,
+    data: Vec<f32>,
+    refs: Vec<u32>,
+    free: Vec<u32>,
+    prefix: PrefixCache,
+    /// prompt positions served from the prefix cache instead of being
+    /// re-prefilled (cumulative)
+    prefix_hit_tokens: u64,
+    /// copy-on-write page clones performed (cumulative)
+    cow_copies: u64,
+}
+
+impl KvPagePool {
+    pub fn new(m: &ModelWeights, cfg: &KvConfig) -> Self {
+        assert!(cfg.page_positions > 0, "page_positions must be > 0");
+        assert!(cfg.pages > 0, "pool must hold at least one page");
+        let dh = m.cfg.head_dim;
+        let widths: Vec<usize> =
+            m.layers.iter().map(|l| l.kept_heads.len() * dh).collect();
+        let mut k_off = Vec::with_capacity(widths.len());
+        let mut v_off = Vec::with_capacity(widths.len());
+        let mut off = 0usize;
+        for &w in &widths {
+            k_off.push(off);
+            off += cfg.page_positions * w;
+            v_off.push(off);
+            off += cfg.page_positions * w;
+        }
+        KvPagePool {
+            page_positions: cfg.page_positions,
+            widths,
+            k_off,
+            v_off,
+            page_floats: off,
+            data: vec![0.0; cfg.pages * off],
+            refs: vec![0; cfg.pages],
+            // pop() takes the back, so push descending to hand out
+            // pages in ascending order (determinism niceties only)
+            free: (0..cfg.pages as u32).rev().collect(),
+            prefix: PrefixCache {
+                entries: Vec::new(),
+                max_entries: cfg.prefix_entries,
+                clock: 0,
+            },
+            prefix_hit_tokens: 0,
+            cow_copies: 0,
+        }
+    }
+
+    pub fn page_positions(&self) -> usize {
+        self.page_positions
+    }
+
+    pub fn pages_total(&self) -> usize {
+        self.refs.len()
+    }
+
+    pub fn pages_free(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Pages with at least one holder (sequences or the prefix cache).
+    pub fn pages_in_use(&self) -> usize {
+        self.refs.len() - self.free.len()
+    }
+
+    /// Bytes of KV storage one page holds.
+    pub fn page_bytes(&self) -> usize {
+        self.page_floats * 4
+    }
+
+    /// Pages an allocation burst could obtain right now: the free list
+    /// plus cache-only pages that eviction would reclaim (conservative
+    /// — pages shared by several cache entries are not counted).
+    pub fn available_pages(&self) -> usize {
+        let evictable: usize = self
+            .prefix
+            .entries
+            .iter()
+            .flat_map(|e| e.pages.iter())
+            .filter(|&&p| self.refs[p as usize] == 1)
+            .count();
+        self.free.len() + evictable
+    }
+
+    pub fn prefix_hit_tokens(&self) -> u64 {
+        self.prefix_hit_tokens
+    }
+
+    pub fn cow_copies(&self) -> u64 {
+        self.cow_copies
+    }
+
+    pub fn ref_count(&self, page: u32) -> u32 {
+        self.refs[page as usize]
+    }
+
+    /// Take one page (refcount 1), evicting LRU prefix-cache entries
+    /// if the free list is empty. `None` only when every page is held
+    /// by a live sequence.
+    pub fn alloc(&mut self) -> Option<u32> {
+        loop {
+            if let Some(p) = self.free.pop() {
+                debug_assert_eq!(self.refs[p as usize], 0);
+                self.refs[p as usize] = 1;
+                return Some(p);
+            }
+            if !self.evict_lru() {
+                return None;
+            }
+        }
+    }
+
+    pub fn retain(&mut self, page: u32) {
+        debug_assert!(self.refs[page as usize] > 0, "retain of free page");
+        self.refs[page as usize] += 1;
+    }
+
+    pub fn release(&mut self, page: u32) {
+        let r = &mut self.refs[page as usize];
+        assert!(*r > 0, "release of free page {page}");
+        *r -= 1;
+        if *r == 0 {
+            self.free.push(page);
+        }
+    }
+
+    /// Copy a whole page (all layers, K and V) — the CoW body.
+    pub fn copy_page(&mut self, src: u32, dst: u32) {
+        assert_ne!(src, dst);
+        let (s, d) = (
+            src as usize * self.page_floats,
+            dst as usize * self.page_floats,
+        );
+        self.data.copy_within(s..s + self.page_floats, d);
+        self.cow_copies += 1;
+    }
+
+    /// Layer `li`'s K region of `page`: `page_positions × widths[li]`
+    /// floats, slot-major.
+    #[inline]
+    pub fn k_page(&self, page: u32, li: usize) -> &[f32] {
+        let b = page as usize * self.page_floats + self.k_off[li];
+        &self.data[b..b + self.page_positions * self.widths[li]]
+    }
+
+    #[inline]
+    pub fn v_page(&self, page: u32, li: usize) -> &[f32] {
+        let b = page as usize * self.page_floats + self.v_off[li];
+        &self.data[b..b + self.page_positions * self.widths[li]]
+    }
+
+    /// Mutable K row for (`page`, layer `li`, `slot`).
+    #[inline]
+    pub fn k_slot_mut(
+        &mut self,
+        page: u32,
+        li: usize,
+        slot: usize,
+    ) -> &mut [f32] {
+        let w = self.widths[li];
+        let b = page as usize * self.page_floats
+            + self.k_off[li]
+            + slot * w;
+        &mut self.data[b..b + w]
+    }
+
+    #[inline]
+    pub fn v_slot_mut(
+        &mut self,
+        page: u32,
+        li: usize,
+        slot: usize,
+    ) -> &mut [f32] {
+        let w = self.widths[li];
+        let b = page as usize * self.page_floats
+            + self.v_off[li]
+            + slot * w;
+        &mut self.data[b..b + w]
+    }
+
+    // ---- prefix cache ------------------------------------------------
+
+    /// Longest cached token run that is a prefix of `prompt`, in
+    /// positions (0 = no hit). Pure lookup: no LRU bump, no refcounts.
+    pub fn prefix_peek(&self, prompt: &[u16]) -> usize {
+        let mut best = 0usize;
+        for e in &self.prefix.entries {
+            let n = e.tokens.len();
+            if n > best
+                && n <= prompt.len()
+                && e.hash == hash_tokens(&prompt[..n])
+                && e.tokens[..] == prompt[..n]
+            {
+                best = n;
+            }
+        }
+        best
+    }
+
+    /// Attach the cached pages covering `prompt[..hit]` (retained for
+    /// the caller — release via the page table as usual). `hit` must
+    /// come from [`KvPagePool::prefix_peek`] (possibly capped lower by
+    /// the caller); positions `hit..` of a partially-claimed tail page
+    /// are garbage to the new holder and must be rewritten (CoW fires
+    /// on that write because the cache still holds the page).
+    pub fn prefix_attach(&mut self, prompt: &[u16], hit: usize) -> Vec<u32> {
+        assert!(hit > 0, "prefix_attach with no hit");
+        let np = pages_for(hit, self.page_positions);
+        let idx = self
+            .prefix
+            .entries
+            .iter()
+            .position(|e| {
+                e.tokens.len() >= hit && e.tokens[..hit] == prompt[..hit]
+            })
+            .expect("prefix_attach: no entry covers the peeked hit");
+        self.prefix.clock += 1;
+        self.prefix.entries[idx].last_used = self.prefix.clock;
+        let pages: Vec<u32> =
+            self.prefix.entries[idx].pages[..np].to_vec();
+        for &p in &pages {
+            self.retain(p);
+        }
+        self.prefix_hit_tokens += hit as u64;
+        pages
+    }
+
+    /// Publish `pages` as the KV rows of the token run `tokens`
+    /// (caller passes a page-aligned run and exactly its pages, which
+    /// are retained by the cache). No-ops when the cache is disabled,
+    /// the run is shorter than one page, or an identical entry exists
+    /// (LRU-bumped instead).
+    pub fn prefix_insert(&mut self, tokens: &[u16], pages: &[u32]) {
+        if self.prefix.max_entries == 0 {
+            return;
+        }
+        let aligned = (tokens.len() / self.page_positions)
+            * self.page_positions;
+        if aligned == 0 {
+            return;
+        }
+        let tokens = &tokens[..aligned];
+        let np = aligned / self.page_positions;
+        assert!(pages.len() >= np, "prefix_insert: pages don't cover run");
+        let hash = hash_tokens(tokens);
+        self.prefix.clock += 1;
+        if let Some(e) = self
+            .prefix
+            .entries
+            .iter_mut()
+            .find(|e| e.hash == hash && e.tokens == tokens)
+        {
+            e.last_used = self.prefix.clock;
+            return;
+        }
+        while self.prefix.entries.len() >= self.prefix.max_entries {
+            if !self.evict_lru() {
+                return;
+            }
+        }
+        let pages = pages[..np].to_vec();
+        for &p in &pages {
+            self.retain(p);
+        }
+        self.prefix.entries.push(PrefixEntry {
+            hash,
+            tokens: tokens.to_vec(),
+            pages,
+            last_used: self.prefix.clock,
+        });
+    }
+
+    pub fn prefix_entries(&self) -> usize {
+        self.prefix.entries.len()
+    }
+
+    /// Drop the least-recently-used cache entry, releasing its pages.
+    /// False when the cache is already empty.
+    fn evict_lru(&mut self) -> bool {
+        let idx = match self
+            .prefix
+            .entries
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(i, _)| i)
+        {
+            Some(i) => i,
+            None => return false,
+        };
+        let e = self.prefix.entries.swap_remove(idx);
+        for p in e.pages {
+            self.release(p);
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::testutil::random_model;
+
+    fn pool(pages: usize, prefix: usize) -> KvPagePool {
+        let m = random_model(71);
+        KvPagePool::new(
+            &m,
+            &KvConfig {
+                page_positions: 4,
+                pages,
+                prefix_entries: prefix,
+            },
+        )
+    }
+
+    #[test]
+    fn layout_covers_all_layers() {
+        let m = random_model(70);
+        let p = KvPagePool::new(
+            &m,
+            &KvConfig {
+                page_positions: 8,
+                pages: 2,
+                prefix_entries: 0,
+            },
+        );
+        // 2 layers × (K+V) × 8 positions × d_model (unpruned: all heads)
+        let per_layer = 2 * 8 * m.cfg.d_model;
+        assert_eq!(p.page_bytes(), m.cfg.n_layers * per_layer * 4);
+        assert_eq!(p.k_page(0, 0).len(), 8 * m.cfg.d_model);
+        assert_eq!(p.v_page(1, 1).len(), 8 * m.cfg.d_model);
+    }
+
+    #[test]
+    fn alloc_release_refcounts() {
+        let mut p = pool(3, 0);
+        assert_eq!(p.pages_free(), 3);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.pages_in_use(), 2);
+        p.retain(a);
+        p.release(a);
+        assert_eq!(p.pages_in_use(), 2, "still one holder");
+        p.release(a);
+        p.release(b);
+        assert_eq!(p.pages_free(), 3);
+        // exhaustion with no cache to evict
+        let all: Vec<u32> = (0..3).map(|_| p.alloc().unwrap()).collect();
+        assert!(p.alloc().is_none());
+        for pg in all {
+            p.release(pg);
+        }
+    }
+
+    #[test]
+    fn slot_writes_land_in_page_regions() {
+        let mut p = pool(2, 0);
+        let pg = p.alloc().unwrap();
+        let w = p.widths[0];
+        p.k_slot_mut(pg, 0, 2).fill(3.5);
+        p.v_slot_mut(pg, 1, 3).fill(-1.0);
+        assert_eq!(p.k_page(pg, 0)[2 * w..3 * w], vec![3.5; w][..]);
+        assert_eq!(p.v_page(pg, 1)[3 * w..4 * w], vec![-1.0; w][..]);
+        // neighbours untouched
+        assert_eq!(p.k_page(pg, 0)[..2 * w], vec![0.0; 2 * w][..]);
+        assert_eq!(p.v_page(pg, 0), vec![0.0; 4 * w][..]);
+    }
+
+    #[test]
+    fn copy_page_clones_every_region() {
+        let mut p = pool(2, 0);
+        let (a, b) = (p.alloc().unwrap(), p.alloc().unwrap());
+        p.k_slot_mut(a, 0, 1).fill(2.0);
+        p.v_slot_mut(a, 1, 0).fill(7.0);
+        p.copy_page(a, b);
+        assert_eq!(p.k_page(a, 0), p.k_page(b, 0));
+        assert_eq!(p.v_page(a, 1), p.v_page(b, 1));
+        assert_eq!(p.cow_copies(), 1);
+    }
+
+    #[test]
+    fn prefix_peek_attach_insert_roundtrip() {
+        let mut p = pool(6, 4);
+        // simulate a finished 8-token prompt head on 2 pages
+        let run: Vec<u16> = (0..8).collect();
+        let pages: Vec<u32> =
+            (0..2).map(|_| p.alloc().unwrap()).collect();
+        p.prefix_insert(&run, &pages);
+        assert_eq!(p.prefix_entries(), 1);
+        // owner drops its table; cache keeps the pages alive
+        for &pg in &pages {
+            p.release(pg);
+        }
+        assert_eq!(p.pages_in_use(), 2);
+        // longer prompt with the same head hits the full run
+        let prompt: Vec<u16> = (0..11).collect();
+        assert_eq!(p.prefix_peek(&prompt), 8);
+        // diverging head misses
+        assert_eq!(p.prefix_peek(&[9, 9, 9, 9, 9, 9, 9, 9, 9]), 0);
+        // attach retains
+        let got = p.prefix_attach(&prompt, 8);
+        assert_eq!(got, pages);
+        assert_eq!(p.ref_count(got[0]), 2);
+        assert_eq!(p.prefix_hit_tokens(), 8);
+        // capped (unaligned) hit still covers the needed pages
+        let part = p.prefix_attach(&prompt, 5);
+        assert_eq!(part, pages[..2].to_vec());
+        for pg in got.into_iter().chain(part) {
+            p.release(pg);
+        }
+    }
+
+    #[test]
+    fn insert_ignores_sub_page_runs_and_dedupes() {
+        let mut p = pool(4, 4);
+        let pg = p.alloc().unwrap();
+        p.prefix_insert(&[1, 2, 3], &[pg]); // < one page
+        assert_eq!(p.prefix_entries(), 0);
+        p.prefix_insert(&[1, 2, 3, 4], &[pg]);
+        p.prefix_insert(&[1, 2, 3, 4], &[pg]); // dedupe
+        assert_eq!(p.prefix_entries(), 1);
+        assert_eq!(p.ref_count(pg), 2);
+        p.release(pg);
+    }
+
+    #[test]
+    fn alloc_evicts_lru_entries_under_pressure() {
+        let mut p = pool(2, 4);
+        let a = p.alloc().unwrap();
+        p.prefix_insert(&[1, 2, 3, 4], &[a]);
+        p.release(a); // cache-only now
+        let b = p.alloc().unwrap();
+        p.prefix_insert(&[5, 6, 7, 8], &[b]);
+        p.release(b);
+        assert_eq!(p.pages_free(), 0);
+        assert_eq!(p.available_pages(), 2, "cache pages are reclaimable");
+        // allocation must evict the older entry first
+        let c = p.alloc().unwrap();
+        assert_eq!(c, a, "LRU entry's page reclaimed first");
+        assert_eq!(p.prefix_entries(), 1);
+        let d = p.alloc().unwrap();
+        assert_eq!(d, b);
+        assert_eq!(p.prefix_entries(), 0);
+        assert!(p.alloc().is_none(), "live pages are never stolen");
+        p.release(c);
+        p.release(d);
+    }
+}

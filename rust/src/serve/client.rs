@@ -16,6 +16,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::model::engine::sampler::SamplingParams;
 use crate::serve::spec::{SpecRequest, SpecUsage};
+use crate::serve::KvUsage;
 use crate::util::json::Json;
 
 /// One generation request (builder-style).
@@ -150,6 +151,8 @@ pub struct GenReply {
     pub model: Option<String>,
     /// Acceptance counters when a speculative pair served the request.
     pub spec: Option<SpecUsage>,
+    /// KV page footprint + prefix-cache hit length (paged engines).
+    pub kv: Option<KvUsage>,
     pub queue_ms: f64,
     pub prefill_ms: f64,
     pub decode_ms: f64,
@@ -277,6 +280,21 @@ fn parse_reply(j: &Json) -> Result<GenReply, String> {
             })
         }
     };
+    let kv = match j.get("kv") {
+        None => None,
+        Some(s) => {
+            let field = |key: &str| -> Result<u64, String> {
+                s.get(key)
+                    .and_then(|v| v.as_f64())
+                    .map(|v| v as u64)
+                    .ok_or(format!("reply kv missing '{key}'"))
+            };
+            Some(KvUsage {
+                pages: field("pages")?,
+                prefix_hit_tokens: field("prefix_hit_tokens")?,
+            })
+        }
+    };
     Ok(GenReply {
         id: num("id")? as u64,
         tokens,
@@ -286,6 +304,7 @@ fn parse_reply(j: &Json) -> Result<GenReply, String> {
             .map(String::from),
         model: j.get("model").and_then(|v| v.as_str()).map(String::from),
         spec,
+        kv,
         queue_ms: num("queue_ms")?,
         prefill_ms: num("prefill_ms")?,
         decode_ms: num("decode_ms")?,

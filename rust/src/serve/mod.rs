@@ -49,7 +49,9 @@ use std::time::{Duration, Instant};
 
 use crate::model::config::EOS;
 use crate::model::engine::argmax;
-use crate::model::{DecodeBatch, ModelWeights, PREFILL_CHUNK};
+use crate::model::{
+    DecodeBatch, KvConfig, ModelWeights, KV_PAGE, PREFILL_CHUNK,
+};
 
 pub use crate::model::engine::sampler::{Sampler, SamplingParams};
 pub use spec::{spec_engine_loop, SpecRequest, SpecUsage, MAX_SPEC_K};
@@ -74,6 +76,14 @@ pub struct ServeConfig {
     /// registered model that serves requests without a `"model"` field
     /// (None → the first registered model)
     pub default_model: Option<String>,
+    /// KV page budget per engine (pages of [`KV_PAGE`] positions).
+    /// `None` → slab-equivalent sizing (`max_batch × ⌈max_ctx/page⌉`:
+    /// every sequence can reach `max_ctx`, allocation never fails).
+    /// `Some(p)` oversubscribes admission against *observed* page
+    /// residency instead of worst-case `max_ctx` — requests park at
+    /// admission when pages run out and resume as sequences retire.
+    /// Must hold at least one `max_ctx` sequence.
+    pub kv_pages: Option<usize>,
 }
 
 impl Default for ServeConfig {
@@ -85,7 +95,20 @@ impl Default for ServeConfig {
             max_ctx: 256,
             allow_stream: true,
             default_model: None,
+            kv_pages: None,
         }
+    }
+}
+
+/// The [`KvConfig`] an engine derives from its [`ServeConfig`].
+fn kv_config(cfg: &ServeConfig) -> KvConfig {
+    match cfg.kv_pages {
+        Some(pages) => KvConfig {
+            page_positions: KV_PAGE,
+            pages,
+            prefix_entries: 32,
+        },
+        None => KvConfig::slab_equivalent(cfg.max_batch, cfg.max_ctx),
     }
 }
 
@@ -141,32 +164,55 @@ pub struct Reply {
     /// Speculation counters when a [`SpecRequest`]-routed pair served
     /// the request (`None` for plain model engines).
     pub spec: Option<SpecUsage>,
+    /// Paged-KV usage for the sequence (pages resident at completion
+    /// and prompt positions served from the prefix cache).
+    pub kv: Option<KvUsage>,
     pub queue_ms: f64,
     pub prefill_ms: f64,
     pub decode_ms: f64,
 }
 
+/// Per-request paged-KV accounting, carried on [`Reply`] and the v1
+/// `done` event.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KvUsage {
+    /// KV pages the sequence held at completion (spec pairs: target +
+    /// draft combined).
+    pub pages: u64,
+    /// Prompt positions mapped from the prefix cache instead of being
+    /// re-prefilled.
+    pub prefix_hit_tokens: u64,
+}
+
 /// What a request's reply channel carries: zero or more token events
 /// (streaming requests only, in decode order, as the engine commits
-/// them) followed by exactly one [`Event::Done`].
+/// them) followed by exactly one terminal event — [`Event::Done`], or
+/// [`Event::Error`] when the engine could not serve an admitted
+/// request (e.g. KV admission failed).
 #[derive(Debug, Clone)]
 pub enum Event {
     Token { id: u64, index: usize, token: u16 },
     Done(Reply),
+    Error { id: u64, error: String },
 }
 
 /// Drain a reply channel until the terminal event, discarding token
-/// events — the non-streaming caller's one-liner.
+/// events — the non-streaming caller's one-liner. Engine-side
+/// [`Event::Error`]s surface as errors here.
 pub fn wait_reply(
     rx: &mpsc::Receiver<Event>,
     timeout: Duration,
-) -> Result<Reply, mpsc::RecvTimeoutError> {
+) -> anyhow::Result<Reply> {
     let deadline = Instant::now() + timeout;
     loop {
         let left = deadline.saturating_duration_since(Instant::now());
-        match rx.recv_timeout(left)? {
-            Event::Done(r) => return Ok(r),
-            Event::Token { .. } => continue,
+        match rx.recv_timeout(left) {
+            Ok(Event::Done(r)) => return Ok(r),
+            Ok(Event::Token { .. }) => continue,
+            Ok(Event::Error { error, .. }) => {
+                anyhow::bail!("{error}")
+            }
+            Err(e) => anyhow::bail!("reply channel: {e}"),
         }
     }
 }
@@ -192,6 +238,27 @@ pub struct ServeStats {
     pub draft_accepted: AtomicU64,
     /// draft→verify round trips completed (per sequence per round)
     pub spec_rounds: AtomicU64,
+    /// KV positions rolled back by speculative verify (rejected draft
+    /// rows truncated from the target cache) — rollback depth made
+    /// observable so acceptance regressions are not silent
+    pub spec_rolled_back: AtomicU64,
+    /// physical KV pages in the engine's pool (gauge, set at start;
+    /// spec pairs: target + draft pools combined)
+    pub kv_pages_total: AtomicU64,
+    /// KV pages currently held by sequences or the prefix cache
+    /// (gauge)
+    pub kv_pages_in_use: AtomicU64,
+    /// cumulative prompt positions served from the prefix cache
+    /// instead of being re-prefilled (gauge)
+    pub kv_prefix_hit_tokens: AtomicU64,
+    /// requests parked at admission because the page pool could not
+    /// take another prompt (resumed when pages free up)
+    pub kv_parked: AtomicU64,
+    /// decode steps a sequence sat out because no page was free
+    pub kv_stalls: AtomicU64,
+    /// sequences force-finished (`finish_reason: length`) to break a
+    /// KV page deadlock
+    pub kv_preempted: AtomicU64,
 }
 
 impl ServeStats {
@@ -573,12 +640,19 @@ struct ActiveSeq {
     req: Request,
     generated: Vec<u16>,
     next_token: u16,
+    /// `next_token` was picked by the latest pass and is not yet
+    /// committed — a page-stalled sequence skips passes without
+    /// re-committing the same token
+    fresh: bool,
     /// per-request sampling state (None = greedy argmax)
     sampler: Option<Sampler>,
-    /// prompt tokens fed so far (chunked-prefill cursor)
+    /// prompt tokens fed so far (chunked-prefill cursor; starts past
+    /// the prefix-cache hit)
     cursor: usize,
     /// prompt length (admission guarantees prompt + max_new fits)
     limit: usize,
+    /// prompt positions mapped from the prefix cache at admission
+    prefix_hit: usize,
     queue_ms: f64,
     prefill_ms: f64,
     decode_t0: Instant,
@@ -600,10 +674,55 @@ impl ActiveSeq {
     }
 }
 
+/// Build the terminal [`Reply`] for `active[i]` and drop it from
+/// `batch` + `active` in lockstep, sending [`Event::Done`]. Shared by
+/// normal completion and KV-deadlock preemption.
+#[allow(clippy::too_many_arguments)]
+fn finish_seq(
+    active: &mut Vec<ActiveSeq>,
+    batch: &mut DecodeBatch,
+    i: usize,
+    finish_reason: FinishReason,
+    name: &Arc<String>,
+    stats: &ServeStats,
+) {
+    let kv = KvUsage {
+        pages: batch.seq_pages(i) as u64,
+        prefix_hit_tokens: batch.prefix_hit(i) as u64,
+    };
+    let seq = active.swap_remove(i);
+    batch.retire(i);
+    stats.completed.fetch_add(1, Ordering::Relaxed);
+    stats
+        .tokens_out
+        .fetch_add(seq.generated.len() as u64, Ordering::Relaxed);
+    let reply = Reply {
+        id: seq.req.id,
+        tokens: seq.generated,
+        finish_reason,
+        model: (**name).clone(),
+        spec: None,
+        kv: Some(kv),
+        queue_ms: seq.queue_ms,
+        prefill_ms: seq.prefill_ms,
+        decode_ms: seq.decode_t0.elapsed().as_secs_f64() * 1e3,
+    };
+    let _ = seq.req.reply.send(Event::Done(reply));
+}
+
 /// The engine loop: admit → chunked prefill → one batched decode step
 /// per iteration → retire. `active[i]` mirrors batch sequence `i`
 /// (admission appends to both, retirement `swap_remove`s both). Runs
 /// until `stop` is set and the queue drains.
+///
+/// KV admission oversubscribes against *observed* page residency: a
+/// request is admitted when the pool can plausibly take its prompt
+/// (prefix-cache hits shrink that need), otherwise it **parks** at the
+/// head of the queue until sequences retire — graceful backpressure
+/// instead of worst-case `max_ctx` reservations. Decode steps that
+/// cannot get a page stall their sequence for the iteration; if no
+/// sequence at all can make progress, the fattest stalled sequence is
+/// force-finished (`finish_reason: length`) to break the deadlock.
 pub fn engine_loop(
     model: Arc<ModelWeights>,
     name: Arc<String>,
@@ -612,26 +731,39 @@ pub fn engine_loop(
     stats: Arc<ServeStats>,
     stop: Arc<AtomicBool>,
 ) {
-    let mut batch = DecodeBatch::new(&model, cfg.max_batch, cfg.max_ctx);
+    let mut batch = DecodeBatch::with_kv(
+        &model,
+        cfg.max_batch,
+        cfg.max_ctx,
+        PREFILL_CHUNK,
+        kv_config(&cfg),
+    );
+    stats
+        .kv_pages_total
+        .store(batch.pages_total() as u64, Ordering::Relaxed);
     let mut active: Vec<ActiveSeq> = Vec::new();
+    // a request admitted by the router but parked engine-side until
+    // KV pages free up (keeps queue order: nothing overtakes it)
+    let mut parked: Option<Request> = None;
     let mut inputs: Vec<(usize, u16)> = Vec::with_capacity(cfg.max_batch);
     loop {
         // ---- admission: fill the batch from the queue
         while active.len() < cfg.max_batch {
-            let req = if active.is_empty() {
+            let (req, was_parked) = if let Some(r) = parked.take() {
+                (r, true)
+            } else if active.is_empty() {
                 // idle: block briefly so shutdown stays responsive
                 match rx.recv_timeout(Duration::from_millis(20)) {
-                    Ok(r) => r,
+                    Ok(r) => (r, false),
                     Err(mpsc::RecvTimeoutError::Timeout) => break,
                     Err(mpsc::RecvTimeoutError::Disconnected) => return,
                 }
             } else {
                 match rx.try_recv() {
-                    Ok(r) => r,
+                    Ok(r) => (r, false),
                     Err(_) => break,
                 }
             };
-            let queue_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
             // admission rejects anything that cannot fit — never clamp
             // the prompt here (a clamp silently truncates it to zero
             // tokens when max_new >= max_ctx and serves garbage)
@@ -640,21 +772,74 @@ pub fn engine_loop(
                 "admission must reject requests that cannot fit"
             );
             let limit = req.prompt.len();
-            let si = batch.admit(&model, limit + req.max_new);
+            let hit = batch.prefix_peek(&req.prompt);
+            // KV gate: the prompt's un-cached pages + one CoW slot
+            // must be obtainable. An empty batch always admits (the
+            // pool holds at least one max_ctx sequence by
+            // construction); otherwise park the request — in order —
+            // until retirements free pages.
+            if !active.is_empty() {
+                let need = batch
+                    .pages_for(limit + 1)
+                    .saturating_sub(batch.pages_for(hit))
+                    + 1;
+                if batch.available_pages() < need {
+                    if !was_parked {
+                        stats.kv_parked.fetch_add(1, Ordering::Relaxed);
+                    }
+                    parked = Some(req);
+                    break;
+                }
+            }
+            let queue_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+            let si = match batch.admit_prompt(
+                limit + req.max_new,
+                &req.prompt,
+                hit,
+            ) {
+                Ok(si) => si,
+                Err(e) => {
+                    let _ = req.reply.send(Event::Error {
+                        id: req.id,
+                        error: format!("admission failed: {e}"),
+                    });
+                    continue;
+                }
+            };
             debug_assert_eq!(si, active.len());
+            // reserve the prompt's pages (+ first decode slot) up
+            // front so an admitted sequence can always finish its
+            // prefill — the gate above makes failure unreachable, but
+            // surface it as an error rather than a wedged request
+            if !batch.try_reserve(si, limit + 1 - hit) {
+                batch.retire(si);
+                let _ = req.reply.send(Event::Error {
+                    id: req.id,
+                    error: "kv exhausted at admission".into(),
+                });
+                continue;
+            }
             let sampler = req.sampling.map(Sampler::new);
             active.push(ActiveSeq {
                 req,
                 generated: Vec::new(),
                 next_token: EOS,
+                fresh: false,
                 sampler,
-                cursor: 0,
+                cursor: hit,
                 limit,
+                prefix_hit: hit,
                 queue_ms,
                 prefill_ms: 0.0,
                 decode_t0: Instant::now(),
             });
         }
+        stats
+            .kv_pages_in_use
+            .store(batch.pages_in_use() as u64, Ordering::Relaxed);
+        stats
+            .kv_prefix_hit_tokens
+            .store(batch.prefix_hit_tokens(), Ordering::Relaxed);
         if active.is_empty() {
             if stop.load(Ordering::Relaxed) {
                 return;
@@ -665,10 +850,11 @@ pub fn engine_loop(
         //      stream it out; retire the finished ones
         let mut i = 0;
         while i < active.len() {
-            if active[i].prefilling() {
+            if active[i].prefilling() || !active[i].fresh {
                 i += 1;
                 continue;
             }
+            active[i].fresh = false;
             let tok = active[i].next_token;
             active[i].generated.push(tok);
             let seq = &active[i];
@@ -689,28 +875,12 @@ pub fn engine_loop(
                 continue;
             }
             // completed — reply and drop from batch + active in lockstep
-            let seq = active.swap_remove(i);
-            batch.retire(i);
-            stats.completed.fetch_add(1, Ordering::Relaxed);
-            stats.tokens_out.fetch_add(
-                seq.generated.len() as u64,
-                Ordering::Relaxed,
-            );
-            let reply = Reply {
-                id: seq.req.id,
-                tokens: seq.generated,
-                finish_reason: if stopped {
-                    FinishReason::Stop
-                } else {
-                    FinishReason::Length
-                },
-                model: (*name).clone(),
-                spec: None,
-                queue_ms: seq.queue_ms,
-                prefill_ms: seq.prefill_ms,
-                decode_ms: seq.decode_t0.elapsed().as_secs_f64() * 1e3,
+            let reason = if stopped {
+                FinishReason::Stop
+            } else {
+                FinishReason::Length
             };
-            let _ = seq.req.reply.send(Event::Done(reply));
+            finish_seq(&mut active, &mut batch, i, reason, &name, &stats);
         }
         // ---- stage one fused pass: every decode-phase sequence's
         //      pending token, plus up to PREFILL_CHUNK prompt tokens
@@ -720,6 +890,7 @@ pub fn engine_loop(
         inputs.clear();
         let mut jobs: Vec<(usize, std::ops::Range<usize>, bool)> =
             Vec::new();
+        let mut stalled: Vec<usize> = Vec::new();
         let mut budget = PREFILL_CHUNK;
         for (i, seq) in active.iter().enumerate() {
             if seq.prefilling() {
@@ -730,11 +901,32 @@ pub fn engine_loop(
                 let end = seq.cursor + take;
                 jobs.push((i, seq.cursor..end, end == seq.limit));
                 budget -= take;
+            } else if !batch.try_reserve(i, 1) {
+                // no page for this decode slot: sit this pass out (the
+                // fresh flag keeps the committed stream consistent)
+                stalled.push(i);
+                stats.kv_stalls.fetch_add(1, Ordering::Relaxed);
             } else {
                 inputs.push((i, seq.next_token));
             }
         }
         if inputs.is_empty() && jobs.is_empty() {
+            if let Some(&victim) = stalled
+                .iter()
+                .max_by_key(|&&i| batch.seq_pages(i))
+            {
+                // every sequence is page-stalled: force-finish the one
+                // holding the most pages so the rest can move
+                stats.kv_preempted.fetch_add(1, Ordering::Relaxed);
+                finish_seq(
+                    &mut active,
+                    &mut batch,
+                    victim,
+                    FinishReason::Length,
+                    &name,
+                    &stats,
+                );
+            }
             continue;
         }
         let prefill_rows: usize =
@@ -767,8 +959,10 @@ pub fn engine_loop(
         for (r, &(i, _)) in inputs.iter().enumerate() {
             let next = active[i].pick(logits.row(r));
             active[i].next_token = next;
+            active[i].fresh = true;
         }
         let mut lrow = inputs.len();
+        let mut finished_prompts: Vec<usize> = Vec::new();
         for (i, range, completes) in jobs {
             // fused-pass wall time attributed by row share
             active[i].prefill_ms += elapsed_us / 1e3
@@ -778,9 +972,16 @@ pub fn engine_loop(
             if completes {
                 let next = active[i].pick(logits.row(lrow));
                 active[i].next_token = next;
+                active[i].fresh = true;
                 lrow += 1;
                 active[i].decode_t0 = Instant::now();
+                finished_prompts.push(i);
             }
+        }
+        // publish freshly-completed prompt heads so later requests
+        // sharing them skip their prefill entirely
+        for i in finished_prompts {
+            batch.cache_prefix(i, &active[i].req.prompt);
         }
     }
 }
@@ -835,6 +1036,15 @@ impl Server {
             !registry.is_empty(),
             "registry has no models to serve"
         );
+        if let Some(pages) = cfg.kv_pages {
+            let need = cfg.max_ctx.div_ceil(KV_PAGE);
+            anyhow::ensure!(
+                pages >= need,
+                "kv_pages {pages} cannot hold one max_ctx={} sequence \
+                 (need at least {need} pages of {KV_PAGE} positions)",
+                cfg.max_ctx
+            );
+        }
         // entry order: models first, then spec pairs — default_model
         // may name either
         let default_ix = match &cfg.default_model {
@@ -1106,6 +1316,12 @@ fn handle_conn(
                         protocol::reply_line(&reply)
                     };
                     out.write_all(line.as_bytes())?;
+                    break;
+                }
+                Ok(Event::Error { error, .. }) => {
+                    out.write_all(
+                        protocol::error_line(&error).as_bytes(),
+                    )?;
                     break;
                 }
                 Err(_) => {
@@ -1703,5 +1919,135 @@ mod tests {
             let _ = wait_reply(&rx, T30);
         }
         srv.shutdown();
+    }
+
+    #[test]
+    fn kv_pages_must_hold_one_max_ctx_sequence() {
+        let err = Server::start(
+            random_model(220),
+            ServeConfig {
+                max_ctx: 256,
+                kv_pages: Some(1),
+                ..Default::default()
+            },
+            0,
+        )
+        .err()
+        .expect("undersized pool must be refused")
+        .to_string();
+        assert!(err.contains("kv_pages"), "{err}");
+    }
+
+    #[test]
+    fn kv_backpressure_parks_and_serializes_exactly() {
+        // pool of 3 pages (page = 32 positions), prompts of 33 tokens
+        // (2 pages + 1 CoW-headroom page at the gate): concurrent
+        // requests cannot share the pool, so the engine must park
+        // them, serve one at a time, and still produce tokens
+        // bit-identical to an uncontended slab-equivalent run
+        let m = random_model_sized(221, 2, 16, 2, 40, 64, 64);
+        let prompts: Vec<Vec<u16>> = (0..6)
+            .map(|i| {
+                (0..33)
+                    .map(|j| (1 + 11 * i + 3 * j) as u16 % 64)
+                    .collect()
+            })
+            .collect();
+        let run = |kv_pages: Option<usize>| -> Vec<Vec<u16>> {
+            let srv = Server::start(
+                m.clone(),
+                ServeConfig {
+                    max_batch: 4,
+                    max_ctx: 64,
+                    kv_pages,
+                    ..Default::default()
+                },
+                0,
+            )
+            .unwrap();
+            let rxs: Vec<_> = prompts
+                .iter()
+                .map(|p| srv.submit(p.clone(), 8).unwrap())
+                .collect();
+            let out: Vec<Vec<u16>> = rxs
+                .into_iter()
+                .map(|rx| {
+                    let r = wait_reply(&rx, T30).unwrap();
+                    let kv = r.kv.expect("replies carry kv usage");
+                    assert!(kv.pages >= 1, "{kv:?}");
+                    r.tokens
+                })
+                .collect();
+            if kv_pages.is_some() {
+                assert!(
+                    srv.stats.kv_parked.load(Ordering::Relaxed) > 0,
+                    "tiny pool must park admissions"
+                );
+                assert_eq!(
+                    srv.stats.kv_preempted.load(Ordering::Relaxed),
+                    0,
+                    "parking must prevent deadlock, not preemption"
+                );
+            }
+            srv.shutdown();
+            out
+        };
+        assert_eq!(
+            run(Some(3)),
+            run(None),
+            "page-starved serving must not change a single token"
+        );
+    }
+
+    #[test]
+    fn prefix_cache_skips_shared_head_and_reports_hits() {
+        // two sequential requests with the same 40-token prompt: the
+        // second must map the page-aligned 32-token head from the
+        // prefix cache (kv.prefix_hit_tokens) and still reply with
+        // exactly the same tokens
+        let m = random_model(222);
+        let srv =
+            Server::start(m, ServeConfig::default(), 0).unwrap();
+        let prompt: Vec<u16> =
+            (0..40).map(|j| (2 + 3 * j) as u16 % 64).collect();
+        let first =
+            wait_reply(&srv.submit(prompt.clone(), 6).unwrap(), T30)
+                .unwrap();
+        assert_eq!(
+            first.kv.unwrap().prefix_hit_tokens,
+            0,
+            "cold cache: no hit"
+        );
+        let second =
+            wait_reply(&srv.submit(prompt.clone(), 6).unwrap(), T30)
+                .unwrap();
+        assert_eq!(
+            second.kv.unwrap().prefix_hit_tokens,
+            PREFILL_CHUNK as u64,
+            "aligned head must come from the cache"
+        );
+        assert_eq!(
+            second.tokens, first.tokens,
+            "prefix reuse must not change tokens"
+        );
+        assert_eq!(
+            srv.stats.kv_prefix_hit_tokens.load(Ordering::Relaxed),
+            PREFILL_CHUNK as u64
+        );
+        srv.shutdown();
+    }
+
+    #[test]
+    fn wait_reply_surfaces_engine_errors() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(Event::Error {
+            id: 7,
+            error: "kv exhausted at admission".into(),
+        })
+        .unwrap();
+        let err = wait_reply(&rx, Duration::from_millis(100))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("kv exhausted"), "{err}");
     }
 }

@@ -18,7 +18,8 @@
 //!              "stream": bool?, "v": 1?}\n
 //!   Reply:    v0 fields + {"finish_reason": "length"|"stop",
 //!              "model": str}
-//!             + {"spec": {"drafted": n, "accepted": n}}?  // pairs\n
+//!             + {"spec": {"drafted": n, "accepted": n}}?  // pairs
+//!             + {"kv": {"pages": n, "prefix_hit_tokens": n}}?\n
 //!   Stream:   {"event": "token", "id": n, "index": i, "token": t}\n
 //!             ... one line per decoded token, then a final
 //!             {"event": "done", ...v1 reply fields...}\n
@@ -223,7 +224,8 @@ pub fn reply_line(r: &super::Reply) -> String {
 /// v0 fields + finish_reason + the serving model's name (shared by
 /// the v1 reply and the streaming summary so the two cannot diverge).
 /// Requests served by a speculative pair additionally carry the
-/// acceptance counters.
+/// acceptance counters; paged-KV engines carry the page footprint and
+/// the prefix-cache hit length.
 fn v1_reply(r: &super::Reply) -> Json {
     let mut o = base_reply(r);
     o.set("finish_reason", Json::str(r.finish_reason.as_str()));
@@ -233,6 +235,15 @@ fn v1_reply(r: &super::Reply) -> Json {
         s.set("drafted", Json::num(u.drafted as f64));
         s.set("accepted", Json::num(u.accepted as f64));
         o.set("spec", s);
+    }
+    if let Some(u) = &r.kv {
+        let mut s = Json::obj();
+        s.set("pages", Json::num(u.pages as f64));
+        s.set(
+            "prefix_hit_tokens",
+            Json::num(u.prefix_hit_tokens as f64),
+        );
+        o.set("kv", s);
     }
     o
 }
@@ -277,6 +288,7 @@ mod tests {
             finish_reason: FinishReason::Length,
             model: "default".into(),
             spec: None,
+            kv: None,
             queue_ms: 0.5,
             prefill_ms: 1.25,
             decode_ms: 9.0,
@@ -464,6 +476,30 @@ mod tests {
         // and v0 replies never leak it
         let v0 = reply_line(&r);
         assert!(Json::parse(v0.trim()).unwrap().get("spec").is_none());
+    }
+
+    #[test]
+    fn kv_usage_in_v1_reply_only_when_present() {
+        use crate::serve::KvUsage;
+        let mut r = reply();
+        // engines report it; the builder omits the key when absent
+        let line = reply_line_v1(&r);
+        assert!(Json::parse(line.trim()).unwrap().get("kv").is_none());
+        r.kv = Some(KvUsage { pages: 3, prefix_hit_tokens: 32 });
+        let line = reply_line_v1(&r);
+        let j = Json::parse(line.trim()).unwrap();
+        let s = j.get("kv").unwrap();
+        assert_eq!(s.get("pages").unwrap().as_usize(), Some(3));
+        assert_eq!(
+            s.get("prefix_hit_tokens").unwrap().as_usize(),
+            Some(32)
+        );
+        // the streaming summary shares the builder
+        let d = done_line(&r);
+        assert!(Json::parse(d.trim()).unwrap().get("kv").is_some());
+        // and v0 replies never leak it
+        let v0 = reply_line(&r);
+        assert!(Json::parse(v0.trim()).unwrap().get("kv").is_none());
     }
 
     #[test]

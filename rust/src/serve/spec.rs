@@ -39,9 +39,14 @@
 //! cursor back to `committed + 1 + matched` rows; the rejected rows
 //! are overwritten by the next feed. The draft cache rolls back the
 //! same way — except after a *fully accepted* round, where the draft
-//! never consumed its own last token `d_k`: that token is carried as a
-//! one-token `lag` and fed together with the next round's first draft
-//! feed (a two-token chunk through the same fused pass).
+//! never consumed its own last token `d_k`: that token lands on the
+//! sequence's `backlog` (committed tokens the draft has not consumed)
+//! and is fed together with the next round's first draft feed as one
+//! multi-token chunk through the same fused pass. Rounds degraded to
+//! target-only by KV-page pressure queue their committed token on the
+//! same backlog, so the draft catches up in one chunk — or, past
+//! [`MAX_SPEC_K`] queued tokens, speculation turns off for the
+//! sequence rather than feed unbounded catch-up chunks.
 //!
 //! ## Round trip
 //!
@@ -74,7 +79,8 @@ use crate::model::engine::sampler::verify_pick;
 use crate::model::{DecodeBatch, ModelWeights, PREFILL_CHUNK};
 
 use super::{
-    Event, FinishReason, Reply, Request, Sampler, ServeConfig, ServeStats,
+    Event, FinishReason, KvUsage, Reply, Request, Sampler, ServeConfig,
+    ServeStats,
 };
 
 /// Hard cap on a speculative pair's draft depth (registry default and
@@ -104,10 +110,11 @@ pub struct SpecUsage {
     pub accepted: u64,
 }
 
-/// One in-flight speculative sequence. Invariant between rounds: both
-/// KV caches hold exactly `committed` consumed tokens (the draft's may
-/// be one short, carried in `lag`), and `pending` is the last emitted
-/// token, not yet consumed by either model.
+/// One in-flight speculative sequence. Invariant between rounds: the
+/// target KV holds exactly `committed` consumed tokens, the draft KV
+/// holds `committed - backlog.len()` (the backlog is the committed
+/// suffix the draft has not consumed yet), and `pending` is the last
+/// emitted token, not yet consumed by either model.
 struct SpecSeq {
     req: Request,
     generated: Vec<u16>,
@@ -117,9 +124,10 @@ struct SpecSeq {
     drafts: Vec<u16>,
     /// verify window scratch: [pending, d1..dk]
     vbuf: Vec<u16>,
-    /// committed token the draft engine has not consumed yet (set
-    /// after a fully-accepted round)
-    lag: Option<u16>,
+    /// committed tokens the draft engine has not consumed yet: `d_k`
+    /// after a fully-accepted round, plus one token per round that
+    /// KV-page pressure degraded to target-only
+    backlog: Vec<u16>,
     sampler: Option<Sampler>,
     /// per-request draft depth (0 = target-only)
     k: usize,
@@ -129,6 +137,9 @@ struct SpecSeq {
     limit: usize,
     /// tokens consumed & valid in the target KV
     committed: usize,
+    /// prompt head tokens served from the prefix caches (counted once,
+    /// though both engines honour the hit)
+    prefix_hit: usize,
     queue_ms: f64,
     prefill_ms: f64,
     decode_t0: Instant,
@@ -181,37 +192,50 @@ pub fn spec_engine_loop(
 ) {
     // verify windows are up to (MAX_SPEC_K + 1) rows per sequence and
     // share the fused pass with prefill chunks; the draft side carries
-    // at most a 2-token lag chunk per sequence on top of its budget
-    let mut tb = DecodeBatch::with_rows(
+    // up to a (MAX_SPEC_K + 1)-token backlog catch-up chunk per
+    // sequence on top of its per-round feeds
+    let mut tb = DecodeBatch::with_kv(
         &target,
         cfg.max_batch,
         cfg.max_ctx,
         cfg.max_batch * (MAX_SPEC_K + 1) + PREFILL_CHUNK,
+        super::kv_config(&cfg),
     );
-    let mut db = DecodeBatch::with_rows(
+    let mut db = DecodeBatch::with_kv(
         &draft,
         cfg.max_batch,
         cfg.max_ctx,
-        2 * cfg.max_batch + PREFILL_CHUNK,
+        cfg.max_batch * (MAX_SPEC_K + 2) + PREFILL_CHUNK,
+        super::kv_config(&cfg),
     );
     let mut active: Vec<SpecSeq> = Vec::new();
+    // a request admitted by the router but parked by the engine while
+    // the page pools drain (same mechanism as engine_loop)
+    let mut parked: Option<Request> = None;
+    stats.kv_pages_total.store(
+        (tb.pages_total() + db.pages_total()) as u64,
+        Ordering::Relaxed,
+    );
     loop {
         // ---- admission: fill the batch from the queue (both engines
-        //      admit in lockstep so indices stay mirrored)
+        //      admit in lockstep so indices stay mirrored). A request
+        //      that does not fit the page pools right now parks and
+        //      retries next iteration instead of erroring.
         while active.len() < cfg.max_batch {
-            let req = if active.is_empty() {
+            let (req, was_parked) = if let Some(r) = parked.take() {
+                (r, true)
+            } else if active.is_empty() {
                 match rx.recv_timeout(Duration::from_millis(20)) {
-                    Ok(r) => r,
+                    Ok(r) => (r, false),
                     Err(mpsc::RecvTimeoutError::Timeout) => break,
                     Err(mpsc::RecvTimeoutError::Disconnected) => return,
                 }
             } else {
                 match rx.try_recv() {
-                    Ok(r) => r,
+                    Ok(r) => (r, false),
                     Err(_) => break,
                 }
             };
-            let queue_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
             // admission rejects anything that cannot fit — never clamp
             // the prompt (see engine_loop: a clamp can shred it to
             // zero tokens and this loop would then verify against the
@@ -221,24 +245,98 @@ pub fn spec_engine_loop(
                 "admission must reject requests that cannot fit"
             );
             let limit = req.prompt.len();
-            let ti = tb.admit(&target, limit + req.max_new);
-            let di = db.admit(&draft, limit + req.max_new);
-            debug_assert_eq!(ti, active.len());
-            debug_assert_eq!(di, active.len());
-            let sampler = req.sampling.map(Sampler::new);
             let k = req.spec_k.unwrap_or(pair_k).min(MAX_SPEC_K);
+            // a prefix hit must be honoured by BOTH caches (the shared
+            // prefill cursor starts at `hit`) — except for k = 0
+            // sequences, whose draft cache is never touched
+            let hit = if k == 0 {
+                tb.prefix_peek(&req.prompt)
+            } else {
+                tb.prefix_peek(&req.prompt)
+                    .min(db.prefix_peek(&req.prompt))
+            };
+            if !active.is_empty() {
+                let tneed = tb
+                    .pages_for(limit + 1)
+                    .saturating_sub(tb.pages_for(hit))
+                    + 1;
+                let dneed = if k == 0 {
+                    0
+                } else {
+                    db.pages_for(limit + 1)
+                        .saturating_sub(db.pages_for(hit))
+                        + 1
+                };
+                if tb.available_pages() < tneed
+                    || db.available_pages() < dneed
+                {
+                    if !was_parked {
+                        stats.kv_parked.fetch_add(1, Ordering::Relaxed);
+                    }
+                    parked = Some(req);
+                    break;
+                }
+            }
+            let queue_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+            let cap = limit + req.max_new;
+            let ti = match tb.admit_prompt(cap, &req.prompt, hit) {
+                Ok(i) => i,
+                Err(e) => {
+                    let _ = req.reply.send(Event::Error {
+                        id: req.id,
+                        error: format!("admission failed: {e}"),
+                    });
+                    continue;
+                }
+            };
+            let dhit = if k == 0 { 0 } else { hit };
+            let di = match db.admit_prompt(cap, &req.prompt, dhit) {
+                Ok(i) => i,
+                Err(e) => {
+                    tb.retire(ti);
+                    let _ = req.reply.send(Event::Error {
+                        id: req.id,
+                        error: format!("admission failed: {e}"),
+                    });
+                    continue;
+                }
+            };
+            debug_assert_eq!(ti, active.len());
+            debug_assert_eq!(di, ti);
+            // eager reserve: the whole prompt plus the first decode
+            // row must have pages, or chunked prefill would panic
+            // mid-flight on an over-admitted batch
+            if !tb.try_reserve(ti, limit + 1 - hit) {
+                tb.retire(ti);
+                db.retire(di);
+                let _ = req.reply.send(Event::Error {
+                    id: req.id,
+                    error: "kv exhausted at admission".into(),
+                });
+                continue;
+            }
+            // a draft pool that cannot hold the prompt just disables
+            // speculation — the request still runs target-only
+            let k = if k > 0 && !db.try_reserve(di, limit + 1 - hit) {
+                stats.kv_stalls.fetch_add(1, Ordering::Relaxed);
+                0
+            } else {
+                k
+            };
+            let sampler = req.sampling.map(Sampler::new);
             active.push(SpecSeq {
                 req,
                 generated: Vec::new(),
                 pending: EOS,
                 drafts: Vec::new(),
                 vbuf: Vec::new(),
-                lag: None,
+                backlog: Vec::new(),
                 sampler,
                 k,
-                cursor: 0,
+                cursor: hit,
                 limit,
                 committed: 0,
+                prefix_hit: hit,
                 queue_ms,
                 prefill_ms: 0.0,
                 decode_t0: Instant::now(),
@@ -247,6 +345,13 @@ pub fn spec_engine_loop(
                 accepted: 0,
             });
         }
+        stats.kv_pages_in_use.store(
+            (tb.pages_in_use() + db.pages_in_use()) as u64,
+            Ordering::Relaxed,
+        );
+        stats
+            .kv_prefix_hit_tokens
+            .store(tb.prefix_hit_tokens(), Ordering::Relaxed);
         if active.is_empty() {
             if stop.load(Ordering::Relaxed) {
                 return;
@@ -264,6 +369,7 @@ pub fn spec_engine_loop(
                     continue;
                 }
             };
+            let pages = (tb.seq_pages(i) + db.seq_pages(i)) as u64;
             let seq = active.swap_remove(i);
             tb.retire(i);
             db.retire(i);
@@ -280,6 +386,10 @@ pub fn spec_engine_loop(
                 spec: Some(SpecUsage {
                     drafted: seq.drafted,
                     accepted: seq.accepted,
+                }),
+                kv: Some(KvUsage {
+                    pages,
+                    prefix_hit_tokens: seq.prefix_hit as u64,
                 }),
                 queue_ms: seq.queue_ms,
                 prefill_ms: seq.prefill_ms,
@@ -317,20 +427,56 @@ pub fn spec_engine_loop(
                 keff[i] = seq.k.min(remaining.saturating_sub(1));
             }
         }
+        // ---- KV-page reservation: every row this round writes must
+        //      have a page before the fused passes run (the batch
+        //      asserts on exhaustion). Failures degrade gracefully:
+        //      no draft room → target-only (for good: the draft cache
+        //      cannot stay in sync past a skipped feed budget), no
+        //      room for the full verify window → target-only round,
+        //      not even one target row → the sequence stalls this
+        //      round and sits out the verify pass.
+        let mut stall = vec![false; active.len()];
+        for i in 0..active.len() {
+            if active[i].prefilling() {
+                continue;
+            }
+            if !tb.try_reserve(i, keff[i] + 1) {
+                stats.kv_stalls.fetch_add(1, Ordering::Relaxed);
+                if keff[i] == 0 || !tb.try_reserve(i, 1) {
+                    stall[i] = true;
+                    keff[i] = 0;
+                    continue;
+                }
+                keff[i] = 0; // this round degrades to target-only
+            }
+            if keff[i] > 0 {
+                let need = active[i].backlog.len() + keff[i];
+                if !db.try_reserve(i, need) {
+                    stats.kv_stalls.fetch_add(1, Ordering::Relaxed);
+                    keff[i] = 0;
+                    active[i].k = 0;
+                    active[i].backlog.clear();
+                }
+            }
+        }
         let rounds = keff.iter().copied().max().unwrap_or(0);
         {
             // pass 0 also carries the draft-side prompt chunks and the
-            // lag catch-up chunks ([d_k, pending] after a fully
-            // accepted round)
+            // backlog catch-up chunks (committed tokens the draft has
+            // not consumed: d_k after a fully accepted round, plus one
+            // per round degraded to target-only by page pressure)
             let mut dec: Vec<(usize, u16)> = Vec::new();
-            let mut lags: Vec<(usize, [u16; 2])> = Vec::new();
+            let mut lagged: Vec<(usize, Vec<u16>)> = Vec::new();
             for (i, seq) in active.iter().enumerate() {
                 if keff[i] == 0 {
                     continue;
                 }
-                match seq.lag {
-                    Some(l) => lags.push((i, [l, seq.pending])),
-                    None => dec.push((i, seq.pending)),
+                if seq.backlog.is_empty() {
+                    dec.push((i, seq.pending));
+                } else {
+                    let mut chunk = seq.backlog.clone();
+                    chunk.push(seq.pending);
+                    lagged.push((i, chunk));
                 }
             }
             // k = 0 requests never use their draft cache, so their
@@ -340,12 +486,15 @@ pub fn spec_engine_loop(
                 .filter(|(i, _, _)| active[*i].k > 0)
                 .map(|(i, r, _)| (*i, r.clone()))
                 .collect();
-            if !dec.is_empty() || !lags.is_empty() || !dpre.is_empty() {
+            if !dec.is_empty()
+                || !lagged.is_empty()
+                || !dpre.is_empty()
+            {
                 let logits = {
                     let mut staged: Vec<(usize, &[u16], bool)> =
                         Vec::new();
-                    for (i, pair) in &lags {
-                        staged.push((*i, &pair[..], true));
+                    for (i, chunk) in &lagged {
+                        staged.push((*i, &chunk[..], true));
                     }
                     for (i, r) in &dpre {
                         staged.push((
@@ -357,20 +506,21 @@ pub fn spec_engine_loop(
                     db.step_fused(&draft, &dec, &staged)
                 };
                 // logits rows: decode entries first, then the
-                // want_logits (= lag) chunks in stage order
+                // want_logits (= backlog) chunks in stage order
                 for (r, &(i, _)) in dec.iter().enumerate() {
                     active[i]
                         .drafts
                         .push(argmax(logits.row(r)) as u16);
                 }
-                for (r, &(i, _)) in lags.iter().enumerate() {
-                    active[i]
+                for (r, (i, _)) in lagged.iter().enumerate() {
+                    active[*i]
                         .drafts
                         .push(argmax(logits.row(dec.len() + r)) as u16);
                 }
             }
-            for (i, _) in lags {
-                active[i].lag = None;
+            // fed chunks consumed the backlog
+            for (i, _) in lagged {
+                active[i].backlog.clear();
             }
         }
         for j in 1..rounds {
@@ -403,12 +553,22 @@ pub fn spec_engine_loop(
         let windows: Vec<(usize, usize)> = active
             .iter()
             .enumerate()
-            .filter(|(_, s)| !s.prefilling())
+            .filter(|&(i, s)| !s.prefilling() && !stall[i])
             .map(|(i, s)| (i, s.vbuf.len()))
             .collect();
         let vrows: usize = windows.iter().map(|&(_, l)| l).sum();
         let prows: usize = pjobs.iter().map(|(_, r, _)| r.len()).sum();
         if vrows + prows == 0 {
+            // every sequence is stalled on KV pages and nothing can
+            // run — preempt the fattest stalled sequence (it finishes
+            // with what it has) so the rest make progress
+            let victim = (0..active.len())
+                .filter(|&i| stall[i] && active[i].finish.is_none())
+                .max_by_key(|&i| tb.seq_pages(i) + db.seq_pages(i));
+            if let Some(v) = victim {
+                active[v].finish = Some(FinishReason::Length);
+                stats.kv_preempted.fetch_add(1, Ordering::Relaxed);
+            }
             continue;
         }
         let t0 = Instant::now();
@@ -475,25 +635,42 @@ pub fn spec_engine_loop(
             stats
                 .draft_accepted
                 .fetch_add(matched as u64, Ordering::Relaxed);
+            // rejected draft rows written into the target KV this
+            // round — rolled back below (or dropped at retirement)
+            stats
+                .spec_rolled_back
+                .fetch_add((kd - matched) as u64, Ordering::Relaxed);
             // valid target rows: old pending + the matched drafts; the
             // last committed token becomes the next round's pending
             seq.committed += 1 + matched;
             if seq.finish.is_some() {
                 continue; // retires next iteration; caches are dropped
             }
+            let old_pending = seq.pending;
             seq.pending = last;
             let full = matched == kd && kd > 0;
             if full {
-                // draft never consumed its own last proposal — carry
-                // it into the next round's first draft feed
-                seq.lag = Some(seq.drafts[kd - 1]);
+                // draft never consumed its own last proposal — queue
+                // it for the next round's catch-up chunk
+                seq.backlog.push(seq.drafts[kd - 1]);
+            } else if kd == 0 && seq.k > 0 {
+                // target-only round for a speculative sequence (page
+                // pressure degraded it): the draft missed this commit
+                seq.backlog.push(old_pending);
+                if seq.backlog.len() > MAX_SPEC_K {
+                    // too far behind to catch up in one chunk —
+                    // speculation stays off for this sequence
+                    seq.k = 0;
+                    seq.backlog.clear();
+                }
             }
-            truncs.push((i, seq.committed, seq.k > 0 && !full));
+            truncs.push((i, seq.committed, kd > 0 && !full));
         }
         // ---- prefill bookkeeping: advance cursors; a completed
         //      prompt's first token comes from ITS target logits row
         //      (the target decides everything, draft included)
         let mut prow = vrows;
+        let mut finished_prompts: Vec<usize> = Vec::new();
         for (i, r, completes) in pjobs {
             let seq = &mut active[i];
             seq.prefill_ms += elapsed_us / 1e3 * r.len() as f64
@@ -510,6 +687,7 @@ pub fn spec_engine_loop(
                 seq.commit(tok);
                 seq.pending = tok;
                 seq.decode_t0 = Instant::now();
+                finished_prompts.push(i);
             }
         }
         // ---- KV rollback (after the last read of the verify logits,
@@ -518,6 +696,14 @@ pub fn spec_engine_loop(
             tb.truncate(i, committed);
             if roll_draft {
                 db.truncate(i, committed);
+            }
+        }
+        // completed prompts publish their head pages to the prefix
+        // caches so later requests sharing the head skip that prefill
+        for i in finished_prompts {
+            tb.cache_prefix(i, &active[i].req.prompt);
+            if active[i].k > 0 {
+                db.cache_prefix(i, &active[i].req.prompt);
             }
         }
     }

@@ -38,7 +38,7 @@ fn parity_scenario(m: &ModelWeights) {
 
     let prompt_a: Vec<u16> = vec![1, 5, 9, 3, 2];
     let mut fed_a = prompt_a.clone();
-    let a = batch.admit(m, 32);
+    let a = batch.admit(32).unwrap();
     let la = prefill_into(m, &mut batch, a, &prompt_a).to_vec();
 
     // step A alone
@@ -48,7 +48,7 @@ fn parity_scenario(m: &ModelWeights) {
     // admit B mid-flight
     let prompt_b: Vec<u16> = vec![4, 8];
     let mut fed_b = prompt_b.clone();
-    let b = batch.admit(m, 32);
+    let b = batch.admit(32).unwrap();
     let lb = prefill_into(m, &mut batch, b, &prompt_b).to_vec();
 
     // step A and B together
@@ -60,7 +60,7 @@ fn parity_scenario(m: &ModelWeights) {
     // admit C, prefilled in explicitly bounded chunks
     let prompt_c: Vec<u16> = vec![2, 9, 4, 7, 1, 6, 3];
     let mut fed_c = prompt_c.clone();
-    let c = batch.admit(m, 32);
+    let c = batch.admit(32).unwrap();
     batch.prefill_chunk(m, c, &prompt_c[..3], false);
     let lc = batch.prefill_chunk(m, c, &prompt_c[3..], true).to_vec();
 
@@ -124,9 +124,9 @@ fn batched_matches_single_sealed() {
 fn fused_step_parity_and_single_pass() {
     let m = random_model(35);
     let mut batch = DecodeBatch::new(&m, 2, 32);
-    let a = batch.admit(&m, 32);
+    let a = batch.admit(32).unwrap();
     prefill_into(&m, &mut batch, a, &[1, 5, 9]);
-    let b = batch.admit(&m, 32);
+    let b = batch.admit(32).unwrap();
     let chunk: Vec<u16> = vec![4, 8, 2];
     // A decodes token 7 while B prefills its whole prompt — still ONE
     // storage pass per projection for the combined work
@@ -152,7 +152,7 @@ fn one_weight_pass_per_projection_per_step() {
     let passes_per_step = (m.cfg.n_layers * 7) as u64;
     let mut batch = DecodeBatch::new(&m, 4, 16);
     for si in 0..4usize {
-        let s = batch.admit(&m, 16);
+        let s = batch.admit(16).unwrap();
         assert_eq!(s, si);
         prefill_into(&m, &mut batch, s, &[1, 2 + si as u16]);
     }
@@ -195,14 +195,14 @@ fn prefill_chunk_boundary_parity() {
         let cap = len + 1;
         // chunked: the production prefill loop
         let mut chunked = DecodeBatch::new(&m, 1, cap);
-        let sc = chunked.admit(&m, cap);
+        let sc = chunked.admit(cap).unwrap();
         let got =
             prefill_into(&m, &mut chunked, sc, &prompt).to_vec();
         assert_eq!(chunked.pos(sc), len, "len {len}: cursor");
         // unchunked: the whole prompt as ONE fused pass (row budget
         // sized to fit), logits at the last row
         let mut whole = DecodeBatch::with_rows(&m, 1, cap, len);
-        let sw = whole.admit(&m, cap);
+        let sw = whole.admit(cap).unwrap();
         let want = whole
             .step_fused(&m, &[], &[(sw, &prompt, true)])
             .row(0)
@@ -226,7 +226,7 @@ fn prefill_chunk_boundary_parity() {
 fn prefill_chunk_counts_one_pass_per_projection() {
     let m = random_model(34);
     let mut batch = DecodeBatch::new(&m, 1, 64);
-    let si = batch.admit(&m, 64);
+    let si = batch.admit(64).unwrap();
     let before = weight_passes();
     // 40 tokens = 2 chunks → 2 × (layers × 7) passes, not 40 ×
     let prompt: Vec<u16> = (0..40).map(|i| (i % 60) as u16).collect();

@@ -1,0 +1,308 @@
+//! Paged-KV bit-parity: a `DecodeBatch` on a block-granular page pool
+//! must produce logits BYTE-IDENTICAL to the degenerate one-slab-per-
+//! sequence layout (`KvConfig::slab_oracle`) under every interleaving
+//! of admission, chunked prefill, decode, speculative rollback
+//! (`truncate`) and retire — including sequences whose prompt head is
+//! served from the prefix cache and sequences that write into shared
+//! (copy-on-write) tail pages. The page walk visits positions in the
+//! same ascending order as the flat slab, so equality is exact, not
+//! approximate.
+
+use mosaic::model::weights::testutil::random_model_sized;
+use mosaic::model::{
+    prefill_into, DecodeBatch, KvConfig, ModelWeights, PREFILL_CHUNK,
+};
+use mosaic::tensor::storage::weight_passes;
+use mosaic::util::rng::Pcg32;
+
+const MAX_BATCH: usize = 3;
+const MAX_CTX: usize = 64;
+const PAGE: usize = 8;
+
+/// Host-side mirror of one live sequence: every token actually
+/// consumed (so truncate/re-feed and `cache_prefix` stay honest) and
+/// the admitted capacity.
+struct Mirror {
+    fed: Vec<u16>,
+    cap: usize,
+}
+
+fn paged_config() -> KvConfig {
+    KvConfig {
+        // worst case MAX_BATCH × ceil(MAX_CTX/PAGE) pages for live
+        // sequences, plus slack so prefix-cache entries survive
+        page_positions: PAGE,
+        pages: MAX_BATCH * MAX_CTX.div_ceil(PAGE) + PAGE,
+        prefix_entries: 16,
+    }
+}
+
+/// Assert every logits row of one fused step is byte-equal across the
+/// two engines.
+fn step_both(
+    m: &ModelWeights,
+    paged: &mut DecodeBatch,
+    slab: &mut DecodeBatch,
+    inputs: &[(usize, u16)],
+    what: &str,
+) {
+    let got: Vec<Vec<f32>> = {
+        let t = paged.step(m, inputs);
+        (0..inputs.len()).map(|r| t.row(r).to_vec()).collect()
+    };
+    let want: Vec<Vec<f32>> = {
+        let t = slab.step(m, inputs);
+        (0..inputs.len()).map(|r| t.row(r).to_vec()).collect()
+    };
+    assert_eq!(got, want, "{what}: paged step must match slab oracle");
+}
+
+/// Random prefill/decode/truncate/retire interleavings, paged engine
+/// vs flat-slab oracle, byte-equal logits at every step. Admissions
+/// flip a coin between a fresh prompt and one sharing a fixed head, so
+/// the schedule keeps exercising prefix attach + CoW paths.
+fn random_interleaving(seed: u64) {
+    let m = random_model_sized(seed, 2, 16, 2, 40, 64, MAX_CTX);
+    let mut paged =
+        DecodeBatch::with_kv(&m, MAX_BATCH, MAX_CTX, PREFILL_CHUNK, paged_config());
+    let mut slab = DecodeBatch::with_kv(
+        &m,
+        MAX_BATCH,
+        MAX_CTX,
+        PREFILL_CHUNK,
+        KvConfig::slab_oracle(MAX_BATCH, MAX_CTX),
+    );
+    let mut rng = Pcg32::seeded(seed.wrapping_mul(7).wrapping_add(1));
+    let mut live: Vec<Mirror> = Vec::new();
+    // two full pages worth of shared prompt head
+    let shared_head: Vec<u16> =
+        (0..2 * PAGE).map(|i| (5 + 3 * i) as u16 % 60).collect();
+    let mut hits = 0usize;
+
+    // Prologue: seed the prefix cache deterministically so attach paths
+    // run regardless of what the random schedule does later.
+    {
+        let pi = paged.admit(MAX_CTX).unwrap();
+        let si = slab.admit(MAX_CTX).unwrap();
+        let got = prefill_into(&m, &mut paged, pi, &shared_head).to_vec();
+        let want = prefill_into(&m, &mut slab, si, &shared_head).to_vec();
+        assert_eq!(got, want, "prologue prefill");
+        paged.cache_prefix(pi, &shared_head);
+        paged.retire(pi);
+        slab.retire(si);
+        assert_eq!(
+            paged.prefix_peek(&shared_head),
+            shared_head.len() - 1,
+            "freshly cached head must peek (len-capped)"
+        );
+    }
+
+    for round in 0..200 {
+        let op = rng.below(10);
+        let eligible: Vec<usize> = (0..live.len())
+            .filter(|&i| paged.pos(i) < live[i].cap)
+            .collect();
+
+        if live.is_empty() || (live.len() < MAX_BATCH && op < 3) {
+            // admit (forced when the batch is empty)
+            let mut prompt = if rng.below(2) == 0 {
+                shared_head.clone()
+            } else {
+                Vec::new()
+            };
+            for _ in 0..1 + rng.below(12) {
+                prompt.push(rng.below(60) as u16);
+            }
+            let cap = (prompt.len() + 8 + rng.below(24)).min(MAX_CTX);
+            let hit = paged.prefix_peek(&prompt);
+            let pi = paged.admit_prompt(cap, &prompt, hit).unwrap();
+            let si = slab.admit(cap).unwrap();
+            assert_eq!(pi, si, "round {round}: seq index skew");
+            hits += hit;
+            // paged feeds only past the cached head; chunk grouping is
+            // bit-invariant (prefill_chunk_boundary_parity), so the
+            // last-token logits still have to agree exactly
+            let got =
+                prefill_into(&m, &mut paged, pi, &prompt[hit..]).to_vec();
+            let want = prefill_into(&m, &mut slab, si, &prompt).to_vec();
+            assert_eq!(got, want, "round {round}: prefill (hit {hit})");
+            live.push(Mirror { fed: prompt, cap });
+        } else if op < 7 && !eligible.is_empty() {
+            // decode a random non-empty subset of the eligible seqs
+            let mut inputs: Vec<(usize, u16)> = eligible
+                .iter()
+                .filter(|_| rng.below(2) == 0)
+                .map(|&i| (i, rng.below(60) as u16))
+                .collect();
+            if inputs.is_empty() {
+                let i = eligible[rng.below(eligible.len())];
+                inputs.push((i, rng.below(60) as u16));
+            }
+            step_both(&m, &mut paged, &mut slab, &inputs, "decode");
+            for &(i, t) in &inputs {
+                live[i].fed.push(t);
+            }
+        } else if op < 8 {
+            // speculative-style rollback: truncate one seq to a random
+            // earlier length (often across a page boundary), later
+            // decodes re-feed diverging tokens through CoW'd pages
+            let i = rng.below(live.len());
+            let pos = paged.pos(i);
+            if pos > 1 {
+                let len = 1 + rng.below(pos - 1);
+                paged.truncate(i, len);
+                slab.truncate(i, len);
+                live[i].fed.truncate(len);
+            }
+        } else if !live.is_empty() {
+            // retire (publishing the head so later admits can share it)
+            let i = rng.below(live.len());
+            paged.cache_prefix(i, &live[i].fed);
+            paged.retire(i);
+            slab.retire(i);
+            live.swap_remove(i);
+        }
+
+        for i in 0..live.len() {
+            assert_eq!(
+                paged.pos(i),
+                slab.pos(i),
+                "round {round}: cursor skew on seq {i}"
+            );
+            assert_eq!(paged.pos(i), live[i].fed.len());
+        }
+    }
+    // Epilogue: one deterministic attach, so the suite covers a prefix
+    // hit even if the schedule's coin flips never picked the shared
+    // head (the cache entry may have been LRU-evicted meanwhile, so
+    // re-publish it first).
+    while !live.is_empty() {
+        paged.retire(0);
+        slab.retire(0);
+        live.swap_remove(0);
+    }
+    let pi = paged.admit(MAX_CTX).unwrap();
+    let si = slab.admit(MAX_CTX).unwrap();
+    prefill_into(&m, &mut paged, pi, &shared_head);
+    prefill_into(&m, &mut slab, si, &shared_head);
+    paged.cache_prefix(pi, &shared_head);
+    paged.retire(pi);
+    slab.retire(si);
+    let mut prompt = shared_head.clone();
+    prompt.push(33);
+    let hit = paged.prefix_peek(&prompt);
+    assert_eq!(hit, shared_head.len(), "whole head must be attachable");
+    let pi = paged.admit_prompt(MAX_CTX, &prompt, hit).unwrap();
+    let si = slab.admit(MAX_CTX).unwrap();
+    let got = prefill_into(&m, &mut paged, pi, &prompt[hit..]).to_vec();
+    let want = prefill_into(&m, &mut slab, si, &prompt).to_vec();
+    assert_eq!(got, want, "epilogue attach parity");
+    hits += hit;
+    assert!(hits > 0, "no prefix-cache attach ever ran");
+}
+
+#[test]
+fn random_interleavings_match_slab_oracle() {
+    for seed in [11, 12, 13] {
+        random_interleaving(seed);
+    }
+}
+
+/// Rolling back across a page boundary and re-feeding diverging tokens
+/// must stay byte-identical to the slab doing the same in-place
+/// overwrite.
+#[test]
+fn truncate_across_page_boundary_matches_slab() {
+    let m = random_model_sized(91, 2, 16, 2, 40, 64, MAX_CTX);
+    let kv = KvConfig {
+        page_positions: PAGE,
+        pages: MAX_CTX.div_ceil(PAGE),
+        prefix_entries: 0,
+    };
+    let mut paged = DecodeBatch::with_kv(&m, 1, MAX_CTX, PREFILL_CHUNK, kv);
+    let mut slab = DecodeBatch::with_kv(
+        &m,
+        1,
+        MAX_CTX,
+        PREFILL_CHUNK,
+        KvConfig::slab_oracle(1, MAX_CTX),
+    );
+    let prompt: Vec<u16> = (0..21).map(|i| (2 + 7 * i) as u16 % 60).collect();
+    let p = paged.admit(MAX_CTX).unwrap();
+    let s = slab.admit(MAX_CTX).unwrap();
+    let got = prefill_into(&m, &mut paged, p, &prompt).to_vec();
+    let want = prefill_into(&m, &mut slab, s, &prompt).to_vec();
+    assert_eq!(got, want, "prefill");
+    // decode past the 24-position page boundary...
+    for t in [5u16, 11, 3, 8] {
+        step_both(&m, &mut paged, &mut slab, &[(p, t)], "pre-rollback");
+    }
+    assert_eq!(paged.seq_pages(p), 4, "25 positions span 4 pages");
+    // ...roll back across it, then re-feed a diverging continuation
+    paged.truncate(p, 22);
+    slab.truncate(s, 22);
+    for t in [40u16, 2, 33, 17, 29] {
+        step_both(&m, &mut paged, &mut slab, &[(p, t)], "post-rollback");
+    }
+}
+
+/// The CoW contract end-to-end: a sequence attaching a cached head
+/// whose last page is only partially claimed (peek caps at `len - 1`)
+/// writes into that shared tail page; the write must be redirected to
+/// a private copy so the cached bytes — and every later sequence that
+/// attaches them — are unaffected.
+#[test]
+fn cow_tail_page_preserves_cached_prefix() {
+    let m = random_model_sized(77, 2, 16, 2, 40, 64, MAX_CTX);
+    let kv = KvConfig {
+        page_positions: PAGE,
+        pages: 2 * MAX_CTX.div_ceil(PAGE) + 2,
+        prefix_entries: 4,
+    };
+    let mut batch = DecodeBatch::with_kv(&m, 2, MAX_CTX, PREFILL_CHUNK, kv);
+    let prompt: Vec<u16> =
+        (0..2 * PAGE).map(|i| (3 + 5 * i) as u16 % 60).collect();
+
+    // A: prefill the whole prompt, publish it, record a continuation
+    let a = batch.admit(MAX_CTX).unwrap();
+    let la = prefill_into(&m, &mut batch, a, &prompt).to_vec();
+    batch.cache_prefix(a, &prompt);
+    let a1 = batch.step(&m, &[(a, 9)]).row(0).to_vec();
+    let a2 = batch.step(&m, &[(a, 30)]).row(0).to_vec();
+    batch.retire(a);
+
+    // B: same prompt. peek caps at len-1 = 15, so the second cached
+    // page arrives as a shared, partially-claimed tail page — feeding
+    // position 15 must copy-on-write it, not clobber the cached rows.
+    let hit = batch.prefix_peek(&prompt);
+    assert_eq!(hit, prompt.len() - 1, "peek caps at prompt len - 1");
+    let b = batch.admit_prompt(MAX_CTX, &prompt, hit).unwrap();
+    let before = weight_passes();
+    let lb = prefill_into(&m, &mut batch, b, &prompt[hit..]).to_vec();
+    assert_eq!(
+        weight_passes() - before,
+        (m.cfg.n_layers * 7) as u64,
+        "the 1-token tail must cost exactly one chunk of weight passes"
+    );
+    assert_eq!(lb, la, "attached prefill must be bit-identical");
+    let b1 = batch.step(&m, &[(b, 14)]).row(0).to_vec();
+    assert_ne!(b1, a1, "B diverged, logits should differ");
+
+    // C: B wrote into the shared tail page — the cache entry must
+    // still peek, and replaying A's continuation through it must
+    // reproduce A's logits bit-for-bit.
+    let hit = batch.prefix_peek(&prompt);
+    assert_eq!(hit, prompt.len() - 1, "CoW must leave the cache usable");
+    let c = batch.admit_prompt(MAX_CTX, &prompt, hit).unwrap();
+    let lc = prefill_into(&m, &mut batch, c, &prompt[hit..]).to_vec();
+    assert_eq!(lc, la, "cache intact after B's CoW write");
+    let c1 = batch.step(&m, &[(c, 9)]).row(0).to_vec();
+    let c2 = batch.step(&m, &[(c, 30)]).row(0).to_vec();
+    assert_eq!(c1, a1, "replayed continuation, step 1");
+    assert_eq!(c2, a2, "replayed continuation, step 2");
+    assert_eq!(
+        batch.prefix_hit_tokens(),
+        2 * (prompt.len() - 1) as u64,
+        "two attaches, len-1 positions each"
+    );
+}
