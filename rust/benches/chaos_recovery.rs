@@ -1,0 +1,272 @@
+//! Supervision overhead + crash recovery (`make bench-chaos`, feature
+//! "chaos"). Two questions the robustness layer must answer with
+//! numbers:
+//!
+//! * **overhead** — at 0 % injected faults, what do the panic
+//!   boundary, inflight ledger and health checks cost? Compared by
+//!   driving the same model (a) through the full supervised server and
+//!   (b) through a bare `engine_loop` thread with no supervisor wrap.
+//!   The delta must be negligible (the ledger is one mutex op per
+//!   request, not per token).
+//! * **recovery** — after an injected engine panic, how long until the
+//!   respawned engine serves again, and at what tok/s?
+//!
+//! Rows merge into `BENCH_serve.json` (section "chaos*"), alongside
+//! the serve_throughput rows, for cross-PR perf tracking.
+
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use mosaic::bench_support::{header, rec, Bench};
+use mosaic::data::trace::{generate, percentiles, Arrival, TraceConfig};
+use mosaic::model::weights::testutil::random_model_sized;
+use mosaic::serve::fault::{self, FaultPlan};
+use mosaic::serve::{
+    engine_loop, wait_reply, Ctl, ModelRegistry, Request, ServeConfig,
+    ServeStats, Server, SubmitSpec,
+};
+use mosaic::util::json::Json;
+
+const MODEL: &str = "chaos-bench";
+
+fn cfg() -> ServeConfig {
+    ServeConfig {
+        max_batch: 4,
+        max_queue: 256,
+        default_model: Some(MODEL.into()),
+        max_restarts: 100,
+        restart_backoff_ms: 1,
+        ..Default::default()
+    }
+}
+
+fn model() -> mosaic::model::ModelWeights {
+    random_model_sized(9, 2, 64, 4, 176, 128, 64)
+}
+
+fn trace_items(n: usize) -> Vec<mosaic::data::trace::TraceItem> {
+    generate(&TraceConfig {
+        arrival: Arrival::Batch,
+        rate: 100.0,
+        n_requests: n,
+        prompt_len_mean: 8,
+        prompt_len_max: 16,
+        max_new: 12,
+        ..Default::default()
+    })
+}
+
+struct DriveOut {
+    tok_per_s: f64,
+    p99_ms: f64,
+}
+
+/// Saturate the supervised server with `trace` and measure tok/s +
+/// end-to-end p99.
+fn drive_supervised(
+    srv: &Server,
+    trace: &[mosaic::data::trace::TraceItem],
+) -> DriveOut {
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for item in trace {
+        let sent = Instant::now();
+        if let Ok(rx) = srv
+            .submit_spec(SubmitSpec::greedy(&item.prompt, item.max_new))
+        {
+            pending.push((sent, rx));
+        }
+    }
+    let mut lat = Vec::new();
+    let mut tokens = 0usize;
+    for (sent, rx) in pending {
+        if let Ok(r) = wait_reply(&rx, Duration::from_secs(60)) {
+            lat.push(sent.elapsed().as_secs_f64() * 1e3);
+            tokens += r.tokens.len();
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let (_, _, p99) = percentiles(lat);
+    DriveOut { tok_per_s: tokens as f64 / wall, p99_ms: p99 }
+}
+
+/// The unsupervised baseline: one bare `engine_loop` thread, no panic
+/// boundary, no supervisor — requests hand-delivered to its queue.
+fn drive_raw(
+    trace: &[mosaic::data::trace::TraceItem],
+) -> DriveOut {
+    let c = cfg();
+    let (tx, rx) = mpsc::sync_channel::<Request>(c.max_queue);
+    let stats = Arc::new(ServeStats::default());
+    let ctl = Ctl::fresh();
+    let engine = {
+        let (m, name, c2, stats, ctl) = (
+            Arc::new(model()),
+            Arc::new(MODEL.to_string()),
+            c.clone(),
+            stats.clone(),
+            ctl.clone(),
+        );
+        std::thread::spawn(move || {
+            engine_loop(m, name, c2, &rx, stats, ctl)
+        })
+    };
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for (i, item) in trace.iter().enumerate() {
+        let (rtx, rrx) = mpsc::channel();
+        let req = Request {
+            id: i as u64,
+            prompt: item.prompt.clone(),
+            max_new: item.max_new,
+            sampling: None,
+            stop_tokens: Vec::new(),
+            stream: false,
+            spec_k: None,
+            deadline: None,
+            enqueued: Instant::now(),
+            reply: rtx,
+        };
+        stats.queue_depth.fetch_add(1, Ordering::Relaxed);
+        let sent = Instant::now();
+        if tx.send(req).is_ok() {
+            pending.push((sent, rrx));
+        }
+    }
+    let mut lat = Vec::new();
+    let mut tokens = 0usize;
+    for (sent, rrx) in pending {
+        if let Ok(r) = wait_reply(&rrx, Duration::from_secs(60)) {
+            lat.push(sent.elapsed().as_secs_f64() * 1e3);
+            tokens += r.tokens.len();
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    drop(tx); // disconnect → engine exits
+    engine.join().expect("raw engine must not panic at 0% faults");
+    let (_, _, p99) = percentiles(lat);
+    DriveOut { tok_per_s: tokens as f64 / wall, p99_ms: p99 }
+}
+
+fn start_server() -> Server {
+    let mut reg = ModelRegistry::new();
+    reg.register(MODEL, model()).expect("register");
+    Server::start_registry(reg, cfg(), 0).expect("start")
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new(
+        "chaos_recovery",
+        "supervision overhead + crash recovery",
+    );
+    let n = if Bench::fast() { 16 } else { 48 };
+    let trace = trace_items(n);
+
+    // ---- overhead at 0% faults: supervised vs raw engine thread
+    println!("— supervision overhead (0% faults) —");
+    header(&["mode", "tok/s", "p99-ms"]);
+    let srv = start_server();
+    let sup = drive_supervised(&srv, &trace);
+    let raw = drive_raw(&trace);
+    let mut rows: Vec<Json> = Vec::new();
+    for (mode, d) in [("supervised", &sup), ("raw-engine", &raw)] {
+        println!("{mode:>12}{:>12.0}{:>12.2}", d.tok_per_s, d.p99_ms);
+        let row = rec(&[
+            ("section", Json::str("chaos_overhead")),
+            ("mode", Json::str(mode)),
+            ("tok_per_s", Json::num(d.tok_per_s)),
+            ("p99_ms", Json::num(d.p99_ms)),
+        ]);
+        b.row("chaos_overhead", row.clone());
+        rows.push(row);
+    }
+    let overhead_pct = if raw.tok_per_s > 0.0 {
+        (raw.tok_per_s - sup.tok_per_s) / raw.tok_per_s * 100.0
+    } else {
+        0.0
+    };
+    println!("  supervision throughput cost: {overhead_pct:.1}%");
+
+    // ---- recovery after an injected crash: panic the engine mid-
+    // flight, then time how long until a fresh request completes on
+    // the respawned engine
+    println!("\n— crash recovery —");
+    header(&["phase", "value"]);
+    let plan = Arc::new(FaultPlan::new().panic_at(fault::CP_STEP, 4));
+    let guard = fault::arm_guard(MODEL, plan);
+    let mut pending = Vec::new();
+    for item in trace.iter().take(8) {
+        if let Ok(rx) = srv
+            .submit_spec(SubmitSpec::greedy(&item.prompt, item.max_new))
+        {
+            pending.push(rx);
+        }
+    }
+    // the panic lands while these drain; note when the first error
+    // (the crash becoming externally visible) arrives
+    let mut t_crash: Option<Instant> = None;
+    for rx in pending {
+        match wait_reply(&rx, Duration::from_secs(60)) {
+            Ok(_) => {}
+            Err(_) => {
+                t_crash.get_or_insert_with(Instant::now);
+            }
+        }
+    }
+    drop(guard);
+    let t_crash = t_crash.unwrap_or_else(Instant::now);
+    // first successful reply on the respawned engine = recovered
+    let recovery_ms = loop {
+        let rx = srv.submit_spec(SubmitSpec::greedy(&[1, 5, 9], 4))?;
+        if wait_reply(&rx, Duration::from_secs(60)).is_ok() {
+            break t_crash.elapsed().as_secs_f64() * 1e3;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    };
+    let post = drive_supervised(&srv, &trace);
+    let stats = srv.model_stats(MODEL).expect("stats");
+    let panics = stats.engine_panics.load(Ordering::Relaxed);
+    println!("{:>12}{recovery_ms:>12.1}", "recover-ms");
+    println!("{:>12}{:>12.0}", "post-tok/s", post.tok_per_s);
+    println!("{:>12}{panics:>12}", "panics");
+    let row = rec(&[
+        ("section", Json::str("chaos_recovery")),
+        ("recovery_ms", Json::num(recovery_ms)),
+        ("post_tok_per_s", Json::num(post.tok_per_s)),
+        ("engine_panics", Json::num(panics as f64)),
+    ]);
+    b.row("chaos_recovery", row.clone());
+    rows.push(row);
+    srv.shutdown();
+
+    // ---- merge into BENCH_serve.json: replace prior chaos* rows,
+    // keep everything serve_throughput wrote
+    let mut kept: Vec<Json> = Vec::new();
+    let mut out = Json::obj();
+    out.set("bench", Json::str("serve_throughput"));
+    if let Ok(prev) = std::fs::read_to_string("BENCH_serve.json") {
+        if let Ok(j) = Json::parse(prev.trim()) {
+            if let Some(name) = j.get("bench").and_then(|v| v.as_str()) {
+                out.set("bench", Json::str(name));
+            }
+            if let Some(nr) = j.get("n_requests") {
+                out.set("n_requests", nr.clone());
+            }
+            if let Some(rs) = j.get("rows").and_then(|r| r.as_arr()) {
+                kept.extend(rs.iter().cloned().filter(|r| {
+                    !r.get("section")
+                        .and_then(|s| s.as_str())
+                        .is_some_and(|s| s.starts_with("chaos"))
+                }));
+            }
+        }
+    }
+    kept.extend(rows);
+    out.set("rows", Json::Arr(kept));
+    std::fs::write("BENCH_serve.json", out.to_string())?;
+    println!("\n[merged chaos rows into BENCH_serve.json]");
+
+    b.finish();
+    Ok(())
+}

@@ -14,6 +14,7 @@
 //!                  [--spec target:draft@k[,name=target:draft@k...]]
 //!                  [--default-model NAME] [--stream 0|1]
 //!                  [--batch 8] [--queue 64] [--port 7171] [--seal 0|1]
+//!                  [--deadline-ms 0] [--drain-ms 5000] [--max-restarts 3]
 //!   mosaic pipeline --model tl1_7 --p 0.6                (end-to-end)
 
 use anyhow::{bail, Result};
@@ -439,6 +440,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let p = args.usize("kv-pages", 0);
             (p > 0).then_some(p)
         },
+        // --deadline-ms N gives every request without its own
+        // "deadline_ms" a wall-clock budget; 0 (default) = unlimited
+        default_deadline_ms: {
+            let d = args.usize("deadline-ms", 0) as u64;
+            (d > 0).then_some(d)
+        },
+        drain_ms: args.usize("drain-ms", 5_000) as u64,
+        max_restarts: args.usize("max-restarts", 3) as u32,
         ..Default::default()
     };
     let port = args.usize("port", 7171) as u16;

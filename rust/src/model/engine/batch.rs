@@ -338,6 +338,16 @@ impl DecodeBatch {
         }
     }
 
+    /// Retire every sequence at once — the serving layer's force-drain
+    /// path (shutdown past the drain budget, supervisor cleanup after
+    /// an engine panic). Prefix-cached pages stay resident exactly as
+    /// with per-sequence [`retire`](Self::retire).
+    pub fn retire_all(&mut self) {
+        while !self.seqs.is_empty() {
+            self.retire(self.seqs.len() - 1);
+        }
+    }
+
     /// Roll sequence `si` back to `len` consumed tokens, discarding
     /// the KV rows past it — the speculative-decoding rejection path.
     /// The discarded rows are not zeroed and their pages are kept

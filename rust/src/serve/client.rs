@@ -4,13 +4,21 @@
 //!
 //! A [`GenRequest`] built with only `prompt`/`max_new` serializes as a
 //! pure v0 request (and therefore gets a v0 reply); touching any v1
-//! knob (model routing, sampling, stop tokens, streaming) upgrades the
-//! wire request to v1. Streamed replies are validated while they
-//! arrive: token events must be contiguous and must mirror the final
-//! summary's token list.
+//! knob (model routing, sampling, stop tokens, deadlines, streaming)
+//! upgrades the wire request to v1. Streamed replies are validated
+//! while they arrive: token events must be contiguous and must mirror
+//! the final summary's token list.
+//!
+//! Server failures surface as typed [`WireError`]s (preserved through
+//! `anyhow`, so callers can downcast), and
+//! [`Client::generate_retry`] layers a bounded-backoff [`RetryPolicy`]
+//! on top: it retries only errors the server marked `retryable`, and
+//! NEVER an attempt that already streamed a token — partial output the
+//! caller observed must not be silently replayed.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -28,6 +36,7 @@ pub struct GenRequest {
     pub sampling: Option<SamplingParams>,
     pub stop_tokens: Vec<u16>,
     pub spec: Option<SpecRequest>,
+    pub deadline_ms: Option<u64>,
     pub stream: bool,
 }
 
@@ -63,6 +72,14 @@ impl GenRequest {
     /// Ask for per-token streaming (v1).
     pub fn streaming(mut self) -> Self {
         self.stream = true;
+        self
+    }
+
+    /// Wall-clock budget for the whole request, queue time included
+    /// (v1). A lapsed request finishes with whatever it generated and
+    /// `finish_reason: "deadline"` — it is a reply, not an error.
+    pub fn deadline_ms(mut self, ms: u64) -> Self {
+        self.deadline_ms = Some(ms);
         self
     }
 
@@ -134,6 +151,9 @@ impl GenRequest {
             }
             o.set("spec", s);
         }
+        if let Some(ms) = self.deadline_ms {
+            o.set("deadline_ms", Json::num(ms as f64));
+        }
         if self.stream {
             o.set("stream", Json::Bool(true));
         }
@@ -156,6 +176,73 @@ pub struct GenReply {
     pub queue_ms: f64,
     pub prefill_ms: f64,
     pub decode_ms: f64,
+}
+
+/// A server-reported failure, with the typed wire fields preserved
+/// through `anyhow` — downcast the error to consult `retryable`.
+#[derive(Debug, Clone)]
+pub struct WireError {
+    pub msg: String,
+    /// Stable machine code (`"queue_full"`, `"engine_down"`, ...);
+    /// empty for legacy untyped `{"error": ...}` lines.
+    pub code: String,
+    /// The server says a retry can possibly succeed. Legacy lines
+    /// without the field are conservatively NOT retryable.
+    pub retryable: bool,
+    /// Generation had already streamed tokens when it failed.
+    pub started: bool,
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "server error: {}", self.msg)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// `Some` when the line is an error line (any shape — typed v1 fields
+/// or a legacy bare `{"error": ...}`).
+fn parse_error(j: &Json) -> Option<WireError> {
+    let msg = j.get("error")?;
+    Some(WireError {
+        msg: msg
+            .as_str()
+            .unwrap_or("(non-string error)")
+            .to_string(),
+        code: j
+            .get("code")
+            .and_then(|c| c.as_str())
+            .unwrap_or("")
+            .to_string(),
+        retryable: j
+            .get("retryable")
+            .and_then(|r| r.as_bool())
+            .unwrap_or(false),
+        started: j
+            .get("started")
+            .and_then(|r| r.as_bool())
+            .unwrap_or(false),
+    })
+}
+
+/// Bounded-backoff retry knobs for [`Client::generate_retry`]: up to
+/// `max_retries` re-sends, sleeping `backoff * 2^attempt` (capped at
+/// 64x) between them. Only errors the server marked retryable are ever
+/// retried, and never after the attempt streamed a token.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    pub max_retries: u32,
+    pub backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 3,
+            backoff: Duration::from_millis(25),
+        }
+    }
 }
 
 /// Blocking line-JSON client over one TCP connection. Requests on a
@@ -201,11 +288,11 @@ impl Client {
             }
             let j = Json::parse(line.trim())
                 .map_err(|e| anyhow!("bad reply line: {e} ({line})"))?;
-            if let Some(e) = j.get("error") {
-                bail!(
-                    "server error: {}",
-                    e.as_str().unwrap_or("(non-string error)")
-                );
+            if let Some(we) = parse_error(&j) {
+                // typed, not a bail!: Display keeps the old "server
+                // error: ..." text while generate_retry downcasts for
+                // the retryable bit
+                return Err(anyhow::Error::new(we));
             }
             match j.get("event").and_then(|e| e.as_str()) {
                 Some("token") => {
@@ -243,6 +330,44 @@ impl Client {
                 }
                 Some(other) => bail!("unknown event '{other}'"),
             }
+        }
+    }
+
+    /// [`generate_with`](Self::generate_with) plus client-side
+    /// resilience: on a [`WireError`] the server marked retryable, the
+    /// request is re-sent after exponential backoff, up to
+    /// `policy.max_retries` times. An attempt that streamed even one
+    /// token is never retried (the caller saw partial output), and
+    /// non-wire failures (connection loss, framing) are never retried
+    /// here — the connection state is unknown.
+    pub fn generate_retry(
+        &mut self,
+        req: &GenRequest,
+        policy: RetryPolicy,
+        mut on_token: impl FnMut(usize, u16),
+    ) -> Result<GenReply> {
+        let mut attempt = 0u32;
+        loop {
+            let mut streamed_any = false;
+            let res = self.generate_with(req, |i, t| {
+                streamed_any = true;
+                on_token(i, t);
+            });
+            let e = match res {
+                Ok(r) => return Ok(r),
+                Err(e) => e,
+            };
+            let retry = !streamed_any
+                && attempt < policy.max_retries
+                && e.downcast_ref::<WireError>()
+                    .is_some_and(|w| w.retryable && !w.started);
+            if !retry {
+                return Err(e);
+            }
+            std::thread::sleep(
+                policy.backoff * (1u32 << attempt.min(6)),
+            );
+            attempt += 1;
         }
     }
 }
@@ -312,6 +437,7 @@ fn parse_reply(j: &Json) -> Result<GenReply, String> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 
@@ -363,6 +489,98 @@ mod tests {
             GenRequest::greedy(&[4]).speculative(None, None).wire_line();
         let p = crate::serve::protocol::parse_request(&line).unwrap();
         assert_eq!(p.spec, Some(SpecRequest::default()));
+    }
+
+    #[test]
+    fn deadline_roundtrips_through_the_protocol() {
+        let line =
+            GenRequest::greedy(&[4]).deadline_ms(250).wire_line();
+        let p = crate::serve::protocol::parse_request(&line).unwrap();
+        assert!(p.v1, "deadline_ms is a v1 field");
+        assert_eq!(p.deadline_ms, Some(250));
+        // untouched requests carry no deadline (and stay v0)
+        let line = GenRequest::greedy(&[4]).wire_line();
+        let p = crate::serve::protocol::parse_request(&line).unwrap();
+        assert!(p.deadline_ms.is_none() && !p.v1);
+    }
+
+    #[test]
+    fn error_lines_parse_typed_and_legacy() {
+        let j = Json::parse(
+            "{\"error\":\"x\",\"code\":\"shutdown\",\
+             \"retryable\":true,\"started\":false}",
+        )
+        .unwrap();
+        let w = parse_error(&j).unwrap();
+        assert_eq!(
+            (w.code.as_str(), w.retryable, w.started),
+            ("shutdown", true, false)
+        );
+        assert_eq!(w.to_string(), "server error: x");
+        // legacy untyped line: conservatively not retryable
+        let j = Json::parse("{\"error\":\"y\"}").unwrap();
+        let w = parse_error(&j).unwrap();
+        assert!(!w.retryable && !w.started && w.code.is_empty());
+        // mid-stream failure: started wins over nothing
+        let j = Json::parse(
+            "{\"error\":\"z\",\"code\":\"interrupted\",\
+             \"retryable\":false,\"started\":true}",
+        )
+        .unwrap();
+        assert!(parse_error(&j).unwrap().started);
+        // non-error lines are not errors
+        assert!(parse_error(&Json::parse("{\"id\":1}").unwrap())
+            .is_none());
+    }
+
+    #[test]
+    fn retry_policy_retries_only_retryable_errors() {
+        use std::net::TcpListener;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            let mut out = s;
+            let mut line = String::new();
+            // 1st attempt: retryable backpressure
+            r.read_line(&mut line).unwrap();
+            out.write_all(
+                b"{\"error\":\"queue full\",\"code\":\"queue_full\",\
+                  \"retryable\":true,\"started\":false}\n",
+            )
+            .unwrap();
+            // 2nd attempt (the retry): success, v0 reply
+            line.clear();
+            r.read_line(&mut line).unwrap();
+            out.write_all(
+                b"{\"decode_ms\":1,\"id\":1,\"prefill_ms\":1,\
+                  \"queue_ms\":0,\"tokens\":[5]}\n",
+            )
+            .unwrap();
+            // 3rd request: non-retryable — must surface immediately
+            line.clear();
+            r.read_line(&mut line).unwrap();
+            out.write_all(
+                b"{\"error\":\"bad\",\"code\":\"bad_request\",\
+                  \"retryable\":false,\"started\":false}\n",
+            )
+            .unwrap();
+        });
+        let mut c = Client::connect(addr).unwrap();
+        let policy = RetryPolicy {
+            max_retries: 2,
+            backoff: Duration::from_millis(1),
+        };
+        let req = GenRequest::greedy(&[1]).max_new(1);
+        let r = c.generate_retry(&req, policy, |_, _| {}).unwrap();
+        assert_eq!(r.tokens, vec![5], "retry must recover the reply");
+        let err =
+            c.generate_retry(&req, policy, |_, _| {}).unwrap_err();
+        let w = err.downcast_ref::<WireError>().unwrap();
+        assert_eq!(w.code, "bad_request");
+        assert!(!w.retryable, "bad_request must not be retried");
+        server.join().unwrap();
     }
 
     #[test]

@@ -1,0 +1,346 @@
+//! Deterministic seeded fault injection for the serving engines.
+//!
+//! Compiled only under `cfg(any(test, feature = "chaos"))` — release
+//! builds get the zero-cost stub declared next to this module in
+//! `serve/mod.rs`, so the engine-loop checkpoints vanish entirely.
+//!
+//! The engine loops call [`hit`] at **named checkpoints** (the
+//! `CP_*` constants). A test *arms* an engine by registered name with
+//! a [`FaultPlan`]; every checkpoint hit then consults the plan, which
+//! decides — deterministically, from `(seed, checkpoint, hit index)` —
+//! whether to do nothing, panic (the supervisor's panic boundary must
+//! contain it), stall (sleep, exercising deadlines and drain budgets),
+//! or drop the just-popped request (the engine must still deliver a
+//! terminal error: the exactly-one-terminal-event invariant is exactly
+//! what this harness exists to attack).
+//!
+//! Plans are keyed by engine name so concurrently-running tests with
+//! distinct model names never contaminate each other. [`arm_guard`]
+//! returns an RAII guard that disarms on drop, panicking test included.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, PoisonError};
+use std::time::Duration;
+
+/// Checkpoint: dense engine, request just popped from the queue
+/// (`Drop` is honoured here).
+pub const CP_ADMIT: &str = "engine.admit";
+/// Checkpoint: dense engine, once per iteration before the commit/
+/// stream/retire section.
+pub const CP_COMMIT: &str = "engine.commit";
+/// Checkpoint: dense engine, immediately before the fused batch pass.
+pub const CP_STEP: &str = "engine.step";
+/// Checkpoint: spec engine, request just popped (`Drop` honoured).
+pub const CP_SPEC_ADMIT: &str = "spec.admit";
+/// Checkpoint: spec engine, before the draft phase.
+pub const CP_SPEC_DRAFT: &str = "spec.draft";
+/// Checkpoint: spec engine, before the fused verify pass.
+pub const CP_SPEC_VERIFY: &str = "spec.verify";
+
+/// Every named checkpoint (the chaos suite sweeps all of them).
+pub const CHECKPOINTS: [&str; 6] = [
+    CP_ADMIT,
+    CP_COMMIT,
+    CP_STEP,
+    CP_SPEC_ADMIT,
+    CP_SPEC_DRAFT,
+    CP_SPEC_VERIFY,
+];
+
+/// What a checkpoint hit does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    /// Panic the engine thread (supervisor must contain + respawn).
+    Panic,
+    /// Sleep this long before continuing (deadline/drain pressure).
+    Stall(Duration),
+    /// Drop the just-popped request (admission checkpoints only; the
+    /// engine must answer it with a terminal error, not lose it).
+    Drop,
+}
+
+enum Trigger {
+    /// Fire on exactly the `n`-th hit of the checkpoint (1-based).
+    Nth(u64),
+    /// Fire on every hit.
+    Every,
+    /// Fire pseudo-randomly with probability `p`, decided from
+    /// `(seed, checkpoint, hit index)` — same seed, same schedule.
+    Prob(f64),
+}
+
+struct Rule {
+    point: String,
+    trigger: Trigger,
+    action: Action,
+}
+
+/// A deterministic fault schedule. Built once, shared (`Arc`) with the
+/// arming registry; interior hit counters make the schedule a pure
+/// function of the seed and the sequence of checkpoint hits.
+#[derive(Default)]
+pub struct FaultPlan {
+    seed: u64,
+    rules: Vec<Rule>,
+    hits: Mutex<HashMap<String, u64>>,
+    injected: AtomicU64,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Seeded probabilistic schedule over every checkpoint: each hit
+    /// panics with `p_panic`, stalls `stall_ms` with `p_stall`, drops
+    /// with `p_drop` (admission checkpoints only honour drops).
+    pub fn seeded(
+        seed: u64,
+        p_panic: f64,
+        p_stall: f64,
+        p_drop: f64,
+        stall_ms: u64,
+    ) -> FaultPlan {
+        let mut plan = FaultPlan { seed, ..FaultPlan::default() };
+        for point in CHECKPOINTS {
+            plan.rules.push(Rule {
+                point: point.to_string(),
+                trigger: Trigger::Prob(p_panic),
+                action: Action::Panic,
+            });
+            plan.rules.push(Rule {
+                point: point.to_string(),
+                trigger: Trigger::Prob(p_stall),
+                action: Action::Stall(Duration::from_millis(stall_ms)),
+            });
+            plan.rules.push(Rule {
+                point: point.to_string(),
+                trigger: Trigger::Prob(p_drop),
+                action: Action::Drop,
+            });
+        }
+        plan
+    }
+
+    /// Panic on the `nth` hit (1-based) of `point`.
+    pub fn panic_at(mut self, point: &str, nth: u64) -> Self {
+        self.rules.push(Rule {
+            point: point.to_string(),
+            trigger: Trigger::Nth(nth),
+            action: Action::Panic,
+        });
+        self
+    }
+
+    /// Panic on every hit of `point` (restart-cap exhaustion tests).
+    pub fn panic_every(mut self, point: &str) -> Self {
+        self.rules.push(Rule {
+            point: point.to_string(),
+            trigger: Trigger::Every,
+            action: Action::Panic,
+        });
+        self
+    }
+
+    /// Stall `ms` milliseconds on every hit of `point` (slow-engine
+    /// pressure for deadline and drain-budget tests).
+    pub fn stall_every(mut self, point: &str, ms: u64) -> Self {
+        self.rules.push(Rule {
+            point: point.to_string(),
+            trigger: Trigger::Every,
+            action: Action::Stall(Duration::from_millis(ms)),
+        });
+        self
+    }
+
+    /// Drop the request at the `nth` hit (1-based) of an admission
+    /// checkpoint.
+    pub fn drop_at(mut self, point: &str, nth: u64) -> Self {
+        self.rules.push(Rule {
+            point: point.to_string(),
+            trigger: Trigger::Nth(nth),
+            action: Action::Drop,
+        });
+        self
+    }
+
+    /// Faults actually injected so far (all actions).
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Decide this hit's action. Increments the checkpoint's hit
+    /// counter; first matching rule wins. Never called with any lock
+    /// that must survive a panic (the caller panics *after* this
+    /// returns).
+    fn decide(&self, point: &str) -> Option<Action> {
+        let hit = {
+            let mut hits = self
+                .hits
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner);
+            let c = hits.entry(point.to_string()).or_insert(0);
+            *c += 1;
+            *c
+        };
+        for rule in &self.rules {
+            if rule.point != point {
+                continue;
+            }
+            let fire = match rule.trigger {
+                Trigger::Nth(n) => hit == n,
+                Trigger::Every => true,
+                Trigger::Prob(p) => {
+                    unit(self.seed, point, hit, rule.action) < p
+                }
+            };
+            if fire {
+                self.injected.fetch_add(1, Ordering::Relaxed);
+                return Some(rule.action);
+            }
+        }
+        None
+    }
+}
+
+/// Deterministic draw in [0, 1) from (seed, checkpoint, hit, action) —
+/// splitmix-style mixing, no global RNG state anywhere.
+fn unit(seed: u64, point: &str, hit: u64, action: Action) -> f64 {
+    let mut h = 0xcbf29ce484222325u64; // FNV-1a over the checkpoint
+    for b in point.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    let salt = match action {
+        Action::Panic => 1u64,
+        Action::Stall(_) => 2,
+        Action::Drop => 3,
+    };
+    let mut x = seed
+        .wrapping_add(h)
+        .wrapping_add(hit.wrapping_mul(0x9E3779B97F4A7C15))
+        .wrapping_add(salt.wrapping_mul(0xD1B54A32D192ED03));
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58476D1CE4E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D049BB133111EB);
+    x ^= x >> 31;
+    (x >> 11) as f64 / (1u64 << 53) as f64
+}
+
+fn registry() -> &'static Mutex<HashMap<String, Arc<FaultPlan>>> {
+    static ARMED: OnceLock<Mutex<HashMap<String, Arc<FaultPlan>>>> =
+        OnceLock::new();
+    ARMED.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Arm `engine` (a registered model/pair name) with `plan`. Checkpoint
+/// hits from any engine with another name are unaffected, so tests
+/// using unique names run fault-isolated in parallel.
+pub fn arm(engine: &str, plan: Arc<FaultPlan>) {
+    registry()
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .insert(engine.to_string(), plan);
+}
+
+pub fn disarm(engine: &str) {
+    registry()
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .remove(engine);
+}
+
+/// RAII arming: disarms the engine when dropped (test panics
+/// included, so a failing chaos test cannot leak faults into the next
+/// one reusing the name).
+pub struct Armed(String);
+
+impl Drop for Armed {
+    fn drop(&mut self) {
+        disarm(&self.0);
+    }
+}
+
+pub fn arm_guard(engine: &str, plan: Arc<FaultPlan>) -> Armed {
+    arm(engine, plan);
+    Armed(engine.to_string())
+}
+
+/// The checkpoint the engine loops call. Executes `Panic` (after all
+/// harness locks are released) and `Stall` inline; returns `true` for
+/// `Drop` so the admission path can discard-and-error the request.
+/// Unarmed engines take one map lookup and return `false`.
+pub fn hit(engine: &str, point: &str) -> bool {
+    let plan = {
+        let armed =
+            registry().lock().unwrap_or_else(PoisonError::into_inner);
+        match armed.get(engine) {
+            Some(p) => p.clone(),
+            None => return false,
+        }
+    };
+    match plan.decide(point) {
+        None => false,
+        Some(Action::Panic) => {
+            panic!("fault injection: panic at {point} in '{engine}'")
+        }
+        Some(Action::Stall(d)) => {
+            std::thread::sleep(d);
+            false
+        }
+        Some(Action::Drop) => true,
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_schedule_is_deterministic() {
+        let a = FaultPlan::seeded(42, 0.2, 0.1, 0.1, 1);
+        let b = FaultPlan::seeded(42, 0.2, 0.1, 0.1, 1);
+        for point in CHECKPOINTS {
+            for _ in 0..200 {
+                assert_eq!(a.decide(point), b.decide(point));
+            }
+        }
+        assert_eq!(a.injected(), b.injected());
+        assert!(a.injected() > 0, "p=0.2 over 1200 hits must fire");
+        // a different seed produces a different schedule
+        let c = FaultPlan::seeded(43, 0.2, 0.1, 0.1, 1);
+        let differs = (0..200).any(|_| {
+            c.decide(CP_STEP)
+                != FaultPlan::seeded(42, 0.2, 0.1, 0.1, 1)
+                    .decide(CP_STEP)
+        });
+        let _ = differs; // seeds may rarely agree on a prefix; the
+                         // real assertion is determinism above
+    }
+
+    #[test]
+    fn nth_hit_fires_exactly_once() {
+        let plan = FaultPlan::new().drop_at(CP_ADMIT, 3);
+        let fired: Vec<bool> = (0..6)
+            .map(|_| plan.decide(CP_ADMIT) == Some(Action::Drop))
+            .collect();
+        assert_eq!(fired, vec![false, false, true, false, false, false]);
+        assert_eq!(plan.injected(), 1);
+    }
+
+    #[test]
+    fn arming_is_per_engine_and_guard_disarms() {
+        let plan =
+            Arc::new(FaultPlan::new().panic_every("never.checked"));
+        {
+            let _g = arm_guard("fault-test-a", plan);
+            assert!(!hit("fault-test-b", CP_STEP), "other engines clean");
+            assert!(!hit("fault-test-a", CP_ADMIT), "no rule for point");
+        }
+        // guard dropped → disarmed
+        assert!(!hit("fault-test-a", "never.checked"));
+    }
+}

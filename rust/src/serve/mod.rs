@@ -35,10 +35,43 @@
 //!
 //! Everything is std-only (no tokio in this image): one OS thread per
 //! connection for IO, one engine thread per registered model.
+//!
+//! [`supervisor`] wraps every engine thread in a panic boundary with
+//! a Healthy → Degraded → Down state machine and respawn-with-backoff;
+//! [`fault`] is the deterministic chaos harness that attacks it.
+//! Failure semantics (deadlines, drain, typed wire errors) are
+//! documented on [`ServeError`] and in ARCHITECTURE.md §Serving.
+
+// serving is the crash-containment layer: a stray unwrap here turns a
+// recoverable request error into an engine panic, so non-test code
+// must use typed errors (tests opt back in locally)
+#![deny(clippy::unwrap_used)]
 
 pub mod client;
 pub mod protocol;
 pub mod spec;
+pub mod supervisor;
+
+#[cfg(any(test, feature = "chaos"))]
+pub mod fault;
+
+/// Zero-cost stand-in for [`fault`] in release builds: same call
+/// surface, compiles to nothing, so the engine loops keep their
+/// checkpoints unconditionally.
+#[cfg(not(any(test, feature = "chaos")))]
+pub mod fault {
+    pub const CP_ADMIT: &str = "engine.admit";
+    pub const CP_COMMIT: &str = "engine.commit";
+    pub const CP_STEP: &str = "engine.step";
+    pub const CP_SPEC_ADMIT: &str = "spec.admit";
+    pub const CP_SPEC_DRAFT: &str = "spec.draft";
+    pub const CP_SPEC_VERIFY: &str = "spec.verify";
+
+    #[inline(always)]
+    pub fn hit(_engine: &str, _point: &str) -> bool {
+        false
+    }
+}
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -55,6 +88,7 @@ use crate::model::{
 
 pub use crate::model::engine::sampler::{Sampler, SamplingParams};
 pub use spec::{spec_engine_loop, SpecRequest, SpecUsage, MAX_SPEC_K};
+pub use supervisor::{Ctl, HealthState};
 
 /// Name the single-model [`Server::start`] path registers its model
 /// under (kept for v0 compatibility: those servers have one anonymous
@@ -84,6 +118,26 @@ pub struct ServeConfig {
     /// admission when pages run out and resume as sequences retire.
     /// Must hold at least one `max_ctx` sequence.
     pub kv_pages: Option<usize>,
+    /// Wall-clock deadline applied to requests that don't carry their
+    /// own `deadline_ms` (measured from admission; `None` = no
+    /// default). A lapsed sequence finishes with
+    /// [`FinishReason::Deadline`], keeping whatever tokens it already
+    /// committed, and frees its KV pages immediately.
+    pub default_deadline_ms: Option<u64>,
+    /// [`Server::shutdown`] drain budget: in-flight sequences get this
+    /// long to finish before being force-retired with `shutdown`
+    /// errors.
+    pub drain_ms: u64,
+    /// TCP read/write timeout per connection — a client that connects
+    /// and never writes can no longer pin a connection thread forever
+    /// (0 = no timeout, pre-supervision behavior).
+    pub conn_timeout_ms: u64,
+    /// How many times the supervisor respawns a panicking engine
+    /// before declaring it Down.
+    pub max_restarts: u32,
+    /// Base respawn backoff; doubles per consecutive restart (capped
+    /// at 2 s) plus deterministic per-engine jitter.
+    pub restart_backoff_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -96,6 +150,11 @@ impl Default for ServeConfig {
             allow_stream: true,
             default_model: None,
             kv_pages: None,
+            default_deadline_ms: None,
+            drain_ms: 5_000,
+            conn_timeout_ms: 30_000,
+            max_restarts: 3,
+            restart_backoff_ms: 50,
         }
     }
 }
@@ -122,6 +181,10 @@ pub enum FinishReason {
     /// stopping token is included in the output, matching v0's EOS
     /// behavior).
     Stop,
+    /// The request's wall-clock deadline lapsed. Tokens committed
+    /// before the deadline are kept (possibly zero when it lapsed at
+    /// the queue head); the sequence's KV pages are freed at once.
+    Deadline,
 }
 
 impl FinishReason {
@@ -129,6 +192,7 @@ impl FinishReason {
         match self {
             FinishReason::Length => "length",
             FinishReason::Stop => "stop",
+            FinishReason::Deadline => "deadline",
         }
     }
 }
@@ -150,6 +214,10 @@ pub struct Request {
     /// at admission from the request's `"spec"` field; `None` = the
     /// pair's registered depth; ignored by plain model engines).
     pub spec_k: Option<usize>,
+    /// Wall-clock deadline (resolved at admission from the request's
+    /// `deadline_ms` or the server default). Checked at the queue head
+    /// and once per decode iteration.
+    pub deadline: Option<Instant>,
     pub enqueued: Instant,
     pub reply: mpsc::Sender<Event>,
 }
@@ -184,21 +252,123 @@ pub struct KvUsage {
     pub prefix_hit_tokens: u64,
 }
 
+/// Stable, typed error codes carried on [`Event::Error`] and the wire
+/// (`"code"` field of error lines). The code set is append-only:
+/// clients key retry decisions off `retryable`, not the code list.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrCode {
+    /// The request itself is malformed or invalid for the routed
+    /// model (bad JSON, out-of-vocab token, context overflow, ...).
+    BadRequest,
+    /// Admission queue full — classic backpressure, retry later.
+    QueueFull,
+    /// The server is draining; this request was refused at admission
+    /// or force-retired past the drain budget.
+    Shutdown,
+    /// The engine panicked before this request produced any output;
+    /// the supervisor is respawning it. Safe to retry.
+    EngineRestarting,
+    /// The engine exhausted its restart cap (or exited) — this model
+    /// is out of service.
+    EngineDown,
+    /// The engine failed after the request had already streamed
+    /// tokens; a blind retry could double-deliver output.
+    Interrupted,
+    /// Engine-side failure before generation started (KV admission,
+    /// injected drops, ...).
+    Internal,
+}
+
+impl ErrCode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrCode::BadRequest => "bad_request",
+            ErrCode::QueueFull => "queue_full",
+            ErrCode::Shutdown => "shutdown",
+            ErrCode::EngineRestarting => "engine_restarting",
+            ErrCode::EngineDown => "engine_down",
+            ErrCode::Interrupted => "interrupted",
+            ErrCode::Internal => "internal",
+        }
+    }
+
+    /// Whether a *pre-start* failure with this code is worth
+    /// retrying. (`ServeError::started` downgrades to non-retryable
+    /// regardless of code.)
+    fn default_retryable(&self) -> bool {
+        matches!(
+            self,
+            ErrCode::QueueFull
+                | ErrCode::Shutdown
+                | ErrCode::EngineRestarting
+                | ErrCode::Internal
+        )
+    }
+}
+
+/// A typed serving error: stable code, human message, and the two
+/// bits the client retry policy needs — did generation already start,
+/// and is a retry safe. `Display` is the bare message (error text is
+/// part of the de-facto API; codes ride alongside, not inside).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServeError {
+    pub code: ErrCode,
+    pub msg: String,
+    /// Safe to retry: the request provably produced no output and the
+    /// condition is transient.
+    pub retryable: bool,
+    /// The request had streamed at least one token when it failed.
+    pub started: bool,
+}
+
+impl ServeError {
+    pub fn new(code: ErrCode, msg: impl Into<String>) -> ServeError {
+        ServeError {
+            code,
+            msg: msg.into(),
+            retryable: code.default_retryable(),
+            started: false,
+        }
+    }
+
+    /// Mark whether generation had started; a started failure is
+    /// never retryable (output may have been delivered).
+    pub fn started(mut self, started: bool) -> ServeError {
+        self.started = started;
+        if started {
+            self.retryable = false;
+        }
+        self
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for ServeError {}
+
 /// What a request's reply channel carries: zero or more token events
 /// (streaming requests only, in decode order, as the engine commits
-/// them) followed by exactly one terminal event — [`Event::Done`], or
-/// [`Event::Error`] when the engine could not serve an admitted
-/// request (e.g. KV admission failed).
+/// them) followed by **exactly one** terminal event — [`Event::Done`],
+/// or [`Event::Error`] when the request could not be served (KV
+/// admission failure, engine panic, drain, ...). The
+/// exactly-one-terminal-event invariant is enforced by
+/// [`supervisor::Inflight`] and attacked by the chaos suite.
 #[derive(Debug, Clone)]
 pub enum Event {
     Token { id: u64, index: usize, token: u16 },
     Done(Reply),
-    Error { id: u64, error: String },
+    Error { id: u64, error: ServeError },
 }
 
 /// Drain a reply channel until the terminal event, discarding token
 /// events — the non-streaming caller's one-liner. Engine-side
-/// [`Event::Error`]s surface as errors here.
+/// [`Event::Error`]s surface as errors here; the typed [`ServeError`]
+/// is preserved (downcast to inspect `code`/`retryable`), and its
+/// `Display` stays the bare message.
 pub fn wait_reply(
     rx: &mpsc::Receiver<Event>,
     timeout: Duration,
@@ -210,7 +380,7 @@ pub fn wait_reply(
             Ok(Event::Done(r)) => return Ok(r),
             Ok(Event::Token { .. }) => continue,
             Ok(Event::Error { error, .. }) => {
-                anyhow::bail!("{error}")
+                return Err(anyhow::Error::new(error))
             }
             Err(e) => anyhow::bail!("reply channel: {e}"),
         }
@@ -259,6 +429,29 @@ pub struct ServeStats {
     /// sequences force-finished (`finish_reason: length`) to break a
     /// KV page deadlock
     pub kv_preempted: AtomicU64,
+    /// requests admitted but not yet popped by the engine (gauge;
+    /// returns to zero whenever the queue is drained — the chaos suite
+    /// asserts this after every fault schedule)
+    pub queue_depth: AtomicU64,
+    /// engine panics contained by the supervisor's panic boundary
+    pub engine_panics: AtomicU64,
+    /// supervisor respawns (panics minus the ones that hit the
+    /// restart cap or raced shutdown)
+    pub engine_restarts: AtomicU64,
+    /// requests finished with `finish_reason: deadline` (queue-head
+    /// expiry and mid-decode expiry combined)
+    pub deadline_hits: AtomicU64,
+}
+
+/// Decrement the queue-depth gauge without underflow (engine loops
+/// driven directly in tests/benches pop requests that never went
+/// through `Router::admit`'s increment).
+pub(crate) fn dec_queue_depth(stats: &ServeStats) {
+    let _ = stats.queue_depth.fetch_update(
+        Ordering::Relaxed,
+        Ordering::Relaxed,
+        |v| v.checked_sub(1),
+    );
 }
 
 impl ServeStats {
@@ -298,6 +491,9 @@ pub struct SubmitSpec {
     /// routed model (optionally requiring a specific draft) with an
     /// optional per-request depth override.
     pub spec: Option<SpecRequest>,
+    /// Per-request wall-clock deadline in milliseconds, measured from
+    /// admission. None → the server's `default_deadline_ms`.
+    pub deadline_ms: Option<u64>,
 }
 
 impl SubmitSpec {
@@ -339,7 +535,7 @@ struct SpecPairDef {
 
 impl ModelRegistry {
     pub fn new() -> Self {
-        ModelRegistry { models: Vec::new() }
+        ModelRegistry::default()
     }
 
     /// Register `model` under `name`. Names are unique and non-empty.
@@ -453,6 +649,8 @@ struct EngineEntry {
     tx: mpsc::SyncSender<Request>,
     stats: Arc<ServeStats>,
     kind: EntryKind,
+    /// Supervisor-maintained health; admission rejects Down engines.
+    health: Arc<supervisor::Health>,
 }
 
 /// Admission + routing state shared by the accept loop, every
@@ -466,6 +664,11 @@ struct Router {
     default_max_new: usize,
     max_ctx: usize,
     allow_stream: bool,
+    /// server default applied to requests without their own
+    /// `deadline_ms`
+    default_deadline: Option<Duration>,
+    /// per-connection socket read/write timeout (None = unlimited)
+    conn_timeout: Option<Duration>,
     /// server-wide stop flag: admission refuses once shutdown begins,
     /// so engines (which exit when idle) cannot be kept alive forever
     /// by connection threads that outlive the accept loop
@@ -549,19 +752,27 @@ impl Router {
     }
 
     /// Admission: route, validate against the routed model, enqueue
-    /// with backpressure. Returns the reply channel.
+    /// with backpressure. Returns the reply channel, or a typed
+    /// [`ServeError`] (validation failures are `bad_request`,
+    /// backpressure is `queue_full` and retryable, a Down engine is
+    /// `engine_down`).
     fn admit(
         &self,
         spec: SubmitSpec,
-    ) -> Result<mpsc::Receiver<Event>, String> {
+    ) -> Result<mpsc::Receiver<Event>, ServeError> {
+        let bad = |m: String| ServeError::new(ErrCode::BadRequest, m);
         if self.stop.load(Ordering::Relaxed) {
-            return Err("server shutting down".into());
+            return Err(ServeError::new(
+                ErrCode::Shutdown,
+                "server shutting down",
+            ));
         }
-        let routed = self.resolve(spec.model.as_deref())?;
+        let routed = self.resolve(spec.model.as_deref()).map_err(bad)?;
         let (entry, spec_k) = match &spec.spec {
             None => (routed, None),
             Some(want) => {
-                let pair = self.resolve_spec(routed, want)?;
+                let pair =
+                    self.resolve_spec(routed, want).map_err(bad)?;
                 let k = match (&pair.kind, want.k) {
                     (_, Some(k)) => k,
                     (EntryKind::Spec { k, .. }, None) => *k,
@@ -570,38 +781,49 @@ impl Router {
                 (pair, Some(k))
             }
         };
+        if entry.health.state() == HealthState::Down {
+            return Err(ServeError::new(
+                ErrCode::EngineDown,
+                format!("engine '{}' is down", entry.name),
+            ));
+        }
         if spec.stream && !self.allow_stream {
-            return Err("streaming disabled on this server".into());
+            return Err(bad("streaming disabled on this server".into()));
         }
         if spec.prompt.is_empty() {
-            return Err("empty prompt".into());
+            return Err(bad("empty prompt".into()));
         }
         // a request must FIT: silently clamping the prompt to
         // max_ctx - max_new used to shred it to zero tokens whenever
         // max_new >= max_ctx and serve garbage from an empty prefix
         let max_new = spec.max_new.unwrap_or(self.default_max_new);
         if spec.prompt.len() + max_new > self.max_ctx {
-            return Err(format!(
+            return Err(bad(format!(
                 "prompt + max_new exceeds context ({} + {max_new} > {})",
                 spec.prompt.len(),
                 self.max_ctx
-            ));
+            )));
         }
         // the protocol only bounds tokens structurally (< 65536); the
         // served model's real vocab is enforced here so out-of-vocab
         // ids never reach the embedding gather
         for &t in &spec.prompt {
             if t as usize >= entry.vocab {
-                return Err(format!(
+                return Err(bad(format!(
                     "prompt token {t} out of vocab for model '{}' \
                      (vocab {})",
                     entry.name, entry.vocab
-                ));
+                )));
             }
         }
         if let Some(sp) = &spec.sampling {
-            sp.validate()?;
+            sp.validate().map_err(bad)?;
         }
+        let deadline = spec
+            .deadline_ms
+            .map(Duration::from_millis)
+            .or(self.default_deadline)
+            .map(|d| Instant::now() + d);
         let (rtx, rrx) = mpsc::channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
@@ -611,22 +833,29 @@ impl Router {
             stop_tokens: spec.stop_tokens,
             stream: spec.stream,
             spec_k,
+            deadline,
             enqueued: Instant::now(),
             reply: rtx,
         };
+        // gauge up BEFORE the send so the engine's decrement (it may
+        // pop the request immediately) can never observe the queue at
+        // zero and leave the gauge stuck one high
+        entry.stats.queue_depth.fetch_add(1, Ordering::Relaxed);
         match entry.tx.try_send(req) {
             Ok(()) => {
                 entry.stats.accepted.fetch_add(1, Ordering::Relaxed);
                 Ok(rrx)
             }
             Err(mpsc::TrySendError::Full(_)) => {
+                dec_queue_depth(&entry.stats);
                 entry.stats.rejected.fetch_add(1, Ordering::Relaxed);
-                Err("queue full".into())
+                Err(ServeError::new(ErrCode::QueueFull, "queue full"))
             }
             // a dead engine is not backpressure — don't count it as a
             // rejection and don't disguise it as one
             Err(mpsc::TrySendError::Disconnected(_)) => {
-                Err("engine gone".into())
+                dec_queue_depth(&entry.stats);
+                Err(ServeError::new(ErrCode::EngineDown, "engine gone"))
             }
         }
     }
@@ -675,8 +904,9 @@ impl ActiveSeq {
 }
 
 /// Build the terminal [`Reply`] for `active[i]` and drop it from
-/// `batch` + `active` in lockstep, sending [`Event::Done`]. Shared by
-/// normal completion and KV-deadlock preemption.
+/// `batch` + `active` in lockstep, delivering [`Event::Done`] through
+/// the in-flight ledger (exactly one terminal event). Shared by
+/// normal completion, KV-deadlock preemption, and deadline expiry.
 #[allow(clippy::too_many_arguments)]
 fn finish_seq(
     active: &mut Vec<ActiveSeq>,
@@ -685,6 +915,7 @@ fn finish_seq(
     finish_reason: FinishReason,
     name: &Arc<String>,
     stats: &ServeStats,
+    inflight: &supervisor::Inflight,
 ) {
     let kv = KvUsage {
         pages: batch.seq_pages(i) as u64,
@@ -707,7 +938,33 @@ fn finish_seq(
         prefill_ms: seq.prefill_ms,
         decode_ms: seq.decode_t0.elapsed().as_secs_f64() * 1e3,
     };
-    let _ = seq.req.reply.send(Event::Done(reply));
+    inflight.done(reply.id, reply);
+}
+
+/// A request whose deadline lapsed before it consumed any engine
+/// work: terminal [`Event::Done`] with zero tokens and
+/// `finish_reason: deadline` — not an error (the request was valid,
+/// it simply ran out of time), so clients don't blind-retry it.
+pub(crate) fn expire_queued(
+    req: Request,
+    name: &Arc<String>,
+    stats: &ServeStats,
+    inflight: &supervisor::Inflight,
+) {
+    stats.deadline_hits.fetch_add(1, Ordering::Relaxed);
+    stats.completed.fetch_add(1, Ordering::Relaxed);
+    let reply = Reply {
+        id: req.id,
+        tokens: Vec::new(),
+        finish_reason: FinishReason::Deadline,
+        model: (**name).clone(),
+        spec: None,
+        kv: None,
+        queue_ms: req.enqueued.elapsed().as_secs_f64() * 1e3,
+        prefill_ms: 0.0,
+        decode_ms: 0.0,
+    };
+    inflight.done(req.id, reply);
 }
 
 /// The engine loop: admit → chunked prefill → one batched decode step
@@ -723,13 +980,20 @@ fn finish_seq(
 /// cannot get a page stall their sequence for the iteration; if no
 /// sequence at all can make progress, the fattest stalled sequence is
 /// force-finished (`finish_reason: length`) to break the deadlock.
+///
+/// The loop runs under a [`supervisor`] panic boundary: it borrows
+/// the queue receiver (the supervisor keeps it across panics), routes
+/// every terminal event through `ctl.inflight`, honours per-request
+/// deadlines at the queue head and once per iteration, and
+/// force-retires everything when `ctl.force` is raised (drain budget
+/// exceeded). [`fault`] checkpoints are free in release builds.
 pub fn engine_loop(
     model: Arc<ModelWeights>,
     name: Arc<String>,
     cfg: ServeConfig,
-    rx: mpsc::Receiver<Request>,
+    rx: &mpsc::Receiver<Request>,
     stats: Arc<ServeStats>,
-    stop: Arc<AtomicBool>,
+    ctl: Ctl,
 ) {
     let mut batch = DecodeBatch::with_kv(
         &model,
@@ -747,6 +1011,36 @@ pub fn engine_loop(
     let mut parked: Option<Request> = None;
     let mut inputs: Vec<(usize, u16)> = Vec::with_capacity(cfg.max_batch);
     loop {
+        // ---- force drain: the shutdown drain budget lapsed — retire
+        //      everything still here with terminal errors, now
+        if ctl.force.load(Ordering::Relaxed) {
+            for seq in active.drain(..) {
+                ctl.inflight.fail(
+                    seq.req.id,
+                    ErrCode::Shutdown,
+                    "server shutting down: drain budget exceeded",
+                );
+            }
+            if let Some(req) = parked.take() {
+                ctl.inflight.fail(
+                    req.id,
+                    ErrCode::Shutdown,
+                    "server shutting down: drain budget exceeded",
+                );
+            }
+            batch.retire_all();
+            while let Ok(req) = rx.try_recv() {
+                dec_queue_depth(&stats);
+                ctl.inflight.register(&req);
+                ctl.inflight.fail(
+                    req.id,
+                    ErrCode::Shutdown,
+                    "server shutting down",
+                );
+            }
+            stats.kv_pages_in_use.store(0, Ordering::Relaxed);
+            return;
+        }
         // ---- admission: fill the batch from the queue
         while active.len() < cfg.max_batch {
             let (req, was_parked) = if let Some(r) = parked.take() {
@@ -756,7 +1050,10 @@ pub fn engine_loop(
                 match rx.recv_timeout(Duration::from_millis(20)) {
                     Ok(r) => (r, false),
                     Err(mpsc::RecvTimeoutError::Timeout) => break,
-                    Err(mpsc::RecvTimeoutError::Disconnected) => return,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        stats.kv_pages_in_use.store(0, Ordering::Relaxed);
+                        return;
+                    }
                 }
             } else {
                 match rx.try_recv() {
@@ -764,6 +1061,32 @@ pub fn engine_loop(
                     Err(_) => break,
                 }
             };
+            if !was_parked {
+                // freshly popped: it is now in flight (ledger owns its
+                // terminal event) and no longer queued
+                dec_queue_depth(&stats);
+                ctl.inflight.register(&req);
+            }
+            // queue-head deadline: don't spend prefill on a request
+            // that already ran out of time
+            if req
+                .deadline
+                .map_or(false, |d| Instant::now() >= d)
+            {
+                expire_queued(req, &name, &stats, &ctl.inflight);
+                continue;
+            }
+            if fault::hit(&name, fault::CP_ADMIT) {
+                // injected queue drop: the request must still get its
+                // terminal event — losing it silently is the bug class
+                // this harness exists to catch
+                ctl.inflight.fail(
+                    req.id,
+                    ErrCode::Internal,
+                    "fault injection: request dropped at admission",
+                );
+                continue;
+            }
             // admission rejects anything that cannot fit — never clamp
             // the prompt here (a clamp silently truncates it to zero
             // tokens when max_new >= max_ctx and serves garbage)
@@ -799,10 +1122,11 @@ pub fn engine_loop(
             ) {
                 Ok(si) => si,
                 Err(e) => {
-                    let _ = req.reply.send(Event::Error {
-                        id: req.id,
-                        error: format!("admission failed: {e}"),
-                    });
+                    ctl.inflight.fail(
+                        req.id,
+                        ErrCode::Internal,
+                        &format!("admission failed: {e}"),
+                    );
                     continue;
                 }
             };
@@ -813,10 +1137,11 @@ pub fn engine_loop(
             // surface it as an error rather than a wedged request
             if !batch.try_reserve(si, limit + 1 - hit) {
                 batch.retire(si);
-                let _ = req.reply.send(Event::Error {
-                    id: req.id,
-                    error: "kv exhausted at admission".into(),
-                });
+                ctl.inflight.fail(
+                    req.id,
+                    ErrCode::Internal,
+                    "kv exhausted at admission",
+                );
                 continue;
             }
             let sampler = req.sampling.map(Sampler::new);
@@ -841,11 +1166,13 @@ pub fn engine_loop(
             .kv_prefix_hit_tokens
             .store(batch.prefix_hit_tokens(), Ordering::Relaxed);
         if active.is_empty() {
-            if stop.load(Ordering::Relaxed) {
+            if ctl.stop.load(Ordering::Relaxed) {
+                stats.kv_pages_in_use.store(0, Ordering::Relaxed);
                 return;
             }
             continue;
         }
+        let _ = fault::hit(&name, fault::CP_COMMIT);
         // ---- commit each decode-phase sequence's pending token;
         //      stream it out; retire the finished ones
         let mut i = 0;
@@ -859,6 +1186,10 @@ pub fn engine_loop(
             active[i].generated.push(tok);
             let seq = &active[i];
             if seq.req.stream {
+                // from the first streamed token on, a failure is
+                // mid-stream: the ledger flips this request to
+                // non-retryable before the token can reach the client
+                ctl.inflight.mark_started(seq.req.id);
                 let _ = seq.req.reply.send(Event::Token {
                     id: seq.req.id,
                     index: seq.generated.len() - 1,
@@ -880,7 +1211,43 @@ pub fn engine_loop(
             } else {
                 FinishReason::Length
             };
-            finish_seq(&mut active, &mut batch, i, reason, &name, &stats);
+            finish_seq(
+                &mut active,
+                &mut batch,
+                i,
+                reason,
+                &name,
+                &stats,
+                &ctl.inflight,
+            );
+        }
+        // ---- deadline sweep: lapsed sequences finish now with
+        //      whatever they committed, freeing their KV pages instead
+        //      of occupying the batch to the bitter end
+        let now = Instant::now();
+        let mut i = 0;
+        while i < active.len() {
+            let lapsed = active[i]
+                .req
+                .deadline
+                .map_or(false, |d| now >= d);
+            if lapsed {
+                stats.deadline_hits.fetch_add(1, Ordering::Relaxed);
+                finish_seq(
+                    &mut active,
+                    &mut batch,
+                    i,
+                    FinishReason::Deadline,
+                    &name,
+                    &stats,
+                    &ctl.inflight,
+                );
+            } else {
+                i += 1;
+            }
+        }
+        if active.is_empty() {
+            continue;
         }
         // ---- stage one fused pass: every decode-phase sequence's
         //      pending token, plus up to PREFILL_CHUNK prompt tokens
@@ -925,10 +1292,12 @@ pub fn engine_loop(
                     FinishReason::Length,
                     &name,
                     &stats,
+                    &ctl.inflight,
                 );
             }
             continue;
         }
+        let _ = fault::hit(&name, fault::CP_STEP);
         let prefill_rows: usize =
             jobs.iter().map(|(_, r, _)| r.len()).sum();
         let total_rows = inputs.len() + prefill_rows;
@@ -1005,6 +1374,10 @@ pub struct Server {
     pub stats: Arc<ServeStats>,
     router: Arc<Router>,
     stop: Arc<AtomicBool>,
+    /// raised by [`Server::shutdown`] when the drain budget lapses:
+    /// engines force-retire everything still in flight
+    force: Arc<AtomicBool>,
+    drain: Duration,
     accept_handle: Option<std::thread::JoinHandle<()>>,
     engine_handles: Vec<std::thread::JoinHandle<()>>,
 }
@@ -1067,11 +1440,14 @@ impl Server {
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
+        let force = Arc::new(AtomicBool::new(false));
 
         let mut entries = Vec::new();
         let mut engine_handles = Vec::new();
         // model weights live behind Arcs so spec pairs can share them
-        // with the plain engines without copying
+        // with the plain engines without copying — and so the
+        // supervisor can respawn a panicked engine from the same
+        // resident weights (fresh KV state, no model reload)
         let mut arcs: Vec<(Arc<String>, Arc<ModelWeights>)> = Vec::new();
         for (name, model) in registry.models {
             let name = Arc::new(name);
@@ -1081,18 +1457,16 @@ impl Server {
             let resident_bytes = model.resident_bytes();
             let model = Arc::new(model);
             arcs.push((name.clone(), model.clone()));
-            let handle = {
-                let (name, cfg, stats, stop) = (
-                    name.clone(),
-                    cfg.clone(),
-                    stats.clone(),
-                    stop.clone(),
-                );
-                std::thread::spawn(move || {
-                    engine_loop(model, name, cfg, rx, stats, stop)
-                })
-            };
-            engine_handles.push(handle);
+            let sup = supervisor::spawn(
+                supervisor::EngineDef::Dense { model },
+                name.clone(),
+                cfg.clone(),
+                rx,
+                stats.clone(),
+                stop.clone(),
+                force.clone(),
+            );
+            engine_handles.push(sup.handle);
             entries.push(EngineEntry {
                 name,
                 vocab,
@@ -1100,6 +1474,7 @@ impl Server {
                 tx,
                 stats,
                 kind: EntryKind::Model,
+                health: sup.health,
             });
         }
         for pair in registry.specs {
@@ -1117,23 +1492,20 @@ impl Server {
             // the working set the pair actually streams per round
             let resident_bytes =
                 target.resident_bytes() + draft.resident_bytes();
-            let handle = {
-                let (target, draft, name, k, cfg, stats, stop) = (
+            let sup = supervisor::spawn(
+                supervisor::EngineDef::Spec {
                     target,
                     draft,
-                    name.clone(),
-                    pair.k,
-                    cfg.clone(),
-                    stats.clone(),
-                    stop.clone(),
-                );
-                std::thread::spawn(move || {
-                    spec_engine_loop(
-                        target, draft, name, k, cfg, rx, stats, stop,
-                    )
-                })
-            };
-            engine_handles.push(handle);
+                    k: pair.k,
+                },
+                name.clone(),
+                cfg.clone(),
+                rx,
+                stats.clone(),
+                stop.clone(),
+                force.clone(),
+            );
+            engine_handles.push(sup.handle);
             entries.push(EngineEntry {
                 name,
                 vocab,
@@ -1145,6 +1517,7 @@ impl Server {
                     draft: pair.draft,
                     k: pair.k,
                 },
+                health: sup.health,
             });
         }
         let router = Arc::new(Router {
@@ -1154,6 +1527,11 @@ impl Server {
             default_max_new: cfg.default_max_new,
             max_ctx: cfg.max_ctx,
             allow_stream: cfg.allow_stream,
+            default_deadline: cfg
+                .default_deadline_ms
+                .map(Duration::from_millis),
+            conn_timeout: (cfg.conn_timeout_ms > 0)
+                .then(|| Duration::from_millis(cfg.conn_timeout_ms)),
             stop: stop.clone(),
         });
         let stats = router.entries[default_ix].stats.clone();
@@ -1168,6 +1546,8 @@ impl Server {
             stats,
             router,
             stop,
+            force,
+            drain: Duration::from_millis(cfg.drain_ms),
             accept_handle: Some(accept_handle),
             engine_handles,
         })
@@ -1190,7 +1570,9 @@ impl Server {
         &self,
         spec: SubmitSpec,
     ) -> anyhow::Result<mpsc::Receiver<Event>> {
-        self.router.admit(spec).map_err(anyhow::Error::msg)
+        // typed ServeError preserved for downcast; Display stays the
+        // bare message so existing substring matching keeps working
+        self.router.admit(spec).map_err(anyhow::Error::new)
     }
 
     /// Registered models with their live stats, in registration order.
@@ -1215,6 +1597,21 @@ impl Server {
             .map(|e| e.stats.clone())
     }
 
+    /// Supervisor-maintained health of one registered engine.
+    pub fn engine_health(&self, name: &str) -> Option<HealthState> {
+        self.router
+            .entries
+            .iter()
+            .find(|e| e.name.as_str() == name)
+            .map(|e| e.health.state())
+    }
+
+    /// Graceful drain: stop admission, give in-flight sequences up to
+    /// the configured drain budget (`ServeConfig::drain_ms`) to finish
+    /// normally, then raise the force flag so engines retire whatever
+    /// remains with terminal `shutdown` errors — shutdown always
+    /// terminates, and every request still gets exactly one terminal
+    /// event.
     pub fn shutdown(mut self) {
         // the router checks this flag at admission, so no new work can
         // arrive (even from connection threads that outlive the accept
@@ -1224,6 +1621,14 @@ impl Server {
         if let Some(h) = self.accept_handle.take() {
             let _ = h.join();
         }
+        let deadline = Instant::now() + self.drain;
+        while self.engine_handles.iter().any(|h| !h.is_finished())
+            && Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // drain budget lapsed (no-op if everything already exited)
+        self.force.store(true, Ordering::Relaxed);
         for h in self.engine_handles.drain(..) {
             let _ = h.join();
         }
@@ -1261,19 +1666,36 @@ fn handle_conn(
     router: Arc<Router>,
 ) -> anyhow::Result<()> {
     stream.set_nodelay(true).ok();
+    // a client that connects and never writes (or stops reading) must
+    // not pin this thread forever — both directions time out
+    if let Some(t) = router.conn_timeout {
+        stream.set_read_timeout(Some(t)).ok();
+        stream.set_write_timeout(Some(t)).ok();
+    }
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
     let mut line = String::new();
     loop {
         line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(());
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()),
+            Ok(_) => {}
+            // idle past the socket timeout: close the connection (a
+            // half-written line is abandoned with it)
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                return Ok(());
+            }
+            Err(e) => return Err(e.into()),
         }
         let parsed = match protocol::parse_request(&line) {
             Ok(p) => p,
             Err(e) => {
+                let err = ServeError::new(ErrCode::BadRequest, e);
                 out.write_all(
-                    protocol::error_line(&e).as_bytes(),
+                    protocol::error_line_coded(&err).as_bytes(),
                 )?;
                 continue;
             }
@@ -1287,12 +1709,13 @@ fn handle_conn(
             stop_tokens: parsed.stop_tokens,
             stream: parsed.stream,
             spec: parsed.spec,
+            deadline_ms: parsed.deadline_ms,
         };
         let rrx = match router.admit(spec) {
             Ok(rx) => rx,
             Err(e) => {
                 out.write_all(
-                    protocol::error_line(&e).as_bytes(),
+                    protocol::error_line_coded(&e).as_bytes(),
                 )?;
                 continue;
             }
@@ -1320,13 +1743,20 @@ fn handle_conn(
                 }
                 Ok(Event::Error { error, .. }) => {
                     out.write_all(
-                        protocol::error_line(&error).as_bytes(),
+                        protocol::error_line_coded(&error).as_bytes(),
                     )?;
                     break;
                 }
                 Err(_) => {
+                    // the reply channel died without a terminal event —
+                    // should be unreachable under the supervisor's
+                    // ledger, but never leave the client hanging
+                    let err = ServeError::new(
+                        ErrCode::EngineDown,
+                        "engine gone",
+                    );
                     out.write_all(
-                        protocol::error_line("engine gone").as_bytes(),
+                        protocol::error_line_coded(&err).as_bytes(),
                     )?;
                     break;
                 }
@@ -1336,6 +1766,7 @@ fn handle_conn(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::model::weights::testutil::{
@@ -2042,12 +2473,403 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         tx.send(Event::Error {
             id: 7,
-            error: "kv exhausted at admission".into(),
+            error: ServeError::new(
+                ErrCode::Internal,
+                "kv exhausted at admission",
+            ),
         })
         .unwrap();
         let err = wait_reply(&rx, Duration::from_millis(100))
-            .unwrap_err()
-            .to_string();
-        assert!(err.contains("kv exhausted"), "{err}");
+            .unwrap_err();
+        assert!(err.to_string().contains("kv exhausted"), "{err}");
+        // the typed error survives the anyhow boundary
+        let typed = err.downcast_ref::<ServeError>().unwrap();
+        assert_eq!(typed.code, ErrCode::Internal);
+        assert!(typed.retryable && !typed.started);
+    }
+
+    // ---- supervision, deadlines, drain, chaos properties ----------
+
+    use crate::serve::fault::{self as chaos, FaultPlan};
+
+    /// Collect every event until the reply channel disconnects,
+    /// asserting the exactly-one-terminal-event invariant along the
+    /// way. Returns the terminal event.
+    fn drain_terminal(rx: &mpsc::Receiver<Event>) -> Event {
+        let mut terminal: Option<Event> = None;
+        let deadline = Instant::now() + T30;
+        loop {
+            let left =
+                deadline.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(left) {
+                Ok(ev @ Event::Done(_)) | Ok(ev @ Event::Error { .. }) => {
+                    assert!(
+                        terminal.is_none(),
+                        "second terminal event: {ev:?}"
+                    );
+                    terminal = Some(ev);
+                }
+                Ok(Event::Token { .. }) => {
+                    assert!(
+                        terminal.is_none(),
+                        "token after terminal event"
+                    );
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    return terminal.expect(
+                        "channel closed without a terminal event",
+                    );
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    panic!("request hung: no terminal event within 30s")
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn panicked_engine_fails_inflight_and_respawns() {
+        let name = "sup-respawn";
+        let mut reg = ModelRegistry::new();
+        reg.register(name, random_model(401)).unwrap();
+        let cfg = ServeConfig {
+            max_batch: 2,
+            restart_backoff_ms: 2,
+            ..Default::default()
+        };
+        let srv = Server::start_registry(reg, cfg, 0).unwrap();
+        // panic on the 2nd fused pass: the first request is mid-decode
+        let _g = chaos::arm_guard(
+            name,
+            Arc::new(FaultPlan::new().panic_at(chaos::CP_STEP, 2)),
+        );
+        let rx = srv.submit(vec![1, 5, 9], 8).unwrap();
+        let err = wait_reply(&rx, T30).unwrap_err();
+        let typed = err.downcast_ref::<ServeError>().unwrap();
+        assert_eq!(typed.code, ErrCode::EngineRestarting, "{typed:?}");
+        assert!(typed.retryable, "pre-start failure must be retryable");
+        let stats = srv.model_stats(name).unwrap();
+        assert_eq!(stats.engine_panics.load(Ordering::Relaxed), 1);
+        // the respawned engine serves fresh requests (retry loop:
+        // admission may race the backoff window)
+        let reply = retry_until_served(&srv, vec![1, 5, 9], 8);
+        assert!(!reply.tokens.is_empty());
+        assert_eq!(stats.engine_restarts.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            srv.engine_health(name),
+            Some(HealthState::Healthy)
+        );
+        srv.shutdown();
+    }
+
+    fn retry_until_served(
+        srv: &Server,
+        prompt: Vec<u16>,
+        max_new: usize,
+    ) -> Reply {
+        let deadline = Instant::now() + T30;
+        loop {
+            if let Ok(rx) = srv.submit(prompt.clone(), max_new) {
+                if let Ok(r) = wait_reply(&rx, T10) {
+                    return r;
+                }
+            }
+            assert!(
+                Instant::now() < deadline,
+                "engine never came back within 30s"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    #[test]
+    fn dead_engine_drains_queue_and_recovers() {
+        // the satellite test: kill an engine mid-flight, assert every
+        // queued request drains with an Error, gauges return to zero,
+        // and the restarted engine answers bit-identically to an
+        // unfaulted server over the same weights
+        let name = "sup-dead";
+        let m = random_model(402);
+        let mut reg = ModelRegistry::new();
+        reg.register(name, m.clone()).unwrap();
+        let cfg = ServeConfig {
+            max_batch: 1, // queue everything behind one slow victim
+            restart_backoff_ms: 2,
+            ..Default::default()
+        };
+        let srv = Server::start_registry(reg, cfg.clone(), 0).unwrap();
+        let _g = chaos::arm_guard(
+            name,
+            Arc::new(
+                FaultPlan::new()
+                    .stall_every(chaos::CP_STEP, 5)
+                    .panic_at(chaos::CP_STEP, 4),
+            ),
+        );
+        let prompt: Vec<u16> = vec![2, 9, 4];
+        let rxs: Vec<_> = (0..6)
+            .map(|_| srv.submit(prompt.clone(), 8).unwrap())
+            .collect();
+        let mut errors = 0;
+        for rx in &rxs {
+            if let Event::Error { .. } = drain_terminal(rx) {
+                errors += 1;
+            }
+        }
+        assert!(errors >= 1, "the panic must fail at least one request");
+        let stats = srv.model_stats(name).unwrap();
+        assert!(stats.engine_panics.load(Ordering::Relaxed) >= 1);
+        assert_eq!(
+            stats.queue_depth.load(Ordering::Relaxed),
+            0,
+            "queue gauge must return to zero after the drain"
+        );
+        drop(_g); // disarm before the recovery probe
+        let recovered = retry_until_served(&srv, prompt.clone(), 8);
+        // prompts shorter than a KV page leave nothing in the prefix
+        // cache, so an idle engine must hold zero pages
+        let deadline = Instant::now() + T10;
+        while stats.kv_pages_in_use.load(Ordering::Relaxed) != 0
+            && Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(
+            stats.kv_pages_in_use.load(Ordering::Relaxed),
+            0,
+            "kv pages leaked across the restart"
+        );
+        // bit-identity: unfaulted server over the same weights
+        let clean =
+            Server::start(m, ServeConfig::default(), 0).unwrap();
+        let want =
+            wait_reply(&clean.submit(prompt, 8).unwrap(), T30).unwrap();
+        assert_eq!(
+            recovered.tokens, want.tokens,
+            "restarted engine must serve bit-identical greedy output"
+        );
+        clean.shutdown();
+        srv.shutdown();
+    }
+
+    #[test]
+    fn restart_cap_exhaustion_goes_down_and_rejects() {
+        let name = "sup-down";
+        let mut reg = ModelRegistry::new();
+        reg.register(name, random_model(403)).unwrap();
+        let cfg = ServeConfig {
+            max_restarts: 1,
+            restart_backoff_ms: 2,
+            ..Default::default()
+        };
+        let srv = Server::start_registry(reg, cfg, 0).unwrap();
+        let _g = chaos::arm_guard(
+            name,
+            Arc::new(FaultPlan::new().panic_every(chaos::CP_STEP)),
+        );
+        // every attempt panics; after max_restarts=1 respawns the
+        // supervisor declares the engine Down
+        let deadline = Instant::now() + T30;
+        loop {
+            match srv.submit(vec![1, 5], 4) {
+                Ok(rx) => {
+                    let _ = drain_terminal(&rx);
+                }
+                Err(e) => {
+                    let typed =
+                        e.downcast_ref::<ServeError>().unwrap();
+                    if typed.code == ErrCode::EngineDown {
+                        break;
+                    }
+                }
+            }
+            assert!(
+                Instant::now() < deadline,
+                "engine never reached Down within 30s"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(srv.engine_health(name), Some(HealthState::Down));
+        let stats = srv.model_stats(name).unwrap();
+        assert_eq!(stats.engine_restarts.load(Ordering::Relaxed), 1);
+        assert!(stats.engine_panics.load(Ordering::Relaxed) >= 2);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn deadline_finishes_midflight_and_frees_pages() {
+        let name = "sup-deadline";
+        let mut reg = ModelRegistry::new();
+        reg.register(name, random_model(404)).unwrap();
+        let srv = Server::start_registry(
+            reg,
+            ServeConfig::default(),
+            0,
+        )
+        .unwrap();
+        // slow every iteration down so a 60 ms deadline lapses long
+        // before max_new=200 tokens complete
+        let _g = chaos::arm_guard(
+            name,
+            Arc::new(FaultPlan::new().stall_every(chaos::CP_STEP, 10)),
+        );
+        let rx = srv
+            .submit_spec(SubmitSpec {
+                deadline_ms: Some(60),
+                ..SubmitSpec::greedy(&[1, 5, 9], 200)
+            })
+            .unwrap();
+        let reply = wait_reply(&rx, T30).unwrap();
+        assert_eq!(reply.finish_reason, FinishReason::Deadline);
+        assert!(
+            reply.tokens.len() < 200,
+            "deadline must cut generation short, got {}",
+            reply.tokens.len()
+        );
+        let stats = srv.model_stats(name).unwrap();
+        assert_eq!(stats.deadline_hits.load(Ordering::Relaxed), 1);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn deadline_expires_at_queue_head() {
+        let name = "sup-queuehead";
+        let mut reg = ModelRegistry::new();
+        reg.register(name, random_model(405)).unwrap();
+        let cfg = ServeConfig { max_batch: 1, ..Default::default() };
+        let srv = Server::start_registry(reg, cfg, 0).unwrap();
+        let _g = chaos::arm_guard(
+            name,
+            Arc::new(FaultPlan::new().stall_every(chaos::CP_STEP, 10)),
+        );
+        // first request occupies the single batch slot for a while;
+        // the second's 1 ms deadline lapses while it waits in queue
+        let slow = srv.submit(vec![1, 2, 3], 40).unwrap();
+        let rx = srv
+            .submit_spec(SubmitSpec {
+                deadline_ms: Some(1),
+                ..SubmitSpec::greedy(&[4, 5, 6], 8)
+            })
+            .unwrap();
+        let expired = wait_reply(&rx, T30).unwrap();
+        assert_eq!(expired.finish_reason, FinishReason::Deadline);
+        assert!(
+            expired.tokens.is_empty(),
+            "queue-head expiry consumed no engine work"
+        );
+        let _ = wait_reply(&slow, T30).unwrap();
+        srv.shutdown();
+    }
+
+    #[test]
+    fn shutdown_force_retires_past_drain_budget() {
+        let name = "sup-drain";
+        let mut reg = ModelRegistry::new();
+        reg.register(name, random_model(406)).unwrap();
+        let cfg = ServeConfig {
+            drain_ms: 30,
+            ..Default::default()
+        };
+        let srv = Server::start_registry(reg, cfg, 0).unwrap();
+        let _g = chaos::arm_guard(
+            name,
+            Arc::new(FaultPlan::new().stall_every(chaos::CP_STEP, 20)),
+        );
+        // ~200 slow tokens cannot finish inside a 30 ms drain budget
+        let rx = srv.submit(vec![1, 5, 9], 200).unwrap();
+        // let the request actually start before shutting down
+        std::thread::sleep(Duration::from_millis(30));
+        srv.shutdown();
+        let err = wait_reply(&rx, T10).unwrap_err();
+        let typed = err.downcast_ref::<ServeError>().unwrap();
+        assert_eq!(typed.code, ErrCode::Shutdown, "{typed:?}");
+        assert!(
+            typed.msg.contains("drain"),
+            "force-retire must say so: {typed:?}"
+        );
+    }
+
+    #[test]
+    fn injected_queue_drop_still_delivers_terminal_error() {
+        let name = "sup-drop";
+        let mut reg = ModelRegistry::new();
+        reg.register(name, random_model(407)).unwrap();
+        let srv = Server::start_registry(
+            reg,
+            ServeConfig::default(),
+            0,
+        )
+        .unwrap();
+        let _g = chaos::arm_guard(
+            name,
+            Arc::new(FaultPlan::new().drop_at(chaos::CP_ADMIT, 1)),
+        );
+        let rx = srv.submit(vec![1, 5], 4).unwrap();
+        match drain_terminal(&rx) {
+            Event::Error { error, .. } => {
+                assert_eq!(error.code, ErrCode::Internal);
+                assert!(error.retryable, "pre-start drop is retryable");
+            }
+            other => panic!("dropped request must error, got {other:?}"),
+        }
+        // the engine survives the drop and serves the next request
+        let r = retry_until_served(&srv, vec![1, 5], 4);
+        assert!(!r.tokens.is_empty());
+        srv.shutdown();
+    }
+
+    #[test]
+    fn idle_connection_is_closed_by_socket_timeout() {
+        let m = random_model(408);
+        let cfg = ServeConfig {
+            conn_timeout_ms: 50,
+            ..Default::default()
+        };
+        let srv = Server::start(m, cfg, 0).unwrap();
+        let stream = TcpStream::connect(srv.addr).unwrap();
+        // never write; the server must close within the timeout
+        // (regression: this used to pin a connection thread forever)
+        stream
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        let got = reader.read_line(&mut line);
+        assert!(
+            matches!(got, Ok(0)),
+            "expected server-side close (EOF), got {got:?} / {line:?}"
+        );
+        srv.shutdown();
+    }
+
+    #[test]
+    fn wire_errors_carry_code_and_retryable() {
+        let m = random_model(409);
+        let srv = Server::start(m, ServeConfig::default(), 0).unwrap();
+        let mut stream = TcpStream::connect(srv.addr).unwrap();
+        stream
+            .write_all(b"{\"prompt\": [1], \"max_new\": 0}\n")
+            .unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = crate::util::json::Json::parse(line.trim()).unwrap();
+        assert!(j.get("error").is_some(), "{line}");
+        assert_eq!(
+            j.get("code").unwrap().as_str().unwrap(),
+            "bad_request",
+            "{line}"
+        );
+        assert_eq!(
+            j.get("retryable").unwrap().as_bool().unwrap(),
+            false,
+            "{line}"
+        );
+        assert_eq!(
+            j.get("started").unwrap().as_bool().unwrap(),
+            false,
+            "{line}"
+        );
+        srv.shutdown();
     }
 }

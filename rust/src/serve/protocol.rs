@@ -15,15 +15,25 @@
 //!              "seed": int?,             // any → seeded sampling
 //!              "stop_tokens": [int,...]?,
 //!              "spec": {"draft": str?, "k": int?}?,  // speculative
+//!              "deadline_ms": int?,      // wall-clock budget
 //!              "stream": bool?, "v": 1?}\n
-//!   Reply:    v0 fields + {"finish_reason": "length"|"stop",
-//!              "model": str}
+//!   Reply:    v0 fields + {"finish_reason":
+//!              "length"|"stop"|"deadline", "model": str}
 //!             + {"spec": {"drafted": n, "accepted": n}}?  // pairs
 //!             + {"kv": {"pages": n, "prefix_hit_tokens": n}}?\n
 //!   Stream:   {"event": "token", "id": n, "index": i, "token": t}\n
 //!             ... one line per decoded token, then a final
 //!             {"event": "done", ...v1 reply fields...}\n
-//!   Error:    {"error": "..."}\n   (either version, any stage)
+//!   Error:    {"error": "...", "code": str, "retryable": bool,
+//!              "started": bool}\n   (either version, any stage)
+//!
+//! Error lines are NOT part of the frozen v0 byte contract (v0 only
+//! froze success replies), so every error — even on a v0 request —
+//! carries the typed fields: a stable machine-readable `code` (see
+//! [`super::ErrCode::as_str`]), whether a retry can possibly succeed,
+//! and whether generation had already streamed tokens when it failed
+//! (a mid-stream failure is never safely retryable: the client
+//! observed partial output).
 //!
 //! Parsing validates structure and ranges only; model-dependent checks
 //! (prompt tokens vs the routed model's vocab, model-name existence)
@@ -51,6 +61,9 @@ pub struct ParsedRequest {
     /// `Some` when the request asked for speculative decoding
     /// (`"spec"` object); admission resolves the pair.
     pub spec: Option<SpecRequest>,
+    /// Wall-clock budget for the whole request (queue time included);
+    /// `None` defers to `ServeConfig::default_deadline_ms`.
+    pub deadline_ms: Option<u64>,
     pub stream: bool,
 }
 
@@ -183,6 +196,21 @@ pub fn parse_request(line: &str) -> Result<ParsedRequest, String> {
             Some(SpecRequest { draft, k })
         }
     };
+    let deadline_ms = match j.get("deadline_ms") {
+        None => None,
+        Some(v) => {
+            v1 = true;
+            Some(
+                v.as_f64()
+                    .filter(|d| {
+                        d.fract() == 0.0
+                            && (1.0..=3_600_000.0).contains(d)
+                    })
+                    .ok_or("deadline_ms out of range [1, 3600000]")?
+                    as u64,
+            )
+        }
+    };
     let stream = match j.get("stream") {
         None => false,
         Some(b) => {
@@ -198,6 +226,7 @@ pub fn parse_request(line: &str) -> Result<ParsedRequest, String> {
         sampling: sampled.then_some(sp),
         stop_tokens,
         spec,
+        deadline_ms,
         stream,
     })
 }
@@ -270,13 +299,30 @@ pub fn done_line(r: &super::Reply) -> String {
     format!("{o}\n")
 }
 
+/// Legacy untyped error line — kept for call sites that only have a
+/// bare message (and for wire compat with clients that key on
+/// `"error"` alone, which every error line still carries).
 pub fn error_line(msg: &str) -> String {
     let mut o = Json::obj();
     o.set("error", Json::str(msg));
     format!("{o}\n")
 }
 
+/// Typed error line: the human-readable message plus the stable code,
+/// whether a retry can possibly succeed, and whether generation had
+/// already streamed tokens when the failure happened (the client retry
+/// policy must never replay a request whose output it partially saw).
+pub fn error_line_coded(e: &super::ServeError) -> String {
+    let mut o = Json::obj();
+    o.set("error", Json::str(&e.msg));
+    o.set("code", Json::str(e.code.as_str()));
+    o.set("retryable", Json::Bool(e.retryable));
+    o.set("started", Json::Bool(e.started));
+    format!("{o}\n")
+}
+
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::super::{FinishReason, Reply};
     use super::*;
@@ -398,6 +444,12 @@ mod tests {
             "{\"prompt\": [1], \"stream\": \"yes\"}",
             "{\"prompt\": [1], \"stop_tokens\": [70000]}",
             "{\"prompt\": [1], \"stop_tokens\": 4}",
+            // bad deadlines
+            "{\"prompt\": [1], \"deadline_ms\": 0}",
+            "{\"prompt\": [1], \"deadline_ms\": -5}",
+            "{\"prompt\": [1], \"deadline_ms\": 1.5}",
+            "{\"prompt\": [1], \"deadline_ms\": 3600001}",
+            "{\"prompt\": [1], \"deadline_ms\": \"fast\"}",
         ] {
             assert!(parse_request(bad).is_err(), "should reject: {bad}");
         }
@@ -500,6 +552,49 @@ mod tests {
         // and v0 replies never leak it
         let v0 = reply_line(&r);
         assert!(Json::parse(v0.trim()).unwrap().get("kv").is_none());
+    }
+
+    #[test]
+    fn parse_deadline_field() {
+        let p = parse_request(
+            "{\"prompt\": [1], \"deadline_ms\": 250}",
+        )
+        .unwrap();
+        assert!(p.v1, "deadline_ms is a v1 field");
+        assert_eq!(p.deadline_ms, Some(250));
+        // boundaries parse
+        for ms in [1u64, 3_600_000] {
+            let line =
+                format!("{{\"prompt\": [1], \"deadline_ms\": {ms}}}");
+            assert_eq!(
+                parse_request(&line).unwrap().deadline_ms,
+                Some(ms)
+            );
+        }
+        // absent → None (server default applies)
+        assert!(parse_request("{\"prompt\": [1]}")
+            .unwrap()
+            .deadline_ms
+            .is_none());
+    }
+
+    #[test]
+    fn coded_error_line_carries_typed_fields() {
+        use super::super::{ErrCode, ServeError};
+        let e = ServeError::new(ErrCode::QueueFull, "queue full");
+        let j = Json::parse(error_line_coded(&e).trim()).unwrap();
+        assert_eq!(j.get("error").unwrap().as_str(), Some("queue full"));
+        assert_eq!(j.get("code").unwrap().as_str(), Some("queue_full"));
+        assert_eq!(j.get("retryable").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("started").unwrap().as_bool(), Some(false));
+        // mid-stream failures flip both flags
+        let e = ServeError::new(ErrCode::Interrupted, "engine failed")
+            .started(true);
+        let j = Json::parse(error_line_coded(&e).trim()).unwrap();
+        assert_eq!(j.get("retryable").unwrap().as_bool(), Some(false));
+        assert_eq!(j.get("started").unwrap().as_bool(), Some(true));
+        // the legacy line still frames bare messages
+        assert_eq!(error_line("boom"), "{\"error\":\"boom\"}\n");
     }
 
     #[test]

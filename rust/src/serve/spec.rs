@@ -68,7 +68,7 @@
 //! and per-request draft depth `k` (the `"spec": {"k": n}` field)
 //! clamped to [`MAX_SPEC_K`] and to the tokens actually remaining.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -78,9 +78,10 @@ use crate::model::engine::argmax;
 use crate::model::engine::sampler::verify_pick;
 use crate::model::{DecodeBatch, ModelWeights, PREFILL_CHUNK};
 
+use super::supervisor::{Ctl, Inflight};
 use super::{
-    Event, FinishReason, KvUsage, Reply, Request, Sampler, ServeConfig,
-    ServeStats,
+    dec_queue_depth, expire_queued, fault, ErrCode, Event, FinishReason,
+    KvUsage, Reply, Request, Sampler, ServeConfig, ServeStats,
 };
 
 /// Hard cap on a speculative pair's draft depth (registry default and
@@ -158,9 +159,13 @@ impl SpecSeq {
     /// commits in, so a stopping token truncates the round's remaining
     /// commits exactly where target-only decoding would have stopped.
     /// Returns true when the sequence is finished.
-    fn commit(&mut self, tok: u16) -> bool {
+    fn commit(&mut self, tok: u16, inflight: &Inflight) -> bool {
         self.generated.push(tok);
         if self.req.stream {
+            // first streamed token flips the request to mid-stream
+            // (not retryable) in the ledger before it can reach the
+            // client
+            inflight.mark_started(self.req.id);
             let _ = self.req.reply.send(Event::Token {
                 id: self.req.id,
                 index: self.generated.len() - 1,
@@ -180,15 +185,21 @@ impl SpecSeq {
 /// iteration: admit → retire finished → chunked prefill staged for
 /// both engines → draft phase (up to `k` fused passes on the draft) →
 /// one fused verify pass on the target → accept walk + KV rollback.
+///
+/// Runs under the same [`super::supervisor`] panic boundary as
+/// [`super::engine_loop`]: borrowed queue receiver, terminal events
+/// through `ctl.inflight`, per-request deadlines at the queue head
+/// and per round, force drain when the shutdown budget lapses.
+#[allow(clippy::too_many_arguments)]
 pub fn spec_engine_loop(
     target: Arc<ModelWeights>,
     draft: Arc<ModelWeights>,
     name: Arc<String>,
     pair_k: usize,
     cfg: ServeConfig,
-    rx: mpsc::Receiver<Request>,
+    rx: &mpsc::Receiver<Request>,
     stats: Arc<ServeStats>,
-    stop: Arc<AtomicBool>,
+    ctl: Ctl,
 ) {
     // verify windows are up to (MAX_SPEC_K + 1) rows per sequence and
     // share the fused pass with prefill chunks; the draft side carries
@@ -217,6 +228,36 @@ pub fn spec_engine_loop(
         Ordering::Relaxed,
     );
     loop {
+        // ---- force drain: the shutdown drain budget lapsed
+        if ctl.force.load(Ordering::Relaxed) {
+            for seq in active.drain(..) {
+                ctl.inflight.fail(
+                    seq.req.id,
+                    ErrCode::Shutdown,
+                    "server shutting down: drain budget exceeded",
+                );
+            }
+            if let Some(req) = parked.take() {
+                ctl.inflight.fail(
+                    req.id,
+                    ErrCode::Shutdown,
+                    "server shutting down: drain budget exceeded",
+                );
+            }
+            tb.retire_all();
+            db.retire_all();
+            while let Ok(req) = rx.try_recv() {
+                dec_queue_depth(&stats);
+                ctl.inflight.register(&req);
+                ctl.inflight.fail(
+                    req.id,
+                    ErrCode::Shutdown,
+                    "server shutting down",
+                );
+            }
+            stats.kv_pages_in_use.store(0, Ordering::Relaxed);
+            return;
+        }
         // ---- admission: fill the batch from the queue (both engines
         //      admit in lockstep so indices stay mirrored). A request
         //      that does not fit the page pools right now parks and
@@ -228,7 +269,10 @@ pub fn spec_engine_loop(
                 match rx.recv_timeout(Duration::from_millis(20)) {
                     Ok(r) => (r, false),
                     Err(mpsc::RecvTimeoutError::Timeout) => break,
-                    Err(mpsc::RecvTimeoutError::Disconnected) => return,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        stats.kv_pages_in_use.store(0, Ordering::Relaxed);
+                        return;
+                    }
                 }
             } else {
                 match rx.try_recv() {
@@ -236,6 +280,27 @@ pub fn spec_engine_loop(
                     Err(_) => break,
                 }
             };
+            if !was_parked {
+                dec_queue_depth(&stats);
+                ctl.inflight.register(&req);
+            }
+            // queue-head deadline check (parked requests re-checked
+            // every pop — time keeps passing while they wait)
+            if req
+                .deadline
+                .map_or(false, |d| Instant::now() >= d)
+            {
+                expire_queued(req, &name, &stats, &ctl.inflight);
+                continue;
+            }
+            if fault::hit(&name, fault::CP_SPEC_ADMIT) {
+                ctl.inflight.fail(
+                    req.id,
+                    ErrCode::Internal,
+                    "fault injection: request dropped at admission",
+                );
+                continue;
+            }
             // admission rejects anything that cannot fit — never clamp
             // the prompt (see engine_loop: a clamp can shred it to
             // zero tokens and this loop would then verify against the
@@ -282,10 +347,11 @@ pub fn spec_engine_loop(
             let ti = match tb.admit_prompt(cap, &req.prompt, hit) {
                 Ok(i) => i,
                 Err(e) => {
-                    let _ = req.reply.send(Event::Error {
-                        id: req.id,
-                        error: format!("admission failed: {e}"),
-                    });
+                    ctl.inflight.fail(
+                        req.id,
+                        ErrCode::Internal,
+                        &format!("admission failed: {e}"),
+                    );
                     continue;
                 }
             };
@@ -294,10 +360,11 @@ pub fn spec_engine_loop(
                 Ok(i) => i,
                 Err(e) => {
                     tb.retire(ti);
-                    let _ = req.reply.send(Event::Error {
-                        id: req.id,
-                        error: format!("admission failed: {e}"),
-                    });
+                    ctl.inflight.fail(
+                        req.id,
+                        ErrCode::Internal,
+                        &format!("admission failed: {e}"),
+                    );
                     continue;
                 }
             };
@@ -309,10 +376,11 @@ pub fn spec_engine_loop(
             if !tb.try_reserve(ti, limit + 1 - hit) {
                 tb.retire(ti);
                 db.retire(di);
-                let _ = req.reply.send(Event::Error {
-                    id: req.id,
-                    error: "kv exhausted at admission".into(),
-                });
+                ctl.inflight.fail(
+                    req.id,
+                    ErrCode::Internal,
+                    "kv exhausted at admission",
+                );
                 continue;
             }
             // a draft pool that cannot hold the prompt just disables
@@ -353,10 +421,23 @@ pub fn spec_engine_loop(
             .kv_prefix_hit_tokens
             .store(tb.prefix_hit_tokens(), Ordering::Relaxed);
         if active.is_empty() {
-            if stop.load(Ordering::Relaxed) {
+            if ctl.stop.load(Ordering::Relaxed) {
+                stats.kv_pages_in_use.store(0, Ordering::Relaxed);
                 return;
             }
             continue;
+        }
+        // ---- deadline sweep: lapsed sequences finish this iteration
+        //      with whatever they committed (the retire pass below
+        //      frees both engines' pages)
+        let now = Instant::now();
+        for seq in active.iter_mut() {
+            if seq.finish.is_none()
+                && seq.req.deadline.map_or(false, |d| now >= d)
+            {
+                stats.deadline_hits.fetch_add(1, Ordering::Relaxed);
+                seq.finish = Some(FinishReason::Deadline);
+            }
         }
         // ---- retire sequences finished by the previous round
         //      (swap_remove in lockstep across active + both batches)
@@ -395,7 +476,7 @@ pub fn spec_engine_loop(
                 prefill_ms: seq.prefill_ms,
                 decode_ms: seq.decode_t0.elapsed().as_secs_f64() * 1e3,
             };
-            let _ = seq.req.reply.send(Event::Done(reply));
+            ctl.inflight.done(reply.id, reply);
         }
         if active.is_empty() {
             continue;
@@ -460,6 +541,7 @@ pub fn spec_engine_loop(
             }
         }
         let rounds = keff.iter().copied().max().unwrap_or(0);
+        let _ = fault::hit(&name, fault::CP_SPEC_DRAFT);
         {
             // pass 0 also carries the draft-side prompt chunks and the
             // backlog catch-up chunks (committed tokens the draft has
@@ -571,6 +653,7 @@ pub fn spec_engine_loop(
             }
             continue;
         }
+        let _ = fault::hit(&name, fault::CP_SPEC_VERIFY);
         let t0 = Instant::now();
         let logits = {
             let verify: Vec<(usize, &[u16])> = windows
@@ -625,7 +708,7 @@ pub fn spec_engine_loop(
                     matched += 1;
                 }
                 last = tok;
-                let done = seq.commit(tok);
+                let done = seq.commit(tok, &ctl.inflight);
                 if done || !accepted {
                     break;
                 }
@@ -684,7 +767,7 @@ pub fn spec_engine_loop(
                 );
                 prow += 1;
                 seq.committed = seq.limit;
-                seq.commit(tok);
+                seq.commit(tok, &ctl.inflight);
                 seq.pending = tok;
                 seq.decode_t0 = Instant::now();
                 finished_prompts.push(i);

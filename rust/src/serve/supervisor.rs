@@ -1,0 +1,486 @@
+//! Engine supervision: panic boundaries, health states, respawn.
+//!
+//! Each registered model gets one *supervisor* thread instead of a
+//! bare engine thread. The supervisor owns the admission queue's
+//! `Receiver` and runs the engine loop inside `catch_unwind`, so an
+//! engine panic can never strand the queue: the receiver survives the
+//! unwind, every in-flight request is failed with a terminal
+//! `Event::Error` (started-aware: mid-stream failures are not
+//! retryable, pre-start ones are), everything still queued is drained
+//! with retryable errors, and the engine is respawned from the
+//! registry's resident weights with exponential backoff + jitter up
+//! to a restart cap.
+//!
+//! Health state machine:
+//!
+//! ```text
+//!            panic                 respawn ok
+//!  Healthy ────────▶ Degraded ─────────────────▶ Healthy
+//!     │                  │ restart cap exhausted
+//!     │ clean exit       ▼
+//!     └────────────▶   Down   (admission rejects; queue still
+//!                              drained with EngineDown errors)
+//! ```
+//!
+//! The **exactly-one-terminal-event** invariant is centralised in
+//! [`Inflight`]: the engine registers a request when it pops it from
+//! the queue and every terminal send goes through `done`/`fail`,
+//! which remove the ledger entry and send under one lock — a request
+//! can never receive two terminal events, and a panicked engine's
+//! survivors are exactly the ledger's remaining entries.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+use crate::model::ModelWeights;
+
+use super::spec::spec_engine_loop;
+use super::{
+    dec_queue_depth, engine_loop, ErrCode, Event, Reply, Request,
+    ServeConfig, ServeError, ServeStats,
+};
+
+/// Engine health as seen by the router.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    /// Serving normally.
+    Healthy,
+    /// Panicked; supervisor is backing off before a respawn. The
+    /// queue still accepts work (it will be served after the respawn
+    /// or drained with retryable errors on a repeat panic).
+    Degraded,
+    /// Restart cap exhausted or engine exited; admission rejects.
+    Down,
+}
+
+/// Lock-free health cell shared between supervisor and router.
+pub struct Health {
+    state: AtomicU8,
+}
+
+impl Health {
+    fn new() -> Health {
+        Health { state: AtomicU8::new(0) }
+    }
+
+    pub fn state(&self) -> HealthState {
+        match self.state.load(Ordering::Relaxed) {
+            0 => HealthState::Healthy,
+            1 => HealthState::Degraded,
+            _ => HealthState::Down,
+        }
+    }
+
+    fn set(&self, s: HealthState) {
+        let v = match s {
+            HealthState::Healthy => 0,
+            HealthState::Degraded => 1,
+            HealthState::Down => 2,
+        };
+        self.state.store(v, Ordering::Relaxed);
+    }
+}
+
+struct Entry {
+    reply: mpsc::Sender<Event>,
+    started: bool,
+}
+
+/// Ledger of requests an engine has popped but not yet answered.
+/// All terminal events route through here; remove-then-send under one
+/// lock gives the exactly-one-terminal-event guarantee.
+#[derive(Default)]
+pub struct Inflight {
+    map: Mutex<HashMap<u64, Entry>>,
+}
+
+impl Inflight {
+    fn lock(&self) -> MutexGuard<'_, HashMap<u64, Entry>> {
+        // an engine thread can die while holding nothing here (faults
+        // fire outside this lock), but recover from poisoning anyway:
+        // the ledger must stay usable for the respawned engine
+        self.map.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Engine popped `req` from the queue; it is now in flight.
+    pub(crate) fn register(&self, req: &Request) {
+        self.lock().insert(
+            req.id,
+            Entry { reply: req.reply.clone(), started: false },
+        );
+    }
+
+    /// First streamed token is about to go out: from here on a
+    /// failure is mid-stream and must not be retried by clients.
+    pub(crate) fn mark_started(&self, id: u64) {
+        if let Some(e) = self.lock().get_mut(&id) {
+            e.started = true;
+        }
+    }
+
+    /// Terminal success.
+    pub(crate) fn done(&self, id: u64, reply: Reply) {
+        if let Some(e) = self.lock().remove(&id) {
+            let _ = e.reply.send(Event::Done(reply));
+        }
+    }
+
+    /// Terminal failure; `retryable` is downgraded automatically if
+    /// the request already streamed tokens.
+    pub(crate) fn fail(&self, id: u64, code: ErrCode, msg: &str) {
+        if let Some(e) = self.lock().remove(&id) {
+            let error = ServeError::new(code, msg).started(e.started);
+            let _ = e.reply.send(Event::Error { id, error });
+        }
+    }
+
+    /// Fail every in-flight request (panic boundary / force drain).
+    /// Pre-start entries get `(pre_code, pre_msg)` (retryable);
+    /// mid-stream entries get `ErrCode::Interrupted` (not retryable).
+    fn fail_all(&self, pre_code: ErrCode, pre_msg: &str) -> usize {
+        let mut m = self.lock();
+        let n = m.len();
+        for (id, e) in m.drain() {
+            let error = if e.started {
+                ServeError::new(
+                    ErrCode::Interrupted,
+                    "engine failed mid-stream; partial output is not \
+                     safely retryable",
+                )
+                .started(true)
+            } else {
+                ServeError::new(pre_code, pre_msg)
+            };
+            let _ = e.reply.send(Event::Error { id, error });
+        }
+        n
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Control bundle threaded through the engine loops: the shared stop
+/// and force-drain flags plus this engine's in-flight ledger.
+#[derive(Clone)]
+pub struct Ctl {
+    pub stop: Arc<AtomicBool>,
+    pub force: Arc<AtomicBool>,
+    pub inflight: Arc<Inflight>,
+}
+
+impl Ctl {
+    /// Standalone bundle for driving an engine loop directly (tests,
+    /// benches) without a supervisor.
+    pub fn fresh() -> Ctl {
+        Ctl {
+            stop: Arc::new(AtomicBool::new(false)),
+            force: Arc::new(AtomicBool::new(false)),
+            inflight: Arc::new(Inflight::default()),
+        }
+    }
+}
+
+/// What to (re)spawn — the registry's resident weights, so respawn is
+/// an allocation of fresh KV state, not a model reload.
+pub enum EngineDef {
+    Dense {
+        model: Arc<ModelWeights>,
+    },
+    Spec {
+        target: Arc<ModelWeights>,
+        draft: Arc<ModelWeights>,
+        k: usize,
+    },
+}
+
+pub struct Supervisor {
+    pub health: Arc<Health>,
+    pub handle: std::thread::JoinHandle<()>,
+}
+
+/// Spawn the supervisor thread for one engine.
+pub fn spawn(
+    def: EngineDef,
+    name: Arc<String>,
+    cfg: ServeConfig,
+    rx: mpsc::Receiver<Request>,
+    stats: Arc<ServeStats>,
+    stop: Arc<AtomicBool>,
+    force: Arc<AtomicBool>,
+) -> Supervisor {
+    let health = Arc::new(Health::new());
+    let h = health.clone();
+    let handle = std::thread::spawn(move || {
+        supervise(def, name, cfg, rx, stats, stop, force, h)
+    });
+    Supervisor { health, handle }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn supervise(
+    def: EngineDef,
+    name: Arc<String>,
+    cfg: ServeConfig,
+    rx: mpsc::Receiver<Request>,
+    stats: Arc<ServeStats>,
+    stop: Arc<AtomicBool>,
+    force: Arc<AtomicBool>,
+    health: Arc<Health>,
+) {
+    let inflight = Arc::new(Inflight::default());
+    let ctl = Ctl {
+        stop: stop.clone(),
+        force: force.clone(),
+        inflight: inflight.clone(),
+    };
+    let mut restarts: u32 = 0;
+    loop {
+        health.set(HealthState::Healthy);
+        let run = catch_unwind(AssertUnwindSafe(|| match &def {
+            EngineDef::Dense { model } => engine_loop(
+                model.clone(),
+                name.clone(),
+                cfg.clone(),
+                &rx,
+                stats.clone(),
+                ctl.clone(),
+            ),
+            EngineDef::Spec { target, draft, k } => spec_engine_loop(
+                target.clone(),
+                draft.clone(),
+                name.clone(),
+                *k,
+                cfg.clone(),
+                &rx,
+                stats.clone(),
+                ctl.clone(),
+            ),
+        }));
+        if run.is_ok() {
+            // clean exit: stop requested and drained, or every sender
+            // dropped — either way the engine is gone for good
+            health.set(HealthState::Down);
+            return;
+        }
+        // Panic boundary. The engine's DecodeBatch unwound with it,
+        // so its pages are physically freed; re-zero the gauge the
+        // dead loop can no longer maintain, then make sure nothing
+        // hangs: in-flight requests get started-aware errors, queued
+        // ones get retryable pre-start errors.
+        stats.engine_panics.fetch_add(1, Ordering::Relaxed);
+        inflight.fail_all(
+            ErrCode::EngineRestarting,
+            "engine panicked before the request started",
+        );
+        drain_queue(
+            &rx,
+            &stats,
+            ErrCode::EngineRestarting,
+            "engine panicked while the request was queued",
+        );
+        stats.kv_pages_in_use.store(0, Ordering::Relaxed);
+        if restarts >= cfg.max_restarts {
+            health.set(HealthState::Down);
+            reject_until_stopped(&rx, &stats, &stop);
+            return;
+        }
+        restarts += 1;
+        stats.engine_restarts.fetch_add(1, Ordering::Relaxed);
+        health.set(HealthState::Degraded);
+        let wait = backoff(cfg.restart_backoff_ms, restarts, &name);
+        let t0 = Instant::now();
+        while t0.elapsed() < wait {
+            if stop.load(Ordering::Relaxed)
+                || force.load(Ordering::Relaxed)
+            {
+                drain_queue(
+                    &rx,
+                    &stats,
+                    ErrCode::Shutdown,
+                    "server shutting down",
+                );
+                health.set(HealthState::Down);
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+}
+
+/// Exponential backoff with deterministic jitter. Base doubles per
+/// attempt (capped at 2 s); jitter in `[0, wait/2]` is derived from
+/// the engine name and attempt number — reproducible, yet different
+/// engines desynchronise instead of thundering back together.
+fn backoff(base_ms: u64, attempt: u32, name: &str) -> Duration {
+    let exp = attempt.saturating_sub(1).min(6);
+    let wait = base_ms.saturating_mul(1u64 << exp).min(2_000);
+    let mut x = 0xcbf29ce484222325u64;
+    for b in name.as_bytes() {
+        x ^= *b as u64;
+        x = x.wrapping_mul(0x100000001b3);
+    }
+    x ^= (attempt as u64).wrapping_mul(0x9E3779B97F4A7C15);
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    let jitter = if wait == 0 { 0 } else { x % (wait / 2 + 1) };
+    Duration::from_millis(wait + jitter)
+}
+
+/// Drain everything currently queued with a terminal error.
+fn drain_queue(
+    rx: &mpsc::Receiver<Request>,
+    stats: &ServeStats,
+    code: ErrCode,
+    msg: &str,
+) -> usize {
+    let mut n = 0;
+    while let Ok(req) = rx.try_recv() {
+        dec_queue_depth(stats);
+        let error = ServeError::new(code, msg);
+        let _ = req.reply.send(Event::Error { id: req.id, error });
+        n += 1;
+    }
+    n
+}
+
+/// Restart cap exhausted: the engine stays Down but the supervisor
+/// keeps owning the queue so late arrivals (racing admission before
+/// the router saw Down) still get terminal errors instead of hanging.
+fn reject_until_stopped(
+    rx: &mpsc::Receiver<Request>,
+    stats: &ServeStats,
+    stop: &AtomicBool,
+) {
+    loop {
+        match rx.recv_timeout(Duration::from_millis(20)) {
+            Ok(req) => {
+                dec_queue_depth(stats);
+                let error = ServeError::new(
+                    ErrCode::EngineDown,
+                    "engine down: restart cap exhausted",
+                );
+                let _ =
+                    req.reply.send(Event::Error { id: req.id, error });
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_caps_and_is_deterministic() {
+        let a1 = backoff(50, 1, "m");
+        let a2 = backoff(50, 2, "m");
+        let a5 = backoff(50, 12, "m");
+        assert!(a1 >= Duration::from_millis(50));
+        assert!(a2 >= Duration::from_millis(100));
+        // cap: 2 s base + at most half jitter
+        assert!(a5 <= Duration::from_millis(3_000));
+        assert_eq!(backoff(50, 3, "m"), backoff(50, 3, "m"));
+        // different names jitter differently (overwhelmingly likely)
+        let _ = backoff(50, 3, "other");
+    }
+
+    #[test]
+    fn inflight_delivers_exactly_one_terminal_event() {
+        let inf = Inflight::default();
+        let (tx, rx) = mpsc::channel();
+        let req_tx = tx.clone();
+        drop(tx);
+        let req = Request {
+            id: 9,
+            prompt: vec![1],
+            max_new: 1,
+            sampling: Default::default(),
+            stop_tokens: Vec::new(),
+            stream: false,
+            spec_k: None,
+            deadline: None,
+            enqueued: Instant::now(),
+            reply: req_tx,
+        };
+        inf.register(&req);
+        assert_eq!(inf.len(), 1);
+        inf.fail(9, ErrCode::Internal, "boom");
+        inf.fail(9, ErrCode::Internal, "boom again");
+        inf.done(
+            9,
+            Reply {
+                id: 9,
+                tokens: Vec::new(),
+                finish_reason: crate::serve::FinishReason::Stop,
+                model: String::new(),
+                spec: None,
+                kv: None,
+                queue_ms: 0.0,
+                prefill_ms: 0.0,
+                decode_ms: 0.0,
+            },
+        );
+        let mut terminals = 0;
+        drop(req); // drop the request's sender so the channel closes
+        while let Ok(ev) = rx.recv_timeout(Duration::from_millis(200)) {
+            match ev {
+                Event::Done(_) | Event::Error { .. } => terminals += 1,
+                Event::Token { .. } => {}
+            }
+        }
+        assert_eq!(terminals, 1, "ledger must dedupe terminal events");
+    }
+
+    #[test]
+    fn fail_all_distinguishes_started_from_pending() {
+        let inf = Inflight::default();
+        let (tx1, rx1) = mpsc::channel();
+        let (tx2, rx2) = mpsc::channel();
+        let mk = |id, tx: &mpsc::Sender<Event>| Request {
+            id,
+            prompt: vec![1],
+            max_new: 1,
+            sampling: Default::default(),
+            stop_tokens: Vec::new(),
+            stream: true,
+            spec_k: None,
+            deadline: None,
+            enqueued: Instant::now(),
+            reply: tx.clone(),
+        };
+        inf.register(&mk(1, &tx1));
+        inf.register(&mk(2, &tx2));
+        inf.mark_started(1);
+        let n = inf.fail_all(ErrCode::EngineRestarting, "panicked");
+        assert_eq!(n, 2);
+        let e1 = match rx1.recv().unwrap() {
+            Event::Error { error, .. } => error,
+            other => panic!("want error, got {other:?}"),
+        };
+        let e2 = match rx2.recv().unwrap() {
+            Event::Error { error, .. } => error,
+            other => panic!("want error, got {other:?}"),
+        };
+        assert!(e1.started && !e1.retryable, "mid-stream: no retry");
+        assert_eq!(e1.code, ErrCode::Interrupted);
+        assert!(!e2.started && e2.retryable, "pre-start: retryable");
+        assert_eq!(e2.code, ErrCode::EngineRestarting);
+    }
+}
