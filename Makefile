@@ -5,7 +5,8 @@
 CARGO ?= cargo
 
 .PHONY: build test fmt check bench bench-serve bench-produce \
-	bench-spec bench-kv bench-chaos serve-smoke spec-smoke chaos
+	bench-spec bench-kv bench-chaos bench-fleet serve-smoke spec-smoke \
+	fleet-smoke chaos
 
 build:
 	$(CARGO) build --release
@@ -85,6 +86,23 @@ chaos:
 # BENCH_serve.json next to the serve_throughput rows.
 bench-chaos:
 	$(CARGO) bench --bench chaos_recovery --features chaos
+
+# Fleet capacity trajectory: open-loop arrival-scheduled load over
+# real TCP against a routed fleet (dense parent + cold sealed-70%
+# canary) at sweeping rates; records p50/p95/p99 from the scheduled
+# arrival, the saturation knee, cold-wake latency, and parity across
+# an idle-unload/re-wake cycle. Merges section "fleet*" rows into
+# BENCH_serve.json next to the serve_throughput and chaos rows.
+bench-fleet:
+	$(CARGO) bench --bench fleet_load
+
+# Fleet-serving smoke (artifact-backed): sealed 70%-pruned variant
+# registered cold from a .mosaic file behind a weighted canary route;
+# asserts cold spawn on first request, route echo on the wire, and
+# byte-identical output across one idle-unload/re-wake cycle. Wired
+# into pytest via python/tests/test_fleet_smoke.py.
+fleet-smoke:
+	$(CARGO) run --release --example fleet_smoke
 
 # Model-production perf trajectory: sequential whole-model pruning vs
 # the streaming layer-parallel pipeline at 1/2/4/8 workers; emits

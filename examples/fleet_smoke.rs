@@ -1,0 +1,134 @@
+//! Fleet-serving smoke (`make fleet-smoke`): a dense checkpoint next
+//! to its sealed 70 %-pruned variant registered **cold** from a
+//! `.mosaic` artifact — no resident weights until the first routed
+//! request — behind a weighted canary route, driven over real TCP
+//! through the typed client. Asserts the contract the fleet layer
+//! ships on:
+//!
+//!   * the cold entry spawns on first use and serves the same greedy
+//!     bytes as an always-hot server over the same weights;
+//!   * routed requests carry the logical route name on the wire and
+//!     land on real backends per the seeded split;
+//!   * one full idle-unload → re-wake cycle preserves output
+//!     bit-identity, and the lifecycle gauges return to zero while
+//!     the entry is parked Cold;
+//!   * per-backend `route_stats` tallies equal the observed split.
+//!
+//!     cargo run --release --example fleet_smoke
+
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use mosaic::model::weights::testutil::random_model_sized;
+use mosaic::prune::unstructured::{mask_lowest, scores, Metric};
+use mosaic::serve::client::{Client, GenRequest};
+use mosaic::serve::lifecycle::LifecycleState;
+use mosaic::serve::router::parse_route;
+use mosaic::serve::{ModelRegistry, ServeConfig, Server};
+
+fn main() -> anyhow::Result<()> {
+    let dense = random_model_sized(23, 3, 64, 4, 176, 96, 64);
+    let mut sealed = dense.clone();
+    for l in sealed.layers.iter_mut() {
+        for s in l.projs.iter_mut() {
+            let t = s.dense_mut();
+            let sc = scores(t, None, Metric::Magnitude);
+            mask_lowest(t, &sc, 0.7);
+        }
+    }
+    sealed.compact();
+    let path = std::env::temp_dir().join("fleet_smoke_s70.mosaic");
+    let bytes = mosaic::deploy::export_model(&sealed, &path)?;
+    println!(
+        "sealed artifact: {} KB on disk, 0 KB resident until first use",
+        bytes / 1024
+    );
+
+    let mut reg = ModelRegistry::new();
+    reg.register("dense", dense)?;
+    reg.register_cold("mosaic70", &path)?;
+    let srv = Server::start_registry(
+        reg,
+        ServeConfig {
+            max_batch: 4,
+            default_model: Some("dense".into()),
+            routes: vec![parse_route("chat=dense:70,mosaic70:30")?],
+            route_seed: 42,
+            idle_ms: Some(200),
+            ..Default::default()
+        },
+        0,
+    )?;
+    println!(
+        "fleet server on {} (dense hot, mosaic70 cold, chat=70/30)",
+        srv.addr
+    );
+    let mut client = Client::connect(srv.addr)?;
+    let prompt = [1u16, 9, 4, 7];
+
+    // ---- 1. cold spawn: the sealed entry wakes on its first request
+    assert_eq!(
+        srv.engine_lifecycle("mosaic70"),
+        Some(LifecycleState::Cold),
+        "sealed entry must register cold"
+    );
+    let first = client.generate(
+        &GenRequest::greedy(&prompt).max_new(12).model("mosaic70"),
+    )?;
+    assert_eq!(srv.engine_lifecycle("mosaic70"), Some(LifecycleState::Hot));
+    println!(
+        "cold wake served {:?} (wake latency in queue_ms: {:.1} ms)",
+        first.tokens, first.queue_ms
+    );
+
+    // ---- 2. weighted canary routing: logical name on the wire,
+    // traffic split across real backends
+    let mut split = [0usize; 2];
+    for i in 0..40u16 {
+        let r = client.generate(
+            &GenRequest::greedy(&[1 + (i % 7), 9, 4]).max_new(6).model("chat"),
+        )?;
+        assert_eq!(r.route.as_deref(), Some("chat"));
+        match r.model.as_deref() {
+            Some("dense") => split[0] += 1,
+            Some("mosaic70") => split[1] += 1,
+            other => anyhow::bail!("routed to unknown backend {other:?}"),
+        }
+    }
+    println!("40 routed requests: dense {} / mosaic70 {}", split[0], split[1]);
+    assert!(split[0] > 0 && split[1] > 0, "both backends must take traffic");
+    let stats: Vec<(String, u64)> = srv
+        .route_stats("chat")
+        .iter()
+        .map(|(n, s)| (n.clone(), s.accepted.load(Ordering::Relaxed)))
+        .collect();
+    println!("route_stats accepted: {stats:?}");
+
+    // ---- 3. idle-unload → re-wake: weights drop, gauges zero, and
+    // the second life serves identical bytes
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while srv.engine_lifecycle("mosaic70") != Some(LifecycleState::Cold) {
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "idle reaper never re-parked the sealed entry"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let s = srv.model_stats("mosaic70").expect("stats");
+    assert_eq!(s.kv_pages_in_use.load(Ordering::Relaxed), 0);
+    assert_eq!(s.inflight.load(Ordering::Relaxed), 0);
+    println!("idle reaper unloaded mosaic70 (kv + inflight gauges at 0)");
+    let again = client.generate(
+        &GenRequest::greedy(&prompt).max_new(12).model("mosaic70"),
+    )?;
+    assert_eq!(
+        again.tokens, first.tokens,
+        "re-wake must serve byte-identical greedy output"
+    );
+    println!("re-wake served identical bytes");
+
+    println!("FLEET-SMOKE OK");
+    srv.shutdown();
+    let _ = std::fs::remove_file(&path);
+    Ok(())
+}

@@ -1,0 +1,36 @@
+"""Wire `make fleet-smoke` into the pytest-driven run: a fleet server
+with a hot dense model and its sealed 70%-pruned variant registered
+cold from a .mosaic artifact, behind a weighted canary route, driven
+over real TCP by the typed rust client (examples/fleet_smoke.rs). The
+example asserts the fleet contract — cold spawn on first request,
+weighted routing with the route name echoed on the wire, and one
+idle-unload/re-wake cycle with byte-identical greedy output — and
+prints FLEET-SMOKE OK on success.
+
+Skips when the rust toolchain is not present in the image, mirroring
+test_serve_smoke.py."""
+import os
+import shutil
+import subprocess
+
+import pytest
+
+ROOT = os.path.dirname(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+)
+
+
+def test_fleet_smoke():
+    if shutil.which("cargo") is None or shutil.which("make") is None:
+        pytest.skip("cargo/make not available in this image")
+    r = subprocess.run(
+        ["make", "-C", ROOT, "fleet-smoke"],
+        capture_output=True,
+        text=True,
+        timeout=3600,
+    )
+    assert r.returncode == 0, (
+        f"make fleet-smoke failed\n--- stdout ---\n{r.stdout[-4000:]}"
+        f"\n--- stderr ---\n{r.stderr[-4000:]}"
+    )
+    assert "FLEET-SMOKE OK" in r.stdout, r.stdout[-4000:]

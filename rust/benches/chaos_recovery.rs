@@ -125,6 +125,7 @@ fn drive_raw(
             stream: false,
             spec_k: None,
             deadline: None,
+            route: None,
             enqueued: Instant::now(),
             reply: rtx,
         };

@@ -1,0 +1,279 @@
+//! Fleet capacity under open-loop load (`make bench-fleet`). An
+//! arrival-scheduled request stream — NOT closed-loop: the schedule
+//! never waits for completions, so queueing delay shows up in the
+//! latency percentiles instead of silently throttling the offered
+//! rate — drives a routed fleet (dense parent + cold sealed-70
+//! canary) over real TCP at sweeping rates:
+//!
+//! * per rate: completed/offered, p50/p95/p99 measured from the
+//!   *scheduled* arrival instant, and delivered tok/s;
+//! * the **saturation knee**: the first offered rate where completions
+//!   drop below 90% or p99 blows past 20x the lowest-rate baseline;
+//! * scale-to-zero costs stay visible: the canary backend starts
+//!   Cold (its first probe's `queue_ms` is the wake latency) and must
+//!   serve bit-identical greedy output after the post-sweep
+//!   idle-unload → re-wake cycle.
+//!
+//! Rows merge into `BENCH_serve.json` (section "fleet*"), alongside
+//! the serve_throughput and chaos rows, for cross-PR perf tracking.
+
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+use mosaic::bench_support::{header, rec, Bench};
+use mosaic::data::trace::{generate, percentiles, Arrival, TraceConfig};
+use mosaic::model::weights::testutil::random_model_sized;
+use mosaic::model::ModelWeights;
+use mosaic::prune::unstructured::{mask_lowest, scores, Metric};
+use mosaic::serve::client::{Client, GenRequest};
+use mosaic::serve::lifecycle::LifecycleState;
+use mosaic::serve::router::parse_route;
+use mosaic::serve::{ModelRegistry, ServeConfig, Server};
+use mosaic::util::json::Json;
+
+const ROUTE: &str = "chat";
+const PROBE: [u16; 4] = [1, 9, 4, 7];
+
+fn dense() -> ModelWeights {
+    random_model_sized(9, 2, 64, 4, 176, 128, 64)
+}
+
+fn sealed70(dense: &ModelWeights) -> ModelWeights {
+    let mut m = dense.clone();
+    for l in m.layers.iter_mut() {
+        for s in l.projs.iter_mut() {
+            let t = s.dense_mut();
+            let sc = scores(t, None, Metric::Magnitude);
+            mask_lowest(t, &sc, 0.7);
+        }
+    }
+    m.compact();
+    m
+}
+
+/// One fixed greedy request addressed directly at `model`; returns
+/// the token stream (parity checks) and queue_ms (wake latency when
+/// the backend was Cold).
+fn probe(addr: SocketAddr, model: &str) -> (Vec<u16>, f64) {
+    let mut c = Client::connect(addr).expect("connect");
+    let r = c
+        .generate(&GenRequest::greedy(&PROBE).max_new(12).model(model))
+        .expect("probe");
+    (r.tokens, r.queue_ms)
+}
+
+struct RateOut {
+    offered: usize,
+    completed: usize,
+    p50: f64,
+    p95: f64,
+    p99: f64,
+    tok_per_s: f64,
+}
+
+/// Open-loop drive at one offered rate: every request has its own
+/// pre-connected client (connection setup outside the measured
+/// window) and fires at its scheduled arrival regardless of how the
+/// server is keeping up. Latency is measured from the *scheduled*
+/// instant, so dispatch lag and queueing both count.
+fn drive(addr: SocketAddr, rate: f64, n: usize) -> RateOut {
+    let trace = generate(&TraceConfig {
+        arrival: Arrival::Poisson,
+        rate,
+        n_requests: n,
+        prompt_len_mean: 8,
+        prompt_len_max: 16,
+        max_new: 12,
+        vocab: 120,
+        seed: 42,
+    });
+    let clients: Vec<Client> = (0..n)
+        .map(|_| Client::connect(addr).expect("connect"))
+        .collect();
+    let t0 = Instant::now();
+    let handles: Vec<_> = clients
+        .into_iter()
+        .zip(trace)
+        .map(|(mut c, item)| {
+            std::thread::spawn(move || {
+                let sched = t0 + Duration::from_secs_f64(item.at_s);
+                let now = Instant::now();
+                if sched > now {
+                    std::thread::sleep(sched - now);
+                }
+                let r = c.generate(
+                    &GenRequest::greedy(&item.prompt)
+                        .max_new(item.max_new)
+                        .model(ROUTE),
+                );
+                let lat_ms = Instant::now()
+                    .saturating_duration_since(sched)
+                    .as_secs_f64()
+                    * 1e3;
+                r.ok().map(|r| (lat_ms, r.tokens.len()))
+            })
+        })
+        .collect();
+    let mut lats = Vec::new();
+    let mut tokens = 0usize;
+    for h in handles {
+        if let Some((lat, t)) = h.join().expect("load worker") {
+            lats.push(lat);
+            tokens += t;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let completed = lats.len();
+    let (p50, p95, p99) = percentiles(lats);
+    RateOut {
+        offered: n,
+        completed,
+        p50,
+        p95,
+        p99,
+        tok_per_s: tokens as f64 / wall,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut b =
+        Bench::new("fleet_load", "fleet capacity under open-loop load");
+    let d = dense();
+    let s70 = sealed70(&d);
+    let path = std::env::temp_dir().join("fleet_load_s70.mosaic");
+    mosaic::deploy::export_model(&s70, &path)?;
+    let mut reg = ModelRegistry::new();
+    reg.register("dense", d)?;
+    reg.register_cold("s70", &path)?;
+    let srv = Server::start_registry(
+        reg,
+        ServeConfig {
+            max_batch: 8,
+            max_queue: 1024,
+            default_model: Some("dense".into()),
+            routes: vec![parse_route("chat=dense:70,s70:30")?],
+            route_seed: 42,
+            idle_ms: Some(300),
+            ..Default::default()
+        },
+        0,
+    )?;
+    let mut rows: Vec<Json> = Vec::new();
+
+    // ---- cold-wake probes: the canary's first queue_ms IS the wake
+    // latency (artifact load + spawn); these token streams are the
+    // parity reference for the post-sweep re-wake check
+    println!("— cold-wake probes —");
+    header(&["backend", "queue-ms"]);
+    let mut pre = Vec::new();
+    for backend in ["dense", "s70"] {
+        let (tokens, queue_ms) = probe(srv.addr, backend);
+        println!("{backend:>12}{queue_ms:>12.2}");
+        rows.push(rec(&[
+            ("section", Json::str("fleet_wake")),
+            ("backend", Json::str(backend)),
+            ("queue_ms", Json::num(queue_ms)),
+        ]));
+        pre.push((backend, tokens));
+    }
+
+    // ---- the rate sweep
+    let (rates, n) = if Bench::fast() {
+        (vec![100.0, 800.0], 24)
+    } else {
+        (vec![50.0, 200.0, 800.0, 2000.0], 96)
+    };
+    println!("\n— open-loop sweep ({n} requests/rate) —");
+    header(&["rate/s", "done", "p50-ms", "p95-ms", "p99-ms", "tok/s"]);
+    let mut knee: Option<f64> = None;
+    let mut base_p99: Option<f64> = None;
+    for rate in rates {
+        let out = drive(srv.addr, rate, n);
+        println!(
+            "{rate:>12.0}{:>12}{:>12.2}{:>12.2}{:>12.2}{:>12.0}",
+            out.completed, out.p50, out.p95, out.p99, out.tok_per_s
+        );
+        let saturated = out.completed * 10 < out.offered * 9
+            || base_p99.is_some_and(|b| out.p99 > 20.0 * b.max(0.1));
+        if base_p99.is_none() {
+            base_p99 = Some(out.p99);
+        }
+        if saturated && knee.is_none() {
+            knee = Some(rate);
+        }
+        rows.push(rec(&[
+            ("section", Json::str("fleet")),
+            ("rate_offered", Json::num(rate)),
+            ("offered", Json::num(out.offered as f64)),
+            ("completed", Json::num(out.completed as f64)),
+            ("p50_ms", Json::num(out.p50)),
+            ("p95_ms", Json::num(out.p95)),
+            ("p99_ms", Json::num(out.p99)),
+            ("tok_per_s", Json::num(out.tok_per_s)),
+        ]));
+    }
+    match knee {
+        Some(r) => println!("  saturation knee at {r:.0} req/s"),
+        None => println!("  no knee inside the swept range"),
+    }
+
+    // ---- idle-unload → re-wake parity: wait for the canary to
+    // re-park Cold, probe both backends again, outputs must be
+    // byte-identical to the pre-sweep reference
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while srv.engine_lifecycle("s70") != Some(LifecycleState::Cold) {
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "s70 never re-parked Cold after the sweep"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    for (backend, want) in &pre {
+        let (tokens, _) = probe(srv.addr, backend);
+        anyhow::ensure!(
+            tokens == *want,
+            "{backend}: output diverged across the sweep/unload cycle"
+        );
+    }
+    println!("  parity: pre/post-sweep outputs identical");
+    rows.push(rec(&[
+        ("section", Json::str("fleet_knee")),
+        ("knee_rate", knee.map_or(Json::Null, Json::num)),
+        ("parity", Json::Bool(true)),
+    ]));
+    for r in &rows {
+        b.row("fleet", r.clone());
+    }
+    srv.shutdown();
+    let _ = std::fs::remove_file(&path);
+
+    // ---- merge into BENCH_serve.json: replace prior fleet* rows,
+    // keep everything the other serve benches wrote
+    let mut kept: Vec<Json> = Vec::new();
+    let mut out = Json::obj();
+    out.set("bench", Json::str("serve_throughput"));
+    if let Ok(prev) = std::fs::read_to_string("BENCH_serve.json") {
+        if let Ok(j) = Json::parse(prev.trim()) {
+            if let Some(name) = j.get("bench").and_then(|v| v.as_str()) {
+                out.set("bench", Json::str(name));
+            }
+            if let Some(nr) = j.get("n_requests") {
+                out.set("n_requests", nr.clone());
+            }
+            if let Some(rs) = j.get("rows").and_then(|r| r.as_arr()) {
+                kept.extend(rs.iter().cloned().filter(|r| {
+                    !r.get("section")
+                        .and_then(|s| s.as_str())
+                        .is_some_and(|s| s.starts_with("fleet"))
+                }));
+            }
+        }
+    }
+    kept.extend(rows);
+    out.set("rows", Json::Arr(kept));
+    std::fs::write("BENCH_serve.json", out.to_string())?;
+    println!("\n[merged fleet rows into BENCH_serve.json]");
+
+    b.finish();
+    Ok(())
+}

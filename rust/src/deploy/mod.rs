@@ -483,6 +483,31 @@ pub fn load_encoded(path: &std::path::Path) -> Result<ModelWeights> {
     })
 }
 
+/// Read ONLY the header of a deployment file and return its
+/// [`ModelConfig`]. This is the cheap metadata probe scale-to-zero
+/// registry entries use at registration time (vocab and context for
+/// admission validation) — no blob decode, no weight residency; the
+/// full [`load_encoded`] runs later, at first wake.
+pub fn load_config(path: &std::path::Path) -> Result<ModelConfig> {
+    use std::io::Read;
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut len8 = [0u8; 8];
+    f.read_exact(&mut len8).context("deploy file truncated")?;
+    let hlen = u64::from_le_bytes(len8) as usize;
+    anyhow::ensure!(hlen < 1 << 30, "deploy header length implausible");
+    let mut hbytes = vec![0u8; hlen];
+    f.read_exact(&mut hbytes).context("deploy header truncated")?;
+    let header = std::str::from_utf8(&hbytes)
+        .map_err(|_| anyhow::anyhow!("deploy header not utf8"))?;
+    let j = Json::parse(header)
+        .map_err(|e| anyhow::anyhow!("deploy header: {e}"))?;
+    ModelConfig::from_json(
+        j.get("config")
+            .context("deploy header missing config (v1 file? re-export)")?,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -634,6 +659,22 @@ mod tests {
         // embed + per-layer (2 norms + 7 projs) + final_norm + lm_head
         assert_eq!(tensors.len(), 1 + m.cfg.n_layers * 9 + 2);
         assert!(j.get("config").is_some());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_config_reads_header_without_blobs() {
+        let m = random_model(405);
+        let path = std::env::temp_dir().join("mosaic_load_config.bin");
+        export_model(&m, &path).unwrap();
+        let cfg = load_config(&path).unwrap();
+        assert_eq!(cfg.vocab, m.cfg.vocab);
+        assert_eq!(cfg.n_layers, m.cfg.n_layers);
+        assert_eq!(cfg.ctx, m.cfg.ctx);
+        // truncating below the header must fail cleanly, not panic
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..6]).unwrap();
+        assert!(load_config(&path).is_err());
         std::fs::remove_file(&path).ok();
     }
 

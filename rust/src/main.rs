@@ -9,6 +9,9 @@
 //!   mosaic finetune --model tl31 --p 0.8 [--steps 80]
 //!   mosaic deploy  --model tl1_7 --p 0.6 --platform P4
 //!   mosaic serve   --model tl1_7
+//!                  [--cold name=file.mosaic[,name=file...]]
+//!                  [--route chat=dense:70,sealed70:30[;log=...]]
+//!                  [--idle-ms 0] [--route-seed 0]
 //!                  [--models dense,composite@0.6,unstructured@0.7,
 //!                            name=path.mosaic,...]   (registry list)
 //!                  [--spec target:draft@k[,name=target:draft@k...]]
@@ -288,6 +291,13 @@ fn cmd_deploy(args: &Args) -> Result<()> {
 /// default name is the spec string itself, so requests route to it
 /// with `"model": "dense:sealed70@4"` (or via the `"spec"` request
 /// field on the target model).
+///
+/// Fleet flags: `--cold name=file.mosaic` registers sealed artifacts
+/// **cold** (no resident weights; the first request wakes them), and
+/// `--idle-ms N` unloads a woken cold entry after N ms without work
+/// (0 = never). `--route log=be:w,...` adds weighted logical routes
+/// (';'-separated), picked per-request by a PCG32 stream seeded from
+/// `--route-seed` — same routes + seed replay the same traffic split.
 fn cmd_serve(args: &Args) -> Result<()> {
     use mosaic::prune::{plan, CompositeOpts, ProduceOpts, PrunerKind};
     use mosaic::serve::{ModelRegistry, ServeConfig, Server};
@@ -424,6 +434,41 @@ fn cmd_serve(args: &Args) -> Result<()> {
              '{target}')"
         );
     }
+    // scale-to-zero entries: sealed artifacts registered by path only
+    for spec in args
+        .get("cold", "")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+    {
+        let (name, path_s) = spec.split_once('=').ok_or_else(|| {
+            anyhow::anyhow!(
+                "bad --cold entry '{spec}' (want name=file.mosaic)"
+            )
+        })?;
+        registry.register_cold(name, std::path::Path::new(path_s))?;
+        println!(
+            "registered '{name}': cold sealed artifact {path_s} \
+             (0 KB resident until first request)"
+        );
+    }
+    // weighted logical routes, ';'-separated so backend lists can use
+    // commas: --route chat=dense:70,sealed70:30;batch=sealed70:100
+    let routes = args
+        .get("route", "")
+        .split(';')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(mosaic::serve::router::parse_route)
+        .collect::<Result<Vec<_>>>()?;
+    for r in &routes {
+        let split: Vec<String> = r
+            .backends
+            .iter()
+            .map(|(b, w)| format!("{b}:{w}"))
+            .collect();
+        println!("route '{}' → {}", r.name, split.join(","));
+    }
     let default_model = {
         let d = args.get("default-model", "");
         (!d.is_empty()).then_some(d)
@@ -448,6 +493,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
         drain_ms: args.usize("drain-ms", 5_000) as u64,
         max_restarts: args.usize("max-restarts", 3) as u32,
+        // --idle-ms N re-parks a woken cold entry after N ms without
+        // work (weights + KV drop, sealed file stays); 0 = never
+        idle_ms: {
+            let ms = args.usize("idle-ms", 0) as u64;
+            (ms > 0).then_some(ms)
+        },
+        routes,
+        route_seed: args.usize("route-seed", 0) as u64,
         ..Default::default()
     };
     let port = args.usize("port", 7171) as u16;

@@ -173,6 +173,9 @@ pub struct GenReply {
     pub spec: Option<SpecUsage>,
     /// KV page footprint + prefix-cache hit length (paged engines).
     pub kv: Option<KvUsage>,
+    /// Logical route that picked the serving backend (weighted fleet
+    /// routing); `None` for requests that named a model directly.
+    pub route: Option<String>,
     pub queue_ms: f64,
     pub prefill_ms: f64,
     pub decode_ms: f64,
@@ -430,6 +433,7 @@ fn parse_reply(j: &Json) -> Result<GenReply, String> {
         model: j.get("model").and_then(|v| v.as_str()).map(String::from),
         spec,
         kv,
+        route: j.get("route").and_then(|v| v.as_str()).map(String::from),
         queue_ms: num("queue_ms")?,
         prefill_ms: num("prefill_ms")?,
         decode_ms: num("decode_ms")?,

@@ -37,15 +37,20 @@ pub const CP_SPEC_ADMIT: &str = "spec.admit";
 pub const CP_SPEC_DRAFT: &str = "spec.draft";
 /// Checkpoint: spec engine, before the fused verify pass.
 pub const CP_SPEC_VERIFY: &str = "spec.verify";
+/// Checkpoint: supervisor, cold engine about to load its sealed
+/// artifact (`Panic` exercises the wake panic boundary, `Stall` holds
+/// the engine mid-spawn for shutdown/wake race tests).
+pub const CP_LIFECYCLE_WAKE: &str = "lifecycle.wake";
 
 /// Every named checkpoint (the chaos suite sweeps all of them).
-pub const CHECKPOINTS: [&str; 6] = [
+pub const CHECKPOINTS: [&str; 7] = [
     CP_ADMIT,
     CP_COMMIT,
     CP_STEP,
     CP_SPEC_ADMIT,
     CP_SPEC_DRAFT,
     CP_SPEC_VERIFY,
+    CP_LIFECYCLE_WAKE,
 ];
 
 /// What a checkpoint hit does.

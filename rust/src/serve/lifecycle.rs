@@ -1,0 +1,151 @@
+//! Engine lifecycle for scale-to-zero serving.
+//!
+//! A registry entry backed by a sealed `.mosaic` artifact starts
+//! **Cold**: the supervisor thread exists (it owns the request queue),
+//! but no weights are resident and no KV pool is allocated. The first
+//! routed request flips the cell to **Waking** — the supervisor loads
+//! the artifact inside its panic boundary (wake latency lands in the
+//! request's `queue_ms`, since the request simply waits in the queue)
+//! and the engine loop runs **Hot**. When a hot sealed engine sees no
+//! work for `ServeConfig::idle_ms`, the loop returns, weights and KV
+//! pages drop, and the supervisor re-parks the entry Cold — the sealed
+//! file on disk makes the next wake cheap. A failed wake (artifact
+//! missing/corrupt) or an exhausted restart cap is terminal: **Down**.
+//!
+//! ```text
+//!          first routed request          load ok
+//!   Cold ───────────────────────▶ Waking ───────▶ Hot
+//!    ▲                              │              │
+//!    │        idle past idle_ms     │ load failed  │ panic cap /
+//!    └──────────────────────────────┼──────────────┤ shutdown
+//!                                   ▼              ▼
+//!                                  Down           Down
+//! ```
+//!
+//! The cell itself is a lock-free `AtomicU8`, mirroring
+//! [`super::supervisor::Health`]: admission reads it on the hot path,
+//! only the supervisor (and the admission CAS in [`Lifecycle::wake`])
+//! write it. Dense/spec entries are registered **Hot** and never leave
+//! that state except through shutdown.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Where an engine is in the scale-to-zero state machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LifecycleState {
+    /// Sealed artifact on disk, no resident weights; the supervisor is
+    /// parked waiting for the first routed request.
+    Cold,
+    /// A request arrived; the supervisor is loading the artifact.
+    /// Requests queue behind the wake (latency shows up as queue_ms).
+    Waking,
+    /// Weights resident, engine loop serving.
+    Hot,
+    /// Terminal: wake failed, restart cap exhausted, or shut down.
+    Down,
+}
+
+impl LifecycleState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LifecycleState::Cold => "cold",
+            LifecycleState::Waking => "waking",
+            LifecycleState::Hot => "hot",
+            LifecycleState::Down => "down",
+        }
+    }
+}
+
+/// Shared lock-free lifecycle cell (one per engine entry).
+pub struct Lifecycle(AtomicU8);
+
+const COLD: u8 = 0;
+const WAKING: u8 = 1;
+const HOT: u8 = 2;
+const DOWN: u8 = 3;
+
+impl Lifecycle {
+    pub fn new(initial: LifecycleState) -> Lifecycle {
+        let l = Lifecycle(AtomicU8::new(COLD));
+        l.set(initial);
+        l
+    }
+
+    pub fn state(&self) -> LifecycleState {
+        match self.0.load(Ordering::Acquire) {
+            COLD => LifecycleState::Cold,
+            WAKING => LifecycleState::Waking,
+            HOT => LifecycleState::Hot,
+            _ => LifecycleState::Down,
+        }
+    }
+
+    /// Admission-side wake signal: CAS Cold → Waking. Returns true if
+    /// THIS caller performed the transition (first request wins; the
+    /// supervisor also proceeds on a non-empty queue, so a lost race
+    /// never strands a request).
+    pub fn wake(&self) -> bool {
+        self.0
+            .compare_exchange(
+                COLD,
+                WAKING,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            )
+            .is_ok()
+    }
+
+    /// Supervisor-side transitions (park, load-complete, unload, fail).
+    pub(crate) fn set(&self, s: LifecycleState) {
+        let v = match s {
+            LifecycleState::Cold => COLD,
+            LifecycleState::Waking => WAKING,
+            LifecycleState::Hot => HOT,
+            LifecycleState::Down => DOWN,
+        };
+        self.0.store(v, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wake_cas_fires_once_from_cold_only() {
+        let l = Lifecycle::new(LifecycleState::Cold);
+        assert_eq!(l.state(), LifecycleState::Cold);
+        assert!(l.wake(), "first wake performs the transition");
+        assert_eq!(l.state(), LifecycleState::Waking);
+        assert!(!l.wake(), "second wake loses the race");
+        l.set(LifecycleState::Hot);
+        assert!(!l.wake(), "hot engines are never re-woken");
+        assert_eq!(l.state(), LifecycleState::Hot);
+    }
+
+    #[test]
+    fn full_cycle_round_trips() {
+        let l = Lifecycle::new(LifecycleState::Cold);
+        for s in [
+            LifecycleState::Waking,
+            LifecycleState::Hot,
+            LifecycleState::Cold,
+            LifecycleState::Down,
+        ] {
+            l.set(s);
+            assert_eq!(l.state(), s);
+            assert_eq!(l.state().name().is_empty(), false);
+        }
+        // Down is terminal for wake()
+        assert!(!l.wake());
+        assert_eq!(l.state(), LifecycleState::Down);
+    }
+
+    #[test]
+    fn hot_is_the_dense_default() {
+        let l = Lifecycle::new(LifecycleState::Hot);
+        assert_eq!(l.state(), LifecycleState::Hot);
+        assert!(!l.wake());
+    }
+}

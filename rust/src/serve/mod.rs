@@ -41,6 +41,16 @@
 //! [`fault`] is the deterministic chaos harness that attacks it.
 //! Failure semantics (deadlines, drain, typed wire errors) are
 //! documented on [`ServeError`] and in ARCHITECTURE.md §Serving.
+//!
+//! The fleet layer on top: [`ModelRegistry::register_cold`] registers
+//! a sealed `.mosaic` artifact with **no resident weights** — the
+//! supervisor parks the entry Cold and loads it on the first routed
+//! request ([`lifecycle`]), unloading again after
+//! [`ServeConfig::idle_ms`] of idle. [`router`] adds weighted logical
+//! routes (`--route chat=dense:70,sealed70:30`) picked by a seeded
+//! per-route PCG32, so a pruned canary takes a deterministic slice of
+//! traffic and [`Server::route_stats`] compares the backends
+//! side-by-side.
 
 // serving is the crash-containment layer: a stray unwrap here turns a
 // recoverable request error into an engine panic, so non-test code
@@ -48,7 +58,9 @@
 #![deny(clippy::unwrap_used)]
 
 pub mod client;
+pub mod lifecycle;
 pub mod protocol;
+pub mod router;
 pub mod spec;
 pub mod supervisor;
 
@@ -66,6 +78,7 @@ pub mod fault {
     pub const CP_SPEC_ADMIT: &str = "spec.admit";
     pub const CP_SPEC_DRAFT: &str = "spec.draft";
     pub const CP_SPEC_VERIFY: &str = "spec.verify";
+    pub const CP_LIFECYCLE_WAKE: &str = "lifecycle.wake";
 
     #[inline(always)]
     pub fn hit(_engine: &str, _point: &str) -> bool {
@@ -138,6 +151,18 @@ pub struct ServeConfig {
     /// Base respawn backoff; doubles per consecutive restart (capped
     /// at 2 s) plus deterministic per-engine jitter.
     pub restart_backoff_ms: u64,
+    /// Scale-to-zero idle reaper: a cold-capable (sealed-artifact)
+    /// engine that sees no work for this long drops its weights and KV
+    /// pages and re-parks Cold. `None` = never unload. Hot entries
+    /// (in-memory weights, spec pairs) are unaffected.
+    pub idle_ms: Option<u64>,
+    /// Weighted logical routes resolved at admission before model
+    /// lookup ([`router::RouteDef`]). Route names share the namespace
+    /// with registry entries and must not collide.
+    pub routes: Vec<router::RouteDef>,
+    /// Seed for the per-route deterministic PCG32 pick streams (same
+    /// routes + same seed → same backend sequence).
+    pub route_seed: u64,
 }
 
 impl Default for ServeConfig {
@@ -155,6 +180,9 @@ impl Default for ServeConfig {
             conn_timeout_ms: 30_000,
             max_restarts: 3,
             restart_backoff_ms: 50,
+            idle_ms: None,
+            routes: Vec::new(),
+            route_seed: 0,
         }
     }
 }
@@ -218,6 +246,10 @@ pub struct Request {
     /// `deadline_ms` or the server default). Checked at the queue head
     /// and once per decode iteration.
     pub deadline: Option<Instant>,
+    /// Logical route name that selected this request's backend (set at
+    /// admission by the [`router::RouterTable`]; `None` for requests
+    /// that addressed an entry directly). Echoed on the v1 reply.
+    pub route: Option<Arc<String>>,
     pub enqueued: Instant,
     pub reply: mpsc::Sender<Event>,
 }
@@ -235,6 +267,10 @@ pub struct Reply {
     /// Paged-KV usage for the sequence (pages resident at completion
     /// and prompt positions served from the prefix cache).
     pub kv: Option<KvUsage>,
+    /// Logical route that picked this backend (`None` when the request
+    /// addressed the entry directly). v1-only on the wire; v0 replies
+    /// stay byte-frozen.
+    pub route: Option<String>,
     pub queue_ms: f64,
     pub prefill_ms: f64,
     pub decode_ms: f64,
@@ -441,6 +477,10 @@ pub struct ServeStats {
     /// requests finished with `finish_reason: deadline` (queue-head
     /// expiry and mid-decode expiry combined)
     pub deadline_hits: AtomicU64,
+    /// requests registered with the in-flight ledger and not yet
+    /// given their terminal event (gauge; the fleet suite asserts it
+    /// returns to zero across idle-unload cycles)
+    pub inflight: AtomicU64,
 }
 
 /// Decrement the queue-depth gauge without underflow (engine loops
@@ -520,6 +560,17 @@ impl SubmitSpec {
 pub struct ModelRegistry {
     models: Vec<(String, ModelWeights)>,
     specs: Vec<SpecPairDef>,
+    colds: Vec<ColdDef>,
+}
+
+/// A scale-to-zero entry: a sealed `.mosaic` artifact registered by
+/// path, with **no resident weights**. Admission only needs the vocab
+/// (read from the artifact header at registration); the supervisor
+/// loads the weights on the first routed request.
+struct ColdDef {
+    name: String,
+    path: std::path::PathBuf,
+    vocab: usize,
 }
 
 /// A registered speculative pair: `draft` proposes `k` tokens per
@@ -606,6 +657,7 @@ impl ModelRegistry {
     fn name_free(&self, name: &str) -> bool {
         self.models.iter().all(|(n, _)| n != name)
             && self.specs.iter().all(|s| s.name != name)
+            && self.colds.iter().all(|c| c.name != name)
     }
 
     /// Register a sealed variant straight from a deployment file
@@ -620,16 +672,50 @@ impl ModelRegistry {
         self.register(name, m)
     }
 
-    pub fn names(&self) -> Vec<&str> {
-        self.models.iter().map(|(n, _)| n.as_str()).collect()
+    /// Register a sealed variant **cold**: only the artifact path and
+    /// its header (vocab) are kept — no weights are loaded. The entry
+    /// starts [`lifecycle::LifecycleState::Cold`]; the first request
+    /// routed to it wakes the supervisor, which loads the file then
+    /// (wake latency lands in that request's `queue_ms`). Spec pairs
+    /// cannot reference cold entries — their weights are not resident
+    /// to share.
+    pub fn register_cold(
+        &mut self,
+        name: &str,
+        path: &std::path::Path,
+    ) -> anyhow::Result<&mut Self> {
+        anyhow::ensure!(!name.is_empty(), "model name must be non-empty");
+        anyhow::ensure!(
+            self.name_free(name),
+            "model '{name}' already registered"
+        );
+        // header-only read: validates the artifact up front and yields
+        // the vocab admission checks against, without touching a blob
+        let cfg = crate::deploy::load_config(path)?;
+        self.colds.push(ColdDef {
+            name: name.to_string(),
+            path: path.to_path_buf(),
+            vocab: cfg.vocab,
+        });
+        Ok(self)
     }
 
+    pub fn names(&self) -> Vec<&str> {
+        self.models
+            .iter()
+            .map(|(n, _)| n.as_str())
+            .chain(self.colds.iter().map(|c| c.name.as_str()))
+            .collect()
+    }
+
+    /// Registered entries that can take traffic (hot models + cold
+    /// sealed artifacts; spec pairs ride on hot models).
     pub fn len(&self) -> usize {
-        self.models.len()
+        self.models.len() + self.colds.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.models.is_empty()
+        self.models.is_empty() && self.colds.is_empty()
     }
 }
 
@@ -651,6 +737,10 @@ struct EngineEntry {
     kind: EntryKind,
     /// Supervisor-maintained health; admission rejects Down engines.
     health: Arc<supervisor::Health>,
+    /// Scale-to-zero state; admission CASes Cold → Waking on the first
+    /// request it enqueues to a cold entry. Hot (in-memory) entries
+    /// stay Hot for their whole life.
+    lifecycle: Arc<lifecycle::Lifecycle>,
 }
 
 /// Admission + routing state shared by the accept loop, every
@@ -659,6 +749,9 @@ struct EngineEntry {
 /// protocol parser only validates structure.
 struct Router {
     entries: Vec<EngineEntry>,
+    /// Weighted logical routes, resolved before entry lookup (None
+    /// when no `--route` was configured).
+    table: Option<router::RouterTable>,
     default_ix: usize,
     next_id: AtomicU64,
     default_max_new: usize,
@@ -767,7 +860,33 @@ impl Router {
                 "server shutting down",
             ));
         }
-        let routed = self.resolve(spec.model.as_deref()).map_err(bad)?;
+        // weighted routing happens BEFORE entry lookup: a "model" that
+        // names a logical route is substituted by a seeded weighted
+        // pick over its healthy backends (Down backends fail over to
+        // the surviving peers; all-down is engine_down). Requests that
+        // name an entry directly bypass the table entirely.
+        let mut route: Option<Arc<String>> = None;
+        let mut model_name = spec.model.clone();
+        if let (Some(table), Some(logical)) =
+            (&self.table, model_name.as_deref())
+        {
+            let is_down = |b: &str| {
+                self.entries
+                    .iter()
+                    .find(|e| e.name.as_str() == b)
+                    .map_or(true, |e| {
+                        e.health.state() == HealthState::Down
+                    })
+            };
+            if let Some(picked) = table.pick(logical, is_down) {
+                let (rname, backend) = picked.map_err(|m| {
+                    ServeError::new(ErrCode::EngineDown, m)
+                })?;
+                route = Some(rname);
+                model_name = Some(backend);
+            }
+        }
+        let routed = self.resolve(model_name.as_deref()).map_err(bad)?;
         let (entry, spec_k) = match &spec.spec {
             None => (routed, None),
             Some(want) => {
@@ -834,16 +953,24 @@ impl Router {
             stream: spec.stream,
             spec_k,
             deadline,
+            route,
             enqueued: Instant::now(),
             reply: rtx,
         };
         // gauge up BEFORE the send so the engine's decrement (it may
         // pop the request immediately) can never observe the queue at
-        // zero and leave the gauge stuck one high
+        // zero and leave the gauge stuck one high — and so a cold
+        // entry's parked supervisor (which proceeds on queue_depth > 0
+        // OR a Waking CAS) can never miss an enqueued request
         entry.stats.queue_depth.fetch_add(1, Ordering::Relaxed);
         match entry.tx.try_send(req) {
             Ok(()) => {
                 entry.stats.accepted.fetch_add(1, Ordering::Relaxed);
+                // scale-to-zero wake: first request into a Cold entry
+                // flips it Waking (no-op CAS for Hot entries); the
+                // request waits in the queue, so the artifact-load
+                // latency shows up in its queue_ms
+                entry.lifecycle.wake();
                 Ok(rrx)
             }
             Err(mpsc::TrySendError::Full(_)) => {
@@ -934,6 +1061,7 @@ fn finish_seq(
         model: (**name).clone(),
         spec: None,
         kv: Some(kv),
+        route: seq.req.route.as_ref().map(|r| (**r).clone()),
         queue_ms: seq.queue_ms,
         prefill_ms: seq.prefill_ms,
         decode_ms: seq.decode_t0.elapsed().as_secs_f64() * 1e3,
@@ -960,11 +1088,28 @@ pub(crate) fn expire_queued(
         model: (**name).clone(),
         spec: None,
         kv: None,
+        route: req.route.as_ref().map(|r| (**r).clone()),
         queue_ms: req.enqueued.elapsed().as_secs_f64() * 1e3,
         prefill_ms: 0.0,
         decode_ms: 0.0,
     };
     inflight.done(req.id, reply);
+}
+
+/// Why an engine loop handed control back to its supervisor. The
+/// supervisor's reaction differs per reason: `Stop`/`Disconnected`
+/// end the engine for good, `Idle` re-parks a sealed entry Cold (the
+/// loop's stack frame — weights Arc, [`DecodeBatch`], KV pool — drops
+/// with the return).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExitReason {
+    /// `ctl.stop` (drained) or `ctl.force` was raised — shutdown.
+    Stop,
+    /// The admission side dropped the queue sender.
+    Disconnected,
+    /// No work for `ctl.idle_unload`: a scale-to-zero engine asks to
+    /// be unloaded. Never returned when `ctl.idle_unload` is `None`.
+    Idle,
 }
 
 /// The engine loop: admit → chunked prefill → one batched decode step
@@ -994,7 +1139,7 @@ pub fn engine_loop(
     rx: &mpsc::Receiver<Request>,
     stats: Arc<ServeStats>,
     ctl: Ctl,
-) {
+) -> ExitReason {
     let mut batch = DecodeBatch::with_kv(
         &model,
         cfg.max_batch,
@@ -1010,6 +1155,9 @@ pub fn engine_loop(
     // KV pages free up (keeps queue order: nothing overtakes it)
     let mut parked: Option<Request> = None;
     let mut inputs: Vec<(usize, u16)> = Vec::with_capacity(cfg.max_batch);
+    // scale-to-zero idle clock: starts ticking when the batch empties,
+    // resets the moment any sequence is active
+    let mut idle_since: Option<Instant> = None;
     loop {
         // ---- force drain: the shutdown drain budget lapsed — retire
         //      everything still here with terminal errors, now
@@ -1039,7 +1187,7 @@ pub fn engine_loop(
                 );
             }
             stats.kv_pages_in_use.store(0, Ordering::Relaxed);
-            return;
+            return ExitReason::Stop;
         }
         // ---- admission: fill the batch from the queue
         while active.len() < cfg.max_batch {
@@ -1052,7 +1200,7 @@ pub fn engine_loop(
                     Err(mpsc::RecvTimeoutError::Timeout) => break,
                     Err(mpsc::RecvTimeoutError::Disconnected) => {
                         stats.kv_pages_in_use.store(0, Ordering::Relaxed);
-                        return;
+                        return ExitReason::Disconnected;
                     }
                 }
             } else {
@@ -1168,10 +1316,28 @@ pub fn engine_loop(
         if active.is_empty() {
             if ctl.stop.load(Ordering::Relaxed) {
                 stats.kv_pages_in_use.store(0, Ordering::Relaxed);
-                return;
+                return ExitReason::Stop;
+            }
+            // ---- idle reaper: an empty batch past the unload budget
+            //      returns Idle — the whole serving stack (weights
+            //      Arc, batch, KV pool) drops with this frame, and the
+            //      supervisor re-parks the entry Cold. A request
+            //      admitted in the race window simply waits in the
+            //      queue (queue_depth > 0 re-wakes the parked
+            //      supervisor immediately). `parked` is provably None
+            //      here: it is only set while the batch is non-empty,
+            //      and the admission loop re-takes it first.
+            if let Some(limit) = ctl.idle_unload {
+                let since = *idle_since.get_or_insert_with(Instant::now);
+                if since.elapsed() >= limit {
+                    stats.kv_pages_in_use.store(0, Ordering::Relaxed);
+                    stats.kv_pages_total.store(0, Ordering::Relaxed);
+                    return ExitReason::Idle;
+                }
             }
             continue;
         }
+        idle_since = None;
         let _ = fault::hit(&name, fault::CP_COMMIT);
         // ---- commit each decode-phase sequence's pending token;
         //      stream it out; retire the finished ones
@@ -1418,8 +1584,9 @@ impl Server {
                 cfg.max_ctx
             );
         }
-        // entry order: models first, then spec pairs — default_model
-        // may name either
+        // entry order: models first, then spec pairs, then cold
+        // sealed entries — default_model may name any of them (a cold
+        // default wakes on the first defaulted request)
         let default_ix = match &cfg.default_model {
             None => 0,
             Some(name) => registry
@@ -1427,6 +1594,7 @@ impl Server {
                 .iter()
                 .map(|(n, _)| n.as_str())
                 .chain(registry.specs.iter().map(|s| s.name.as_str()))
+                .chain(registry.colds.iter().map(|c| c.name.as_str()))
                 .position(|n| n == name)
                 .ok_or_else(|| {
                     anyhow::anyhow!(
@@ -1457,12 +1625,16 @@ impl Server {
             let resident_bytes = model.resident_bytes();
             let model = Arc::new(model);
             arcs.push((name.clone(), model.clone()));
+            let lc = Arc::new(lifecycle::Lifecycle::new(
+                lifecycle::LifecycleState::Hot,
+            ));
             let sup = supervisor::spawn(
                 supervisor::EngineDef::Dense { model },
                 name.clone(),
                 cfg.clone(),
                 rx,
                 stats.clone(),
+                lc.clone(),
                 stop.clone(),
                 force.clone(),
             );
@@ -1475,6 +1647,7 @@ impl Server {
                 stats,
                 kind: EntryKind::Model,
                 health: sup.health,
+                lifecycle: lc,
             });
         }
         for pair in registry.specs {
@@ -1492,6 +1665,9 @@ impl Server {
             // the working set the pair actually streams per round
             let resident_bytes =
                 target.resident_bytes() + draft.resident_bytes();
+            let lc = Arc::new(lifecycle::Lifecycle::new(
+                lifecycle::LifecycleState::Hot,
+            ));
             let sup = supervisor::spawn(
                 supervisor::EngineDef::Spec {
                     target,
@@ -1502,6 +1678,7 @@ impl Server {
                 cfg.clone(),
                 rx,
                 stats.clone(),
+                lc.clone(),
                 stop.clone(),
                 force.clone(),
             );
@@ -1518,10 +1695,72 @@ impl Server {
                     k: pair.k,
                 },
                 health: sup.health,
+                lifecycle: lc,
             });
         }
+        for cold in registry.colds {
+            let name = Arc::new(cold.name);
+            let stats = Arc::new(ServeStats::default());
+            let (tx, rx) = mpsc::sync_channel::<Request>(cfg.max_queue);
+            // no resident weights: the supervisor parks Cold and loads
+            // the sealed file when admission wakes it (or when it
+            // finds the queue already non-empty)
+            let lc = Arc::new(lifecycle::Lifecycle::new(
+                lifecycle::LifecycleState::Cold,
+            ));
+            let sup = supervisor::spawn(
+                supervisor::EngineDef::Sealed { path: cold.path },
+                name.clone(),
+                cfg.clone(),
+                rx,
+                stats.clone(),
+                lc.clone(),
+                stop.clone(),
+                force.clone(),
+            );
+            engine_handles.push(sup.handle);
+            entries.push(EngineEntry {
+                name,
+                vocab: cold.vocab,
+                // truthful gauge: nothing is resident while Cold (the
+                // artifact itself stays on disk)
+                resident_bytes: 0,
+                tx,
+                stats,
+                kind: EntryKind::Model,
+                health: sup.health,
+                lifecycle: lc,
+            });
+        }
+        // routes resolve at admission by entry name, so the two
+        // namespaces must not collide and every backend must exist —
+        // a config typo dies here, not as per-request bad_request noise
+        let table = if cfg.routes.is_empty() {
+            None
+        } else {
+            let table = router::RouterTable::new(
+                cfg.routes.clone(),
+                cfg.route_seed,
+            )?;
+            for rname in table.names() {
+                anyhow::ensure!(
+                    !entries.iter().any(|e| e.name.as_str() == rname),
+                    "route '{rname}' collides with a registered entry"
+                );
+                for (b, _) in
+                    table.backends(&rname).into_iter().flatten()
+                {
+                    anyhow::ensure!(
+                        entries.iter().any(|e| e.name.as_str() == b),
+                        "route '{rname}' names unknown backend '{b}'"
+                    );
+                }
+            }
+            Some(table)
+        };
         let router = Arc::new(Router {
             entries,
+            table,
             default_ix,
             next_id: AtomicU64::new(1),
             default_max_new: cfg.default_max_new,
@@ -1604,6 +1843,53 @@ impl Server {
             .iter()
             .find(|e| e.name.as_str() == name)
             .map(|e| e.health.state())
+    }
+
+    /// Scale-to-zero lifecycle state of one registered engine (hot
+    /// in-memory entries report Hot for their whole life).
+    pub fn engine_lifecycle(
+        &self,
+        name: &str,
+    ) -> Option<lifecycle::LifecycleState> {
+        self.router
+            .entries
+            .iter()
+            .find(|e| e.name.as_str() == name)
+            .map(|e| e.lifecycle.state())
+    }
+
+    /// Configured logical routes, in configuration order.
+    pub fn routes(&self) -> Vec<String> {
+        self.router
+            .table
+            .as_ref()
+            .map(|t| t.names())
+            .unwrap_or_default()
+    }
+
+    /// Per-backend live stats of one logical route, in configured
+    /// backend order — the side-by-side view a canary comparison
+    /// reads (empty when `route` is not a configured route).
+    pub fn route_stats(
+        &self,
+        route: &str,
+    ) -> Vec<(String, Arc<ServeStats>)> {
+        let Some(table) = &self.router.table else {
+            return Vec::new();
+        };
+        let Some(backends) = table.backends(route) else {
+            return Vec::new();
+        };
+        backends
+            .iter()
+            .filter_map(|(b, _)| {
+                self.router
+                    .entries
+                    .iter()
+                    .find(|e| e.name.as_str() == b)
+                    .map(|e| (b.clone(), e.stats.clone()))
+            })
+            .collect()
     }
 
     /// Graceful drain: stop admission, give in-flight sequences up to

@@ -20,7 +20,9 @@
 //!   Reply:    v0 fields + {"finish_reason":
 //!              "length"|"stop"|"deadline", "model": str}
 //!             + {"spec": {"drafted": n, "accepted": n}}?  // pairs
-//!             + {"kv": {"pages": n, "prefix_hit_tokens": n}}?\n
+//!             + {"kv": {"pages": n, "prefix_hit_tokens": n}}?
+//!             + {"route": str}?  // logical route that picked "model"
+//!                                // (weighted fleet routing only)\n
 //!   Stream:   {"event": "token", "id": n, "index": i, "token": t}\n
 //!             ... one line per decoded token, then a final
 //!             {"event": "done", ...v1 reply fields...}\n
@@ -274,6 +276,12 @@ fn v1_reply(r: &super::Reply) -> Json {
         );
         o.set("kv", s);
     }
+    // weighted routing echo: which logical route picked "model" —
+    // only present when the request came in through a route, so
+    // direct requests keep their exact pre-fleet reply shape
+    if let Some(route) = &r.route {
+        o.set("route", Json::str(route));
+    }
     o
 }
 
@@ -335,6 +343,7 @@ mod tests {
             model: "default".into(),
             spec: None,
             kv: None,
+            route: None,
             queue_ms: 0.5,
             prefill_ms: 1.25,
             decode_ms: 9.0,
@@ -552,6 +561,41 @@ mod tests {
         // and v0 replies never leak it
         let v0 = reply_line(&r);
         assert!(Json::parse(v0.trim()).unwrap().get("kv").is_none());
+    }
+
+    #[test]
+    fn route_echo_in_v1_reply_only_when_routed() {
+        let mut r = reply();
+        // direct requests: no "route" key at all
+        let line = reply_line_v1(&r);
+        assert!(Json::parse(line.trim()).unwrap().get("route").is_none());
+        r.route = Some("chat".into());
+        let line = reply_line_v1(&r);
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("route").unwrap().as_str(), Some("chat"));
+        // the "model" field keeps naming the BACKEND that served it —
+        // the pair is what a canary comparison reads off the wire
+        assert_eq!(j.get("model").unwrap().as_str(), Some("default"));
+        // the streaming summary shares the builder
+        let d = done_line(&r);
+        let j = Json::parse(d.trim()).unwrap();
+        assert_eq!(j.get("route").unwrap().as_str(), Some("chat"));
+    }
+
+    #[test]
+    fn v0_reply_bytes_unchanged_by_routing() {
+        // frozen-bytes re-assertion: even a reply that carries a
+        // route serializes to the exact pre-fleet v0 bytes on the v0
+        // path — routing can never leak into the compat contract
+        let mut r = reply();
+        r.route = Some("chat".into());
+        assert_eq!(
+            reply_line(&r),
+            "{\"decode_ms\":9,\"id\":42,\"prefill_ms\":1.25,\
+             \"queue_ms\":0.5,\"tokens\":[1,2,3]}\n"
+        );
+        let j = Json::parse(reply_line(&r).trim()).unwrap();
+        assert!(j.get("route").is_none());
     }
 
     #[test]

@@ -1,0 +1,346 @@
+//! Weighted canary routing: a logical route name maps to weighted
+//! backend entries (`--route chat=dense:70,sealed70:30`), so a pruned
+//! variant can take a percentage of live traffic next to its dense
+//! parent and the per-backend [`super::ServeStats`] compare directly.
+//!
+//! **Determinism rule:** backend selection is a seeded PCG32 stream
+//! *per route* (stream id = FNV-1a of the route name, seeded from
+//! `ServeConfig::route_seed`). Two servers configured with the same
+//! routes and seed pick the same backend sequence for the same
+//! admission order — traffic splits are reproducible under test, and a
+//! canary experiment can be replayed exactly.
+//!
+//! Health interacts with the split at pick time, not config time: a
+//! Down backend is excluded and the remaining weights renormalize (the
+//! draw is over the healthy total). If every healthy backend has
+//! weight 0 (pure standbys), they split uniformly; if no backend is
+//! healthy, the pick fails and admission returns `EngineDown`.
+
+use std::sync::{Arc, Mutex, PoisonError};
+
+use anyhow::Result;
+
+use crate::util::rng::Pcg32;
+
+/// One logical route: `name` → weighted backend entry names.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RouteDef {
+    pub name: String,
+    /// (registry entry name, weight). Weights are relative, not
+    /// percentages; weight 0 marks a standby that only takes traffic
+    /// when every weighted peer is down.
+    pub backends: Vec<(String, u32)>,
+}
+
+/// Parse one `--route` segment: `logical=backend:weight[,backend:weight...]`.
+pub fn parse_route(s: &str) -> Result<RouteDef> {
+    let (name, rest) = s.split_once('=').ok_or_else(|| {
+        anyhow::anyhow!("bad --route '{s}' (want logical=backend:w,...)")
+    })?;
+    anyhow::ensure!(!name.trim().is_empty(), "empty route name in '{s}'");
+    let mut backends = Vec::new();
+    for part in rest.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        // LAST ':' separates the weight — entry names may contain ':'
+        // (spec pairs default to their 'target:draft@k' spec string)
+        let (backend, w_s) = part.rsplit_once(':').ok_or_else(|| {
+            anyhow::anyhow!("bad backend '{part}' in '{s}' (want name:weight)")
+        })?;
+        let w: u32 = w_s.parse().map_err(|_| {
+            anyhow::anyhow!("bad weight '{w_s}' in route '{s}'")
+        })?;
+        backends.push((backend.to_string(), w));
+    }
+    RouteDef { name: name.trim().to_string(), backends }.validated()
+}
+
+impl RouteDef {
+    fn validated(self) -> Result<RouteDef> {
+        anyhow::ensure!(
+            !self.backends.is_empty(),
+            "route '{}' has no backends",
+            self.name
+        );
+        anyhow::ensure!(
+            self.backends.iter().any(|(_, w)| *w > 0),
+            "route '{}' has zero total weight",
+            self.name
+        );
+        for (i, (b, _)) in self.backends.iter().enumerate() {
+            anyhow::ensure!(!b.is_empty(), "route '{}': empty backend", self.name);
+            anyhow::ensure!(
+                !self.backends[..i].iter().any(|(o, _)| o == b),
+                "route '{}' lists backend '{b}' twice",
+                self.name
+            );
+        }
+        Ok(self)
+    }
+}
+
+struct RouteState {
+    /// Shared so each admitted request can carry the route name
+    /// without a fresh allocation.
+    name: Arc<String>,
+    backends: Vec<(String, u32)>,
+    rng: Mutex<Pcg32>,
+}
+
+/// The routing table: logical names → weighted backends, one seeded
+/// PCG32 pick stream per route.
+pub struct RouterTable {
+    routes: Vec<RouteState>,
+}
+
+fn fnv64(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+impl RouterTable {
+    /// Build a table; route definitions are re-validated and route
+    /// names must be unique. (Collisions with registry entry names are
+    /// checked by `Server::start_registry`, which knows the entries.)
+    pub fn new(defs: Vec<RouteDef>, seed: u64) -> Result<RouterTable> {
+        let mut routes = Vec::with_capacity(defs.len());
+        for def in defs {
+            let def = def.validated()?;
+            anyhow::ensure!(
+                !routes.iter().any(|r: &RouteState| *r.name == def.name),
+                "duplicate route '{}'",
+                def.name
+            );
+            routes.push(RouteState {
+                rng: Mutex::new(Pcg32::new(seed, fnv64(&def.name))),
+                name: Arc::new(def.name),
+                backends: def.backends,
+            });
+        }
+        Ok(RouterTable { routes })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.routes.is_empty()
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.routes.iter().any(|r| *r.name == name)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.routes.iter().map(|r| (*r.name).clone()).collect()
+    }
+
+    /// The configured (backend, weight) list of a route.
+    pub fn backends(&self, name: &str) -> Option<&[(String, u32)]> {
+        self.routes
+            .iter()
+            .find(|r| *r.name == name)
+            .map(|r| r.backends.as_slice())
+    }
+
+    /// Pick a backend for `name`. `is_down` reports backends to
+    /// exclude. Returns `None` when `name` is not a route; otherwise
+    /// `Ok((route_name, backend))` or `Err(msg)` when every backend is
+    /// down. Consumes exactly one draw from the route's pick stream
+    /// per call (the determinism rule above).
+    pub fn pick<F: Fn(&str) -> bool>(
+        &self,
+        name: &str,
+        is_down: F,
+    ) -> Option<std::result::Result<(Arc<String>, String), String>> {
+        let route = self.routes.iter().find(|r| *r.name == name)?;
+        let healthy: Vec<&(String, u32)> = route
+            .backends
+            .iter()
+            .filter(|(b, _)| !is_down(b))
+            .collect();
+        if healthy.is_empty() {
+            return Some(Err(format!(
+                "route '{name}': every backend is down"
+            )));
+        }
+        let total: u64 = healthy.iter().map(|(_, w)| *w as u64).sum();
+        let mut rng =
+            route.rng.lock().unwrap_or_else(PoisonError::into_inner);
+        let chosen = if total == 0 {
+            // only standbys survive: split them uniformly
+            healthy[rng.below(healthy.len())].0.clone()
+        } else {
+            let x = rng.below(total as usize) as u64;
+            let mut acc = 0u64;
+            let mut pick = healthy[healthy.len() - 1].0.as_str();
+            for (b, w) in &healthy {
+                acc += *w as u64;
+                if x < acc {
+                    pick = b.as_str();
+                    break;
+                }
+            }
+            pick.to_string()
+        };
+        Some(Ok((route.name.clone(), chosen)))
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    fn def(name: &str, backends: &[(&str, u32)]) -> RouteDef {
+        RouteDef {
+            name: name.to_string(),
+            backends: backends
+                .iter()
+                .map(|(b, w)| (b.to_string(), *w))
+                .collect(),
+        }
+    }
+
+    fn tally(
+        t: &RouterTable,
+        route: &str,
+        n: usize,
+    ) -> HashMap<String, usize> {
+        let mut c = HashMap::new();
+        for _ in 0..n {
+            let (rn, b) = t.pick(route, |_| false).unwrap().unwrap();
+            assert_eq!(*rn, route);
+            *c.entry(b).or_insert(0) += 1;
+        }
+        c
+    }
+
+    /// Satellite: 10k seeded picks land within ±1% (±100 requests) of
+    /// the configured weights, for a two-way and a three-way split.
+    #[test]
+    fn ten_thousand_picks_within_one_percent_of_weights() {
+        let t = RouterTable::new(
+            vec![
+                def("chat", &[("dense", 70), ("sealed70", 30)]),
+                def("abc", &[("a", 50), ("b", 30), ("c", 20)]),
+            ],
+            42,
+        )
+        .unwrap();
+        let c = tally(&t, "chat", 10_000);
+        for (b, want) in [("dense", 7_000i64), ("sealed70", 3_000)] {
+            let got = *c.get(b).unwrap_or(&0) as i64;
+            assert!(
+                (got - want).abs() <= 100,
+                "{b}: {got} vs {want} ±100"
+            );
+        }
+        let c = tally(&t, "abc", 10_000);
+        for (b, want) in [("a", 5_000i64), ("b", 3_000), ("c", 2_000)] {
+            let got = *c.get(b).unwrap_or(&0) as i64;
+            assert!(
+                (got - want).abs() <= 100,
+                "{b}: {got} vs {want} ±100"
+            );
+        }
+    }
+
+    /// Satellite: 0/100 splits are exact — a weight-0 backend takes
+    /// zero traffic while its peer is healthy.
+    #[test]
+    fn zero_hundred_split_is_exact() {
+        let t = RouterTable::new(
+            vec![def("z", &[("standby", 0), ("live", 100)])],
+            7,
+        )
+        .unwrap();
+        let c = tally(&t, "z", 10_000);
+        assert_eq!(c.get("live"), Some(&10_000));
+        assert_eq!(c.get("standby"), None);
+    }
+
+    /// Satellite regression vs `engine_down`: a Down backend is
+    /// excluded and the surviving weighted peers take its share; a
+    /// weight-0 standby is promoted only when every weighted peer is
+    /// down; all-down picks fail.
+    #[test]
+    fn down_backends_fail_over_to_weighted_peers() {
+        let t = RouterTable::new(
+            vec![def("c", &[("a", 70), ("b", 30), ("s", 0)])],
+            11,
+        )
+        .unwrap();
+        for _ in 0..500 {
+            let (_, b) = t.pick("c", |n| n == "a").unwrap().unwrap();
+            assert_eq!(b, "b", "a is down, s is weight-0 standby");
+        }
+        for _ in 0..500 {
+            let (_, b) =
+                t.pick("c", |n| n == "a" || n == "b").unwrap().unwrap();
+            assert_eq!(b, "s", "standby promoted when peers are down");
+        }
+        let err = t.pick("c", |_| true).unwrap().unwrap_err();
+        assert!(err.contains("every backend is down"), "{err}");
+    }
+
+    #[test]
+    fn same_seed_same_sequence_different_seed_differs() {
+        let mk = |seed| {
+            RouterTable::new(
+                vec![def("chat", &[("x", 70), ("y", 30)])],
+                seed,
+            )
+            .unwrap()
+        };
+        let (a, b, c) = (mk(1), mk(1), mk(2));
+        let run = |t: &RouterTable| -> Vec<String> {
+            (0..1000)
+                .map(|_| t.pick("chat", |_| false).unwrap().unwrap().1)
+                .collect()
+        };
+        assert_eq!(run(&a), run(&b), "same seed must replay exactly");
+        assert_ne!(run(&a), run(&c), "seed must steer the stream");
+    }
+
+    #[test]
+    fn non_routes_pass_through() {
+        let t = RouterTable::new(
+            vec![def("chat", &[("x", 1)])],
+            0,
+        )
+        .unwrap();
+        assert!(t.pick("x", |_| false).is_none());
+        assert!(t.has("chat") && !t.has("x"));
+        assert_eq!(t.backends("chat").unwrap().len(), 1);
+    }
+
+    #[test]
+    fn parse_and_validation() {
+        let r = parse_route("chat=dense:70,sealed70:30").unwrap();
+        assert_eq!(r.name, "chat");
+        assert_eq!(
+            r.backends,
+            vec![("dense".to_string(), 70), ("sealed70".to_string(), 30)]
+        );
+        // spec-pair backend names keep their ':' — last ':' wins
+        let r = parse_route("c=dense:d70@4:25,dense:75").unwrap();
+        assert_eq!(r.backends[0], ("dense:d70@4".to_string(), 25));
+        for bad in [
+            "noequals",
+            "c=",
+            "c=dense",
+            "c=dense:x",
+            "c=a:0,b:0",
+            "c=a:1,a:2",
+            "=a:1",
+        ] {
+            assert!(parse_route(bad).is_err(), "{bad} must fail");
+        }
+        assert!(RouterTable::new(
+            vec![def("d", &[("a", 1)]), def("d", &[("b", 1)])],
+            0
+        )
+        .is_err());
+    }
+}

@@ -200,7 +200,7 @@ pub fn spec_engine_loop(
     rx: &mpsc::Receiver<Request>,
     stats: Arc<ServeStats>,
     ctl: Ctl,
-) {
+) -> super::ExitReason {
     // verify windows are up to (MAX_SPEC_K + 1) rows per sequence and
     // share the fused pass with prefill chunks; the draft side carries
     // up to a (MAX_SPEC_K + 1)-token backlog catch-up chunk per
@@ -256,7 +256,7 @@ pub fn spec_engine_loop(
                 );
             }
             stats.kv_pages_in_use.store(0, Ordering::Relaxed);
-            return;
+            return super::ExitReason::Stop;
         }
         // ---- admission: fill the batch from the queue (both engines
         //      admit in lockstep so indices stay mirrored). A request
@@ -271,7 +271,7 @@ pub fn spec_engine_loop(
                     Err(mpsc::RecvTimeoutError::Timeout) => break,
                     Err(mpsc::RecvTimeoutError::Disconnected) => {
                         stats.kv_pages_in_use.store(0, Ordering::Relaxed);
-                        return;
+                        return super::ExitReason::Disconnected;
                     }
                 }
             } else {
@@ -423,8 +423,10 @@ pub fn spec_engine_loop(
         if active.is_empty() {
             if ctl.stop.load(Ordering::Relaxed) {
                 stats.kv_pages_in_use.store(0, Ordering::Relaxed);
-                return;
+                return super::ExitReason::Stop;
             }
+            // spec pairs never scale to zero (their weights are shared
+            // with the hot target/draft entries), so no Idle exit here
             continue;
         }
         // ---- deadline sweep: lapsed sequences finish this iteration
@@ -472,6 +474,7 @@ pub fn spec_engine_loop(
                     pages,
                     prefix_hit_tokens: seq.prefix_hit as u64,
                 }),
+                route: seq.req.route.as_ref().map(|r| (**r).clone()),
                 queue_ms: seq.queue_ms,
                 prefill_ms: seq.prefill_ms,
                 decode_ms: seq.decode_t0.elapsed().as_secs_f64() * 1e3,

@@ -32,15 +32,16 @@
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
-use std::sync::{mpsc, Arc, Mutex, MutexGuard, PoisonError};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard, OnceLock, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::model::ModelWeights;
 
+use super::lifecycle::{Lifecycle, LifecycleState};
 use super::spec::spec_engine_loop;
 use super::{
-    dec_queue_depth, engine_loop, ErrCode, Event, Reply, Request,
-    ServeConfig, ServeError, ServeStats,
+    dec_queue_depth, engine_loop, fault, ErrCode, Event, ExitReason,
+    Reply, Request, ServeConfig, ServeError, ServeStats,
 };
 
 /// Engine health as seen by the router.
@@ -95,6 +96,10 @@ struct Entry {
 #[derive(Default)]
 pub struct Inflight {
     map: Mutex<HashMap<u64, Entry>>,
+    /// When attached (supervised engines), the ledger size is mirrored
+    /// into `ServeStats::inflight` so tests and the status loop can
+    /// watch the gauge return to zero across unload cycles.
+    stats: OnceLock<Arc<ServeStats>>,
 }
 
 impl Inflight {
@@ -105,12 +110,27 @@ impl Inflight {
         self.map.lock().unwrap_or_else(PoisonError::into_inner)
     }
 
+    /// Mirror the ledger size into `stats.inflight` from now on.
+    fn attach_gauge(&self, stats: Arc<ServeStats>) {
+        let _ = self.stats.set(stats);
+    }
+
+    fn publish(&self, n: usize) {
+        if let Some(s) = self.stats.get() {
+            s.inflight.store(n as u64, Ordering::Relaxed);
+        }
+    }
+
     /// Engine popped `req` from the queue; it is now in flight.
     pub(crate) fn register(&self, req: &Request) {
-        self.lock().insert(
+        let mut m = self.lock();
+        m.insert(
             req.id,
             Entry { reply: req.reply.clone(), started: false },
         );
+        let n = m.len();
+        drop(m);
+        self.publish(n);
     }
 
     /// First streamed token is about to go out: from here on a
@@ -123,17 +143,25 @@ impl Inflight {
 
     /// Terminal success.
     pub(crate) fn done(&self, id: u64, reply: Reply) {
-        if let Some(e) = self.lock().remove(&id) {
+        let mut m = self.lock();
+        if let Some(e) = m.remove(&id) {
+            let n = m.len();
             let _ = e.reply.send(Event::Done(reply));
+            drop(m);
+            self.publish(n);
         }
     }
 
     /// Terminal failure; `retryable` is downgraded automatically if
     /// the request already streamed tokens.
     pub(crate) fn fail(&self, id: u64, code: ErrCode, msg: &str) {
-        if let Some(e) = self.lock().remove(&id) {
+        let mut m = self.lock();
+        if let Some(e) = m.remove(&id) {
+            let n = m.len();
             let error = ServeError::new(code, msg).started(e.started);
             let _ = e.reply.send(Event::Error { id, error });
+            drop(m);
+            self.publish(n);
         }
     }
 
@@ -156,6 +184,8 @@ impl Inflight {
             };
             let _ = e.reply.send(Event::Error { id, error });
         }
+        drop(m);
+        self.publish(0);
         n
     }
 
@@ -175,6 +205,10 @@ pub struct Ctl {
     pub stop: Arc<AtomicBool>,
     pub force: Arc<AtomicBool>,
     pub inflight: Arc<Inflight>,
+    /// Scale-to-zero budget: an engine loop whose batch stays empty
+    /// this long returns [`ExitReason::Idle`] so the supervisor can
+    /// re-park it Cold. `None` (hot engines, direct drivers) = never.
+    pub idle_unload: Option<Duration>,
 }
 
 impl Ctl {
@@ -185,12 +219,14 @@ impl Ctl {
             stop: Arc::new(AtomicBool::new(false)),
             force: Arc::new(AtomicBool::new(false)),
             inflight: Arc::new(Inflight::default()),
+            idle_unload: None,
         }
     }
 }
 
-/// What to (re)spawn — the registry's resident weights, so respawn is
-/// an allocation of fresh KV state, not a model reload.
+/// What to (re)spawn — resident weights for hot engines (respawn is
+/// an allocation of fresh KV state, not a model reload), or a sealed
+/// artifact path for scale-to-zero engines (every wake is a load).
 pub enum EngineDef {
     Dense {
         model: Arc<ModelWeights>,
@@ -200,6 +236,13 @@ pub enum EngineDef {
         draft: Arc<ModelWeights>,
         k: usize,
     },
+    /// A sealed `.mosaic` file served cold: the supervisor parks until
+    /// the first routed request, loads the artifact inside its panic
+    /// boundary, and re-parks (dropping the weights) after an
+    /// [`ExitReason::Idle`] exit.
+    Sealed {
+        path: std::path::PathBuf,
+    },
 }
 
 pub struct Supervisor {
@@ -208,19 +251,21 @@ pub struct Supervisor {
 }
 
 /// Spawn the supervisor thread for one engine.
+#[allow(clippy::too_many_arguments)]
 pub fn spawn(
     def: EngineDef,
     name: Arc<String>,
     cfg: ServeConfig,
     rx: mpsc::Receiver<Request>,
     stats: Arc<ServeStats>,
+    lifecycle: Arc<Lifecycle>,
     stop: Arc<AtomicBool>,
     force: Arc<AtomicBool>,
 ) -> Supervisor {
     let health = Arc::new(Health::new());
     let h = health.clone();
     let handle = std::thread::spawn(move || {
-        supervise(def, name, cfg, rx, stats, stop, force, h)
+        supervise(def, name, cfg, rx, stats, lifecycle, stop, force, h)
     });
     Supervisor { health, handle }
 }
@@ -232,44 +277,135 @@ fn supervise(
     cfg: ServeConfig,
     rx: mpsc::Receiver<Request>,
     stats: Arc<ServeStats>,
+    lifecycle: Arc<Lifecycle>,
     stop: Arc<AtomicBool>,
     force: Arc<AtomicBool>,
     health: Arc<Health>,
 ) {
     let inflight = Arc::new(Inflight::default());
+    inflight.attach_gauge(stats.clone());
+    // only sealed engines scale to zero: a hot engine's weights are
+    // resident either way, so unloading buys nothing
+    let idle_unload = match &def {
+        EngineDef::Sealed { .. } => {
+            cfg.idle_ms.map(Duration::from_millis)
+        }
+        _ => None,
+    };
     let ctl = Ctl {
         stop: stop.clone(),
         force: force.clone(),
         inflight: inflight.clone(),
+        idle_unload,
     };
     let mut restarts: u32 = 0;
     loop {
+        // ---- cold park: a sealed engine holds nothing while Cold.
+        //      It proceeds on the admission-side Waking CAS *or* a
+        //      non-empty queue (admission bumps queue_depth before the
+        //      send, so a request that lost the CAS race can never be
+        //      stranded), and on shutdown it drains whatever queued.
+        if matches!(def, EngineDef::Sealed { .. })
+            && lifecycle.state() == LifecycleState::Cold
+        {
+            loop {
+                if stop.load(Ordering::Relaxed)
+                    || force.load(Ordering::Relaxed)
+                {
+                    drain_queue(
+                        &rx,
+                        &stats,
+                        ErrCode::Shutdown,
+                        "server shutting down",
+                    );
+                    health.set(HealthState::Down);
+                    lifecycle.set(LifecycleState::Down);
+                    return;
+                }
+                if lifecycle.state() == LifecycleState::Waking
+                    || stats.queue_depth.load(Ordering::Relaxed) > 0
+                {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            lifecycle.set(LifecycleState::Waking);
+        }
         health.set(HealthState::Healthy);
-        let run = catch_unwind(AssertUnwindSafe(|| match &def {
-            EngineDef::Dense { model } => engine_loop(
-                model.clone(),
-                name.clone(),
-                cfg.clone(),
-                &rx,
-                stats.clone(),
-                ctl.clone(),
-            ),
-            EngineDef::Spec { target, draft, k } => spec_engine_loop(
-                target.clone(),
-                draft.clone(),
-                name.clone(),
-                *k,
-                cfg.clone(),
-                &rx,
-                stats.clone(),
-                ctl.clone(),
-            ),
-        }));
-        if run.is_ok() {
-            // clean exit: stop requested and drained, or every sender
-            // dropped — either way the engine is gone for good
-            health.set(HealthState::Down);
-            return;
+        let run = catch_unwind(AssertUnwindSafe(
+            || -> anyhow::Result<ExitReason> {
+                match &def {
+                    EngineDef::Dense { model } => Ok(engine_loop(
+                        model.clone(),
+                        name.clone(),
+                        cfg.clone(),
+                        &rx,
+                        stats.clone(),
+                        ctl.clone(),
+                    )),
+                    EngineDef::Spec { target, draft, k } => {
+                        Ok(spec_engine_loop(
+                            target.clone(),
+                            draft.clone(),
+                            name.clone(),
+                            *k,
+                            cfg.clone(),
+                            &rx,
+                            stats.clone(),
+                            ctl.clone(),
+                        ))
+                    }
+                    EngineDef::Sealed { path } => {
+                        // chaos checkpoint: a panic/stall here models
+                        // an engine dying or hanging mid-wake
+                        let _ =
+                            fault::hit(&name, fault::CP_LIFECYCLE_WAKE);
+                        let model =
+                            Arc::new(crate::deploy::load_encoded(path)?);
+                        lifecycle.set(LifecycleState::Hot);
+                        Ok(engine_loop(
+                            model,
+                            name.clone(),
+                            cfg.clone(),
+                            &rx,
+                            stats.clone(),
+                            ctl.clone(),
+                        ))
+                    }
+                }
+            },
+        ));
+        match run {
+            Ok(Ok(ExitReason::Idle)) => {
+                // scale-to-zero unload: the loop frame (weights Arc,
+                // DecodeBatch, KV pool) already dropped with the
+                // return. Re-park Cold; a clean serve cycle also
+                // refills the restart budget.
+                lifecycle.set(LifecycleState::Cold);
+                restarts = 0;
+                continue;
+            }
+            Ok(Ok(_)) => {
+                // clean exit: stop requested and drained, or every
+                // sender dropped — the engine is gone for good
+                health.set(HealthState::Down);
+                lifecycle.set(LifecycleState::Down);
+                return;
+            }
+            Ok(Err(e)) => {
+                // wake failed: the sealed artifact is unreadable.
+                // Nothing was in flight (the loop never started);
+                // queued requests error out and the entry goes Down —
+                // routed traffic fails over to surviving backends.
+                health.set(HealthState::Down);
+                lifecycle.set(LifecycleState::Down);
+                let msg = format!("engine '{name}' failed to wake: {e}");
+                inflight.fail_all(ErrCode::EngineDown, &msg);
+                drain_queue(&rx, &stats, ErrCode::EngineDown, &msg);
+                reject_until_stopped(&rx, &stats, &stop);
+                return;
+            }
+            Err(_) => {}
         }
         // Panic boundary. The engine's DecodeBatch unwound with it,
         // so its pages are physically freed; re-zero the gauge the
@@ -290,12 +426,19 @@ fn supervise(
         stats.kv_pages_in_use.store(0, Ordering::Relaxed);
         if restarts >= cfg.max_restarts {
             health.set(HealthState::Down);
+            lifecycle.set(LifecycleState::Down);
             reject_until_stopped(&rx, &stats, &stop);
             return;
         }
         restarts += 1;
         stats.engine_restarts.fetch_add(1, Ordering::Relaxed);
         health.set(HealthState::Degraded);
+        // a sealed engine re-parks Cold after its panic drain (queue
+        // is empty now): the next request wakes it through the normal
+        // path instead of a blind immediate reload
+        if matches!(def, EngineDef::Sealed { .. }) {
+            lifecycle.set(LifecycleState::Cold);
+        }
         let wait = backoff(cfg.restart_backoff_ms, restarts, &name);
         let t0 = Instant::now();
         while t0.elapsed() < wait {
@@ -309,6 +452,7 @@ fn supervise(
                     "server shutting down",
                 );
                 health.set(HealthState::Down);
+                lifecycle.set(LifecycleState::Down);
                 return;
             }
             std::thread::sleep(Duration::from_millis(2));
@@ -416,6 +560,7 @@ mod tests {
             stream: false,
             spec_k: None,
             deadline: None,
+            route: None,
             enqueued: Instant::now(),
             reply: req_tx,
         };
@@ -432,6 +577,7 @@ mod tests {
                 model: String::new(),
                 spec: None,
                 kv: None,
+                route: None,
                 queue_ms: 0.0,
                 prefill_ms: 0.0,
                 decode_ms: 0.0,
@@ -462,6 +608,7 @@ mod tests {
             stream: true,
             spec_k: None,
             deadline: None,
+            route: None,
             enqueued: Instant::now(),
             reply: tx.clone(),
         };

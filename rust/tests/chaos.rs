@@ -236,6 +236,48 @@ fn panic_storm_still_terminates_every_request() {
     srv.shutdown();
 }
 
+/// Shutdown racing a cold-engine wake: the `lifecycle.wake` stall
+/// holds the supervisor mid-spawn (artifact load in progress) while
+/// `Server::shutdown` flips the stop flag. Whichever side wins the
+/// race, every admitted request must still get exactly one terminal
+/// event — a served reply if the wake completed, a typed shutdown
+/// error if it did not — and shutdown must join every thread.
+#[test]
+fn shutdown_during_cold_wake_terminates_every_request() {
+    let name = "chaos-coldwake";
+    let m = random_model_sized(model_seed_for(name), 2, 16, 2, 40, 64, 16);
+    let path = std::env::temp_dir().join("chaos_coldwake.mosaic");
+    mosaic::deploy::export_model(&m, &path).expect("export");
+    let mut reg = ModelRegistry::new();
+    reg.register_cold(name, &path).expect("register cold");
+    let cfg = ServeConfig {
+        max_batch: 2,
+        max_queue: 64,
+        default_model: Some(name.to_string()),
+        max_restarts: 10_000,
+        restart_backoff_ms: 1,
+        ..Default::default()
+    };
+    let srv = Server::start_registry(reg, cfg, 0).expect("start server");
+    // hold every wake inside the artifact load for 150 ms — long
+    // enough that the shutdown below lands mid-spawn
+    let plan = Arc::new(
+        FaultPlan::new().stall_every(fault::CP_LIFECYCLE_WAKE, 150),
+    );
+    let _guard = fault::arm_guard(name, plan);
+    let rxs: Vec<_> =
+        (0..6).filter_map(|i| submit(&srv, i).ok()).collect();
+    assert!(!rxs.is_empty(), "every submission refused");
+    // the first admission has already CASed the entry Cold→Waking;
+    // shutdown now races the stalled spawn
+    srv.shutdown();
+    for (i, rx) in rxs.iter().enumerate() {
+        drain_terminal(rx)
+            .unwrap_or_else(|e| panic!("request {i}: {e}"));
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
 /// One env-seeded exploratory schedule per run. The seed prints up
 /// front so a CI failure is reproducible: `CHAOS_SEED=<seed> make
 /// chaos`.

@@ -1,0 +1,279 @@
+//! Fleet serving: scale-to-zero lifecycle and weighted canary
+//! routing, end-to-end through the public server surface. Three
+//! properties the fleet layer must hold:
+//!
+//! * **lifecycle bit-identity** — greedy output is byte-identical
+//!   across cold-spawn → serve → idle-unload → re-wake, for a dense
+//!   and a sealed-70 artifact, at batch widths 1/2/8; the gauges
+//!   (`kv_pages_in_use`, `inflight`, `queue_depth`) return to zero
+//!   after an unload.
+//! * **routing determinism** — the live traffic split replays the
+//!   seeded [`RouterTable`] pick stream *exactly*, request for
+//!   request, and `Server::route_stats` tallies agree.
+//! * **failover** — a backend whose artifact is gone goes Down on
+//!   first wake and the routed split renormalizes onto the survivor.
+
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use mosaic::model::weights::testutil::random_model_sized;
+use mosaic::model::ModelWeights;
+use mosaic::prune::unstructured::{mask_lowest, scores, Metric};
+use mosaic::serve::lifecycle::LifecycleState;
+use mosaic::serve::router::{parse_route, RouterTable};
+use mosaic::serve::{
+    wait_reply, HealthState, ModelRegistry, Reply, ServeConfig, Server,
+    SubmitSpec,
+};
+
+const PROMPTS: &[&[u16]] = &[&[1, 9, 4], &[7, 2, 2, 5], &[3, 60, 11]];
+const MAX_NEW: usize = 10;
+
+fn model(seed: u64) -> ModelWeights {
+    random_model_sized(seed, 2, 16, 2, 40, 64, 16)
+}
+
+/// Magnitude-prune every projection to 70% sparsity and compact —
+/// the sealed-variant shape the fleet serves next to its dense parent.
+fn sealed70(dense: &ModelWeights) -> ModelWeights {
+    let mut m = dense.clone();
+    for l in m.layers.iter_mut() {
+        for s in l.projs.iter_mut() {
+            let t = s.dense_mut();
+            let sc = scores(t, None, Metric::Magnitude);
+            mask_lowest(t, &sc, 0.7);
+        }
+    }
+    m.compact();
+    m
+}
+
+/// Export `m` to a temp `.mosaic` artifact and return the path.
+fn export(m: &ModelWeights, tag: &str) -> std::path::PathBuf {
+    let path = std::env::temp_dir().join(format!("fleet_{tag}.mosaic"));
+    mosaic::deploy::export_model(m, &path).expect("export");
+    path
+}
+
+fn greedy_to(model: &str, prompt: &[u16]) -> SubmitSpec {
+    SubmitSpec {
+        model: Some(model.to_string()),
+        ..SubmitSpec::greedy(prompt, MAX_NEW)
+    }
+}
+
+/// Serve every prompt against `model`, returning the token streams.
+fn serve_all(srv: &Server, model: &str) -> Vec<Vec<u16>> {
+    PROMPTS
+        .iter()
+        .map(|p| {
+            let rx = srv.submit_spec(greedy_to(model, p)).expect("admit");
+            wait_reply(&rx, Duration::from_secs(60))
+                .expect("reply")
+                .tokens
+        })
+        .collect()
+}
+
+fn await_lifecycle(srv: &Server, name: &str, want: LifecycleState) {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let got = srv.engine_lifecycle(name).expect("registered");
+        if got == want {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "{name}: stuck in {got:?}, wanted {want:?}"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Cold-spawn → serve → idle-unload → re-wake keeps greedy output
+/// byte-identical to a hot server over the same weights, dense and
+/// sealed-70, across batch widths; gauges return to zero after the
+/// unload.
+#[test]
+fn lifecycle_bit_identity_across_unload_cycles() {
+    let dense = model(601);
+    let s70 = sealed70(&dense);
+    let paths = [
+        ("dense", export(&dense, "identity_dense")),
+        ("s70", export(&s70, "identity_s70")),
+    ];
+    // the hot reference: same weights, resident from the start
+    let mut hot_reg = ModelRegistry::new();
+    hot_reg.register("dense", dense).unwrap();
+    hot_reg.register("s70", s70).unwrap();
+    let hot =
+        Server::start_registry(hot_reg, ServeConfig::default(), 0).unwrap();
+    let want: Vec<(&str, Vec<Vec<u16>>)> = paths
+        .iter()
+        .map(|(name, _)| (*name, serve_all(&hot, name)))
+        .collect();
+    hot.shutdown();
+
+    for width in [1usize, 2, 8] {
+        let mut reg = ModelRegistry::new();
+        for (name, path) in &paths {
+            reg.register_cold(name, path).unwrap();
+        }
+        let srv = Server::start_registry(
+            reg,
+            ServeConfig {
+                max_batch: width,
+                idle_ms: Some(150),
+                ..Default::default()
+            },
+            0,
+        )
+        .unwrap();
+        for (name, expect) in &want {
+            assert_eq!(
+                srv.engine_lifecycle(name),
+                Some(LifecycleState::Cold),
+                "{name} must register cold (width {width})"
+            );
+            // cold-spawn: first request wakes the engine
+            assert_eq!(&serve_all(&srv, name), expect, "cold wake w{width}");
+            assert_eq!(
+                srv.engine_lifecycle(name),
+                Some(LifecycleState::Hot)
+            );
+            // idle reaper: weights + KV pages dropped, entry re-parked
+            await_lifecycle(&srv, name, LifecycleState::Cold);
+            let stats = srv.model_stats(name).unwrap();
+            for (gauge, v) in [
+                ("kv_pages_in_use", &stats.kv_pages_in_use),
+                ("kv_pages_total", &stats.kv_pages_total),
+                ("queue_depth", &stats.queue_depth),
+                ("inflight", &stats.inflight),
+            ] {
+                assert_eq!(
+                    v.load(Ordering::Relaxed),
+                    0,
+                    "{name}/{gauge} after unload (width {width})"
+                );
+            }
+            // re-wake: identical bytes on the second life
+            assert_eq!(&serve_all(&srv, name), expect, "re-wake w{width}");
+            assert_eq!(
+                srv.engine_health(name),
+                Some(HealthState::Healthy),
+                "unload cycles must not look like failures"
+            );
+        }
+        srv.shutdown();
+    }
+    for (_, path) in &paths {
+        let _ = std::fs::remove_file(path);
+    }
+}
+
+/// The live split replays the seeded pick stream exactly: an
+/// independent [`RouterTable`] with the same defs + seed predicts the
+/// serving backend of every single request, and `route_stats` tallies
+/// the same counts in configured backend order.
+#[test]
+fn routed_traffic_replays_the_table_exactly() {
+    const N: usize = 200;
+    let route = "chat=a:70,b:30";
+    let mut reg = ModelRegistry::new();
+    reg.register("a", model(611)).unwrap();
+    reg.register("b", model(612)).unwrap();
+    let srv = Server::start_registry(
+        reg,
+        ServeConfig {
+            routes: vec![parse_route(route).unwrap()],
+            route_seed: 42,
+            ..Default::default()
+        },
+        0,
+    )
+    .unwrap();
+    assert_eq!(srv.routes(), vec!["chat".to_string()]);
+    // sequential admissions consume the route's pick stream in call
+    // order — the determinism rule under test
+    let served: Vec<Reply> = (0..N)
+        .map(|i| {
+            let p = [1 + (i % 7) as u16, 9, 4];
+            let rx = srv.submit_spec(greedy_to("chat", &p)).expect("admit");
+            wait_reply(&rx, Duration::from_secs(60)).expect("reply")
+        })
+        .collect();
+    let replay = RouterTable::new(vec![parse_route(route).unwrap()], 42)
+        .unwrap();
+    for (i, r) in served.iter().enumerate() {
+        let (rname, backend) =
+            replay.pick("chat", |_| false).unwrap().unwrap();
+        assert_eq!(*rname, "chat");
+        assert_eq!(
+            r.model, backend,
+            "request {i} must land on the replayed pick"
+        );
+        assert_eq!(r.route.as_deref(), Some("chat"));
+    }
+    // side-by-side stats in configured order, tallies exact
+    let per: Vec<(String, u64)> = srv
+        .route_stats("chat")
+        .iter()
+        .map(|(n, s)| (n.clone(), s.accepted.load(Ordering::Relaxed)))
+        .collect();
+    let count =
+        |b: &str| served.iter().filter(|r| r.model == b).count() as u64;
+    assert_eq!(
+        per,
+        vec![("a".to_string(), count("a")), ("b".to_string(), count("b"))]
+    );
+    assert_eq!(count("a") + count("b"), N as u64);
+    // a direct (non-routed) request bypasses the table: no route tag,
+    // no pick-stream draw
+    let rx = srv.submit_spec(greedy_to("a", &[1, 9, 4])).unwrap();
+    let direct = wait_reply(&rx, Duration::from_secs(60)).unwrap();
+    assert_eq!(direct.route, None);
+    assert_eq!(direct.model, "a");
+    srv.shutdown();
+}
+
+/// A cold backend whose artifact vanished goes Down on first wake
+/// (terminal, typed `EngineDown` error — not a hang), and the weighted
+/// split renormalizes onto the surviving peer.
+#[test]
+fn missing_artifact_goes_down_and_routes_fail_over() {
+    let ghost_path = export(&model(621), "ghost");
+    let mut reg = ModelRegistry::new();
+    reg.register("live", model(622)).unwrap();
+    reg.register_cold("ghost", &ghost_path).unwrap();
+    let srv = Server::start_registry(
+        reg,
+        ServeConfig {
+            routes: vec![parse_route("r=ghost:50,live:50").unwrap()],
+            route_seed: 9,
+            default_model: Some("live".into()),
+            ..Default::default()
+        },
+        0,
+    )
+    .unwrap();
+    // the artifact disappears while the engine is parked cold
+    std::fs::remove_file(&ghost_path).unwrap();
+    let rx = srv.submit_spec(greedy_to("ghost", &[1, 2, 3])).unwrap();
+    let err = wait_reply(&rx, Duration::from_secs(60))
+        .expect_err("wake must fail without the artifact")
+        .to_string();
+    assert!(err.contains("failed to wake"), "{err}");
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while srv.engine_health("ghost") != Some(HealthState::Down) {
+        assert!(Instant::now() < deadline, "ghost never went Down");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // every routed request now lands on the survivor
+    for _ in 0..40 {
+        let rx = srv.submit_spec(greedy_to("r", &[1, 9, 4])).unwrap();
+        let r = wait_reply(&rx, Duration::from_secs(60)).expect("failover");
+        assert_eq!(r.model, "live");
+        assert_eq!(r.route.as_deref(), Some("r"));
+    }
+    srv.shutdown();
+}

@@ -278,6 +278,67 @@ fn wire_rejects_prompt_plus_max_new_over_context() {
     srv.shutdown();
 }
 
+/// Weighted routes on the wire: a v1 request addressing the logical
+/// name gets `"route"` echoed back and `"model"` naming the backend
+/// that actually served it; direct addressing stays untagged; and a
+/// v0 request on the same (routed) server keeps the exact frozen
+/// five-key reply — routing must not leak into the v0 surface.
+#[test]
+fn routed_requests_on_the_wire() {
+    use mosaic::serve::router::parse_route;
+    let mut reg = ModelRegistry::new();
+    reg.register("dense", random_model_sized(508, 2, 16, 2, 40, 64, 16))
+        .unwrap();
+    reg.register("canary", random_model_sized(509, 2, 16, 2, 40, 64, 16))
+        .unwrap();
+    let srv = Server::start_registry(
+        reg,
+        ServeConfig {
+            default_model: Some("dense".into()),
+            routes: vec![parse_route("chat=dense:70,canary:30").unwrap()],
+            route_seed: 7,
+            ..Default::default()
+        },
+        0,
+    )
+    .unwrap();
+    let mut c = Client::connect(srv.addr).unwrap();
+    let prompt = [1u16, 9, 4];
+    for _ in 0..8 {
+        let r = c
+            .generate(&GenRequest::greedy(&prompt).max_new(4).model("chat"))
+            .unwrap();
+        assert_eq!(r.route.as_deref(), Some("chat"));
+        let backend = r.model.as_deref().unwrap();
+        assert!(
+            backend == "dense" || backend == "canary",
+            "route must resolve to a real backend, got {backend:?}"
+        );
+    }
+    // direct addressing bypasses the table — no route tag
+    let r = c
+        .generate(&GenRequest::greedy(&prompt).max_new(4).model("dense"))
+        .unwrap();
+    assert_eq!(r.route, None);
+    // v0 on a routed server: exactly the frozen five keys, no leak
+    let mut stream = TcpStream::connect(srv.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    stream
+        .write_all(b"{\"prompt\": [1, 4, 9], \"max_new\": 3}\n")
+        .unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    let keys: Vec<&str> =
+        j.as_obj().unwrap().keys().map(|k| k.as_str()).collect();
+    assert_eq!(
+        keys,
+        vec!["decode_ms", "id", "prefill_ms", "queue_ms", "tokens"],
+        "{line}"
+    );
+    srv.shutdown();
+}
+
 /// Speculative pair over real TCP through the typed client: routed by
 /// pair name or via the "spec" field, byte-identical to the dense
 /// reply, acceptance counters on the wire.
