@@ -5,8 +5,8 @@
 CARGO ?= cargo
 
 .PHONY: build test fmt check bench bench-serve bench-produce \
-	bench-spec bench-kv bench-chaos bench-fleet serve-smoke spec-smoke \
-	fleet-smoke chaos
+	bench-spec bench-kv bench-chaos bench-fleet bench-quant serve-smoke \
+	spec-smoke fleet-smoke quant-smoke chaos
 
 build:
 	$(CARGO) build --release
@@ -25,6 +25,8 @@ check:
 	fi
 	@if $(CARGO) clippy --version >/dev/null 2>&1; then \
 		$(CARGO) clippy --all-targets --features chaos -- -D warnings; \
+		$(CARGO) clippy --all-targets \
+			--features chaos,simd-force-scalar -- -D warnings; \
 	else \
 		echo "make check: clippy unavailable — skipping lint gate"; \
 	fi
@@ -103,6 +105,24 @@ bench-fleet:
 # into pytest via python/tests/test_fleet_smoke.py.
 fleet-smoke:
 	$(CARGO) run --release --example fleet_smoke
+
+# Quantized-storage perf trajectory: sparsity × precision × width sweep
+# over the runtime storage kernels (f32/f16/csr/i8/i4/csr8), every row
+# bit-parity-checked against the decoded-dense oracle before it is
+# recorded, plus the e2e acceptance row (csr8 seal strictly smaller
+# resident than the f16/CSR seal, byte-exact export round trip, TCP
+# serve parity). Emits machine-readable BENCH_quant.json.
+bench-quant:
+	$(CARGO) bench --bench quant_speed
+
+# Quantized-serving smoke (artifact-free): pruned+quantized (i8:32,
+# csr8-sealed) model exported to a header-v3 .mosaic, loaded back and
+# served over real TCP next to its dense parent; asserts resident-size
+# ordering, byte-exact round trip, and greedy parity with a local
+# engine decode. Wired into pytest via
+# python/tests/test_quant_smoke.py.
+quant-smoke:
+	$(CARGO) run --release --example quant_smoke
 
 # Model-production perf trajectory: sequential whole-model pruning vs
 # the streaming layer-parallel pipeline at 1/2/4/8 workers; emits

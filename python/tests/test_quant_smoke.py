@@ -1,0 +1,36 @@
+"""Wire `make quant-smoke` into the pytest-driven run: a registry
+server with a dense model and its pruned+quantized (80% magnitude,
+i8 group-32 GPTQ, csr8/i8-sealed) variant loaded back from a
+header-v3 export, driven over real TCP by the typed rust client
+(examples/quant_smoke.rs). The example asserts the quantized-storage
+contract — strictly smaller resident bytes than the f16/CSR seal,
+byte-exact export round trip, served greedy tokens equal to a local
+engine decode — and prints QUANT-SMOKE OK on success.
+
+Skips when the rust toolchain is not present in the image, mirroring
+test_serve_smoke.py."""
+import os
+import shutil
+import subprocess
+
+import pytest
+
+ROOT = os.path.dirname(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+)
+
+
+def test_quant_smoke():
+    if shutil.which("cargo") is None or shutil.which("make") is None:
+        pytest.skip("cargo/make not available in this image")
+    r = subprocess.run(
+        ["make", "-C", ROOT, "quant-smoke"],
+        capture_output=True,
+        text=True,
+        timeout=3600,
+    )
+    assert r.returncode == 0, (
+        f"make quant-smoke failed\n--- stdout ---\n{r.stdout[-4000:]}"
+        f"\n--- stderr ---\n{r.stderr[-4000:]}"
+    )
+    assert "QUANT-SMOKE OK" in r.stdout, r.stdout[-4000:]

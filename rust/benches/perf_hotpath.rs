@@ -1,5 +1,5 @@
 //! §Perf: L3 hot-path microbenchmarks — matmul/matvec bandwidth, storage
-//! backend (f32/f16/CSR) matvec + decode comparisons, and RC/PC stage
+//! backend (f32/f16/CSR/i8/i4/csr8) matvec + decode comparisons, and RC/PC stage
 //! timing. Used for the before/after log in ARCHITECTURE.md §Perf and as
 //! the roofline anchor for the platform simulator.
 //!
@@ -69,8 +69,10 @@ fn main() -> anyhow::Result<()> {
     println!("matvec {k}x{n}: {gbs:.2} GB/s effective weight stream");
     b.set("matvec_gbs", Json::num(gbs));
 
-    // ---- storage backends: dense-f32 vs f16 vs CSR matvec across
-    //      sparsity levels (the ISSUE-1 acceptance comparison). The
+    // ---- storage backends: dense-f32 vs f16/CSR/i8/i4/csr8 matvec
+    //      across sparsity levels (the ISSUE-1 acceptance comparison;
+    //      quantized rows added for ISSUE 9 — quant_speed.rs has the
+    //      full parity-checked sweep). The
     //      matrix is sized past L2 so the stream cost, not the loop
     //      overhead, dominates — as in a real lm_head/ffn projection.
     {
@@ -87,6 +89,9 @@ fn main() -> anyhow::Result<()> {
                 ("f32", ProjStorage::from_dense(w.clone())),
                 ("f16", ProjStorage::seal_f16(&w)),
                 ("csr", ProjStorage::seal_csr(&w)),
+                ("i8", ProjStorage::seal_i8(&w, 128)),
+                ("i4", ProjStorage::seal_i4(&w, 128)),
+                ("csr8", ProjStorage::seal_csr_i8(&w, 128)),
             ];
             let mut f32_us = 0.0f64;
             for (name, s) in backends.iter() {

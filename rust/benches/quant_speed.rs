@@ -1,0 +1,280 @@
+//! Quantized-storage perf trajectory: the sparsity × precision × width
+//! sweep over the runtime storage kernels (f32/f16/csr/i8/i4/csr8),
+//! plus the end-to-end acceptance row — a pruned+quantized model whose
+//! csr8 seal is strictly smaller resident than its f16/CSR-f16 seal,
+//! round-trips export/load byte-exactly, and serves over real TCP with
+//! greedy output equal to a local engine decode.
+//!
+//! Every kernel row is parity-checked before it is recorded: the sealed
+//! kernel's output must be **bit-identical** to the same kernel run on
+//! the decoded-dense (`to_dense()`) copy of that seal. That is the
+//! subsystem's contract — quantization changes the weights once, at
+//! seal time; the kernels themselves are exact (axpy order fixed, no
+//! FMA) — so parity failures abort the bench rather than record a row.
+//!
+//! Emits `BENCH_quant.json` via `make bench-quant` for cross-PR perf
+//! tracking. Artifact-free: runs on random weights anywhere.
+
+use std::time::Instant;
+
+use mosaic::bench_support::{header, rec, Bench};
+use mosaic::deploy::{self, QuantSpec};
+use mosaic::model::engine::{argmax, decode_step, DecodeState};
+use mosaic::model::weights::testutil::random_model_sized;
+use mosaic::model::ModelWeights;
+use mosaic::prune::unstructured::{mask_lowest, scores, Metric};
+use mosaic::quant::{quantize_model, QuantConfig};
+use mosaic::serve::client::{Client, GenRequest};
+use mosaic::serve::{ModelRegistry, ServeConfig, Server};
+use mosaic::tensor::{matmul_storage, matvec_storage, ProjStorage, Tensor};
+use mosaic::util::json::Json;
+use mosaic::util::rng::Pcg32;
+
+/// Zero a deterministic `sparsity` fraction of a tensor by magnitude.
+fn sparsify(t: &mut Tensor, sparsity: f64) {
+    if sparsity <= 0.0 {
+        return;
+    }
+    let sc = scores(t, None, Metric::Magnitude);
+    mask_lowest(t, &sc, sparsity);
+}
+
+/// One decode pass at `width`: matvec for width 1, matmul above.
+fn run_kernel(
+    s: &ProjStorage,
+    x1: &[f32],
+    xw: &Tensor,
+    width: usize,
+) -> Vec<f32> {
+    if width == 1 {
+        let mut out = vec![0.0f32; s.shape()[1]];
+        matvec_storage(x1, s, &mut out);
+        out
+    } else {
+        matmul_storage(xw, s).data
+    }
+}
+
+/// 70 %-magnitude-pruned random model, GPTQ-quantized to i8 and sealed
+/// through the cost table (256-dim shapes land every projection in the
+/// csr8 window at group 128).
+fn pruned_quantized(seed: u64, n_layers: usize) -> ModelWeights {
+    let mut m = random_model_sized(seed, n_layers, 256, 8, 704, 512, 128);
+    for l in m.layers.iter_mut() {
+        for s in l.projs.iter_mut() {
+            sparsify(s.dense_mut(), 0.7);
+        }
+    }
+    quantize_model(&mut m, None, QuantConfig { bits: 8, group: 128 });
+    m.compact_q(Some(QuantSpec::i8(128)));
+    m
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new(
+        "quant_speed",
+        "quantized storage kernels: sparsity x precision x width",
+    );
+    let mut summary: Vec<Json> = Vec::new();
+    let mut rng = Pcg32::seeded(5);
+
+    // ---- kernel sweep: sized past L2 so the weight stream dominates,
+    //      as in a real lm_head/ffn projection (perf_hotpath sizing)
+    let (k, n) = if Bench::fast() {
+        (256usize, 1024usize)
+    } else {
+        (1024usize, 4096usize)
+    };
+    let sparsities: &[f64] =
+        if Bench::fast() { &[0.0, 0.7] } else { &[0.0, 0.5, 0.7, 0.9] };
+    let widths: &[usize] = if Bench::fast() { &[1, 8] } else { &[1, 2, 8] };
+    let base_reps = if Bench::fast() { 12 } else { 48 };
+
+    let x1: Vec<f32> = (0..k).map(|_| rng.normal()).collect();
+    println!("\n— storage kernels, {k}x{n}, group 128 —");
+    header(&["sparsity", "backend", "width", "us", "vs-f32", "res-KB"]);
+    for &sp in sparsities {
+        let mut w =
+            Tensor::new((0..k * n).map(|_| rng.normal()).collect(), vec![k, n]);
+        sparsify(&mut w, sp);
+        let backends = [
+            ("f32", ProjStorage::from_dense(w.clone())),
+            ("f16", ProjStorage::seal_f16(&w)),
+            ("csr", ProjStorage::seal_csr(&w)),
+            ("i8", ProjStorage::seal_i8(&w, 128)),
+            ("i4", ProjStorage::seal_i4(&w, 128)),
+            ("csr8", ProjStorage::seal_csr_i8(&w, 128)),
+        ];
+        for &width in widths {
+            let xw = Tensor::new(
+                (0..width * k).map(|_| rng.normal()).collect(),
+                vec![width, k],
+            );
+            let mut f32_us = 0.0f64;
+            for (name, s) in backends.iter() {
+                // parity gate: sealed kernel == same kernel over the
+                // decoded-dense copy, bit for bit, before timing
+                let got = run_kernel(s, &x1, &xw, width);
+                let oracle = ProjStorage::from_dense(s.to_dense());
+                let want = run_kernel(&oracle, &x1, &xw, width);
+                for (i, (a, o)) in got.iter().zip(want.iter()).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        o.to_bits(),
+                        "{name} width {width} sparsity {sp}: \
+                         out[{i}] diverged from decoded-dense oracle"
+                    );
+                }
+                let reps = (base_reps / width).max(4);
+                for _ in 0..2 {
+                    run_kernel(s, &x1, &xw, width); // warm
+                }
+                let t0 = Instant::now();
+                for _ in 0..reps {
+                    run_kernel(s, &x1, &xw, width);
+                }
+                let us =
+                    t0.elapsed().as_secs_f64() / reps as f64 * 1e6;
+                if *name == "f32" {
+                    f32_us = us;
+                }
+                let speedup = if us > 0.0 { f32_us / us } else { 0.0 };
+                println!(
+                    "{sp:>12.1}{name:>12}{width:>12}{us:>12.1}\
+                     {speedup:>12.2}{:>12}",
+                    s.resident_bytes() / 1024
+                );
+                let row = rec(&[
+                    ("section", Json::str("kernel_sweep")),
+                    ("sparsity", Json::num(sp)),
+                    ("backend", Json::str(name)),
+                    ("width", Json::num(width as f64)),
+                    ("us", Json::num(us)),
+                    ("speedup_vs_f32", Json::num(speedup)),
+                    (
+                        "resident_bytes",
+                        Json::num(s.resident_bytes() as f64),
+                    ),
+                    ("parity", Json::Bool(true)),
+                ]);
+                b.row("kernel_sweep", row.clone());
+                summary.push(row);
+            }
+        }
+    }
+
+    // ---- e2e acceptance row: pruned+quantized (csr8) vs the f16/CSR
+    //      seal of the same pruned weights — strictly smaller resident,
+    //      byte-exact export round trip, TCP serve parity
+    println!("\n— e2e: pruned 70% + i8:128 quantized, csr8 sealed —");
+    let n_layers = if Bench::fast() { 2 } else { 4 };
+    let q = pruned_quantized(9, n_layers);
+    let csr8_projs = q
+        .layers
+        .iter()
+        .flat_map(|l| l.projs.iter())
+        .filter(|s| s.encoding_name() == "csr8")
+        .count();
+    assert!(csr8_projs > 0, "no projection landed in the csr8 window");
+    let mut f16_seal = pruned_quantized(9, n_layers);
+    f16_seal.decompact();
+    f16_seal.compact(); // same (quantize-rounded) weights, no QuantSpec
+    assert!(
+        q.resident_bytes() < f16_seal.resident_bytes(),
+        "csr8 seal must be strictly smaller resident: {} vs {}",
+        q.resident_bytes(),
+        f16_seal.resident_bytes()
+    );
+    println!(
+        "csr8 seal {} KB vs f16/csr seal {} KB ({csr8_projs} csr8 projs)",
+        q.resident_bytes() / 1024,
+        f16_seal.resident_bytes() / 1024
+    );
+
+    // byte-exact export / load / re-export
+    let path = std::env::temp_dir().join("mosaic_quant_speed.mosaic");
+    let path2 = std::env::temp_dir().join("mosaic_quant_speed2.mosaic");
+    let shipped = deploy::export_model(&q, &path)?;
+    let loaded = deploy::load_encoded(&path)?;
+    assert_eq!(q.resident_bytes(), loaded.resident_bytes());
+    deploy::export_model(&loaded, &path2)?;
+    assert_eq!(
+        std::fs::read(&path)?,
+        std::fs::read(&path2)?,
+        "re-export of the loaded model must be the same file"
+    );
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&path2).ok();
+    println!("export round trip byte-exact ({shipped} B shipped)");
+
+    // serve over real TCP; greedy replies must equal a local decode
+    let local = loaded;
+    let mut reg = ModelRegistry::new();
+    reg.register("q70i8", q)?;
+    let srv = Server::start_registry(reg, ServeConfig::default(), 0)?;
+    let mut client = Client::connect(srv.addr)?;
+    let max_new = 8usize;
+    let mut served_tokens = 0usize;
+    let t0 = Instant::now();
+    for prompt in [vec![2u16, 9, 4], vec![1, 7, 3, 5]] {
+        let r = client.generate(
+            &GenRequest::greedy(&prompt).max_new(max_new).model("q70i8"),
+        )?;
+        let mut st = DecodeState::new(&local, local.cfg.ctx);
+        for &t in &prompt[..prompt.len() - 1] {
+            decode_step(&local, &mut st, t);
+        }
+        let mut want = Vec::new();
+        let mut last = *prompt.last().unwrap();
+        for _ in 0..max_new {
+            let logits = decode_step(&local, &mut st, last);
+            last = argmax(logits) as u16;
+            want.push(last);
+        }
+        assert_eq!(
+            r.tokens, want,
+            "served greedy tokens must match the local engine"
+        );
+        served_tokens += r.tokens.len();
+    }
+    let serve_tok_per_s = served_tokens as f64 / t0.elapsed().as_secs_f64();
+    srv.shutdown();
+    println!(
+        "served {served_tokens} greedy tokens over TCP \
+         ({serve_tok_per_s:.0} tok/s), parity with local decode"
+    );
+    let row = rec(&[
+        ("section", Json::str("quant_e2e")),
+        ("sparsity", Json::num(0.7)),
+        ("quant", Json::str("i8:128")),
+        ("csr8_projs", Json::num(csr8_projs as f64)),
+        ("resident_bytes", Json::num(local.resident_bytes() as f64)),
+        (
+            "resident_bytes_f16_seal",
+            Json::num(f16_seal.resident_bytes() as f64),
+        ),
+        (
+            "resident_ratio",
+            Json::num(
+                local.resident_bytes() as f64
+                    / f16_seal.resident_bytes() as f64,
+            ),
+        ),
+        ("shipped_bytes", Json::num(shipped as f64)),
+        ("serve_tok_per_s", Json::num(serve_tok_per_s)),
+        ("parity", Json::Bool(true)),
+    ]);
+    b.row("quant_e2e", row.clone());
+    summary.push(row);
+
+    // machine-readable perf-trajectory file (make bench-quant)
+    let mut out = Json::obj();
+    out.set("bench", Json::str("quant_speed"));
+    out.set("shape", Json::str(&format!("{k}x{n}")));
+    out.set("rows", Json::Arr(summary));
+    std::fs::write("BENCH_quant.json", out.to_string())?;
+    println!("[wrote BENCH_quant.json]");
+
+    b.finish();
+    Ok(())
+}

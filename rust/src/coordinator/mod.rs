@@ -222,7 +222,10 @@ impl Mosaic {
     /// pass (stats and/or Grams, as `opts.kind` requires), then layers
     /// are ranked, pruned and sealed across the worker pool — the
     /// sealed model plus per-stage wall/busy times and the working-set
-    /// high-water mark come back in the [`ProduceReport`].
+    /// high-water mark come back in the [`ProduceReport`]. With
+    /// `opts.quant` set, each projection is GPTQ-quantized against the
+    /// captured activation energy before sealing, so pruned+quantized
+    /// variants (i8/i4/csr8 storage) flow through this same path.
     pub fn produce(
         &mut self,
         plan: &PruningPlan,

@@ -17,7 +17,10 @@
 //!                  [--spec target:draft@k[,name=target:draft@k...]]
 //!                  [--default-model NAME] [--stream 0|1]
 //!                  [--batch 8] [--queue 64] [--port 7171] [--seal 0|1]
+//!                  [--quant i8[:group]|i4[:group]]
 //!                  [--deadline-ms 0] [--drain-ms 5000] [--max-restarts 3]
+//!   mosaic export  --model tl1_7 --p 0.6 [--quant i8:128]
+//!                  [--out model.mosaic]
 //!   mosaic pipeline --model tl1_7 --p 0.6                (end-to-end)
 
 use anyhow::{bail, Result};
@@ -80,6 +83,27 @@ fn parse_category(s: &str) -> Result<Category> {
         "composite" => Category::Composite,
         _ => bail!("category must be unstructured|structured|composite"),
     })
+}
+
+/// `--quant i8[:group]|i4[:group]` → storage quantization spec
+/// (absent = serve/ship f16/CSR-f16 as before).
+fn parse_quant(args: &Args) -> Result<Option<mosaic::deploy::QuantSpec>> {
+    match args.get("quant", "") {
+        s if s.is_empty() => Ok(None),
+        s => Ok(Some(mosaic::deploy::QuantSpec::parse(&s)?)),
+    }
+}
+
+/// GPTQ error feedback (uniform — the CLI seal paths carry no
+/// calibration stats, keeping them deterministic), then seal every
+/// projection onto the quantized storage grid.
+fn quantize_and_seal(
+    m: &mut mosaic::model::ModelWeights,
+    q: mosaic::deploy::QuantSpec,
+) {
+    let cfg = mosaic::quant::QuantConfig { bits: q.bits, group: q.group };
+    mosaic::quant::quantize_model(m, None, cfg);
+    m.compact_q(Some(q));
 }
 
 fn main() -> Result<()> {
@@ -292,6 +316,11 @@ fn cmd_deploy(args: &Args) -> Result<()> {
 /// with `"model": "dense:sealed70@4"` (or via the `"spec"` request
 /// field on the target model).
 ///
+/// `--quant i8[:group]|i4[:group]` quantizes every *sealed* entry's
+/// storage (the dense `--seal 1` path and the pruned production path):
+/// GPTQ error feedback first, then the deploy cost table picks
+/// i8/i4/csr8 per projection. `--seal 0` entries stay exact f32.
+///
 /// Fleet flags: `--cold name=file.mosaic` registers sealed artifacts
 /// **cold** (no resident weights; the first request wakes them), and
 /// `--idle-ms N` unloads a woken cold entry after N ms without work
@@ -304,6 +333,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let mut mo = Mosaic::load(&args.get("model", "tl1_7"))?;
     let n = args.usize("samples", DEFAULT_CALIB_SAMPLES);
+    let quant = parse_quant(args)?;
     let legacy_p = args.f64("p", 0.0);
     let specs = args.get(
         "models",
@@ -325,12 +355,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
             None => (None, spec),
         };
         if source == "dense" {
-            // --seal 1 runs even the dense weights on f16 storage;
-            // default 0 serves the exact f32 the quality numbers were
-            // measured on
+            // --seal 1 runs even the dense weights on f16 storage
+            // (i8/i4 with --quant); default 0 serves the exact f32 the
+            // quality numbers were measured on
             let mut m = mo.dense.clone();
             if args.usize("seal", 0) != 0 {
-                m.compact();
+                match quant {
+                    Some(q) => quantize_and_seal(&mut m, q),
+                    None => m.compact(),
+                }
             }
             let name = name_opt.unwrap_or_else(|| "dense".into());
             println!(
@@ -363,6 +396,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 };
                 let opts = ProduceOpts {
                     n_samples: n,
+                    quant,
                     ..ProduceOpts::new(kind)
                 };
                 let (wall_ms, resident) =
@@ -539,15 +573,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
 }
 
-/// Export a pruned model in the deployment format (f16/CSR blobs).
+/// Export a pruned model in the deployment format (f16/CSR blobs;
+/// i8/i4/csr8 with `--quant`).
 fn cmd_export(args: &Args) -> Result<()> {
     let mut mo = Mosaic::load(&args.get("model", "tl1_7"))?;
     let p = args.f64("p", 0.6);
     let u = parse_uniformity(&args.get("uniformity", "projection"))?;
     let c = parse_category(&args.get("category", "composite"))?;
     let n = args.usize("samples", DEFAULT_CALIB_SAMPLES);
+    let quant = parse_quant(args)?;
     let (mut m, _) = mo.prune(p, u, c, n)?;
-    m.compact(); // seal into the storage backends the file will carry
+    // seal into the storage backends the file will carry
+    match quant {
+        Some(q) => quantize_and_seal(&mut m, q),
+        None => m.compact(),
+    }
     let out = args.get("out", "model.mosaic");
     let bytes =
         mosaic::deploy::export_model(&m, std::path::Path::new(&out))?;

@@ -140,10 +140,19 @@ impl ModelWeights {
     /// otherwise. After this, `proj_mut`/`proj_dense` panic — the model
     /// is in serving form. Inverse: [`ModelWeights::decompact`].
     pub fn compact(&mut self) {
+        self.compact_q(None);
+    }
+
+    /// [`ModelWeights::compact`] with an optional quantization spec,
+    /// which unlocks the i8/i4/csr8 backends in the encoding choice.
+    /// Sealing quantizes round-to-nearest onto the storage grid; run
+    /// `quant::quantize_model` first if you want GPTQ error feedback
+    /// baked in before the grid snap.
+    pub fn compact_q(&mut self, quant: Option<crate::deploy::QuantSpec>) {
         for l in &mut self.layers {
             for s in l.projs.iter_mut() {
                 if let ProjStorage::DenseF32(t) = &*s {
-                    *s = crate::deploy::seal_auto(t);
+                    *s = crate::deploy::seal_auto_q(t, quant);
                 }
             }
         }

@@ -248,15 +248,24 @@ pub struct ProduceOpts {
     pub workers: usize,
     /// Calibration samples for the capture stage (coordinator path).
     pub n_samples: usize,
+    /// Quantize each pruned projection (GPTQ error feedback against the
+    /// captured activation energy, when the pruner collected any) and
+    /// seal into the i8/i4/csr8 backends instead of f16/CSR-f16.
+    pub quant: Option<crate::deploy::QuantSpec>,
 }
 
 impl ProduceOpts {
     pub fn new(kind: PrunerKind) -> Self {
-        ProduceOpts { kind, workers: 0, n_samples: 16 }
+        ProduceOpts { kind, workers: 0, n_samples: 16, quant: None }
     }
 
     pub fn with_workers(mut self, workers: usize) -> Self {
         self.workers = workers;
+        self
+    }
+
+    pub fn with_quant(mut self, quant: crate::deploy::QuantSpec) -> Self {
+        self.quant = Some(quant);
         self
     }
 }
@@ -435,13 +444,32 @@ pub fn produce_with_snapshot(
             bump(&cur, &peak, shrunk_b as isize - dense_b as isize);
         }
         let t = Instant::now();
-        for s in layer.projs.iter_mut() {
+        for (pi, s) in layer.projs.iter_mut().enumerate() {
             if s.is_dense_f32() {
                 // projection-granular swap: the sealed buffer and the
                 // dense one only coexist for a single projection, so
                 // the in-flight overlap stays ~one projection wide
                 let db = s.resident_bytes();
-                let sealed = crate::deploy::seal_auto(s.dense());
+                if let Some(q) = opts.quant {
+                    // GPTQ feedback before the grid snap; structured
+                    // pruning may have shrunk the input dim, so only
+                    // use the captured energy when rows still line up
+                    let cfg = crate::quant::QuantConfig {
+                        bits: q.bits,
+                        group: q.group,
+                    };
+                    let act = ctx.acts.and_then(|a| {
+                        let row = a[pi].as_slice();
+                        (row.len() == s.dense().shape[0]).then_some(row)
+                    });
+                    crate::quant::gptq::quantize_projection(
+                        s.dense_mut(),
+                        act,
+                        cfg,
+                    );
+                }
+                let sealed =
+                    crate::deploy::seal_auto_q(s.dense(), opts.quant);
                 bump(&cur, &peak, sealed.resident_bytes() as isize);
                 *s = sealed;
                 bump(&cur, &peak, -(db as isize));

@@ -1,5 +1,6 @@
 //! GPTQ-lite: group-wise symmetric quantizer with error feedback.
 
+use crate::deploy::{encoded_bytes_dims, Encoding, ProjDims, QuantSpec};
 use crate::model::config::Proj;
 use crate::model::ModelWeights;
 use crate::rank::ActivationStats;
@@ -21,11 +22,45 @@ impl QuantConfig {
     pub fn qmax(&self) -> i32 {
         (1 << (self.bits - 1)) - 1
     }
-    /// Weight-file compression vs f16 (the paper's Comp. column compares
-    /// against FP16 storage; scales add ~0.5 bit per group element).
+    /// The [`QuantSpec`] this config seals runtime storage under — None
+    /// for bit widths with no storage backend (2/3-bit stay simulated).
+    pub fn spec(&self) -> Option<QuantSpec> {
+        match self.bits {
+            8 => Some(QuantSpec::i8(self.group)),
+            4 => Some(QuantSpec::i4(self.group)),
+            _ => None,
+        }
+    }
+    /// Weight-file compression vs f16 for a rows × cols projection,
+    /// priced by the deployment cost model — the same byte formulas
+    /// `encode`/`resident_bytes()` obey, so quant reports can't drift
+    /// from runtime truth. Bit widths without a runtime backend fall
+    /// back to an analytic packed-codes + f32-scale-rows estimate.
+    pub fn compression_vs_f16_dims(&self, rows: usize, cols: usize) -> f64 {
+        let d = ProjDims { rows, cols, nnz: rows * cols };
+        let f16 = encoded_bytes_dims(&d, Encoding::DenseF16, None) as f64;
+        let q = match self.spec() {
+            Some(spec) => {
+                let e = if self.bits == 8 {
+                    Encoding::DenseI8
+                } else {
+                    Encoding::GroupedI4
+                };
+                encoded_bytes_dims(&d, e, Some(spec)) as f64
+            }
+            None => {
+                let packed = (self.bits as usize * rows * cols).div_ceil(8);
+                (packed + 4 * rows.div_ceil(self.group) * cols) as f64
+            }
+        };
+        f16 / q
+    }
+    /// Compression vs f16 at the paper's reference projection size
+    /// (Table XIII quotes 4096-class models); `group` overrides the
+    /// config's group, matching the historical call shape.
     pub fn compression_vs_f16(&self, group: usize) -> f64 {
-        let bits_per_w = self.bits as f64 + 16.0 / group as f64;
-        16.0 / bits_per_w
+        QuantConfig { bits: self.bits, group }
+            .compression_vs_f16_dims(4096, 4096)
     }
 }
 
@@ -48,8 +83,12 @@ pub fn quantize_projection(
                 absmax = absmax.max(w.data[j * m + col].abs());
             }
             let scale = if absmax > 0.0 { absmax / qmax } else { 1.0 };
-            // quantize rows in order; push error onto later rows scaled
-            // by relative activation energy (diagonal-Hessian GPTQ).
+            // quantize rows in order; push error onto the next LIVE
+            // (nonzero) row scaled by its activation share among live
+            // rows (diagonal-Hessian GPTQ). Pruned entries never absorb
+            // feedback — the sparsity mask must survive quantization so
+            // CSR sealing still pays off. On a dense column this is
+            // exactly the historical next-row rule.
             for j in g0..g1 {
                 let v = w.data[j * m + col];
                 let q = (v / scale).round().clamp(-qmax, qmax);
@@ -57,20 +96,28 @@ pub fn quantize_projection(
                 let err = v - dq;
                 mse += (err as f64) * (err as f64);
                 w.data[j * m + col] = dq;
-                if j + 1 < g1 {
-                    // error feedback weight: next row's activation share
+                let jt = (j + 1..g1)
+                    .find(|&jj| w.data[jj * m + col] != 0.0);
+                if let Some(jt) = jt {
                     let share = match act_sq {
                         Some(a) => {
-                            let denom: f32 = a[j + 1..g1]
-                                .iter()
-                                .map(|x| x.sqrt())
+                            let denom: f32 = (j + 1..g1)
+                                .filter(|&jj| w.data[jj * m + col] != 0.0)
+                                .map(|jj| a[jj].sqrt())
                                 .sum::<f32>()
                                 .max(1e-12);
-                            a[j + 1].sqrt() / denom
+                            a[jt].sqrt() / denom
                         }
-                        None => 1.0 / (g1 - j - 1) as f32,
+                        None => {
+                            let live = (j + 1..g1)
+                                .filter(|&jj| {
+                                    w.data[jj * m + col] != 0.0
+                                })
+                                .count();
+                            1.0 / live as f32
+                        }
                     };
-                    w.data[(j + 1) * m + col] += err * share;
+                    w.data[jt * m + col] += err * share;
                 }
             }
         }
@@ -168,6 +215,51 @@ mod tests {
             .map(|(x, y)| (x - y).abs())
             .fold(0f32, f32::max);
         assert!(max_rel < 0.3, "8-bit drift {max_rel}");
+    }
+
+    #[test]
+    fn error_feedback_preserves_pruning_mask() {
+        // 70%-pruned projection: after quantization (with and without
+        // activation weighting) every masked entry must still be zero,
+        // or CSR sealing would silently lose its nnz advantage
+        let mut r = Pcg32::seeded(94);
+        let mut w = Tensor::new(
+            (0..64 * 32).map(|_| r.normal()).collect(),
+            vec![64, 32],
+        );
+        for (i, v) in w.data.iter_mut().enumerate() {
+            if i % 10 < 7 {
+                *v = 0.0;
+            }
+        }
+        let mask: Vec<bool> = w.data.iter().map(|&v| v == 0.0).collect();
+        let acts: Vec<f32> = (0..64).map(|_| r.f64() as f32 + 0.1).collect();
+        for act in [None, Some(acts.as_slice())] {
+            let mut wc = w.clone();
+            quantize_projection(&mut wc, act, QuantConfig::new(8));
+            for (i, &was_zero) in mask.iter().enumerate() {
+                if was_zero {
+                    assert_eq!(wc.data[i], 0.0, "mask lost at {i}");
+                }
+            }
+            // live entries still carry signal
+            assert!(wc.data.iter().any(|&v| v != 0.0));
+        }
+    }
+
+    #[test]
+    fn compression_routed_through_storage_formulas() {
+        // the ratio must equal f16-bytes / cost-table-bytes exactly
+        let cfg = QuantConfig { bits: 8, group: 128 };
+        let d = ProjDims { rows: 4096, cols: 4096, nnz: 4096 * 4096 };
+        let want = encoded_bytes_dims(&d, Encoding::DenseF16, None) as f64
+            / encoded_bytes_dims(&d, Encoding::DenseI8, cfg.spec()) as f64;
+        assert_eq!(cfg.compression_vs_f16(128), want);
+        let c4 = QuantConfig { bits: 4, group: 128 };
+        let want4 = encoded_bytes_dims(&d, Encoding::DenseF16, None) as f64
+            / encoded_bytes_dims(&d, Encoding::GroupedI4, c4.spec())
+                as f64;
+        assert_eq!(c4.compression_vs_f16(128), want4);
     }
 
     #[test]

@@ -3,8 +3,14 @@
 //!
 //! Group-128 symmetric quantization to b ∈ {2,3,4,8} bits with greedy
 //! error feedback along the input dimension (a diagonal-Hessian GPTQ):
-//! quantizing row j pushes its rounding error onto the not-yet-quantized
-//! rows weighted by their calibration activation energy.
+//! quantizing row j pushes its rounding error onto the next not-yet-
+//! quantized *live* row weighted by calibration activation energy —
+//! pruned entries never absorb feedback, so sparsity masks survive.
+//!
+//! 8- and 4-bit output seals into real runtime storage (DenseI8 /
+//! GroupedI4 / csr8 — see `deploy::seal_auto_q` and
+//! ARCHITECTURE.md §Storage backends); other widths stay simulated
+//! (dequantized f32) for the Table XIII sweeps.
 
 pub mod gptq;
 

@@ -6,13 +6,19 @@
 //! this is the L3 deployment hot path (see ARCHITECTURE.md §Perf).
 //!
 //! [`storage`] holds the runtime projection storage backends (dense
-//! f32/f16 and CSR) plus the storage-aware kernels the engine
-//! dispatches through.
+//! f32/f16/i8/i4 and CSR with f16 or i8 values) plus the storage-aware
+//! kernels the engine dispatches through. [`simd`] is the runtime
+//! AVX2/NEON/scalar dispatch layer every inner loop here and in
+//! [`storage`] funnels through — bit-identical across backends by
+//! construction, so the parallel-vs-serial and width-parity suites in
+//! this file keep holding on any host.
 
+pub mod simd;
 pub mod storage;
 
 pub use storage::{
-    matmul_storage, matmul_storage_into, matvec_storage, ProjStorage,
+    matmul_storage, matmul_storage_into, matvec_storage, CsrVals,
+    ProjStorage,
 };
 
 use crate::util::threadpool::{n_threads, par_chunks_mut};
@@ -131,9 +137,7 @@ pub fn matmul_into(x: &Tensor, w: &Tensor, out: &mut [f32]) {
                     continue;
                 }
                 let orow = &mut ochunk[r * n..(r + 1) * n];
-                for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
-                    *o += xv * wv;
-                }
+                simd::axpy(xv, wrow, orow);
             }
         }
     });
@@ -150,10 +154,7 @@ pub fn matvec(x: &[f32], w: &Tensor, out: &mut [f32]) {
         if xv == 0.0 {
             continue;
         }
-        let wrow = &wd[kk * n..kk * n + n];
-        for (o, &wv) in out.iter_mut().zip(wrow.iter()) {
-            *o += xv * wv;
-        }
+        simd::axpy(xv, &wd[kk * n..kk * n + n], out);
     }
 }
 
@@ -184,10 +185,7 @@ pub fn matvec_par(x: &[f32], w: &Tensor, out: &mut [f32]) {
             if xv == 0.0 {
                 continue;
             }
-            let wrow = &wd[kk * n + j0..kk * n + j0 + oc.len()];
-            for (o, &wv) in oc.iter_mut().zip(wrow.iter()) {
-                *o += xv * wv;
-            }
+            simd::axpy(xv, &wd[kk * n + j0..kk * n + j0 + oc.len()], oc);
         }
     });
 }
@@ -235,9 +233,7 @@ pub fn matmul_colpar(
                     continue;
                 }
                 let orow = &mut chunk[r * block..r * block + bn];
-                for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
-                    *o += xv * wv;
-                }
+                simd::axpy(xv, wrow, orow);
             }
         }
     });

@@ -1,0 +1,885 @@
+//! Runtime-dispatched SIMD kernel primitives for the storage hot path.
+//!
+//! Every [`crate::tensor::storage::ProjStorage`] kernel (f16-LUT, i8/i4
+//! dequant, CSR traversal) funnels its inner loop through the fixed-order
+//! primitives in this module. A backend is selected **once per process**
+//! ([`active`]) from runtime CPU-feature detection — AVX2 on x86_64, NEON
+//! on aarch64, portable chunked scalar everywhere else — and can be
+//! overridden for testing with the `MOSAIC_SIMD` env var
+//! (`scalar`/`avx2`/`neon`; silently falls back to detection when the
+//! requested backend is unavailable on this host) or pinned to scalar at
+//! compile time with the test-only `simd-force-scalar` feature.
+//!
+//! # The bit-identity rule
+//!
+//! Every backend must produce **bit-identical f32 results** to the
+//! [`Backend::Scalar`] reference for every primitive. This is what keeps
+//! the engine's frozen-output guarantees (serve protocol v0 bytes,
+//! width-1/2/8 parity, parallel-vs-serial `assert_eq!` suites) valid on
+//! any host. Two rules make it hold:
+//!
+//! * **No FMA.** Vector arms use mul-then-add (`_mm256_mul_ps` +
+//!   `_mm256_add_ps`, `vmulq_f32` + `vaddq_f32`) — never fused
+//!   multiply-add, which rounds once where the scalar expression
+//!   `out + a * w` rounds twice. Elementwise primitives (`axpy*`,
+//!   `decode_*`) are then bit-identical lane by lane because IEEE-754
+//!   ops are deterministic.
+//! * **Fixed reduction order.** [`Backend::dot`] accumulates into 8
+//!   logical lanes (`lane[j] += x[8c+j] * y[8c+j]`, chunk-ascending),
+//!   combines them with the fixed tree [`combine8`], then folds the tail
+//!   sequentially. All backends implement exactly this order (NEON uses
+//!   two 4-wide registers for the same 8 logical lanes), so the sum is
+//!   one well-defined float, not "whatever the hardware summed".
+//!
+//! Gather-bound primitives (i4 nibble unpack, CSR column scatter) share
+//! the scalar loop on every backend — they don't vectorize profitably
+//! without AVX-512/VBMI, and sharing the loop makes bit-identity free.
+//!
+//! Property tests at the bottom compare every primitive on every backend
+//! [`available`] on the running host against the scalar reference,
+//! bitwise.
+
+use std::sync::OnceLock;
+
+use crate::util::f16;
+
+/// One SIMD instruction-set backend. All variants exist on every target;
+/// arch-specific dispatch arms are compiled per target and fall back to
+/// the scalar reference when the variant has no native implementation
+/// there (dispatch methods verify availability before entering `unsafe`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Portable chunked scalar reference — the semantics every other
+    /// backend must reproduce bit-for-bit.
+    Scalar,
+    /// 8-wide AVX2 (x86_64, runtime-detected).
+    Avx2,
+    /// 4-wide NEON (aarch64, runtime-detected).
+    Neon,
+}
+
+impl Backend {
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Avx2 => "avx2",
+            Backend::Neon => "neon",
+        }
+    }
+}
+
+fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+fn neon_available() -> bool {
+    #[cfg(target_arch = "aarch64")]
+    {
+        std::arch::is_aarch64_feature_detected!("neon")
+    }
+    #[cfg(not(target_arch = "aarch64"))]
+    {
+        false
+    }
+}
+
+fn detect() -> Backend {
+    // Test-only compile-time pin: the clippy/dispatch-parity gate builds
+    // with `--features simd-force-scalar` to lint and exercise the
+    // scalar path even on SIMD-capable CI hosts.
+    if cfg!(feature = "simd-force-scalar") {
+        return Backend::Scalar;
+    }
+    if let Ok(v) = std::env::var("MOSAIC_SIMD") {
+        match v.as_str() {
+            "scalar" => return Backend::Scalar,
+            "avx2" if avx2_available() => return Backend::Avx2,
+            "neon" if neon_available() => return Backend::Neon,
+            // Unknown or unavailable override: fall through to detection
+            // rather than crash a serving process over an env typo.
+            _ => {}
+        }
+    }
+    if avx2_available() {
+        Backend::Avx2
+    } else if neon_available() {
+        Backend::Neon
+    } else {
+        Backend::Scalar
+    }
+}
+
+static ACTIVE: OnceLock<Backend> = OnceLock::new();
+
+/// The process-wide backend, selected on first use and never changed —
+/// one decision per process, so there is no per-call branch ambiguity
+/// and every kernel in a serving run took the same code path.
+pub fn active() -> Backend {
+    *ACTIVE.get_or_init(detect)
+}
+
+/// Backends usable on the running host (always includes `Scalar`).
+/// The property suites iterate this to prove bit-identity per host.
+pub fn available() -> Vec<Backend> {
+    let mut v = vec![Backend::Scalar];
+    if avx2_available() {
+        v.push(Backend::Avx2);
+    }
+    if neon_available() {
+        v.push(Backend::Neon);
+    }
+    v
+}
+
+/// Decode LUT: all 65536 f16 bit patterns widened once. 256 KiB,
+/// amortized across every f16 matvec/matmul/decode in the process.
+pub fn f16_table() -> &'static [f32; 65536] {
+    static TABLE: OnceLock<Box<[f32; 65536]>> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = vec![0.0f32; 65536].into_boxed_slice();
+        for (i, slot) in t.iter_mut().enumerate() {
+            *slot = f16::from_bits(i as u16);
+        }
+        t.try_into().unwrap()
+    })
+}
+
+/// Fixed 8-lane combine tree for [`Backend::dot`]: every backend folds
+/// its lane sums through exactly this association.
+#[inline]
+pub fn combine8(l: &[f32; 8]) -> f32 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+/// Sign-extend one 4-bit nibble (`hi` selects the high half of the
+/// byte). Canonical i4 layout: element `j` lives in `packed[j/2]`, even
+/// `j` in the low nibble.
+#[inline]
+pub fn unpack_nib(b: u8, hi: bool) -> i8 {
+    if hi {
+        (b as i8) >> 4
+    } else {
+        ((b << 4) as i8) >> 4
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scalar reference implementations (the semantics).
+// Chunked by 8 where it helps autovectorization; for elementwise ops the
+// chunking is semantically invisible (per-element mul+add either way).
+// ---------------------------------------------------------------------
+
+fn axpy_scalar(a: f32, w: &[f32], out: &mut [f32]) {
+    let mut oc = out.chunks_exact_mut(8);
+    let mut wc = w.chunks_exact(8);
+    for (o8, w8) in oc.by_ref().zip(wc.by_ref()) {
+        for i in 0..8 {
+            o8[i] += a * w8[i];
+        }
+    }
+    for (o, &wv) in oc.into_remainder().iter_mut().zip(wc.remainder()) {
+        *o += a * wv;
+    }
+}
+
+fn axpy_f16_scalar(a: f32, bits: &[u16], lut: &[f32; 65536], out: &mut [f32]) {
+    for (o, &h) in out.iter_mut().zip(bits) {
+        *o += a * lut[h as usize];
+    }
+}
+
+fn axpy_i8_scalar(a: f32, vals: &[i8], scales: &[f32], out: &mut [f32]) {
+    for i in 0..out.len() {
+        // Two roundings, in this order: wv = q·s, then out += a·wv.
+        let wv = vals[i] as f32 * scales[i];
+        out[i] += a * wv;
+    }
+}
+
+fn axpy_i4_scalar(a: f32, packed: &[u8], scales: &[f32], out: &mut [f32]) {
+    for j in 0..out.len() {
+        let q = unpack_nib(packed[j / 2], j & 1 == 1);
+        // Zero-skip is part of the canonical algorithm (pruned weights
+        // stay inline in i4 rows), so every backend must share it.
+        if q != 0 {
+            let wv = q as f32 * scales[j];
+            out[j] += a * wv;
+        }
+    }
+}
+
+fn dot_scalar(x: &[f32], y: &[f32]) -> f32 {
+    let n = x.len();
+    let main = n - n % 8;
+    let mut lanes = [0.0f32; 8];
+    let mut i = 0;
+    while i < main {
+        for j in 0..8 {
+            lanes[j] += x[i + j] * y[i + j];
+        }
+        i += 8;
+    }
+    let mut acc = combine8(&lanes);
+    while i < n {
+        acc += x[i] * y[i];
+        i += 1;
+    }
+    acc
+}
+
+fn decode_f16_scalar(bits: &[u16], lut: &[f32; 65536], out: &mut [f32]) {
+    for (o, &h) in out.iter_mut().zip(bits) {
+        *o = lut[h as usize];
+    }
+}
+
+fn decode_i8_scalar(vals: &[i8], scales: &[f32], out: &mut [f32]) {
+    for i in 0..out.len() {
+        out[i] = vals[i] as f32 * scales[i];
+    }
+}
+
+fn decode_i4_scalar(packed: &[u8], scales: &[f32], out: &mut [f32]) {
+    for j in 0..out.len() {
+        out[j] = unpack_nib(packed[j / 2], j & 1 == 1) as f32 * scales[j];
+    }
+}
+
+fn csr_axpy_f16_scalar(
+    a: f32,
+    cols: &[u16],
+    vals: &[u16],
+    lut: &[f32; 65536],
+    out: &mut [f32],
+) {
+    for (&c, &v) in cols.iter().zip(vals) {
+        out[c as usize] += a * lut[v as usize];
+    }
+}
+
+fn csr_axpy_i8_scalar(
+    a: f32,
+    cols: &[u16],
+    vals: &[i8],
+    scales_row: &[f32],
+    out: &mut [f32],
+) {
+    for (&c, &v) in cols.iter().zip(vals) {
+        let j = c as usize;
+        let wv = v as f32 * scales_row[j];
+        out[j] += a * wv;
+    }
+}
+
+// ---------------------------------------------------------------------
+// AVX2 (x86_64). Every fn is mul+add — never fmadd — and runs the same
+// scalar tail loop past the last full 8-wide chunk.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(a: f32, w: &[f32], out: &mut [f32]) {
+        let n = w.len();
+        let main = n - n % 8;
+        let va = _mm256_set1_ps(a);
+        let mut i = 0;
+        while i < main {
+            let vw = _mm256_loadu_ps(w.as_ptr().add(i));
+            let vo = _mm256_loadu_ps(out.as_ptr().add(i));
+            let r = _mm256_add_ps(vo, _mm256_mul_ps(va, vw));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), r);
+            i += 8;
+        }
+        while i < n {
+            out[i] += a * w[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_f16(
+        a: f32,
+        bits: &[u16],
+        lut: &[f32; 65536],
+        out: &mut [f32],
+    ) {
+        let n = bits.len();
+        let main = n - n % 8;
+        let va = _mm256_set1_ps(a);
+        let mut i = 0;
+        while i < main {
+            let h = _mm_loadu_si128(bits.as_ptr().add(i) as *const __m128i);
+            let idx = _mm256_cvtepu16_epi32(h);
+            let vw = _mm256_i32gather_ps::<4>(lut.as_ptr(), idx);
+            let vo = _mm256_loadu_ps(out.as_ptr().add(i));
+            let r = _mm256_add_ps(vo, _mm256_mul_ps(va, vw));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), r);
+            i += 8;
+        }
+        while i < n {
+            out[i] += a * lut[bits[i] as usize];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_i8(
+        a: f32,
+        vals: &[i8],
+        scales: &[f32],
+        out: &mut [f32],
+    ) {
+        let n = vals.len();
+        let main = n - n % 8;
+        let va = _mm256_set1_ps(a);
+        let mut i = 0;
+        while i < main {
+            let q8 = _mm_loadl_epi64(vals.as_ptr().add(i) as *const __m128i);
+            let q32 = _mm256_cvtepi8_epi32(q8);
+            // cvtepi32→ps is exact for |q| ≤ 127; q·s then rounds once,
+            // exactly like the scalar `vals[i] as f32 * scales[i]`.
+            let vq = _mm256_cvtepi32_ps(q32);
+            let vs = _mm256_loadu_ps(scales.as_ptr().add(i));
+            let vw = _mm256_mul_ps(vq, vs);
+            let vo = _mm256_loadu_ps(out.as_ptr().add(i));
+            let r = _mm256_add_ps(vo, _mm256_mul_ps(va, vw));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), r);
+            i += 8;
+        }
+        while i < n {
+            let wv = vals[i] as f32 * scales[i];
+            out[i] += a * wv;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot(x: &[f32], y: &[f32]) -> f32 {
+        let n = x.len();
+        let main = n - n % 8;
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < main {
+            let p = _mm256_mul_ps(
+                _mm256_loadu_ps(x.as_ptr().add(i)),
+                _mm256_loadu_ps(y.as_ptr().add(i)),
+            );
+            acc = _mm256_add_ps(acc, p);
+            i += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut t = super::combine8(&lanes);
+        while i < n {
+            t += x[i] * y[i];
+            i += 1;
+        }
+        t
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn decode_f16(bits: &[u16], lut: &[f32; 65536], out: &mut [f32]) {
+        let n = bits.len();
+        let main = n - n % 8;
+        let mut i = 0;
+        while i < main {
+            let h = _mm_loadu_si128(bits.as_ptr().add(i) as *const __m128i);
+            let idx = _mm256_cvtepu16_epi32(h);
+            let vw = _mm256_i32gather_ps::<4>(lut.as_ptr(), idx);
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), vw);
+            i += 8;
+        }
+        while i < n {
+            out[i] = lut[bits[i] as usize];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn decode_i8(vals: &[i8], scales: &[f32], out: &mut [f32]) {
+        let n = vals.len();
+        let main = n - n % 8;
+        let mut i = 0;
+        while i < main {
+            let q8 = _mm_loadl_epi64(vals.as_ptr().add(i) as *const __m128i);
+            let vq = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(q8));
+            let vs = _mm256_loadu_ps(scales.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(vq, vs));
+            i += 8;
+        }
+        while i < n {
+            out[i] = vals[i] as f32 * scales[i];
+            i += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// NEON (aarch64). vmul + vadd only — vfmaq/vmlaq fuse the rounding and
+// would diverge from the scalar lanes. dot keeps the scalar's 8 logical
+// lanes in two 4-wide registers (acc0 = lanes 0–3, acc1 = lanes 4–7).
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy(a: f32, w: &[f32], out: &mut [f32]) {
+        let n = w.len();
+        let main = n - n % 4;
+        let va = vdupq_n_f32(a);
+        let mut i = 0;
+        while i < main {
+            let vw = vld1q_f32(w.as_ptr().add(i));
+            let vo = vld1q_f32(out.as_ptr().add(i));
+            let r = vaddq_f32(vo, vmulq_f32(va, vw));
+            vst1q_f32(out.as_mut_ptr().add(i), r);
+            i += 4;
+        }
+        while i < n {
+            out[i] += a * w[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy_i8(
+        a: f32,
+        vals: &[i8],
+        scales: &[f32],
+        out: &mut [f32],
+    ) {
+        let n = vals.len();
+        let main = n - n % 8;
+        let va = vdupq_n_f32(a);
+        let mut i = 0;
+        while i < main {
+            let q8 = vld1_s8(vals.as_ptr().add(i));
+            let q16 = vmovl_s8(q8);
+            let lo = vcvtq_f32_s32(vmovl_s16(vget_low_s16(q16)));
+            let hi = vcvtq_f32_s32(vmovl_s16(vget_high_s16(q16)));
+            let s0 = vld1q_f32(scales.as_ptr().add(i));
+            let s1 = vld1q_f32(scales.as_ptr().add(i + 4));
+            let w0 = vmulq_f32(lo, s0);
+            let w1 = vmulq_f32(hi, s1);
+            let o0 = vld1q_f32(out.as_ptr().add(i));
+            let o1 = vld1q_f32(out.as_ptr().add(i + 4));
+            vst1q_f32(
+                out.as_mut_ptr().add(i),
+                vaddq_f32(o0, vmulq_f32(va, w0)),
+            );
+            vst1q_f32(
+                out.as_mut_ptr().add(i + 4),
+                vaddq_f32(o1, vmulq_f32(va, w1)),
+            );
+            i += 8;
+        }
+        while i < n {
+            let wv = vals[i] as f32 * scales[i];
+            out[i] += a * wv;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot(x: &[f32], y: &[f32]) -> f32 {
+        let n = x.len();
+        let main = n - n % 8;
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i < main {
+            let p0 = vmulq_f32(
+                vld1q_f32(x.as_ptr().add(i)),
+                vld1q_f32(y.as_ptr().add(i)),
+            );
+            let p1 = vmulq_f32(
+                vld1q_f32(x.as_ptr().add(i + 4)),
+                vld1q_f32(y.as_ptr().add(i + 4)),
+            );
+            acc0 = vaddq_f32(acc0, p0);
+            acc1 = vaddq_f32(acc1, p1);
+            i += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        vst1q_f32(lanes.as_mut_ptr(), acc0);
+        vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+        let mut t = super::combine8(&lanes);
+        while i < n {
+            t += x[i] * y[i];
+            i += 1;
+        }
+        t
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn decode_i8(vals: &[i8], scales: &[f32], out: &mut [f32]) {
+        let n = vals.len();
+        let main = n - n % 8;
+        let mut i = 0;
+        while i < main {
+            let q16 = vmovl_s8(vld1_s8(vals.as_ptr().add(i)));
+            let lo = vcvtq_f32_s32(vmovl_s16(vget_low_s16(q16)));
+            let hi = vcvtq_f32_s32(vmovl_s16(vget_high_s16(q16)));
+            let s0 = vld1q_f32(scales.as_ptr().add(i));
+            let s1 = vld1q_f32(scales.as_ptr().add(i + 4));
+            vst1q_f32(out.as_mut_ptr().add(i), vmulq_f32(lo, s0));
+            vst1q_f32(out.as_mut_ptr().add(i + 4), vmulq_f32(hi, s1));
+            i += 8;
+        }
+        while i < n {
+            out[i] = vals[i] as f32 * scales[i];
+            i += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dispatch. Methods take `self` so the property suites can drive a
+// specific backend; the free functions below dispatch through the
+// process-wide `active()` selection.
+// ---------------------------------------------------------------------
+
+impl Backend {
+    /// `out[i] += a * w[i]`.
+    pub fn axpy(self, a: f32, w: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(w.len(), out.len());
+        match self {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 => {
+                debug_assert!(avx2_available());
+                unsafe { avx2::axpy(a, w, out) }
+            }
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => {
+                debug_assert!(neon_available());
+                unsafe { neon::axpy(a, w, out) }
+            }
+            _ => axpy_scalar(a, w, out),
+        }
+    }
+
+    /// `out[i] += a * f16(bits[i])` via the process-wide decode LUT.
+    pub fn axpy_f16(self, a: f32, bits: &[u16], out: &mut [f32]) {
+        debug_assert_eq!(bits.len(), out.len());
+        let lut = f16_table();
+        match self {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 => {
+                debug_assert!(avx2_available());
+                unsafe { avx2::axpy_f16(a, bits, lut, out) }
+            }
+            _ => axpy_f16_scalar(a, bits, lut, out),
+        }
+    }
+
+    /// `out[i] += a * (vals[i] · scales[i])` — `scales` is the
+    /// per-element (row-of-scales) slice, already group-resolved by the
+    /// caller. No zero-skip: every lane computes, on every backend.
+    pub fn axpy_i8(self, a: f32, vals: &[i8], scales: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(vals.len(), out.len());
+        debug_assert_eq!(scales.len(), out.len());
+        match self {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 => {
+                debug_assert!(avx2_available());
+                unsafe { avx2::axpy_i8(a, vals, scales, out) }
+            }
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => {
+                debug_assert!(neon_available());
+                unsafe { neon::axpy_i8(a, vals, scales, out) }
+            }
+            _ => axpy_i8_scalar(a, vals, scales, out),
+        }
+    }
+
+    /// `out[j] += a * (nib(packed, j) · scales[j])`, skipping zero
+    /// nibbles. Nibble gather doesn't vectorize profitably below
+    /// AVX-512/VBMI, so every backend shares the scalar loop
+    /// (bit-identity for free).
+    pub fn axpy_i4(self, a: f32, packed: &[u8], scales: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(packed.len(), out.len().div_ceil(2));
+        debug_assert_eq!(scales.len(), out.len());
+        axpy_i4_scalar(a, packed, scales, out)
+    }
+
+    /// Fixed-order reduction: 8 chunk-ascending lanes, [`combine8`],
+    /// sequential tail. One well-defined float on every backend.
+    pub fn dot(self, x: &[f32], y: &[f32]) -> f32 {
+        debug_assert_eq!(x.len(), y.len());
+        match self {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 => {
+                debug_assert!(avx2_available());
+                unsafe { avx2::dot(x, y) }
+            }
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => {
+                debug_assert!(neon_available());
+                unsafe { neon::dot(x, y) }
+            }
+            _ => dot_scalar(x, y),
+        }
+    }
+
+    /// `out[i] = f16(bits[i])`.
+    pub fn decode_f16(self, bits: &[u16], out: &mut [f32]) {
+        debug_assert_eq!(bits.len(), out.len());
+        let lut = f16_table();
+        match self {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 => {
+                debug_assert!(avx2_available());
+                unsafe { avx2::decode_f16(bits, lut, out) }
+            }
+            _ => decode_f16_scalar(bits, lut, out),
+        }
+    }
+
+    /// `out[i] = vals[i] · scales[i]` (per-element scales slice).
+    pub fn decode_i8(self, vals: &[i8], scales: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(vals.len(), out.len());
+        debug_assert_eq!(scales.len(), out.len());
+        match self {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 => {
+                debug_assert!(avx2_available());
+                unsafe { avx2::decode_i8(vals, scales, out) }
+            }
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => {
+                debug_assert!(neon_available());
+                unsafe { neon::decode_i8(vals, scales, out) }
+            }
+            _ => decode_i8_scalar(vals, scales, out),
+        }
+    }
+
+    /// `out[j] = nib(packed, j) · scales[j]` (scalar on every backend).
+    pub fn decode_i4(self, packed: &[u8], scales: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(packed.len(), out.len().div_ceil(2));
+        debug_assert_eq!(scales.len(), out.len());
+        decode_i4_scalar(packed, scales, out)
+    }
+
+    /// Sparse scatter `out[cols[k]] += a * f16(vals[k])`. Gather/scatter
+    /// bound — scalar on every backend.
+    pub fn csr_axpy_f16(self, a: f32, cols: &[u16], vals: &[u16], out: &mut [f32]) {
+        debug_assert_eq!(cols.len(), vals.len());
+        csr_axpy_f16_scalar(a, cols, vals, f16_table(), out)
+    }
+
+    /// Sparse scatter `out[cols[k]] += a * (vals[k] · scales_row[cols[k]])`
+    /// where `scales_row` is the group-resolved scale row (length =
+    /// output cols). Scalar on every backend.
+    pub fn csr_axpy_i8(
+        self,
+        a: f32,
+        cols: &[u16],
+        vals: &[i8],
+        scales_row: &[f32],
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(cols.len(), vals.len());
+        csr_axpy_i8_scalar(a, cols, vals, scales_row, out)
+    }
+}
+
+// Process-wide dispatch wrappers — what the storage kernels call.
+
+pub fn axpy(a: f32, w: &[f32], out: &mut [f32]) {
+    active().axpy(a, w, out)
+}
+
+pub fn axpy_f16(a: f32, bits: &[u16], out: &mut [f32]) {
+    active().axpy_f16(a, bits, out)
+}
+
+pub fn axpy_i8(a: f32, vals: &[i8], scales: &[f32], out: &mut [f32]) {
+    active().axpy_i8(a, vals, scales, out)
+}
+
+pub fn axpy_i4(a: f32, packed: &[u8], scales: &[f32], out: &mut [f32]) {
+    active().axpy_i4(a, packed, scales, out)
+}
+
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    active().dot(x, y)
+}
+
+pub fn decode_f16(bits: &[u16], out: &mut [f32]) {
+    active().decode_f16(bits, out)
+}
+
+pub fn decode_i8(vals: &[i8], scales: &[f32], out: &mut [f32]) {
+    active().decode_i8(vals, scales, out)
+}
+
+pub fn decode_i4(packed: &[u8], scales: &[f32], out: &mut [f32]) {
+    active().decode_i4(packed, scales, out)
+}
+
+pub fn csr_axpy_f16(a: f32, cols: &[u16], vals: &[u16], out: &mut [f32]) {
+    active().csr_axpy_f16(a, cols, vals, out)
+}
+
+pub fn csr_axpy_i8(
+    a: f32,
+    cols: &[u16],
+    vals: &[i8],
+    scales_row: &[f32],
+    out: &mut [f32],
+) {
+    active().csr_axpy_i8(a, cols, vals, scales_row, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn randv(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn active_backend_is_available_here() {
+        assert!(available().contains(&active()), "{:?}", active());
+    }
+
+    #[cfg(feature = "simd-force-scalar")]
+    #[test]
+    fn force_scalar_feature_pins_dispatch() {
+        assert_eq!(active(), Backend::Scalar);
+    }
+
+    #[test]
+    fn f16_table_matches_decoder() {
+        let t = f16_table();
+        assert_eq!(t[f16::to_bits(1.5) as usize], 1.5);
+        assert_eq!(t[f16::to_bits(0.0) as usize], 0.0);
+        assert_eq!(t[f16::to_bits(-2.0) as usize], -2.0);
+    }
+
+    #[test]
+    fn nibble_unpack_covers_signed_range() {
+        for q in -8i8..=7 {
+            let b = (q as u8) & 0xF;
+            assert_eq!(unpack_nib(b, false), q);
+            assert_eq!(unpack_nib(b << 4, true), q);
+        }
+    }
+
+    /// The hard invariant: every backend available on this host is
+    /// bitwise identical to the scalar reference on every primitive, at
+    /// lengths that cover full chunks, tails, and sub-chunk sizes.
+    #[test]
+    fn every_backend_bitwise_matches_scalar() {
+        let mut rng = Pcg32::seeded(0x51_5D);
+        for &n in &[1usize, 3, 7, 8, 9, 16, 31, 64, 257] {
+            let a = rng.normal();
+            let w = randv(&mut rng, n);
+            let bits: Vec<u16> =
+                w.iter().map(|&v| f16::to_bits(v)).collect();
+            let vals: Vec<i8> = (0..n)
+                .map(|_| (rng.below(255) as i64 - 127) as i8)
+                .collect();
+            let packed: Vec<u8> = (0..n.div_ceil(2))
+                .map(|_| rng.below(256) as u8)
+                .collect();
+            let scales = randv(&mut rng, n)
+                .iter()
+                .map(|v| v.abs() * 0.01)
+                .collect::<Vec<_>>();
+            let x = randv(&mut rng, n);
+            let base = randv(&mut rng, n);
+            let ncols = 8 * n;
+            let cols: Vec<u16> =
+                (0..n).map(|_| rng.below(ncols) as u16).collect();
+
+            for &b in &available() {
+                let run2 = |f: &dyn Fn(Backend, &mut [f32])| {
+                    let mut got = base.clone();
+                    let mut want = base.clone();
+                    f(b, &mut got);
+                    f(Backend::Scalar, &mut want);
+                    for i in 0..n {
+                        assert_eq!(
+                            got[i].to_bits(),
+                            want[i].to_bits(),
+                            "backend {} lane {i} n {n}",
+                            b.name()
+                        );
+                    }
+                };
+                run2(&|bk, o| bk.axpy(a, &w, o));
+                run2(&|bk, o| bk.axpy_f16(a, &bits, o));
+                run2(&|bk, o| bk.axpy_i8(a, &vals, &scales, o));
+                run2(&|bk, o| bk.axpy_i4(a, &packed, &scales, o));
+                run2(&|bk, o| bk.decode_f16(&bits, o));
+                run2(&|bk, o| bk.decode_i8(&vals, &scales, o));
+                run2(&|bk, o| bk.decode_i4(&packed, &scales, o));
+
+                assert_eq!(
+                    b.dot(&x, &w).to_bits(),
+                    Backend::Scalar.dot(&x, &w).to_bits(),
+                    "dot backend {} n {n}",
+                    b.name()
+                );
+
+                let mut got = vec![0.0f32; ncols];
+                let mut want = vec![0.0f32; ncols];
+                b.csr_axpy_f16(a, &cols, &bits, &mut got);
+                Backend::Scalar.csr_axpy_f16(a, &cols, &bits, &mut want);
+                assert_eq!(got, want);
+                let srow = (0..ncols)
+                    .map(|j| (j % 13) as f32 * 0.003)
+                    .collect::<Vec<_>>();
+                got.fill(0.0);
+                want.fill(0.0);
+                b.csr_axpy_i8(a, &cols, &vals, &srow, &mut got);
+                Backend::Scalar.csr_axpy_i8(a, &cols, &vals, &srow, &mut want);
+                assert_eq!(got, want);
+            }
+        }
+    }
+
+    /// dot's reduction order is pinned: 8 chunk-ascending lanes folded
+    /// by combine8, sequential tail — NOT a plain left-to-right sum.
+    #[test]
+    fn dot_order_is_the_documented_one() {
+        let mut rng = Pcg32::seeded(7);
+        let n = 21;
+        let x = randv(&mut rng, n);
+        let y = randv(&mut rng, n);
+        let mut lanes = [0.0f32; 8];
+        for c in 0..2 {
+            for j in 0..8 {
+                lanes[j] += x[8 * c + j] * y[8 * c + j];
+            }
+        }
+        let mut want = combine8(&lanes);
+        for i in 16..n {
+            want += x[i] * y[i];
+        }
+        assert_eq!(dot(&x, &y).to_bits(), want.to_bits());
+        // Sub-chunk sizes degenerate to the sequential sum.
+        let mut seq = 0.0f32;
+        for i in 0..7 {
+            seq += x[i] * y[i];
+        }
+        assert_eq!(dot(&x[..7], &y[..7]).to_bits(), seq.to_bits());
+    }
+}

@@ -11,17 +11,31 @@
 //!   * `DenseF16`  — half-precision bits, streamed through a 64Ki-entry
 //!     f16→f32 lookup table (one L2-resident gather per weight, no
 //!     per-row scratch buffer);
+//!   * `DenseI8`   — 8-bit integers with per-(row-group, column) f32
+//!     scales (1 byte/weight + scale overhead);
+//!   * `GroupedI4` — two 4-bit integers per byte with the same grouped
+//!     scales (0.5 bytes/weight);
 //!   * `SparseCsr` — compressed rows (u32 row pointers, u16 column
-//!     indices, f16 values) so the matvec visits only the `nnz` live
-//!     weights instead of branching on zeros.
+//!     indices) whose values are either f16 bits or i8 + grouped scales
+//!     ([`CsrVals`]), so composite projection pruning and quantization
+//!     stack on the same projection and the matvec visits only the
+//!     `nnz` live weights.
+//!
+//! Quantized variants share one grid: per group of `group` input rows
+//! and per output column, `scale = absmax / qmax` (qmax 127 for i8, 7
+//! for i4) and `q = round(v / scale)` clamped to ±qmax, so exact zeros
+//! stay exactly zero (pruning masks survive sealing) and dequantization
+//! error is bounded by `scale / 2` per weight.
 //!
 //! The kernels here ([`matvec_storage`], [`matmul_storage`]) are what
 //! `model::engine` dispatches through on the decode/prefill hot path.
+//! Their inner loops run on the process-wide [`crate::tensor::simd`]
+//! backend; per-output-element operation order is fixed, so results are
+//! bit-identical across batch widths AND across SIMD-vs-scalar dispatch.
 
 use std::cell::Cell;
-use std::sync::OnceLock;
 
-use crate::tensor::{matmul_into, matvec, Tensor};
+use crate::tensor::{matmul_into, matvec, simd, Tensor};
 use crate::util::f16;
 use crate::util::threadpool::par_chunks_mut;
 
@@ -36,7 +50,8 @@ thread_local! {
 /// on the dispatching thread). The batched-decode invariant — exactly
 /// one pass per projection per layer per step, regardless of batch
 /// width — is asserted against this counter in
-/// rust/tests/batched_decode.rs.
+/// rust/tests/batched_decode.rs (and for the quantized backends in
+/// rust/tests/quant_storage.rs).
 pub fn weight_passes() -> u64 {
     WEIGHT_PASSES.with(|c| c.get())
 }
@@ -44,6 +59,22 @@ pub fn weight_passes() -> u64 {
 #[inline]
 fn note_pass() {
     WEIGHT_PASSES.with(|c| c.set(c.get() + 1));
+}
+
+/// Value payload of a [`ProjStorage::SparseCsr`] projection: classic
+/// f16 bits, or i8 with the same per-(row-group, column) scale grid as
+/// [`ProjStorage::DenseI8`] (pruning decides the pattern, quantization
+/// the value precision — they compose).
+#[derive(Debug, Clone, PartialEq)]
+pub enum CsrVals {
+    F16(Vec<u16>),
+    I8 {
+        vals: Vec<i8>,
+        /// `ceil(rows / group) * cols` f32 scales, `[group][col]`
+        /// row-major — indexed by the *input-row* group of the entry.
+        scales: Vec<f32>,
+        group: usize,
+    },
 }
 
 /// One projection's runtime storage. `shape` is always `[in, out]`
@@ -54,27 +85,69 @@ pub enum ProjStorage {
     DenseF32(Tensor),
     /// Sealed half-precision dense storage (2 bytes/weight).
     DenseF16 { bits: Vec<u16>, shape: [usize; 2] },
+    /// Sealed 8-bit dense storage: `vals` is row-major like the dense
+    /// copy; `scales` holds `ceil(rows/group) * cols` f32 multipliers,
+    /// `[group][col]` row-major.
+    DenseI8 {
+        vals: Vec<i8>,
+        scales: Vec<f32>,
+        group: usize,
+        shape: [usize; 2],
+    },
+    /// Sealed 4-bit dense storage: element `(i, j)` is the nibble
+    /// `j & 1 == 0 ? low : high` of `packed[i * ceil(cols/2) + j/2]`
+    /// (odd-width rows pad a zero nibble); scales as in `DenseI8`.
+    /// The signed grid is [-7, 7] — the -8 pattern is never produced.
+    GroupedI4 {
+        packed: Vec<u8>,
+        scales: Vec<f32>,
+        group: usize,
+        shape: [usize; 2],
+    },
     /// Sealed compressed sparse rows; `nnz` is cached at construction
     /// so size accounting never rescans the weights.
     SparseCsr {
         row_ptr: Vec<u32>,
         col_idx: Vec<u16>,
-        vals_f16: Vec<u16>,
+        vals: CsrVals,
         shape: [usize; 2],
         nnz: usize,
     },
 }
 
-/// Shared f16→f32 decode table (256 KiB, built once per process).
-/// Indexing with a `u16` is always in bounds, so the gather compiles
-/// down to a single masked load.
-fn f16_table() -> &'static [f32; 65536] {
-    static TABLE: OnceLock<Box<[f32; 65536]>> = OnceLock::new();
-    TABLE.get_or_init(|| {
-        let v: Vec<f32> = (0..=u16::MAX).map(f16::from_bits).collect();
-        let boxed: Box<[f32]> = v.into_boxed_slice();
-        boxed.try_into().expect("f16 table is 65536 entries")
-    })
+/// Per-(row-group, column) symmetric quantization onto [-qmax, qmax].
+/// Returns the `[group][col]` scale grid and the full row-major i8
+/// codes. Exact zeros stay zero codes; an all-zero (group, col) cell
+/// keeps scale 0.0.
+fn group_quantize(t: &Tensor, group: usize, qmax: i32) -> (Vec<f32>, Vec<i8>) {
+    assert!(group >= 1, "quant group must be >= 1");
+    let (r, c) = (t.shape[0], t.shape[1]);
+    let n_groups = r.div_ceil(group);
+    let mut scales = vec![0.0f32; n_groups * c];
+    let mut q = vec![0i8; r * c];
+    for g in 0..n_groups {
+        let (g0, g1) = (g * group, ((g + 1) * group).min(r));
+        for j in 0..c {
+            let mut absmax = 0.0f32;
+            for i in g0..g1 {
+                absmax = absmax.max(t.data[i * c + j].abs());
+            }
+            if absmax == 0.0 {
+                continue; // scale 0.0, codes 0: fully pruned cell
+            }
+            let s = absmax / qmax as f32;
+            scales[g * c + j] = s;
+            for i in g0..g1 {
+                let v = t.data[i * c + j];
+                if v != 0.0 {
+                    let qi =
+                        (v / s).round().clamp(-(qmax as f32), qmax as f32);
+                    q[i * c + j] = qi as i8;
+                }
+            }
+        }
+    }
+    (scales, q)
 }
 
 impl ProjStorage {
@@ -91,6 +164,41 @@ impl ProjStorage {
             bits: t.data.iter().map(|&v| f16::to_bits(v)).collect(),
             shape: [t.shape[0], t.shape[1]],
         }
+    }
+
+    /// Seal into 8-bit dense storage with per-(`group` rows, column)
+    /// scales.
+    pub fn seal_i8(t: &Tensor, group: usize) -> ProjStorage {
+        assert_eq!(t.shape.len(), 2, "projections are 2-D");
+        let (scales, vals) = group_quantize(t, group, 127);
+        ProjStorage::DenseI8 {
+            vals,
+            scales,
+            group,
+            shape: [t.shape[0], t.shape[1]],
+        }
+    }
+
+    /// Seal into packed 4-bit dense storage ([-7, 7] grid) with
+    /// per-(`group` rows, column) scales.
+    pub fn seal_i4(t: &Tensor, group: usize) -> ProjStorage {
+        assert_eq!(t.shape.len(), 2, "projections are 2-D");
+        let (r, c) = (t.shape[0], t.shape[1]);
+        let (scales, q) = group_quantize(t, group, 7);
+        let stride = c.div_ceil(2);
+        let mut packed = vec![0u8; r * stride];
+        for i in 0..r {
+            for j in 0..c {
+                let nib = (q[i * c + j] as u8) & 0xF;
+                let b = &mut packed[i * stride + j / 2];
+                if j & 1 == 1 {
+                    *b |= nib << 4;
+                } else {
+                    *b |= nib;
+                }
+            }
+        }
+        ProjStorage::GroupedI4 { packed, scales, group, shape: [r, c] }
     }
 
     /// Seal into CSR storage (f16 values). Column indices are u16, so
@@ -114,13 +222,54 @@ impl ProjStorage {
             row_ptr.push(col_idx.len() as u32);
         }
         let nnz = vals_f16.len();
-        ProjStorage::SparseCsr { row_ptr, col_idx, vals_f16, shape: [r, c], nnz }
+        ProjStorage::SparseCsr {
+            row_ptr,
+            col_idx,
+            vals: CsrVals::F16(vals_f16),
+            shape: [r, c],
+            nnz,
+        }
+    }
+
+    /// Seal into CSR with i8 values: the sparsity pattern is the
+    /// pruning mask (every originally-nonzero weight keeps its entry,
+    /// even when it quantizes to code 0), the values live on the same
+    /// per-group grid as [`ProjStorage::seal_i8`]. This is the
+    /// composite pruned+quantized deployment format.
+    pub fn seal_csr_i8(t: &Tensor, group: usize) -> ProjStorage {
+        assert_eq!(t.shape.len(), 2, "projections are 2-D");
+        let (r, c) = (t.shape[0], t.shape[1]);
+        assert!(c <= 1 << 16, "CSR column index is u16 ({c} cols)");
+        let (scales, q) = group_quantize(t, group, 127);
+        let mut row_ptr = Vec::with_capacity(r + 1);
+        let mut col_idx: Vec<u16> = Vec::new();
+        let mut vals: Vec<i8> = Vec::new();
+        row_ptr.push(0u32);
+        for i in 0..r {
+            for j in 0..c {
+                if t.data[i * c + j] != 0.0 {
+                    col_idx.push(j as u16);
+                    vals.push(q[i * c + j]);
+                }
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        let nnz = vals.len();
+        ProjStorage::SparseCsr {
+            row_ptr,
+            col_idx,
+            vals: CsrVals::I8 { vals, scales, group },
+            shape: [r, c],
+            nnz,
+        }
     }
 
     pub fn shape(&self) -> [usize; 2] {
         match self {
             ProjStorage::DenseF32(t) => [t.shape[0], t.shape[1]],
             ProjStorage::DenseF16 { shape, .. } => *shape,
+            ProjStorage::DenseI8 { shape, .. } => *shape,
+            ProjStorage::GroupedI4 { shape, .. } => *shape,
             ProjStorage::SparseCsr { shape, .. } => *shape,
         }
     }
@@ -142,24 +291,58 @@ impl ProjStorage {
         matches!(self, ProjStorage::DenseF32(_))
     }
 
-    /// Short name of the backing encoding ("f32" / "f16" / "csr").
+    /// Short name of the backing encoding
+    /// ("f32" / "f16" / "i8" / "i4" / "csr" / "csr8").
     pub fn encoding_name(&self) -> &'static str {
         match self {
             ProjStorage::DenseF32(_) => "f32",
             ProjStorage::DenseF16 { .. } => "f16",
-            ProjStorage::SparseCsr { .. } => "csr",
+            ProjStorage::DenseI8 { .. } => "i8",
+            ProjStorage::GroupedI4 { .. } => "i4",
+            ProjStorage::SparseCsr { vals: CsrVals::F16(_), .. } => "csr",
+            ProjStorage::SparseCsr { vals: CsrVals::I8 { .. }, .. } => "csr8",
         }
     }
 
-    /// Live (nonzero) weights. O(1) for CSR (cached at construction),
-    /// one scan for the dense variants — accounting only, never on the
-    /// decode path.
+    /// Quantization group size, for variants that carry one.
+    pub fn quant_group(&self) -> Option<usize> {
+        match self {
+            ProjStorage::DenseI8 { group, .. }
+            | ProjStorage::GroupedI4 { group, .. }
+            | ProjStorage::SparseCsr {
+                vals: CsrVals::I8 { group, .. }, ..
+            } => Some(*group),
+            _ => None,
+        }
+    }
+
+    /// Live (nonzero) weights. O(1) for CSR (cached at construction:
+    /// the stored pattern — for csr8, quantized-to-zero entries still
+    /// count as live mask positions), one scan for the dense variants —
+    /// accounting only, never on the decode path.
     pub fn nnz(&self) -> usize {
         match self {
             ProjStorage::DenseF32(t) => t.numel() - t.zero_count(),
             ProjStorage::DenseF16 { bits, .. } => {
                 // ±0.0 are the only f16 encodings of zero
                 bits.iter().filter(|&&b| b & 0x7fff != 0).count()
+            }
+            ProjStorage::DenseI8 { vals, .. } => {
+                vals.iter().filter(|&&v| v != 0).count()
+            }
+            ProjStorage::GroupedI4 { packed, shape, .. } => {
+                let (r, c) = (shape[0], shape[1]);
+                let stride = c.div_ceil(2);
+                let mut n = 0;
+                for i in 0..r {
+                    for j in 0..c {
+                        let b = packed[i * stride + j / 2];
+                        if simd::unpack_nib(b, j & 1 == 1) != 0 {
+                            n += 1;
+                        }
+                    }
+                }
+                n
             }
             ProjStorage::SparseCsr { nnz, .. } => *nnz,
         }
@@ -179,8 +362,20 @@ impl ProjStorage {
         match self {
             ProjStorage::DenseF32(t) => 4 * t.numel(),
             ProjStorage::DenseF16 { bits, .. } => 2 * bits.len(),
-            ProjStorage::SparseCsr { row_ptr, col_idx, vals_f16, .. } => {
-                4 * row_ptr.len() + 2 * col_idx.len() + 2 * vals_f16.len()
+            ProjStorage::DenseI8 { vals, scales, .. } => {
+                vals.len() + 4 * scales.len()
+            }
+            ProjStorage::GroupedI4 { packed, scales, .. } => {
+                packed.len() + 4 * scales.len()
+            }
+            ProjStorage::SparseCsr { row_ptr, col_idx, vals, .. } => {
+                let vb = match vals {
+                    CsrVals::F16(v) => 2 * v.len(),
+                    CsrVals::I8 { vals, scales, .. } => {
+                        vals.len() + 4 * scales.len()
+                    }
+                };
+                4 * row_ptr.len() + 2 * col_idx.len() + vb
             }
         }
     }
@@ -210,26 +405,67 @@ impl ProjStorage {
         }
     }
 
-    /// Materialize a dense f32 copy (f16 rounding is already baked in
-    /// for sealed variants).
+    /// Materialize a dense f32 copy (f16 rounding / quantization-grid
+    /// snapping is already baked in for sealed variants).
     pub fn to_dense(&self) -> Tensor {
         match self {
             ProjStorage::DenseF32(t) => t.clone(),
             ProjStorage::DenseF16 { bits, shape } => {
-                let lut = f16_table();
-                Tensor::new(
-                    bits.iter().map(|&b| lut[b as usize]).collect(),
-                    shape.to_vec(),
-                )
+                let mut t = Tensor::zeros(&[shape[0], shape[1]]);
+                simd::decode_f16(bits, &mut t.data);
+                t
             }
-            ProjStorage::SparseCsr { row_ptr, col_idx, vals_f16, shape, .. } => {
-                let lut = f16_table();
+            ProjStorage::DenseI8 { vals, scales, group, shape } => {
                 let (r, c) = (shape[0], shape[1]);
                 let mut t = Tensor::zeros(&[r, c]);
                 for i in 0..r {
-                    let (s, e) = (row_ptr[i] as usize, row_ptr[i + 1] as usize);
-                    for (&j, &v) in col_idx[s..e].iter().zip(&vals_f16[s..e]) {
-                        t.data[i * c + j as usize] = lut[v as usize];
+                    let srow = &scales[(i / group) * c..][..c];
+                    simd::decode_i8(
+                        &vals[i * c..(i + 1) * c],
+                        srow,
+                        &mut t.data[i * c..(i + 1) * c],
+                    );
+                }
+                t
+            }
+            ProjStorage::GroupedI4 { packed, scales, group, shape } => {
+                let (r, c) = (shape[0], shape[1]);
+                let stride = c.div_ceil(2);
+                let mut t = Tensor::zeros(&[r, c]);
+                for i in 0..r {
+                    let srow = &scales[(i / group) * c..][..c];
+                    simd::decode_i4(
+                        &packed[i * stride..(i + 1) * stride],
+                        srow,
+                        &mut t.data[i * c..(i + 1) * c],
+                    );
+                }
+                t
+            }
+            ProjStorage::SparseCsr { row_ptr, col_idx, vals, shape, .. } => {
+                let lut = simd::f16_table();
+                let (r, c) = (shape[0], shape[1]);
+                let mut t = Tensor::zeros(&[r, c]);
+                for i in 0..r {
+                    let (s, e) =
+                        (row_ptr[i] as usize, row_ptr[i + 1] as usize);
+                    match vals {
+                        CsrVals::F16(v) => {
+                            for (&j, &b) in
+                                col_idx[s..e].iter().zip(&v[s..e])
+                            {
+                                t.data[i * c + j as usize] = lut[b as usize];
+                            }
+                        }
+                        CsrVals::I8 { vals, scales, group } => {
+                            let srow = &scales[(i / group) * c..][..c];
+                            for (&j, &q) in
+                                col_idx[s..e].iter().zip(&vals[s..e])
+                            {
+                                t.data[i * c + j as usize] =
+                                    q as f32 * srow[j as usize];
+                            }
+                        }
                     }
                 }
                 t
@@ -240,40 +476,80 @@ impl ProjStorage {
 
 /// y(N) = x(K) @ w(K,N) through any storage backend — the decode hot
 /// path. CSR skips zeros structurally; f16 streams through the lookup
-/// table in registers.
+/// table; i8/i4 dequantize in registers against the group-scale row.
+/// Inner loops run on the process-wide [`simd`] backend.
 pub fn matvec_storage(x: &[f32], w: &ProjStorage, out: &mut [f32]) {
     note_pass();
+    let [k, n] = w.shape();
+    debug_assert_eq!(x.len(), k);
+    debug_assert_eq!(out.len(), n);
     match w {
         ProjStorage::DenseF32(t) => matvec(x, t, out),
-        ProjStorage::DenseF16 { bits, shape } => {
-            let (k, n) = (shape[0], shape[1]);
-            debug_assert_eq!(x.len(), k);
-            debug_assert_eq!(out.len(), n);
-            let lut = f16_table();
+        ProjStorage::DenseF16 { bits, .. } => {
             out.fill(0.0);
             for (kk, &xv) in x.iter().enumerate() {
                 if xv == 0.0 {
                     continue;
                 }
-                let wrow = &bits[kk * n..kk * n + n];
-                for (o, &wb) in out.iter_mut().zip(wrow.iter()) {
-                    *o += xv * lut[wb as usize];
-                }
+                simd::axpy_f16(xv, &bits[kk * n..kk * n + n], out);
             }
         }
-        ProjStorage::SparseCsr { row_ptr, col_idx, vals_f16, shape, .. } => {
-            let (k, n) = (shape[0], shape[1]);
-            debug_assert_eq!(x.len(), k);
-            debug_assert_eq!(out.len(), n);
-            let lut = f16_table();
+        ProjStorage::DenseI8 { vals, scales, group, .. } => {
             out.fill(0.0);
             for (kk, &xv) in x.iter().enumerate() {
                 if xv == 0.0 {
                     continue;
                 }
-                let (s, e) = (row_ptr[kk] as usize, row_ptr[kk + 1] as usize);
-                for (&j, &v) in col_idx[s..e].iter().zip(&vals_f16[s..e]) {
-                    out[j as usize] += xv * lut[v as usize];
+                let srow = &scales[(kk / group) * n..][..n];
+                simd::axpy_i8(xv, &vals[kk * n..kk * n + n], srow, out);
+            }
+        }
+        ProjStorage::GroupedI4 { packed, scales, group, .. } => {
+            let stride = n.div_ceil(2);
+            out.fill(0.0);
+            for (kk, &xv) in x.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let srow = &scales[(kk / group) * n..][..n];
+                let prow = &packed[kk * stride..(kk + 1) * stride];
+                simd::axpy_i4(xv, prow, srow, out);
+            }
+        }
+        ProjStorage::SparseCsr { row_ptr, col_idx, vals, .. } => {
+            out.fill(0.0);
+            match vals {
+                CsrVals::F16(v) => {
+                    for (kk, &xv) in x.iter().enumerate() {
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let (s, e) =
+                            (row_ptr[kk] as usize, row_ptr[kk + 1] as usize);
+                        simd::csr_axpy_f16(
+                            xv,
+                            &col_idx[s..e],
+                            &v[s..e],
+                            out,
+                        );
+                    }
+                }
+                CsrVals::I8 { vals, scales, group } => {
+                    for (kk, &xv) in x.iter().enumerate() {
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let (s, e) =
+                            (row_ptr[kk] as usize, row_ptr[kk + 1] as usize);
+                        let srow = &scales[(kk / group) * n..][..n];
+                        simd::csr_axpy_i8(
+                            xv,
+                            &col_idx[s..e],
+                            &vals[s..e],
+                            srow,
+                            out,
+                        );
+                    }
                 }
             }
         }
@@ -281,8 +557,8 @@ pub fn matvec_storage(x: &[f32], w: &ProjStorage, out: &mut [f32]) {
 }
 
 /// Rows of x processed together per task — each streamed w row (dense
-/// f16) or CSR row slice is reused across RB output rows, matching the
-/// dense kernel's register blocking so sealed prefill does not pay
+/// f16/i8/i4) or CSR row slice is reused across RB output rows, matching
+/// the dense kernel's register blocking so sealed prefill does not pay
 /// RB× extra weight traffic.
 const RB: usize = 4;
 
@@ -299,8 +575,8 @@ pub fn matmul_storage(x: &Tensor, w: &ProjStorage) -> Tensor {
 
 /// [`matmul_storage`] into a caller-provided buffer — the batched
 /// decode step reuses one scratch buffer per projection, and each call
-/// is exactly one weight pass (f16 bits decoded / CSR rows traversed
-/// once) shared by every row of `x`.
+/// is exactly one weight pass (f16 bits decoded / quant rows dequantized
+/// / CSR rows traversed once) shared by every row of `x`.
 pub fn matmul_storage_into(x: &Tensor, w: &ProjStorage, out: &mut [f32]) {
     note_pass();
     let (m, k) = (x.shape[0], x.shape[1]);
@@ -311,7 +587,6 @@ pub fn matmul_storage_into(x: &Tensor, w: &ProjStorage, out: &mut [f32]) {
         return matmul_into(x, t, out);
     }
     let xd = &x.data;
-    let lut = f16_table();
     match w {
         ProjStorage::DenseF16 { bits, .. } => {
             par_chunks_mut(out, RB * n, |bi, ochunk| {
@@ -326,14 +601,51 @@ pub fn matmul_storage_into(x: &Tensor, w: &ProjStorage, out: &mut [f32]) {
                             continue;
                         }
                         let orow = &mut ochunk[r * n..(r + 1) * n];
-                        for (o, &wb) in orow.iter_mut().zip(wrow.iter()) {
-                            *o += xv * lut[wb as usize];
-                        }
+                        simd::axpy_f16(xv, wrow, orow);
                     }
                 }
             });
         }
-        ProjStorage::SparseCsr { row_ptr, col_idx, vals_f16, .. } => {
+        ProjStorage::DenseI8 { vals, scales, group, .. } => {
+            par_chunks_mut(out, RB * n, |bi, ochunk| {
+                let r0 = bi * RB;
+                let rows = ochunk.len() / n;
+                ochunk.fill(0.0);
+                for kk in 0..k {
+                    let wrow = &vals[kk * n..kk * n + n];
+                    let srow = &scales[(kk / group) * n..][..n];
+                    for r in 0..rows {
+                        let xv = xd[(r0 + r) * k + kk];
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let orow = &mut ochunk[r * n..(r + 1) * n];
+                        simd::axpy_i8(xv, wrow, srow, orow);
+                    }
+                }
+            });
+        }
+        ProjStorage::GroupedI4 { packed, scales, group, .. } => {
+            let stride = n.div_ceil(2);
+            par_chunks_mut(out, RB * n, |bi, ochunk| {
+                let r0 = bi * RB;
+                let rows = ochunk.len() / n;
+                ochunk.fill(0.0);
+                for kk in 0..k {
+                    let prow = &packed[kk * stride..(kk + 1) * stride];
+                    let srow = &scales[(kk / group) * n..][..n];
+                    for r in 0..rows {
+                        let xv = xd[(r0 + r) * k + kk];
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let orow = &mut ochunk[r * n..(r + 1) * n];
+                        simd::axpy_i4(xv, prow, srow, orow);
+                    }
+                }
+            });
+        }
+        ProjStorage::SparseCsr { row_ptr, col_idx, vals, .. } => {
             par_chunks_mut(out, RB * n, |bi, ochunk| {
                 let r0 = bi * RB;
                 let rows = ochunk.len() / n;
@@ -345,15 +657,27 @@ pub fn matmul_storage_into(x: &Tensor, w: &ProjStorage, out: &mut [f32]) {
                         continue;
                     }
                     let cols = &col_idx[s..e];
-                    let vals = &vals_f16[s..e];
                     for r in 0..rows {
                         let xv = xd[(r0 + r) * k + kk];
                         if xv == 0.0 {
                             continue;
                         }
                         let orow = &mut ochunk[r * n..(r + 1) * n];
-                        for (&j, &vb) in cols.iter().zip(vals.iter()) {
-                            orow[j as usize] += xv * lut[vb as usize];
+                        match vals {
+                            CsrVals::F16(v) => {
+                                simd::csr_axpy_f16(xv, cols, &v[s..e], orow);
+                            }
+                            CsrVals::I8 { vals, scales, group } => {
+                                let srow =
+                                    &scales[(kk / group) * n..][..n];
+                                simd::csr_axpy_i8(
+                                    xv,
+                                    cols,
+                                    &vals[s..e],
+                                    srow,
+                                    orow,
+                                );
+                            }
                         }
                     }
                 }
@@ -397,6 +721,46 @@ mod tests {
     }
 
     #[test]
+    fn quant_seal_roundtrip_on_grid_preserving_zeros() {
+        let t = rand_sparse(11, 40, 33, 0.6);
+        let group = 16;
+        for s in [
+            ProjStorage::seal_i8(&t, group),
+            ProjStorage::seal_i4(&t, group),
+            ProjStorage::seal_csr_i8(&t, group),
+        ] {
+            let back = s.to_dense();
+            assert_eq!(back.shape, t.shape);
+            let (r, c) = (t.shape[0], t.shape[1]);
+            let qmax = if s.encoding_name() == "i4" { 7.0 } else { 127.0 };
+            for i in 0..r {
+                for j in 0..c {
+                    let (a, b) = (t.data[i * c + j], back.data[i * c + j]);
+                    // pruned weights stay exactly zero (a tiny live
+                    // weight may round to code 0 — that's the grid, not
+                    // a mask violation)
+                    if a == 0.0 {
+                        assert_eq!(b, 0.0, "{}", s.encoding_name());
+                    }
+                    // per-group absmax bound: |err| <= scale / 2
+                    let mut absmax = 0.0f32;
+                    let (g0, g1) =
+                        (i / group * group, (i / group * group + group).min(r));
+                    for ii in g0..g1 {
+                        absmax = absmax.max(t.data[ii * c + j].abs());
+                    }
+                    let half_scale = absmax / qmax / 2.0;
+                    assert!(
+                        (a - b).abs() <= half_scale * 1.001 + 1e-7,
+                        "{}: {a} vs {b} (half scale {half_scale})",
+                        s.encoding_name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
     fn csr_caches_nnz_and_pattern() {
         let t = rand_sparse(2, 16, 24, 0.75);
         let want = t.numel() - t.zero_count();
@@ -407,6 +771,10 @@ mod tests {
         for (a, b) in t.data.iter().zip(back.data.iter()) {
             assert_eq!(*a == 0.0, *b == 0.0);
         }
+        // csr8 keeps the identical pattern (mask-preserving quantization)
+        let q = ProjStorage::seal_csr_i8(&t, 8);
+        assert_eq!(q.nnz(), want, "csr8 stores the pruning mask");
+        assert_eq!(q.encoding_name(), "csr8");
     }
 
     #[test]
@@ -467,6 +835,9 @@ mod tests {
             ProjStorage::from_dense(t.clone()),
             ProjStorage::seal_f16(&t),
             ProjStorage::seal_csr(&t),
+            ProjStorage::seal_i8(&t, 8),
+            ProjStorage::seal_i4(&t, 8),
+            ProjStorage::seal_csr_i8(&t, 8),
         ] {
             let want = matmul_storage(&x, &s);
             let mut out = vec![9.0f32; 5 * 32]; // dirty buffer
@@ -491,6 +862,26 @@ mod tests {
         assert_eq!(f32b, 4 * 64 * 64);
         assert_eq!(f16b, 2 * 64 * 64);
         assert!(csrb < f16b, "csr {csrb} must beat f16 {f16b} at 90%");
+    }
+
+    #[test]
+    fn quant_resident_bytes_ordering() {
+        let t = rand_sparse(12, 64, 64, 0.0);
+        let group = 32;
+        let f16b = ProjStorage::seal_f16(&t).resident_bytes();
+        let i8b = ProjStorage::seal_i8(&t, group).resident_bytes();
+        let i4b = ProjStorage::seal_i4(&t, group).resident_bytes();
+        assert!(i8b < f16b, "i8 {i8b} must beat f16 {f16b} on dense");
+        assert!(i4b < i8b, "i4 {i4b} must beat i8 {i8b} on dense");
+        // pruned + quantized beats pruned-only at high sparsity (group
+        // 64 so the scale grid doesn't eat the savings at this tiny dim)
+        let p = rand_sparse(13, 64, 64, 0.9);
+        let csrb = ProjStorage::seal_csr(&p).resident_bytes();
+        let csr8b = ProjStorage::seal_csr_i8(&p, 64).resident_bytes();
+        assert!(
+            csr8b < csrb,
+            "csr8 {csr8b} must beat csr {csrb} at 90% sparsity"
+        );
     }
 
     #[test]
