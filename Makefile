@@ -5,8 +5,9 @@
 CARGO ?= cargo
 
 .PHONY: build test fmt check bench bench-serve bench-produce \
-	bench-spec bench-kv bench-chaos bench-fleet bench-quant serve-smoke \
-	spec-smoke fleet-smoke quant-smoke chaos
+	bench-spec bench-kv bench-chaos bench-fleet bench-quant \
+	bench-shards serve-smoke spec-smoke fleet-smoke quant-smoke \
+	shard-smoke chaos
 
 build:
 	$(CARGO) build --release
@@ -80,6 +81,7 @@ spec-smoke:
 # into pytest via python/tests/test_chaos_smoke.py.
 chaos:
 	$(CARGO) test --test chaos --features chaos -- --nocapture
+	$(CARGO) test --test shard_parity --features chaos -- --nocapture
 	@echo "CHAOS OK"
 
 # Robustness perf: supervision overhead at 0% faults (full supervised
@@ -105,6 +107,24 @@ bench-fleet:
 # into pytest via python/tests/test_fleet_smoke.py.
 fleet-smoke:
 	$(CARGO) run --release --example fleet_smoke
+
+# Sharded-execution smoke (artifact-free): one weight set served
+# unsharded, as a 2-replica group, and as a 2-stage layer-range
+# pipeline over real TCP; asserts byte-identical greedy output in both
+# shard modes (serial + concurrent burst), Arc-deduped resident
+# accounting, and the {"stats": true} introspection line. Wired into
+# pytest via python/tests/test_shard_smoke.py.
+shard-smoke:
+	$(CARGO) run --release --example shard_smoke
+
+# Shard scaling trajectory: closed-loop tok/s at replica widths
+# N ∈ {1, 2, 4} with per-engine batch capped (the ceiling replicas
+# lift) plus 2/3-stage pipeline handoff overhead, every configuration
+# parity-checked against the unsharded engine before its row is
+# recorded. Merges section "shard*" rows into BENCH_serve.json next to
+# the serve_throughput, chaos, and fleet rows.
+bench-shards:
+	$(CARGO) bench --bench shard_scale
 
 # Quantized-storage perf trajectory: sparsity × precision × width sweep
 # over the runtime storage kernels (f32/f16/csr/i8/i4/csr8), every row

@@ -1,0 +1,36 @@
+"""Wire `make shard-smoke` into the pytest-driven run: one weight set
+served unsharded, as a 2-replica group, and as a 2-stage layer-range
+pipeline over real TCP (examples/shard_smoke.rs). The example asserts
+the sharding contract — byte-identical greedy output in both shard
+modes (serial and under a concurrent burst), Arc-deduped resident
+accounting across the three entries, and a {"stats": true} line that
+reports every shard group without disturbing the frozen v0 wire — and
+prints SHARD-SMOKE OK on success.
+
+Skips when the rust toolchain is not present in the image, mirroring
+test_serve_smoke.py."""
+import os
+import shutil
+import subprocess
+
+import pytest
+
+ROOT = os.path.dirname(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+)
+
+
+def test_shard_smoke():
+    if shutil.which("cargo") is None or shutil.which("make") is None:
+        pytest.skip("cargo/make not available in this image")
+    r = subprocess.run(
+        ["make", "-C", ROOT, "shard-smoke"],
+        capture_output=True,
+        text=True,
+        timeout=3600,
+    )
+    assert r.returncode == 0, (
+        f"make shard-smoke failed\n--- stdout ---\n{r.stdout[-4000:]}"
+        f"\n--- stderr ---\n{r.stderr[-4000:]}"
+    )
+    assert "SHARD-SMOKE OK" in r.stdout, r.stdout[-4000:]

@@ -24,7 +24,7 @@ use mosaic::model::weights::testutil::random_model_sized;
 use mosaic::serve::fault::{self, FaultPlan};
 use mosaic::serve::{
     engine_loop, wait_reply, Ctl, ModelRegistry, Request, ServeConfig,
-    ServeStats, Server, SubmitSpec,
+    ServeStats, Server, SharedRx, SubmitSpec,
 };
 use mosaic::util::json::Json;
 
@@ -98,6 +98,7 @@ fn drive_raw(
 ) -> DriveOut {
     let c = cfg();
     let (tx, rx) = mpsc::sync_channel::<Request>(c.max_queue);
+    let rx = SharedRx::new(rx);
     let stats = Arc::new(ServeStats::default());
     let ctl = Ctl::fresh();
     let engine = {
@@ -109,7 +110,7 @@ fn drive_raw(
             ctl.clone(),
         );
         std::thread::spawn(move || {
-            engine_loop(m, name, c2, &rx, stats, ctl)
+            engine_loop(m, name, c2, &rx, stats, ctl, 1)
         })
     };
     let t0 = Instant::now();

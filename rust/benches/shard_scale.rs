@@ -1,0 +1,224 @@
+//! Shard scaling under closed-loop load (`make bench-shards`). Two
+//! questions the sharded serving plane must answer with numbers:
+//!
+//! * **replica scaling** — with per-engine width capped (max_batch 2,
+//!   the single-engine bottleneck), how does delivered tok/s grow at
+//!   shard widths N ∈ {1, 2, 4}? Near-linear at N=2 is the
+//!   acceptance bar (≥ 1.6×); every width's greedy output is
+//!   parity-checked against the unsharded engine before its row is
+//!   recorded.
+//! * **pipeline overhead** — what does the stage-boundary activation
+//!   handoff cost? Single engine vs 2- and 3-stage layer-range
+//!   pipelines over the same weights, same load, parity-checked.
+//!
+//! Rows merge into `BENCH_serve.json` (section "shard*"), alongside
+//! the serve_throughput / chaos / fleet rows, for cross-PR perf
+//! tracking.
+
+use std::net::SocketAddr;
+use std::time::Instant;
+
+use mosaic::bench_support::{header, rec, Bench};
+use mosaic::data::trace::percentiles;
+use mosaic::model::weights::testutil::random_model_sized;
+use mosaic::model::ModelWeights;
+use mosaic::serve::client::{Client, GenRequest};
+use mosaic::serve::{ModelRegistry, ServeConfig, Server, ShardPlan};
+use mosaic::util::json::Json;
+
+const MODEL: &str = "m";
+const PROBE: [u16; 4] = [1, 9, 4, 7];
+
+/// Four layers so the pipeline splits have real work per stage.
+fn model() -> ModelWeights {
+    random_model_sized(11, 4, 64, 4, 176, 128, 64)
+}
+
+fn start_with(plan: ShardPlan) -> Server {
+    let mut reg = ModelRegistry::new();
+    reg.register_sharded(MODEL, model(), plan).expect("register");
+    Server::start_registry(
+        reg,
+        ServeConfig {
+            // width 2 per engine: the single-engine ceiling replica
+            // sharding is supposed to lift
+            max_batch: 2,
+            max_queue: 1024,
+            default_model: Some(MODEL.into()),
+            ..Default::default()
+        },
+        0,
+    )
+    .expect("start server")
+}
+
+fn probe(addr: SocketAddr) -> Vec<u16> {
+    let mut c = Client::connect(addr).expect("connect");
+    c.generate(&GenRequest::greedy(&PROBE).max_new(12).model(MODEL))
+        .expect("probe")
+        .tokens
+}
+
+struct DriveOut {
+    tok_per_s: f64,
+    p95_ms: f64,
+}
+
+/// Closed-loop drive: `clients` concurrent connections, each issuing
+/// `per` sequential greedy requests. Wall-clock covers the whole
+/// burst, so tok/s reflects delivered group capacity.
+fn drive(addr: SocketAddr, clients: usize, per: usize) -> DriveOut {
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|ci| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).expect("connect");
+                let mut lats = Vec::new();
+                let mut tokens = 0usize;
+                for r in 0..per {
+                    let prompt = [
+                        1 + ((ci + r) % 7) as u16,
+                        9,
+                        4 + ((ci * 3 + r) % 5) as u16,
+                    ];
+                    let s = Instant::now();
+                    let reply = c
+                        .generate(
+                            &GenRequest::greedy(&prompt)
+                                .max_new(16)
+                                .model(MODEL),
+                        )
+                        .expect("generate");
+                    lats.push(s.elapsed().as_secs_f64() * 1e3);
+                    tokens += reply.tokens.len();
+                }
+                (lats, tokens)
+            })
+        })
+        .collect();
+    let mut lats = Vec::new();
+    let mut tokens = 0usize;
+    for h in handles {
+        let (l, t) = h.join().expect("load worker");
+        lats.extend(l);
+        tokens += t;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let (_, p95, _) = percentiles(lats);
+    DriveOut { tok_per_s: tokens as f64 / wall, p95_ms: p95 }
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new(
+        "shard_scale",
+        "replica scaling + pipeline handoff overhead",
+    );
+    let (clients, per) = if Bench::fast() { (8, 4) } else { (16, 10) };
+    let mut rows: Vec<Json> = Vec::new();
+
+    // the unsharded engine: throughput baseline AND parity reference
+    let single = start_with(ShardPlan::Single);
+    let want = probe(single.addr);
+    let base = drive(single.addr, clients, per);
+    single.shutdown();
+
+    println!("— replica scaling ({clients} clients × {per} reqs) —");
+    header(&["shards", "tok/s", "p95-ms", "scale"]);
+    println!(
+        "{:>12}{:>12.0}{:>12.2}{:>12.2}",
+        1, base.tok_per_s, base.p95_ms, 1.0
+    );
+    rows.push(rec(&[
+        ("section", Json::str("shard")),
+        ("mode", Json::str("replica")),
+        ("shards", Json::num(1.0)),
+        ("tok_per_s", Json::num(base.tok_per_s)),
+        ("p95_ms", Json::num(base.p95_ms)),
+        ("scale_vs_1", Json::num(1.0)),
+        ("parity", Json::Bool(true)),
+    ]));
+    for n in [2usize, 4] {
+        let srv = start_with(ShardPlan::Replica(n));
+        let got = probe(srv.addr);
+        anyhow::ensure!(
+            got == want,
+            "replica x{n} output diverged from unsharded"
+        );
+        let out = drive(srv.addr, clients, per);
+        srv.shutdown();
+        let scale = out.tok_per_s / base.tok_per_s.max(1e-9);
+        println!(
+            "{n:>12}{:>12.0}{:>12.2}{scale:>12.2}",
+            out.tok_per_s, out.p95_ms
+        );
+        rows.push(rec(&[
+            ("section", Json::str("shard")),
+            ("mode", Json::str("replica")),
+            ("shards", Json::num(n as f64)),
+            ("tok_per_s", Json::num(out.tok_per_s)),
+            ("p95_ms", Json::num(out.p95_ms)),
+            ("scale_vs_1", Json::num(scale)),
+            ("parity", Json::Bool(true)),
+        ]));
+    }
+
+    println!("\n— pipeline handoff overhead —");
+    header(&["stages", "tok/s", "p95-ms", "vs-single"]);
+    for stages in [2usize, 3] {
+        let srv = start_with(ShardPlan::Pipeline(stages));
+        let got = probe(srv.addr);
+        anyhow::ensure!(
+            got == want,
+            "pipeline x{stages} output diverged from unsharded"
+        );
+        let out = drive(srv.addr, clients, per);
+        srv.shutdown();
+        let ratio = out.tok_per_s / base.tok_per_s.max(1e-9);
+        println!(
+            "{stages:>12}{:>12.0}{:>12.2}{ratio:>12.2}",
+            out.tok_per_s, out.p95_ms
+        );
+        rows.push(rec(&[
+            ("section", Json::str("shard_pipe")),
+            ("mode", Json::str("pipeline")),
+            ("shards", Json::num(stages as f64)),
+            ("tok_per_s", Json::num(out.tok_per_s)),
+            ("p95_ms", Json::num(out.p95_ms)),
+            ("vs_single", Json::num(ratio)),
+            ("parity", Json::Bool(true)),
+        ]));
+    }
+    for r in &rows {
+        b.row("shard", r.clone());
+    }
+
+    // ---- merge into BENCH_serve.json: replace prior shard* rows,
+    // keep everything the other serve benches wrote
+    let mut kept: Vec<Json> = Vec::new();
+    let mut out = Json::obj();
+    out.set("bench", Json::str("serve_throughput"));
+    if let Ok(prev) = std::fs::read_to_string("BENCH_serve.json") {
+        if let Ok(j) = Json::parse(prev.trim()) {
+            if let Some(name) = j.get("bench").and_then(|v| v.as_str()) {
+                out.set("bench", Json::str(name));
+            }
+            if let Some(nr) = j.get("n_requests") {
+                out.set("n_requests", nr.clone());
+            }
+            if let Some(rs) = j.get("rows").and_then(|r| r.as_arr()) {
+                kept.extend(rs.iter().cloned().filter(|r| {
+                    !r.get("section")
+                        .and_then(|s| s.as_str())
+                        .is_some_and(|s| s.starts_with("shard"))
+                }));
+            }
+        }
+    }
+    kept.extend(rows);
+    out.set("rows", Json::Arr(kept));
+    std::fs::write("BENCH_serve.json", out.to_string())?;
+    println!("\n[merged shard rows into BENCH_serve.json]");
+
+    b.finish();
+    Ok(())
+}

@@ -265,10 +265,30 @@ impl Mosaic {
         plan: &PruningPlan,
         opts: &prune::ProduceOpts,
     ) -> Result<(f64, usize)> {
+        self.produce_into_sharded(
+            registry,
+            name,
+            plan,
+            opts,
+            crate::serve::ShardPlan::Single,
+        )
+    }
+
+    /// [`Mosaic::produce_into`] behind a [`crate::serve::ShardPlan`]:
+    /// the sealed variant is published as a replica or pipeline shard
+    /// group instead of a single engine.
+    pub fn produce_into_sharded(
+        &mut self,
+        registry: &mut crate::serve::ModelRegistry,
+        name: &str,
+        plan: &PruningPlan,
+        opts: &prune::ProduceOpts,
+        shards: crate::serve::ShardPlan,
+    ) -> Result<(f64, usize)> {
         let rep = self.produce(plan, opts)?;
         let (wall_ms, resident) =
             (rep.wall_ms, rep.model.resident_bytes());
-        registry.register(name, rep.model)?;
+        registry.register_sharded(name, rep.model, shards)?;
         Ok((wall_ms, resident))
     }
 

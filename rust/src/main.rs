@@ -14,6 +14,8 @@
 //!                  [--idle-ms 0] [--route-seed 0]
 //!                  [--models dense,composite@0.6,unstructured@0.7,
 //!                            name=path.mosaic,...]   (registry list)
+//!                  [--shards N|pipe:N]   (default plan; per-entry
+//!                            override: name=source@shards=N)
 //!                  [--spec target:draft@k[,name=target:draft@k...]]
 //!                  [--default-model NAME] [--stream 0|1]
 //!                  [--batch 8] [--queue 64] [--port 7171] [--seal 0|1]
@@ -327,13 +329,25 @@ fn cmd_deploy(args: &Args) -> Result<()> {
 /// (0 = never). `--route log=be:w,...` adds weighted logical routes
 /// (';'-separated), picked per-request by a PCG32 stream seeded from
 /// `--route-seed` — same routes + seed replay the same traffic split.
+///
+/// `--shards N` backs every registry entry with N replica engine
+/// workers sharing one queue and one set of weights (throughput);
+/// `--shards pipe:N` splits each entry's layer stack into N balanced
+/// pipeline stages inside one worker (memory). A per-entry
+/// `@shards=N` / `@shards=pipe:N` suffix on a `--models` or `--cold`
+/// entry overrides the default. Sharded output is bit-identical to
+/// the unsharded engine; spec pairs cannot be sharded.
 fn cmd_serve(args: &Args) -> Result<()> {
     use mosaic::prune::{plan, CompositeOpts, ProduceOpts, PrunerKind};
-    use mosaic::serve::{ModelRegistry, ServeConfig, Server};
+    use mosaic::serve::{ModelRegistry, ServeConfig, Server, ShardPlan};
 
     let mut mo = Mosaic::load(&args.get("model", "tl1_7"))?;
     let n = args.usize("samples", DEFAULT_CALIB_SAMPLES);
     let quant = parse_quant(args)?;
+    // --shards N (replica) / --shards pipe:N (layer-range pipeline):
+    // default plan for every --models/--cold entry; a per-entry
+    // @shards= suffix overrides it
+    let default_plan = ShardPlan::parse(&args.get("shards", "1"))?;
     let legacy_p = args.f64("p", 0.0);
     let specs = args.get(
         "models",
@@ -350,9 +364,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut registry = ModelRegistry::new();
     for spec in specs.split(',').map(str::trim).filter(|s| !s.is_empty())
     {
+        // the @shards= suffix is stripped from the WHOLE spec before
+        // the name split — the suffix itself contains '='
+        let (spec, shard_plan) = match spec.rsplit_once("@shards=") {
+            Some((rest, plan_s)) => (rest, ShardPlan::parse(plan_s)?),
+            None => (spec, default_plan),
+        };
         let (name_opt, source) = match spec.split_once('=') {
             Some((n, s)) => (Some(n.to_string()), s),
             None => (None, spec),
+        };
+        let shard_note = if shard_plan.is_single() {
+            String::new()
+        } else {
+            format!(
+                ", {} x{}",
+                shard_plan.mode(),
+                shard_plan.shards()
+            )
         };
         if source == "dense" {
             // --seal 1 runs even the dense weights on f16 storage
@@ -367,10 +396,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
             let name = name_opt.unwrap_or_else(|| "dense".into());
             println!(
-                "registered '{name}': dense checkpoint ({} KB resident)",
+                "registered '{name}': dense checkpoint \
+                 ({} KB resident{shard_note})",
                 m.resident_bytes() / 1024
             );
-            registry.register(&name, m)?;
+            registry.register_sharded(&name, m, shard_plan)?;
         } else if let Some((cat_s, p_s)) = source.split_once('@') {
             let cat = parse_category(cat_s)?;
             let p: f64 = p_s.parse().map_err(|_| {
@@ -399,11 +429,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     quant,
                     ..ProduceOpts::new(kind)
                 };
-                let (wall_ms, resident) =
-                    mo.produce_into(&mut registry, &name, &pl, &opts)?;
+                let (wall_ms, resident) = mo.produce_into_sharded(
+                    &mut registry,
+                    &name,
+                    &pl,
+                    &opts,
+                    shard_plan,
+                )?;
                 println!(
                     "registered '{name}': {source} sealed in \
-                     {wall_ms:.0} ms ({} KB resident)",
+                     {wall_ms:.0} ms ({} KB resident{shard_note})",
                     resident / 1024
                 );
             } else {
@@ -412,10 +447,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 let (m, _) = mo.prune(p, u, cat, n)?;
                 println!(
                     "registered '{name}': {source} exact f32 \
-                     ({} KB resident)",
+                     ({} KB resident{shard_note})",
                     m.resident_bytes() / 1024
                 );
-                registry.register(&name, m)?;
+                registry.register_sharded(&name, m, shard_plan)?;
             }
         } else {
             let path = std::path::Path::new(source);
@@ -430,8 +465,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     .unwrap_or("file")
                     .to_string()
             });
-            registry.register_file(&name, path)?;
-            println!("registered '{name}': {}", path.display());
+            registry.register_file_sharded(&name, path, shard_plan)?;
+            println!(
+                "registered '{name}': {}{shard_note}",
+                path.display()
+            );
         }
     }
     // speculative pairs over the registered entries:
@@ -442,6 +480,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .map(str::trim)
         .filter(|s| !s.is_empty())
     {
+        anyhow::ensure!(
+            !spec.contains("@shards="),
+            "--spec entry '{spec}': speculative pairs cannot be \
+             sharded (shard the target/draft entries instead)"
+        );
         let (name, source) = match spec.split_once('=') {
             Some((n, s)) => (n.to_string(), s),
             None => (spec.to_string(), spec),
@@ -475,12 +518,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .map(str::trim)
         .filter(|s| !s.is_empty())
     {
+        let (spec, shard_plan) = match spec.rsplit_once("@shards=") {
+            Some((rest, plan_s)) => (rest, ShardPlan::parse(plan_s)?),
+            None => (spec, default_plan),
+        };
         let (name, path_s) = spec.split_once('=').ok_or_else(|| {
             anyhow::anyhow!(
                 "bad --cold entry '{spec}' (want name=file.mosaic)"
             )
         })?;
-        registry.register_cold(name, std::path::Path::new(path_s))?;
+        registry.register_cold_sharded(
+            name,
+            std::path::Path::new(path_s),
+            shard_plan,
+        )?;
         println!(
             "registered '{name}': cold sealed artifact {path_s} \
              (0 KB resident until first request)"

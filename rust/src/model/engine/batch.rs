@@ -86,6 +86,10 @@ struct SeqKv {
 pub struct DecodeBatch {
     seqs: Vec<SeqKv>,
     pool: KvPagePool,
+    /// layers this batch runs: `0..n_layers` for a whole model, a
+    /// contiguous sub-range for one pipeline stage. The KV pool holds
+    /// pages for exactly these layers, indexed range-locally.
+    layer_range: std::ops::Range<usize>,
     max_batch: usize,
     max_ctx: usize,
     /// scratch row capacity: max_batch decode rows + a PREFILL_CHUNK
@@ -175,6 +179,29 @@ impl DecodeBatch {
         row_budget: usize,
         kv: KvConfig,
     ) -> Self {
+        Self::with_kv_range(
+            m,
+            max_batch,
+            max_ctx,
+            row_budget,
+            kv,
+            0..m.layers.len(),
+        )
+    }
+
+    /// Pipeline-stage constructor: the batch runs only
+    /// `m.layers[layer_range]` and its KV pool holds pages for exactly
+    /// those layers. Stages past the first skip the embedding gather —
+    /// the pipeline driver copies the upstream stage's boundary
+    /// activation into `x` before calling [`Self::forward_rows`].
+    pub fn with_kv_range(
+        m: &ModelWeights,
+        max_batch: usize,
+        max_ctx: usize,
+        row_budget: usize,
+        kv: KvConfig,
+        layer_range: std::ops::Range<usize>,
+    ) -> Self {
         let cfg = &m.cfg;
         let dh = cfg.head_dim;
         let maxa = cfg.n_heads * dh;
@@ -182,7 +209,8 @@ impl DecodeBatch {
         let cap_rows = max_batch + row_budget.max(PREFILL_CHUNK);
         DecodeBatch {
             seqs: Vec::with_capacity(max_batch),
-            pool: KvPagePool::new(m, &kv),
+            pool: KvPagePool::new_range(m, &kv, layer_range.clone()),
+            layer_range,
             max_batch,
             max_ctx,
             cap_rows,
@@ -489,6 +517,22 @@ impl DecodeBatch {
         verify: &[(usize, &[u16])],
         prefill: &[(usize, &[u16], bool)],
     ) -> &Tensor {
+        self.stage_inputs(decode, verify, prefill);
+        self.forward_rows(m);
+        self.advance_staged(decode, verify, prefill);
+        self.select_logits(m, decode, verify, prefill)
+    }
+
+    /// Stage the fused pass's input rows into `rows`/`toks`, reserving
+    /// (and CoW-redirecting) every KV write slot. Split out of
+    /// [`Self::fused`] so [`PipelineBatch`] can stage every stage's
+    /// rows before any stage forwards.
+    fn stage_inputs(
+        &mut self,
+        decode: &[(usize, u16)],
+        verify: &[(usize, &[u16])],
+        prefill: &[(usize, &[u16], bool)],
+    ) {
         debug_assert!(
             {
                 let mut ids: Vec<usize> = decode
@@ -549,7 +593,16 @@ impl DecodeBatch {
         }
         let b = self.toks.len();
         assert!(b > 0 && b <= self.cap_rows, "fused step width {b}");
-        self.forward_rows(m);
+    }
+
+    /// Advance each staged sequence's position past the rows it
+    /// consumed in the pass just forwarded.
+    fn advance_staged(
+        &mut self,
+        decode: &[(usize, u16)],
+        verify: &[(usize, &[u16])],
+        prefill: &[(usize, &[u16], bool)],
+    ) {
         for &(si, _) in decode {
             self.seqs[si].pos += 1;
         }
@@ -559,8 +612,20 @@ impl DecodeBatch {
         for &(si, tokens, _) in prefill {
             self.seqs[si].pos += tokens.len();
         }
-        // lm_head over only the rows that need logits: decode rows,
-        // every verify row, then each want_logits chunk's last row
+    }
+
+    /// lm_head over only the rows that need logits: decode rows, every
+    /// verify row, then each want_logits chunk's last row. Runs over
+    /// the residual stream [`Self::forward_rows`] left in `x` — under
+    /// pipeline sharding only the last stage (the one holding
+    /// `final_norm`'s input) calls this.
+    fn select_logits(
+        &mut self,
+        m: &ModelWeights,
+        decode: &[(usize, u16)],
+        verify: &[(usize, &[u16])],
+        prefill: &[(usize, &[u16], bool)],
+    ) -> &Tensor {
         self.sel.clear();
         self.sel.extend(0..decode.len());
         let mut base = decode.len();
@@ -635,12 +700,26 @@ impl DecodeBatch {
         if self.aw.len() < aw_need {
             self.aw.resize(aw_need, 0.0);
         }
-        shape2(&mut self.x, b, d);
+        if self.layer_range.start == 0 {
+            shape2(&mut self.x, b, d);
+            self.gath.clear();
+            self.gath.extend(self.toks.iter().map(|&t| t as usize));
+            gather_rows(&m.embed, &self.gath, &mut self.x);
+        } else {
+            // later pipeline stage: the upstream stage's boundary
+            // activation was copied into `x` by the pipeline driver
+            debug_assert_eq!(
+                self.x.data.len(),
+                b * d,
+                "pipeline stage fed without a handoff activation"
+            );
+            self.x.shape[0] = b;
+            self.x.shape[1] = d;
+        }
         shape2(&mut self.xn, b, d);
-        self.gath.clear();
-        self.gath.extend(self.toks.iter().map(|&t| t as usize));
-        gather_rows(&m.embed, &self.gath, &mut self.x);
-        for (li, l) in m.layers.iter().enumerate() {
+        for (pli, l) in
+            m.layers[self.layer_range.clone()].iter().enumerate()
+        {
             let hk = l.kept_heads.len();
             let adim = hk * dh;
             // ---- attention block
@@ -675,10 +754,10 @@ impl DecodeBatch {
                 let (si, pos) = self.rows[r];
                 let pg = self.seqs[si].table[pos / pp];
                 self.pool
-                    .k_slot_mut(pg, li, pos % pp)
+                    .k_slot_mut(pg, pli, pos % pp)
                     .copy_from_slice(self.k.row(r));
                 self.pool
-                    .v_slot_mut(pg, li, pos % pp)
+                    .v_slot_mut(pg, pli, pos % pp)
                     .copy_from_slice(self.v.row(r));
             }
             shape2(&mut self.attn, b, adim);
@@ -706,7 +785,7 @@ impl DecodeBatch {
                         for pi in 0..=pos / pp {
                             let base = pi * pp;
                             let n = (pos + 1 - base).min(pp);
-                            let kreg = pool.k_page(table[pi], li);
+                            let kreg = pool.k_page(table[pi], pli);
                             for s in 0..n {
                                 let kh = &kreg[s * adim + h * dh
                                     ..s * adim + (h + 1) * dh];
@@ -723,7 +802,7 @@ impl DecodeBatch {
                         for pi in 0..=pos / pp {
                             let base = pi * pp;
                             let n = (pos + 1 - base).min(pp);
-                            let vreg = pool.v_page(table[pi], li);
+                            let vreg = pool.v_page(table[pi], pli);
                             for s in 0..n {
                                 let vh = &vreg[s * adim + h * dh
                                     ..s * adim + (h + 1) * dh];
@@ -796,6 +875,380 @@ pub fn prefill_into<'a>(
         start += PREFILL_CHUNK;
     }
     batch.prefill_chunk(m, si, &tokens[start..], true)
+}
+
+/// Layer-range (pipeline) sharded decode state: the model's layers are
+/// partitioned into contiguous stages by resident-byte balance
+/// ([`ModelWeights::split_layer_ranges`]) and each stage owns a
+/// [`DecodeBatch`] running only its own layers, with a KV pool holding
+/// pages for exactly that layer range. A fused step stages every
+/// stage's rows, forwards the stages in order, and copies the boundary
+/// residual activation (`x`) from stage k into stage k+1 — the
+/// **handoff invariant**: a row's activation leaves stage k exactly as
+/// the unsharded layer loop would have left it after the same layers,
+/// so the last stage's logits are bit-identical to the unsharded
+/// engine's (locked down in this module's tests and
+/// rust/tests/shard_parity.rs).
+///
+/// Two simplifications keep the invariant easy to audit: the prefix
+/// cache is disabled (`prefix_entries` forced to 0 per stage —
+/// admission always feeds the whole prompt), and sequence bookkeeping
+/// (admit / reserve / retire / truncate) is mirrored in lockstep
+/// across stages. The per-stage pools have identical page budgets and
+/// see identical allocation sequences, so a reservation that succeeds
+/// on one stage succeeds on every stage (debug-asserted).
+pub struct PipelineBatch {
+    stages: Vec<DecodeBatch>,
+}
+
+impl PipelineBatch {
+    /// Build `n_stages` pipeline stages over `m`'s layers. Each stage
+    /// gets its own KV pool with `kv`'s page budget (the budget is
+    /// per-stage: a stage only holds KV rows for its own layers, which
+    /// is the memory split the sharding exists to provide).
+    pub fn with_kv(
+        m: &ModelWeights,
+        n_stages: usize,
+        max_batch: usize,
+        max_ctx: usize,
+        row_budget: usize,
+        kv: KvConfig,
+    ) -> Self {
+        assert!(n_stages >= 2, "pipeline needs at least 2 stages");
+        let stages = m
+            .split_layer_ranges(n_stages)
+            .into_iter()
+            .map(|range| {
+                let mut kv = kv.clone();
+                kv.prefix_entries = 0;
+                DecodeBatch::with_kv_range(
+                    m, max_batch, max_ctx, row_budget, kv, range,
+                )
+            })
+            .collect();
+        PipelineBatch { stages }
+    }
+
+    /// Lockstep admission across every stage. The prefix cache is
+    /// disabled under pipeline sharding, so `hit` must be 0.
+    pub fn admit_prompt(
+        &mut self,
+        cap: usize,
+        prompt: &[u16],
+        hit: usize,
+    ) -> Result<usize> {
+        assert_eq!(
+            hit, 0,
+            "prefix cache is disabled under pipeline sharding"
+        );
+        let mut si = 0;
+        for st in &mut self.stages {
+            si = st.admit_prompt(cap, prompt, 0)?;
+        }
+        Ok(si)
+    }
+
+    /// Always 0: the prefix cache is disabled under pipeline sharding.
+    pub fn prefix_peek(&self, _prompt: &[u16]) -> usize {
+        0
+    }
+
+    /// No-op: the prefix cache is disabled under pipeline sharding.
+    pub fn cache_prefix(&mut self, _si: usize, _tokens: &[u16]) {}
+
+    /// Lockstep reserve across every stage. Identical budgets and
+    /// allocation sequences mean the stages cannot disagree; the
+    /// debug_assert makes a divergence loud instead of silently
+    /// corrupting the handoff.
+    pub fn try_reserve(&mut self, si: usize, extra: usize) -> bool {
+        let (first, rest) =
+            self.stages.split_first_mut().expect("no stages");
+        let ok = first.try_reserve(si, extra);
+        for st in rest {
+            let got = st.try_reserve(si, extra);
+            debug_assert_eq!(got, ok, "pipeline stage pools diverged");
+        }
+        ok
+    }
+
+    pub fn retire(&mut self, si: usize) {
+        for st in &mut self.stages {
+            st.retire(si);
+        }
+    }
+
+    pub fn retire_all(&mut self) {
+        for st in &mut self.stages {
+            st.retire_all();
+        }
+    }
+
+    pub fn truncate(&mut self, si: usize, len: usize) {
+        for st in &mut self.stages {
+            st.truncate(si, len);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.stages[0].len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stages[0].is_empty()
+    }
+
+    pub fn pos(&self, si: usize) -> usize {
+        self.stages[0].pos(si)
+    }
+
+    pub fn cap(&self, si: usize) -> usize {
+        self.stages[0].cap(si)
+    }
+
+    /// Pages mapped by sequence `si` summed across every stage's pool.
+    pub fn seq_pages(&self, si: usize) -> usize {
+        self.stages.iter().map(|st| st.seq_pages(si)).sum()
+    }
+
+    pub fn prefix_hit(&self, si: usize) -> usize {
+        self.stages[0].prefix_hit(si)
+    }
+
+    pub fn pages_total(&self) -> usize {
+        self.stages.iter().map(|st| st.pages_total()).sum()
+    }
+
+    pub fn pages_in_use(&self) -> usize {
+        self.stages.iter().map(|st| st.pages_in_use()).sum()
+    }
+
+    /// An allocation succeeds only if every stage can grant it, so the
+    /// group-level headroom is the minimum across stages.
+    pub fn available_pages(&self) -> usize {
+        self.stages
+            .iter()
+            .map(|st| st.available_pages())
+            .min()
+            .unwrap_or(0)
+    }
+
+    pub fn pages_for(&self, positions: usize) -> usize {
+        self.stages[0].pages_for(positions)
+    }
+
+    pub fn prefix_hit_tokens(&self) -> u64 {
+        0
+    }
+
+    pub fn kv_bytes(&self) -> usize {
+        self.stages.iter().map(|st| st.kv_bytes()).sum()
+    }
+
+    /// One fused pass through the whole pipeline: stage every stage's
+    /// rows, forward stage 0, copy its boundary activation into stage
+    /// 1 and forward it, and so on; then advance all stages and run
+    /// the lm_head on the last stage only. Row semantics (group order,
+    /// logits rows) match [`DecodeBatch::step_fused`] exactly.
+    pub fn step_fused(
+        &mut self,
+        m: &ModelWeights,
+        decode: &[(usize, u16)],
+        prefill: &[(usize, &[u16], bool)],
+    ) -> &Tensor {
+        for st in &mut self.stages {
+            st.stage_inputs(decode, &[], prefill);
+        }
+        self.stages[0].forward_rows(m);
+        for k in 1..self.stages.len() {
+            let (done, todo) = self.stages.split_at_mut(k);
+            let src = &done[k - 1].x;
+            let dst = &mut todo[0].x;
+            dst.data.clear();
+            dst.data.extend_from_slice(&src.data);
+            dst.shape.clone_from(&src.shape);
+            todo[0].forward_rows(m);
+        }
+        for st in &mut self.stages {
+            st.advance_staged(decode, &[], prefill);
+        }
+        let last = self.stages.len() - 1;
+        self.stages[last].select_logits(m, decode, &[], prefill)
+    }
+}
+
+/// The engine loop's batch handle: one [`DecodeBatch`] over the whole
+/// model, or a [`PipelineBatch`] over layer-range stages. Every method
+/// the serving layer uses forwards to the active variant, so the
+/// engine loop is shard-mode agnostic.
+pub enum EngineBatch {
+    Single(DecodeBatch),
+    Pipeline(PipelineBatch),
+}
+
+impl EngineBatch {
+    /// `stages <= 1` builds the plain single-batch engine; `stages >=
+    /// 2` builds a layer-range pipeline.
+    pub fn with_kv(
+        m: &ModelWeights,
+        max_batch: usize,
+        max_ctx: usize,
+        row_budget: usize,
+        kv: KvConfig,
+        stages: usize,
+    ) -> Self {
+        if stages <= 1 {
+            EngineBatch::Single(DecodeBatch::with_kv(
+                m, max_batch, max_ctx, row_budget, kv,
+            ))
+        } else {
+            EngineBatch::Pipeline(PipelineBatch::with_kv(
+                m, stages, max_batch, max_ctx, row_budget, kv,
+            ))
+        }
+    }
+
+    pub fn admit_prompt(
+        &mut self,
+        cap: usize,
+        prompt: &[u16],
+        hit: usize,
+    ) -> Result<usize> {
+        match self {
+            EngineBatch::Single(b) => b.admit_prompt(cap, prompt, hit),
+            EngineBatch::Pipeline(b) => b.admit_prompt(cap, prompt, hit),
+        }
+    }
+
+    pub fn prefix_peek(&self, prompt: &[u16]) -> usize {
+        match self {
+            EngineBatch::Single(b) => b.prefix_peek(prompt),
+            EngineBatch::Pipeline(b) => b.prefix_peek(prompt),
+        }
+    }
+
+    pub fn cache_prefix(&mut self, si: usize, tokens: &[u16]) {
+        match self {
+            EngineBatch::Single(b) => b.cache_prefix(si, tokens),
+            EngineBatch::Pipeline(b) => b.cache_prefix(si, tokens),
+        }
+    }
+
+    pub fn try_reserve(&mut self, si: usize, extra: usize) -> bool {
+        match self {
+            EngineBatch::Single(b) => b.try_reserve(si, extra),
+            EngineBatch::Pipeline(b) => b.try_reserve(si, extra),
+        }
+    }
+
+    pub fn retire(&mut self, si: usize) {
+        match self {
+            EngineBatch::Single(b) => b.retire(si),
+            EngineBatch::Pipeline(b) => b.retire(si),
+        }
+    }
+
+    pub fn retire_all(&mut self) {
+        match self {
+            EngineBatch::Single(b) => b.retire_all(),
+            EngineBatch::Pipeline(b) => b.retire_all(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            EngineBatch::Single(b) => b.len(),
+            EngineBatch::Pipeline(b) => b.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        match self {
+            EngineBatch::Single(b) => b.is_empty(),
+            EngineBatch::Pipeline(b) => b.is_empty(),
+        }
+    }
+
+    pub fn pos(&self, si: usize) -> usize {
+        match self {
+            EngineBatch::Single(b) => b.pos(si),
+            EngineBatch::Pipeline(b) => b.pos(si),
+        }
+    }
+
+    pub fn cap(&self, si: usize) -> usize {
+        match self {
+            EngineBatch::Single(b) => b.cap(si),
+            EngineBatch::Pipeline(b) => b.cap(si),
+        }
+    }
+
+    pub fn seq_pages(&self, si: usize) -> usize {
+        match self {
+            EngineBatch::Single(b) => b.seq_pages(si),
+            EngineBatch::Pipeline(b) => b.seq_pages(si),
+        }
+    }
+
+    pub fn pages_total(&self) -> usize {
+        match self {
+            EngineBatch::Single(b) => b.pages_total(),
+            EngineBatch::Pipeline(b) => b.pages_total(),
+        }
+    }
+
+    pub fn pages_in_use(&self) -> usize {
+        match self {
+            EngineBatch::Single(b) => b.pages_in_use(),
+            EngineBatch::Pipeline(b) => b.pages_in_use(),
+        }
+    }
+
+    pub fn available_pages(&self) -> usize {
+        match self {
+            EngineBatch::Single(b) => b.available_pages(),
+            EngineBatch::Pipeline(b) => b.available_pages(),
+        }
+    }
+
+    pub fn pages_for(&self, positions: usize) -> usize {
+        match self {
+            EngineBatch::Single(b) => b.pages_for(positions),
+            EngineBatch::Pipeline(b) => b.pages_for(positions),
+        }
+    }
+
+    pub fn prefix_hit(&self, si: usize) -> usize {
+        match self {
+            EngineBatch::Single(b) => b.prefix_hit(si),
+            EngineBatch::Pipeline(b) => b.prefix_hit(si),
+        }
+    }
+
+    pub fn prefix_hit_tokens(&self) -> u64 {
+        match self {
+            EngineBatch::Single(b) => b.prefix_hit_tokens(),
+            EngineBatch::Pipeline(b) => b.prefix_hit_tokens(),
+        }
+    }
+
+    pub fn kv_bytes(&self) -> usize {
+        match self {
+            EngineBatch::Single(b) => b.kv_bytes(),
+            EngineBatch::Pipeline(b) => b.kv_bytes(),
+        }
+    }
+
+    pub fn step_fused(
+        &mut self,
+        m: &ModelWeights,
+        decode: &[(usize, u16)],
+        prefill: &[(usize, &[u16], bool)],
+    ) -> &Tensor {
+        match self {
+            EngineBatch::Single(b) => b.step_fused(m, decode, prefill),
+            EngineBatch::Pipeline(b) => b.step_fused(m, decode, prefill),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -958,6 +1411,116 @@ mod tests {
         assert_eq!(batch.cap(0), 40);
         assert_eq!(batch.pages_in_use(), 1);
         assert_eq!(batch.kv_bytes(), page);
+    }
+
+    fn pipeline_prefill(
+        m: &ModelWeights,
+        pipe: &mut PipelineBatch,
+        si: usize,
+        tokens: &[u16],
+    ) -> Vec<f32> {
+        let mut start = 0;
+        while tokens.len() - start > PREFILL_CHUNK {
+            pipe.step_fused(
+                m,
+                &[],
+                &[(si, &tokens[start..start + PREFILL_CHUNK], false)],
+            );
+            start += PREFILL_CHUNK;
+        }
+        pipe.step_fused(m, &[], &[(si, &tokens[start..], true)])
+            .row(0)
+            .to_vec()
+    }
+
+    #[test]
+    fn pipeline_stages_bit_identical_to_single_batch() {
+        // the sharding contract at the engine level: splitting the
+        // layer loop at any boundary and handing the residual stream
+        // across must reproduce the EXACT logits bytes of the
+        // unsharded pass — same kernels in the same order, only the
+        // activation takes a copy between stages
+        use crate::model::weights::testutil::random_model_sized;
+        let m = random_model_sized(45, 5, 32, 2, 80, 64, 64);
+        let prompt: Vec<u16> = (0..40).map(|i| (i % 60) as u16).collect();
+        let cap = prompt.len() + 8;
+        for stages in [2usize, 3, 5] {
+            let mut one = DecodeBatch::new(&m, 2, cap);
+            let s1 = one.admit(cap).unwrap();
+            let want = prefill_into(&m, &mut one, s1, &prompt).to_vec();
+            let mut pipe = PipelineBatch::with_kv(
+                &m,
+                stages,
+                2,
+                cap,
+                PREFILL_CHUNK,
+                KvConfig::slab_equivalent(2, cap),
+            );
+            let s2 = pipe.admit_prompt(cap, &prompt, 0).unwrap();
+            let got = pipeline_prefill(&m, &mut pipe, s2, &prompt);
+            assert_eq!(
+                got,
+                want,
+                "{stages}-stage prefill logits must be bit-identical"
+            );
+            // decode steps stay bit-identical too, and so does a
+            // fused decode+prefill pass with a second sequence
+            for t in [7u16, 11, 2] {
+                let w = one.step(&m, &[(s1, t)]).row(0).to_vec();
+                let g = pipe.step_fused(&m, &[(s2, t)], &[]);
+                assert_eq!(g.row(0), w.as_slice(), "decode step");
+            }
+            let w1 = one.admit(cap).unwrap();
+            let p1 = pipe.admit_prompt(cap, &prompt, 0).unwrap();
+            assert_eq!(w1, p1);
+            let chunk = &prompt[..8];
+            let w = one
+                .step_fused(&m, &[(s1, 3)], &[(w1, chunk, true)])
+                .data
+                .clone();
+            let g = pipe
+                .step_fused(&m, &[(s2, 3)], &[(p1, chunk, true)])
+                .data
+                .clone();
+            assert_eq!(g, w, "fused decode+prefill pass");
+            assert_eq!(pipe.pos(s2), one.pos(s1));
+            assert_eq!(pipe.len(), one.len());
+        }
+    }
+
+    #[test]
+    fn pipeline_retire_and_gauges_mirror_across_stages() {
+        use crate::model::weights::testutil::random_model_sized;
+        let m = random_model_sized(46, 4, 32, 2, 80, 64, 32);
+        let mut pipe = PipelineBatch::with_kv(
+            &m,
+            2,
+            2,
+            24,
+            PREFILL_CHUNK,
+            KvConfig::slab_equivalent(2, 24),
+        );
+        let prompt: Vec<u16> = (0..10).map(|i| i as u16).collect();
+        let a = pipe.admit_prompt(24, &prompt, 0).unwrap();
+        pipeline_prefill(&m, &mut pipe, a, &prompt);
+        let b = pipe.admit_prompt(24, &prompt, 0).unwrap();
+        pipeline_prefill(&m, &mut pipe, b, &prompt);
+        // each stage maps the same page count; group gauges are sums
+        assert_eq!(pipe.len(), 2);
+        assert!(pipe.pages_in_use() > 0);
+        assert_eq!(pipe.pages_in_use() % 2, 0, "2 stages map equally");
+        assert_eq!(pipe.seq_pages(a) % 2, 0);
+        // prefix machinery is fully disabled
+        assert_eq!(pipe.prefix_peek(&prompt), 0);
+        assert_eq!(pipe.prefix_hit_tokens(), 0);
+        pipe.cache_prefix(a, &prompt);
+        assert_eq!(pipe.prefix_peek(&prompt), 0);
+        // retire releases on every stage (swap_remove mirrored)
+        pipe.retire(a);
+        assert_eq!(pipe.len(), 1);
+        pipe.retire_all();
+        assert_eq!(pipe.len(), 0);
+        assert_eq!(pipe.pages_in_use(), 0);
     }
 
     #[test]

@@ -24,7 +24,9 @@ pub mod batch;
 pub mod paging;
 pub mod sampler;
 
-pub use batch::{prefill_into, DecodeBatch, PREFILL_CHUNK};
+pub use batch::{
+    prefill_into, DecodeBatch, EngineBatch, PipelineBatch, PREFILL_CHUNK,
+};
 pub use paging::{KvConfig, KvPagePool, KV_PAGE};
 pub use sampler::{Sampler, SamplingParams};
 

@@ -142,11 +142,31 @@ pub struct KvPagePool {
 
 impl KvPagePool {
     pub fn new(m: &ModelWeights, cfg: &KvConfig) -> Self {
+        Self::new_range(m, cfg, 0..m.layers.len())
+    }
+
+    /// A pool covering only the layers in `range` — the per-shard pool
+    /// of a layer-range (pipeline) stage. Layer indices into the pool
+    /// (`k_page`, `k_slot_mut`, …) are **range-local**: pool layer 0 is
+    /// model layer `range.start`. Page bytes shrink with the range, so
+    /// each stage holds KV for exactly its own layers.
+    pub fn new_range(
+        m: &ModelWeights,
+        cfg: &KvConfig,
+        range: std::ops::Range<usize>,
+    ) -> Self {
         assert!(cfg.page_positions > 0, "page_positions must be > 0");
         assert!(cfg.pages > 0, "pool must hold at least one page");
+        assert!(
+            range.start < range.end && range.end <= m.layers.len(),
+            "layer range {range:?} invalid for {} layers",
+            m.layers.len()
+        );
         let dh = m.cfg.head_dim;
-        let widths: Vec<usize> =
-            m.layers.iter().map(|l| l.kept_heads.len() * dh).collect();
+        let widths: Vec<usize> = m.layers[range]
+            .iter()
+            .map(|l| l.kept_heads.len() * dh)
+            .collect();
         let mut k_off = Vec::with_capacity(widths.len());
         let mut v_off = Vec::with_capacity(widths.len());
         let mut off = 0usize;

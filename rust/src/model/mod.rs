@@ -9,6 +9,7 @@ pub mod weights;
 
 pub use config::{ModelConfig, Proj, N_PROJS, PROJS};
 pub use engine::{decode_step, forward_batch, forward_full, generate,
-                 prefill_into, DecodeBatch, DecodeState, KvConfig,
-                 KvPagePool, KV_PAGE, PREFILL_CHUNK};
+                 prefill_into, DecodeBatch, DecodeState, EngineBatch,
+                 KvConfig, KvPagePool, PipelineBatch, KV_PAGE,
+                 PREFILL_CHUNK};
 pub use weights::{LayerWeights, ModelWeights};

@@ -264,6 +264,61 @@ impl ModelWeights {
                 .map(|l| l.attn_norm.len() + l.ffn_norm.len())
                 .sum::<usize>()
     }
+
+    /// Bytes layer `li` occupies in memory right now: its projections'
+    /// storage-backend footprints plus the two f32 norm vectors. The
+    /// per-layer term of [`ModelWeights::resident_bytes`]; pipeline
+    /// sharding balances stages on it.
+    pub fn layer_resident_bytes(&self, li: usize) -> usize {
+        let l = &self.layers[li];
+        4 * (l.attn_norm.len() + l.ffn_norm.len())
+            + l.projs.iter().map(|s| s.resident_bytes()).sum::<usize>()
+    }
+
+    /// Partition the layer stack into `n` contiguous ranges balanced by
+    /// resident bytes — the stage assignment for layer-range (pipeline)
+    /// sharding. Ranges are non-empty, in order, and cover every layer
+    /// exactly once; `n` is clamped to `1..=n_layers`. Greedy: each
+    /// stage takes layers until it reaches an even share of the bytes
+    /// still unassigned, always leaving at least one layer per
+    /// remaining stage, so compacted models with uneven per-layer
+    /// sparsity split near-evenly instead of by layer count.
+    pub fn split_layer_ranges(
+        &self,
+        n: usize,
+    ) -> Vec<std::ops::Range<usize>> {
+        let nl = self.layers.len();
+        let n = n.clamp(1, nl.max(1));
+        let bytes: Vec<usize> =
+            (0..nl).map(|i| self.layer_resident_bytes(i)).collect();
+        let mut remaining: usize = bytes.iter().sum();
+        let mut ranges = Vec::with_capacity(n);
+        let mut start = 0usize;
+        for stage in 0..n {
+            let stages_left = n - stage;
+            if stages_left == 1 {
+                ranges.push(start..nl);
+                break;
+            }
+            let target = remaining.div_ceil(stages_left);
+            // never strand a later stage without a layer
+            let max_end = nl - (stages_left - 1);
+            let mut end = start;
+            let mut acc = 0usize;
+            while end < max_end {
+                acc += bytes[end];
+                end += 1;
+                if acc >= target {
+                    break;
+                }
+            }
+            debug_assert!(end > start, "empty pipeline stage");
+            ranges.push(start..end);
+            remaining -= acc;
+            start = end;
+        }
+        ranges
+    }
 }
 
 /// Test helpers (used by unit, property and integration tests plus the
@@ -369,6 +424,54 @@ mod tests {
             .for_each(|x| *x = 0.0);
         assert_eq!(m.model_bytes(), dense);
         assert!(m.live_proj_params() < m.stored_proj_params());
+    }
+
+    #[test]
+    fn split_layer_ranges_covers_every_layer_once() {
+        let m = super::testutil::random_model_sized(7, 5, 16, 2, 40, 64, 16);
+        for n in 1..=7 {
+            let ranges = m.split_layer_ranges(n);
+            assert_eq!(ranges.len(), n.min(5), "n={n}");
+            assert_eq!(ranges[0].start, 0);
+            assert_eq!(ranges.last().unwrap().end, 5);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "contiguous");
+                assert!(!w[0].is_empty() && !w[1].is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn split_layer_ranges_balances_resident_bytes() {
+        // uniform layers split evenly by count …
+        let m = super::testutil::random_model_sized(8, 4, 16, 2, 40, 64, 16);
+        assert_eq!(m.split_layer_ranges(2), vec![0..2, 2..4]);
+        // … while a compacted model with one heavy layer splits by
+        // bytes: prune layers 1..4 hard so layer 0 dominates and gets
+        // a stage of its own
+        let mut skewed = m.clone();
+        for l in skewed.layers.iter_mut().skip(1) {
+            for s in l.projs.iter_mut() {
+                let t = s.dense_mut();
+                for (i, v) in t.data.iter_mut().enumerate() {
+                    if i % 10 != 0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+        }
+        skewed.compact();
+        let ranges = skewed.split_layer_ranges(2);
+        assert_eq!(ranges[0], 0..1, "heavy layer 0 is its own stage");
+        assert_eq!(ranges[1], 1..4);
+        let sum: usize = (0..4)
+            .map(|i| skewed.layer_resident_bytes(i))
+            .sum();
+        let fixed = skewed.resident_bytes()
+            - 4 * (skewed.embed.numel()
+                + skewed.lm_head.numel()
+                + skewed.final_norm.len());
+        assert_eq!(sum, fixed, "per-layer bytes sum to the layer total");
     }
 
     #[test]

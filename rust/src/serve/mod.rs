@@ -5,7 +5,7 @@
 //! dense checkpoint yields a *family* of deployable variants (dense /
 //! unstructured / structured / composite). This module serves that
 //! family from one process: a [`ModelRegistry`] of named sealed
-//! variants, each owning its own engine thread and [`DecodeBatch`],
+//! variants, each owning its own engine thread and [`DecodeBatch`](crate::model::DecodeBatch),
 //! behind a TCP front-end speaking the versioned line-JSON protocol in
 //! [`protocol`] (v0 token-greedy requests still accepted verbatim).
 //! Requests route per-request by `"model"` name; the registry owns
@@ -13,7 +13,7 @@
 //!
 //! Each engine runs the **continuous-batching** loop (token-level
 //! interleaving across active sequences, vLLM-style) over one shared
-//! [`DecodeBatch`] — every batch step makes exactly one weight pass per
+//! [`DecodeBatch`](crate::model::DecodeBatch) — every batch step makes exactly one weight pass per
 //! projection per layer no matter how many sequences are in flight.
 //! Admission uses **chunked prefill**: a freshly-admitted prompt is fed
 //! [`PREFILL_CHUNK`] tokens per engine iteration through the batched
@@ -61,6 +61,7 @@ pub mod client;
 pub mod lifecycle;
 pub mod protocol;
 pub mod router;
+pub mod shard;
 pub mod spec;
 pub mod supervisor;
 
@@ -96,10 +97,11 @@ use std::time::{Duration, Instant};
 use crate::model::config::EOS;
 use crate::model::engine::argmax;
 use crate::model::{
-    DecodeBatch, KvConfig, ModelWeights, KV_PAGE, PREFILL_CHUNK,
+    EngineBatch, KvConfig, ModelWeights, KV_PAGE, PREFILL_CHUNK,
 };
 
 pub use crate::model::engine::sampler::{Sampler, SamplingParams};
+pub use shard::{ShardPlan, SharedRx, MAX_SHARDS};
 pub use spec::{spec_engine_loop, SpecRequest, SpecUsage, MAX_SPEC_K};
 pub use supervisor::{Ctl, HealthState};
 
@@ -555,12 +557,29 @@ impl SubmitSpec {
 /// file via [`ModelRegistry::register_file`], or published by
 /// `coordinator::Mosaic::produce_into`), then consumed by
 /// [`Server::start_registry`], which gives every model its own engine
-/// thread, [`DecodeBatch`] and admission queue.
+/// thread, [`DecodeBatch`](crate::model::DecodeBatch) and admission queue.
 #[derive(Default)]
 pub struct ModelRegistry {
-    models: Vec<(String, ModelWeights)>,
+    models: Vec<(String, ModelWeights, ShardPlan)>,
     specs: Vec<SpecPairDef>,
     colds: Vec<ColdDef>,
+}
+
+/// Substring reserved for shard-group internal identifiers
+/// (`name#shard<k>` worker names). User-facing registry names must
+/// not contain it, so a registered model can never collide with a
+/// generated worker identifier.
+const SHARD_MARKER: &str = "#shard";
+
+/// Startup-time check shared by every registration path.
+fn check_name_reserved(name: &str) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        !name.contains(SHARD_MARKER),
+        "model name '{name}' contains '{SHARD_MARKER}', which is \
+         reserved for shard-group internal names (workers are \
+         identified as <entry>{SHARD_MARKER}<k>)"
+    );
+    Ok(())
 }
 
 /// A scale-to-zero entry: a sealed `.mosaic` artifact registered by
@@ -571,6 +590,7 @@ struct ColdDef {
     name: String,
     path: std::path::PathBuf,
     vocab: usize,
+    plan: ShardPlan,
 }
 
 /// A registered speculative pair: `draft` proposes `k` tokens per
@@ -589,18 +609,33 @@ impl ModelRegistry {
         ModelRegistry::default()
     }
 
-    /// Register `model` under `name`. Names are unique and non-empty.
+    /// Register `model` under `name`. Names are unique, non-empty and
+    /// must not contain the reserved `#shard` marker.
     pub fn register(
         &mut self,
         name: &str,
         model: ModelWeights,
     ) -> anyhow::Result<&mut Self> {
+        self.register_sharded(name, model, ShardPlan::Single)
+    }
+
+    /// Register `model` under `name` behind a [`ShardPlan`]: replica
+    /// plans fan the entry out to N engine workers sharing these
+    /// weights by `Arc`; pipeline plans split the layer stack into N
+    /// stages inside one worker.
+    pub fn register_sharded(
+        &mut self,
+        name: &str,
+        model: ModelWeights,
+        plan: ShardPlan,
+    ) -> anyhow::Result<&mut Self> {
         anyhow::ensure!(!name.is_empty(), "model name must be non-empty");
+        check_name_reserved(name)?;
         anyhow::ensure!(
             self.name_free(name),
             "model '{name}' already registered"
         );
-        self.models.push((name.to_string(), model));
+        self.models.push((name.to_string(), model, plan));
         Ok(self)
     }
 
@@ -619,6 +654,7 @@ impl ModelRegistry {
         k: usize,
     ) -> anyhow::Result<&mut Self> {
         anyhow::ensure!(!name.is_empty(), "pair name must be non-empty");
+        check_name_reserved(name)?;
         anyhow::ensure!(
             self.name_free(name),
             "model '{name}' already registered"
@@ -631,8 +667,8 @@ impl ModelRegistry {
         let find = |who: &str| {
             self.models
                 .iter()
-                .find(|(n, _)| n == who)
-                .map(|(_, m)| m)
+                .find(|(n, _, _)| n == who)
+                .map(|(_, m, _)| m)
                 .ok_or_else(|| {
                     anyhow::anyhow!(
                         "spec pair '{name}' references unregistered \
@@ -655,7 +691,7 @@ impl ModelRegistry {
     }
 
     fn name_free(&self, name: &str) -> bool {
-        self.models.iter().all(|(n, _)| n != name)
+        self.models.iter().all(|(n, _, _)| n != name)
             && self.specs.iter().all(|s| s.name != name)
             && self.colds.iter().all(|c| c.name != name)
     }
@@ -668,8 +704,18 @@ impl ModelRegistry {
         name: &str,
         path: &std::path::Path,
     ) -> anyhow::Result<&mut Self> {
+        self.register_file_sharded(name, path, ShardPlan::Single)
+    }
+
+    /// [`ModelRegistry::register_file`] behind a [`ShardPlan`].
+    pub fn register_file_sharded(
+        &mut self,
+        name: &str,
+        path: &std::path::Path,
+        plan: ShardPlan,
+    ) -> anyhow::Result<&mut Self> {
         let m = crate::deploy::load_encoded(path)?;
-        self.register(name, m)
+        self.register_sharded(name, m, plan)
     }
 
     /// Register a sealed variant **cold**: only the artifact path and
@@ -684,7 +730,20 @@ impl ModelRegistry {
         name: &str,
         path: &std::path::Path,
     ) -> anyhow::Result<&mut Self> {
+        self.register_cold_sharded(name, path, ShardPlan::Single)
+    }
+
+    /// [`ModelRegistry::register_cold`] behind a [`ShardPlan`]: the
+    /// supervisor loads the artifact on first wake, then runs the
+    /// shard group exactly as for a hot sharded entry.
+    pub fn register_cold_sharded(
+        &mut self,
+        name: &str,
+        path: &std::path::Path,
+        plan: ShardPlan,
+    ) -> anyhow::Result<&mut Self> {
         anyhow::ensure!(!name.is_empty(), "model name must be non-empty");
+        check_name_reserved(name)?;
         anyhow::ensure!(
             self.name_free(name),
             "model '{name}' already registered"
@@ -696,6 +755,7 @@ impl ModelRegistry {
             name: name.to_string(),
             path: path.to_path_buf(),
             vocab: cfg.vocab,
+            plan,
         });
         Ok(self)
     }
@@ -703,7 +763,7 @@ impl ModelRegistry {
     pub fn names(&self) -> Vec<&str> {
         self.models
             .iter()
-            .map(|(n, _)| n.as_str())
+            .map(|(n, _, _)| n.as_str())
             .chain(self.colds.iter().map(|c| c.name.as_str()))
             .collect()
     }
@@ -732,6 +792,15 @@ struct EngineEntry {
     name: Arc<String>,
     vocab: usize,
     resident_bytes: usize,
+    /// Every distinct weight set this entry keeps resident (one for a
+    /// model, two for a spec pair, none for a cold artifact). Held by
+    /// `Arc` so [`Server::resident_bytes_total`] can dedupe weight
+    /// sets shared across entries (e.g. a spec pair referencing two
+    /// already-registered models) by pointer identity.
+    weights: Vec<Arc<ModelWeights>>,
+    /// How this entry is executed: one engine, N replicas, or N
+    /// pipeline stages.
+    plan: ShardPlan,
     tx: mpsc::SyncSender<Request>,
     stats: Arc<ServeStats>,
     kind: EntryKind,
@@ -1037,7 +1106,7 @@ impl ActiveSeq {
 #[allow(clippy::too_many_arguments)]
 fn finish_seq(
     active: &mut Vec<ActiveSeq>,
-    batch: &mut DecodeBatch,
+    batch: &mut EngineBatch,
     i: usize,
     finish_reason: FinishReason,
     name: &Arc<String>,
@@ -1099,7 +1168,7 @@ pub(crate) fn expire_queued(
 /// Why an engine loop handed control back to its supervisor. The
 /// supervisor's reaction differs per reason: `Stop`/`Disconnected`
 /// end the engine for good, `Idle` re-parks a sealed entry Cold (the
-/// loop's stack frame — weights Arc, [`DecodeBatch`], KV pool — drops
+/// loop's stack frame — weights Arc, [`DecodeBatch`](crate::model::DecodeBatch), KV pool — drops
 /// with the return).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExitReason {
@@ -1110,6 +1179,58 @@ pub enum ExitReason {
     /// No work for `ctl.idle_unload`: a scale-to-zero engine asks to
     /// be unloaded. Never returned when `ctl.idle_unload` is `None`.
     Idle,
+}
+
+/// One engine worker's contribution to the shared KV gauges,
+/// published as *deltas*. A lone engine owning its `ServeStats` could
+/// simply store absolute values, but replica shards share one stats
+/// block — a `store` from worker A would clobber worker B's pages.
+/// Each worker remembers what it last published and moves the shared
+/// gauge by the difference (saturating on the way down, mirroring
+/// [`dec_queue_depth`]), so the gauge always reads the group total.
+/// Every exit path publishes zeros first; after a panic (where the
+/// worker cannot), the supervisor stores 0 across the gauges once all
+/// workers have stopped.
+#[derive(Default)]
+struct KvGauges {
+    in_use: u64,
+    total: u64,
+    prefix: u64,
+}
+
+impl KvGauges {
+    fn shift(gauge: &AtomicU64, last: &mut u64, now: u64) {
+        if now > *last {
+            gauge.fetch_add(now - *last, Ordering::Relaxed);
+        } else if now < *last {
+            let down = *last - now;
+            let _ = gauge.fetch_update(
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+                |v| Some(v.saturating_sub(down)),
+            );
+        }
+        *last = now;
+    }
+
+    fn set_total(&mut self, stats: &ServeStats, total: u64) {
+        Self::shift(&stats.kv_pages_total, &mut self.total, total);
+    }
+
+    fn set_usage(&mut self, stats: &ServeStats, in_use: u64, prefix: u64) {
+        Self::shift(&stats.kv_pages_in_use, &mut self.in_use, in_use);
+        Self::shift(
+            &stats.kv_prefix_hit_tokens,
+            &mut self.prefix,
+            prefix,
+        );
+    }
+
+    /// Withdraw this worker's whole contribution (loop exit).
+    fn clear(&mut self, stats: &ServeStats) {
+        self.set_usage(stats, 0, 0);
+        self.set_total(stats, 0);
+    }
 }
 
 /// The engine loop: admit → chunked prefill → one batched decode step
@@ -1136,20 +1257,21 @@ pub fn engine_loop(
     model: Arc<ModelWeights>,
     name: Arc<String>,
     cfg: ServeConfig,
-    rx: &mpsc::Receiver<Request>,
+    rx: &SharedRx,
     stats: Arc<ServeStats>,
     ctl: Ctl,
+    stages: usize,
 ) -> ExitReason {
-    let mut batch = DecodeBatch::with_kv(
+    let mut batch = EngineBatch::with_kv(
         &model,
         cfg.max_batch,
         cfg.max_ctx,
         PREFILL_CHUNK,
         kv_config(&cfg),
+        stages,
     );
-    stats
-        .kv_pages_total
-        .store(batch.pages_total() as u64, Ordering::Relaxed);
+    let mut gauges = KvGauges::default();
+    gauges.set_total(&stats, batch.pages_total() as u64);
     let mut active: Vec<ActiveSeq> = Vec::new();
     // a request admitted by the router but parked engine-side until
     // KV pages free up (keeps queue order: nothing overtakes it)
@@ -1186,7 +1308,7 @@ pub fn engine_loop(
                     "server shutting down",
                 );
             }
-            stats.kv_pages_in_use.store(0, Ordering::Relaxed);
+            gauges.clear(&stats);
             return ExitReason::Stop;
         }
         // ---- admission: fill the batch from the queue
@@ -1199,7 +1321,7 @@ pub fn engine_loop(
                     Ok(r) => (r, false),
                     Err(mpsc::RecvTimeoutError::Timeout) => break,
                     Err(mpsc::RecvTimeoutError::Disconnected) => {
-                        stats.kv_pages_in_use.store(0, Ordering::Relaxed);
+                        gauges.clear(&stats);
                         return ExitReason::Disconnected;
                     }
                 }
@@ -1307,15 +1429,14 @@ pub fn engine_loop(
                 decode_t0: Instant::now(),
             });
         }
-        stats
-            .kv_pages_in_use
-            .store(batch.pages_in_use() as u64, Ordering::Relaxed);
-        stats
-            .kv_prefix_hit_tokens
-            .store(batch.prefix_hit_tokens(), Ordering::Relaxed);
+        gauges.set_usage(
+            &stats,
+            batch.pages_in_use() as u64,
+            batch.prefix_hit_tokens(),
+        );
         if active.is_empty() {
             if ctl.stop.load(Ordering::Relaxed) {
-                stats.kv_pages_in_use.store(0, Ordering::Relaxed);
+                gauges.clear(&stats);
                 return ExitReason::Stop;
             }
             // ---- idle reaper: an empty batch past the unload budget
@@ -1330,8 +1451,7 @@ pub fn engine_loop(
             if let Some(limit) = ctl.idle_unload {
                 let since = *idle_since.get_or_insert_with(Instant::now);
                 if since.elapsed() >= limit {
-                    stats.kv_pages_in_use.store(0, Ordering::Relaxed);
-                    stats.kv_pages_total.store(0, Ordering::Relaxed);
+                    gauges.clear(&stats);
                     return ExitReason::Idle;
                 }
             }
@@ -1529,6 +1649,9 @@ pub fn engine_loop(
 pub struct ModelInfo {
     pub name: String,
     pub resident_bytes: usize,
+    /// Worker/stage count behind the entry (1 unless registered with
+    /// a replica or pipeline [`ShardPlan`]).
+    pub shards: usize,
     pub stats: Arc<ServeStats>,
 }
 
@@ -1592,7 +1715,7 @@ impl Server {
             Some(name) => registry
                 .models
                 .iter()
-                .map(|(n, _)| n.as_str())
+                .map(|(n, _, _)| n.as_str())
                 .chain(registry.specs.iter().map(|s| s.name.as_str()))
                 .chain(registry.colds.iter().map(|c| c.name.as_str()))
                 .position(|n| n == name)
@@ -1617,7 +1740,7 @@ impl Server {
         // supervisor can respawn a panicked engine from the same
         // resident weights (fresh KV state, no model reload)
         let mut arcs: Vec<(Arc<String>, Arc<ModelWeights>)> = Vec::new();
-        for (name, model) in registry.models {
+        for (name, model, plan) in registry.models {
             let name = Arc::new(name);
             let stats = Arc::new(ServeStats::default());
             let (tx, rx) = mpsc::sync_channel::<Request>(cfg.max_queue);
@@ -1629,7 +1752,10 @@ impl Server {
                 lifecycle::LifecycleState::Hot,
             ));
             let sup = supervisor::spawn(
-                supervisor::EngineDef::Dense { model },
+                supervisor::EngineDef::Dense {
+                    model: model.clone(),
+                    plan,
+                },
                 name.clone(),
                 cfg.clone(),
                 rx,
@@ -1643,6 +1769,8 @@ impl Server {
                 name,
                 vocab,
                 resident_bytes,
+                weights: vec![model],
+                plan,
                 tx,
                 stats,
                 kind: EntryKind::Model,
@@ -1670,8 +1798,8 @@ impl Server {
             ));
             let sup = supervisor::spawn(
                 supervisor::EngineDef::Spec {
-                    target,
-                    draft,
+                    target: target.clone(),
+                    draft: draft.clone(),
                     k: pair.k,
                 },
                 name.clone(),
@@ -1687,6 +1815,8 @@ impl Server {
                 name,
                 vocab,
                 resident_bytes,
+                weights: vec![target, draft],
+                plan: ShardPlan::Single,
                 tx,
                 stats,
                 kind: EntryKind::Spec {
@@ -1709,7 +1839,10 @@ impl Server {
                 lifecycle::LifecycleState::Cold,
             ));
             let sup = supervisor::spawn(
-                supervisor::EngineDef::Sealed { path: cold.path },
+                supervisor::EngineDef::Sealed {
+                    path: cold.path,
+                    plan: cold.plan,
+                },
                 name.clone(),
                 cfg.clone(),
                 rx,
@@ -1725,6 +1858,8 @@ impl Server {
                 // truthful gauge: nothing is resident while Cold (the
                 // artifact itself stays on disk)
                 resident_bytes: 0,
+                weights: Vec::new(),
+                plan: cold.plan,
                 tx,
                 stats,
                 kind: EntryKind::Model,
@@ -1822,9 +1957,19 @@ impl Server {
             .map(|e| ModelInfo {
                 name: (*e.name).clone(),
                 resident_bytes: e.resident_bytes,
+                shards: e.plan.shards(),
                 stats: e.stats.clone(),
             })
             .collect()
+    }
+
+    /// Total bytes of weights actually resident across the server,
+    /// counting each weight set **once** no matter how many entries
+    /// share it by `Arc` — a spec pair referencing two registered
+    /// models (or a replica group fanning one model out to N workers)
+    /// adds nothing beyond the models themselves.
+    pub fn resident_bytes_total(&self) -> usize {
+        resident_bytes_total(&self.router)
     }
 
     /// Live stats for one registered model.
@@ -1947,6 +2092,86 @@ fn accept_loop(
     }
 }
 
+/// Deduped resident-weight total: each `Arc`'d weight set is counted
+/// once by pointer identity, so spec pairs sharing two registered
+/// models (and replica groups fanning one model out) never double
+/// count.
+fn resident_bytes_total(router: &Router) -> usize {
+    let mut seen = std::collections::HashSet::new();
+    router
+        .entries
+        .iter()
+        .flat_map(|e| e.weights.iter())
+        .filter(|m| seen.insert(Arc::as_ptr(m)))
+        .map(|m| m.resident_bytes())
+        .sum()
+}
+
+/// One-line JSON snapshot served to `{"stats": true}` wire requests:
+/// per-entry shard layout, supervisor health, lifecycle and KV gauges,
+/// plus the configured routes with live per-backend counters. This is
+/// a v1-only line — v0 request bytes never reach this path, so the v0
+/// wire surface is frozen.
+fn stats_snapshot(router: &Router) -> String {
+    use crate::util::json::Json;
+    let n = |v: u64| Json::num(v as f64);
+    let ld = |a: &AtomicU64| Json::num(a.load(Ordering::Relaxed) as f64);
+    let mut entries = Vec::new();
+    for e in &router.entries {
+        let s = &e.stats;
+        let mut o = Json::obj();
+        o.set("name", Json::str(&e.name))
+            .set("shards", n(e.plan.shards() as u64))
+            .set("mode", Json::str(e.plan.mode()))
+            .set("health", Json::str(e.health.state().name()))
+            .set("lifecycle", Json::str(e.lifecycle.state().name()))
+            .set("resident_bytes", n(e.resident_bytes as u64))
+            .set("queue_depth", ld(&s.queue_depth))
+            .set("inflight", ld(&s.inflight))
+            .set("kv_pages_in_use", ld(&s.kv_pages_in_use))
+            .set("kv_pages_total", ld(&s.kv_pages_total))
+            .set("kv_prefix_hit_tokens", ld(&s.kv_prefix_hit_tokens))
+            .set("accepted", ld(&s.accepted))
+            .set("completed", ld(&s.completed))
+            .set("tokens_out", ld(&s.tokens_out));
+        entries.push(o);
+    }
+    let mut routes = Vec::new();
+    if let Some(table) = &router.table {
+        for rname in table.names() {
+            let mut backends = Vec::new();
+            for (b, w) in table.backends(&rname).into_iter().flatten()
+            {
+                let mut bo = Json::obj();
+                bo.set("name", Json::str(b)).set("weight", n(*w as u64));
+                if let Some(e) = router
+                    .entries
+                    .iter()
+                    .find(|e| e.name.as_str() == b.as_str())
+                {
+                    bo.set("accepted", ld(&e.stats.accepted))
+                        .set("completed", ld(&e.stats.completed))
+                        .set("tokens_out", ld(&e.stats.tokens_out));
+                }
+                backends.push(bo);
+            }
+            let mut ro = Json::obj();
+            ro.set("name", Json::str(&rname))
+                .set("backends", Json::arr(backends));
+            routes.push(ro);
+        }
+    }
+    let mut top = Json::obj();
+    top.set("event", Json::str("stats"))
+        .set(
+            "resident_bytes_total",
+            n(resident_bytes_total(router) as u64),
+        )
+        .set("entries", Json::arr(entries))
+        .set("routes", Json::arr(routes));
+    format!("{top}\n")
+}
+
 fn handle_conn(
     stream: TcpStream,
     router: Arc<Router>,
@@ -1975,6 +2200,22 @@ fn handle_conn(
                 return Ok(());
             }
             Err(e) => return Err(e.into()),
+        }
+        // v1 introspection: a `{"stats": true}` line gets the live
+        // snapshot instead of entering the request path (the substring
+        // guard keeps generation requests off the extra parse)
+        if line.contains("\"stats\"") {
+            if let Ok(j) = crate::util::json::Json::parse(line.trim())
+            {
+                if j.get("stats").and_then(|v| v.as_bool())
+                    == Some(true)
+                {
+                    out.write_all(
+                        stats_snapshot(&router).as_bytes(),
+                    )?;
+                    continue;
+                }
+            }
         }
         let parsed = match protocol::parse_request(&line) {
             Ok(p) => p,
@@ -2428,6 +2669,201 @@ mod tests {
             )
             .is_err()
         );
+    }
+
+    #[test]
+    fn registration_rejects_reserved_shard_marker() {
+        let mut reg = ModelRegistry::new();
+        for bad in ["a#shard0", "#shard", "x#shard3y"] {
+            let err = reg
+                .register(bad, random_model(307))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("reserved"), "{err}");
+        }
+        // spec pairs and cold entries go through the same check
+        reg.register("ok", random_model(307)).unwrap();
+        assert!(reg
+            .register_spec("p#shard1", "ok", "ok", 2)
+            .unwrap_err()
+            .to_string()
+            .contains("reserved"));
+        assert!(reg
+            .register_cold_sharded(
+                "c#shard2",
+                std::path::Path::new("/nonexistent"),
+                ShardPlan::Single,
+            )
+            .unwrap_err()
+            .to_string()
+            .contains("reserved"));
+    }
+
+    #[test]
+    fn replica_group_serves_bit_identical_to_single() {
+        // same weights registered twice: once unsharded, once as a
+        // 2-replica group. Greedy decode must match token-for-token,
+        // and the group must absorb concurrent load.
+        let m = random_model(308);
+        let mut reg = ModelRegistry::new();
+        reg.register("solo", m.clone()).unwrap();
+        reg.register_sharded("rep", m, ShardPlan::Replica(2))
+            .unwrap();
+        let srv = Server::start_registry(
+            reg,
+            ServeConfig { max_batch: 2, ..Default::default() },
+            0,
+        )
+        .unwrap();
+        let ask = |model: &str, prompt: &[u16]| {
+            let spec = SubmitSpec {
+                model: Some(model.into()),
+                ..SubmitSpec::greedy(prompt, 8)
+            };
+            wait_reply(&srv.submit_spec(spec).unwrap(), T30).unwrap()
+        };
+        let prompts: Vec<Vec<u16>> = (0..6)
+            .map(|i| vec![1u16, (3 + i) as u16, 7])
+            .collect();
+        let want: Vec<Vec<u16>> =
+            prompts.iter().map(|p| ask("solo", p).tokens).collect();
+        // concurrent burst against the replica group
+        let rxs: Vec<_> = prompts
+            .iter()
+            .map(|p| {
+                let spec = SubmitSpec {
+                    model: Some("rep".into()),
+                    ..SubmitSpec::greedy(p, 8)
+                };
+                srv.submit_spec(spec).unwrap()
+            })
+            .collect();
+        for (rx, want) in rxs.iter().zip(&want) {
+            let r = wait_reply(rx, T30).unwrap();
+            assert_eq!(&r.tokens, want, "replica diverged from solo");
+            assert_eq!(r.model, "rep");
+        }
+        assert_eq!(
+            srv.model_stats("rep")
+                .unwrap()
+                .completed
+                .load(Ordering::Relaxed),
+            6
+        );
+        // entry metadata reports the layout
+        let info = srv.models();
+        let by = |n: &str| {
+            info.iter().find(|mi| mi.name == n).unwrap().shards
+        };
+        assert_eq!(by("solo"), 1);
+        assert_eq!(by("rep"), 2);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn pipeline_entry_serves_bit_identical_to_single() {
+        let m = random_model_sized(309, 4, 32, 2, 80, 64, 32);
+        let mut reg = ModelRegistry::new();
+        reg.register("solo", m.clone()).unwrap();
+        reg.register_sharded("pipe", m, ShardPlan::Pipeline(2))
+            .unwrap();
+        let srv = Server::start_registry(
+            reg,
+            ServeConfig { max_batch: 2, ..Default::default() },
+            0,
+        )
+        .unwrap();
+        let ask = |model: &str, prompt: &[u16]| {
+            let spec = SubmitSpec {
+                model: Some(model.into()),
+                ..SubmitSpec::greedy(prompt, 8)
+            };
+            wait_reply(&srv.submit_spec(spec).unwrap(), T30).unwrap()
+        };
+        for i in 0..3 {
+            let prompt = vec![2u16, (5 + i) as u16, 11, 3];
+            assert_eq!(
+                ask("pipe", &prompt).tokens,
+                ask("solo", &prompt).tokens,
+                "pipeline stages diverged from the whole model"
+            );
+        }
+        srv.shutdown();
+    }
+
+    #[test]
+    fn resident_total_dedupes_arc_shared_weights() {
+        // a spec pair shares its target/draft weights with the plain
+        // entries by Arc — the server-wide total must count each
+        // weight set once (the per-entry gauge still reports the
+        // pair's working set)
+        let t = random_model_sized(310, 2, 16, 2, 40, 64, 16);
+        let d = random_model_sized(311, 2, 16, 2, 40, 64, 16);
+        let (tb, db) = (t.resident_bytes(), d.resident_bytes());
+        let mut reg = ModelRegistry::new();
+        reg.register("t", t).unwrap();
+        reg.register("d", d).unwrap();
+        reg.register_spec("pair", "t", "d", 2).unwrap();
+        let srv =
+            Server::start_registry(reg, ServeConfig::default(), 0)
+                .unwrap();
+        let per_entry: usize = srv
+            .models()
+            .iter()
+            .map(|mi| mi.resident_bytes)
+            .sum();
+        assert_eq!(per_entry, 2 * (tb + db), "per-entry gauges");
+        assert_eq!(
+            srv.resident_bytes_total(),
+            tb + db,
+            "shared weights double-counted"
+        );
+        srv.shutdown();
+    }
+
+    #[test]
+    fn stats_line_reports_shard_groups_over_wire() {
+        let m = random_model(312);
+        let mut reg = ModelRegistry::new();
+        reg.register_sharded("rep", m, ShardPlan::Replica(2))
+            .unwrap();
+        let srv =
+            Server::start_registry(reg, ServeConfig::default(), 0)
+                .unwrap();
+        let mut stream = TcpStream::connect(srv.addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        stream.write_all(b"{\"stats\": true}\n").unwrap();
+        reader.read_line(&mut line).unwrap();
+        let j = crate::util::json::Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("event").unwrap().as_str().unwrap(), "stats");
+        assert!(j.get("resident_bytes_total").is_some(), "{line}");
+        let entries = j.get("entries").unwrap().as_arr().unwrap();
+        assert_eq!(entries.len(), 1);
+        let e = &entries[0];
+        assert_eq!(e.get("name").unwrap().as_str().unwrap(), "rep");
+        assert_eq!(e.get("shards").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(
+            e.get("mode").unwrap().as_str().unwrap(),
+            "replica"
+        );
+        assert_eq!(
+            e.get("lifecycle").unwrap().as_str().unwrap(),
+            "hot"
+        );
+        assert!(e.get("kv_pages_total").is_some(), "{line}");
+        // the same connection still serves v0 requests with frozen v0
+        // bytes afterwards
+        line.clear();
+        stream
+            .write_all(b"{\"prompt\": [1, 4, 9], \"max_new\": 2}\n")
+            .unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"tokens\""), "{line}");
+        let j = crate::util::json::Json::parse(line.trim()).unwrap();
+        assert!(j.get("event").is_none(), "{line}");
+        assert!(j.get("model").is_none(), "{line}");
+        srv.shutdown();
     }
 
     #[test]

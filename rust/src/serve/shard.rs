@@ -1,0 +1,353 @@
+//! Sharded execution: one registry entry backed by N shard workers.
+//!
+//! A [`ShardPlan`] picks how an entry's engine capacity is laid out:
+//!
+//! - **Replica sharding** (`--shards N`): N identical engine loops
+//!   share ONE Arc'd model and ONE admission queue. Dispatch is
+//!   work-stealing — every worker pops from the same [`SharedRx`], so
+//!   an idle replica takes the next request without a dispatcher
+//!   thread that could strand requests outside the inflight ledger.
+//!   Each replica owns its own KV pool; the shared gauges are
+//!   published as per-worker deltas (see `KvGauges` in the engine
+//!   loop) so N workers never clobber each other's stores.
+//!
+//! - **Layer-range (pipeline) sharding** (`--shards pipe:N`): one
+//!   engine loop drives a [`crate::model::PipelineBatch`] whose stages
+//!   each run a contiguous, resident-byte-balanced slice of the
+//!   model's layers with a KV pool for exactly those layers — the
+//!   memory split that lets a model bigger than one worker's budget
+//!   serve at all.
+//!
+//! Either way the group is ONE supervised unit: [`run_group`] runs
+//! inside the supervisor's `catch_unwind`, and a panic on ANY shard
+//! stops the group and re-raises the payload, so the supervisor's
+//! existing panic path (fail in-flight, drain queue, backoff, respawn)
+//! restarts the group atomically — the exactly-one-terminal-event
+//! guarantee is untouched because all workers share one
+//! [`super::supervisor::Inflight`] ledger.
+//!
+//! Idle-unload (scale-to-zero) is decided at group level: a lone
+//! engine loop keeps its own idle timer, while the replica monitor
+//! watches `queue_depth` + the inflight ledger and stops the whole
+//! group once both stay empty past the budget. Admission bumps
+//! `queue_depth` *before* sending, so a request racing the unload
+//! either gets served before the workers exit or re-wakes the
+//! re-parked supervisor through the normal Cold path — it can never
+//! be stranded.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::model::ModelWeights;
+
+use super::supervisor::Ctl;
+use super::{engine_loop, ExitReason, Request, ServeConfig, ServeStats};
+
+/// Hard cap on shard width — wider groups than this are almost
+/// certainly a typo, and each shard is a full engine thread.
+pub const MAX_SHARDS: usize = 64;
+
+/// How one registry entry maps onto engine workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardPlan {
+    /// One engine loop over the whole model (the pre-sharding layout).
+    Single,
+    /// N identical engine loops sharing one model and one queue.
+    Replica(usize),
+    /// One engine loop over N layer-range pipeline stages.
+    Pipeline(usize),
+}
+
+impl ShardPlan {
+    /// Parse a `--shards` / `@shards=` value: `"N"` → replica width N,
+    /// `"pipe:N"` → N pipeline stages. Width 1 normalises to
+    /// [`ShardPlan::Single`]; 0 and widths past [`MAX_SHARDS`] are
+    /// rejected.
+    pub fn parse(s: &str) -> Result<ShardPlan> {
+        let (pipeline, num) = match s.strip_prefix("pipe:") {
+            Some(rest) => (true, rest),
+            None => (false, s),
+        };
+        let n: usize = num.parse().map_err(|_| {
+            anyhow::anyhow!(
+                "bad shard spec '{s}': expected N or pipe:N"
+            )
+        })?;
+        if n == 0 {
+            bail!("bad shard spec '{s}': shard count must be >= 1");
+        }
+        if n > MAX_SHARDS {
+            bail!(
+                "bad shard spec '{s}': shard count {n} exceeds the \
+                 cap of {MAX_SHARDS}"
+            );
+        }
+        Ok(match (pipeline, n) {
+            (_, 1) => ShardPlan::Single,
+            (false, n) => ShardPlan::Replica(n),
+            (true, n) => ShardPlan::Pipeline(n),
+        })
+    }
+
+    /// Worker/stage count behind the entry.
+    pub fn shards(&self) -> usize {
+        match self {
+            ShardPlan::Single => 1,
+            ShardPlan::Replica(n) | ShardPlan::Pipeline(n) => *n,
+        }
+    }
+
+    /// Layout name for stats and logs.
+    pub fn mode(&self) -> &'static str {
+        match self {
+            ShardPlan::Single => "single",
+            ShardPlan::Replica(_) => "replica",
+            ShardPlan::Pipeline(_) => "pipeline",
+        }
+    }
+
+    pub fn is_single(&self) -> bool {
+        matches!(self, ShardPlan::Single)
+    }
+}
+
+impl std::fmt::Display for ShardPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardPlan::Single => write!(f, "1"),
+            ShardPlan::Replica(n) => write!(f, "{n}"),
+            ShardPlan::Pipeline(n) => write!(f, "pipe:{n}"),
+        }
+    }
+}
+
+/// Work-stealing admission queue handle: the one `mpsc::Receiver` a
+/// supervisor owns, shareable across replica workers. `Receiver` is
+/// `Send` but not `Sync`; wrapping it in a `Mutex` makes pops safe
+/// from any worker — whoever holds the lock takes the next request,
+/// which IS the work-stealing policy (an idle replica is exactly a
+/// worker blocked on the lock or the recv).
+pub struct SharedRx(Mutex<mpsc::Receiver<Request>>);
+
+impl SharedRx {
+    pub fn new(rx: mpsc::Receiver<Request>) -> SharedRx {
+        SharedRx(Mutex::new(rx))
+    }
+
+    fn lock(&self) -> MutexGuard<'_, mpsc::Receiver<Request>> {
+        // a worker can panic between popping and registering, but
+        // never while holding this lock mid-mutation (Receiver ops
+        // are atomic pops); recover from poisoning so the surviving
+        // replicas and the supervisor's drain keep the queue usable
+        self.0.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    pub fn try_recv(&self) -> Result<Request, mpsc::TryRecvError> {
+        self.lock().try_recv()
+    }
+
+    pub fn recv_timeout(
+        &self,
+        timeout: Duration,
+    ) -> Result<Request, mpsc::RecvTimeoutError> {
+        self.lock().recv_timeout(timeout)
+    }
+}
+
+/// Run one shard group to completion inside the supervisor's panic
+/// boundary. Single and pipeline plans are one engine loop (the
+/// pipeline just drives more stages per step); a replica plan fans
+/// out N workers and supervises them as one unit — any worker panic
+/// re-raises here so the whole group restarts atomically.
+pub fn run_group(
+    model: Arc<ModelWeights>,
+    name: Arc<String>,
+    cfg: ServeConfig,
+    rx: &SharedRx,
+    stats: Arc<ServeStats>,
+    ctl: Ctl,
+    plan: ShardPlan,
+) -> ExitReason {
+    match plan {
+        ShardPlan::Single => {
+            engine_loop(model, name, cfg, rx, stats, ctl, 1)
+        }
+        ShardPlan::Pipeline(stages) => {
+            engine_loop(model, name, cfg, rx, stats, ctl, stages)
+        }
+        ShardPlan::Replica(n) => {
+            run_replicas(model, name, cfg, rx, stats, ctl, n)
+        }
+    }
+}
+
+/// N identical engine loops over one queue, monitored as one unit.
+fn run_replicas(
+    model: Arc<ModelWeights>,
+    name: Arc<String>,
+    cfg: ServeConfig,
+    rx: &SharedRx,
+    stats: Arc<ServeStats>,
+    ctl: Ctl,
+    n: usize,
+) -> ExitReason {
+    // group-private stop: lets the monitor halt every worker on a
+    // sibling panic or group idle without touching the server-wide
+    // flag. Force-drain stays shared — it must reach workers directly.
+    let group_stop = Arc::new(AtomicBool::new(false));
+    let mut idle_exit = false;
+    let mut results: Vec<std::thread::Result<ExitReason>> = Vec::new();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n)
+            .map(|_| {
+                let worker_ctl = Ctl {
+                    stop: group_stop.clone(),
+                    force: ctl.force.clone(),
+                    inflight: ctl.inflight.clone(),
+                    // group idle is the monitor's call, not a
+                    // worker's: one replica going quiet must not
+                    // unload its siblings
+                    idle_unload: None,
+                };
+                let (model, name) = (model.clone(), name.clone());
+                let (cfg, stats) = (cfg.clone(), stats.clone());
+                s.spawn(move || {
+                    engine_loop(
+                        model, name, cfg, rx, stats, worker_ctl, 1,
+                    )
+                })
+            })
+            .collect();
+        let mut idle_since: Option<Instant> = None;
+        loop {
+            if ctl.stop.load(Ordering::Relaxed)
+                || ctl.force.load(Ordering::Relaxed)
+            {
+                break;
+            }
+            // a worker exiting on its own means panic or queue
+            // disconnect — either way the group winds down together
+            if handles.iter().any(|h| h.is_finished()) {
+                break;
+            }
+            if let Some(limit) = ctl.idle_unload {
+                if stats.queue_depth.load(Ordering::Relaxed) == 0
+                    && ctl.inflight.is_empty()
+                {
+                    let t0 = *idle_since.get_or_insert_with(Instant::now);
+                    if t0.elapsed() >= limit {
+                        idle_exit = true;
+                        break;
+                    }
+                } else {
+                    idle_since = None;
+                }
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        group_stop.store(true, Ordering::Relaxed);
+        results = handles.into_iter().map(|h| h.join()).collect();
+    });
+    // re-raise the first worker panic AFTER every worker has joined:
+    // the supervisor's catch_unwind then fails in-flight requests and
+    // respawns the group as one unit, with no sibling still running
+    let mut panic_payload = None;
+    let mut disconnected = false;
+    for r in results {
+        match r {
+            Err(p) => {
+                if panic_payload.is_none() {
+                    panic_payload = Some(p);
+                }
+            }
+            Ok(ExitReason::Disconnected) => disconnected = true,
+            Ok(_) => {}
+        }
+    }
+    if let Some(p) = panic_payload {
+        std::panic::resume_unwind(p);
+    }
+    if idle_exit {
+        ExitReason::Idle
+    } else if disconnected {
+        ExitReason::Disconnected
+    } else {
+        ExitReason::Stop
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_parse_accepts_replica_and_pipeline_specs() {
+        assert_eq!(ShardPlan::parse("1").unwrap(), ShardPlan::Single);
+        assert_eq!(
+            ShardPlan::parse("pipe:1").unwrap(),
+            ShardPlan::Single
+        );
+        assert_eq!(
+            ShardPlan::parse("4").unwrap(),
+            ShardPlan::Replica(4)
+        );
+        assert_eq!(
+            ShardPlan::parse("pipe:3").unwrap(),
+            ShardPlan::Pipeline(3)
+        );
+        assert_eq!(ShardPlan::parse("64").unwrap().shards(), 64);
+    }
+
+    #[test]
+    fn plan_parse_rejects_zero_garbage_and_oversize() {
+        for bad in ["0", "pipe:0", "", "pipe:", "two", "65", "pipe:65"]
+        {
+            assert!(
+                ShardPlan::parse(bad).is_err(),
+                "'{bad}' must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn plan_mode_and_display_round_trip() {
+        for (s, mode) in [
+            ("1", "single"),
+            ("2", "replica"),
+            ("pipe:2", "pipeline"),
+        ] {
+            let p = ShardPlan::parse(s).unwrap();
+            assert_eq!(p.mode(), mode);
+            assert_eq!(ShardPlan::parse(&p.to_string()).unwrap(), p);
+        }
+        assert!(ShardPlan::parse("1").unwrap().is_single());
+        assert!(!ShardPlan::parse("2").unwrap().is_single());
+    }
+
+    #[test]
+    fn shared_rx_pops_from_any_holder_and_reports_disconnect() {
+        let (tx, rx) = mpsc::sync_channel::<Request>(4);
+        let shared = Arc::new(SharedRx::new(rx));
+        assert!(matches!(
+            shared.try_recv(),
+            Err(mpsc::TryRecvError::Empty)
+        ));
+        assert!(matches!(
+            shared.recv_timeout(Duration::from_millis(5)),
+            Err(mpsc::RecvTimeoutError::Timeout)
+        ));
+        drop(tx);
+        assert!(matches!(
+            shared.try_recv(),
+            Err(mpsc::TryRecvError::Disconnected)
+        ));
+        assert!(matches!(
+            shared.recv_timeout(Duration::from_millis(5)),
+            Err(mpsc::RecvTimeoutError::Disconnected)
+        ));
+    }
+}

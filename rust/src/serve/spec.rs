@@ -79,6 +79,7 @@ use crate::model::engine::sampler::verify_pick;
 use crate::model::{DecodeBatch, ModelWeights, PREFILL_CHUNK};
 
 use super::supervisor::{Ctl, Inflight};
+use super::shard::SharedRx;
 use super::{
     dec_queue_depth, expire_queued, fault, ErrCode, Event, FinishReason,
     KvUsage, Reply, Request, Sampler, ServeConfig, ServeStats,
@@ -197,7 +198,7 @@ pub fn spec_engine_loop(
     name: Arc<String>,
     pair_k: usize,
     cfg: ServeConfig,
-    rx: &mpsc::Receiver<Request>,
+    rx: &SharedRx,
     stats: Arc<ServeStats>,
     ctl: Ctl,
 ) -> super::ExitReason {

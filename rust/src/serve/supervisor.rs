@@ -38,10 +38,11 @@ use std::time::{Duration, Instant};
 use crate::model::ModelWeights;
 
 use super::lifecycle::{Lifecycle, LifecycleState};
+use super::shard::{self, ShardPlan, SharedRx};
 use super::spec::spec_engine_loop;
 use super::{
-    dec_queue_depth, engine_loop, fault, ErrCode, Event, ExitReason,
-    Reply, Request, ServeConfig, ServeError, ServeStats,
+    dec_queue_depth, fault, ErrCode, Event, ExitReason, Reply, Request,
+    ServeConfig, ServeError, ServeStats,
 };
 
 /// Engine health as seen by the router.
@@ -55,6 +56,18 @@ pub enum HealthState {
     Degraded,
     /// Restart cap exhausted or engine exited; admission rejects.
     Down,
+}
+
+impl HealthState {
+    /// Lower-case wire name (the `{"stats": true}` introspection
+    /// line).
+    pub fn name(&self) -> &'static str {
+        match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Degraded => "degraded",
+            HealthState::Down => "down",
+        }
+    }
 }
 
 /// Lock-free health cell shared between supervisor and router.
@@ -230,6 +243,9 @@ impl Ctl {
 pub enum EngineDef {
     Dense {
         model: Arc<ModelWeights>,
+        /// Shard layout behind this entry — the whole group is this
+        /// supervisor's single charge (see [`shard::run_group`]).
+        plan: ShardPlan,
     },
     Spec {
         target: Arc<ModelWeights>,
@@ -242,6 +258,9 @@ pub enum EngineDef {
     /// [`ExitReason::Idle`] exit.
     Sealed {
         path: std::path::PathBuf,
+        /// Shard layout on wake: the artifact is loaded ONCE per wake
+        /// and Arc-shared across the group's workers.
+        plan: ShardPlan,
     },
 }
 
@@ -265,7 +284,12 @@ pub fn spawn(
     let health = Arc::new(Health::new());
     let h = health.clone();
     let handle = std::thread::spawn(move || {
-        supervise(def, name, cfg, rx, stats, lifecycle, stop, force, h)
+        // the receiver is wrapped once here and shared by reference
+        // with every worker a shard plan fans out — the supervisor
+        // still owns it across panics, so a dying group can never
+        // strand the queue
+        let rx = SharedRx::new(rx);
+        supervise(def, name, cfg, &rx, stats, lifecycle, stop, force, h)
     });
     Supervisor { health, handle }
 }
@@ -275,7 +299,7 @@ fn supervise(
     def: EngineDef,
     name: Arc<String>,
     cfg: ServeConfig,
-    rx: mpsc::Receiver<Request>,
+    rx: &SharedRx,
     stats: Arc<ServeStats>,
     lifecycle: Arc<Lifecycle>,
     stop: Arc<AtomicBool>,
@@ -313,7 +337,7 @@ fn supervise(
                     || force.load(Ordering::Relaxed)
                 {
                     drain_queue(
-                        &rx,
+                        rx,
                         &stats,
                         ErrCode::Shutdown,
                         "server shutting down",
@@ -335,14 +359,17 @@ fn supervise(
         let run = catch_unwind(AssertUnwindSafe(
             || -> anyhow::Result<ExitReason> {
                 match &def {
-                    EngineDef::Dense { model } => Ok(engine_loop(
-                        model.clone(),
-                        name.clone(),
-                        cfg.clone(),
-                        &rx,
-                        stats.clone(),
-                        ctl.clone(),
-                    )),
+                    EngineDef::Dense { model, plan } => {
+                        Ok(shard::run_group(
+                            model.clone(),
+                            name.clone(),
+                            cfg.clone(),
+                            rx,
+                            stats.clone(),
+                            ctl.clone(),
+                            *plan,
+                        ))
+                    }
                     EngineDef::Spec { target, draft, k } => {
                         Ok(spec_engine_loop(
                             target.clone(),
@@ -350,12 +377,12 @@ fn supervise(
                             name.clone(),
                             *k,
                             cfg.clone(),
-                            &rx,
+                            rx,
                             stats.clone(),
                             ctl.clone(),
                         ))
                     }
-                    EngineDef::Sealed { path } => {
+                    EngineDef::Sealed { path, plan } => {
                         // chaos checkpoint: a panic/stall here models
                         // an engine dying or hanging mid-wake
                         let _ =
@@ -363,13 +390,14 @@ fn supervise(
                         let model =
                             Arc::new(crate::deploy::load_encoded(path)?);
                         lifecycle.set(LifecycleState::Hot);
-                        Ok(engine_loop(
+                        Ok(shard::run_group(
                             model,
                             name.clone(),
                             cfg.clone(),
-                            &rx,
+                            rx,
                             stats.clone(),
                             ctl.clone(),
+                            *plan,
                         ))
                     }
                 }
@@ -401,8 +429,8 @@ fn supervise(
                 lifecycle.set(LifecycleState::Down);
                 let msg = format!("engine '{name}' failed to wake: {e}");
                 inflight.fail_all(ErrCode::EngineDown, &msg);
-                drain_queue(&rx, &stats, ErrCode::EngineDown, &msg);
-                reject_until_stopped(&rx, &stats, &stop);
+                drain_queue(rx, &stats, ErrCode::EngineDown, &msg);
+                reject_until_stopped(rx, &stats, &stop);
                 return;
             }
             Err(_) => {}
@@ -418,16 +446,25 @@ fn supervise(
             "engine panicked before the request started",
         );
         drain_queue(
-            &rx,
+            rx,
             &stats,
             ErrCode::EngineRestarting,
             "engine panicked while the request was queued",
         );
+        // zero every KV gauge, not just in_use: shard workers publish
+        // deltas, and a panicked worker never withdrew its
+        // contribution — leaving residue here would double-count once
+        // the respawned group adds its own totals on top. The
+        // surviving workers have already joined (run_group re-raises
+        // only after joining all of them), so nobody else is
+        // publishing concurrently.
         stats.kv_pages_in_use.store(0, Ordering::Relaxed);
+        stats.kv_pages_total.store(0, Ordering::Relaxed);
+        stats.kv_prefix_hit_tokens.store(0, Ordering::Relaxed);
         if restarts >= cfg.max_restarts {
             health.set(HealthState::Down);
             lifecycle.set(LifecycleState::Down);
-            reject_until_stopped(&rx, &stats, &stop);
+            reject_until_stopped(rx, &stats, &stop);
             return;
         }
         restarts += 1;
@@ -446,7 +483,7 @@ fn supervise(
                 || force.load(Ordering::Relaxed)
             {
                 drain_queue(
-                    &rx,
+                    rx,
                     &stats,
                     ErrCode::Shutdown,
                     "server shutting down",
@@ -482,7 +519,7 @@ fn backoff(base_ms: u64, attempt: u32, name: &str) -> Duration {
 
 /// Drain everything currently queued with a terminal error.
 fn drain_queue(
-    rx: &mpsc::Receiver<Request>,
+    rx: &SharedRx,
     stats: &ServeStats,
     code: ErrCode,
     msg: &str,
@@ -501,7 +538,7 @@ fn drain_queue(
 /// keeps owning the queue so late arrivals (racing admission before
 /// the router saw Down) still get terminal errors instead of hanging.
 fn reject_until_stopped(
-    rx: &mpsc::Receiver<Request>,
+    rx: &SharedRx,
     stats: &ServeStats,
     stop: &AtomicBool,
 ) {

@@ -22,7 +22,7 @@ use std::time::{Duration, Instant};
 use mosaic::model::weights::testutil::random_model_sized;
 use mosaic::serve::fault::{self, FaultPlan};
 use mosaic::serve::{
-    Event, ModelRegistry, ServeConfig, Server, SubmitSpec,
+    Event, ModelRegistry, ServeConfig, Server, ShardPlan, SubmitSpec,
 };
 
 /// Fixed CI seeds — chosen arbitrarily, kept stable so a regression
@@ -41,10 +41,15 @@ fn model_seed_for(name: &str) -> u64 {
 }
 
 fn start(name: &str) -> Server {
+    start_sharded(name, ShardPlan::Single)
+}
+
+fn start_sharded(name: &str, plan: ShardPlan) -> Server {
     let mut reg = ModelRegistry::new();
-    reg.register(
+    reg.register_sharded(
         name,
         random_model_sized(model_seed_for(name), 2, 16, 2, 40, 64, 16),
+        plan,
     )
     .expect("register model");
     let cfg = ServeConfig {
@@ -234,6 +239,112 @@ fn panic_storm_still_terminates_every_request() {
     }
     await_quiescent(&srv, name).unwrap();
     srv.shutdown();
+}
+
+/// One replica of a 2-wide shard group panicking mid-stream must
+/// restart the group as ONE unit: every submitted request still gets
+/// exactly one terminal event, the shared gauges return to zero, and
+/// the respawned group serves bit-identical greedy output.
+#[test]
+fn replica_shard_panic_storm_terminates_every_request() {
+    let name = "chaos-shardstorm";
+    // unfaulted single-engine reference over the same weights
+    let clean = start(name);
+    let reference = {
+        let rx = submit(&clean, 0).expect("clean admit");
+        match drain_terminal(&rx).expect("clean terminal") {
+            Event::Done(r) => r.tokens,
+            ev => panic!("clean server errored: {ev:?}"),
+        }
+    };
+    clean.shutdown();
+
+    let srv = start_sharded(name, ShardPlan::Replica(2));
+    let plan = Arc::new(
+        FaultPlan::new()
+            .panic_at(fault::CP_STEP, 2)
+            .panic_at(fault::CP_STEP, 7),
+    );
+    let guard = fault::arm_guard(name, plan);
+    let rxs: Vec<_> =
+        (0..8).filter_map(|i| submit(&srv, i).ok()).collect();
+    assert!(!rxs.is_empty(), "every submission refused");
+    for (i, rx) in rxs.iter().enumerate() {
+        drain_terminal(rx)
+            .unwrap_or_else(|e| panic!("request {i}: {e}"));
+    }
+    drop(guard);
+    await_quiescent(&srv, name).unwrap();
+    // group respawn is atomic: the surviving width-2 group replays
+    // the single-engine reference byte for byte
+    let rx = submit(&srv, 0).expect("post-fault admit");
+    match drain_terminal(&rx).expect("post-fault terminal") {
+        Event::Done(r) => assert_eq!(
+            r.tokens, reference,
+            "respawned shard group diverged"
+        ),
+        ev => panic!("post-fault request failed: {ev:?}"),
+    }
+    srv.shutdown();
+}
+
+/// Idle-unload racing wake on a sharded cold entry: with a 40 ms idle
+/// budget and bursts timed to land while the group is unloading (or
+/// just unloaded), every request must be served — admission bumps
+/// `queue_depth` before sending, so a request can wake the re-parked
+/// supervisor but never be stranded — and every burst replays the
+/// first one byte for byte.
+#[test]
+fn sharded_cold_entry_survives_unload_wake_races() {
+    let name = "chaos-shardwake";
+    let m = random_model_sized(model_seed_for(name), 2, 16, 2, 40, 64, 16);
+    let path = std::env::temp_dir().join("chaos_shardwake.mosaic");
+    mosaic::deploy::export_model(&m, &path).expect("export");
+    let mut reg = ModelRegistry::new();
+    reg.register_cold_sharded(name, &path, ShardPlan::Replica(2))
+        .expect("register cold sharded");
+    let cfg = ServeConfig {
+        max_batch: 2,
+        max_queue: 64,
+        default_model: Some(name.to_string()),
+        max_restarts: 10_000,
+        restart_backoff_ms: 1,
+        idle_ms: Some(40),
+        ..Default::default()
+    };
+    let srv = Server::start_registry(reg, cfg, 0).expect("start server");
+    // first burst doubles as the reference
+    let reference: Vec<Vec<u16>> = (0..4)
+        .map(|i| {
+            let rx = submit(&srv, i).expect("admit");
+            match drain_terminal(&rx).expect("terminal") {
+                Event::Done(r) => r.tokens,
+                ev => panic!("reference request {i} failed: {ev:?}"),
+            }
+        })
+        .collect();
+    for cycle in 0..6usize {
+        // varied phase: sometimes mid-unload, sometimes just unloaded,
+        // sometimes still hot
+        std::thread::sleep(Duration::from_millis(25 + 13 * cycle as u64));
+        let rxs: Vec<_> = (0..4)
+            .map(|i| submit(&srv, i).expect("admit in race window"))
+            .collect();
+        for (i, rx) in rxs.iter().enumerate() {
+            match drain_terminal(rx)
+                .unwrap_or_else(|e| panic!("cycle {cycle} req {i}: {e}"))
+            {
+                Event::Done(r) => assert_eq!(
+                    r.tokens, reference[i],
+                    "cycle {cycle} request {i} diverged"
+                ),
+                ev => panic!("cycle {cycle} request {i}: {ev:?}"),
+            }
+        }
+    }
+    await_quiescent(&srv, name).unwrap();
+    srv.shutdown();
+    let _ = std::fs::remove_file(&path);
 }
 
 /// Shutdown racing a cold-engine wake: the `lifecycle.wake` stall

@@ -1,0 +1,351 @@
+//! Sharded-execution parity suite: one registry entry backed by N
+//! shard workers must be observationally identical to the unsharded
+//! engine. Three properties:
+//!
+//! * **bit-identity** — greedy output token-for-token equal to the
+//!   single-engine reference for replica groups (N ∈ {2, 4}) and
+//!   layer-range pipelines (stages ∈ {2, 3}), over a dense model, a
+//!   sealed-70% variant and a pruned+quantized csr8 variant, at batch
+//!   widths 1/2/8;
+//! * **lifecycle** — a sharded *cold* entry wakes on first request,
+//!   idle-unloads as one group (gauges to zero), and re-wakes with
+//!   byte-identical output;
+//! * **supervision** (feature "chaos") — one replica panicking
+//!   mid-stream fails its in-flight requests with exactly one
+//!   terminal event each, and the respawned group serves the same
+//!   bytes as before.
+
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use mosaic::deploy::QuantSpec;
+use mosaic::model::weights::testutil::random_model_sized;
+use mosaic::model::ModelWeights;
+use mosaic::prune::unstructured::{mask_lowest, scores, Metric};
+use mosaic::quant::{quantize_model, QuantConfig};
+use mosaic::serve::lifecycle::LifecycleState;
+use mosaic::serve::{
+    wait_reply, HealthState, ModelRegistry, ServeConfig, Server,
+    ShardPlan, SubmitSpec,
+};
+
+const PROMPTS: &[&[u16]] = &[&[1, 9, 4], &[7, 2, 2, 5, 8], &[3, 60, 11]];
+const MAX_NEW: usize = 10;
+
+/// Four layers so a 3-stage pipeline has layers to split (and the
+/// resident-byte balancer has real choices to make).
+fn dense(seed: u64) -> ModelWeights {
+    random_model_sized(seed, 4, 32, 2, 80, 64, 32)
+}
+
+/// Magnitude-prune every projection to 70% sparsity and seal into
+/// f16/CSR storage.
+fn sealed70(dense: &ModelWeights) -> ModelWeights {
+    let mut m = dense.clone();
+    for l in m.layers.iter_mut() {
+        for s in l.projs.iter_mut() {
+            let t = s.dense_mut();
+            let sc = scores(t, None, Metric::Magnitude);
+            mask_lowest(t, &sc, 0.7);
+        }
+    }
+    m.compact();
+    m
+}
+
+/// 80%-pruned then i8-quantized, sealed so projections land on csr8
+/// runtime storage.
+fn csr8(dense: &ModelWeights) -> ModelWeights {
+    let mut m = dense.clone();
+    for l in m.layers.iter_mut() {
+        for s in l.projs.iter_mut() {
+            let t = s.dense_mut();
+            let sc = scores(t, None, Metric::Magnitude);
+            mask_lowest(t, &sc, 0.8);
+        }
+    }
+    quantize_model(&mut m, None, QuantConfig { bits: 8, group: 16 });
+    m.compact_q(Some(QuantSpec::i8(16)));
+    m
+}
+
+fn greedy_to(model: &str, prompt: &[u16]) -> SubmitSpec {
+    SubmitSpec {
+        model: Some(model.to_string()),
+        ..SubmitSpec::greedy(prompt, MAX_NEW)
+    }
+}
+
+/// Serve every prompt against `model`, returning the token streams.
+fn serve_all(srv: &Server, model: &str) -> Vec<Vec<u16>> {
+    PROMPTS
+        .iter()
+        .map(|p| {
+            let rx = srv.submit_spec(greedy_to(model, p)).expect("admit");
+            wait_reply(&rx, Duration::from_secs(60))
+                .expect("reply")
+                .tokens
+        })
+        .collect()
+}
+
+fn await_lifecycle(srv: &Server, name: &str, want: LifecycleState) {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let got = srv.engine_lifecycle(name).expect("registered");
+        if got == want {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "{name}: stuck in {got:?}, wanted {want:?}"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Every (plan × width × variant) combination replays the unsharded
+/// reference token-for-token.
+#[test]
+fn sharded_greedy_is_bit_identical_across_plans_and_widths() {
+    let base = dense(701);
+    let variants: Vec<(&str, ModelWeights)> = vec![
+        ("dense", base.clone()),
+        ("s70", sealed70(&base)),
+        ("csr8", csr8(&base)),
+    ];
+    // the unsharded reference: same weights, one plain engine each
+    let mut reg = ModelRegistry::new();
+    for (n, m) in &variants {
+        reg.register(n, m.clone()).unwrap();
+    }
+    let hot =
+        Server::start_registry(reg, ServeConfig::default(), 0).unwrap();
+    let want: Vec<(&str, Vec<Vec<u16>>)> = variants
+        .iter()
+        .map(|(n, _)| (*n, serve_all(&hot, n)))
+        .collect();
+    hot.shutdown();
+
+    for plan in [
+        ShardPlan::Replica(2),
+        ShardPlan::Replica(4),
+        ShardPlan::Pipeline(2),
+        ShardPlan::Pipeline(3),
+    ] {
+        for width in [1usize, 2, 8] {
+            let mut reg = ModelRegistry::new();
+            for (n, m) in &variants {
+                reg.register_sharded(n, m.clone(), plan).unwrap();
+            }
+            let srv = Server::start_registry(
+                reg,
+                ServeConfig { max_batch: width, ..Default::default() },
+                0,
+            )
+            .unwrap();
+            for (n, expect) in &want {
+                assert_eq!(
+                    &serve_all(&srv, n),
+                    expect,
+                    "{n} diverged under plan {plan} width {width}"
+                );
+            }
+            srv.shutdown();
+        }
+    }
+}
+
+/// A sharded group also absorbs a *concurrent* burst without reorder
+/// damage: every reply matches its prompt's reference stream.
+#[test]
+fn replica_group_concurrent_burst_is_bit_identical() {
+    let base = dense(702);
+    let mut reg = ModelRegistry::new();
+    reg.register("solo", base.clone()).unwrap();
+    reg.register_sharded("rep", base, ShardPlan::Replica(4))
+        .unwrap();
+    let srv = Server::start_registry(
+        reg,
+        ServeConfig { max_batch: 2, ..Default::default() },
+        0,
+    )
+    .unwrap();
+    let prompts: Vec<Vec<u16>> = (0..16)
+        .map(|i| vec![1 + (i % 7) as u16, 5, 9 + (i % 11) as u16])
+        .collect();
+    let want: Vec<Vec<u16>> = prompts
+        .iter()
+        .map(|p| {
+            let rx = srv.submit_spec(greedy_to("solo", p)).unwrap();
+            wait_reply(&rx, Duration::from_secs(60)).unwrap().tokens
+        })
+        .collect();
+    let rxs: Vec<_> = prompts
+        .iter()
+        .map(|p| srv.submit_spec(greedy_to("rep", p)).unwrap())
+        .collect();
+    for (i, (rx, want)) in rxs.iter().zip(&want).enumerate() {
+        let r = wait_reply(rx, Duration::from_secs(60)).unwrap();
+        assert_eq!(&r.tokens, want, "burst request {i} diverged");
+    }
+    srv.shutdown();
+}
+
+/// Cold-spawn → serve → group idle-unload → re-wake keeps greedy
+/// output byte-identical for replica AND pipeline shard groups, and
+/// the shared gauges return to zero after the unload.
+#[test]
+fn sharded_cold_entry_unloads_idle_and_rewakes_bit_identical() {
+    let base = dense(703);
+    let path =
+        std::env::temp_dir().join("shard_parity_cold.mosaic");
+    mosaic::deploy::export_model(&base, &path).expect("export");
+    // hot unsharded reference
+    let mut reg = ModelRegistry::new();
+    reg.register("m", base).unwrap();
+    let hot =
+        Server::start_registry(reg, ServeConfig::default(), 0).unwrap();
+    let want = serve_all(&hot, "m");
+    hot.shutdown();
+
+    for plan in [ShardPlan::Replica(2), ShardPlan::Pipeline(2)] {
+        let mut reg = ModelRegistry::new();
+        reg.register_cold_sharded("m", &path, plan).unwrap();
+        let srv = Server::start_registry(
+            reg,
+            ServeConfig {
+                max_batch: 2,
+                idle_ms: Some(150),
+                ..Default::default()
+            },
+            0,
+        )
+        .unwrap();
+        assert_eq!(
+            srv.engine_lifecycle("m"),
+            Some(LifecycleState::Cold),
+            "plan {plan}: must register cold"
+        );
+        assert_eq!(serve_all(&srv, "m"), want, "cold wake, plan {plan}");
+        assert_eq!(srv.engine_lifecycle("m"), Some(LifecycleState::Hot));
+        // the whole group unloads as one unit
+        await_lifecycle(&srv, "m", LifecycleState::Cold);
+        let stats = srv.model_stats("m").unwrap();
+        for (gauge, v) in [
+            ("kv_pages_in_use", &stats.kv_pages_in_use),
+            ("kv_pages_total", &stats.kv_pages_total),
+            ("queue_depth", &stats.queue_depth),
+            ("inflight", &stats.inflight),
+        ] {
+            assert_eq!(
+                v.load(Ordering::Relaxed),
+                0,
+                "{gauge} after group unload, plan {plan}"
+            );
+        }
+        assert_eq!(serve_all(&srv, "m"), want, "re-wake, plan {plan}");
+        assert_eq!(
+            srv.engine_health("m"),
+            Some(HealthState::Healthy),
+            "unload cycles must not look like failures"
+        );
+        srv.shutdown();
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[cfg(feature = "chaos")]
+mod chaos {
+    use super::*;
+    use mosaic::serve::fault::{self, FaultPlan};
+    use mosaic::serve::Event;
+    use std::sync::{mpsc, Arc};
+
+    /// Zero or more Token events, then exactly one terminal.
+    fn drain_terminal(rx: &mpsc::Receiver<Event>) -> Event {
+        let deadline = Instant::now() + Duration::from_secs(60);
+        let mut terminal: Option<Event> = None;
+        loop {
+            let left =
+                deadline.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(left) {
+                Ok(Event::Token { .. }) => {
+                    assert!(terminal.is_none(), "token after terminal")
+                }
+                Ok(ev) => {
+                    assert!(
+                        terminal.is_none(),
+                        "second terminal: {ev:?}"
+                    );
+                    terminal = Some(ev);
+                }
+                Err(_) => {
+                    return terminal.expect("request hung: no terminal")
+                }
+            }
+        }
+    }
+
+    /// One replica panicking mid-stream restarts the WHOLE group:
+    /// every in-flight request gets exactly one terminal event, and
+    /// the respawned group replays the pre-fault bytes.
+    #[test]
+    fn replica_shard_panic_respawns_group_bit_identical() {
+        let base = dense(704);
+        let name = "shard-chaos";
+        let mut reg = ModelRegistry::new();
+        reg.register_sharded(name, base, ShardPlan::Replica(2))
+            .unwrap();
+        let srv = Server::start_registry(
+            reg,
+            ServeConfig {
+                max_batch: 2,
+                max_queue: 64,
+                max_restarts: 10_000,
+                restart_backoff_ms: 1,
+                ..Default::default()
+            },
+            0,
+        )
+        .unwrap();
+        let want = serve_all(&srv, name);
+        // arm AFTER the reference pass: the 3rd fused step across the
+        // group panics — one worker dies mid-stream with its sibling
+        // still serving
+        let plan =
+            Arc::new(FaultPlan::new().panic_at(fault::CP_STEP, 3));
+        let guard = fault::arm_guard(name, plan);
+        let rxs: Vec<_> = PROMPTS
+            .iter()
+            .map(|p| srv.submit_spec(greedy_to(name, p)).unwrap())
+            .collect();
+        let mut errored = 0usize;
+        for rx in &rxs {
+            if matches!(drain_terminal(rx), Event::Error { .. }) {
+                errored += 1;
+            }
+        }
+        assert!(errored > 0, "the armed panic never fired");
+        drop(guard);
+        // the supervisor respawned the group as one unit; the gauges
+        // recover and the output is byte-identical to pre-fault
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let stats = srv.model_stats(name).unwrap();
+        while stats.kv_pages_in_use.load(Ordering::Relaxed) != 0
+            || stats.queue_depth.load(Ordering::Relaxed) != 0
+        {
+            assert!(
+                Instant::now() < deadline,
+                "gauges stuck after group respawn"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(
+            serve_all(&srv, name),
+            want,
+            "respawned group diverged"
+        );
+        srv.shutdown();
+    }
+}
